@@ -1,0 +1,117 @@
+//! E11 — associative-recall probe: does HLA's data-dependent metric
+//! (S = Σ k kᵀ) help key-value recall compared to first-order linear
+//! attention at equal parameter count?
+//!
+//! Trains `micro` (hla2) and `micro-linear` on a key-value recall corpus
+//! ("a:3 f:7 q:1 ?f:" → "7"), then measures probe accuracy on held-out
+//! sequences.  Results are recorded in EXPERIMENTS.md §E11.
+//!
+//!     cargo run --release --example long_context_recall
+//!     HLA_STEPS=60 cargo run --release --example long_context_recall
+
+use hla::model::sampler::argmax;
+use hla::model::{ModelState, RustModel};
+use hla::runtime::{literal::literal_to_tensor, Engine};
+use hla::tensor::Tensor;
+use hla::train::corpus::{recall_corpus, recall_sequence};
+use hla::train::{train, LrSchedule, TrainOpts};
+use hla::util::rng::Rng;
+
+/// Train on the recall corpus by overriding the data source: we reuse the
+/// generic trainer but with a recall corpus baked to the right size.
+fn train_recall(engine: &Engine, cfg: &str, steps: usize) -> anyhow::Result<Vec<Tensor>> {
+    // the trainer synthesizes its own corpus; for the recall task we train
+    // directly here with the same loop over recall data.
+    use hla::runtime::literal;
+    use hla::tensor::TensorI32;
+    let mc = engine.model_cfg(cfg)?.clone();
+    let (b, t) = (mc.train_batch, mc.train_seq);
+    let exe = engine.load(&format!("train_step_{cfg}"))?;
+    let mut params = engine.init_params(cfg, 0)?;
+    let zeros = |ps: &[xla::Literal]| -> anyhow::Result<Vec<xla::Literal>> {
+        ps.iter()
+            .map(|p| {
+                let s = p.array_shape()?;
+                let n: i64 = s.dims().iter().product();
+                Ok(xla::Literal::vec1(&vec![0f32; n as usize]).reshape(s.dims())?)
+            })
+            .collect()
+    };
+    let mut mu = zeros(&params)?;
+    let mut nu = zeros(&params)?;
+    let corpus = recall_corpus(4000, 5, 17);
+    let mut data = hla::train::data::Batches::new(&corpus, b, t + 1, 3);
+    let sched = LrSchedule { peak: 2e-3, warmup: steps / 10 + 1, total: steps, floor: 2e-4 };
+    let mut last = f32::NAN;
+    for step in 0..steps {
+        let tokens = data.next_batch();
+        let mut inputs = Vec::with_capacity(params.len() * 3 + 3);
+        inputs.append(&mut params);
+        inputs.append(&mut mu);
+        inputs.append(&mut nu);
+        inputs.push(xla::Literal::scalar(step as f32));
+        inputs.push(literal::tokens_to_literal(&TensorI32::from_vec(&[b, t + 1], tokens))?);
+        inputs.push(xla::Literal::scalar(sched.at(step)));
+        let mut outs = exe.run(&inputs)?;
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+        last = loss;
+        let n = outs.len() / 3;
+        nu = outs.split_off(2 * n);
+        mu = outs.split_off(n);
+        params = outs;
+        if step % 20 == 0 {
+            println!("  [{cfg}] step {step:>4} recall-loss {loss:.4}");
+        }
+    }
+    println!("  [{cfg}] final loss {last:.4}");
+    params.iter().map(|p| literal_to_tensor(p)).collect()
+}
+
+/// Probe accuracy: feed "k1:v1 ... ?k:" and check the model's argmax digit.
+fn probe_accuracy(model: &RustModel, n_probes: usize, n_pairs: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut correct = 0usize;
+    for _ in 0..n_probes {
+        let (seq, answer) = recall_sequence(n_pairs, &mut rng);
+        let mut state = ModelState::new(&model.cfg);
+        let mut logits = vec![];
+        for &tok in &seq {
+            logits = model.decode_step(&mut state, tok);
+        }
+        // restrict argmax to digit bytes (the answer alphabet)
+        let mut best = b'0';
+        let mut best_v = f32::NEG_INFINITY;
+        for d in b'0'..=b'9' {
+            if logits[d as usize] > best_v {
+                best_v = logits[d as usize];
+                best = d;
+            }
+        }
+        let _ = argmax(&logits); // full-vocab argmax, unused but kept honest
+        if best == answer {
+            correct += 1;
+        }
+    }
+    correct as f64 / n_probes as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize =
+        std::env::var("HLA_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let engine = Engine::open("artifacts")?;
+    println!("E11: key-value recall probe (5 pairs per sequence, {steps} training steps)");
+    println!("chance accuracy = 10% (digits), format-aware chance ~ 20% (5 seen digits)");
+
+    let mut table = hla::metrics::Table::new(&["model", "mixer", "probe accuracy"]);
+    for cfg in ["micro", "micro-linear", "micro-ahla"] {
+        println!("training {cfg} on the recall corpus...");
+        let tensors = train_recall(&engine, cfg, steps)?;
+        let mc = engine.model_cfg(cfg)?.clone();
+        let model = RustModel::from_tensors(&mc, &tensors)?;
+        let acc = probe_accuracy(&model, 200, 5, 0xACC);
+        table.row(&[cfg.to_string(), mc.mixer.clone(), format!("{:.1}%", acc * 100.0)]);
+    }
+    print!("{}", table.render());
+    println!("expected shape: hla2's data-dependent metric >= linear baseline on recall.");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: open the AOT artifacts, spin up the coordinator, stream a
+//! generation, and inspect the constant-size serving state.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::mpsc;
+
+use hla::coordinator::{spawn_engine, GenRequest, SchedPolicy, TokenEvent};
+use hla::model::sampler::SamplerCfg;
+use hla::runtime::Engine;
+use hla::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. inspect the artifact inventory
+    let engine = Engine::open("artifacts")?;
+    println!("loaded {} artifacts", engine.manifest.artifacts.len());
+    let cfg = engine.model_cfg("micro")?;
+    println!(
+        "model 'micro': {} params, mixer={}, state per sequence = {} (constant in context length)",
+        cfg.n_params,
+        cfg.mixer,
+        human_bytes(cfg.state_nbytes_per_seq()),
+    );
+    drop(engine); // the coordinator opens its own engine on its own thread
+
+    // 2. start a single-replica coordinator and stream a generation
+    let (tx, handle) = spawn_engine("artifacts".into(), "micro".into(), SchedPolicy::PrefillFirst, 0);
+    let (etx, erx) = mpsc::channel::<TokenEvent>();
+    let prompt = "It was the best of ";
+    tx.send(GenRequest::new(
+        1,
+        prompt.as_bytes().to_vec(),
+        48,
+        SamplerCfg { temperature: 0.7, top_k: 40, seed: 42 },
+        etx,
+    ))?;
+    drop(tx); // close the queue so the engine drains and exits
+
+    print!("{prompt}");
+    use std::io::Write;
+    while let Ok(ev) = erx.recv() {
+        if let Some(t) = ev.token {
+            print!("{}", String::from_utf8_lossy(&[t]));
+            std::io::stdout().flush().ok();
+        }
+        if ev.done {
+            println!("\n[finished: {:?}]", ev.finish);
+            break;
+        }
+    }
+
+    // 3. serving stats from the engine loop
+    let stats = handle.join().expect("engine thread")?;
+    println!(
+        "decode: {} tokens at {:.0} tok/s; step p50 {:.2} ms; state pool {}",
+        stats.tokens_out,
+        stats.tokens_per_sec,
+        stats.step_us_p50 / 1e3,
+        human_bytes(stats.state_bytes),
+    );
+    println!("(the model is untrained — see examples/train_tiny.rs for E10)");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Serving demo: bring up the full stack — N engine replicas, the router,
+//! the TCP server — drive it with concurrent clients under Poisson load,
+//! and report client-side latency percentiles (the E8 workload through the
+//! real network path).
+//!
+//!     cargo run --release --example serve_demo [replicas] [requests]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use hla::coordinator::router::{RoutePolicy, Router};
+use hla::coordinator::{spawn_engine, SchedPolicy};
+use hla::metrics::{Histogram, Table};
+use hla::server::{client::Client, serve};
+use hla::train::corpus::build_corpus;
+use hla::workload::{Arrivals, Lengths, Trace};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let replicas: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let n_requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(24);
+
+    // engines + router + server
+    let mut senders = vec![];
+    let mut engines = vec![];
+    for r in 0..replicas {
+        let (tx, handle) =
+            spawn_engine("artifacts".into(), "micro".into(), SchedPolicy::PrefillFirst, r as i32);
+        senders.push(tx);
+        engines.push(handle);
+    }
+    let router = Arc::new(Router::new(senders, RoutePolicy::LeastLoaded));
+    // warmup barrier: engine construction compiles artifacts; route one
+    // tiny request to every replica before the measured load.
+    for _ in 0..replicas {
+        let (wtx, wrx) = std::sync::mpsc::channel();
+        let id = router.fresh_id();
+        let r = router
+            .submit(
+                hla::coordinator::GenRequest::new(
+                    id,
+                    vec![1],
+                    1,
+                    hla::model::sampler::SamplerCfg::greedy(),
+                    wtx,
+                ),
+                None,
+            )
+            .unwrap();
+        let _ = hla::coordinator::collect_tokens(&wrx);
+        router.complete(r);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let server = std::thread::spawn(move || {
+        serve("127.0.0.1:0", router, stop2, move |a| addr_tx.send(a).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv()?.to_string();
+    println!("serving micro on {addr} with {replicas} replica(s)");
+
+    // Poisson workload through real TCP clients
+    let corpus = build_corpus(1 << 14, 99);
+    let trace = Trace::synthesize(
+        n_requests,
+        Arrivals::Poisson { rate: 10.0 },
+        Lengths { mean_prompt: 16, mean_output: 20, min: 4, max: 64 },
+        &corpus,
+        7,
+    );
+    let start = Instant::now();
+    let mut workers = vec![];
+    for item in trace.items {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || -> anyhow::Result<(Duration, Duration, usize)> {
+            let due = Duration::from_secs_f64(item.at_s);
+            if let Some(wait) = due.checked_sub(start.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            let mut client = Client::connect(&addr)?;
+            let prompt = String::from_utf8_lossy(&item.prompt).to_string();
+            let done = client.generate(&prompt, item.max_new_tokens, 0.7, item.session)?;
+            Ok((done.ttft, done.latency, done.tokens.len()))
+        }));
+    }
+    let mut ttft = Histogram::new();
+    let mut latency = Histogram::new();
+    let mut tokens = 0usize;
+    for w in workers {
+        let (t, l, n) = w.join().expect("client thread")?;
+        ttft.record(t);
+        latency.record(l);
+        tokens += n;
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    let mut table = Table::new(&["metric", "p50 ms", "p95 ms", "p99 ms"]);
+    table.row(&[
+        "ttft".into(),
+        format!("{:.1}", ttft.percentile_us(50.0) / 1e3),
+        format!("{:.1}", ttft.percentile_us(95.0) / 1e3),
+        format!("{:.1}", ttft.percentile_us(99.0) / 1e3),
+    ]);
+    table.row(&[
+        "latency".into(),
+        format!("{:.1}", latency.percentile_us(50.0) / 1e3),
+        format!("{:.1}", latency.percentile_us(95.0) / 1e3),
+        format!("{:.1}", latency.percentile_us(99.0) / 1e3),
+    ]);
+    print!("{}", table.render());
+    println!(
+        "{n_requests} requests, {tokens} tokens in {wall:.1}s -> {:.0} tok/s end-to-end",
+        tokens as f64 / wall
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().expect("server thread");
+    for e in engines {
+        let _ = e.join().expect("engine thread");
+    }
+    Ok(())
+}

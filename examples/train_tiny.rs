@@ -1,0 +1,93 @@
+//! E10 — end-to-end training driver: train the `tiny` HLA byte-LM for a
+//! few hundred AOT train_step calls on the synthetic+Dickens corpus, log
+//! the loss curve, compare against the `tiny-linear` first-order baseline,
+//! then serve a sample from the trained checkpoint.
+//!
+//!     cargo run --release --example train_tiny             # full (300 steps)
+//!     HLA_STEPS=40 cargo run --release --example train_tiny  # quick
+//!
+//! Results are recorded in EXPERIMENTS.md §E10.
+
+use hla::runtime::Engine;
+use hla::train::{evaluate, train, uniform_loss, LrSchedule, TrainOpts};
+
+fn run(engine: &Engine, cfg: &str, steps: usize) -> anyhow::Result<(Vec<hla::train::LossPoint>, f32)> {
+    let opts = TrainOpts {
+        cfg_name: cfg.into(),
+        steps,
+        lr: LrSchedule { peak: 2e-3, warmup: steps / 15 + 1, total: steps, floor: 2e-4 },
+        seed: 0,
+        log_every: (steps / 25).max(1),
+        checkpoint: Some(format!("/tmp/hla-{cfg}.ckpt")),
+        corpus_bytes: 1 << 20,
+    };
+    let t0 = std::time::Instant::now();
+    let (curve, params) = train(engine, &opts)?;
+    let held_out = evaluate(engine, cfg, &params, 4, 1234)?;
+    println!(
+        "[{cfg}] {} steps in {:.1}s, final train loss {:.4}, held-out {:.4}",
+        steps,
+        t0.elapsed().as_secs_f64(),
+        curve.last().unwrap().loss,
+        held_out
+    );
+    Ok((curve, held_out))
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize =
+        std::env::var("HLA_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let engine = Engine::open("artifacts")?;
+    println!(
+        "E10: byte-LM training, {} steps, uniform baseline loss = {:.3}",
+        steps,
+        uniform_loss(256)
+    );
+
+    let (hla_curve, hla_eval) = run(&engine, "tiny", steps)?;
+    let (lin_curve, lin_eval) = run(&engine, "tiny-linear", steps)?;
+
+    println!("\nloss curves (step: hla2 / linear):");
+    let mut table = hla::metrics::Table::new(&["step", "hla2 (tiny)", "linear (tiny-linear)"]);
+    let lookup = |curve: &[hla::train::LossPoint], step: usize| {
+        curve
+            .iter()
+            .min_by_key(|p| p.step.abs_diff(step))
+            .map(|p| format!("{:.4}", p.loss))
+            .unwrap_or_default()
+    };
+    for p in &hla_curve {
+        table.row(&[p.step.to_string(), format!("{:.4}", p.loss), lookup(&lin_curve, p.step)]);
+    }
+    print!("{}", table.render());
+    println!(
+        "held-out: hla2 {hla_eval:.4} vs linear {lin_eval:.4}  (uniform {:.3})",
+        uniform_loss(256)
+    );
+
+    // generate a sample from the trained hla2 checkpoint
+    let (meta, tensors) = hla::train::checkpoint::load("/tmp/hla-tiny.ckpt")?;
+    println!("\nsampling from checkpoint (step {}, loss {:.3}):", meta.step, meta.loss);
+    let cfg = engine.model_cfg("tiny")?.clone();
+    let rust = hla::model::RustModel::from_tensors(&cfg, &tensors)?;
+    let mut state = hla::model::ModelState::new(&cfg);
+    let mut sampler = hla::model::sampler::Sampler::new(hla::model::sampler::SamplerCfg {
+        temperature: 0.8,
+        top_k: 40,
+        seed: 7,
+    });
+    let prompt = b"It was the ";
+    let mut out = String::from_utf8_lossy(prompt).to_string();
+    let mut logits = vec![];
+    for &t in prompt {
+        logits = rust.decode_step(&mut state, t);
+    }
+    let mut tok;
+    for _ in 0..120 {
+        tok = sampler.sample(&logits) as u8;
+        out.push_str(&String::from_utf8_lossy(&[tok]));
+        logits = rust.decode_step(&mut state, tok);
+    }
+    println!("--- sample ---\n{out}\n--------------");
+    Ok(())
+}

@@ -1,0 +1,374 @@
+"""AOT pipeline: lower the L2 model + L1 kernels to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model config (fixed shapes; the coordinator pads):
+
+    init_<cfg>        (seed i32)                             -> params...
+    fwd_<cfg>         (params..., tokens i32[B,T])           -> logits
+    loss_<cfg>        (params..., tokens i32[B,T+1])         -> loss
+    train_step_<cfg>  (params..., mu..., nu..., step, tokens, lr)
+                                                             -> params', mu', nu', loss
+    prefill_<cfg>     (params..., state..., tokens i32[B,Tp])-> logits[B,V], state'...
+    decode_step_<cfg> (params..., state..., tokens i32[B])   -> logits[B,V], state'...
+
+plus kernel-only microbench artifacts lowered through the *Pallas* kernels
+(kernel_<mixer>_n<N>_d<D>), proving the L1 -> HLO -> Rust path.
+
+``artifacts/manifest.json`` records every artifact's input/output specs,
+parameter/state tree-flatten order, and the model config — the Rust
+``runtime::artifact`` module parses it.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--only NAME]``
+(the Makefile drives this; it is incremental at the Makefile level).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ahla, hla2, hla3, linear_attn
+from .model import HlaConfig
+
+# ---------------------------------------------------------------------------
+# config registry
+# ---------------------------------------------------------------------------
+
+# name -> {cfg, train_bt, decode_b, prefill_t, kinds}
+CONFIGS: dict[str, dict] = {}
+
+
+def _register(cfg: HlaConfig, *, train_bt=(8, 256), decode_b=8, prefill_t=64, kinds=None):
+    CONFIGS[cfg.name] = {
+        "cfg": cfg,
+        "train_bt": train_bt,
+        "decode_b": decode_b,
+        "prefill_t": prefill_t,
+        "kinds": kinds or ("init", "fwd", "loss", "train_step", "prefill", "decode_step"),
+    }
+
+
+_register(
+    HlaConfig(name="micro", d_model=64, n_layers=2, n_heads=2, chunk=16),
+    train_bt=(2, 32),
+    decode_b=2,
+    prefill_t=16,
+)
+_register(HlaConfig(name="tiny", d_model=256, n_layers=4, n_heads=4, chunk=64))
+_register(
+    HlaConfig(name="tiny-linear", mixer="linear", d_model=256, n_layers=4, n_heads=4, chunk=64)
+)
+_register(
+    HlaConfig(name="micro-ahla", mixer="ahla", d_model=64, n_layers=2, n_heads=2, chunk=16),
+    train_bt=(2, 32),
+    decode_b=2,
+    prefill_t=16,
+)
+_register(
+    HlaConfig(
+        name="micro-hla3", mixer="hla3", d_model=64, n_layers=2, n_heads=2, chunk=16, gamma=1.0
+    ),
+    train_bt=(2, 32),
+    decode_b=2,
+    prefill_t=16,
+)
+_register(
+    HlaConfig(name="micro-linear", mixer="linear", d_model=64, n_layers=2, n_heads=2, chunk=16),
+    train_bt=(2, 32),
+    decode_b=2,
+    prefill_t=16,
+)
+_register(
+    HlaConfig(name="micro-mq", d_model=64, n_layers=2, n_heads=2, chunk=16, multi_query=True),
+    train_bt=(2, 32),
+    decode_b=2,
+    prefill_t=16,
+    kinds=("init", "fwd", "decode_step"),
+)
+
+# kernel microbench shapes: (mixer, n, d)
+KERNEL_SHAPES = [
+    ("hla2", 1024, 64),
+    ("ahla", 1024, 64),
+    ("hla3", 1024, 64),
+    ("linear", 1024, 64),
+    ("hla2", 4096, 64),
+]
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (xla_extension-0.5.1-safe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def _flatten_specs(tree):
+    return [_spec(leaf) for leaf in jax.tree_util.tree_leaves(tree)]
+
+
+def _emit(out_dir, name, fn, example_args, manifest, kind, cfg_name, extra=None):
+    """Lower ``fn`` at ``example_args`` and write HLO text + manifest entry."""
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *example_args)
+    entry = {
+        "file": f"{name}.hlo.txt",
+        "kind": kind,
+        "config": cfg_name,
+        "inputs": _flatten_specs(example_args),
+        "outputs": _flatten_specs(out_shapes),
+    }
+    if extra:
+        entry.update(extra)
+    manifest["artifacts"][name] = entry
+    print(
+        f"  wrote {name}.hlo.txt ({len(text) / 1e6:.2f} MB, "
+        f"{len(entry['inputs'])} in / {len(entry['outputs'])} out)"
+    )
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _tree_sds(tree):
+    return jax.tree_util.tree_map(lambda x: _sds(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# per-config emission
+# ---------------------------------------------------------------------------
+
+
+def emit_config(out_dir, name, entry, manifest, only=None):
+    cfg: HlaConfig = entry["cfg"]
+    bt, t = entry["train_bt"]
+    db, pt = entry["decode_b"], entry["prefill_t"]
+    kinds = entry["kinds"]
+
+    params_shape = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+    n_params = len(jax.tree_util.tree_leaves(params_shape))
+    state_shape = jax.eval_shape(lambda: model.state_init(cfg, db))
+    n_state = len(jax.tree_util.tree_leaves(state_shape))
+    state_paths = [
+        (jax.tree_util.keystr(p), list(l.shape))
+        for p, l in jax.tree_util.tree_flatten_with_path(state_shape)[0]
+    ]
+
+    manifest["configs"][cfg.name] = {
+        **dataclasses.asdict(cfg),
+        "head_dim": cfg.head_dim,
+        "d_ffn": cfg.d_ffn,
+        "kv_heads": cfg.kv_heads,
+        "n_params": int(cfg.n_params()),
+        "n_param_tensors": n_params,
+        "n_state_tensors": n_state,
+        "param_paths": model.param_paths(cfg),
+        "state_paths": state_paths,
+        "train_batch": bt,
+        "train_seq": t,
+        "decode_batch": db,
+        "prefill_len": pt,
+    }
+
+    def want(k):
+        return k in kinds and (only is None or only == k)
+
+    pflat, ptree = jax.tree_util.tree_flatten(_tree_sds(params_shape))
+    sflat, stree = jax.tree_util.tree_flatten(_tree_sds(state_shape))
+
+    def unflatten_p(args):
+        return jax.tree_util.tree_unflatten(ptree, args)
+
+    def unflatten_s(args):
+        return jax.tree_util.tree_unflatten(stree, args)
+
+    if want("init"):
+
+        def init_fn(seed):
+            p = model.init_params(jax.random.PRNGKey(seed), cfg)
+            return tuple(jax.tree_util.tree_leaves(p))
+
+        _emit(out_dir, f"init_{name}", init_fn, (_sds((), jnp.int32),), manifest, "init", name)
+
+    if want("fwd"):
+
+        def fwd_fn(*args):
+            p = unflatten_p(args[:n_params])
+            return (model.forward(cfg, p, args[n_params]),)
+
+        _emit(
+            out_dir,
+            f"fwd_{name}",
+            fwd_fn,
+            (*pflat, _sds((bt, t), jnp.int32)),
+            manifest,
+            "fwd",
+            name,
+        )
+
+    if want("loss"):
+
+        def loss_fn(*args):
+            p = unflatten_p(args[:n_params])
+            return (model.loss_fn(cfg, p, args[n_params]),)
+
+        _emit(
+            out_dir,
+            f"loss_{name}",
+            loss_fn,
+            (*pflat, _sds((bt, t + 1), jnp.int32)),
+            manifest,
+            "loss",
+            name,
+        )
+
+    if want("train_step"):
+
+        def ts_fn(*args):
+            p = unflatten_p(args[:n_params])
+            mu = unflatten_p(args[n_params : 2 * n_params])
+            nu = unflatten_p(args[2 * n_params : 3 * n_params])
+            step, tokens, lr = args[3 * n_params :]
+            p2, mu2, nu2, loss = model.train_step(cfg, p, mu, nu, step, tokens, lr)
+            return (
+                *jax.tree_util.tree_leaves(p2),
+                *jax.tree_util.tree_leaves(mu2),
+                *jax.tree_util.tree_leaves(nu2),
+                loss,
+            )
+
+        _emit(
+            out_dir,
+            f"train_step_{name}",
+            ts_fn,
+            (*pflat, *pflat, *pflat, _sds(()), _sds((bt, t + 1), jnp.int32), _sds(())),
+            manifest,
+            "train_step",
+            name,
+        )
+
+    if want("prefill"):
+
+        def prefill_fn(*args):
+            p = unflatten_p(args[:n_params])
+            s = unflatten_s(args[n_params : n_params + n_state])
+            logits, s2 = model.prefill(cfg, p, s, args[n_params + n_state])
+            return (logits, *jax.tree_util.tree_leaves(s2))
+
+        _emit(
+            out_dir,
+            f"prefill_{name}",
+            prefill_fn,
+            (*pflat, *sflat, _sds((db, pt), jnp.int32)),
+            manifest,
+            "prefill",
+            name,
+        )
+
+    if want("decode_step"):
+
+        def dec_fn(*args):
+            p = unflatten_p(args[:n_params])
+            s = unflatten_s(args[n_params : n_params + n_state])
+            logits, s2 = model.decode_step(cfg, p, s, args[n_params + n_state])
+            return (logits, *jax.tree_util.tree_leaves(s2))
+
+        _emit(
+            out_dir,
+            f"decode_step_{name}",
+            dec_fn,
+            (*pflat, *sflat, _sds((db,), jnp.int32)),
+            manifest,
+            "decode_step",
+            name,
+        )
+
+
+def emit_kernels(out_dir, manifest, only=None):
+    """Kernel-only artifacts through the Pallas path (interpret=True)."""
+    fns = {
+        "hla2": lambda q, k, v: (hla2.hla2_pallas(q, k, v, chunk=64, gamma=0.99, norm_mode="abs"),),
+        "ahla": lambda q, k, v: (ahla.ahla_pallas(q, k, v, chunk=64, gamma=0.99, norm_mode="abs"),),
+        "hla3": lambda q, k, v: (hla3.hla3_pallas(q, k, v, chunk=64, gamma=1.0, norm_mode="abs"),),
+        "linear": lambda q, k, v: (
+            linear_attn.linear_attn_pallas(q, k, v, chunk=64, gamma=0.99, norm_mode="abs"),
+        ),
+    }
+    for mixer, n, d in KERNEL_SHAPES:
+        name = f"kernel_{mixer}_n{n}_d{d}"
+        if only is not None and only != name:
+            continue
+        spec = _sds((n, d))
+        _emit(
+            out_dir,
+            name,
+            fns[mixer],
+            (spec, spec, spec),
+            manifest,
+            "kernel",
+            mixer,
+            extra={"n": n, "d": d},
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+    )
+    ap.add_argument("--only", default=None, help="restrict to one config (or 'kernels')")
+    ap.add_argument("--kind", default=None, help="restrict to one artifact kind")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"configs": {}, "artifacts": {}}
+    for name, entry in CONFIGS.items():
+        if args.only is not None and args.only not in (name, "all"):
+            continue
+        print(f"config {name}: {entry['cfg'].n_params() / 1e6:.2f}M params, mixer={entry['cfg'].mixer}")
+        emit_config(out_dir, name, entry, manifest, only=args.kind)
+    if args.only in (None, "all", "kernels"):
+        emit_kernels(out_dir, manifest)
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    if args.only is not None and os.path.exists(mpath):
+        old = json.load(open(mpath))
+        old["configs"].update(manifest["configs"])
+        old["artifacts"].update(manifest["artifacts"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Pallas kernel for Asymmetric HLA (AHLA, Section 6 / Algorithm 2).
+
+Same chunked grid layout as ``hla2.py``: the (P, m, E, n) state tuple of
+Theorem 6.1 lives in VMEM scratch, one grid step per chunk, intra-chunk
+math from ``chunk_math.ahla_chunk`` (two passes through the decayed masked
+affinity tile: inner rows r_i = q_i^T P_i, then the outer contraction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import chunk_math
+from .chunk_math import AhlaCarry
+
+__all__ = ["ahla_pallas", "ahla_chunked"]
+
+
+def _ahla_kernel(q_ref, k_ref, v_ref, o_ref, p_ref, m_ref, e_ref, n_ref, *, gamma, norm_mode, eps):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        p_ref[...] = jnp.zeros_like(p_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+        e_ref[...] = jnp.zeros_like(e_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    carry = AhlaCarry(p_ref[...], m_ref[0], e_ref[...], n_ref[0])
+    out, new = chunk_math.ahla_chunk(
+        carry, q_ref[...], k_ref[...], v_ref[...], gamma=gamma, norm_mode=norm_mode, eps=eps
+    )
+    o_ref[...] = out
+    p_ref[...] = new.p
+    m_ref[0] = new.m
+    e_ref[...] = new.e
+    n_ref[0] = new.n
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "gamma", "norm_mode", "eps", "interpret")
+)
+def ahla_pallas(
+    q,
+    k,
+    v,
+    *,
+    chunk: int = 64,
+    gamma: float = 1.0,
+    norm_mode: str = "none",
+    eps: float = 1e-6,
+    interpret: bool = True,
+):
+    """AHLA over a full sequence via the Pallas kernel (matches Algorithm 2)."""
+    n, d = q.shape
+    dv = v.shape[1]
+    if n % chunk != 0:
+        raise ValueError(f"sequence length {n} not divisible by chunk {chunk}")
+    kernel = functools.partial(_ahla_kernel, gamma=gamma, norm_mode=norm_mode, eps=eps)
+    tok_spec = lambda width: pl.BlockSpec((chunk, width), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // chunk,),
+        in_specs=[tok_spec(d), tok_spec(d), tok_spec(dv)],
+        out_specs=tok_spec(dv),
+        out_shape=jax.ShapeDtypeStruct((n, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, dv), q.dtype),  # P
+            pltpu.VMEM((1, d), q.dtype),  # m
+            pltpu.VMEM((d, dv), q.dtype),  # E
+            pltpu.VMEM((1, d), q.dtype),  # n
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def ahla_chunked(
+    q,
+    k,
+    v,
+    *,
+    chunk: int = 64,
+    gamma: float = 1.0,
+    norm_mode: str = "none",
+    eps: float = 1e-6,
+    carry: AhlaCarry | None = None,
+    return_carry: bool = False,
+):
+    """Differentiable chunked AHLA (lax.scan over ``chunk_math.ahla_chunk``)."""
+    n, d = q.shape
+    dv = v.shape[1]
+    if n % chunk != 0:
+        raise ValueError(f"sequence length {n} not divisible by chunk {chunk}")
+    nc = n // chunk
+    if carry is None:
+        carry = chunk_math.ahla_carry_init(d, dv, q.dtype)
+
+    def body(state, qkv):
+        qc, kc, vc = qkv
+        out, state = chunk_math.ahla_chunk(
+            state, qc, kc, vc, gamma=gamma, norm_mode=norm_mode, eps=eps
+        )
+        return state, out
+
+    final, outs = jax.lax.scan(
+        body, carry, (q.reshape(nc, chunk, d), k.reshape(nc, chunk, d), v.reshape(nc, chunk, dv))
+    )
+    outs = outs.reshape(n, dv)
+    if return_carry:
+        return outs, final
+    return outs

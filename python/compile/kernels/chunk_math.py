@@ -1,0 +1,345 @@
+"""Chunkwise HLA math shared by the Pallas kernels and the jnp training path.
+
+Each ``*_chunk`` function processes one chunk of ``w`` tokens given the
+carry-in prefix state and returns ``(outputs, carry_out)``.  The math is the
+closed-form inter/intra-chunk decomposition of the paper's Section 4
+(second order), Section 6.2 (AHLA) and Section 7.3 (third order), derived in
+DESIGN.md.  The same functions are
+
+* called inside the Pallas kernel bodies (``hla2.py`` etc.) on VMEM tiles, and
+* driven by ``jax.lax.scan`` over chunks for the differentiable L2 model path
+
+so the kernel and the training graph share one implementation of the math.
+
+Decay convention is monoid-consistent (see ``ref.py`` docstring): carries are
+attenuated by ``gamma**w`` across a chunk and cross terms use the attenuated
+carry.  The inter-chunk cross term composes with the *plain* (undecayed)
+segment moments — e.g. ``G_new = g^w G0 + (Kc^T Kc)(g^w C0) + G_loc`` — which
+is what the serial recurrence implies (DESIGN.md errata #2/#3: the paper's
+printed decayed operators attenuate the cross moment a second time).
+
+Within a chunk, local position p runs 1..w.  Notation (all per chunk):
+
+    gp[p]   = gamma**p            carry attenuation seen by token p
+    wp[p]   = gamma**(w-p)        token p's attenuation at chunk end
+    Gam[t,j]= gamma**(t-j) (j<=t) intra-chunk pairwise decay ("Gamma" mask)
+
+Shapes: qc, kc: [w, d]; vc: [w, dv].  Single head; callers vmap.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import ref
+
+__all__ = [
+    "Hla2Carry",
+    "AhlaCarry",
+    "Hla3Carry",
+    "hla2_carry_init",
+    "ahla_carry_init",
+    "hla3_carry_init",
+    "hla2_chunk",
+    "ahla_chunk",
+    "hla3_chunk",
+    "linear_chunk",
+    "decay_factors",
+]
+
+
+def decay_factors(w: int, gamma, dtype=jnp.float32):
+    """(gp, wp, Gam) decay tensors for a chunk of width w."""
+    gamma = jnp.asarray(gamma, dtype)
+    p = jnp.arange(1, w + 1, dtype=dtype)
+    gp = gamma**p
+    wp = gamma ** (w - p)
+    t = jnp.arange(w, dtype=dtype)
+    expo = t[:, None] - t[None, :]
+    gam = jnp.where(expo >= 0, gamma**expo, 0.0)
+    return gp, wp, gam
+
+
+# ---------------------------------------------------------------------------
+# second order (masked), Theorem 3.1 + Section 4
+# ---------------------------------------------------------------------------
+
+
+class Hla2Carry(NamedTuple):
+    s: jnp.ndarray  # [d, d]
+    c: jnp.ndarray  # [d, dv]
+    m: jnp.ndarray  # [d]
+    g: jnp.ndarray  # [d, dv]
+    h: jnp.ndarray  # [d]
+
+
+def hla2_carry_init(d: int, dv: int, dtype=jnp.float32) -> Hla2Carry:
+    z = jnp.zeros
+    return Hla2Carry(
+        z((d, d), dtype), z((d, dv), dtype), z((d,), dtype), z((d, dv), dtype), z((d,), dtype)
+    )
+
+
+def hla2_chunk(
+    carry: Hla2Carry,
+    qc,
+    kc,
+    vc,
+    *,
+    gamma=1.0,
+    lam=0.0,
+    masked=True,
+    norm_mode="none",
+    eps=1e-6,
+):
+    """One chunk of masked second-order HLA.
+
+    Output decomposition for token t (local index 1..w), derived in
+    DESIGN.md from the monoid-consistent serial recurrence.  The carry's
+    S0C0 part attenuates as g^{2t} (both indices in the past) while the G0
+    correction attenuates as g^t; for g != 1 an additional mixed term
+    ``g^t q_t^T (u_t - u~_t) C0`` appears, where ``u_t`` is the *decayed*
+    local key moment applied to q_t and ``u~_t`` the plain one (they cancel
+    at g == 1, recovering the familiar three-part split):
+
+      past x past:   g^{2t} q_t^T S0 C0  -  g^t q_t^T G0
+      past-key mix:  g^t ((Qc S0 Qc^T) . Gam) Vc
+      local-key mix: g^t (u_t - u~_t) C0
+      intra-chunk:   (((Gam.W) W^T) . Gam) Vc,   W = tril(Qc Kc^T)
+    """
+    w = qc.shape[0]
+    dt = qc.dtype
+    gp, wp, gam = decay_factors(w, gamma, dt)
+    tril = ref.causal_mask(w, dt)
+    stril = ref.strict_causal_mask(w, dt)
+    gw = jnp.asarray(gamma, dt) ** w
+    ones = jnp.ones((w,), dt)
+    gp2 = gp * gp
+
+    s0, c0, m0, g0, h0 = carry
+    wmat = tril * (qc @ kc.T)  # [w, w] masked affinity tile
+    wdec = gam * wmat  # Gamma . W
+    qs0 = qc @ s0  # [w, d]
+    mb = (qs0 @ qc.T) * gam  # past-key mix tile (pair-decayed)
+
+    if masked:
+        u = wdec @ kc  # decayed local moment rows  [w, d]
+        ut = wmat @ kc  # plain  local moment rows  [w, d]
+        # Intra-chunk masked part q_t^T (S^B_t C^B_t - G^B_t): the S.C term
+        # carries pair weights g^{2t-i-j} (all i,j <= t) while the local G
+        # correction removes j < i pairs with weight g^{t-j} (the weight the
+        # monoid-consistent recurrence actually assigns them).
+        kq_full = kc @ qc.T  # (k_i . q_j), unmasked      [w, w]
+        mc = ((wdec @ kq_full) - (wmat @ (kq_full * stril))) * gam
+        num = (
+            gp2[:, None] * (qc @ (s0 @ c0))
+            - gp[:, None] * (qc @ g0)
+            + gp[:, None] * (mb @ vc + (u - ut) @ c0)
+            + mc @ vc
+        )
+        den = (
+            gp2 * (qc @ (s0 @ m0))
+            - gp * (qc @ h0)
+            + gp * (mb @ ones + (u - ut) @ m0)
+            + mc @ ones
+        )
+    else:
+        # prefix ("unmasked") form o_t = q_t^T S_t C_t, Eq. (3.1)
+        u = wdec @ kc
+        mc = (u @ qc.T) * gam  # q_t^T S_loc,t q_j (j <= t, decayed)
+        num = gp2[:, None] * (qc @ (s0 @ c0)) + gp[:, None] * (u @ c0 + mb @ vc) + mc @ vc
+        den = gp2 * (qc @ (s0 @ m0)) + gp * (u @ m0 + mb @ ones) + mc @ ones
+
+    if lam != 0.0:
+        # ridge: + lam q_t^T C_t and + lam q_t^T m_t (Algorithm 1 S_eff)
+        qq = (qc @ qc.T) * gam
+        num = num + lam * (gp[:, None] * (qc @ c0) + qq @ vc)
+        den = den + lam * (gp * (qc @ m0) + qq @ jnp.ones((w,), dt))
+
+    out = ref.apply_normalization(num, den, norm_mode, eps)
+
+    # ---- carry update (semidirect product with chunk summary) ----
+    kw = kc * wp[:, None]  # decay-weighted keys
+    qw = qc * wp[:, None]
+    s_dec = kw.T @ kc  # decayed local key moment
+    s_plain = kc.T @ kc  # plain local key moment (cross term)
+    x = stril * (kc @ qc.T)  # (k_i . q_j), j < i
+    xw = x * wp[None, :]  # column-weighted by g^(w-j)
+    g_loc = kc.T @ (xw @ vc)
+    h_loc = kc.T @ (xw @ jnp.ones((w,), dt))
+    g1 = gw * g0 + s_plain @ (gw * c0) + g_loc
+    h1 = gw * h0 + s_plain @ (gw * m0) + h_loc
+    s1 = gw * s0 + s_dec
+    c1 = gw * c0 + qw.T @ vc
+    m1 = gw * m0 + jnp.sum(qw, axis=0)
+    return out, Hla2Carry(s1, c1, m1, g1, h1)
+
+
+# ---------------------------------------------------------------------------
+# AHLA (Section 6)
+# ---------------------------------------------------------------------------
+
+
+class AhlaCarry(NamedTuple):
+    p: jnp.ndarray  # [d, dv]
+    m: jnp.ndarray  # [d]
+    e: jnp.ndarray  # [d, dv]
+    n: jnp.ndarray  # [d]
+
+
+def ahla_carry_init(d: int, dv: int, dtype=jnp.float32) -> AhlaCarry:
+    z = jnp.zeros
+    return AhlaCarry(z((d, dv), dtype), z((d,), dtype), z((d, dv), dtype), z((d,), dtype))
+
+
+def ahla_chunk(carry: AhlaCarry, qc, kc, vc, *, gamma=1.0, norm_mode="none", eps=1e-6):
+    """One chunk of masked AHLA (Theorem 6.1 / Eq. 6.2).
+
+    Inner rows r_i = q_i^T P_i (inclusive) split into carry and local parts;
+    the outer pass reuses the same decayed affinity tile.
+    """
+    w = qc.shape[0]
+    dt = qc.dtype
+    gp, wp, gam = decay_factors(w, gamma, dt)
+    tril = ref.causal_mask(w, dt)
+    gw = jnp.asarray(gamma, dt) ** w
+
+    p0, m0, e0, n0 = carry
+    wdec = (tril * (qc @ kc.T)) * gam  # Gam . W, W = tril(Qc Kc^T)
+
+    r_rows = gp[:, None] * (qc @ p0) + wdec @ vc  # r_i = q_i^T P_i   [w, dv]
+    s_rows = gp * (qc @ m0) + wdec @ jnp.ones((w,), dt)  # q_i^T m_i  [w]
+    num = gp[:, None] * (qc @ e0) + wdec @ r_rows
+    den = gp * (qc @ n0) + wdec @ s_rows
+    out = ref.apply_normalization(num, den, norm_mode, eps)
+
+    kw = kc * wp[:, None]
+    r_plain = kc.T @ qc  # plain segment cross moment R^KQ (DESIGN errata #3)
+    p1 = gw * p0 + kw.T @ vc
+    m1 = gw * m0 + jnp.sum(kw, axis=0)
+    e1 = gw * e0 + r_plain @ (gw * p0) + kw.T @ (wdec @ vc)
+    n1 = gw * n0 + r_plain @ (gw * m0) + kw.T @ (wdec @ jnp.ones((w,), dt))
+    return out, AhlaCarry(p1, m1, e1, n1)
+
+
+# ---------------------------------------------------------------------------
+# third order (Section 7); chunk-parallel form requires gamma == 1 (Alg. 4)
+# ---------------------------------------------------------------------------
+
+
+class Hla3Carry(NamedTuple):
+    s: jnp.ndarray  # [d, d]   S^K
+    p: jnp.ndarray  # [d, dv]  P^KV
+    m: jnp.ndarray  # [d]      m^K
+    f: jnp.ndarray  # [d, dv]  F (corrected)
+    eta: jnp.ndarray  # [d]    eta (corrected denominator)
+
+
+def hla3_carry_init(d: int, dv: int, dtype=jnp.float32) -> Hla3Carry:
+    z = jnp.zeros
+    return Hla3Carry(
+        z((d, d), dtype), z((d, dv), dtype), z((d,), dtype), z((d, dv), dtype), z((d,), dtype)
+    )
+
+
+def hla3_chunk(carry: Hla3Carry, qc, kc, vc, *, gamma=1.0, norm_mode="none", eps=1e-6):
+    """One chunk of canonical masked third-order HLA (any gamma).
+
+    The canonical operator streams as F_t = g F + (S_t q_t)(q_t^T P_t)^T
+    (see ``ref.Hla3State``).  Splitting S_u = g^u S0 + S^loc_u and
+    P_u = g^u P0 + P^loc_u gives four carry/local products per token u,
+    each a masked matmul tile:
+
+      (i)   g^{t+u} (S0 q_u)(q_u^T P0)     tile_sq . Gam . gp[cols] @ Qc P0
+      (ii)  g^t     (S0 q_u)(q_u^T Ploc_u) tile_sq . (gp rows) @ b
+      (iii) g^t     (Sloc_u q_u)(q_u^T P0) (Qc a^T) . (gp rows) @ Qc P0
+      (iv)  g^{t-u} (Sloc_u q_u)(q_u^T Ploc_u)  ((Qc a^T) . Gam) @ b
+
+    with a_u = row_u[(Gam.QcKc^T) Kc] and b_u = row_u[(Gam.QcKc^T) Vc].
+    Unlike the paper's Algorithm 4 (stated for gamma == 1 and needing
+    O(d^3 dv) segment maps), the canonical chunk composition is exact for
+    every gamma with only O(d^2 + d dv) carry.
+    """
+    w = qc.shape[0]
+    dt = qc.dtype
+    gp, wp, gam = decay_factors(w, gamma, dt)
+    tril = ref.causal_mask(w, dt)
+    gw = jnp.asarray(gamma, dt) ** w
+    ones = jnp.ones((w,), dt)
+
+    s0, p0, m0, f0, eta0 = carry
+    wdec = (tril * (qc @ kc.T)) * gam  # Gam . W
+    a = wdec @ kc  # a_u = S^loc_u q_u        [w, d]
+    b = wdec @ vc  # b_u = q_u^T P^loc_u      [w, dv]
+    bm = wdec @ ones  # q_u^T m^loc_u          [w]
+    tile_sq = (qc @ s0 @ qc.T) * gam  # (q_t^T S0 q_u) g^{t-u}, u <= t
+    tile_a = (qc @ a.T) * gam  # (q_t . a_u) g^{t-u},  u <= t
+    qp0 = qc @ p0  # [w, dv]
+    qm0 = qc @ m0  # [w]
+
+    gp2 = gp * gp
+    num = (
+        gp[:, None] * (qc @ f0)
+        + (tile_sq * gp2[None, :]) @ qp0
+        + (tile_sq * gp[None, :]) @ b
+        + (tile_a * gp[None, :]) @ qp0
+        + tile_a @ b
+    )
+    den = (
+        gp * (qc @ eta0)
+        + (tile_sq * gp2[None, :]) @ qm0
+        + (tile_sq * gp[None, :]) @ bm
+        + (tile_a * gp[None, :]) @ qm0
+        + tile_a @ bm
+    )
+    out = ref.apply_normalization(num, den, norm_mode, eps)
+
+    # ---- carry update (chunk-end composition, all gamma) ----
+    kw = kc * wp[:, None]
+    qgp = qc * gp[:, None]
+    s1 = gw * s0 + kw.T @ kc
+    p1 = gw * p0 + kw.T @ vc
+    m1 = gw * m0 + jnp.sum(kw, axis=0)
+    sq_gp = qgp.T @ qc  # sum g^u q_u q_u^T
+    f1 = (
+        gw * f0
+        + gw * (s0 @ sq_gp @ p0)
+        + gw * (s0 @ (qc.T @ b))
+        + gw * ((a.T @ qc) @ p0)
+        + (a * wp[:, None]).T @ b
+    )
+    eta1 = (
+        gw * eta0
+        + gw * (s0 @ (sq_gp @ m0))
+        + gw * (s0 @ (bm @ qc))
+        + gw * ((a.T @ qc) @ m0)
+        + (wp * bm) @ a
+    )
+    return out, Hla3Carry(s1, p1, m1, f1, eta1)
+
+
+# ---------------------------------------------------------------------------
+# first-order linear attention baseline (Section 2.2), chunked
+# ---------------------------------------------------------------------------
+
+
+def linear_chunk(carry, qc, kc, vc, *, gamma=1.0, norm_mode="none", eps=1e-6):
+    """One chunk of first-order causal linear attention (identity map)."""
+    w = qc.shape[0]
+    dt = qc.dtype
+    gp, wp, gam = decay_factors(w, gamma, dt)
+    tril = ref.causal_mask(w, dt)
+    gw = jnp.asarray(gamma, dt) ** w
+
+    p0, m0 = carry
+    wdec = (tril * (qc @ kc.T)) * gam
+    num = gp[:, None] * (qc @ p0) + wdec @ vc
+    den = gp * (qc @ m0) + wdec @ jnp.ones((w,), dt)
+    out = ref.apply_normalization(num, den, norm_mode, eps)
+
+    kw = kc * wp[:, None]
+    p1 = gw * p0 + kw.T @ vc
+    m1 = gw * m0 + jnp.sum(kw, axis=0)
+    return out, (p1, m1)

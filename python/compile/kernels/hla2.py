@@ -1,0 +1,171 @@
+"""Pallas kernel for masked second-order HLA (chunkwise, Algorithm 1).
+
+TPU mapping (DESIGN.md "Hardware adaptation"): one grid step per chunk of
+``w`` tokens; the constant-size state tuple (S, C, m, G, h) lives in VMEM
+scratch and is carried across grid steps (TPU grid execution is sequential,
+which realizes the inter-chunk serial composition of Section 4.2).  The
+intra-chunk work is the masked w x w tile math of ``chunk_math.hla2_chunk``
+— all contractions are matmuls so they map onto the MXU.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; numerics are identical (see /opt/xla-example/README.md).
+
+The module also exposes ``hla2_chunked`` — the same math driven by
+``jax.lax.scan`` — which is the differentiable path used by the L2 model.
+Both must agree with ``ref.hla2_serial`` exactly (pytest enforces this).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import chunk_math
+from .chunk_math import Hla2Carry
+
+__all__ = ["hla2_pallas", "hla2_chunked"]
+
+
+def _hla2_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    s_ref,
+    c_ref,
+    m_ref,
+    g_ref,
+    h_ref,
+    *,
+    gamma,
+    lam,
+    masked,
+    norm_mode,
+    eps,
+):
+    """Kernel body: one chunk per grid step, VMEM-resident carry."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    carry = Hla2Carry(s_ref[...], c_ref[...], m_ref[0], g_ref[...], h_ref[0])
+    out, new = chunk_math.hla2_chunk(
+        carry,
+        q_ref[...],
+        k_ref[...],
+        v_ref[...],
+        gamma=gamma,
+        lam=lam,
+        masked=masked,
+        norm_mode=norm_mode,
+        eps=eps,
+    )
+    o_ref[...] = out
+    s_ref[...] = new.s
+    c_ref[...] = new.c
+    m_ref[0] = new.m
+    g_ref[...] = new.g
+    h_ref[0] = new.h
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk", "gamma", "lam", "masked", "norm_mode", "eps", "interpret"),
+)
+def hla2_pallas(
+    q,
+    k,
+    v,
+    *,
+    chunk: int = 64,
+    gamma: float = 1.0,
+    lam: float = 0.0,
+    masked: bool = True,
+    norm_mode: str = "none",
+    eps: float = 1e-6,
+    interpret: bool = True,
+):
+    """Masked second-order HLA over a full sequence via the Pallas kernel.
+
+    Args:
+      q, k: [n, d]; v: [n, dv].  ``n`` must be a multiple of ``chunk``.
+    Returns:
+      [n, dv] outputs identical to ``ref.hla2_serial`` (same options).
+    """
+    n, d = q.shape
+    dv = v.shape[1]
+    if n % chunk != 0:
+        raise ValueError(f"sequence length {n} not divisible by chunk {chunk}")
+    grid = (n // chunk,)
+    kernel = functools.partial(
+        _hla2_kernel, gamma=gamma, lam=lam, masked=masked, norm_mode=norm_mode, eps=eps
+    )
+    tok_spec = lambda width: pl.BlockSpec((chunk, width), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tok_spec(d), tok_spec(d), tok_spec(dv)],
+        out_specs=tok_spec(dv),
+        out_shape=jax.ShapeDtypeStruct((n, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, d), q.dtype),  # S
+            pltpu.VMEM((d, dv), q.dtype),  # C
+            pltpu.VMEM((1, d), q.dtype),  # m
+            pltpu.VMEM((d, dv), q.dtype),  # G
+            pltpu.VMEM((1, d), q.dtype),  # h
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def hla2_chunked(
+    q,
+    k,
+    v,
+    *,
+    chunk: int = 64,
+    gamma: float = 1.0,
+    lam: float = 0.0,
+    masked: bool = True,
+    norm_mode: str = "none",
+    eps: float = 1e-6,
+    carry: Hla2Carry | None = None,
+    return_carry: bool = False,
+):
+    """Differentiable chunked HLA (lax.scan over ``chunk_math.hla2_chunk``).
+
+    Used by the L2 model for training (the Pallas call has no VJP); also
+    serves as ``prefill`` when ``return_carry=True``.
+    """
+    n, d = q.shape
+    dv = v.shape[1]
+    if n % chunk != 0:
+        raise ValueError(f"sequence length {n} not divisible by chunk {chunk}")
+    nc = n // chunk
+    if carry is None:
+        carry = chunk_math.hla2_carry_init(d, dv, q.dtype)
+
+    def body(state, qkv):
+        qc, kc, vc = qkv
+        out, state = chunk_math.hla2_chunk(
+            state, qc, kc, vc, gamma=gamma, lam=lam, masked=masked, norm_mode=norm_mode, eps=eps
+        )
+        return state, out
+
+    qs = q.reshape(nc, chunk, d)
+    ks = k.reshape(nc, chunk, d)
+    vs = v.reshape(nc, chunk, dv)
+    final, outs = jax.lax.scan(body, carry, (qs, ks, vs))
+    outs = outs.reshape(n, dv)
+    if return_carry:
+        return outs, final
+    return outs

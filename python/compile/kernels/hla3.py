@@ -1,0 +1,121 @@
+"""Pallas kernel for masked third-order HLA (Section 7 / Algorithms 3-4).
+
+Implements the *canonical* strictly causal third-order operator
+(((W W^T).L) W).L V, which streams with the rank-1 recurrence
+F_t = g F + (S_t q_t)(q_t^T P_t)^T (see ref.Hla3State and DESIGN.md
+erratum #4 for why this differs from the paper's printed Eq. 7.5).  The
+VMEM carry is only (S^K, P, m, F, eta) — no S^Q moment and no O(d^3 dv)
+segment maps are needed, and the chunk composition is exact for every
+gamma (the paper's Algorithm 4 is stated for gamma == 1 only).  The
+paper-literal recurrence is kept in ref.hla3_paper_serial and in the Rust
+hla::monoid3 (dense + factored segment maps, bench E9).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import chunk_math
+from .chunk_math import Hla3Carry
+
+__all__ = ["hla3_pallas", "hla3_chunked"]
+
+
+def _hla3_kernel(
+    q_ref, k_ref, v_ref, o_ref, s_ref, p_ref, m_ref, f_ref, eta_ref, *, gamma, norm_mode, eps
+):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        for r in (s_ref, p_ref, m_ref, f_ref, eta_ref):
+            r[...] = jnp.zeros_like(r)
+
+    carry = Hla3Carry(s_ref[...], p_ref[...], m_ref[0], f_ref[...], eta_ref[0])
+    out, new = chunk_math.hla3_chunk(
+        carry, q_ref[...], k_ref[...], v_ref[...], gamma=gamma, norm_mode=norm_mode, eps=eps
+    )
+    o_ref[...] = out
+    s_ref[...] = new.s
+    p_ref[...] = new.p
+    m_ref[0] = new.m
+    f_ref[...] = new.f
+    eta_ref[0] = new.eta
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "gamma", "norm_mode", "eps", "interpret")
+)
+def hla3_pallas(
+    q,
+    k,
+    v,
+    *,
+    chunk: int = 64,
+    gamma: float = 1.0,
+    norm_mode: str = "none",
+    eps: float = 1e-6,
+    interpret: bool = True,
+):
+    """Canonical masked third-order HLA over a full sequence (any gamma)."""
+    n, d = q.shape
+    dv = v.shape[1]
+    if n % chunk != 0:
+        raise ValueError(f"sequence length {n} not divisible by chunk {chunk}")
+    kernel = functools.partial(_hla3_kernel, gamma=gamma, norm_mode=norm_mode, eps=eps)
+    tok_spec = lambda width: pl.BlockSpec((chunk, width), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // chunk,),
+        in_specs=[tok_spec(d), tok_spec(d), tok_spec(dv)],
+        out_specs=tok_spec(dv),
+        out_shape=jax.ShapeDtypeStruct((n, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, d), q.dtype),  # S^K
+            pltpu.VMEM((d, dv), q.dtype),  # P^KV
+            pltpu.VMEM((1, d), q.dtype),  # m^K
+            pltpu.VMEM((d, dv), q.dtype),  # F
+            pltpu.VMEM((1, d), q.dtype),  # eta
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def hla3_chunked(
+    q,
+    k,
+    v,
+    *,
+    chunk: int = 64,
+    gamma: float = 1.0,
+    norm_mode: str = "none",
+    eps: float = 1e-6,
+    carry: Hla3Carry | None = None,
+    return_carry: bool = False,
+):
+    """Differentiable chunked canonical third-order HLA (any gamma)."""
+    n, d = q.shape
+    dv = v.shape[1]
+    if n % chunk != 0:
+        raise ValueError(f"sequence length {n} not divisible by chunk {chunk}")
+    nc = n // chunk
+    if carry is None:
+        carry = chunk_math.hla3_carry_init(d, dv, q.dtype)
+
+    def body(state, qkv):
+        qc, kc, vc = qkv
+        out, state = chunk_math.hla3_chunk(
+            state, qc, kc, vc, gamma=gamma, norm_mode=norm_mode, eps=eps
+        )
+        return state, out
+
+    final, outs = jax.lax.scan(
+        body, carry, (q.reshape(nc, chunk, d), k.reshape(nc, chunk, d), v.reshape(nc, chunk, dv))
+    )
+    outs = outs.reshape(n, dv)
+    if return_carry:
+        return outs, final
+    return outs

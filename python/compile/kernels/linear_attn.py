@@ -1,0 +1,109 @@
+"""First-order linear-attention baseline kernel (Section 2.2).
+
+Identity feature map; chunked exactly like the HLA kernels so throughput
+comparisons (bench E3) isolate the cost of the higher-order summaries
+rather than differences in kernel structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import chunk_math
+
+__all__ = ["linear_attn_pallas", "linear_attn_chunked"]
+
+
+def _linear_kernel(q_ref, k_ref, v_ref, o_ref, p_ref, m_ref, *, gamma, norm_mode, eps):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        p_ref[...] = jnp.zeros_like(p_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    out, (p1, m1) = chunk_math.linear_chunk(
+        (p_ref[...], m_ref[0]),
+        q_ref[...],
+        k_ref[...],
+        v_ref[...],
+        gamma=gamma,
+        norm_mode=norm_mode,
+        eps=eps,
+    )
+    o_ref[...] = out
+    p_ref[...] = p1
+    m_ref[0] = m1
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "gamma", "norm_mode", "eps", "interpret"))
+def linear_attn_pallas(
+    q,
+    k,
+    v,
+    *,
+    chunk: int = 64,
+    gamma: float = 1.0,
+    norm_mode: str = "none",
+    eps: float = 1e-6,
+    interpret: bool = True,
+):
+    """First-order causal linear attention over a full sequence."""
+    n, d = q.shape
+    dv = v.shape[1]
+    if n % chunk != 0:
+        raise ValueError(f"sequence length {n} not divisible by chunk {chunk}")
+    kernel = functools.partial(_linear_kernel, gamma=gamma, norm_mode=norm_mode, eps=eps)
+    tok_spec = lambda width: pl.BlockSpec((chunk, width), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // chunk,),
+        in_specs=[tok_spec(d), tok_spec(d), tok_spec(dv)],
+        out_specs=tok_spec(dv),
+        out_shape=jax.ShapeDtypeStruct((n, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, dv), q.dtype),  # P^KV
+            pltpu.VMEM((1, d), q.dtype),  # m^K
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def linear_attn_chunked(
+    q,
+    k,
+    v,
+    *,
+    chunk: int = 64,
+    gamma: float = 1.0,
+    norm_mode: str = "none",
+    eps: float = 1e-6,
+    carry=None,
+    return_carry: bool = False,
+):
+    """Differentiable chunked linear attention."""
+    n, d = q.shape
+    dv = v.shape[1]
+    if n % chunk != 0:
+        raise ValueError(f"sequence length {n} not divisible by chunk {chunk}")
+    nc = n // chunk
+    if carry is None:
+        carry = (jnp.zeros((d, dv), q.dtype), jnp.zeros((d,), q.dtype))
+
+    def body(state, qkv):
+        qc, kc, vc = qkv
+        out, state = chunk_math.linear_chunk(
+            state, qc, kc, vc, gamma=gamma, norm_mode=norm_mode, eps=eps
+        )
+        return state, out
+
+    final, outs = jax.lax.scan(
+        body, carry, (q.reshape(nc, chunk, d), k.reshape(nc, chunk, d), v.reshape(nc, chunk, dv))
+    )
+    outs = outs.reshape(n, dv)
+    if return_carry:
+        return outs, final
+    return outs

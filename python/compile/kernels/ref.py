@@ -1,0 +1,493 @@
+"""Pure-jnp correctness oracles for Higher-order Linear Attention (HLA).
+
+Two families of oracle, per the paper (Zhang et al., 2025):
+
+1. **Quadratic (materialized) oracles** — build the n x n masked weight
+   matrices exactly as written in the paper (Sections 3.1, 6.1, 7.1) and
+   apply them to V.  These are only defined for ``gamma == 1`` (no decay)
+   and are the ground truth for Theorems 3.1 / 6.1 / 7.1.
+
+2. **Serial (streaming) oracles** — the token-by-token recurrences.  These
+   are the *canonical semantics* for every configuration (decay, ridge,
+   normalization); chunked/pallas/scan implementations must reproduce them
+   up to float reassociation.
+
+Decay convention (monoid-consistent; see DESIGN.md errata): a decayed step
+is ``X_t = (gamma * X_{t-1}) <+ token_t``, i.e. *every* summary of the
+carry is attenuated before the token's deltas and cross terms are added.
+For the second-order cross-summaries this gives
+
+    G_t = gamma * (G_{t-1} + k_t (k_t^T C_{t-1}))
+    h_t = gamma * (h_{t-1} + k_t (k_t^T m_{t-1}))
+
+which is the form implied by the paper's decayed semidirect product
+(Section 4.2); the printed per-token update in Section 4.3 omits the inner
+attenuation of ``C_{t-1}`` and is not associative-scan-consistent.  At
+``gamma == 1`` the two coincide.
+
+Shapes: q, k are [n, d]; v is [n, dv]; outputs are [n, dv].
+All oracles are single-head; batching/heads are vmapped by callers.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "causal_mask",
+    "strict_causal_mask",
+    "decay_mask",
+    "apply_normalization",
+    "hla2_quadratic",
+    "hla2_prefix_quadratic",
+    "ahla_quadratic",
+    "hla3_quadratic",
+    "linear_attention_quadratic",
+    "softmax_attention",
+    "Hla2State",
+    "AhlaState",
+    "Hla3State",
+    "hla2_init",
+    "hla2_step",
+    "hla2_out",
+    "hla2_serial",
+    "ahla_init",
+    "ahla_step",
+    "ahla_serial",
+    "hla3_init",
+    "hla3_step",
+    "hla3_serial",
+    "linear_attention_serial",
+]
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Binary lower-triangular mask L (ones on and below the diagonal)."""
+    return jnp.tril(jnp.ones((n, n), dtype=dtype))
+
+
+def strict_causal_mask(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Strictly-lower-triangular mask (zeros on the diagonal)."""
+    return jnp.tril(jnp.ones((n, n), dtype=dtype), k=-1)
+
+
+def decay_mask(n: int, gamma: float, dtype=jnp.float32) -> jnp.ndarray:
+    """Gamma^(t-j) on and below the diagonal, zero above."""
+    t = jnp.arange(n)
+    expo = (t[:, None] - t[None, :]).astype(dtype)
+    return jnp.where(expo >= 0, jnp.asarray(gamma, dtype) ** expo, 0.0)
+
+
+def apply_normalization(num, den, norm_mode: str, eps: float):
+    """Apply the paper's optional linear normalization.
+
+    norm_mode:
+      * ``"none"``   — unnormalized (the paper's default operator).
+      * ``"linear"`` — divide by ``den + eps`` (Eq. 3.2 / 3.4 verbatim).
+      * ``"abs"``    — divide by ``|den| + eps`` (sign-safe variant used by
+        the LM configs; den is not sign-definite for raw q/k).
+    """
+    if norm_mode == "none":
+        return num
+    if norm_mode == "linear":
+        return num / (den + eps)[..., None]
+    if norm_mode == "abs":
+        return num / (jnp.abs(den) + eps)[..., None]
+    raise ValueError(f"unknown norm_mode {norm_mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# quadratic (materialized) oracles -- gamma == 1 only
+# ---------------------------------------------------------------------------
+
+
+def hla2_quadratic(q, k, v, *, norm_mode="none", eps=1e-6, lam=0.0):
+    """Masked second-order HLA via the materialized form of Theorem 3.1.
+
+    ``o_t = row_t[ ((L.QK^T)(L.QK^T)^T . L) V ]``, optionally
+    ridge-stabilized (``lam`` implements Algorithm 1's ``S_eff = S + lam I``,
+    adding ``lam * q_t^T C_t`` to the numerator and ``lam * q_t^T m_t`` to
+    the denominator) and optionally normalized.
+    """
+    n = q.shape[0]
+    mask = causal_mask(n, q.dtype)
+    w = mask * (q @ k.T)
+    t2 = (w @ w.T) * mask
+    num = t2 @ v
+    den = jnp.sum(t2, axis=1)
+    if lam != 0.0:
+        cw = mask * (q @ q.T)  # (q_t . q_j) for j <= t
+        num = num + lam * (cw @ v)
+        den = den + lam * jnp.sum(cw, axis=1)
+    return apply_normalization(num, den, norm_mode, eps)
+
+
+def hla2_prefix_quadratic(q, k, v, *, norm_mode="none", eps=1e-6):
+    """Prefix ("unmasked") second-order HLA, Eq. (3.1)/(3.2).
+
+    ``o_t = q_t^T S_t C_t`` with prefix moments up to t; equals
+    ``row_t[ (((L.QK^T)(QK^T)^T) . L) V ]``.
+    """
+    n = q.shape[0]
+    mask = causal_mask(n, q.dtype)
+    a = q @ k.T
+    w = mask * a
+    t2 = (w @ a.T) * mask
+    num = t2 @ v
+    den = jnp.sum(t2, axis=1)
+    return apply_normalization(num, den, norm_mode, eps)
+
+
+def ahla_quadratic(q, k, v, *, norm_mode="none", eps=1e-6):
+    """Masked asymmetric HLA (AHLA) via Eq. (6.1): ((AA) . L) V, A = L.QK^T."""
+    n = q.shape[0]
+    mask = causal_mask(n, q.dtype)
+    a = mask * (q @ k.T)
+    w = (a @ a) * mask
+    num = w @ v
+    den = jnp.sum(w, axis=1)
+    return apply_normalization(num, den, norm_mode, eps)
+
+
+def hla3_quadratic(q, k, v, *, norm_mode="none", eps=1e-6):
+    """Masked third-order HLA via Section 7: (((W W^T).L) W).L V, W = L.QK^T.
+
+    Note (DESIGN.md erratum #4): the paper displays ``(A A^T A) . L`` but its
+    own Theorem 7.1 proof restricts the middle index to ``u <= t`` — without
+    that restriction the operator is anti-causal through u.  The masked
+    middle product below is the strictly causal operator the streaming
+    algebra (Algorithm 3) actually computes.
+    """
+    n = q.shape[0]
+    mask = causal_mask(n, q.dtype)
+    w = mask * (q @ k.T)
+    t3 = (((w @ w.T) * mask) @ w) * mask
+    num = t3 @ v
+    den = jnp.sum(t3, axis=1)
+    return apply_normalization(num, den, norm_mode, eps)
+
+
+def linear_attention_quadratic(q, k, v, *, norm_mode="none", eps=1e-6):
+    """First-order causal linear attention with identity feature map."""
+    n = q.shape[0]
+    mask = causal_mask(n, q.dtype)
+    w = mask * (q @ k.T)
+    num = w @ v
+    den = jnp.sum(w, axis=1)
+    return apply_normalization(num, den, norm_mode, eps)
+
+
+def softmax_attention(q, k, v, *, scale=None):
+    """Causal scaled-dot-product attention baseline (Section 2.1)."""
+    n, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = (q @ k.T) * scale
+    neg = jnp.asarray(jnp.finfo(q.dtype).min, q.dtype)
+    logits = jnp.where(causal_mask(n, q.dtype) > 0, logits, neg)
+    return jax.nn.softmax(logits, axis=-1) @ v
+
+
+# ---------------------------------------------------------------------------
+# serial (streaming) oracles -- canonical semantics
+# ---------------------------------------------------------------------------
+
+
+class Hla2State(NamedTuple):
+    """Second-order masked state tuple (S, C, m, G, h) of Theorem 3.1."""
+
+    s: jnp.ndarray  # [d, d]
+    c: jnp.ndarray  # [d, dv]
+    m: jnp.ndarray  # [d]
+    g: jnp.ndarray  # [d, dv]
+    h: jnp.ndarray  # [d]
+
+
+def hla2_init(d: int, dv: int, dtype=jnp.float32) -> Hla2State:
+    z = jnp.zeros
+    return Hla2State(
+        z((d, d), dtype), z((d, dv), dtype), z((d,), dtype), z((d, dv), dtype), z((d,), dtype)
+    )
+
+
+def hla2_step(state: Hla2State, qt, kt, vt, *, gamma=1.0) -> Hla2State:
+    """One monoid-consistent decayed online update (Sections 3.1, 4.3)."""
+    g = gamma * (state.g + jnp.outer(kt, kt @ state.c))
+    h = gamma * (state.h + kt * (kt @ state.m))
+    s = gamma * state.s + jnp.outer(kt, kt)
+    c = gamma * state.c + jnp.outer(qt, vt)
+    m = gamma * state.m + qt
+    return Hla2State(s, c, m, g, h)
+
+
+def hla2_out(state: Hla2State, qt, *, masked=True, norm_mode="none", eps=1e-6, lam=0.0):
+    """Per-token output from the inclusive state (Theorem 3.1 / Algorithm 1)."""
+    u = qt @ state.s
+    if lam != 0.0:
+        u = u + lam * qt
+    num = u @ state.c
+    den = u @ state.m
+    if masked:
+        num = num - qt @ state.g
+        den = den - qt @ state.h
+    return apply_normalization(num[None, :], den[None], norm_mode, eps)[0]
+
+
+def hla2_serial(q, k, v, *, gamma=1.0, lam=0.0, masked=True, norm_mode="none", eps=1e-6):
+    """Token-by-token masked second-order HLA (the canonical spec)."""
+    d, dv = q.shape[1], v.shape[1]
+
+    def body(state, qkv):
+        qt, kt, vt = qkv
+        state = hla2_step(state, qt, kt, vt, gamma=gamma)
+        o = hla2_out(state, qt, masked=masked, norm_mode=norm_mode, eps=eps, lam=lam)
+        return state, o
+
+    _, out = jax.lax.scan(body, hla2_init(d, dv, q.dtype), (q, k, v))
+    return out
+
+
+class AhlaState(NamedTuple):
+    """AHLA state tuple (P, m, E, n) of Theorem 6.1."""
+
+    p: jnp.ndarray  # [d, dv]
+    m: jnp.ndarray  # [d]
+    e: jnp.ndarray  # [d, dv]
+    n: jnp.ndarray  # [d]
+
+
+def ahla_init(d: int, dv: int, dtype=jnp.float32) -> AhlaState:
+    z = jnp.zeros
+    return AhlaState(z((d, dv), dtype), z((d,), dtype), z((d, dv), dtype), z((d,), dtype))
+
+
+def ahla_step(state: AhlaState, qt, kt, vt, *, gamma=1.0) -> AhlaState:
+    """Algorithm 2 update (P before E; the paper's decayed form is already
+    monoid-consistent because E's cross term uses the *inclusive* P_t)."""
+    p = gamma * state.p + jnp.outer(kt, vt)
+    m = gamma * state.m + kt
+    e = gamma * state.e + jnp.outer(kt, qt @ p)
+    n = gamma * state.n + kt * (qt @ m)
+    return AhlaState(p, m, e, n)
+
+
+def ahla_serial(q, k, v, *, gamma=1.0, norm_mode="none", eps=1e-6):
+    """Token-by-token AHLA (Algorithm 2)."""
+    d, dv = q.shape[1], v.shape[1]
+
+    def body(state, qkv):
+        qt, kt, vt = qkv
+        state = ahla_step(state, qt, kt, vt, gamma=gamma)
+        num = qt @ state.e
+        den = qt @ state.n
+        o = apply_normalization(num[None, :], den[None], norm_mode, eps)[0]
+        return state, o
+
+    _, out = jax.lax.scan(body, ahla_init(d, dv, q.dtype), (q, k, v))
+    return out
+
+
+class Hla3State(NamedTuple):
+    """Canonical third-order state: (S^K, P^KV, m^K) moments plus the
+    corrected numerator/denominator (F, eta).
+
+    The strictly causal third-order operator ``(((W W^T).L) W).L V`` admits
+    the rank-1 streaming form (DESIGN.md Section 7 notes)
+
+        F_t = gamma F_{t-1} + (S_t q_t) (q_t^T P_t)^T,
+
+    which is *cheaper* than the paper's Eq. (7.5): O(d^2 + d dv) per token
+    with a (2 d^2 + 2 d dv)-sized state and no S^Q moment in the carry.
+    """
+
+    s: jnp.ndarray  # [d, d]   S^K
+    p: jnp.ndarray  # [d, dv]  P^KV
+    m: jnp.ndarray  # [d]      m^K
+    f: jnp.ndarray  # [d, dv]  F
+    eta: jnp.ndarray  # [d]    eta
+
+
+def hla3_init(d: int, dv: int, dtype=jnp.float32) -> Hla3State:
+    z = jnp.zeros
+    return Hla3State(
+        z((d, d), dtype), z((d, dv), dtype), z((d,), dtype), z((d, dv), dtype), z((d,), dtype)
+    )
+
+
+def hla3_step(state: Hla3State, qt, kt, vt, *, gamma=1.0) -> Hla3State:
+    """Rank-1 canonical third-order update (inclusive S_t, P_t, m_t)."""
+    s = gamma * state.s + jnp.outer(kt, kt)
+    p = gamma * state.p + jnp.outer(kt, vt)
+    m = gamma * state.m + kt
+    sq = s @ qt
+    f = gamma * state.f + jnp.outer(sq, qt @ p)
+    eta = gamma * state.eta + sq * (qt @ m)
+    return Hla3State(s, p, m, f, eta)
+
+
+def hla3_serial(q, k, v, *, gamma=1.0, norm_mode="none", eps=1e-6):
+    """Token-by-token canonical masked third-order HLA."""
+    d, dv = q.shape[1], v.shape[1]
+
+    def body(state, qkv):
+        qt, kt, vt = qkv
+        state = hla3_step(state, qt, kt, vt, gamma=gamma)
+        num = qt @ state.f
+        den = qt @ state.eta
+        o = apply_normalization(num[None, :], den[None], norm_mode, eps)[0]
+        return state, o
+
+    _, out = jax.lax.scan(body, hla3_init(d, dv, q.dtype), (q, k, v))
+    return out
+
+
+# -- the paper's literal third-order recurrence (Eq. 7.5 / Algorithm 3) -----
+#
+# The printed Theorem 7.1 proof drops the j <= u mask inside W_{u,j} and its
+# G-corrections use P_{i-1} where the peeling yields P_t, so the recurrence
+# below is a *different* causal operator than the masked W-product (DESIGN.md
+# erratum #4).  It is kept verbatim for fidelity: its G-form and F-form are
+# mutually consistent, and the Rust `hla::monoid3` reproduces its Algorithm 4
+# chunk scan (Theorem 7.2) exactly.
+
+
+class Hla3PaperState(NamedTuple):
+    """Paper-literal state: (S^K, S^Q, P, m) moments plus corrected (F, eta)."""
+
+    sk: jnp.ndarray  # [d, d]
+    sq: jnp.ndarray  # [d, d]
+    p: jnp.ndarray  # [d, dv]
+    m: jnp.ndarray  # [d]
+    f: jnp.ndarray  # [d, dv]
+    eta: jnp.ndarray  # [d]
+
+
+def hla3_paper_init(d: int, dv: int, dtype=jnp.float32) -> Hla3PaperState:
+    z = jnp.zeros
+    return Hla3PaperState(
+        z((d, d), dtype),
+        z((d, d), dtype),
+        z((d, dv), dtype),
+        z((d,), dtype),
+        z((d, dv), dtype),
+        z((d,), dtype),
+    )
+
+
+def hla3_paper_step(state: Hla3PaperState, qt, kt, vt, *, gamma=1.0) -> Hla3PaperState:
+    """Eq. (7.5) corrected-state recurrence with monoid-consistent decay.
+
+    With D^K = k k^T, D^Q = q q^T, D^P = k v^T, d^m = k the four cross
+    terms reduce to rank-1 updates:
+
+        S^K D^Q D^P = (S^K q)(q.k) v^T       D^K S^Q D^P = k (k^T S^Q k) v^T
+        D^K D^Q P   = k (k.q)(q^T P)         D^K D^Q D^P = k (k.q)(q.k) v^T
+    """
+    sk = gamma * state.sk
+    sq = gamma * state.sq
+    p = gamma * state.p
+    m = gamma * state.m
+    kq = jnp.dot(kt, qt)
+    sk_q = sk @ qt
+    k_sq_k = jnp.dot(kt, sq @ kt)
+    f = (
+        gamma * state.f
+        + jnp.outer(sk_q, kq * vt)
+        + jnp.outer(kt, k_sq_k * vt)
+        + jnp.outer(kt, kq * (qt @ p))
+        + jnp.outer(kt, (kq * kq) * vt)
+    )
+    eta = (
+        gamma * state.eta
+        + kq * sk_q
+        + k_sq_k * kt
+        + (kq * jnp.dot(qt, m)) * kt
+        + (kq * kq) * kt
+    )
+    return Hla3PaperState(
+        sk + jnp.outer(kt, kt),
+        sq + jnp.outer(qt, qt),
+        p + jnp.outer(kt, vt),
+        m + kt,
+        f,
+        eta,
+    )
+
+
+def hla3_paper_serial(q, k, v, *, gamma=1.0, norm_mode="none", eps=1e-6):
+    """Token-by-token paper-literal third order (Algorithm 3 semantics)."""
+    d, dv = q.shape[1], v.shape[1]
+
+    def body(state, qkv):
+        qt, kt, vt = qkv
+        state = hla3_paper_step(state, qt, kt, vt, gamma=gamma)
+        num = qt @ state.f
+        den = qt @ state.eta
+        o = apply_normalization(num[None, :], den[None], norm_mode, eps)[0]
+        return state, o
+
+    _, out = jax.lax.scan(body, hla3_paper_init(d, dv, q.dtype), (q, k, v))
+    return out
+
+
+def hla3_paper_gform_serial(q, k, v, *, norm_mode="none", eps=1e-6):
+    """The paper's G-form (Theorem 7.1 cross-summaries G^(1..3), h^(1..3)),
+    implemented directly from the definitions; must equal the F-form
+    (internal-consistency check, gamma == 1)."""
+    d, dv = q.shape[1], v.shape[1]
+    z = jnp.zeros
+
+    def body(state, qkv):
+        sk, sq, p, m, g1, g2, g3, h1, h2, h3 = state
+        qt, kt, vt = qkv
+        kk = jnp.outer(kt, kt)
+        qq = jnp.outer(qt, qt)
+        g1 = g1 + kk @ sq @ p
+        g2 = g2 + sk @ qq @ p
+        g3 = g3 + sk @ sq @ jnp.outer(kt, vt)
+        h1 = h1 + kk @ sq @ m
+        h2 = h2 + sk @ qq @ m
+        h3 = h3 + sk @ sq @ kt
+        sk = sk + kk
+        sq = sq + qq
+        p = p + jnp.outer(kt, vt)
+        m = m + kt
+        num = qt @ (sk @ sq @ p - g1 - g2 - g3)
+        den = qt @ (sk @ sq @ m - h1 - h2 - h3)
+        o = apply_normalization(num[None, :], den[None], norm_mode, eps)[0]
+        return (sk, sq, p, m, g1, g2, g3, h1, h2, h3), o
+
+    init = (
+        z((d, d)), z((d, d)), z((d, dv)), z((d,)),
+        z((d, dv)), z((d, dv)), z((d, dv)), z((d,)), z((d,)), z((d,)),
+    )
+    init = tuple(jnp.asarray(x, q.dtype) for x in init)
+    _, out = jax.lax.scan(body, init, (q, k, v))
+    return out
+
+
+def linear_attention_serial(q, k, v, *, gamma=1.0, norm_mode="none", eps=1e-6):
+    """First-order linear attention recurrence (Section 2.2, identity map)."""
+    d, dv = q.shape[1], v.shape[1]
+    z = jnp.zeros
+
+    def body(state, qkv):
+        p, m = state
+        qt, kt, vt = qkv
+        p = gamma * p + jnp.outer(kt, vt)
+        m = gamma * m + kt
+        num = qt @ p
+        den = qt @ m
+        o = apply_normalization(num[None, :], den[None], norm_mode, eps)[0]
+        return (p, m), o
+
+    _, out = jax.lax.scan(body, (z((d, dv), q.dtype), z((d,), q.dtype)), (q, k, v))
+    return out

@@ -1,0 +1,192 @@
+"""Associative-scan (Blelloch) implementations of HLA — Figure 1(C) literal.
+
+This module implements the paper's Section 4 exactly as written: token-level
+segment leaves, the (decayed) semidirect-product concatenation, and
+``jax.lax.associative_scan`` as the parallel scan.  It exists to validate
+Theorem 4.1 / Remark 4.2 / Theorem 6.1's scan form against the serial
+recurrences and the chunked kernels — three independent routes to the same
+activations.
+
+Monoid elements are dicts of arrays; the leading axis is the scan axis.
+Per DESIGN.md errata, the decayed cross terms compose with the *plain*
+(undecayed) segment moments, so the masked second-order element carries an
+extra ``st`` (S-tilde) component and AHLA's ``r`` composes undecayed; at
+gamma == 1 these coincide with the paper's Eq. (4.1) / Eq. (6.2) verbatim.
+
+The third-order token-level scan is not implemented in JAX: its segment
+maps are O(d^3 dv) per element (Section 7.3); the Rust ``hla::monoid3``
+implements both the dense and the factored form at small d (bench E9).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+__all__ = [
+    "hla2_leaves",
+    "hla2_combine",
+    "ahla_leaves",
+    "ahla_combine",
+    "hla2_scan",
+    "ahla_scan",
+    "hla2_scan_exclusive",
+    "hla2_two_level_scan",
+]
+
+
+# ---------------------------------------------------------------------------
+# masked second order: element (s, c, m, g, h, st, rho)
+# ---------------------------------------------------------------------------
+
+
+def hla2_leaves(q, k, v, gamma: float):
+    """Single-token segments T_t (Section 4.2); g = h = 0 for a token."""
+    n, d = q.shape
+    dv = v.shape[1]
+    kk = k[:, :, None] * k[:, None, :]  # [n, d, d]
+    return {
+        "s": kk,
+        "c": q[:, :, None] * v[:, None, :],
+        "m": q,
+        "g": jnp.zeros((n, d, dv), q.dtype),
+        "h": jnp.zeros((n, d), q.dtype),
+        "st": kk,
+        "rho": jnp.full((n,), gamma, q.dtype),
+    }
+
+
+def hla2_combine(a, b):
+    """Decayed semidirect product, Eq. (4.1) with the S-tilde correction."""
+    rb = b["rho"][:, None, None]
+    rb1 = b["rho"][:, None]
+    return {
+        "s": rb * a["s"] + b["s"],
+        "c": rb * a["c"] + b["c"],
+        "m": rb1 * a["m"] + b["m"],
+        "g": rb * a["g"] + b["g"] + jnp.einsum("nij,njk->nik", b["st"], rb * a["c"]),
+        "h": rb1 * a["h"] + b["h"] + jnp.einsum("nij,nj->ni", b["st"], rb1 * a["m"]),
+        "st": a["st"] + b["st"],
+        "rho": a["rho"] * b["rho"],
+    }
+
+
+def _hla2_outputs(states, q, *, lam, masked, norm_mode, eps):
+    u = jnp.einsum("nd,nde->ne", q, states["s"])
+    if lam != 0.0:
+        u = u + lam * q
+    num = jnp.einsum("ne,nek->nk", u, states["c"])
+    den = jnp.einsum("ne,ne->n", u, states["m"])
+    if masked:
+        num = num - jnp.einsum("nd,ndk->nk", q, states["g"])
+        den = den - jnp.einsum("nd,nd->n", q, states["h"])
+    return ref.apply_normalization(num, den, norm_mode, eps)
+
+
+def hla2_scan(q, k, v, *, gamma=1.0, lam=0.0, masked=True, norm_mode="none", eps=1e-6):
+    """Masked second-order HLA via an inclusive associative scan (Thm 4.1)."""
+    leaves = hla2_leaves(q, k, v, gamma)
+    states = jax.lax.associative_scan(hla2_combine, leaves)
+    return _hla2_outputs(states, q, lam=lam, masked=masked, norm_mode=norm_mode, eps=eps)
+
+
+def _identity_like(leaves):
+    """Zero-length segment E: all-zero summaries, rho = 1 (Remark 4.2)."""
+    e = {k: jnp.zeros_like(v[:1]) for k, v in leaves.items()}
+    e["rho"] = jnp.ones_like(leaves["rho"][:1])
+    return e
+
+
+def hla2_scan_exclusive(q, k, v, *, gamma=1.0, lam=0.0, masked=True, norm_mode="none", eps=1e-6):
+    """Remark 4.2 route: exclusive Blelloch scan, then local inclusion.
+
+    Must produce the same activations as ``hla2_scan`` — this is the form
+    the paper's Algorithm 1 states (prefixes P_t, then P_t (+) T_t).
+    """
+    leaves = hla2_leaves(q, k, v, gamma)
+    inclusive = jax.lax.associative_scan(hla2_combine, leaves)
+    ident = _identity_like(leaves)
+    exclusive = jax.tree_util.tree_map(
+        lambda e, s: jnp.concatenate([e, s[:-1]], axis=0), ident, inclusive
+    )
+    states = hla2_combine(exclusive, leaves)  # local inclusion P_t (+) T_t
+    return _hla2_outputs(states, q, lam=lam, masked=masked, norm_mode=norm_mode, eps=eps)
+
+
+def hla2_two_level_scan(
+    q, k, v, *, chunk=16, gamma=1.0, lam=0.0, masked=True, norm_mode="none", eps=1e-6
+):
+    """Two-level scan of Section 4.2: within-chunk Blelloch scan + exclusive
+    inter-chunk scan over chunk summaries, then per-token merge.
+
+    This is Figure 1(C) verbatim (intra-chunk parallelism over w positions,
+    inter-chunk scan across B_c summaries).
+    """
+    n = q.shape[0]
+    if n % chunk != 0:
+        raise ValueError(f"sequence length {n} not divisible by chunk {chunk}")
+    nc = n // chunk
+    leaves = hla2_leaves(q, k, v, gamma)
+    # reshape leading axis to [nc, w, ...]
+    tiled = jax.tree_util.tree_map(lambda x: x.reshape(nc, chunk, *x.shape[1:]), leaves)
+    # within-chunk inclusive scan (vmapped over chunks -> intra-chunk parallel)
+    intra = jax.vmap(lambda lv: jax.lax.associative_scan(hla2_combine, lv))(tiled)
+    # chunk summaries = last position of each chunk's inclusive scan
+    summaries = jax.tree_util.tree_map(lambda x: x[:, -1], intra)
+    # exclusive scan across chunk summaries
+    inc_sum = jax.lax.associative_scan(hla2_combine, summaries)
+    ident = _identity_like(summaries)
+    carry = jax.tree_util.tree_map(
+        lambda e, s: jnp.concatenate([e, s[:-1]], axis=0), ident, inc_sum
+    )
+    # merge carry-in prefix with each intra-chunk inclusive state
+    carry_b = jax.tree_util.tree_map(
+        lambda x: jnp.repeat(x, chunk, axis=0), carry
+    )
+    flat_intra = jax.tree_util.tree_map(lambda x: x.reshape(n, *x.shape[2:]), intra)
+    states = hla2_combine(carry_b, flat_intra)
+    return _hla2_outputs(states, q, lam=lam, masked=masked, norm_mode=norm_mode, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# AHLA: element (p, m, e, n, r, rho)
+# ---------------------------------------------------------------------------
+
+
+def ahla_leaves(q, k, v, gamma: float):
+    """Single-token AHLA segments; e uses the token's own inclusive P."""
+    qk = jnp.sum(q * k, axis=1)  # (q_t . k_t)
+    kv = k[:, :, None] * v[:, None, :]
+    return {
+        "p": kv,
+        "m": k,
+        "e": qk[:, None, None] * kv,
+        "n": qk[:, None] * k,
+        "r": k[:, :, None] * q[:, None, :],  # plain R^KQ (DESIGN errata #3)
+        "rho": jnp.full((q.shape[0],), gamma, q.dtype),
+    }
+
+
+def ahla_combine(a, b):
+    """AHLA concatenation, Eq. (6.2); r composes undecayed."""
+    rb = b["rho"][:, None, None]
+    rb1 = b["rho"][:, None]
+    return {
+        "p": rb * a["p"] + b["p"],
+        "m": rb1 * a["m"] + b["m"],
+        "e": rb * a["e"] + b["e"] + jnp.einsum("nij,njk->nik", b["r"], rb * a["p"]),
+        "n": rb1 * a["n"] + b["n"] + jnp.einsum("nij,nj->ni", b["r"], rb1 * a["m"]),
+        "r": a["r"] + b["r"],
+        "rho": a["rho"] * b["rho"],
+    }
+
+
+def ahla_scan(q, k, v, *, gamma=1.0, norm_mode="none", eps=1e-6):
+    """AHLA via an inclusive associative scan (Section 6.2)."""
+    leaves = ahla_leaves(q, k, v, gamma)
+    states = jax.lax.associative_scan(ahla_combine, leaves)
+    num = jnp.einsum("nd,ndk->nk", q, states["e"])
+    den = jnp.einsum("nd,nd->n", q, states["n"])
+    return ref.apply_normalization(num, den, norm_mode, eps)

@@ -1,0 +1,394 @@
+"""L2: HLA transformer in JAX — the paper's mixer as a drop-in attention
+replacement (Section 5.2) inside a standard pre-norm decoder block.
+
+Only the attention sublayer changes per Section 5.2: RMSNorm -> mixer ->
+residual, RMSNorm -> SwiGLU FFN -> residual, tied LM head.  The mixer is
+selected by ``HlaConfig.mixer``:
+
+    hla2      masked second-order HLA (Theorem 3.1), chunked
+    ahla      asymmetric second-order HLA (Theorem 6.1), chunked
+    hla3      canonical third-order HLA, chunked
+    linear    first-order linear attention baseline
+    softmax   quadratic softmax attention baseline (Section 2.1)
+
+Everything in this module is build-time only: ``aot.py`` lowers the jitted
+functions to HLO text that the Rust runtime loads; Python never runs on the
+request path.
+
+Training-path functions (``loss_fn``, ``train_step``) use the
+differentiable ``*_chunked`` implementations; streaming-path functions
+(``prefill``, ``decode_step``) use the same chunk math plus the per-token
+``*_step`` updates from ``kernels.ref``, so serving state composes exactly
+with training activations (test_model.py asserts decode == forward).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chunk_math, ref
+from .kernels.ahla import ahla_chunked
+from .kernels.hla2 import hla2_chunked
+from .kernels.hla3 import hla3_chunked
+from .kernels.linear_attn import linear_attn_chunked
+
+MIXERS = ("hla2", "ahla", "hla3", "linear", "softmax")
+
+
+@dataclasses.dataclass(frozen=True)
+class HlaConfig:
+    """Model + operator configuration (burned into the AOT artifacts)."""
+
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn_mult: float = 2.6667
+    mixer: str = "hla2"
+    chunk: int = 64
+    gamma: float = 0.99
+    lam: float = 0.0
+    norm_mode: str = "abs"
+    eps: float = 1e-6
+    multi_query: bool = False
+    name: str = "tiny"
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self) -> int:
+        # round to a multiple of 32 for tidy matmuls
+        return max(32, int(self.d_model * self.ffn_mult) // 32 * 32)
+
+    @property
+    def kv_heads(self) -> int:
+        """Multi-query sharing (Section 5.2): one K/V head shared."""
+        return 1 if self.multi_query else self.n_heads
+
+    def n_params(self) -> int:
+        d, f = self.d_model, self.d_ffn
+        per_layer = (
+            2 * d
+            + d * self.n_heads * self.head_dim * 2  # wq, wo
+            + d * self.kv_heads * self.head_dim * 2  # wk, wv
+            + 3 * d * f
+        )
+        return self.vocab * d + d + self.n_layers * per_layer
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: HlaConfig):
+    """Scaled-normal init; embedding doubles as the (tied) LM head."""
+    d, dh, hq, hkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.kv_heads
+    f = cfg.d_ffn
+
+    def dense(key, fan_in, shape):
+        return jax.random.normal(key, shape, jnp.float32) * (fan_in**-0.5)
+
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, d), jnp.float32) * 0.02,
+        "norm_f": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + li], 8)
+        params["layers"].append(
+            {
+                "norm1": jnp.ones((d,), jnp.float32),
+                "wq": dense(ks[0], d, (d, hq * dh)),
+                "wk": dense(ks[1], d, (d, hkv * dh)),
+                "wv": dense(ks[2], d, (d, hkv * dh)),
+                "wo": dense(ks[3], hq * dh, (hq * dh, d)),
+                "norm2": jnp.ones((d,), jnp.float32),
+                "w_gate": dense(ks[4], d, (d, f)),
+                "w_up": dense(ks[5], d, (d, f)),
+                "w_down": dense(ks[6], f, (f, d)),
+            }
+        )
+    return params
+
+
+def param_paths(cfg: HlaConfig):
+    """Flattened parameter names + shapes in tree_flatten order (manifest)."""
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+    return [(jax.tree_util.keystr(path), list(leaf.shape)) for path, leaf in leaves]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def _mixer_seq(cfg: HlaConfig, q, k, v):
+    """Single-head sequence mixer [T, dh] -> [T, dh] (training path)."""
+    kw = dict(norm_mode=cfg.norm_mode, eps=cfg.eps)
+    if cfg.mixer == "hla2":
+        return hla2_chunked(q, k, v, chunk=cfg.chunk, gamma=cfg.gamma, lam=cfg.lam, **kw)
+    if cfg.mixer == "ahla":
+        return ahla_chunked(q, k, v, chunk=cfg.chunk, gamma=cfg.gamma, **kw)
+    if cfg.mixer == "hla3":
+        return hla3_chunked(q, k, v, chunk=cfg.chunk, gamma=cfg.gamma, **kw)
+    if cfg.mixer == "linear":
+        return linear_attn_chunked(q, k, v, chunk=cfg.chunk, gamma=cfg.gamma, **kw)
+    if cfg.mixer == "softmax":
+        return ref.softmax_attention(q, k, v, scale=1.0)  # q,k pre-scaled
+    raise ValueError(f"unknown mixer {cfg.mixer!r}")
+
+
+def _project_heads(cfg: HlaConfig, lp, x):
+    """x [T, D] -> per-head q, k, v [H, T, dh], with 1/sqrt(dh) q/k scaling
+    and multi-query K/V broadcast when enabled."""
+    t = x.shape[0]
+    dh = cfg.head_dim
+    scale = dh**-0.5
+    q = (x @ lp["wq"]).reshape(t, cfg.n_heads, dh).transpose(1, 0, 2) * scale
+    k = (x @ lp["wk"]).reshape(t, cfg.kv_heads, dh).transpose(1, 0, 2) * scale
+    v = (x @ lp["wv"]).reshape(t, cfg.kv_heads, dh).transpose(1, 0, 2)
+    if cfg.multi_query and cfg.n_heads > 1:
+        k = jnp.broadcast_to(k, (cfg.n_heads, t, dh))
+        v = jnp.broadcast_to(v, (cfg.n_heads, t, dh))
+    return q, k, v
+
+
+def mixer_apply(cfg: HlaConfig, lp, x):
+    """HLA mixer sublayer on a single sequence x [T, D]."""
+    q, k, v = _project_heads(cfg, lp, x)
+    o = jax.vmap(lambda qh, kh, vh: _mixer_seq(cfg, qh, kh, vh))(q, k, v)
+    o = o.transpose(1, 0, 2).reshape(x.shape[0], cfg.n_heads * cfg.head_dim)
+    return o @ lp["wo"]
+
+
+def ffn_apply(lp, x):
+    return (jax.nn.silu(x @ lp["w_gate"]) * (x @ lp["w_up"])) @ lp["w_down"]
+
+
+def block_apply(cfg: HlaConfig, lp, x):
+    x = x + mixer_apply(cfg, lp, rmsnorm(x, lp["norm1"]))
+    x = x + ffn_apply(lp, rmsnorm(x, lp["norm2"]))
+    return x
+
+
+def forward(cfg: HlaConfig, params, tokens):
+    """tokens [B, T] int32 -> logits [B, T, V] (tied LM head)."""
+
+    def one(seq):
+        x = params["embed"][seq]
+        for lp in params["layers"]:
+            x = block_apply(cfg, lp, x)
+        x = rmsnorm(x, params["norm_f"])
+        return x @ params["embed"].T
+
+    return jax.vmap(one)(tokens)
+
+
+def loss_fn(cfg: HlaConfig, params, tokens):
+    """Next-token cross entropy; tokens [B, T+1]."""
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# training (Adam)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    return (
+        jax.tree_util.tree_map(jnp.zeros_like, params),
+        jax.tree_util.tree_map(jnp.zeros_like, params),
+    )
+
+
+def train_step(cfg: HlaConfig, params, mu, nu, step, tokens, lr):
+    """One Adam step; ``lr`` and ``step`` are traced scalars so the Rust
+    driver owns the schedule.  Returns (params', mu', nu', loss)."""
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+    step = step + 1.0
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, mu, grads)
+    nu = jax.tree_util.tree_map(lambda n, g: b2 * n + (1 - b2) * g * g, nu, grads)
+    bias1 = 1.0 - b1**step
+    bias2 = 1.0 - b2**step
+    params = jax.tree_util.tree_map(
+        lambda p, m, n: p - lr * (m / bias1) / (jnp.sqrt(n / bias2) + eps), params, mu, nu
+    )
+    return params, mu, nu, loss
+
+
+# ---------------------------------------------------------------------------
+# streaming inference: recurrent state, prefill, decode_step
+# ---------------------------------------------------------------------------
+
+STATE_COMPONENTS = {
+    "hla2": ("s", "c", "m", "g", "h"),
+    "ahla": ("p", "m", "e", "n"),
+    "hla3": ("s", "p", "m", "f", "eta"),
+    "linear": ("p", "m"),
+}
+
+
+def state_init(cfg: HlaConfig, batch: int):
+    """Zero recurrent state, stacked [L, B, H, ...] per component.
+
+    Component sets per mixer (dh = head_dim = dv):
+      hla2:   s [dh,dh], c [dh,dv], m [dh], g [dh,dv], h [dh]   (Thm 3.1)
+      ahla:   p [dh,dv], m [dh], e [dh,dv], n [dh]              (Thm 6.1)
+      hla3:   s [dh,dh], p [dh,dv], m [dh], f [dh,dv], eta [dh] (canonical)
+      linear: p [dh,dv], m [dh]
+    """
+    lbh = (cfg.n_layers, batch, cfg.n_heads)
+    dh = cfg.head_dim
+    z = lambda *shape: jnp.zeros(lbh + shape, jnp.float32)
+    mat = {"s": (dh, dh), "c": (dh, dh), "p": (dh, dh), "g": (dh, dh), "e": (dh, dh), "f": (dh, dh)}
+    if cfg.mixer not in STATE_COMPONENTS:
+        raise ValueError(f"mixer {cfg.mixer!r} has no constant-size streaming state")
+    return {c: z(*mat.get(c, (dh,))) for c in STATE_COMPONENTS[cfg.mixer]}
+
+
+def _state_tuple(cfg: HlaConfig, st):
+    if cfg.mixer == "hla2":
+        return ref.Hla2State(st["s"], st["c"], st["m"], st["g"], st["h"])
+    if cfg.mixer == "ahla":
+        return ref.AhlaState(st["p"], st["m"], st["e"], st["n"])
+    if cfg.mixer == "hla3":
+        return ref.Hla3State(st["s"], st["p"], st["m"], st["f"], st["eta"])
+    return (st["p"], st["m"])
+
+
+def _state_dict(cfg: HlaConfig, tup):
+    comps = STATE_COMPONENTS[cfg.mixer]
+    return dict(zip(comps, tuple(tup)))
+
+
+def _mixer_step(cfg: HlaConfig, st, qt, kt, vt):
+    """One streaming token for one head: (out [dv], new state tuple)."""
+    if cfg.mixer == "hla2":
+        new = ref.hla2_step(st, qt, kt, vt, gamma=cfg.gamma)
+        out = ref.hla2_out(new, qt, norm_mode=cfg.norm_mode, eps=cfg.eps, lam=cfg.lam)
+        return out, new
+    if cfg.mixer == "ahla":
+        new = ref.ahla_step(st, qt, kt, vt, gamma=cfg.gamma)
+        num, den = qt @ new.e, qt @ new.n
+    elif cfg.mixer == "hla3":
+        new = ref.hla3_step(st, qt, kt, vt, gamma=cfg.gamma)
+        num, den = qt @ new.f, qt @ new.eta
+    else:  # linear
+        p, m = st
+        p = cfg.gamma * p + jnp.outer(kt, vt)
+        m = cfg.gamma * m + kt
+        new = (p, m)
+        num, den = qt @ p, qt @ m
+    out = ref.apply_normalization(num[None, :], den[None], cfg.norm_mode, cfg.eps)[0]
+    return out, new
+
+
+def decode_step(cfg: HlaConfig, params, state, tokens):
+    """One decode step: tokens [B] int32 -> (logits [B, V], state').
+
+    This is the O(1)-per-token serving path: constant-size state, no
+    KV-cache, per-token cost independent of context length (bench E2/E8).
+    """
+    comps = STATE_COMPONENTS[cfg.mixer]
+    x = params["embed"][tokens]  # [B, D]
+    b = x.shape[0]
+    dh = cfg.head_dim
+    scale = dh**-0.5
+    new_state = {c: [] for c in comps}
+    for li, lp in enumerate(params["layers"]):
+        h = rmsnorm(x, lp["norm1"])
+        q = (h @ lp["wq"]).reshape(b, cfg.n_heads, dh) * scale
+        k = (h @ lp["wk"]).reshape(b, cfg.kv_heads, dh) * scale
+        v = (h @ lp["wv"]).reshape(b, cfg.kv_heads, dh)
+        if cfg.multi_query and cfg.n_heads > 1:
+            k = jnp.broadcast_to(k, (b, cfg.n_heads, dh))
+            v = jnp.broadcast_to(v, (b, cfg.n_heads, dh))
+        st_l = _state_tuple(cfg, {c: state[c][li] for c in comps})
+        out, new = jax.vmap(jax.vmap(lambda s, a, bb, c: _mixer_step(cfg, s, a, bb, c)))(
+            st_l, q, k, v
+        )  # vmapped over B then H
+        o = out.reshape(b, cfg.n_heads * dh) @ lp["wo"]
+        x = x + o
+        x = x + ffn_apply(lp, rmsnorm(x, lp["norm2"]))
+        nd = _state_dict(cfg, new)
+        for c in comps:
+            new_state[c].append(nd[c])
+    x = rmsnorm(x, params["norm_f"])
+    logits = x @ params["embed"].T
+    return logits, {c: jnp.stack(v) for c, v in new_state.items()}
+
+
+def _mixer_prefill(cfg: HlaConfig, carry_tuple, q, k, v):
+    """Chunked prefill for one head; returns (outputs, carry')."""
+    kw = dict(chunk=cfg.chunk, norm_mode=cfg.norm_mode, eps=cfg.eps, return_carry=True)
+    if cfg.mixer == "hla2":
+        return hla2_chunked(
+            q, k, v, gamma=cfg.gamma, lam=cfg.lam, carry=chunk_math.Hla2Carry(*carry_tuple), **kw
+        )
+    if cfg.mixer == "ahla":
+        return ahla_chunked(
+            q, k, v, gamma=cfg.gamma, carry=chunk_math.AhlaCarry(*carry_tuple), **kw
+        )
+    if cfg.mixer == "hla3":
+        return hla3_chunked(
+            q, k, v, gamma=cfg.gamma, carry=chunk_math.Hla3Carry(*carry_tuple), **kw
+        )
+    return linear_attn_chunked(q, k, v, gamma=cfg.gamma, carry=tuple(carry_tuple), **kw)
+
+
+def prefill(cfg: HlaConfig, params, state, tokens):
+    """Chunked prompt ingestion: tokens [B, Tp] -> (logits_last [B, V], state').
+
+    The chunk carry *is* the decode state (same summaries), so prefill and
+    decode compose exactly — asserted by test_model.py.  Tp must be a
+    multiple of cfg.chunk (the coordinator pads prompts).
+    """
+    comps = list(STATE_COMPONENTS[cfg.mixer])
+
+    def one(seq, *st_comps):
+        x = params["embed"][seq]
+        new_layers = {c: [] for c in comps}
+        for li, lp in enumerate(params["layers"]):
+            h = rmsnorm(x, lp["norm1"])
+            q, k, v = _project_heads(cfg, lp, h)
+
+            def pre(qh, kh, vh, *carry):
+                return _mixer_prefill(cfg, carry, qh, kh, vh)
+
+            carr = [st_comps[ci][li] for ci in range(len(comps))]
+            out, new = jax.vmap(pre)(q, k, v, *carr)
+            o = out.transpose(1, 0, 2).reshape(x.shape[0], -1) @ lp["wo"]
+            x = x + o
+            x = x + ffn_apply(lp, rmsnorm(x, lp["norm2"]))
+            nd = _state_dict(cfg, new)
+            for c in comps:
+                new_layers[c].append(nd[c])
+        x = rmsnorm(x, params["norm_f"])
+        logits = x[-1] @ params["embed"].T
+        return (logits, *[jnp.stack(new_layers[c]) for c in comps])
+
+    # state is [L, B, H, ...] -> vmap over the batch axis
+    st_b = [jnp.moveaxis(state[c], 1, 0) for c in comps]
+    res = jax.vmap(one)(tokens, *st_b)
+    logits = res[0]
+    new_state = {c: jnp.moveaxis(res[1 + ci], 0, 1) for ci, c in enumerate(comps)}
+    return logits, new_state

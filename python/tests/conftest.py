@@ -1,0 +1,32 @@
+"""Shared pytest fixtures for the HLA kernel/model suite.
+
+Correctness tests run in float64 (tight tolerances; the paper's identities
+are exact in real arithmetic) — x64 must be enabled before jax initializes.
+"""
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_qkv(rng, n, d, dv, dtype=jnp.float64, scale=None):
+    """Random q, k, v with O(1/sqrt(d)) entries so higher-order sums stay tame."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    q = jnp.asarray(rng.normal(size=(n, d)) * scale, dtype)
+    k = jnp.asarray(rng.normal(size=(n, d)) * scale, dtype)
+    v = jnp.asarray(rng.normal(size=(n, dv)), dtype)
+    return q, k, v

@@ -1,0 +1,104 @@
+"""AHLA (Section 6): Theorem 6.1 identity + chunk/pallas/scan equivalences."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import ahla as ahla_mod
+from compile.kernels import ref, scan
+
+from .conftest import make_qkv
+
+TOL = dict(rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("norm_mode", ["none", "linear"])
+@pytest.mark.parametrize("n,d,dv", [(1, 4, 4), (9, 3, 5), (64, 16, 8)])
+def test_serial_matches_quadratic(rng, n, d, dv, norm_mode):
+    """Theorem 6.1: streaming == ((AA) . L) V with A = L . QK^T."""
+    q, k, v = make_qkv(rng, n, d, dv)
+    want = ref.ahla_quadratic(q, k, v, norm_mode=norm_mode)
+    got = ref.ahla_serial(q, k, v, norm_mode=norm_mode)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("gamma", [1.0, 0.9])
+@pytest.mark.parametrize("chunk", [1, 4, 16, 64])
+def test_chunked_matches_serial(rng, gamma, chunk):
+    q, k, v = make_qkv(rng, 64, 8, 8)
+    want = ref.ahla_serial(q, k, v, gamma=gamma)
+    got = ahla_mod.ahla_chunked(q, k, v, chunk=chunk, gamma=gamma)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("gamma", [1.0, 0.93])
+@pytest.mark.parametrize("norm_mode", ["none", "abs"])
+def test_pallas_matches_serial(rng, gamma, norm_mode):
+    q, k, v = make_qkv(rng, 64, 8, 8)
+    want = ref.ahla_serial(q, k, v, gamma=gamma, norm_mode=norm_mode)
+    got = ahla_mod.ahla_pallas(q, k, v, chunk=16, gamma=gamma, norm_mode=norm_mode)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("gamma", [1.0, 0.85])
+def test_scan_matches_serial(rng, gamma):
+    """Section 6.2 scan equivalence (with the plain-R correction)."""
+    q, k, v = make_qkv(rng, 40, 6, 10)
+    want = ref.ahla_serial(q, k, v, gamma=gamma)
+    got = scan.ahla_scan(q, k, v, gamma=gamma)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_strict_causality(rng):
+    n = 24
+    q, k, v = make_qkv(rng, n, 6, 6)
+    base = np.asarray(ref.ahla_serial(q, k, v))
+    q2, k2, v2 = make_qkv(rng, n, 6, 6)
+    t = 9
+    import jax.numpy as jnp
+
+    qm = jnp.concatenate([q[: t + 1], q2[t + 1 :]])
+    km = jnp.concatenate([k[: t + 1], k2[t + 1 :]])
+    vm = jnp.concatenate([v[: t + 1], v2[t + 1 :]])
+    pert = np.asarray(ref.ahla_serial(qm, km, vm))
+    assert_allclose(pert[: t + 1], base[: t + 1], **TOL)
+
+
+def test_ahla_differs_from_symmetric_hla2(rng):
+    """Relation to AA^T V (Section 6.3): same asymptotics, different operator."""
+    q, k, v = make_qkv(rng, 16, 4, 4)
+    sym = np.asarray(ref.hla2_serial(q, k, v))
+    asym = np.asarray(ref.ahla_serial(q, k, v))
+    assert np.max(np.abs(sym - asym)) > 1e-8
+
+
+def test_prefill_carry_composes(rng):
+    q, k, v = make_qkv(rng, 48, 8, 8)
+    full = ahla_mod.ahla_chunked(q, k, v, chunk=8, gamma=0.97)
+    first, carry = ahla_mod.ahla_chunked(
+        q[:24], k[:24], v[:24], chunk=8, gamma=0.97, return_carry=True
+    )
+    second = ahla_mod.ahla_chunked(q[24:], k[24:], v[24:], chunk=8, gamma=0.97, carry=carry)
+    got = np.concatenate([np.asarray(first), np.asarray(second)])
+    assert_allclose(got, np.asarray(full), **TOL)
+
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_chunks=st.integers(1, 5),
+    chunk=st.sampled_from([1, 2, 5, 8]),
+    d=st.integers(1, 8),
+    dv=st.integers(1, 8),
+    gamma=st.sampled_from([1.0, 0.9, 0.6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_chunked_vs_serial(n_chunks, chunk, d, dv, gamma, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, n_chunks * chunk, d, dv)
+    want = ref.ahla_serial(q, k, v, gamma=gamma)
+    got = ahla_mod.ahla_chunked(q, k, v, chunk=chunk, gamma=gamma)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-8, atol=1e-8)

@@ -1,0 +1,92 @@
+"""AOT pipeline: HLO-text emission, manifest consistency, scan module."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.model import HlaConfig
+
+
+def test_hlo_text_emission_roundtrips():
+    """to_hlo_text produces parseable HLO with the right entry signature."""
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+
+
+def test_manifest_for_micro_config(tmp_path):
+    """Emitting one config produces a consistent manifest + artifact files."""
+    out = str(tmp_path)
+    manifest = {"configs": {}, "artifacts": {}}
+    entry = dict(aot.CONFIGS["micro"])
+    entry["kinds"] = ("init", "decode_step")  # keep the test fast
+    aot.emit_config(out, "micro", entry, manifest)
+    cfg = manifest["configs"]["micro"]
+    # parameter accounting is exact
+    assert cfg["n_params"] == HlaConfig(
+        name="micro", d_model=64, n_layers=2, n_heads=2, chunk=16
+    ).n_params()
+    assert len(cfg["param_paths"]) == cfg["n_param_tensors"]
+    assert len(cfg["state_paths"]) == cfg["n_state_tensors"]
+    # decode artifact arity: params + state + tokens
+    dec = manifest["artifacts"]["decode_step_micro"]
+    assert len(dec["inputs"]) == cfg["n_param_tensors"] + cfg["n_state_tensors"] + 1
+    assert dec["outputs"][0]["shape"] == [cfg["decode_batch"], cfg["vocab"]]
+    for art in manifest["artifacts"].values():
+        assert os.path.exists(os.path.join(out, art["file"]))
+    # manifest is valid JSON end to end
+    json.loads(json.dumps(manifest))
+
+
+def test_param_paths_are_tree_flatten_order():
+    """The manifest's param order must match tree_flatten (Rust relies on it)."""
+    cfg = HlaConfig(name="t", d_model=32, n_layers=2, n_heads=2, chunk=8)
+    paths = model.param_paths(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    leaves = jax.tree_util.tree_leaves(params)
+    assert len(paths) == len(leaves)
+    for (name, shape), leaf in zip(paths, leaves):
+        assert list(leaf.shape) == shape, name
+    # dict order: embed < layers < norm_f
+    assert paths[0][0] == "['embed']"
+    assert paths[-1][0] == "['norm_f']"
+
+
+def test_state_init_shapes_by_mixer():
+    for mixer, n_comp in [("hla2", 5), ("ahla", 4), ("hla3", 5), ("linear", 2)]:
+        cfg = HlaConfig(
+            name="t", d_model=32, n_layers=3, n_heads=2, chunk=8, mixer=mixer, gamma=1.0
+        )
+        st = model.state_init(cfg, batch=4)
+        assert len(st) == n_comp, mixer
+        for comp in st.values():
+            assert comp.shape[:3] == (3, 4, 2), mixer  # [L, B, H, ...]
+
+    with pytest.raises(ValueError):
+        model.state_init(
+            HlaConfig(name="t", d_model=32, n_heads=2, mixer="softmax"), batch=1
+        )
+
+
+def test_registered_configs_are_well_formed():
+    for name, entry in aot.CONFIGS.items():
+        cfg = entry["cfg"]
+        assert cfg.name == name
+        assert cfg.d_model % cfg.n_heads == 0, name
+        bt, t = entry["train_bt"]
+        assert t % cfg.chunk == 0, f"{name}: train_seq must be chunk-aligned"
+        assert entry["prefill_t"] % cfg.chunk == 0, name
+        if cfg.mixer == "hla3":
+            assert cfg.gamma == 1.0, f"{name}: hla3 chunk path requires gamma=1 upstream"

@@ -1,0 +1,254 @@
+"""Second-order HLA: Theorem 3.1 / 4.1 equivalences across all four forms.
+
+Routes under test (all must agree with the serial recurrence, which is the
+canonical spec):
+
+  quadratic (materialized)  <- Theorem 3.1, gamma == 1 only
+  serial recurrence         <- ref.hla2_serial (ground truth)
+  chunked (lax.scan)        <- hla2.hla2_chunked, any chunk width
+  pallas kernel             <- hla2.hla2_pallas (interpret=True)
+  associative scan          <- scan.hla2_scan / _exclusive / two-level
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import ahla as ahla_mod
+from compile.kernels import hla2 as hla2_mod
+from compile.kernels import linear_attn, ref, scan
+
+from .conftest import make_qkv
+
+TOL = dict(rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3.1: masked streaming identity == materialized masked form
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("norm_mode", ["none", "linear", "abs"])
+@pytest.mark.parametrize("n,d,dv", [(1, 4, 4), (7, 3, 5), (64, 16, 8)])
+def test_serial_matches_quadratic_masked(rng, n, d, dv, norm_mode):
+    q, k, v = make_qkv(rng, n, d, dv)
+    want = ref.hla2_quadratic(q, k, v, norm_mode=norm_mode)
+    got = ref.hla2_serial(q, k, v, norm_mode=norm_mode)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("n,d,dv", [(5, 4, 4), (33, 8, 16)])
+def test_serial_matches_quadratic_prefix(rng, n, d, dv):
+    """Unmasked (prefix) form, Eq. (3.1)."""
+    q, k, v = make_qkv(rng, n, d, dv)
+    want = ref.hla2_prefix_quadratic(q, k, v)
+    got = ref.hla2_serial(q, k, v, masked=False)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_ridge_matches_quadratic(rng):
+    """Algorithm 1's S_eff = S + lam*I against the materialized equivalent."""
+    q, k, v = make_qkv(rng, 24, 6, 6)
+    for lam in (0.1, 1.0):
+        want = ref.hla2_quadratic(q, k, v, lam=lam)
+        got = ref.hla2_serial(q, k, v, lam=lam)
+        assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_normalized_denominator_identity(rng):
+    """den_t == row sums of the masked second-order weight matrix."""
+    q, k, v = make_qkv(rng, 16, 4, 4)
+    unnorm = np.asarray(ref.hla2_serial(q, k, v, norm_mode="none"))
+    lin = np.asarray(ref.hla2_serial(q, k, v, norm_mode="linear", eps=0.0))
+    ones = np.ones((16, 4))
+    den = np.asarray(ref.hla2_serial(q, k, np.asarray(ones), norm_mode="none"))[:, 0]
+    assert_allclose(unnorm / den[:, None], lin, rtol=1e-8, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# connection with linear attention (Section 3, "Connection with linear attention")
+# ---------------------------------------------------------------------------
+
+
+def test_reduces_to_first_order_with_identity_metric(rng):
+    """With q == k and a single past step the operators coincide; more
+    generally the first token's output equals (q.k)^2-weighted v_1."""
+    q, k, v = make_qkv(rng, 1, 8, 8)
+    o2 = np.asarray(ref.hla2_serial(q, k, v))[0]
+    w = float(np.asarray(q[0] @ k[0])) ** 2
+    assert_allclose(o2, w * np.asarray(v[0]), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# chunked / pallas / scan vs serial (Theorem 4.1)
+# ---------------------------------------------------------------------------
+
+CASES = [
+    dict(gamma=1.0, lam=0.0, masked=True, norm_mode="none"),
+    dict(gamma=1.0, lam=0.0, masked=True, norm_mode="linear"),
+    dict(gamma=0.9, lam=0.0, masked=True, norm_mode="none"),
+    dict(gamma=0.97, lam=0.05, masked=True, norm_mode="abs"),
+    dict(gamma=1.0, lam=0.0, masked=False, norm_mode="none"),
+    dict(gamma=0.9, lam=0.0, masked=False, norm_mode="none"),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("chunk", [1, 4, 16, 64])
+def test_chunked_matches_serial(rng, case, chunk):
+    n, d, dv = 64, 8, 8
+    q, k, v = make_qkv(rng, n, d, dv)
+    want = ref.hla2_serial(q, k, v, eps=1e-6, **case)
+    got = hla2_mod.hla2_chunked(q, k, v, chunk=chunk, eps=1e-6, **case)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_pallas_matches_serial(rng, case):
+    n, d, dv = 64, 8, 8
+    q, k, v = make_qkv(rng, n, d, dv)
+    want = ref.hla2_serial(q, k, v, eps=1e-6, **case)
+    got = hla2_mod.hla2_pallas(q, k, v, chunk=16, eps=1e-6, **case)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("case", CASES[:4])
+def test_scan_matches_serial(rng, case):
+    n, d, dv = 48, 6, 10
+    q, k, v = make_qkv(rng, n, d, dv)
+    want = ref.hla2_serial(q, k, v, **case)
+    got = scan.hla2_scan(q, k, v, **case)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_exclusive_scan_plus_local_inclusion(rng):
+    """Remark 4.2: exclusive scan + local inclusion == inclusive scan."""
+    q, k, v = make_qkv(rng, 32, 6, 6)
+    for gamma in (1.0, 0.9):
+        a = scan.hla2_scan(q, k, v, gamma=gamma)
+        b = scan.hla2_scan_exclusive(q, k, v, gamma=gamma)
+        assert_allclose(np.asarray(b), np.asarray(a), **TOL)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_two_level_scan_matches_serial(rng, chunk):
+    """Section 4.2's intra-/inter-chunk two-level scan (Figure 1C)."""
+    q, k, v = make_qkv(rng, 32, 6, 6)
+    for gamma in (1.0, 0.93):
+        want = ref.hla2_serial(q, k, v, gamma=gamma)
+        got = scan.hla2_two_level_scan(q, k, v, chunk=chunk, gamma=gamma)
+        assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_prefill_carry_composes(rng):
+    """Splitting a sequence across two chunked calls == one call (streaming)."""
+    q, k, v = make_qkv(rng, 64, 8, 8)
+    full = hla2_mod.hla2_chunked(q, k, v, chunk=8, gamma=0.95)
+    first, carry = hla2_mod.hla2_chunked(
+        q[:32], k[:32], v[:32], chunk=8, gamma=0.95, return_carry=True
+    )
+    second = hla2_mod.hla2_chunked(q[32:], k[32:], v[32:], chunk=8, gamma=0.95, carry=carry)
+    got = np.concatenate([np.asarray(first), np.asarray(second)])
+    assert_allclose(got, np.asarray(full), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# causality and structural properties
+# ---------------------------------------------------------------------------
+
+
+def test_strict_causality(rng):
+    """Perturbing tokens > t must not change output at t (masked form)."""
+    n = 24
+    q, k, v = make_qkv(rng, n, 6, 6)
+    base = np.asarray(ref.hla2_serial(q, k, v))
+    q2, k2, v2 = make_qkv(rng, n, 6, 6)
+    t = 10
+    import jax.numpy as jnp
+
+    qm = jnp.concatenate([q[: t + 1], q2[t + 1 :]])
+    km = jnp.concatenate([k[: t + 1], k2[t + 1 :]])
+    vm = jnp.concatenate([v[: t + 1], v2[t + 1 :]])
+    pert = np.asarray(ref.hla2_serial(qm, km, vm))
+    assert_allclose(pert[: t + 1], base[: t + 1], **TOL)
+
+
+def test_prefix_form_is_not_strictly_causal(rng):
+    """The unmasked Eq. (3.1) prefix form leaks i in (j, t]: changing a
+    *future-of-j but past-of-t* interaction is fine, but the masked and
+    unmasked operators genuinely differ (the G correction is non-zero)."""
+    q, k, v = make_qkv(rng, 16, 4, 4)
+    masked = np.asarray(ref.hla2_serial(q, k, v, masked=True))
+    unmasked = np.asarray(ref.hla2_serial(q, k, v, masked=False))
+    assert np.max(np.abs(masked - unmasked)) > 1e-8
+
+
+def test_decay_shrinks_state(rng):
+    """Decay bounds the state norm (Section 4.3): gamma < 1 keeps ||S||
+    bounded while gamma == 1 grows linearly."""
+    import jax.numpy as jnp
+
+    n, d = 512, 4
+    q, k, v = make_qkv(rng, n, d, 4, scale=1.0)
+    s_decay = jnp.zeros((d, d))
+    s_grow = jnp.zeros((d, d))
+    for t in range(n):
+        s_decay = 0.9 * s_decay + jnp.outer(k[t], k[t])
+        s_grow = s_grow + jnp.outer(k[t], k[t])
+    assert float(jnp.linalg.norm(s_decay)) < 0.2 * float(jnp.linalg.norm(s_grow))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: shapes, chunk widths, decay
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_chunks=st.integers(1, 6),
+    chunk=st.sampled_from([1, 2, 3, 8]),
+    d=st.integers(1, 9),
+    dv=st.integers(1, 9),
+    gamma=st.sampled_from([1.0, 0.9, 0.5]),
+    masked=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_chunked_vs_serial(n_chunks, chunk, d, dv, gamma, masked, seed):
+    rng = np.random.default_rng(seed)
+    n = n_chunks * chunk
+    q, k, v = make_qkv(rng, n, d, dv)
+    want = ref.hla2_serial(q, k, v, gamma=gamma, masked=masked)
+    got = hla2_mod.hla2_chunked(q, k, v, chunk=chunk, gamma=gamma, masked=masked)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-8, atol=1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.integers(1, 8),
+    dv=st.integers(1, 8),
+    gamma=st.sampled_from([1.0, 0.8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_scan_vs_serial(d, dv, gamma, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, 17, d, dv)
+    want = ref.hla2_serial(q, k, v, gamma=gamma)
+    got = scan.hla2_scan(q, k, v, gamma=gamma)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-8, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# f32 smoke (artifact dtype)
+# ---------------------------------------------------------------------------
+
+
+def test_f32_pallas_close_to_serial(rng):
+    import jax.numpy as jnp
+
+    q, k, v = make_qkv(rng, 128, 16, 16, dtype=jnp.float32)
+    want = np.asarray(ref.hla2_serial(q, k, v, gamma=0.99, norm_mode="abs"))
+    got = np.asarray(hla2_mod.hla2_pallas(q, k, v, chunk=32, gamma=0.99, norm_mode="abs"))
+    assert_allclose(got, want, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,154 @@
+"""Third-order HLA (Section 7).
+
+The canonical operator here is the strictly causal masked W-product
+``(((W W^T).L) W).L V`` with its rank-1 streaming form (ref.hla3_serial).
+The paper's printed Eq. (7.5)/Algorithm 3 recurrence is a *different*
+causal operator (DESIGN.md erratum #4); it is kept as
+``ref.hla3_paper_serial`` and its internal consistency (G-form == F-form,
+Theorem 7.1's two descriptions) is tested below.
+"""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import hla3 as hla3_mod
+from compile.kernels import ref
+
+from .conftest import make_qkv
+
+TOL = dict(rtol=1e-8, atol=1e-9)
+
+
+@pytest.mark.parametrize("norm_mode", ["none", "linear"])
+@pytest.mark.parametrize("n,d,dv", [(1, 4, 4), (11, 3, 5), (48, 8, 8)])
+def test_serial_matches_quadratic(rng, n, d, dv, norm_mode):
+    """Canonical streaming == (((W W^T).L) W).L V."""
+    q, k, v = make_qkv(rng, n, d, dv)
+    want = ref.hla3_quadratic(q, k, v, norm_mode=norm_mode)
+    got = ref.hla3_serial(q, k, v, norm_mode=norm_mode)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("gamma", [1.0, 0.9])
+@pytest.mark.parametrize("chunk", [1, 4, 16, 48])
+def test_chunked_matches_serial(rng, gamma, chunk):
+    """Exact chunk composition, any gamma (beyond the paper's Alg. 4)."""
+    q, k, v = make_qkv(rng, 48, 6, 6)
+    want = ref.hla3_serial(q, k, v, gamma=gamma)
+    got = hla3_mod.hla3_chunked(q, k, v, chunk=chunk, gamma=gamma)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("gamma", [1.0, 0.95])
+@pytest.mark.parametrize("norm_mode", ["none", "abs"])
+def test_pallas_matches_serial(rng, gamma, norm_mode):
+    q, k, v = make_qkv(rng, 64, 8, 8)
+    want = ref.hla3_serial(q, k, v, gamma=gamma, norm_mode=norm_mode)
+    got = hla3_mod.hla3_pallas(q, k, v, chunk=16, gamma=gamma, norm_mode=norm_mode)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_paper_gform_matches_fform(rng):
+    """Theorem 7.1 internal consistency: the G^(1..3)/h^(1..3) description
+    and the Eq. (7.5) corrected-state recurrence agree (gamma == 1)."""
+    q, k, v = make_qkv(rng, 24, 4, 4)
+    for norm_mode in ("none", "linear"):
+        gform = ref.hla3_paper_gform_serial(q, k, v, norm_mode=norm_mode)
+        fform = ref.hla3_paper_serial(q, k, v, norm_mode=norm_mode)
+        assert_allclose(np.asarray(gform), np.asarray(fform), **TOL)
+
+
+def test_paper_form_differs_from_masked_product(rng):
+    """Erratum #4: the printed recurrence is not the masked W-product."""
+    q, k, v = make_qkv(rng, 16, 4, 4)
+    paper = np.asarray(ref.hla3_paper_serial(q, k, v))
+    causal = np.asarray(ref.hla3_quadratic(q, k, v))
+    assert np.max(np.abs(paper - causal)) > 1e-8
+    # first token agrees (no history to mis-mask)
+    assert_allclose(paper[0], causal[0], **TOL)
+
+
+def test_paper_form_is_causal(rng):
+    """The paper operator, though not the masked product, is still causal."""
+    n = 18
+    q, k, v = make_qkv(rng, n, 4, 4)
+    base = np.asarray(ref.hla3_paper_serial(q, k, v))
+    q2, k2, v2 = make_qkv(rng, n, 4, 4)
+    t = 7
+    import jax.numpy as jnp
+
+    qm = jnp.concatenate([q[: t + 1], q2[t + 1 :]])
+    km = jnp.concatenate([k[: t + 1], k2[t + 1 :]])
+    vm = jnp.concatenate([v[: t + 1], v2[t + 1 :]])
+    pert = np.asarray(ref.hla3_paper_serial(qm, km, vm))
+    assert_allclose(pert[: t + 1], base[: t + 1], **TOL)
+
+
+def test_decayed_serial_is_finite_and_reduces(rng):
+    """Decay keeps third-order states bounded; gamma -> 1 recovers gamma=1."""
+    q, k, v = make_qkv(rng, 32, 4, 4)
+    base = np.asarray(ref.hla3_serial(q, k, v, gamma=1.0))
+    near = np.asarray(ref.hla3_serial(q, k, v, gamma=1.0 - 1e-12))
+    assert np.all(np.isfinite(near))
+    assert_allclose(near, base, rtol=1e-6, atol=1e-8)
+    decayed = np.asarray(ref.hla3_serial(q, k, v, gamma=0.5))
+    assert np.all(np.isfinite(decayed))
+    assert np.max(np.abs(decayed)) < np.max(np.abs(base))
+
+
+def test_strict_causality(rng):
+    n = 20
+    q, k, v = make_qkv(rng, n, 5, 5)
+    base = np.asarray(ref.hla3_serial(q, k, v))
+    q2, k2, v2 = make_qkv(rng, n, 5, 5)
+    t = 8
+    import jax.numpy as jnp
+
+    qm = jnp.concatenate([q[: t + 1], q2[t + 1 :]])
+    km = jnp.concatenate([k[: t + 1], k2[t + 1 :]])
+    vm = jnp.concatenate([v[: t + 1], v2[t + 1 :]])
+    pert = np.asarray(ref.hla3_serial(qm, km, vm))
+    assert_allclose(pert[: t + 1], base[: t + 1], **TOL)
+
+
+def test_prefill_carry_composes(rng):
+    q, k, v = make_qkv(rng, 32, 5, 5)
+    full = hla3_mod.hla3_chunked(q, k, v, chunk=8, gamma=0.97)
+    first, carry = hla3_mod.hla3_chunked(
+        q[:16], k[:16], v[:16], chunk=8, gamma=0.97, return_carry=True
+    )
+    second = hla3_mod.hla3_chunked(q[16:], k[16:], v[16:], chunk=8, gamma=0.97, carry=carry)
+    got = np.concatenate([np.asarray(first), np.asarray(second)])
+    assert_allclose(got, np.asarray(full), **TOL)
+
+
+def test_third_order_grows_faster_than_second(rng):
+    """Unnormalized magnitudes: |o3| ~ t^3 vs |o2| ~ t^2 (complexity table)."""
+    q, k, v = make_qkv(rng, 256, 4, 4, scale=1.0)
+    o2 = np.abs(np.asarray(ref.hla2_serial(q, k, v))).mean(axis=1)
+    o3 = np.abs(np.asarray(ref.hla3_serial(q, k, v))).mean(axis=1)
+    g2 = o2[-64:].mean() / max(o2[:64].mean(), 1e-30)
+    g3 = o3[-64:].mean() / max(o3[:64].mean(), 1e-30)
+    assert g3 > g2
+
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_chunks=st.integers(1, 4),
+    chunk=st.sampled_from([1, 3, 8]),
+    d=st.integers(1, 7),
+    dv=st.integers(1, 7),
+    gamma=st.sampled_from([1.0, 0.9]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_chunked_vs_serial(n_chunks, chunk, d, dv, gamma, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, n_chunks * chunk, d, dv)
+    want = ref.hla3_serial(q, k, v, gamma=gamma)
+    got = hla3_mod.hla3_chunked(q, k, v, chunk=chunk, gamma=gamma)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-7, atol=1e-8)

@@ -1,0 +1,55 @@
+"""First-order linear-attention baseline: ref / chunked / pallas agreement."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import linear_attn, ref
+
+from .conftest import make_qkv
+
+TOL = dict(rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("norm_mode", ["none", "linear"])
+def test_serial_matches_quadratic(rng, norm_mode):
+    q, k, v = make_qkv(rng, 32, 8, 8)
+    want = ref.linear_attention_quadratic(q, k, v, norm_mode=norm_mode)
+    got = ref.linear_attention_serial(q, k, v, norm_mode=norm_mode)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("gamma", [1.0, 0.9])
+@pytest.mark.parametrize("chunk", [1, 8, 32])
+def test_chunked_matches_serial(rng, gamma, chunk):
+    q, k, v = make_qkv(rng, 32, 8, 8)
+    want = ref.linear_attention_serial(q, k, v, gamma=gamma)
+    got = linear_attn.linear_attn_chunked(q, k, v, chunk=chunk, gamma=gamma)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("gamma", [1.0, 0.95])
+def test_pallas_matches_serial(rng, gamma):
+    q, k, v = make_qkv(rng, 64, 8, 8)
+    want = ref.linear_attention_serial(q, k, v, gamma=gamma)
+    got = linear_attn.linear_attn_pallas(q, k, v, chunk=16, gamma=gamma)
+    assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_softmax_attention_rows_sum_to_one(rng):
+    """Baseline sanity: softmax weights are a proper causal distribution."""
+    import jax.numpy as jnp
+
+    q, k, v = make_qkv(rng, 16, 4, 4)
+    ones = jnp.ones((16, 4))
+    out = ref.softmax_attention(q, k, ones)
+    assert_allclose(np.asarray(out), np.ones((16, 4)), rtol=1e-9, atol=1e-9)
+
+
+def test_hla2_strictly_richer_than_first_order(rng):
+    """Section 3: HLA's data-adaptive metric S != I differs from first-order
+    linear attention even with tied q == k."""
+    q, _, v = make_qkv(rng, 16, 4, 4)
+    lin = np.asarray(ref.linear_attention_serial(q, q, v, norm_mode="linear"))
+    hla = np.asarray(ref.hla2_serial(q, q, v, norm_mode="linear"))
+    assert np.max(np.abs(lin - hla)) > 1e-8

@@ -1,0 +1,66 @@
+//! E12 — §5.2 packed symmetric S layout: half the storage/bandwidth for
+//! the key moment without changing the algebra.  Measures rank-1 update
+//! and mat-vec cost, packed vs dense, across d.
+
+use hla::bench::{banner, bench_budget, black_box};
+use hla::hla::packed::PackedSym;
+use hla::metrics::Table;
+use hla::tensor::Mat;
+use hla::util::human_bytes;
+use hla::util::rng::Rng;
+
+fn main() {
+    banner("E12", "packed symmetric S vs dense (update + matvec cost, storage)");
+    let mut rng = Rng::new(12);
+    let mut table = Table::new(&[
+        "d", "dense bytes", "packed bytes", "dense upd us", "packed upd us", "dense mv us", "packed mv us",
+    ]);
+    for d in [32usize, 64, 128, 256] {
+        let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut dense = Mat::<f32>::zeros(d, d);
+        let mut packed = PackedSym::<f32>::zeros(d);
+        let t_dup = bench_budget(0.2, || {
+            dense.add_outer(1.0, &k, &k);
+            dense.scale(0.999);
+        });
+        let t_pup = bench_budget(0.2, || {
+            packed.add_outer_self(&k);
+            packed.scale(0.999);
+        });
+        let t_dmv = bench_budget(0.2, || {
+            black_box(dense.matvec(&x));
+        });
+        let t_pmv = bench_budget(0.2, || {
+            black_box(packed.matvec(&x));
+        });
+        // numerics agree (checked on fresh states with matched update counts
+        // — the benched states above run different iteration counts)
+        let mut d2 = Mat::<f32>::zeros(d, d);
+        let mut p2 = PackedSym::<f32>::zeros(d);
+        for _ in 0..10 {
+            d2.add_outer(1.0, &k, &k);
+            p2.add_outer_self(&k);
+        }
+        let diff: f32 = p2
+            .to_dense()
+            .data
+            .iter()
+            .zip(&d2.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff < 1e-2, "packed/dense diverged: {diff}");
+        table.row(&[
+            d.to_string(),
+            human_bytes(dense.data.len() * 4),
+            human_bytes(packed.nbytes()),
+            format!("{:.2}", t_dup.mean_us()),
+            format!("{:.2}", t_pup.mean_us()),
+            format!("{:.2}", t_dmv.mean_us()),
+            format!("{:.2}", t_pmv.mean_us()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("expected shape: packed halves storage; update cost ~halves (triangle only);");
+    println!("matvec roughly parity (same flops, less locality).");
+}

@@ -1,0 +1,79 @@
+//! E1 — Figure 1 / Theorems 3.1 & 4.1: the three equivalent views
+//! (recurrent, parallel/materialized, chunk-parallel scan) produce the same
+//! activations; costs scale as O(n) vs O(n²) vs O(n) with parallel span.
+
+use hla::bench::{banner, bench_budget, black_box};
+use hla::hla::chunk::hla2_chunked;
+use hla::hla::monoid2::hla2_blelloch;
+use hla::hla::state2::{hla2_quadratic, hla2_serial};
+use hla::hla::HlaOptions;
+use hla::metrics::Table;
+use hla::tensor::Mat;
+use hla::util::rng::Rng;
+
+fn random(rng: &mut Rng, n: usize, d: usize) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+    let s = 1.0 / (d as f64).sqrt();
+    let mk = |rng: &mut Rng, sc: f64| {
+        let mut m = Mat::zeros(n, d);
+        for x in &mut m.data {
+            *x = rng.normal() * sc;
+        }
+        m
+    };
+    (mk(rng, s), mk(rng, s), mk(rng, 1.0))
+}
+
+fn main() {
+    banner("E1", "three equivalent views of second-order HLA (Fig. 1, Thm 3.1/4.1)");
+    let mut rng = Rng::new(1);
+    let (n, d) = (512, 32);
+    let (q, k, v) = random(&mut rng, n, d);
+
+    // agreement across every form, gamma in {1, .95}
+    for gamma in [1.0, 0.95] {
+        let opts = HlaOptions::<f64>::default().with_gamma(gamma);
+        let serial = hla2_serial(&q, &k, &v, &opts);
+        let scan = hla2_blelloch(&q, &k, &v, &opts);
+        let chunk8 = hla2_chunked(&q, &k, &v, &opts, 8, 4);
+        let chunk64 = hla2_chunked(&q, &k, &v, &opts, 64, 4);
+        println!(
+            "gamma={gamma}: |serial-scan|={:.2e} |serial-chunk8|={:.2e} |serial-chunk64|={:.2e}",
+            serial.max_abs_diff(&scan),
+            serial.max_abs_diff(&chunk8),
+            serial.max_abs_diff(&chunk64),
+        );
+        if gamma == 1.0 {
+            let quad = hla2_quadratic(&q, &k, &v, &opts);
+            println!("gamma=1 (+materialized): |serial-quadratic|={:.2e}", serial.max_abs_diff(&quad));
+        }
+    }
+
+    // cost table per form across n
+    let opts = HlaOptions::<f64>::default().with_gamma(0.95);
+    let mut table = Table::new(&["n", "recurrent ms", "materialized ms", "blelloch ms", "chunked(w=64,4t) ms"]);
+    for n in [128usize, 256, 512, 1024] {
+        let (q, k, v) = random(&mut rng, n, d);
+        let opts1 = HlaOptions::<f64>::default();
+        let t_ser = bench_budget(0.3, || {
+            black_box(hla2_serial(&q, &k, &v, &opts));
+        });
+        let t_quad = bench_budget(0.3, || {
+            black_box(hla2_quadratic(&q, &k, &v, &opts1));
+        });
+        let t_scan = bench_budget(0.3, || {
+            black_box(hla2_blelloch(&q, &k, &v, &opts));
+        });
+        let t_chunk = bench_budget(0.3, || {
+            black_box(hla2_chunked(&q, &k, &v, &opts, 64, 4));
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}", t_ser.mean_ms()),
+            format!("{:.2}", t_quad.mean_ms()),
+            format!("{:.2}", t_scan.mean_ms()),
+            format!("{:.2}", t_chunk.mean_ms()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("expected shape: materialized grows ~n^2; recurrent/chunked grow ~n.");
+}

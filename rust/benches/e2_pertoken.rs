@@ -1,0 +1,53 @@
+//! E2 — §5 complexity claim: HLA's per-token cost is O(d² + d·d_v),
+//! *independent of context length*; softmax attention's per-token cost
+//! grows O(t·d) through its KV-cache.  Reports the crossover.
+
+use hla::attention::KvCache;
+use hla::bench::{banner, bench, black_box};
+use hla::hla::state2::Hla2State;
+use hla::hla::HlaOptions;
+use hla::metrics::Table;
+use hla::util::rng::Rng;
+
+fn main() {
+    banner("E2", "per-token cost vs context length (HLA O(1) vs softmax O(t))");
+    let d = 64;
+    let mut rng = Rng::new(2);
+    let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.125).collect();
+    let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.125).collect();
+    let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let opts = HlaOptions::<f32>::default().with_gamma(0.99);
+
+    let mut table = Table::new(&["context t", "hla2 us/tok", "softmax us/tok", "ratio", "hla2 state", "kv cache"]);
+    for t in [256usize, 1024, 4096, 16384, 65536] {
+        // warm an HLA state and a KV cache to context length t
+        let mut hla = Hla2State::<f32>::new(d, d);
+        let mut kv = KvCache::new();
+        for _ in 0..t {
+            hla.step(&q, &k, &v, opts.gamma);
+            // KvCache::step is O(t) itself; build it by direct pushes
+            kv.keys.push(k.clone());
+            kv.values.push(v.clone());
+        }
+        let s_hla = bench(3, 20, || {
+            hla.step(&q, &k, &v, opts.gamma);
+            black_box(hla.output(&q, &opts));
+        });
+        let s_kv = bench(3, if t > 16384 { 5 } else { 20 }, || {
+            black_box(kv.step(&q, &k, &v, 0.125));
+            // keep the cache from growing during timing
+            kv.keys.pop();
+            kv.values.pop();
+        });
+        table.row(&[
+            t.to_string(),
+            format!("{:.1}", s_hla.mean_us()),
+            format!("{:.1}", s_kv.mean_us()),
+            format!("{:.2}x", s_kv.mean_s / s_hla.mean_s),
+            hla::util::human_bytes(hla.nbytes()),
+            hla::util::human_bytes(kv.nbytes()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("expected shape: hla2 column flat; softmax column grows ~linearly in t.");
+}

@@ -1,0 +1,94 @@
+//! E3 — §4.2: full-sequence forward throughput (tokens/sec) of every
+//! operator vs sequence length, against first-order linear attention and
+//! quadratic softmax.  Includes the Pallas-lowered HLO kernels when
+//! artifacts are present (L1 path through the Rust runtime).
+
+use hla::attention::{linear_attention_serial, softmax_attention};
+use hla::bench::{banner, bench_budget, black_box};
+use hla::hla::ahla::ahla_serial;
+use hla::hla::chunk::hla2_chunked;
+use hla::hla::state3::hla3_serial;
+use hla::hla::HlaOptions;
+use hla::metrics::Table;
+use hla::tensor::Mat;
+use hla::util::rng::Rng;
+
+fn random(rng: &mut Rng, n: usize, d: usize) -> (Mat<f32>, Mat<f32>, Mat<f32>) {
+    let s = 1.0 / (d as f32).sqrt();
+    let mk = |rng: &mut Rng, sc: f32| {
+        let mut m = Mat::zeros(n, d);
+        for x in &mut m.data {
+            *x = rng.normal() as f32 * sc;
+        }
+        m
+    };
+    (mk(rng, s), mk(rng, s), mk(rng, 1.0))
+}
+
+fn main() {
+    banner("E3", "sequence-mixer throughput vs n (ktok/s, d=64, single head)");
+    let d = 64;
+    let mut rng = Rng::new(3);
+    let opts = HlaOptions::<f32>::default().with_gamma(0.99);
+    let _opts1 = HlaOptions::<f32>::default();
+
+    let mut table = Table::new(&[
+        "n", "linear", "hla2(serial)", "hla2(chunk64,4t)", "ahla", "hla3", "softmax",
+    ]);
+    for n in [1024usize, 4096, 16384, 32768] {
+        let (q, k, v) = random(&mut rng, n, d);
+        let ktoks = |s: hla::bench::Stats| format!("{:.0}", s.throughput(n as f64) / 1e3);
+        let lin = bench_budget(0.4, || {
+            black_box(linear_attention_serial(&q, &k, &v, &opts));
+        });
+        let h2 = bench_budget(0.4, || {
+            black_box(hla::hla::state2::hla2_serial(&q, &k, &v, &opts));
+        });
+        let h2c = bench_budget(0.4, || {
+            black_box(hla2_chunked(&q, &k, &v, &opts, 64, 4));
+        });
+        let ah = bench_budget(0.4, || {
+            black_box(ahla_serial(&q, &k, &v, &opts));
+        });
+        let h3 = bench_budget(0.4, || {
+            black_box(hla3_serial(&q, &k, &v, &opts));
+        });
+        let sm = if n <= 16384 {
+            let s = bench_budget(0.4, || {
+                black_box(softmax_attention(&q, &k, &v, 0.125));
+            });
+            ktoks(s)
+        } else {
+            "-".into()
+        };
+        table.row(&[n.to_string(), ktoks(lin), ktoks(h2), ktoks(h2c), ktoks(ah), ktoks(h3), sm]);
+    }
+    print!("{}", table.render());
+    println!("expected shape: linear/hla columns flat in n; softmax decays ~1/n.");
+
+    // L1 kernels through the runtime (HLO lowered from Pallas)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use hla::runtime::{Engine, HostValue};
+        use hla::tensor::Tensor;
+        let engine = Engine::open("artifacts").unwrap();
+        let mut table = Table::new(&["kernel artifact", "n", "ms/call", "ktok/s"]);
+        for name in
+            ["kernel_linear_n1024_d64", "kernel_hla2_n1024_d64", "kernel_ahla_n1024_d64", "kernel_hla3_n1024_d64", "kernel_hla2_n4096_d64"]
+        {
+            let n = engine.manifest.artifacts[name].inputs[0].shape[0];
+            let (q, k, v) = random(&mut rng, n, d);
+            let to_t = |m: &Mat<f32>| HostValue::F32(Tensor::from_vec(&[n, d], m.data.clone()));
+            let (qt, kt, vt) = (to_t(&q), to_t(&k), to_t(&v));
+            let s = bench_budget(0.5, || {
+                black_box(engine.run_host(name, &[qt.clone(), kt.clone(), vt.clone()]).unwrap());
+            });
+            table.row(&[
+                name.to_string(),
+                n.to_string(),
+                format!("{:.2}", s.mean_ms()),
+                format!("{:.0}", s.throughput(n as f64) / 1e3),
+            ]);
+        }
+        print!("{}", table.render());
+    }
+}

@@ -1,0 +1,41 @@
+//! E4 — §4/§5 chunk-width tradeoff: throughput of the two-level chunked
+//! scan vs w (span O(log w) intra-chunk, O(n/w) serial inter-chunk carry at
+//! summary granularity; per-token state materialization costs grow with the
+//! number of scan elements).
+
+use hla::bench::{banner, bench_budget, black_box};
+use hla::hla::chunk::hla2_chunked;
+use hla::hla::HlaOptions;
+use hla::metrics::Table;
+use hla::tensor::Mat;
+use hla::util::rng::Rng;
+
+fn main() {
+    banner("E4", "chunk width sweep, n=8192 d=32 (tokens/sec)");
+    let (n, d) = (8192usize, 32usize);
+    let mut rng = Rng::new(4);
+    let s = 1.0 / (d as f32).sqrt();
+    let mk = |rng: &mut Rng, sc: f32| {
+        let mut m = Mat::<f32>::zeros(n, d);
+        for x in &mut m.data {
+            *x = rng.normal() as f32 * sc;
+        }
+        m
+    };
+    let (q, k, v) = (mk(&mut rng, s), mk(&mut rng, s), mk(&mut rng, 1.0));
+    let opts = HlaOptions::<f32>::default().with_gamma(0.99);
+
+    let mut table = Table::new(&["w", "1 thread ktok/s", "4 threads ktok/s", "8 threads ktok/s"]);
+    for w in [8usize, 16, 32, 64, 128, 256, 512, 1024] {
+        let mut cells = vec![w.to_string()];
+        for threads in [1usize, 4, 8] {
+            let st = bench_budget(0.4, || {
+                black_box(hla2_chunked(&q, &k, &v, &opts, w, threads));
+            });
+            cells.push(format!("{:.0}", st.throughput(n as f64) / 1e3));
+        }
+        table.row(&cells);
+    }
+    print!("{}", table.render());
+    println!("expected shape: interior optimum in w; threads help until chunk count < threads.");
+}

@@ -1,0 +1,63 @@
+//! E5 — §4.3: exponential decay bounds state growth (spectral control,
+//! recency bias) while preserving the scan algebra.  Reports state norms
+//! and output magnitudes over a long sequence for a gamma sweep, plus the
+//! scan==serial check under every gamma.
+
+use hla::bench::banner;
+use hla::hla::monoid2::hla2_blelloch;
+use hla::hla::state2::{hla2_serial, Hla2State};
+use hla::hla::HlaOptions;
+use hla::metrics::Table;
+use hla::tensor::Mat;
+use hla::util::rng::Rng;
+
+fn main() {
+    banner("E5", "decay ablation: state norms, output scale, recency (n=16384, d=32)");
+    let (n, d) = (16384usize, 32usize);
+    let mut rng = Rng::new(5);
+    let s = 1.0 / (d as f64).sqrt();
+    let mk = |rng: &mut Rng, sc: f64| {
+        let mut m = Mat::<f64>::zeros(n, d);
+        for x in &mut m.data {
+            *x = rng.normal() * sc;
+        }
+        m
+    };
+    let (q, k, v) = (mk(&mut rng, s), mk(&mut rng, s), mk(&mut rng, 1.0));
+
+    let mut table =
+        Table::new(&["gamma", "||S||_F", "||G||_F", "|out| mean@end", "eff. window", "scan==serial"]);
+    for gamma in [1.0, 0.999, 0.99, 0.9, 0.5] {
+        let opts = HlaOptions::<f64>::default().with_gamma(gamma);
+        let mut st = Hla2State::<f64>::new(d, d);
+        for t in 0..n {
+            st.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+        }
+        let out = hla2_serial(&q, &k, &v, &opts);
+        let tail_mag: f64 = (n - 64..n)
+            .map(|t| out.row(t).iter().map(|x| x.abs()).sum::<f64>() / d as f64)
+            .sum::<f64>()
+            / 64.0;
+        // effective context window 1/(1-gamma) (geometric mass)
+        let window = if gamma >= 1.0 { f64::INFINITY } else { 1.0 / (1.0 - gamma) };
+        // scan equivalence on a short prefix (Blelloch is O(n) memory here)
+        let m = 256;
+        let slice = |x: &Mat<f64>| {
+            Mat::from_vec(m, x.cols, x.data[..m * x.cols].to_vec())
+        };
+        let (qs, ks, vs) = (slice(&q), slice(&k), slice(&v));
+        let diff = hla2_serial(&qs, &ks, &vs, &opts)
+            .max_abs_diff(&hla2_blelloch(&qs, &ks, &vs, &opts));
+        table.row(&[
+            format!("{gamma}"),
+            format!("{:.3e}", st.s.frobenius_norm()),
+            format!("{:.3e}", st.g.frobenius_norm()),
+            format!("{:.3e}", tail_mag),
+            if window.is_finite() { format!("{window:.0}") } else { "inf".into() },
+            format!("{diff:.1e}"),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("expected shape: norms grow ~n at gamma=1, saturate at ~1/(1-gamma) otherwise;");
+    println!("scan==serial holds for every gamma (Theorem 4.1 with the S-tilde correction).");
+}

@@ -1,0 +1,67 @@
+//! E6 — §5 memory table: per-sequence serving memory vs context length.
+//! HLA state is constant; a softmax KV-cache grows linearly.  Uses both
+//! the analytic formulas and live measured structures.
+
+use hla::attention::KvCache;
+use hla::bench::banner;
+use hla::hla::ahla::AhlaState;
+use hla::hla::state2::Hla2State;
+use hla::hla::state3::Hla3State;
+use hla::metrics::Table;
+use hla::util::human_bytes;
+
+fn main() {
+    banner("E6", "per-sequence serving memory vs context length (d=64, dv=64, per head)");
+    let d = 64;
+    let hla2 = Hla2State::<f32>::new(d, d);
+    let ahla = AhlaState::<f32>::new(d, d);
+    let hla3 = Hla3State::<f32>::new(d, d);
+    let lin = hla::attention::LinearAttnState::<f32>::new(d, d);
+
+    let mut table = Table::new(&["context n", "linear", "ahla", "hla2", "hla3", "softmax KV (measured)"]);
+    for n in [1024usize, 4096, 16384, 65536, 262144, 1048576] {
+        // measured KV cache at n (capped for memory sanity above 64k)
+        let kv_bytes = if n <= 65536 {
+            let mut kv = KvCache::new();
+            let k = vec![0f32; d];
+            for _ in 0..n {
+                kv.keys.push(k.clone());
+                kv.values.push(k.clone());
+            }
+            kv.nbytes()
+        } else {
+            2 * n * d * 4 // analytic beyond 64k
+        };
+        table.row(&[
+            n.to_string(),
+            human_bytes(lin.nbytes()),
+            human_bytes(ahla.nbytes()),
+            human_bytes(hla2.nbytes()),
+            human_bytes(hla3.nbytes()),
+            human_bytes(kv_bytes),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // whole-model view from the manifest, if built
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = hla::runtime::Engine::open("artifacts").unwrap();
+        let mut table =
+            Table::new(&["config", "state/seq (const)", "KV/seq @4k", "KV/seq @64k", "break-even n"]);
+        for (name, mc) in &engine.manifest.configs {
+            let st = mc.state_nbytes_per_seq();
+            // n where KV cache overtakes the HLA state
+            let per_tok = 2 * mc.n_layers * mc.kv_heads * mc.head_dim * 4;
+            let breakeven = st / per_tok.max(1);
+            table.row(&[
+                name.clone(),
+                human_bytes(st),
+                human_bytes(mc.kv_cache_nbytes(4096)),
+                human_bytes(mc.kv_cache_nbytes(65536)),
+                breakeven.to_string(),
+            ]);
+        }
+        print!("{}", table.render());
+        println!("expected shape: HLA columns constant in n; KV grows linearly; break-even at n ~ d(tokens).");
+    }
+}

@@ -1,0 +1,49 @@
+//! E7 — §5.2 multi-query sharing: with K/V shared across heads the key
+//! moment S is stored once per layer, O(d² + h·d·d_v) total instead of
+//! O(h·d² + h·d·d_v).  Table over head count + live artifact check.
+
+use hla::bench::banner;
+use hla::metrics::Table;
+use hla::util::human_bytes;
+
+fn main() {
+    banner("E7", "multi-query state sharing (Section 5.2), head_dim=64, dv=64");
+    let dh = 64usize;
+    let per_s = dh * dh * 4; // S per head
+    let per_cgh = (2 * dh * dh + 2 * dh) * 4; // C, G (d x dv) + m, h
+
+    let mut table = Table::new(&[
+        "heads h", "per-head S: O(h d^2+h d dv)", "shared S: O(d^2+h d dv)", "saving",
+    ]);
+    for h in [1usize, 2, 4, 8, 16, 32] {
+        let per_head = h * per_s + h * per_cgh;
+        let shared = per_s + h * per_cgh;
+        table.row(&[
+            h.to_string(),
+            human_bytes(per_head),
+            human_bytes(shared),
+            format!("{:.1}%", 100.0 * (1.0 - shared as f64 / per_head as f64)),
+        ]);
+    }
+    print!("{}", table.render());
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = hla::runtime::Engine::open("artifacts").unwrap();
+        let mut table = Table::new(&["config", "kv_heads", "K/V proj params", "state/seq"]);
+        for name in ["micro", "micro-mq"] {
+            if let Ok(mc) = engine.model_cfg(name) {
+                let kv_params = 2 * mc.d_model * mc.kv_heads * mc.head_dim;
+                table.row(&[
+                    name.to_string(),
+                    mc.kv_heads.to_string(),
+                    kv_params.to_string(),
+                    human_bytes(mc.state_nbytes_per_seq()),
+                ]);
+            }
+        }
+        print!("{}", table.render());
+        println!("note: the serving-state S sharing applies when K is shared; the micro-mq");
+        println!("artifact shares K/V projections (params column) while the exported state");
+        println!("layout keeps per-head tuples for layout uniformity (DESIGN.md §5.2 note).");
+    }
+}

@@ -1,0 +1,129 @@
+//! E9 — §7.3 third-order scan-state cost: the paper's segment maps cost
+//! O(d³·d_v) dense (or O(|X|·d) factored, growing with segment length);
+//! the canonical operator's monoid needs only O(d²) fixed statistics.
+//! Measures composition + apply costs and storage across d and |X|.
+
+use hla::bench::{banner, bench_budget, black_box};
+use hla::hla::monoid3::{hla3_canon_scan, hla3_paper_scan, Seg3Canon, Seg3Paper, SegMap};
+use hla::hla::scan::Monoid;
+use hla::hla::state3::hla3_serial;
+use hla::hla::HlaOptions;
+use hla::metrics::Table;
+use hla::tensor::Mat;
+use hla::util::human_bytes;
+use hla::util::rng::Rng;
+
+fn random(rng: &mut Rng, n: usize, d: usize) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+    let s = 1.0 / (d as f64).sqrt();
+    let mk = |rng: &mut Rng, sc: f64| {
+        let mut m = Mat::zeros(n, d);
+        for x in &mut m.data {
+            *x = rng.normal() * sc;
+        }
+        m
+    };
+    (mk(rng, s), mk(rng, s), mk(rng, 1.0))
+}
+
+fn build_segment(rng: &mut Rng, len: usize, d: usize, dense: bool) -> Seg3Paper<f64> {
+    let (q, k, v) = random(rng, len, d);
+    (0..len)
+        .map(|t| Seg3Paper::token(q.row(t), k.row(t), v.row(t), dense))
+        .reduce(|a, b| a.combine(&b))
+        .unwrap()
+}
+
+fn main() {
+    banner("E9", "third-order segment-map cost (paper ⊗₃ dense vs factored vs canonical)");
+
+    // storage per segment summary
+    let mut table = Table::new(&["d", "|X|", "dense map bytes", "factored map bytes", "canonical seg bytes"]);
+    let mut rng = Rng::new(9);
+    for d in [8usize, 16, 32] {
+        for len in [16usize, 64, 256] {
+            let dense = SegMap::<f64>::empty_dense(d, d);
+            let (q, k, v) = random(&mut rng, len, d);
+            let mut fact = SegMap::<f64>::empty_factored(d, d);
+            for t in 0..len {
+                fact.add(&SegMap::token(k.row(t), v.row(t), false));
+            }
+            let canon = {
+                let mut seg = Seg3Canon::token(q.row(0), k.row(0), v.row(0));
+                for t in 1..len {
+                    seg = seg.combine(&Seg3Canon::token(q.row(t), k.row(t), v.row(t)));
+                }
+                seg
+            };
+            table.row(&[
+                d.to_string(),
+                len.to_string(),
+                human_bytes(dense.nbytes()),
+                human_bytes(fact.nbytes()),
+                human_bytes(canon.nbytes()),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    println!("expected shape: dense ~ d^3 dv (|X|-independent); factored ~ |X| d; canonical ~ d^2.");
+
+    // composition cost
+    let mut table = Table::new(&["d", "paper-dense comb us", "paper-fact comb us (|X|=64)", "canon comb us"]);
+    for d in [8usize, 12, 16] {
+        let a_dense = build_segment(&mut rng, 8, d, true);
+        let b_dense = build_segment(&mut rng, 8, d, true);
+        let a_fact = build_segment(&mut rng, 64, d, false);
+        let b_fact = build_segment(&mut rng, 64, d, false);
+        let (q, k, v) = random(&mut rng, 64, d);
+        let canon: Vec<Seg3Canon<f64>> =
+            (0..64).map(|t| Seg3Canon::token(q.row(t), k.row(t), v.row(t))).collect();
+        let a_c = canon[..32].iter().cloned().reduce(|a, b| a.combine(&b)).unwrap();
+        let b_c = canon[32..].iter().cloned().reduce(|a, b| a.combine(&b)).unwrap();
+        let t_dense = bench_budget(0.3, || {
+            black_box(a_dense.combine(&b_dense));
+        });
+        let t_fact = bench_budget(0.3, || {
+            black_box(a_fact.combine(&b_fact));
+        });
+        let t_canon = bench_budget(0.3, || {
+            black_box(a_c.combine(&b_c));
+        });
+        table.row(&[
+            d.to_string(),
+            format!("{:.1}", t_dense.mean_us()),
+            format!("{:.1}", t_fact.mean_us()),
+            format!("{:.1}", t_canon.mean_us()),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // end-to-end: full-sequence scans agree with serial + their cost
+    let (n, d) = (128usize, 8usize);
+    let (q, k, v) = random(&mut rng, n, d);
+    let opts = HlaOptions::<f64>::default();
+    let canon_serial = hla3_serial(&q, &k, &v, &opts);
+    let canon_scan = hla3_canon_scan(&q, &k, &v, &opts);
+    println!(
+        "canonical scan==serial (n={n}, d={d}): max diff {:.2e}",
+        canon_serial.max_abs_diff(&canon_scan)
+    );
+    let paper_serial = hla::hla::state3::hla3_paper_serial(&q, &k, &v, &opts);
+    for dense in [false, true] {
+        let scan = hla3_paper_scan(&q, &k, &v, &opts, dense);
+        println!(
+            "paper Alg-4 scan==Alg-3 serial ({}): max diff {:.2e}",
+            if dense { "dense maps" } else { "factored maps" },
+            paper_serial.max_abs_diff(&scan)
+        );
+    }
+    let t_canon = bench_budget(0.5, || {
+        black_box(hla3_canon_scan(&q, &k, &v, &opts));
+    });
+    let t_paper = bench_budget(0.5, || {
+        black_box(hla3_paper_scan(&q, &k, &v, &opts, false));
+    });
+    println!(
+        "full scan cost (n={n}, d={d}): canonical {:.1} ms vs paper-factored {:.1} ms",
+        t_canon.mean_ms(),
+        t_paper.mean_ms()
+    );
+}

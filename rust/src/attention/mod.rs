@@ -1,0 +1,177 @@
+//! Baseline sequence mixers (§2): causal softmax attention (quadratic, with
+//! a growing KV-cache) and first-order linear attention (streaming).  Both
+//! are implemented from scratch and drive the comparison benches (E2/E3/E6).
+
+use crate::hla::{HlaOptions, NormMode};
+use crate::tensor::{ops, Mat, Scalar};
+
+/// Full-sequence causal softmax attention, O(n² d) (Section 2.1).
+pub fn softmax_attention(q: &Mat<f32>, k: &Mat<f32>, v: &Mat<f32>, scale: f32) -> Mat<f32> {
+    let n = q.rows;
+    let mut out = Mat::zeros(n, v.cols);
+    let mut logits = vec![0f32; n];
+    for t in 0..n {
+        for j in 0..=t {
+            logits[j] = ops::dot(q.row(t), k.row(j)) * scale;
+        }
+        ops::softmax_inplace(&mut logits[..=t]);
+        let row = out.row_mut(t);
+        for j in 0..=t {
+            ops::axpy(logits[j], v.row(j), row);
+        }
+    }
+    out
+}
+
+/// Streaming softmax-attention decoder state: the KV-cache grows O(t) —
+/// the memory/latency contrast to HLA's constant state (benches E2/E6).
+#[derive(Debug, Clone, Default)]
+pub struct KvCache {
+    pub keys: Vec<Vec<f32>>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.keys.iter().map(|k| k.len() * 4).sum::<usize>()
+            + self.values.iter().map(|v| v.len() * 4).sum::<usize>()
+    }
+
+    /// Append (k, v) and attend with q over the whole cache: O(t·d)/token.
+    pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], scale: f32) -> Vec<f32> {
+        self.keys.push(k.to_vec());
+        self.values.push(v.to_vec());
+        let t = self.keys.len();
+        let mut logits: Vec<f32> = self.keys.iter().map(|ki| ops::dot(q, ki) * scale).collect();
+        ops::softmax_inplace(&mut logits);
+        let mut out = vec![0f32; v.len()];
+        for j in 0..t {
+            ops::axpy(logits[j], &self.values[j], &mut out);
+        }
+        out
+    }
+}
+
+/// First-order linear attention streaming state (identity feature map):
+/// P = Σ k vᵀ, m = Σ k (Section 2.2).
+#[derive(Debug, Clone)]
+pub struct LinearAttnState<T> {
+    pub p: Mat<T>,
+    pub m: Vec<T>,
+}
+
+impl<T: Scalar> LinearAttnState<T> {
+    pub fn new(d: usize, dv: usize) -> Self {
+        LinearAttnState { p: Mat::zeros(d, dv), m: vec![T::ZERO; d] }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        std::mem::size_of::<T>() * (self.p.data.len() + self.m.len())
+    }
+
+    pub fn step(&mut self, k: &[T], v: &[T], gamma: T) {
+        if gamma != T::ONE {
+            self.p.scale(gamma);
+            ops::scale(gamma, &mut self.m);
+        }
+        self.p.add_outer(T::ONE, k, v);
+        ops::axpy(T::ONE, k, &mut self.m);
+    }
+
+    pub fn output(&self, q: &[T], norm: NormMode, eps: T) -> Vec<T> {
+        let mut num = self.p.t_matvec(q);
+        let den = ops::dot(q, &self.m);
+        norm.apply(&mut num, den, eps);
+        num
+    }
+}
+
+/// Full-sequence linear attention via the streaming state.
+pub fn linear_attention_serial<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    let (n, d, dv) = (q.rows, q.cols, v.cols);
+    let mut st = LinearAttnState::new(d, dv);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        st.step(k.row(t), v.row(t), opts.gamma);
+        out.row_mut(t).copy_from_slice(&st.output(q.row(t), opts.norm, opts.eps));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, n: usize, d: usize) -> Mat<f32> {
+        let mut m = Mat::zeros(n, d);
+        for x in &mut m.data {
+            *x = rng.normal() as f32;
+        }
+        m
+    }
+
+    #[test]
+    fn softmax_rows_are_convex_combinations() {
+        let mut rng = Rng::new(1);
+        let (q, k) = (random(&mut rng, 12, 4), random(&mut rng, 12, 4));
+        let ones = Mat::from_vec(12, 3, vec![1.0; 36]);
+        let out = softmax_attention(&q, &k, &ones, 0.5);
+        for x in &out.data {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn kv_cache_matches_full_attention() {
+        let mut rng = Rng::new(2);
+        let n = 16;
+        let (q, k, v) = (random(&mut rng, n, 4), random(&mut rng, n, 4), random(&mut rng, n, 4));
+        let full = softmax_attention(&q, &k, &v, 0.5);
+        let mut cache = KvCache::new();
+        for t in 0..n {
+            let got = cache.step(q.row(t), k.row(t), v.row(t), 0.5);
+            for (a, b) in got.iter().zip(full.row(t)) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+        assert_eq!(cache.len(), n);
+        assert_eq!(cache.nbytes(), n * 2 * 4 * 4); // grows with n
+    }
+
+    #[test]
+    fn linear_attention_is_constant_state() {
+        let st = LinearAttnState::<f32>::new(64, 64);
+        assert_eq!(st.nbytes(), 4 * (64 * 64 + 64));
+    }
+
+    #[test]
+    fn linear_matches_hla_first_token() {
+        // at t = 1 both normalized operators return v_1-proportional rows
+        let mut rng = Rng::new(3);
+        let (q, k, v) = (random(&mut rng, 1, 4), random(&mut rng, 1, 4), random(&mut rng, 1, 4));
+        let opts = HlaOptions::<f32>::default().with_norm(NormMode::Linear);
+        let lin = linear_attention_serial(&q, &k, &v, &opts);
+        let hla = crate::hla::state2::hla2_serial(&q, &k, &v, &opts);
+        for (a, b) in lin.data.iter().zip(&hla.data) {
+            assert!((a - b).abs() < 2e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with mean/stddev/min, plus a black_box and table output via
+//! `metrics::Table`.  Used by every `rust/benches/e*.rs` target
+//! (`harness = false`, driven by `cargo bench`).
+
+use std::hint::black_box as hint_black_box;
+use std::time::Instant;
+
+/// Prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    hint_black_box(x)
+}
+
+/// Timing statistics for one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    /// items/second at `items` work items per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean_s
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+    Stats { iters, mean_s: mean, std_s: var.sqrt(), min_s: min }
+}
+
+/// Adaptive: pick an iteration count so total time ≈ `budget_s`, then bench.
+pub fn bench_budget<F: FnMut()>(budget_s: f64, mut f: F) -> Stats {
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_secs_f64().max(1e-7);
+    let iters = ((budget_s / one).round() as usize).clamp(3, 10_000);
+    bench(1, iters, f)
+}
+
+/// Standard header printed by every experiment harness.
+pub fn banner(id: &str, claim: &str) {
+    println!("\n=== {id}: {claim} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench(1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(s.mean_s > 0.0);
+        assert!(s.min_s <= s.mean_s);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn budget_adapts() {
+        let s = bench_budget(0.02, || {
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        });
+        assert!(s.iters >= 3 && s.iters <= 100, "{}", s.iters);
+    }
+}

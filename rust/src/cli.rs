@@ -1,0 +1,220 @@
+//! CLI: `hla <command> [--flags]` — the framework launcher.
+//!
+//! Commands:
+//!   info       print artifact/config inventory
+//!   selftest   decode-step artifact vs pure-Rust model numerics
+//!   train      run the AOT train_step loop (E10 driver)
+//!   generate   one-shot generation through the coordinator
+//!   serve      TCP serving frontend over N engine replicas
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::router::Router;
+use crate::coordinator::{collect_tokens, spawn_engine, GenRequest};
+use crate::model::sampler::SamplerCfg;
+use crate::runtime::Engine;
+use crate::train::{train, LrSchedule, TrainOpts};
+use crate::util::human_bytes;
+
+pub const USAGE: &str = "\
+hla — Higher-order Linear Attention runtime
+usage: hla <info|selftest|train|generate|serve> [--flags]
+common flags: --artifacts DIR --model NAME --seed N --config FILE.json
+train:    --steps N --lr F --warmup N --checkpoint PATH
+generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
+serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY";
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = args.split_first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let cfg = RunConfig::from_args(rest)?;
+    match cmd.as_str() {
+        "info" => info(&cfg),
+        "selftest" => selftest(&cfg),
+        "train" => cmd_train(&cfg),
+        "generate" => cmd_generate(&cfg),
+        "serve" => cmd_serve(&cfg),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn info(cfg: &RunConfig) -> Result<()> {
+    let engine = Engine::open(&cfg.artifacts)?;
+    println!("artifacts: {} ({} programs)", cfg.artifacts, engine.manifest.artifacts.len());
+    let mut table = crate::metrics::Table::new(&[
+        "config", "mixer", "params", "layers", "d_model", "heads", "state/seq", "kv@4k",
+    ]);
+    for (name, mc) in &engine.manifest.configs {
+        table.row(&[
+            name.clone(),
+            mc.mixer.clone(),
+            format!("{:.2}M", mc.n_params as f64 / 1e6),
+            mc.n_layers.to_string(),
+            mc.d_model.to_string(),
+            mc.n_heads.to_string(),
+            human_bytes(mc.state_nbytes_per_seq()),
+            human_bytes(mc.kv_cache_nbytes(4096)),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+/// Compare one decode step of the AOT artifact against the pure-Rust model.
+fn selftest(cfg: &RunConfig) -> Result<()> {
+    use crate::model::{ModelState, RustModel};
+    use crate::runtime::literal::literal_to_tensor;
+    use crate::tensor::TensorI32;
+
+    let engine = Engine::open(&cfg.artifacts)?;
+    let mc = engine.model_cfg(&cfg.model)?.clone();
+    let params = engine.init_params(&cfg.model, cfg.seed as i32)?;
+    let tensors: Vec<_> =
+        params.iter().map(literal_to_tensor).collect::<Result<_>>()?;
+    let rust = RustModel::from_tensors(&mc, &tensors)?;
+    println!("model {} ({} params), mixer {}", mc.name, rust.n_params(), mc.mixer);
+
+    // run 8 decode steps both ways on the same token stream
+    let b = mc.decode_batch;
+    let toks: Vec<u8> = b"It was ".iter().copied().cycle().take(8).collect();
+    let exe = engine.load(&format!("decode_step_{}", cfg.model))?;
+    let mut state_lits: Vec<xla::Literal> = mc
+        .state_paths
+        .iter()
+        .map(|(_, shape)| {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let n: usize = shape.iter().product();
+            Ok(xla::Literal::vec1(&vec![0f32; n]).reshape(&dims)?)
+        })
+        .collect::<Result<_>>()?;
+    let mut rust_state = ModelState::new(&mc);
+    let mut worst = 0f32;
+    for &tok in &toks {
+        let mut inputs: Vec<xla::Literal> = params
+            .iter()
+            .map(|p| {
+                let s = p.array_shape()?;
+                Ok(xla::Literal::vec1(&p.to_vec::<f32>()?).reshape(s.dims())?)
+            })
+            .collect::<Result<_>>()?;
+        inputs.append(&mut state_lits);
+        let tvec = vec![tok as i32; b];
+        inputs.push(crate::runtime::literal::tokens_to_literal(&TensorI32::from_vec(
+            &[b],
+            tvec,
+        ))?);
+        let outs = exe.run(&inputs)?;
+        let logits = literal_to_tensor(&outs[0])?;
+        state_lits = outs.into_iter().skip(1).collect();
+        let rust_logits = rust.decode_step(&mut rust_state, tok);
+        let vocab = mc.vocab;
+        for (a, bb) in logits.data[..vocab].iter().zip(&rust_logits) {
+            worst = worst.max((a - bb).abs());
+        }
+    }
+    println!("max |artifact - rust| logit diff over {} steps: {worst:.3e}", toks.len());
+    if worst > 2e-2 {
+        bail!("selftest FAILED (diff {worst})");
+    }
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_train(cfg: &RunConfig) -> Result<()> {
+    let engine = Engine::open(&cfg.artifacts)?;
+    let opts = TrainOpts {
+        cfg_name: cfg.model.clone(),
+        steps: cfg.steps,
+        lr: LrSchedule {
+            peak: cfg.lr,
+            warmup: cfg.warmup,
+            total: cfg.steps,
+            floor: cfg.lr * 0.1,
+        },
+        seed: cfg.seed,
+        log_every: (cfg.steps / 30).max(1),
+        checkpoint: cfg.checkpoint.clone(),
+        ..Default::default()
+    };
+    println!("training {} for {} steps (uniform-loss baseline {:.3})",
+        cfg.model, cfg.steps, crate::train::uniform_loss(engine.model_cfg(&cfg.model)?.vocab));
+    let (curve, params) = train(&engine, &opts)?;
+    let mut table = crate::metrics::Table::new(&["step", "loss", "lr", "tok/s"]);
+    for p in &curve {
+        table.row(&[
+            p.step.to_string(),
+            format!("{:.4}", p.loss),
+            format!("{:.2e}", p.lr),
+            format!("{:.0}", p.tokens_per_sec),
+        ]);
+    }
+    print!("{}", table.render());
+    let eval = crate::train::evaluate(&engine, &cfg.model, &params, 4, cfg.seed + 999)?;
+    println!("held-out loss: {eval:.4}");
+    Ok(())
+}
+
+fn cmd_generate(cfg: &RunConfig) -> Result<()> {
+    let (tx, handle) = spawn_engine(
+        cfg.artifacts.clone(),
+        cfg.model.clone(),
+        cfg.sched,
+        cfg.seed as i32,
+    );
+    let (etx, erx) = std::sync::mpsc::channel();
+    let req = GenRequest::new(
+        1,
+        cfg.prompt.as_bytes().to_vec(),
+        cfg.max_tokens,
+        SamplerCfg { temperature: cfg.temperature, top_k: 40, seed: cfg.seed },
+        etx,
+    );
+    tx.send(req).ok();
+    drop(tx);
+    let (tokens, finish) = collect_tokens(&erx);
+    println!("{}{}", cfg.prompt, String::from_utf8_lossy(&tokens));
+    println!("[finish: {finish:?}]");
+    let stats = handle.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
+    println!(
+        "[{} tokens, {:.1} tok/s, step p50 {:.1}ms]",
+        stats.tokens_out,
+        stats.tokens_per_sec,
+        stats.step_us_p50 / 1e3
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &RunConfig) -> Result<()> {
+    let mut senders = vec![];
+    let mut handles = vec![];
+    for r in 0..cfg.replicas {
+        let (tx, handle) = spawn_engine(
+            cfg.artifacts.clone(),
+            cfg.model.clone(),
+            cfg.sched,
+            cfg.seed as i32 + r as i32,
+        );
+        senders.push(tx);
+        handles.push(handle);
+    }
+    let router = Arc::new(Router::new(senders, cfg.route));
+    let stop = Arc::new(AtomicBool::new(false));
+    println!("serving {} ({} replica(s)) on {}", cfg.model, cfg.replicas, cfg.addr);
+    crate::server::serve(&cfg.addr, router, stop, |addr| {
+        println!("listening on {addr}");
+    })?;
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Runtime configuration: typed options assembled from defaults, an
+//! optional JSON config file, and CLI `--key value` overrides (a small
+//! figment-style layering, built on `util::json`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::router::RoutePolicy;
+use crate::coordinator::SchedPolicy;
+use crate::util::json::Json;
+
+/// Top-level runtime configuration for the CLI.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// artifact directory (contains manifest.json)
+    pub artifacts: String,
+    /// model config name (manifest key)
+    pub model: String,
+    pub seed: u64,
+    // serving
+    pub addr: String,
+    pub replicas: usize,
+    pub sched: SchedPolicy,
+    pub route: RoutePolicy,
+    // training
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub checkpoint: Option<String>,
+    // generation
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f32,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: "artifacts".into(),
+            model: "tiny".into(),
+            seed: 0,
+            addr: "127.0.0.1:7433".into(),
+            replicas: 1,
+            sched: SchedPolicy::PrefillFirst,
+            route: RoutePolicy::LeastLoaded,
+            steps: 300,
+            lr: 3e-3,
+            warmup: 20,
+            checkpoint: None,
+            prompt: "It was the".into(),
+            max_tokens: 64,
+            temperature: 0.8,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Layer: defaults <- JSON file (if `--config path` given) <- CLI flags.
+    pub fn from_args(args: &[String]) -> Result<RunConfig> {
+        let mut flags = parse_flags(args)?;
+        let mut cfg = RunConfig::default();
+        if let Some(path) = flags.remove("config") {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("reading config {path}: {e}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow!("config {path}: {e}"))?;
+            if let Some(obj) = j.as_obj() {
+                for (k, v) in obj {
+                    let as_text = match v {
+                        Json::Str(s) => s.clone(),
+                        other => other.to_string(),
+                    };
+                    cfg.apply(k, &as_text)?;
+                }
+            }
+        }
+        for (k, v) in &flags {
+            cfg.apply(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one key=value override.
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "artifacts" => self.artifacts = value.into(),
+            "model" => self.model = value.into(),
+            "seed" => self.seed = value.parse()?,
+            "addr" => self.addr = value.into(),
+            "replicas" => self.replicas = value.parse()?,
+            "sched" => {
+                self.sched = SchedPolicy::parse(value)
+                    .ok_or_else(|| anyhow!("bad sched {value:?} (prefill-first|decode-first|hybrid-N)"))?
+            }
+            "route" => {
+                self.route = RoutePolicy::parse(value)
+                    .ok_or_else(|| anyhow!("bad route {value:?} (round-robin|least-loaded|session-affinity)"))?
+            }
+            "steps" => self.steps = value.parse()?,
+            "lr" => self.lr = value.parse()?,
+            "warmup" => self.warmup = value.parse()?,
+            "checkpoint" => self.checkpoint = Some(value.into()),
+            "prompt" => self.prompt = value.into(),
+            "max-tokens" | "max_tokens" => self.max_tokens = value.parse()?,
+            "temperature" => self.temperature = value.parse()?,
+            other => bail!("unknown option --{other}"),
+        }
+        Ok(())
+    }
+}
+
+/// Parse `--key value` / `--key=value` pairs.
+pub fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected positional argument {a:?}");
+        };
+        if let Some((k, v)) = key.split_once('=') {
+            out.insert(k.to_string(), v.to_string());
+            i += 1;
+        } else {
+            let v = args.get(i + 1).ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            out.insert(key.to_string(), v.clone());
+            i += 2;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_both_styles() {
+        let f = parse_flags(&s(&["--model", "tiny", "--steps=50"])).unwrap();
+        assert_eq!(f["model"], "tiny");
+        assert_eq!(f["steps"], "50");
+        assert!(parse_flags(&s(&["oops"])).is_err());
+        assert!(parse_flags(&s(&["--dangling"])).is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg =
+            RunConfig::from_args(&s(&["--model", "micro", "--sched", "hybrid-2", "--lr", "0.001"]))
+                .unwrap();
+        assert_eq!(cfg.model, "micro");
+        assert_eq!(cfg.sched, SchedPolicy::Hybrid(2));
+        assert!((cfg.lr - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn config_file_layering() {
+        let path = std::env::temp_dir().join(format!("hla-cfg-{}.json", std::process::id()));
+        std::fs::write(&path, r#"{"model": "micro", "steps": 77}"#).unwrap();
+        let cfg = RunConfig::from_args(&s(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--steps",
+            "88",
+        ]))
+        .unwrap();
+        // file sets model, CLI overrides steps
+        assert_eq!(cfg.model, "micro");
+        assert_eq!(cfg.steps, 88);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RunConfig::from_args(&s(&["--bogus", "1"])).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Decode-batch lane management for continuous batching.
+//!
+//! A lane is one slot of the fixed-width decode batch.  Admission binds a
+//! request to a lane (its state slice is zeroed); the lane then feeds the
+//! prompt one token per step ("decode-as-prefill" — exact for a recurrent
+//! model because decode_step *is* the prefill recurrence), and switches to
+//! sampling once the prompt is exhausted.  Idle lanes feed a pad token and
+//! their outputs are ignored.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use super::request::{FinishReason, GenRequest, RequestId, TokenEvent};
+use crate::model::sampler::Sampler;
+
+pub const PAD_TOKEN: u8 = 0;
+
+/// An occupied lane's mutable state.
+#[derive(Debug)]
+pub struct ActiveLane {
+    pub request_id: RequestId,
+    pub prompt: Vec<u8>,
+    /// Next prompt position to feed (prompt phase while < prompt.len()).
+    pub cursor: usize,
+    pub generated: usize,
+    pub max_new_tokens: usize,
+    pub eos: Option<u8>,
+    pub sampler: Sampler,
+    pub last_token: u8,
+    pub arrival: Instant,
+    pub events: Sender<TokenEvent>,
+    /// set when the first token was emitted this step (TTFT metric)
+    pub first_flag: bool,
+    /// set when any token was emitted this step (throughput metric)
+    pub emitted_flag: bool,
+}
+
+/// One slot of the decode batch.
+#[derive(Debug, Default)]
+pub enum Lane {
+    #[default]
+    Empty,
+    Active(ActiveLane),
+}
+
+/// Phase of an active lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneStatus {
+    Idle,
+    Prompt,
+    Generating,
+}
+
+impl Lane {
+    pub fn empty() -> Lane {
+        Lane::Empty
+    }
+
+    pub fn start(req: GenRequest) -> Lane {
+        let prompt = if req.prompt.is_empty() { vec![PAD_TOKEN] } else { req.prompt };
+        Lane::Active(ActiveLane {
+            request_id: req.id,
+            cursor: 0,
+            generated: 0,
+            max_new_tokens: req.max_new_tokens,
+            eos: req.eos,
+            sampler: Sampler::new(req.sampler),
+            last_token: PAD_TOKEN,
+            arrival: Instant::now(),
+            events: req.events,
+            first_flag: false,
+            emitted_flag: false,
+            prompt,
+        })
+    }
+
+    pub fn is_active(&self) -> bool {
+        matches!(self, Lane::Active(_))
+    }
+
+    pub fn status(&self) -> LaneStatus {
+        match self {
+            Lane::Empty => LaneStatus::Idle,
+            Lane::Active(a) => {
+                if a.cursor < a.prompt.len() {
+                    LaneStatus::Prompt
+                } else {
+                    LaneStatus::Generating
+                }
+            }
+        }
+    }
+
+    /// The token to feed this step (advances the prompt cursor).
+    pub fn next_input_token(&mut self) -> u8 {
+        match self {
+            Lane::Empty => PAD_TOKEN,
+            Lane::Active(a) => {
+                if a.cursor < a.prompt.len() {
+                    let t = a.prompt[a.cursor];
+                    a.cursor += 1;
+                    t
+                } else {
+                    a.last_token
+                }
+            }
+        }
+    }
+
+    /// Consume this step's logits row; returns Some(reason) when finished.
+    ///
+    /// During the prompt phase logits are ignored except for the *last*
+    /// prompt position, which produces the first generated token.
+    pub fn consume_output(&mut self, logits: &[f32], _now: Instant) -> Option<FinishReason> {
+        let Lane::Active(a) = self else { return None };
+        // still mid-prompt? (cursor already advanced for this step)
+        if a.cursor < a.prompt.len() {
+            return None;
+        }
+        // sample the next token
+        let tok = a.sampler.sample(logits) as u8;
+        a.last_token = tok;
+        let first = a.generated == 0;
+        a.generated += 1;
+        let _ = a.events.send(TokenEvent::token(a.request_id, tok));
+        // bookkeeping flags read by the engine loop for metrics
+        self.set_emit_flags(first);
+        let Lane::Active(a) = self else { unreachable!() };
+        if a.eos == Some(tok) {
+            return Some(FinishReason::Eos);
+        }
+        if a.generated >= a.max_new_tokens {
+            return Some(FinishReason::Length);
+        }
+        None
+    }
+
+    fn set_emit_flags(&mut self, first: bool) {
+        if let Lane::Active(a) = self {
+            a.first_flag = first;
+            a.emitted_flag = true;
+        }
+    }
+
+    /// Did this lane emit its first token this step? (metric: TTFT)
+    pub fn take_first_flag(&mut self) -> bool {
+        if let Lane::Active(a) = self {
+            std::mem::take(&mut a.first_flag)
+        } else {
+            false
+        }
+    }
+
+    /// Did this lane emit any token this step? (metric: throughput)
+    pub fn take_emitted_flag(&mut self) -> bool {
+        if let Lane::Active(a) = self {
+            std::mem::take(&mut a.emitted_flag)
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sampler::SamplerCfg;
+
+    fn mk_lane(prompt: &[u8], max_new: usize) -> (Lane, std::sync::mpsc::Receiver<TokenEvent>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = GenRequest::new(7, prompt.to_vec(), max_new, SamplerCfg::greedy(), tx);
+        (Lane::start(req), rx)
+    }
+
+    #[test]
+    fn prompt_phase_feeds_prompt_tokens() {
+        let (mut lane, _rx) = mk_lane(b"abc", 4);
+        assert_eq!(lane.status(), LaneStatus::Prompt);
+        assert_eq!(lane.next_input_token(), b'a');
+        assert_eq!(lane.next_input_token(), b'b');
+        // mid-prompt outputs are ignored
+        assert!(lane.consume_output(&[0.0; 256], Instant::now()).is_none());
+        assert_eq!(lane.next_input_token(), b'c');
+        assert_eq!(lane.status(), LaneStatus::Generating);
+    }
+
+    #[test]
+    fn generates_until_length() {
+        let (mut lane, rx) = mk_lane(b"a", 2);
+        let mut logits = vec![0.0f32; 256];
+        logits[b'x' as usize] = 10.0;
+        // step 1: feed 'a', sample first token
+        assert_eq!(lane.next_input_token(), b'a');
+        assert!(lane.consume_output(&logits, Instant::now()).is_none());
+        assert!(lane.take_first_flag());
+        // step 2: feed sampled token, hit length limit
+        assert_eq!(lane.next_input_token(), b'x');
+        assert_eq!(lane.consume_output(&logits, Instant::now()), Some(FinishReason::Length));
+        let toks: Vec<_> = rx.try_iter().filter_map(|e| e.token).collect();
+        assert_eq!(toks, vec![b'x', b'x']);
+    }
+
+    #[test]
+    fn eos_stops_early() {
+        let (mut lane, _rx) = mk_lane(b"a", 100);
+        if let Lane::Active(a) = &mut lane {
+            a.eos = Some(b'z');
+        }
+        let mut logits = vec![0.0f32; 256];
+        logits[b'z' as usize] = 10.0;
+        lane.next_input_token();
+        assert_eq!(lane.consume_output(&logits, Instant::now()), Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn empty_lane_pads() {
+        let mut lane = Lane::empty();
+        assert_eq!(lane.next_input_token(), PAD_TOKEN);
+        assert_eq!(lane.status(), LaneStatus::Idle);
+        assert!(lane.consume_output(&[0.0; 4], Instant::now()).is_none());
+    }
+}

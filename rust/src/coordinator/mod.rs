@@ -1,0 +1,355 @@
+//! L3 coordinator: continuous-batching serving on top of the AOT decode
+//! artifacts — the systems payoff of HLA's O(1) recurrent state.
+//!
+//! Architecture (one replica):
+//!
+//! ```text
+//!   clients ──(mpsc GenRequest)──► EngineLoop (owns the PJRT Engine;
+//!                                   xla types are !Send so everything
+//!                                   device-touching lives on this thread)
+//!             ◄─(mpsc TokenEvent)── │  fixed-width decode batch, B lanes
+//!                                   │  StatePool: per-lane HLA state slices
+//!                                   │  Scheduler: prefill/decode policy
+//! ```
+//!
+//! Because the per-sequence state is a *constant-size* tuple (Theorem 3.1)
+//! rather than a growing KV-cache, lane admission is O(state) zeroing, lane
+//! memory never grows with context length, and the step cost is independent
+//! of how long each sequence has been running (benches E6/E8).
+//!
+//! Multi-replica routing lives in [`router`].
+
+pub mod batch;
+pub mod request;
+pub mod router;
+pub mod state_pool;
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::{Histogram, Meter};
+use crate::runtime::{literal, Engine};
+use crate::tensor::TensorI32;
+pub use batch::{Lane, LaneStatus};
+pub use request::{collect_tokens, FinishReason, GenRequest, RequestId, TokenEvent};
+pub use state_pool::StatePool;
+
+/// Prefill/decode scheduling policy (E8b ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Admit every waiting request before decoding (lowest TTFT).
+    PrefillFirst,
+    /// Only admit when the decode batch is empty (decode latency first).
+    DecodeFirst,
+    /// Admit at most `n` waiting requests per decode cycle.
+    Hybrid(usize),
+}
+
+impl SchedPolicy {
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s {
+            "prefill-first" => Some(SchedPolicy::PrefillFirst),
+            "decode-first" => Some(SchedPolicy::DecodeFirst),
+            other => other.strip_prefix("hybrid-").and_then(|n| n.parse().ok()).map(SchedPolicy::Hybrid),
+        }
+    }
+
+    /// How many admissions this cycle, given queue depth and free lanes.
+    fn admissions(&self, waiting: usize, free: usize, active: usize) -> usize {
+        match *self {
+            SchedPolicy::PrefillFirst => waiting.min(free),
+            SchedPolicy::DecodeFirst => {
+                if active == 0 {
+                    waiting.min(free)
+                } else {
+                    0
+                }
+            }
+            SchedPolicy::Hybrid(n) => waiting.min(free).min(n),
+        }
+    }
+}
+
+/// Aggregated serving metrics, snapshotted for benches/CLI.
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub tokens_out: u64,
+    pub steps: u64,
+    pub elapsed_s: f64,
+    pub step_us_p50: f64,
+    pub step_us_p99: f64,
+    pub ttft_us_p50: f64,
+    pub ttft_us_p95: f64,
+    pub ttft_us_p99: f64,
+    pub latency_us_p50: f64,
+    pub latency_us_p95: f64,
+    pub latency_us_p99: f64,
+    pub tokens_per_sec: f64,
+    pub state_bytes: usize,
+    pub lane_occupancy: f64,
+}
+
+/// The single-replica engine loop: owns the PJRT engine + batch state.
+pub struct EngineLoop {
+    engine: Engine,
+    cfg_name: String,
+    batch: usize,
+    lanes: Vec<Lane>,
+    pool: StatePool,
+    waiting: VecDeque<GenRequest>,
+    policy: SchedPolicy,
+    rx: Receiver<GenRequest>,
+    // params + recurrent state live as literals across steps and are passed
+    // by reference to PJRT — no per-step deep copies (§Perf item 2)
+    params: Vec<xla::Literal>,
+    state: Vec<xla::Literal>,
+    // metrics
+    pub step_hist: Histogram,
+    pub ttft_hist: Histogram,
+    pub latency_hist: Histogram,
+    meter: Meter,
+    occupied_steps: u64,
+    occupied_lanes: u64,
+    completed: u64,
+    started: Instant,
+}
+
+impl EngineLoop {
+    /// Build a loop over `artifacts/` for model config `cfg_name`.
+    pub fn new(
+        artifacts: &str,
+        cfg_name: &str,
+        policy: SchedPolicy,
+        seed: i32,
+        rx: Receiver<GenRequest>,
+    ) -> Result<EngineLoop> {
+        let engine = Engine::open(artifacts)?;
+        let cfg = engine.model_cfg(cfg_name)?.clone();
+        let params = engine.init_params(cfg_name, seed)?;
+        // force-compile the decode artifact up front
+        engine.load(&format!("decode_step_{cfg_name}"))?;
+        let batch = cfg.decode_batch;
+        let state = zero_state_literals(&cfg)?;
+        Ok(EngineLoop {
+            engine,
+            cfg_name: cfg_name.to_string(),
+            batch,
+            lanes: (0..batch).map(|_| Lane::empty()).collect(),
+            pool: StatePool::new(&cfg),
+            waiting: VecDeque::new(),
+            policy,
+            rx,
+            params,
+            state,
+            step_hist: Histogram::new(),
+            ttft_hist: Histogram::new(),
+            latency_hist: Histogram::new(),
+            meter: Meter::new(),
+            occupied_steps: 0,
+            occupied_lanes: 0,
+            completed: 0,
+            started: Instant::now(),
+        })
+    }
+
+    /// Load externally trained parameters (checkpoint) instead of init.
+    pub fn set_params(&mut self, params: Vec<xla::Literal>) {
+        self.params = params;
+    }
+
+    /// Run until the request channel closes and all lanes drain.
+    pub fn run(&mut self) -> Result<ServeStats> {
+        let mut open = true;
+        loop {
+            // pull new requests without blocking; block only when idle
+            loop {
+                match self.rx.try_recv() {
+                    Ok(r) => self.waiting.push_back(r),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+            let active = self.lanes.iter().filter(|l| l.is_active()).count();
+            if active == 0 && self.waiting.is_empty() {
+                if !open {
+                    break;
+                }
+                // idle: block for the next request
+                match self.rx.recv() {
+                    Ok(r) => self.waiting.push_back(r),
+                    Err(_) => break,
+                }
+                continue;
+            }
+            self.admit();
+            self.step()?;
+        }
+        Ok(self.stats())
+    }
+
+    /// Admit waiting requests into free lanes per the scheduler policy.
+    fn admit(&mut self) {
+        let free: Vec<usize> =
+            (0..self.batch).filter(|&b| !self.lanes[b].is_active()).collect();
+        let active = self.batch - free.len();
+        let n = self.policy.admissions(self.waiting.len(), free.len(), active);
+        for &lane_idx in free.iter().take(n) {
+            let req = self.waiting.pop_front().expect("admissions <= waiting");
+            self.pool.zero_lane(lane_idx);
+            self.zero_state_lane(lane_idx).expect("state zeroing");
+            self.lanes[lane_idx] = Lane::start(req);
+        }
+    }
+
+    /// Zero lane `b` of the live state literals (admission only — the hot
+    /// decode loop never round-trips state through the host).
+    fn zero_state_lane(&mut self, b: usize) -> Result<()> {
+        for lit in self.state.iter_mut() {
+            let mut t = literal::literal_to_tensor(lit)?;
+            let l = t.shape[0];
+            let batch = t.shape[1];
+            let rest: usize = t.shape[2..].iter().product();
+            for li in 0..l {
+                let off = (li * batch + b) * rest;
+                t.data[off..off + rest].fill(0.0);
+            }
+            *lit = literal::tensor_to_literal(&t)?;
+        }
+        Ok(())
+    }
+
+    /// One batched decode step over all lanes.
+    fn step(&mut self) -> Result<()> {
+        let start = Instant::now();
+        // build the token vector: prompt token, last sampled token, or pad
+        let mut tokens = vec![0i32; self.batch];
+        for (b, lane) in self.lanes.iter_mut().enumerate() {
+            tokens[b] = lane.next_input_token() as i32;
+        }
+        let exe = self.engine.load(&format!("decode_step_{}", self.cfg_name))?;
+        let token_lit = literal::tokens_to_literal(&TensorI32::from_vec(&[self.batch], tokens))?;
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.params.len() + self.state.len() + 1);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.state.iter());
+        inputs.push(&token_lit);
+        let mut outs = exe.run_refs(&inputs)?;
+        // outs[0] = logits [B, V]; outs[1..] = new state (kept as literals)
+        self.state = outs.split_off(1);
+        let logits = literal::literal_to_tensor(&outs[0])?;
+        let vocab = logits.shape[1];
+
+        let now = Instant::now();
+        let mut finished: Vec<(usize, FinishReason)> = vec![];
+        let mut active_ct = 0u64;
+        for (b, lane) in self.lanes.iter_mut().enumerate() {
+            if !lane.is_active() {
+                continue;
+            }
+            active_ct += 1;
+            let row = &logits.data[b * vocab..(b + 1) * vocab];
+            if let Some(reason) = lane.consume_output(row, now) {
+                finished.push((b, reason));
+            }
+            if lane.take_first_flag() {
+                if let Lane::Active(a) = lane {
+                    self.ttft_hist.record(now - a.arrival);
+                }
+            }
+            if lane.take_emitted_flag() {
+                self.meter.tick(1);
+            }
+        }
+        for (b, reason) in finished {
+            let lane = std::mem::replace(&mut self.lanes[b], Lane::empty());
+            if let Lane::Active(a) = lane {
+                self.latency_hist.record(now - a.arrival);
+                self.completed += 1;
+                let _ = a.events.send(TokenEvent::finished(a.request_id, reason));
+            }
+        }
+        self.step_hist.record(start.elapsed());
+        self.occupied_steps += 1;
+        self.occupied_lanes += active_ct;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            completed: self.completed,
+            tokens_out: self.meter.units(),
+            steps: self.occupied_steps,
+            elapsed_s: self.started.elapsed().as_secs_f64(),
+            step_us_p50: self.step_hist.percentile_us(50.0),
+            step_us_p99: self.step_hist.percentile_us(99.0),
+            ttft_us_p50: self.ttft_hist.percentile_us(50.0),
+            ttft_us_p95: self.ttft_hist.percentile_us(95.0),
+            ttft_us_p99: self.ttft_hist.percentile_us(99.0),
+            latency_us_p50: self.latency_hist.percentile_us(50.0),
+            latency_us_p95: self.latency_hist.percentile_us(95.0),
+            latency_us_p99: self.latency_hist.percentile_us(99.0),
+            tokens_per_sec: self.meter.units_per_sec(),
+            state_bytes: self.pool.nbytes(),
+            lane_occupancy: if self.occupied_steps == 0 {
+                0.0
+            } else {
+                self.occupied_lanes as f64 / (self.occupied_steps * self.batch as u64) as f64
+            },
+        }
+    }
+}
+
+/// Build zeroed state literals from the config's state layout.
+fn zero_state_literals(cfg: &crate::runtime::ModelCfg) -> Result<Vec<xla::Literal>> {
+    cfg.state_paths
+        .iter()
+        .map(|(_, shape)| {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let n: usize = shape.iter().product();
+            Ok(xla::Literal::vec1(&vec![0f32; n]).reshape(&dims)?)
+        })
+        .collect()
+}
+
+/// Spawn an engine loop on its own thread; returns the request sender and a
+/// join handle yielding the final stats.
+pub fn spawn_engine(
+    artifacts: String,
+    cfg_name: String,
+    policy: SchedPolicy,
+    seed: i32,
+) -> (Sender<GenRequest>, std::thread::JoinHandle<Result<ServeStats>>) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let mut lp = EngineLoop::new(&artifacts, &cfg_name, policy, seed, rx)?;
+        lp.run()
+    });
+    (tx, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(SchedPolicy::parse("prefill-first"), Some(SchedPolicy::PrefillFirst));
+        assert_eq!(SchedPolicy::parse("hybrid-2"), Some(SchedPolicy::Hybrid(2)));
+        assert_eq!(SchedPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn policy_admissions() {
+        assert_eq!(SchedPolicy::PrefillFirst.admissions(5, 3, 1), 3);
+        assert_eq!(SchedPolicy::DecodeFirst.admissions(5, 3, 1), 0);
+        assert_eq!(SchedPolicy::DecodeFirst.admissions(5, 3, 0), 3);
+        assert_eq!(SchedPolicy::Hybrid(1).admissions(5, 3, 2), 1);
+    }
+}

@@ -1,0 +1,96 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc::Sender;
+
+use crate::model::sampler::SamplerCfg;
+
+pub type RequestId = u64;
+
+/// Why a generation ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Produced the EOS byte.
+    Eos,
+    /// Coordinator shut down before completion.
+    Aborted,
+}
+
+/// A streamed per-token event (or the final completion marker).
+#[derive(Debug, Clone)]
+pub struct TokenEvent {
+    pub request_id: RequestId,
+    /// `None` for the final event.
+    pub token: Option<u8>,
+    pub done: bool,
+    pub finish: Option<FinishReason>,
+}
+
+impl TokenEvent {
+    pub fn token(request_id: RequestId, token: u8) -> TokenEvent {
+        TokenEvent { request_id, token: Some(token), done: false, finish: None }
+    }
+
+    pub fn finished(request_id: RequestId, reason: FinishReason) -> TokenEvent {
+        TokenEvent { request_id, token: None, done: true, finish: Some(reason) }
+    }
+}
+
+/// A generation request submitted to the coordinator.
+#[derive(Debug)]
+pub struct GenRequest {
+    pub id: RequestId,
+    /// Byte-level prompt (the models are byte LMs).
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    /// Stop when this byte is produced (None = length-only).
+    pub eos: Option<u8>,
+    pub sampler: SamplerCfg,
+    /// Streaming channel for token events.
+    pub events: Sender<TokenEvent>,
+}
+
+impl GenRequest {
+    pub fn new(
+        id: RequestId,
+        prompt: Vec<u8>,
+        max_new_tokens: usize,
+        sampler: SamplerCfg,
+        events: Sender<TokenEvent>,
+    ) -> GenRequest {
+        GenRequest { id, prompt, max_new_tokens, eos: None, sampler, events }
+    }
+}
+
+/// Collect a full generation from an event receiver (blocking helper).
+pub fn collect_tokens(rx: &std::sync::mpsc::Receiver<TokenEvent>) -> (Vec<u8>, Option<FinishReason>) {
+    let mut out = Vec::new();
+    let mut finish = None;
+    while let Ok(ev) = rx.recv() {
+        if let Some(t) = ev.token {
+            out.push(t);
+        }
+        if ev.done {
+            finish = ev.finish;
+            break;
+        }
+    }
+    (out, finish)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_reads_until_done() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        tx.send(TokenEvent::token(1, b'h')).unwrap();
+        tx.send(TokenEvent::token(1, b'i')).unwrap();
+        tx.send(TokenEvent::finished(1, FinishReason::Length)).unwrap();
+        let (bytes, finish) = collect_tokens(&rx);
+        assert_eq!(bytes, b"hi");
+        assert_eq!(finish, Some(FinishReason::Length));
+    }
+}

@@ -1,0 +1,176 @@
+//! Multi-replica request router (vLLM-router-shaped).
+//!
+//! Each replica is an [`super::EngineLoop`] on its own thread, addressed by
+//! an mpsc sender.  The router is `Send + Sync` (it holds only channels and
+//! atomics) so any number of frontend threads can submit through it.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use super::request::GenRequest;
+
+/// Routing policy across replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Fewest in-flight requests (ties: lowest index).  Callers report
+    /// completion via [`Router::complete`].
+    LeastLoaded,
+    /// Stable hash of a session key — keeps a conversation's recurrent
+    /// state on one replica (no state migration needed).
+    SessionAffinity,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "round-robin" => Some(RoutePolicy::RoundRobin),
+            "least-loaded" => Some(RoutePolicy::LeastLoaded),
+            "session-affinity" => Some(RoutePolicy::SessionAffinity),
+            _ => None,
+        }
+    }
+}
+
+struct Replica {
+    tx: Mutex<Sender<GenRequest>>,
+    in_flight: AtomicUsize,
+}
+
+/// The router: submit requests, pick replicas by policy.
+pub struct Router {
+    replicas: Vec<Replica>,
+    policy: RoutePolicy,
+    rr: AtomicU64,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    pub fn new(senders: Vec<Sender<GenRequest>>, policy: RoutePolicy) -> Router {
+        Router {
+            replicas: senders
+                .into_iter()
+                .map(|tx| Replica { tx: Mutex::new(tx), in_flight: AtomicUsize::new(0) })
+                .collect(),
+            policy,
+            rr: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Pick the replica index for a request (session key optional).
+    pub fn pick(&self, session: Option<u64>) -> usize {
+        let n = self.replicas.len();
+        match self.policy {
+            RoutePolicy::RoundRobin => (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n,
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = usize::MAX;
+                for (i, r) in self.replicas.iter().enumerate() {
+                    let load = r.in_flight.load(Ordering::Relaxed);
+                    if load < best_load {
+                        best = i;
+                        best_load = load;
+                    }
+                }
+                best
+            }
+            RoutePolicy::SessionAffinity => {
+                let key = session.unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed));
+                // splitmix-style hash for stability
+                let mut z = key.wrapping_add(0x9E3779B97F4A7C15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                (z as usize) % n
+            }
+        }
+    }
+
+    /// Submit a request; returns the replica index used.
+    pub fn submit(&self, req: GenRequest, session: Option<u64>) -> Result<usize> {
+        let idx = self.pick(session);
+        let r = &self.replicas[idx];
+        r.in_flight.fetch_add(1, Ordering::Relaxed);
+        r.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| anyhow!("replica {idx} is gone"))?;
+        Ok(idx)
+    }
+
+    /// Report a finished request (LeastLoaded accounting).
+    pub fn complete(&self, replica: usize) {
+        self.replicas[replica].in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn in_flight(&self, replica: usize) -> usize {
+        self.replicas[replica].in_flight.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sampler::SamplerCfg;
+
+    fn mk_router(n: usize, policy: RoutePolicy) -> (Router, Vec<std::sync::mpsc::Receiver<GenRequest>>) {
+        let mut txs = vec![];
+        let mut rxs = vec![];
+        for _ in 0..n {
+            let (tx, rx) = std::sync::mpsc::channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        (Router::new(txs, policy), rxs)
+    }
+
+    fn mk_req(id: u64) -> (GenRequest, std::sync::mpsc::Receiver<super::super::TokenEvent>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (GenRequest::new(id, vec![1], 4, SamplerCfg::greedy(), tx), rx)
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let (router, _rxs) = mk_router(3, RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| router.pick(None)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let (router, rxs) = mk_router(2, RoutePolicy::LeastLoaded);
+        let (r1, _e1) = mk_req(1);
+        let (r2, _e2) = mk_req(2);
+        let (r3, _e3) = mk_req(3);
+        assert_eq!(router.submit(r1, None).unwrap(), 0);
+        assert_eq!(router.submit(r2, None).unwrap(), 1);
+        router.complete(0);
+        assert_eq!(router.submit(r3, None).unwrap(), 0);
+        assert_eq!(rxs[0].try_iter().count(), 2);
+        assert_eq!(rxs[1].try_iter().count(), 1);
+    }
+
+    #[test]
+    fn session_affinity_is_stable() {
+        let (router, _rxs) = mk_router(4, RoutePolicy::SessionAffinity);
+        let a = router.pick(Some(42));
+        for _ in 0..10 {
+            assert_eq!(router.pick(Some(42)), a);
+        }
+        // different sessions spread out at least somewhat
+        let picks: std::collections::HashSet<usize> =
+            (0..64).map(|s| router.pick(Some(s))).collect();
+        assert!(picks.len() > 1);
+    }
+}

@@ -1,0 +1,174 @@
+//! The constant-size recurrent-state pool — HLA's replacement for a
+//! KV-cache manager.
+//!
+//! The decode artifacts carry state stacked `[L, B, H, ...]` per component;
+//! the pool keeps the batched host tensors, supports O(state/B) per-lane
+//! zeroing on admission (no allocation, no growth with context length), and
+//! converts to/from the artifact's literals each step.
+//!
+//! Contrast with a softmax KV-cache (bench E6): a lane here costs
+//! `ModelCfg::state_nbytes_per_seq()` bytes *forever*, while a KV-cache lane
+//! costs O(context) and needs paging/eviction machinery.
+
+use anyhow::Result;
+
+use crate::runtime::{literal, ModelCfg};
+use crate::tensor::Tensor;
+
+/// Batched recurrent state (host-resident between steps).
+pub struct StatePool {
+    /// One tensor per state component, shapes `[L, B, H, ...]`.
+    components: Vec<Tensor>,
+    /// Per-component stride of one lane's slice within a [L] block.
+    batch: usize,
+}
+
+impl StatePool {
+    pub fn new(cfg: &ModelCfg) -> StatePool {
+        let components =
+            cfg.state_paths.iter().map(|(_, shape)| Tensor::zeros(shape)).collect();
+        StatePool { components, batch: cfg.decode_batch }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.components.iter().map(Tensor::nbytes).sum()
+    }
+
+    pub fn nbytes_per_lane(&self) -> usize {
+        self.nbytes() / self.batch.max(1)
+    }
+
+    /// Zero lane `b`'s slice in every component (admission reset).
+    pub fn zero_lane(&mut self, b: usize) {
+        assert!(b < self.batch, "lane {b} out of range");
+        for comp in &mut self.components {
+            // shape [L, B, rest...]
+            let l = comp.shape[0];
+            let batch = comp.shape[1];
+            let rest: usize = comp.shape[2..].iter().product();
+            for li in 0..l {
+                let off = (li * batch + b) * rest;
+                comp.data[off..off + rest].fill(0.0);
+            }
+        }
+    }
+
+    /// Append the state literals to an artifact input vector.
+    pub fn push_literals(&self, inputs: &mut Vec<xla::Literal>) -> Result<()> {
+        for comp in &self.components {
+            inputs.push(literal::tensor_to_literal(comp)?);
+        }
+        Ok(())
+    }
+
+    /// Absorb the artifact's new-state outputs (same component order).
+    pub fn absorb(&mut self, outs: &[xla::Literal]) -> Result<()> {
+        assert_eq!(outs.len(), self.components.len(), "state arity mismatch");
+        for (comp, lit) in self.components.iter_mut().zip(outs) {
+            let t = literal::literal_to_tensor(lit)?;
+            debug_assert_eq!(t.shape, comp.shape);
+            comp.data = t.data;
+        }
+        Ok(())
+    }
+
+    /// Read one lane's state slice (diagnostics / session migration).
+    pub fn export_lane(&self, b: usize) -> Vec<Tensor> {
+        self.components
+            .iter()
+            .map(|comp| {
+                let l = comp.shape[0];
+                let batch = comp.shape[1];
+                let rest: usize = comp.shape[2..].iter().product();
+                let mut shape = comp.shape.clone();
+                shape[1] = 1;
+                let mut out = Tensor::zeros(&shape);
+                for li in 0..l {
+                    let src = (li * batch + b) * rest;
+                    let dst = li * rest;
+                    out.data[dst..dst + rest].copy_from_slice(&comp.data[src..src + rest]);
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Write one lane's state slice (session migration between replicas).
+    pub fn import_lane(&mut self, b: usize, parts: &[Tensor]) {
+        assert_eq!(parts.len(), self.components.len());
+        for (comp, part) in self.components.iter_mut().zip(parts) {
+            let l = comp.shape[0];
+            let batch = comp.shape[1];
+            let rest: usize = comp.shape[2..].iter().product();
+            for li in 0..l {
+                let dst = (li * batch + b) * rest;
+                let src = li * rest;
+                comp.data[dst..dst + rest].copy_from_slice(&part.data[src..src + rest]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn test_cfg() -> ModelCfg {
+        let json = r#"{
+          "configs": {"t": {"vocab": 16, "d_model": 8, "n_layers": 2,
+            "n_heads": 2, "head_dim": 4, "d_ffn": 32, "kv_heads": 2,
+            "mixer": "hla2", "chunk": 4, "gamma": 1.0, "lam": 0.0,
+            "norm_mode": "abs", "eps": 1e-6, "n_params": 100,
+            "n_param_tensors": 2, "n_state_tensors": 2,
+            "param_paths": [["['embed']", [16, 8]]],
+            "state_paths": [["['c']", [2, 3, 2, 4, 4]], ["['m']", [2, 3, 2, 4]]],
+            "train_batch": 2, "train_seq": 8, "decode_batch": 3,
+            "prefill_len": 4}},
+          "artifacts": {}
+        }"#;
+        Manifest::parse(json).unwrap().configs["t"].clone()
+    }
+
+    #[test]
+    fn zero_lane_is_surgical() {
+        let cfg = test_cfg();
+        let mut pool = StatePool::new(&cfg);
+        // fill everything with 1s
+        for c in &mut pool.components {
+            c.data.fill(1.0);
+        }
+        pool.zero_lane(1);
+        // lane 1 zero, lanes 0/2 untouched
+        let lane0 = pool.export_lane(0);
+        let lane1 = pool.export_lane(1);
+        let lane2 = pool.export_lane(2);
+        assert!(lane0.iter().all(|t| t.data.iter().all(|&x| x == 1.0)));
+        assert!(lane1.iter().all(|t| t.data.iter().all(|&x| x == 0.0)));
+        assert!(lane2.iter().all(|t| t.data.iter().all(|&x| x == 1.0)));
+    }
+
+    #[test]
+    fn export_import_roundtrip() {
+        let cfg = test_cfg();
+        let mut pool = StatePool::new(&cfg);
+        for (i, c) in pool.components.iter_mut().enumerate() {
+            for (j, x) in c.data.iter_mut().enumerate() {
+                *x = (i * 1000 + j) as f32;
+            }
+        }
+        let saved = pool.export_lane(2);
+        pool.zero_lane(2);
+        pool.import_lane(2, &saved);
+        let back = pool.export_lane(2);
+        assert_eq!(saved, back);
+    }
+
+    #[test]
+    fn constant_size_accounting() {
+        let cfg = test_cfg();
+        let pool = StatePool::new(&cfg);
+        assert_eq!(pool.nbytes(), cfg.state_nbytes());
+        assert_eq!(pool.nbytes_per_lane(), cfg.state_nbytes() / 3);
+    }
+}

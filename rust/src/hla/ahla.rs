@@ -1,0 +1,280 @@
+//! Asymmetric HLA (§6): streaming state (Theorem 6.1 / Algorithm 2) and the
+//! chunk-scan monoid (Eq. 6.2) with the plain-R correction (DESIGN.md
+//! erratum #3: R^{KQ} must compose *undecayed* for the decayed operator to
+//! match Algorithm 2; at γ = 1 both conventions coincide).
+
+use crate::tensor::{ops, Mat, Scalar};
+
+use super::scan::Monoid;
+use super::HlaOptions;
+
+/// AHLA state (per head): P [d,dv], m [d], E [d,dv], n [d].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AhlaState<T> {
+    pub p: Mat<T>,
+    pub m: Vec<T>,
+    pub e: Mat<T>,
+    pub n: Vec<T>,
+}
+
+impl<T: Scalar> AhlaState<T> {
+    pub fn new(d: usize, dv: usize) -> Self {
+        AhlaState {
+            p: Mat::zeros(d, dv),
+            m: vec![T::ZERO; d],
+            e: Mat::zeros(d, dv),
+            n: vec![T::ZERO; d],
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        std::mem::size_of::<T>()
+            * (self.p.data.len() + self.m.len() + self.e.data.len() + self.n.len())
+    }
+
+    /// Algorithm 2's update: P/m first, then E/n with the inclusive P/m.
+    pub fn step(&mut self, q: &[T], k: &[T], v: &[T], gamma: T) {
+        if gamma != T::ONE {
+            self.p.scale(gamma);
+            ops::scale(gamma, &mut self.m);
+        }
+        self.p.add_outer(T::ONE, k, v);
+        ops::axpy(T::ONE, k, &mut self.m);
+        let r = self.p.t_matvec(q); // q^T P_t
+        let s = ops::dot(q, &self.m); // q^T m_t
+        if gamma != T::ONE {
+            self.e.scale(gamma);
+            ops::scale(gamma, &mut self.n);
+        }
+        self.e.add_outer(T::ONE, k, &r);
+        ops::axpy(s, k, &mut self.n);
+    }
+
+    pub fn output(&self, q: &[T], opts: &HlaOptions<T>) -> Vec<T> {
+        let mut num = self.e.t_matvec(q);
+        let den = ops::dot(q, &self.n);
+        opts.norm.apply(&mut num, den, opts.eps);
+        num
+    }
+}
+
+/// Full-sequence serial AHLA.
+pub fn ahla_serial<T: Scalar>(q: &Mat<T>, k: &Mat<T>, v: &Mat<T>, opts: &HlaOptions<T>) -> Mat<T> {
+    let (n, d, dv) = (q.rows, q.cols, v.cols);
+    let mut st = AhlaState::new(d, dv);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        st.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+        out.row_mut(t).copy_from_slice(&st.output(q.row(t), opts));
+    }
+    out
+}
+
+/// Materialized oracle (Eq. 6.1): ((A A) ∘ L) V with A = L ∘ QKᵀ, γ = 1.
+pub fn ahla_quadratic<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    assert_eq!(opts.gamma, T::ONE, "quadratic oracle requires gamma == 1");
+    let n = q.rows;
+    let mut a = q.matmul_t(k);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            a[(i, j)] = T::ZERO;
+        }
+    }
+    let aa = a.matmul(&a);
+    let mut out = Mat::zeros(n, v.cols);
+    for t in 0..n {
+        let mut acc = vec![T::ZERO; v.cols];
+        let mut den = T::ZERO;
+        for j in 0..=t {
+            ops::axpy(aa[(t, j)], v.row(j), &mut acc);
+            den += aa[(t, j)];
+        }
+        opts.norm.apply(&mut acc, den, opts.eps);
+        out.row_mut(t).copy_from_slice(&acc);
+    }
+    out
+}
+
+/// AHLA segment summary: (R̃, P, m, E, n, ρ) — R̃ composes undecayed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegA<T> {
+    pub r: Mat<T>,
+    pub p: Mat<T>,
+    pub m: Vec<T>,
+    pub e: Mat<T>,
+    pub n: Vec<T>,
+    pub rho: T,
+}
+
+impl<T: Scalar> SegA<T> {
+    pub fn empty(d: usize, dv: usize) -> Self {
+        SegA {
+            r: Mat::zeros(d, d),
+            p: Mat::zeros(d, dv),
+            m: vec![T::ZERO; d],
+            e: Mat::zeros(d, dv),
+            n: vec![T::ZERO; d],
+            rho: T::ONE,
+        }
+    }
+
+    /// Single-token segment: E uses the token's own inclusive P (= k vᵀ).
+    pub fn token(q: &[T], k: &[T], v: &[T], gamma: T) -> Self {
+        let (d, dv) = (q.len(), v.len());
+        let mut seg = SegA::empty(d, dv);
+        seg.r.add_outer(T::ONE, k, q);
+        seg.p.add_outer(T::ONE, k, v);
+        seg.m.copy_from_slice(k);
+        let qk = ops::dot(q, k);
+        let scaled_v: Vec<T> = v.iter().map(|&x| x * qk).collect();
+        seg.e.add_outer(T::ONE, k, &scaled_v);
+        for (ni, &ki) in seg.n.iter_mut().zip(k) {
+            *ni = qk * ki;
+        }
+        seg.rho = gamma;
+        seg
+    }
+
+    pub fn as_state(&self) -> AhlaState<T> {
+        AhlaState { p: self.p.clone(), m: self.m.clone(), e: self.e.clone(), n: self.n.clone() }
+    }
+}
+
+impl<T: Scalar> Monoid for SegA<T> {
+    fn identity_like(&self) -> Self {
+        SegA::empty(self.r.rows, self.p.cols)
+    }
+
+    fn combine(&self, rhs: &Self) -> Self {
+        let (a, b) = (self, rhs);
+        let rb = b.rho;
+        let mut pa = a.p.clone();
+        pa.scale(rb);
+        let ma: Vec<T> = a.m.iter().map(|&x| x * rb).collect();
+        // E = ρ_B E_A + E_B + R̃_B (ρ_B P_A)
+        let mut e = a.e.clone();
+        e.scale(rb);
+        e.add_scaled(T::ONE, &b.e);
+        e.add_scaled(T::ONE, &b.r.matmul(&pa));
+        // n = ρ_B n_A + n_B + R̃_B (ρ_B m_A)
+        let mut n: Vec<T> = a.n.iter().map(|&x| x * rb).collect();
+        ops::axpy(T::ONE, &b.n, &mut n);
+        ops::axpy(T::ONE, &b.r.matvec(&ma), &mut n);
+        // moments
+        let mut p = pa;
+        p.add_scaled(T::ONE, &b.p);
+        let mut m = ma;
+        ops::axpy(T::ONE, &b.m, &mut m);
+        let mut r = a.r.clone();
+        r.add_scaled(T::ONE, &b.r);
+        SegA { r, p, m, e, n, rho: a.rho * b.rho }
+    }
+}
+
+/// Full-sequence outputs via the exclusive Blelloch scan + local inclusion.
+pub fn ahla_blelloch<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    let (n, dv) = (q.rows, v.cols);
+    let leaves: Vec<SegA<T>> =
+        (0..n).map(|t| SegA::token(q.row(t), k.row(t), v.row(t), opts.gamma)).collect();
+    let prefixes = super::scan::blelloch_exclusive(&leaves);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        let st = prefixes[t].combine(&leaves[t]).as_state();
+        out.row_mut(t).copy_from_slice(&st.output(q.row(t), opts));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hla::state2::hla2_serial;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, n: usize, d: usize, dv: usize) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+        let s = 1.0 / (d as f64).sqrt();
+        let mk = |rng: &mut Rng, r: usize, c: usize, sc: f64| {
+            let mut m = Mat::zeros(r, c);
+            for x in &mut m.data {
+                *x = rng.normal() * sc;
+            }
+            m
+        };
+        (mk(rng, n, d, s), mk(rng, n, d, s), mk(rng, n, dv, 1.0))
+    }
+
+    #[test]
+    fn serial_matches_quadratic() {
+        testing::quick("ahla serial==quadratic (Thm 6.1)", 20, |rng, _| {
+            let n = rng.range(1, 24);
+            let (q, k, v) = random(rng, n, 4, 4);
+            let opts = HlaOptions::default();
+            let a = ahla_serial(&q, &k, &v, &opts);
+            let b = ahla_quadratic(&q, &k, &v, &opts);
+            testing::assert_close(&a.data, &b.data, 1e-10, "ahla")
+        });
+    }
+
+    #[test]
+    fn scan_matches_serial_with_decay() {
+        testing::quick("ahla scan==serial (Eq 6.2)", 20, |rng, _| {
+            let n = rng.range(1, 33);
+            let (q, k, v) = random(rng, n, 3, 5);
+            for gamma in [1.0, 0.85] {
+                let opts = HlaOptions::default().with_gamma(gamma);
+                let serial = ahla_serial(&q, &k, &v, &opts);
+                let tree = ahla_blelloch(&q, &k, &v, &opts);
+                testing::assert_close(&serial.data, &tree.data, 1e-10, "scan")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monoid_associative() {
+        testing::quick("segA associativity", 24, |rng, _| {
+            let seg = |rng: &mut Rng| {
+                let len = rng.range(1, 4);
+                let (q, k, v) = random(rng, len, 3, 3);
+                (0..len)
+                    .map(|t| SegA::<f64>::token(q.row(t), k.row(t), v.row(t), 0.9))
+                    .reduce(|a, b| a.combine(&b))
+                    .unwrap()
+            };
+            let (a, b, c) = (seg(rng), seg(rng), seg(rng));
+            let l = a.combine(&b).combine(&c);
+            let r = a.combine(&b.combine(&c));
+            testing::assert_close(&l.e.data, &r.e.data, 1e-11, "E")?;
+            testing::assert_close(&l.n, &r.n, 1e-11, "n")
+        });
+    }
+
+    #[test]
+    fn differs_from_symmetric_second_order() {
+        let mut rng = Rng::new(12);
+        let (q, k, v) = random(&mut rng, 12, 4, 4);
+        let opts = HlaOptions::default();
+        let asym = ahla_serial(&q, &k, &v, &opts);
+        let sym = hla2_serial(&q, &k, &v, &opts);
+        assert!(asym.max_abs_diff(&sym) > 1e-8, "AHLA should differ from AAᵀV (§6.3)");
+    }
+
+    #[test]
+    fn state_cost_is_first_order_sized() {
+        // §6.1 cost note: AHLA's streaming state is O(d dv + d), like
+        // first-order linear attention (no d x d metric).
+        let st = AhlaState::<f32>::new(64, 64);
+        assert_eq!(st.nbytes(), 4 * (2 * 64 * 64 + 2 * 64));
+    }
+}

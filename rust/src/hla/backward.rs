@@ -1,0 +1,282 @@
+//! Reverse-mode algebra for masked second-order HLA (§4, "Backward for
+//! gradients"): the vector–Jacobian adjoint of the forward recurrence,
+//! computed by a reverse sweep with forward-state checkpointing at chunk
+//! boundaries — gradients match the serial recurrence exactly (Theorem 4.1
+//! + chain rule), verified here against central finite differences.
+//!
+//! Forward (monoid-consistent decayed step, `state2::Hla2State::step`):
+//!
+//!   G_t = γ(G_{t-1} + k_t k_tᵀ C_{t-1})      h_t = γ(h_{t-1} + k_t k_tᵀ m_{t-1})
+//!   S_t = γS_{t-1} + k_t k_tᵀ                C_t = γC_{t-1} + q_t v_tᵀ
+//!   m_t = γm_{t-1} + q_t
+//!   o_t = q_tᵀ(S_t C_t − G_t)  [/ (q_tᵀ(S_t m_t − h_t) + ε) when normalized]
+//!
+//! The adjoint runs t = n..1 carrying cotangents (S̄, C̄, m̄, Ḡ, h̄) and
+//! producing (q̄, k̄, v̄) per token.  Checkpointing: forward states are
+//! stored every `ckpt` steps and recomputed within a segment, giving the
+//! O(n/w) memory / O(n·w) recompute tradeoff of the paper's tile scheme.
+
+use crate::tensor::{ops, Mat, Scalar};
+
+use super::state2::Hla2State;
+use super::{HlaOptions, NormMode};
+
+/// Gradients of a scalar loss w.r.t. the inputs.
+#[derive(Debug, Clone)]
+pub struct Hla2Grads<T> {
+    pub dq: Mat<T>,
+    pub dk: Mat<T>,
+    pub dv: Mat<T>,
+}
+
+/// Reverse-mode gradient of `sum(dout ⊙ hla2_serial(q, k, v))`.
+///
+/// `ckpt` is the checkpoint interval (forward states kept every `ckpt`
+/// tokens; segment states recomputed during the reverse sweep).
+/// Supports `NormMode::None` and `NormMode::Linear` (the paper's Eq. 3.4);
+/// masked form only (the default operator).
+pub fn hla2_backward<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    dout: &Mat<T>,
+    opts: &HlaOptions<T>,
+    ckpt: usize,
+) -> Hla2Grads<T> {
+    assert!(opts.masked, "backward implemented for the masked operator");
+    assert!(
+        matches!(opts.norm, NormMode::None | NormMode::Linear),
+        "backward supports none/linear normalization"
+    );
+    let (n, d, dv) = (q.rows, q.cols, v.cols);
+    let ckpt = ckpt.max(1);
+    let gamma = opts.gamma;
+
+    // forward: checkpoint the state every `ckpt` tokens (state *before*
+    // token index c*ckpt is stored at checkpoint c)
+    let mut checkpoints: Vec<Hla2State<T>> = Vec::with_capacity(n / ckpt + 1);
+    let mut st = Hla2State::new(d, dv);
+    for t in 0..n {
+        if t % ckpt == 0 {
+            checkpoints.push(st.clone());
+        }
+        st.step(q.row(t), k.row(t), v.row(t), gamma);
+    }
+
+    // cotangents of the carried state, initialized to zero at t = n
+    let mut sb = Mat::<T>::zeros(d, d); // S̄
+    let mut cb = Mat::<T>::zeros(d, dv); // C̄
+    let mut mb = vec![T::ZERO; d]; // m̄
+    let mut gb = Mat::<T>::zeros(d, dv); // Ḡ
+    let mut hb = vec![T::ZERO; d]; // h̄
+    let mut grads =
+        Hla2Grads { dq: Mat::zeros(n, d), dk: Mat::zeros(n, d), dv: Mat::zeros(n, dv) };
+
+    // reverse sweep over checkpointed segments
+    let n_ck = checkpoints.len();
+    for c in (0..n_ck).rev() {
+        let lo = c * ckpt;
+        let hi = ((c + 1) * ckpt).min(n);
+        // recompute the forward states inside this segment: states[i] is the
+        // *inclusive* state after token lo+i; pre[i] the state before it.
+        let mut pre: Vec<Hla2State<T>> = Vec::with_capacity(hi - lo);
+        let mut seg = checkpoints[c].clone();
+        for t in lo..hi {
+            pre.push(seg.clone());
+            seg.step(q.row(t), k.row(t), v.row(t), gamma);
+        }
+        for t in (lo..hi).rev() {
+            let prev = &pre[t - lo];
+            // recompute the inclusive state at t from prev (cheap, rank-1)
+            let mut cur = prev.clone();
+            cur.step(q.row(t), k.row(t), v.row(t), gamma);
+            let (qt, kt, vt) = (q.row(t), k.row(t), v.row(t));
+            let go = dout.row(t); // ∂L/∂o_t
+
+            // ---- output adjoint: o = u C − qᵀG (num), den = u m − qᵀh ----
+            // u = qᵀS (+ λq)
+            let mut u = cur.s.t_matvec(qt);
+            if opts.lambda != T::ZERO {
+                ops::axpy(opts.lambda, qt, &mut u);
+            }
+            let num: Vec<T> = {
+                let mut x = cur.c.t_matvec(&u);
+                let qg = cur.g.t_matvec(qt);
+                for (a, b) in x.iter_mut().zip(&qg) {
+                    *a = *a - *b;
+                }
+                x
+            };
+            let (go_num, den_adj): (Vec<T>, T) = match opts.norm {
+                NormMode::None => (go.to_vec(), T::ZERO),
+                NormMode::Linear => {
+                    let den =
+                        ops::dot(&u, &cur.m) - ops::dot(qt, &cur.h) + opts.eps;
+                    // o = num/den ; n̄um = ḡo/den ; d̄en = −(ḡo·num)/den²
+                    let inv = T::ONE / den;
+                    let gnum: Vec<T> = go.iter().map(|&x| x * inv).collect();
+                    let gden = -ops::dot(go, &num) * inv * inv;
+                    (gnum, gden)
+                }
+                NormMode::Abs => unreachable!(),
+            };
+            // num = uᵀC − qᵀG:
+            //   ū += C ḡnum ; C̄ += u ḡnumᵀ ; q̄ −= G ḡnum ; Ḡ −= q ḡnumᵀ
+            let mut ubar = cur.c.matvec(&go_num);
+            cb.add_outer(T::ONE, &u, &go_num);
+            let g_gnum = cur.g.matvec(&go_num);
+            for (dqi, gi) in grads.dq.row_mut(t).iter_mut().zip(&g_gnum) {
+                *dqi = *dqi - *gi;
+            }
+            gb.add_outer(-T::ONE, qt, &go_num);
+            // den = uᵀm − qᵀh (+ε):
+            if den_adj != T::ZERO {
+                ops::axpy(den_adj, &cur.m, &mut ubar);
+                ops::axpy(den_adj, &u, &mut mb);
+                ops::axpy(-den_adj, &cur.h, grads.dq.row_mut(t));
+                ops::axpy(-den_adj, qt, &mut hb);
+            }
+            // u = Sᵀq (+λq):  S̄ += q ūᵀ ; q̄ += S ū (+ λū)
+            sb.add_outer(T::ONE, qt, &ubar);
+            let s_ubar = cur.s.matvec(&ubar);
+            ops::axpy(T::ONE, &s_ubar, grads.dq.row_mut(t));
+            if opts.lambda != T::ZERO {
+                ops::axpy(opts.lambda, &ubar, grads.dq.row_mut(t));
+            }
+
+            // ---- step adjoint (reverse of Hla2State::step) ----
+            // m_t = γ m_prev + q  :  q̄ += m̄ ; m̄_prev = γ m̄
+            ops::axpy(T::ONE, &mb, grads.dq.row_mut(t));
+            // C_t = γ C_prev + q vᵀ : q̄ += C̄ v ; v̄ += C̄ᵀ q ; C̄_prev = γC̄
+            ops::axpy(T::ONE, &cb.matvec(vt), grads.dq.row_mut(t));
+            ops::axpy(T::ONE, &cb.t_matvec(qt), grads.dv.row_mut(t));
+            // S_t = γ S_prev + k kᵀ : k̄ += (S̄ + S̄ᵀ) k ; S̄_prev = γS̄
+            let sk = sb.matvec(kt);
+            let stk = sb.t_matvec(kt);
+            ops::axpy(T::ONE, &sk, grads.dk.row_mut(t));
+            ops::axpy(T::ONE, &stk, grads.dk.row_mut(t));
+            // h_t = γ(h_prev + (kᵀ m_prev) k):
+            //   k̄ += γ[(h̄·k) m_prev-term + (kᵀm_prev) h̄] ; m̄_prev += γ(h̄·k) k
+            let hk = ops::dot(&hb, kt);
+            let km_prev = ops::dot(kt, &prev.m);
+            ops::axpy(gamma * hk, &prev.m, grads.dk.row_mut(t));
+            ops::axpy(gamma * km_prev, &hb, grads.dk.row_mut(t));
+            // G_t = γ(G_prev + k (kᵀ C_prev)):
+            //   k̄ += γ[Ḡ (C_prevᵀk)-row + C_prev (Ḡᵀ... ] — with w = kᵀC_prev:
+            //   k̄ += γ[Ḡ w + C_prev (Ḡᵀ k)] ; C̄_prev += γ k (Ḡᵀ k)ᵀ... careful:
+            //   ∂/∂C_prev [k wᵀ]·Ḡ = k kᵀ Ḡ  (since w = C_prevᵀ k)
+            let w = prev.c.t_matvec(kt); // kᵀ C_prev
+            let gk = gb.t_matvec(kt); // Ḡᵀ k  [dv]
+            ops::axpy(gamma, &gb.matvec(&w), grads.dk.row_mut(t));
+            ops::axpy(gamma, &prev.c.matvec(&gk), grads.dk.row_mut(t));
+            // carry cotangents to t-1 (all decayed by γ; G/h feed C/m)
+            // C̄_prev = γC̄ + γ k gkᵀ ;  m̄_prev = γm̄ + γ hk k
+            cb.scale(gamma);
+            cb.add_outer(gamma, kt, &gk);
+            ops::scale(gamma, &mut mb);
+            ops::axpy(gamma * hk, kt, &mut mb);
+            sb.scale(gamma);
+            gb.scale(gamma);
+            ops::scale(gamma, &mut hb);
+        }
+    }
+    grads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hla::state2::hla2_serial;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, n: usize, d: usize, dv: usize) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+        let s = 1.0 / (d as f64).sqrt();
+        let mk = |rng: &mut Rng, r: usize, c: usize, sc: f64| {
+            let mut m = Mat::zeros(r, c);
+            for x in &mut m.data {
+                *x = rng.normal() * sc;
+            }
+            m
+        };
+        (mk(rng, n, d, s), mk(rng, n, d, s), mk(rng, n, dv, 1.0))
+    }
+
+    /// scalar loss = Σ dout ⊙ forward(q,k,v)
+    fn loss(q: &Mat<f64>, k: &Mat<f64>, v: &Mat<f64>, dout: &Mat<f64>, opts: &HlaOptions<f64>) -> f64 {
+        let out = hla2_serial(q, k, v, opts);
+        ops::dot(&out.data, &dout.data)
+    }
+
+    fn fd_check(opts: HlaOptions<f64>, ckpt: usize) {
+        let mut rng = Rng::new(0xBAC);
+        let (n, d, dv) = (10, 3, 4);
+        let (q, k, v) = random(&mut rng, n, d, dv);
+        let mut dout = Mat::<f64>::zeros(n, dv);
+        for x in &mut dout.data {
+            *x = rng.normal();
+        }
+        let grads = hla2_backward(&q, &k, &v, &dout, &opts, ckpt);
+        let eps = 1e-6;
+        let mut check = |mat: &Mat<f64>, grad: &Mat<f64>, which: &str| {
+            for idx in [0usize, mat.data.len() / 2, mat.data.len() - 1] {
+                let mut plus = mat.clone();
+                plus.data[idx] += eps;
+                let mut minus = mat.clone();
+                minus.data[idx] -= eps;
+                let (lp, lm) = match which {
+                    "q" => (loss(&plus, &k, &v, &dout, &opts), loss(&minus, &k, &v, &dout, &opts)),
+                    "k" => (loss(&q, &plus, &v, &dout, &opts), loss(&q, &minus, &v, &dout, &opts)),
+                    _ => (loss(&q, &k, &plus, &dout, &opts), loss(&q, &k, &minus, &dout, &opts)),
+                };
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grad.data[idx];
+                let denom = 1.0f64.max(fd.abs()).max(an.abs());
+                assert!(
+                    (fd - an).abs() / denom < 1e-5,
+                    "{which}[{idx}]: fd {fd} vs analytic {an} (opts {opts:?})"
+                );
+            }
+        };
+        check(&q, &grads.dq, "q");
+        check(&k, &grads.dk, "k");
+        check(&v, &grads.dv, "v");
+    }
+
+    #[test]
+    fn gradcheck_unnormalized_gamma1() {
+        fd_check(HlaOptions::default(), 4);
+    }
+
+    #[test]
+    fn gradcheck_decayed() {
+        fd_check(HlaOptions::default().with_gamma(0.9), 3);
+    }
+
+    #[test]
+    fn gradcheck_normalized_linear() {
+        fd_check(HlaOptions::default().with_norm(NormMode::Linear).with_gamma(0.95), 4);
+    }
+
+    #[test]
+    fn gradcheck_with_ridge() {
+        fd_check(HlaOptions::default().with_lambda(0.2), 5);
+    }
+
+    #[test]
+    fn checkpoint_interval_does_not_change_gradients() {
+        let mut rng = Rng::new(7);
+        let (q, k, v) = random(&mut rng, 17, 3, 3);
+        let mut dout = Mat::<f64>::zeros(17, 3);
+        for x in &mut dout.data {
+            *x = rng.normal();
+        }
+        let opts = HlaOptions::default().with_gamma(0.97);
+        let g1 = hla2_backward(&q, &k, &v, &dout, &opts, 1);
+        let g5 = hla2_backward(&q, &k, &v, &dout, &opts, 5);
+        let g17 = hla2_backward(&q, &k, &v, &dout, &opts, 17);
+        testing::assert_close(&g1.dq.data, &g5.dq.data, 1e-12, "ckpt dq").unwrap();
+        testing::assert_close(&g1.dk.data, &g17.dk.data, 1e-12, "ckpt dk").unwrap();
+        testing::assert_close(&g5.dv.data, &g17.dv.data, 1e-12, "ckpt dv").unwrap();
+    }
+}

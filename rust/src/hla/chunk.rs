@@ -1,0 +1,308 @@
+//! Two-level chunk-parallel driver (§4.2, Figure 1C): intra-chunk scans in
+//! parallel worker threads, an exclusive inter-chunk scan over chunk
+//! summaries, then per-token merge — the training-time execution skeleton
+//! shared by second order, AHLA and (γ=1) third order.
+
+use crate::tensor::{Mat, Scalar};
+
+use super::ahla::SegA;
+use super::monoid2::Seg2;
+use super::scan::{blelloch_exclusive, inclusive_scan, Monoid};
+use super::HlaOptions;
+
+/// Generic two-level chunked scan.
+///
+/// * `leaves`   — one monoid element per token.
+/// * `chunk`    — chunk width w.
+/// * `threads`  — worker threads for the intra-chunk phase (≥ 1).
+/// * `emit(t, inclusive_state)` — called for every token with its inclusive
+///   prefix state, in order within each chunk (chunks may emit in parallel,
+///   so `emit` receives a per-chunk output row instead of locking).
+pub fn chunked_scan<M, T, F>(
+    leaves: &[M],
+    chunk: usize,
+    threads: usize,
+    dv: usize,
+    emit: F,
+) -> Mat<T>
+where
+    M: Monoid + Send + Sync,
+    T: Scalar + Send + Sync,
+    F: Fn(usize, &M, &mut [T]) + Send + Sync,
+{
+    let n = leaves.len();
+    let mut out = Mat::zeros(n, dv);
+    if n == 0 {
+        return out;
+    }
+    let nc = n.div_ceil(chunk);
+
+    // phase 1: per-chunk summaries (parallel)
+    let mut summaries: Vec<Option<M>> = vec![None; nc];
+    {
+        let summaries_slots: Vec<_> = summaries.iter_mut().collect();
+        parallel_chunks(summaries_slots, threads, |c, slot| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut acc = leaves[lo].clone();
+            for leaf in &leaves[lo + 1..hi] {
+                acc = acc.combine(leaf);
+            }
+            **slot = Some(acc);
+        });
+    }
+    let summaries: Vec<M> = summaries.into_iter().map(|s| s.unwrap()).collect();
+
+    // phase 2: exclusive scan over the B_c chunk summaries
+    let carries = blelloch_exclusive(&summaries);
+
+    // phase 3: intra-chunk inclusive scans + merge + emit (parallel)
+    {
+        let rows: Vec<(usize, &mut [T])> = {
+            // split `out` into per-chunk row bands
+            let mut bands = Vec::with_capacity(nc);
+            let mut rest = out.data.as_mut_slice();
+            for c in 0..nc {
+                let lo = c * chunk;
+                let hi = (lo + chunk).min(n);
+                let (band, tail) = rest.split_at_mut((hi - lo) * dv);
+                bands.push((c, band));
+                rest = tail;
+            }
+            bands
+        };
+        parallel_chunks(rows, threads, |_, (c, band)| {
+            let c = *c;
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let local = inclusive_scan(&leaves[lo..hi]);
+            for (i, loc) in local.iter().enumerate() {
+                let merged = carries[c].combine(loc);
+                let row = &mut band[i * dv..(i + 1) * dv];
+                emit(lo + i, &merged, row);
+            }
+        });
+    }
+    out
+}
+
+/// Run `f(index, item)` over items on up to `threads` scoped threads.
+fn parallel_chunks<I, F>(items: Vec<I>, threads: usize, f: F)
+where
+    I: Send,
+    F: Fn(usize, &mut I) + Send + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || items.len() <= 1 {
+        for (i, mut item) in items.into_iter().enumerate() {
+            f(i, &mut item);
+        }
+        return;
+    }
+    let mut indexed: Vec<(usize, I)> = items.into_iter().enumerate().collect();
+    let per = indexed.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = indexed.as_mut_slice();
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (batch, tail) = rest.split_at_mut(take);
+            rest = tail;
+            scope.spawn(move || {
+                for (i, item) in batch.iter_mut() {
+                    f(*i, item);
+                }
+            });
+        }
+    });
+}
+
+/// Chunk-parallel masked second-order HLA (outputs identical to serial).
+///
+/// Hot-path layout (EXPERIMENTS.md §Perf): chunk summaries are built by
+/// *serial rank-1 stepping* (not per-token monoid combines, which cost an
+/// O(d³) matmul + five matrix clones per token), the exclusive Blelloch
+/// scan runs over the B_c summaries only, and each chunk then serial-steps
+/// from its carried-in state.  ~20× faster than the naive monoid
+/// materialization at d=32 while producing bit-identical activations.
+pub fn hla2_chunked<T: Scalar + Send + Sync>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+    chunk: usize,
+    threads: usize,
+) -> Mat<T> {
+    let n = q.rows;
+    let (d, dv) = (q.cols, v.cols);
+    let mut out = Mat::zeros(n, dv);
+    if n == 0 {
+        return out;
+    }
+    let nc = n.div_ceil(chunk);
+
+    // phase 1: chunk summaries via serial stepping (rank-1 updates only)
+    let mut summaries: Vec<Option<Seg2<T>>> = vec![None; nc];
+    {
+        let slots: Vec<_> = summaries.iter_mut().collect();
+        parallel_chunks(slots, threads, |c, slot| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut st = crate::hla::state2::Hla2State::new(d, dv);
+            let mut stp = Mat::zeros(d, d); // plain S-tilde
+            let mut rho = T::ONE;
+            for t in lo..hi {
+                st.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                stp.add_outer(T::ONE, k.row(t), k.row(t));
+                rho = rho * opts.gamma;
+            }
+            **slot = Some(Seg2 { s: st.s, c: st.c, m: st.m, g: st.g, h: st.h, st: stp, rho });
+        });
+    }
+    let summaries: Vec<Seg2<T>> = summaries.into_iter().map(|s| s.unwrap()).collect();
+
+    // phase 2: exclusive scan across the B_c chunk summaries
+    let carries = blelloch_exclusive(&summaries);
+
+    // phase 3: per-chunk serial recurrence from the carried-in state
+    {
+        let mut bands = Vec::with_capacity(nc);
+        let mut rest = out.data.as_mut_slice();
+        for c in 0..nc {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let (band, tail) = rest.split_at_mut((hi - lo) * dv);
+            bands.push((c, band));
+            rest = tail;
+        }
+        parallel_chunks(bands, threads, |_, (c, band)| {
+            let c = *c;
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut st = carries[c].as_state();
+            for (i, t) in (lo..hi).enumerate() {
+                st.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                let o = st.output(q.row(t), opts);
+                band[i * dv..(i + 1) * dv].copy_from_slice(&o);
+            }
+        });
+    }
+    out
+}
+
+/// Chunk-parallel AHLA (same hot-path layout as [`hla2_chunked`]).
+pub fn ahla_chunked<T: Scalar + Send + Sync>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+    chunk: usize,
+    threads: usize,
+) -> Mat<T> {
+    let n = q.rows;
+    let (d, dv) = (q.cols, v.cols);
+    let mut out = Mat::zeros(n, dv);
+    if n == 0 {
+        return out;
+    }
+    let nc = n.div_ceil(chunk);
+    let mut summaries: Vec<Option<SegA<T>>> = vec![None; nc];
+    {
+        let slots: Vec<_> = summaries.iter_mut().collect();
+        parallel_chunks(slots, threads, |c, slot| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut st = crate::hla::ahla::AhlaState::new(d, dv);
+            let mut r = Mat::zeros(d, d); // plain R^KQ
+            let mut rho = T::ONE;
+            for t in lo..hi {
+                st.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                r.add_outer(T::ONE, k.row(t), q.row(t));
+                rho = rho * opts.gamma;
+            }
+            **slot = Some(SegA { r, p: st.p, m: st.m, e: st.e, n: st.n, rho });
+        });
+    }
+    let summaries: Vec<SegA<T>> = summaries.into_iter().map(|s| s.unwrap()).collect();
+    let carries = blelloch_exclusive(&summaries);
+    {
+        let mut bands = Vec::with_capacity(nc);
+        let mut rest = out.data.as_mut_slice();
+        for c in 0..nc {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let (band, tail) = rest.split_at_mut((hi - lo) * dv);
+            bands.push((c, band));
+            rest = tail;
+        }
+        parallel_chunks(bands, threads, |_, (c, band)| {
+            let c = *c;
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut st = carries[c].as_state();
+            for (i, t) in (lo..hi).enumerate() {
+                st.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                let o = st.output(q.row(t), opts);
+                band[i * dv..(i + 1) * dv].copy_from_slice(&o);
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hla::ahla::ahla_serial;
+    use crate::hla::state2::hla2_serial;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, n: usize, d: usize, dv: usize) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+        let s = 1.0 / (d as f64).sqrt();
+        let mk = |rng: &mut Rng, r: usize, c: usize, sc: f64| {
+            let mut m = Mat::zeros(r, c);
+            for x in &mut m.data {
+                *x = rng.normal() * sc;
+            }
+            m
+        };
+        (mk(rng, n, d, s), mk(rng, n, d, s), mk(rng, n, dv, 1.0))
+    }
+
+    #[test]
+    fn chunked_matches_serial_all_widths() {
+        testing::quick("chunked==serial (Fig 1C)", 12, |rng, _| {
+            let n = rng.range(1, 70);
+            let (q, k, v) = random(rng, n, 4, 4);
+            for gamma in [1.0, 0.92] {
+                let opts = HlaOptions::default().with_gamma(gamma);
+                let want = hla2_serial(&q, &k, &v, &opts);
+                for chunk in [1, 3, 8, 64] {
+                    for threads in [1, 4] {
+                        let got = hla2_chunked(&q, &k, &v, &opts, chunk, threads);
+                        testing::assert_close(
+                            &want.data,
+                            &got.data,
+                            1e-10,
+                            &format!("w={chunk} th={threads}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ahla_chunked_matches_serial() {
+        testing::quick("ahla chunked==serial", 8, |rng, _| {
+            let n = rng.range(1, 50);
+            let (q, k, v) = random(rng, n, 3, 5);
+            let opts = HlaOptions::default().with_gamma(0.9);
+            let want = ahla_serial(&q, &k, &v, &opts);
+            let got = ahla_chunked(&q, &k, &v, &opts, 8, 3);
+            testing::assert_close(&want.data, &got.data, 1e-10, "ahla chunked")
+        });
+    }
+}

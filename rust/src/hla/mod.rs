@@ -1,0 +1,119 @@
+//! The paper's algebra in pure Rust: streaming states, associative
+//! (semidirect-product) monoids, Blelloch scans and the chunk-parallel
+//! driver, all generic over `f32`/`f64`.
+//!
+//! This is both (a) the reference/verification substrate for the AOT HLO
+//! path and (b) the engine behind the CPU baselines and the paper
+//! experiment harnesses (benches E1–E5, E9, E12).
+//!
+//! Module map (paper section in parens):
+//! * [`state2`]  — masked second-order streaming state (Thm 3.1, Alg 1, §4.3)
+//! * [`monoid2`] — (decayed) semidirect product ⊕ (Eq 4.1) + S-tilde correction
+//! * [`ahla`]    — asymmetric variant streaming + monoid (§6, Thm 6.1, Eq 6.2)
+//! * [`state3`]  — third order: canonical rank-1 form and the paper-literal
+//!                 Eq. 7.5 recurrence (Alg 3)
+//! * [`monoid3`] — paper's ⊗₃ with segment maps, dense *and* factored (Alg 4,
+//!                 Thm 7.2) + the cheap canonical third-order monoid
+//! * [`scan`]    — generic exclusive/inclusive Blelloch scan over any monoid
+//!                 (Thm 4.1, Rmk 4.2), serial and multi-threaded chunked
+//! * [`chunk`]   — two-level intra-/inter-chunk parallel driver (§4.2, Fig 1C)
+//! * [`packed`]  — packed symmetric storage for S (§5.2)
+
+pub mod ahla;
+pub mod backward;
+pub mod chunk;
+pub mod monoid2;
+pub mod monoid3;
+pub mod packed;
+pub mod scan;
+pub mod state2;
+pub mod state3;
+
+use crate::tensor::Scalar;
+
+/// How (and whether) to normalize operator outputs (§3, Eqs. 3.2/3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormMode {
+    /// Unnormalized — the paper's default operator.
+    None,
+    /// Divide by `den + eps` (Eq. 3.2/3.4 verbatim).
+    Linear,
+    /// Divide by `|den| + eps` (sign-safe; used by the LM configs).
+    Abs,
+}
+
+impl NormMode {
+    pub fn apply<T: Scalar>(self, num: &mut [T], den: T, eps: T) {
+        match self {
+            NormMode::None => {}
+            NormMode::Linear => {
+                let inv = T::ONE / (den + eps);
+                for x in num {
+                    *x = *x * inv;
+                }
+            }
+            NormMode::Abs => {
+                let inv = T::ONE / (den.abs_() + eps);
+                for x in num {
+                    *x = *x * inv;
+                }
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NormMode> {
+        match s {
+            "none" => Some(NormMode::None),
+            "linear" => Some(NormMode::Linear),
+            "abs" => Some(NormMode::Abs),
+            _ => None,
+        }
+    }
+}
+
+/// Operator options shared by every HLA variant.
+#[derive(Debug, Clone, Copy)]
+pub struct HlaOptions<T> {
+    /// Exponential decay γ ∈ (0, 1] (§4.3).
+    pub gamma: T,
+    /// Ridge λ (Algorithm 1's `S_eff = S + λI`); second order only.
+    pub lambda: T,
+    pub norm: NormMode,
+    pub eps: T,
+    /// `false` selects the prefix ("unmasked") Eq. 3.1 operator.
+    pub masked: bool,
+}
+
+impl<T: Scalar> Default for HlaOptions<T> {
+    fn default() -> Self {
+        HlaOptions {
+            gamma: T::ONE,
+            lambda: T::ZERO,
+            norm: NormMode::None,
+            eps: T::from_f64(1e-6),
+            masked: true,
+        }
+    }
+}
+
+impl<T: Scalar> HlaOptions<T> {
+    pub fn with_gamma(mut self, gamma: f64) -> Self {
+        self.gamma = T::from_f64(gamma);
+        self
+    }
+
+    pub fn with_lambda(mut self, lambda: f64) -> Self {
+        self.lambda = T::from_f64(lambda);
+        self
+    }
+
+    pub fn with_norm(mut self, norm: NormMode) -> Self {
+        self.norm = norm;
+        self
+    }
+
+    pub fn unmasked(mut self) -> Self {
+        self.masked = false;
+        self
+    }
+}

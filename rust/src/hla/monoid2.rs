@@ -1,0 +1,222 @@
+//! Second-order segment monoid: the masked (decayed) semidirect product of
+//! §4.1–4.2, with the S-tilde correction (DESIGN.md erratum #2) that makes
+//! the decayed operator associative *and* consistent with the serial
+//! recurrence:
+//!
+//!   S_AB  = ρ_B S_A + S_B            C, m analogous
+//!   G_AB  = ρ_B G_A + G_B + S̃_B (ρ_B C_A)
+//!   h_AB  = ρ_B h_A + h_B + S̃_B (ρ_B m_A)
+//!   S̃_AB = S̃_A + S̃_B               (plain, undecayed key moment)
+//!   ρ_AB  = ρ_A ρ_B
+//!
+//! At γ = 1, S̃ = S and this is the paper's Eq. (4.1) verbatim.
+
+use crate::tensor::{ops, Mat, Scalar};
+
+use super::scan::Monoid;
+use super::state2::Hla2State;
+use super::HlaOptions;
+
+/// Segment summary for masked second-order HLA.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Seg2<T> {
+    pub s: Mat<T>,
+    pub c: Mat<T>,
+    pub m: Vec<T>,
+    pub g: Mat<T>,
+    pub h: Vec<T>,
+    /// Plain (undecayed) key moment S̃ used in the cross terms.
+    pub st: Mat<T>,
+    /// Segment attenuation ρ = γ^len.
+    pub rho: T,
+}
+
+impl<T: Scalar> Seg2<T> {
+    pub fn empty(d: usize, dv: usize) -> Self {
+        Seg2 {
+            s: Mat::zeros(d, d),
+            c: Mat::zeros(d, dv),
+            m: vec![T::ZERO; d],
+            g: Mat::zeros(d, dv),
+            h: vec![T::ZERO; d],
+            st: Mat::zeros(d, d),
+            rho: T::ONE,
+        }
+    }
+
+    /// Single-token segment T_t (G = h = 0; ρ = γ).
+    pub fn token(q: &[T], k: &[T], v: &[T], gamma: T) -> Self {
+        let (d, dv) = (q.len(), v.len());
+        let mut seg = Seg2::empty(d, dv);
+        seg.s.add_outer(T::ONE, k, k);
+        seg.st = seg.s.clone();
+        seg.c.add_outer(T::ONE, q, v);
+        seg.m.copy_from_slice(q);
+        seg.rho = gamma;
+        seg
+    }
+
+    /// View the segment (interpreted as the prefix 1..t) as a state tuple.
+    pub fn as_state(&self) -> Hla2State<T> {
+        Hla2State {
+            s: self.s.clone(),
+            c: self.c.clone(),
+            m: self.m.clone(),
+            g: self.g.clone(),
+            h: self.h.clone(),
+        }
+    }
+}
+
+impl<T: Scalar> Monoid for Seg2<T> {
+    fn identity_like(&self) -> Self {
+        Seg2::empty(self.s.rows, self.c.cols)
+    }
+
+    fn combine(&self, rhs: &Self) -> Self {
+        let a = self;
+        let b = rhs;
+        let rb = b.rho;
+        // G = ρ_B G_A + G_B + S̃_B (ρ_B C_A)
+        let mut g = a.g.clone();
+        g.scale(rb);
+        g.add_scaled(T::ONE, &b.g);
+        let mut ca = a.c.clone();
+        ca.scale(rb);
+        g.add_scaled(T::ONE, &b.st.matmul(&ca));
+        // h = ρ_B h_A + h_B + S̃_B (ρ_B m_A)
+        let mut h: Vec<T> = a.h.iter().map(|&x| x * rb).collect();
+        ops::axpy(T::ONE, &b.h, &mut h);
+        let ma: Vec<T> = a.m.iter().map(|&x| x * rb).collect();
+        ops::axpy(T::ONE, &b.st.matvec(&ma), &mut h);
+        // additive decayed moments
+        let mut s = a.s.clone();
+        s.scale(rb);
+        s.add_scaled(T::ONE, &b.s);
+        let mut c = ca; // ρ_B C_A already
+        c.add_scaled(T::ONE, &b.c);
+        let mut m = ma;
+        ops::axpy(T::ONE, &b.m, &mut m);
+        // plain S̃ adds undecayed
+        let mut st = a.st.clone();
+        st.add_scaled(T::ONE, &b.st);
+        Seg2 { s, c, m, g, h, st, rho: a.rho * b.rho }
+    }
+}
+
+/// Full-sequence outputs via an inclusive token-level scan (Fig 1C route).
+pub fn hla2_scan<T: Scalar>(q: &Mat<T>, k: &Mat<T>, v: &Mat<T>, opts: &HlaOptions<T>) -> Mat<T> {
+    let (n, dv) = (q.rows, v.cols);
+    let leaves: Vec<Seg2<T>> =
+        (0..n).map(|t| Seg2::token(q.row(t), k.row(t), v.row(t), opts.gamma)).collect();
+    let states = super::scan::inclusive_scan(&leaves);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        let o = states[t].as_state().output(q.row(t), opts);
+        out.row_mut(t).copy_from_slice(&o);
+    }
+    out
+}
+
+/// Same outputs via *exclusive Blelloch scan + local inclusion* — the
+/// paper's Algorithm 1 statement (Remark 4.2), exercising the tree scan.
+pub fn hla2_blelloch<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    let (n, dv) = (q.rows, v.cols);
+    let leaves: Vec<Seg2<T>> =
+        (0..n).map(|t| Seg2::token(q.row(t), k.row(t), v.row(t), opts.gamma)).collect();
+    let prefixes = super::scan::blelloch_exclusive(&leaves);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        let inclusive = prefixes[t].combine(&leaves[t]);
+        let o = inclusive.as_state().output(q.row(t), opts);
+        out.row_mut(t).copy_from_slice(&o);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hla::state2::hla2_serial;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, n: usize, d: usize, dv: usize) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+        let s = 1.0 / (d as f64).sqrt();
+        let mk = |rng: &mut Rng, r: usize, c: usize, sc: f64| {
+            let mut m = Mat::zeros(r, c);
+            for x in &mut m.data {
+                *x = rng.normal() * sc;
+            }
+            m
+        };
+        (mk(rng, n, d, s), mk(rng, n, d, s), mk(rng, n, dv, 1.0))
+    }
+
+    #[test]
+    fn associativity_random_segments() {
+        testing::quick("seg2 associativity", 32, |rng, _| {
+            let d = rng.range(1, 6);
+            let dv = rng.range(1, 6);
+            let gamma = if rng.bool(0.5) { 1.0 } else { 0.8 };
+            let seg = |rng: &mut Rng| {
+                let len = rng.range(1, 4);
+                let (q, k, v) = random(rng, len, d, dv);
+                (0..len)
+                    .map(|t| Seg2::<f64>::token(q.row(t), k.row(t), v.row(t), gamma))
+                    .reduce(|a, b| a.combine(&b))
+                    .unwrap()
+            };
+            let (a, b, c) = (seg(rng), seg(rng), seg(rng));
+            let left = a.combine(&b).combine(&c);
+            let right = a.combine(&b.combine(&c));
+            testing::assert_close(&left.g.data, &right.g.data, 1e-11, "G assoc")?;
+            testing::assert_close(&left.s.data, &right.s.data, 1e-11, "S assoc")?;
+            testing::assert_close(&left.h, &right.h, 1e-11, "h assoc")?;
+            if (left.rho - right.rho).abs() > 1e-12 {
+                return Err("rho".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scan_matches_serial() {
+        testing::quick("hla2 scan==serial (Thm 4.1)", 20, |rng, _| {
+            let n = rng.range(1, 33);
+            let (q, k, v) = random(rng, n, 4, 5);
+            for gamma in [1.0, 0.9] {
+                let opts = HlaOptions::default().with_gamma(gamma);
+                let serial = hla2_serial(&q, &k, &v, &opts);
+                let scan = hla2_scan(&q, &k, &v, &opts);
+                testing::assert_close(&serial.data, &scan.data, 1e-10, "incl scan")?;
+                let tree = hla2_blelloch(&q, &k, &v, &opts);
+                testing::assert_close(&serial.data, &tree.data, 1e-10, "blelloch")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_token_combine_equals_step() {
+        let mut rng = Rng::new(3);
+        let (q, k, v) = random(&mut rng, 2, 3, 3);
+        let gamma = 0.95;
+        // state route
+        let mut st = Hla2State::<f64>::new(3, 3);
+        st.step(q.row(0), k.row(0), v.row(0), gamma);
+        st.step(q.row(1), k.row(1), v.row(1), gamma);
+        // monoid route
+        let t0 = Seg2::token(q.row(0), k.row(0), v.row(0), gamma);
+        let t1 = Seg2::token(q.row(1), k.row(1), v.row(1), gamma);
+        let both = t0.combine(&t1).as_state();
+        testing::assert_close(&st.g.data, &both.g.data, 1e-12, "g").unwrap();
+        testing::assert_close(&st.s.data, &both.s.data, 1e-12, "s").unwrap();
+        testing::assert_close(&st.m, &both.m, 1e-12, "m").unwrap();
+    }
+}

@@ -1,0 +1,509 @@
+//! Third-order segment monoids (§7.3).
+//!
+//! * [`Seg3Paper`] — the paper's ⊗₃ (Eqs. 7.6–7.7, Algorithm 4) for the
+//!   paper-literal Eq. (7.5) operator, with the segment maps
+//!   `M^{KQP}`/`M^{KQm}` in **both** representations:
+//!   - [`SegMap::Dense`]: the O(d³·d_v) tensor the paper prices in §7.3;
+//!   - [`SegMap::Factored`]: the exact sum-of-rank-terms form
+//!     `M_X[Z] = Σ_t (k_tᵀ Z k_t) k_t v_tᵀ`, O(|X|·(d + d_v)) storage.
+//!   Bench E9 measures the dense-vs-factored composition/apply tradeoff.
+//!
+//! * [`Seg3Canon`] — the *canonical* third-order operator's monoid, which
+//!   needs **no** segment maps at all: the cross terms close over fixed-size
+//!   statistics (S^Q, R, r, N), so exact chunk composition costs O(d²·d_v).
+//!   This is a strict improvement over §7.3's price and one of the repo's
+//!   findings (γ = 1, matching Algorithm 4's stated regime).
+
+use crate::tensor::{ops, Mat, Scalar};
+
+use super::scan::Monoid;
+use super::state3::{Hla3PaperState, Hla3State};
+use super::HlaOptions;
+
+// ---------------------------------------------------------------------------
+// segment maps
+// ---------------------------------------------------------------------------
+
+/// A segment's linear map `Z ↦ Σ_t (k_tᵀ Z k_t) · k_t · w_tᵀ` where `w_t`
+/// is `v_t` (numerator map) or the scalar 1 (denominator map, d_v = 1).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SegMap<T> {
+    /// Dense 4-tensor `[d, d, d, dv]`: `T[a,i,j,b] = Σ_t k_a k_i k_j v_b`.
+    Dense { d: usize, dv: usize, data: Vec<T> },
+    /// Exact factored form: the list of (k_t, w_t) rank terms.
+    Factored { d: usize, dv: usize, terms: Vec<(Vec<T>, Vec<T>)> },
+}
+
+impl<T: Scalar> SegMap<T> {
+    pub fn empty_dense(d: usize, dv: usize) -> Self {
+        SegMap::Dense { d, dv, data: vec![T::ZERO; d * d * d * dv] }
+    }
+
+    pub fn empty_factored(d: usize, dv: usize) -> Self {
+        SegMap::Factored { d, dv, terms: vec![] }
+    }
+
+    pub fn token(k: &[T], w: &[T], dense: bool) -> Self {
+        let (d, dv) = (k.len(), w.len());
+        if !dense {
+            return SegMap::Factored { d, dv, terms: vec![(k.to_vec(), w.to_vec())] };
+        }
+        let mut data = vec![T::ZERO; d * d * d * dv];
+        for a in 0..d {
+            for i in 0..d {
+                for j in 0..d {
+                    let base = ((a * d + i) * d + j) * dv;
+                    let kk = k[a] * k[i] * k[j];
+                    for (b, &wb) in w.iter().enumerate() {
+                        data[base + b] = kk * wb;
+                    }
+                }
+            }
+        }
+        SegMap::Dense { d, dv, data }
+    }
+
+    /// Maps compose additively (Eq. 7.6).
+    pub fn add(&mut self, other: &SegMap<T>) {
+        match (self, other) {
+            (SegMap::Dense { data: a, .. }, SegMap::Dense { data: b, .. }) => {
+                ops::axpy(T::ONE, b, a);
+            }
+            (SegMap::Factored { terms: a, .. }, SegMap::Factored { terms: b, .. }) => {
+                a.extend(b.iter().cloned());
+            }
+            _ => panic!("SegMap representation mismatch"),
+        }
+    }
+
+    /// Apply to a fixed matrix Z: `M[Z] ∈ R^{d×dv}`.
+    pub fn apply(&self, z: &Mat<T>) -> Mat<T> {
+        match self {
+            SegMap::Dense { d, dv, data } => {
+                let mut out = Mat::zeros(*d, *dv);
+                for a in 0..*d {
+                    for i in 0..*d {
+                        for j in 0..*d {
+                            let zij = z[(i, j)];
+                            if zij == T::ZERO {
+                                continue;
+                            }
+                            let base = ((a * d + i) * d + j) * dv;
+                            for b in 0..*dv {
+                                out[(a, b)] += data[base + b] * zij;
+                            }
+                        }
+                    }
+                }
+                out
+            }
+            SegMap::Factored { d, dv, terms } => {
+                let mut out = Mat::zeros(*d, *dv);
+                for (k, w) in terms {
+                    // (k^T Z k) k w^T
+                    let zk = z.matvec(k);
+                    let alpha = ops::dot(k, &zk);
+                    out.add_outer(alpha, k, w);
+                }
+                out
+            }
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        match self {
+            SegMap::Dense { data, .. } => data.len() * std::mem::size_of::<T>(),
+            SegMap::Factored { terms, .. } => terms
+                .iter()
+                .map(|(k, w)| (k.len() + w.len()) * std::mem::size_of::<T>())
+                .sum(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// paper ⊗₃ (Eqs. 7.6–7.7)
+// ---------------------------------------------------------------------------
+
+/// Paper third-order segment: moments + corrected state + cross statistics
+/// + the two segment maps.
+#[derive(Debug, Clone)]
+pub struct Seg3Paper<T> {
+    pub sk: Mat<T>,
+    pub sq: Mat<T>,
+    pub p: Mat<T>,
+    pub m: Vec<T>,
+    pub f: Mat<T>,
+    pub eta: Vec<T>,
+    pub r_qp: Mat<T>,
+    pub r_qm: Vec<T>,
+    pub u_kq: Mat<T>,
+    pub map_p: SegMap<T>,
+    pub map_m: SegMap<T>,
+}
+
+impl<T: Scalar> Seg3Paper<T> {
+    pub fn empty(d: usize, dv: usize, dense: bool) -> Self {
+        Seg3Paper {
+            sk: Mat::zeros(d, d),
+            sq: Mat::zeros(d, d),
+            p: Mat::zeros(d, dv),
+            m: vec![T::ZERO; d],
+            f: Mat::zeros(d, dv),
+            eta: vec![T::ZERO; d],
+            r_qp: Mat::zeros(d, dv),
+            r_qm: vec![T::ZERO; d],
+            u_kq: Mat::zeros(d, d),
+            map_p: if dense { SegMap::empty_dense(d, dv) } else { SegMap::empty_factored(d, dv) },
+            map_m: if dense { SegMap::empty_dense(d, 1) } else { SegMap::empty_factored(d, 1) },
+        }
+    }
+
+    /// Algorithm 4 step 2: the single-token segment.
+    pub fn token(q: &[T], k: &[T], v: &[T], dense: bool) -> Self {
+        let (d, dv) = (q.len(), v.len());
+        let mut s = Seg3Paper::empty(d, dv, dense);
+        let kq = ops::dot(k, q);
+        s.sk.add_outer(T::ONE, k, k);
+        s.sq.add_outer(T::ONE, q, q);
+        s.p.add_outer(T::ONE, k, v);
+        s.m.copy_from_slice(k);
+        // F = D^K D^Q D^P = kq^2 k v^T ; eta = kq^2 k
+        s.f.add_outer(kq * kq, k, v);
+        ops::axpy(kq * kq, k, &mut s.eta);
+        // R^{QP} = kq q v^T ; r^{Qm} = kq q ; U^{KQ} = kq k q^T
+        s.r_qp.add_outer(kq, q, v);
+        ops::axpy(kq, q, &mut s.r_qm);
+        s.u_kq.add_outer(kq, k, q);
+        s.map_p = SegMap::token(k, v, dense);
+        s.map_m = SegMap::token(k, &[T::ONE], dense);
+        s
+    }
+
+    pub fn as_state(&self) -> Hla3PaperState<T> {
+        Hla3PaperState {
+            sk: self.sk.clone(),
+            sq: self.sq.clone(),
+            p: self.p.clone(),
+            m: self.m.clone(),
+            f: self.f.clone(),
+            eta: self.eta.clone(),
+        }
+    }
+}
+
+impl<T: Scalar> Monoid for Seg3Paper<T> {
+    fn identity_like(&self) -> Self {
+        let dense = matches!(self.map_p, SegMap::Dense { .. });
+        Seg3Paper::empty(self.sk.rows, self.p.cols, dense)
+    }
+
+    fn combine(&self, rhs: &Self) -> Self {
+        let (a, b) = (self, rhs);
+        // F_AB = F_A + F_B + S_A^K R_B^{QP} + M_B^{KQP}[S_A^Q] + U_B^{KQ} P_A
+        let mut f = a.f.clone();
+        f.add_scaled(T::ONE, &b.f);
+        f.add_scaled(T::ONE, &a.sk.matmul(&b.r_qp));
+        f.add_scaled(T::ONE, &b.map_p.apply(&a.sq));
+        f.add_scaled(T::ONE, &b.u_kq.matmul(&a.p));
+        // eta analogous
+        let mut eta = a.eta.clone();
+        ops::axpy(T::ONE, &b.eta, &mut eta);
+        ops::axpy(T::ONE, &a.sk.matvec(&b.r_qm), &mut eta);
+        let m_eta = b.map_m.apply(&a.sq); // [d, 1]
+        ops::axpy(T::ONE, &m_eta.data, &mut eta);
+        ops::axpy(T::ONE, &b.u_kq.matvec(&a.m), &mut eta);
+        // additive pieces (Eq. 7.6)
+        let add_mat = |x: &Mat<T>, y: &Mat<T>| {
+            let mut z = x.clone();
+            z.add_scaled(T::ONE, y);
+            z
+        };
+        let mut m = a.m.clone();
+        ops::axpy(T::ONE, &b.m, &mut m);
+        let mut r_qm = a.r_qm.clone();
+        ops::axpy(T::ONE, &b.r_qm, &mut r_qm);
+        let mut map_p = a.map_p.clone();
+        map_p.add(&b.map_p);
+        let mut map_m = a.map_m.clone();
+        map_m.add(&b.map_m);
+        Seg3Paper {
+            sk: add_mat(&a.sk, &b.sk),
+            sq: add_mat(&a.sq, &b.sq),
+            p: add_mat(&a.p, &b.p),
+            m,
+            f,
+            eta,
+            r_qp: add_mat(&a.r_qp, &b.r_qp),
+            r_qm,
+            u_kq: add_mat(&a.u_kq, &b.u_kq),
+            map_p,
+            map_m,
+        }
+    }
+}
+
+/// Algorithm 4: chunk-parallel paper third order via exclusive scan + local
+/// inclusion (γ = 1).  `dense` picks the segment-map representation.
+pub fn hla3_paper_scan<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+    dense: bool,
+) -> Mat<T> {
+    assert_eq!(opts.gamma, T::ONE, "Algorithm 4 is stated for gamma == 1");
+    let (n, dv) = (q.rows, v.cols);
+    let leaves: Vec<Seg3Paper<T>> =
+        (0..n).map(|t| Seg3Paper::token(q.row(t), k.row(t), v.row(t), dense)).collect();
+    let prefixes = super::scan::blelloch_exclusive(&leaves);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        let st = prefixes[t].combine(&leaves[t]).as_state();
+        out.row_mut(t).copy_from_slice(&st.output(q.row(t), opts));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// canonical third-order monoid — no segment maps needed
+// ---------------------------------------------------------------------------
+
+/// Canonical third-order segment: the cross terms of
+/// `F_t = Σ_u (S_u q_u)(q_uᵀ P_u)ᵀ` close over fixed-size statistics:
+///
+///   R_X = Σ_u q_u (q_uᵀ P^loc_u)ᵀ     [d, dv]
+///   r_X = Σ_u (q_uᵀ m^loc_u) q_u      [d]
+///   N_X = Σ_u (S^loc_u q_u) q_uᵀ      [d, d]
+///
+/// with composition (derived in DESIGN.md):
+///   F_AB = F_A + F_B + S_A S^Q_B P_A + S_A R_B + N_B P_A
+///   R_AB = R_A + R_B + S^Q_B P_A,   N_AB = N_A + N_B + S_A S^Q_B
+#[derive(Debug, Clone, PartialEq)]
+pub struct Seg3Canon<T> {
+    pub s: Mat<T>,
+    pub sq: Mat<T>,
+    pub p: Mat<T>,
+    pub m: Vec<T>,
+    pub f: Mat<T>,
+    pub eta: Vec<T>,
+    pub r: Mat<T>,
+    pub rv: Vec<T>,
+    pub nmat: Mat<T>,
+}
+
+impl<T: Scalar> Seg3Canon<T> {
+    pub fn empty(d: usize, dv: usize) -> Self {
+        Seg3Canon {
+            s: Mat::zeros(d, d),
+            sq: Mat::zeros(d, d),
+            p: Mat::zeros(d, dv),
+            m: vec![T::ZERO; d],
+            f: Mat::zeros(d, dv),
+            eta: vec![T::ZERO; d],
+            r: Mat::zeros(d, dv),
+            rv: vec![T::ZERO; d],
+            nmat: Mat::zeros(d, d),
+        }
+    }
+
+    pub fn token(q: &[T], k: &[T], v: &[T]) -> Self {
+        let (d, dv) = (q.len(), v.len());
+        let mut s = Seg3Canon::empty(d, dv);
+        let kq = ops::dot(k, q);
+        s.s.add_outer(T::ONE, k, k);
+        s.p.add_outer(T::ONE, k, v);
+        s.m.copy_from_slice(k);
+        s.sq.add_outer(T::ONE, q, q);
+        // local inclusive: S_u q_u = kq k ; q_u^T P_u = kq v ; q_u^T m_u = kq
+        s.f.add_outer(kq * kq, k, v);
+        ops::axpy(kq * kq, k, &mut s.eta);
+        s.r.add_outer(kq, q, v);
+        ops::axpy(kq, q, &mut s.rv);
+        s.nmat.add_outer(kq, k, q);
+        s
+    }
+
+    pub fn as_state(&self) -> Hla3State<T> {
+        Hla3State {
+            s: self.s.clone(),
+            p: self.p.clone(),
+            m: self.m.clone(),
+            f: self.f.clone(),
+            eta: self.eta.clone(),
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        std::mem::size_of::<T>()
+            * (3 * self.s.data.len() + 2 * self.p.data.len() + self.f.data.len() + 3 * self.m.len())
+    }
+}
+
+impl<T: Scalar> Monoid for Seg3Canon<T> {
+    fn identity_like(&self) -> Self {
+        Seg3Canon::empty(self.s.rows, self.p.cols)
+    }
+
+    fn combine(&self, rhs: &Self) -> Self {
+        let (a, b) = (self, rhs);
+        let add = |x: &Mat<T>, y: &Mat<T>| {
+            let mut z = x.clone();
+            z.add_scaled(T::ONE, y);
+            z
+        };
+        // F_AB = F_A + F_B + S_A S^Q_B P_A + S_A R_B + N_B P_A
+        let mut f = add(&a.f, &b.f);
+        let s_sq = a.s.matmul(&b.sq);
+        f.add_scaled(T::ONE, &s_sq.matmul(&a.p));
+        f.add_scaled(T::ONE, &a.s.matmul(&b.r));
+        f.add_scaled(T::ONE, &b.nmat.matmul(&a.p));
+        // eta_AB = eta_A + eta_B + S_A S^Q_B m_A + S_A r_B + N_B m_A
+        let mut eta = a.eta.clone();
+        ops::axpy(T::ONE, &b.eta, &mut eta);
+        ops::axpy(T::ONE, &s_sq.matvec(&a.m), &mut eta);
+        ops::axpy(T::ONE, &a.s.matvec(&b.rv), &mut eta);
+        ops::axpy(T::ONE, &b.nmat.matvec(&a.m), &mut eta);
+        // R_AB = R_A + R_B + S^Q_B P_A ; r likewise
+        let mut r = add(&a.r, &b.r);
+        r.add_scaled(T::ONE, &b.sq.matmul(&a.p));
+        let mut rv = a.rv.clone();
+        ops::axpy(T::ONE, &b.rv, &mut rv);
+        ops::axpy(T::ONE, &b.sq.matvec(&a.m), &mut rv);
+        // N_AB = N_A + N_B + S_A S^Q_B
+        let mut nmat = add(&a.nmat, &b.nmat);
+        nmat.add_scaled(T::ONE, &s_sq);
+        let mut m = a.m.clone();
+        ops::axpy(T::ONE, &b.m, &mut m);
+        Seg3Canon {
+            s: add(&a.s, &b.s),
+            sq: add(&a.sq, &b.sq),
+            p: add(&a.p, &b.p),
+            m,
+            f,
+            eta,
+            r,
+            rv,
+            nmat,
+        }
+    }
+}
+
+/// Canonical third order via exclusive Blelloch scan (γ = 1): the exact
+/// chunk-parallel algorithm *without* O(d³ d_v) segment maps.
+pub fn hla3_canon_scan<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    assert_eq!(opts.gamma, T::ONE);
+    let (n, dv) = (q.rows, v.cols);
+    let leaves: Vec<Seg3Canon<T>> =
+        (0..n).map(|t| Seg3Canon::token(q.row(t), k.row(t), v.row(t))).collect();
+    let prefixes = super::scan::blelloch_exclusive(&leaves);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        let st = prefixes[t].combine(&leaves[t]).as_state();
+        out.row_mut(t).copy_from_slice(&st.output(q.row(t), opts));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hla::state3::{hla3_paper_serial, hla3_serial};
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, n: usize, d: usize, dv: usize) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+        let s = 1.0 / (d as f64).sqrt();
+        let mk = |rng: &mut Rng, r: usize, c: usize, sc: f64| {
+            let mut m = Mat::zeros(r, c);
+            for x in &mut m.data {
+                *x = rng.normal() * sc;
+            }
+            m
+        };
+        (mk(rng, n, d, s), mk(rng, n, d, s), mk(rng, n, dv, 1.0))
+    }
+
+    #[test]
+    fn paper_scan_matches_serial_thm72() {
+        testing::quick("hla3 paper scan==serial (Thm 7.2)", 10, |rng, _| {
+            let n = rng.range(1, 14);
+            let (q, k, v) = random(rng, n, 3, 4);
+            let opts = HlaOptions::default();
+            let serial = hla3_paper_serial(&q, &k, &v, &opts);
+            for dense in [false, true] {
+                let scan = hla3_paper_scan(&q, &k, &v, &opts, dense);
+                testing::assert_close(&serial.data, &scan.data, 1e-9, "paper scan")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_and_factored_maps_agree() {
+        let mut rng = Rng::new(20);
+        let (_q, k, v) = random(&mut rng, 6, 3, 3);
+        let mut z = Mat::<f64>::zeros(3, 3);
+        for x in &mut z.data {
+            *x = rng.normal();
+        }
+        let mut dense = SegMap::empty_dense(3, 3);
+        let mut fact = SegMap::empty_factored(3, 3);
+        for t in 0..6 {
+            dense.add(&SegMap::token(k.row(t), v.row(t), true));
+            fact.add(&SegMap::token(k.row(t), v.row(t), false));
+        }
+        let a = dense.apply(&z);
+        let b = fact.apply(&z);
+        testing::assert_close(&a.data, &b.data, 1e-11, "maps").unwrap();
+        // the cost asymmetry the paper prices in §7.3:
+        assert_eq!(dense.nbytes(), 8 * 3 * 3 * 3 * 3);
+        assert_eq!(fact.nbytes(), 8 * 6 * (3 + 3));
+    }
+
+    #[test]
+    fn canon_scan_matches_serial() {
+        testing::quick("hla3 canon scan==serial", 12, |rng, _| {
+            let n = rng.range(1, 20);
+            let (q, k, v) = random(rng, n, 4, 4);
+            let opts = HlaOptions::default();
+            let serial = hla3_serial(&q, &k, &v, &opts);
+            let scan = hla3_canon_scan(&q, &k, &v, &opts);
+            testing::assert_close(&serial.data, &scan.data, 1e-9, "canon scan")
+        });
+    }
+
+    #[test]
+    fn canon_monoid_associative() {
+        testing::quick("seg3 canon associativity", 16, |rng, _| {
+            let seg = |rng: &mut Rng| {
+                let len = rng.range(1, 4);
+                let (q, k, v) = random(rng, len, 3, 3);
+                (0..len)
+                    .map(|t| Seg3Canon::<f64>::token(q.row(t), k.row(t), v.row(t)))
+                    .reduce(|a, b| a.combine(&b))
+                    .unwrap()
+            };
+            let (a, b, c) = (seg(rng), seg(rng), seg(rng));
+            let l = a.combine(&b).combine(&c);
+            let r = a.combine(&b.combine(&c));
+            testing::assert_close(&l.f.data, &r.f.data, 1e-10, "F")?;
+            testing::assert_close(&l.r.data, &r.r.data, 1e-10, "R")?;
+            testing::assert_close(&l.nmat.data, &r.nmat.data, 1e-10, "N")
+        });
+    }
+
+    #[test]
+    fn canon_segment_constant_size_vs_paper_maps() {
+        // §7.3: paper segment maps are O(d^3 dv); canonical segments are O(d^2).
+        let d = 8;
+        let canon = Seg3Canon::<f64>::token(&vec![1.0; d], &vec![1.0; d], &vec![1.0; d]);
+        let paper_dense = Seg3Paper::<f64>::token(&vec![1.0; d], &vec![1.0; d], &vec![1.0; d], true);
+        assert!(canon.nbytes() < paper_dense.map_p.nbytes() / 8);
+    }
+}

@@ -1,0 +1,116 @@
+//! Packed symmetric storage for the key moment S (§5.2): only the upper
+//! triangle (d(d+1)/2 entries) is stored, halving state bandwidth without
+//! changing the algebra.  Bench E12 measures the tradeoff.
+
+use crate::tensor::{ops, Mat, Scalar};
+
+/// Symmetric d×d matrix stored as the upper triangle, row-major:
+/// index(i, j) for i <= j is `i*d - i(i-1)/2 + (j - i)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedSym<T> {
+    pub d: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Scalar> PackedSym<T> {
+    pub fn zeros(d: usize) -> Self {
+        PackedSym { d, data: vec![T::ZERO; d * (d + 1) / 2] }
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        let (i, j) = if i <= j { (i, j) } else { (j, i) };
+        i * (2 * self.d - i + 1) / 2 + (j - i)
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> T {
+        self.data[self.idx(i, j)]
+    }
+
+    /// S += k kᵀ (the §3.1 rank-1 update), touching only the triangle.
+    pub fn add_outer_self(&mut self, k: &[T]) {
+        debug_assert_eq!(k.len(), self.d);
+        let d = self.d;
+        let mut off = 0;
+        for i in 0..d {
+            let ki = k[i];
+            let row = &mut self.data[off..off + (d - i)];
+            // row holds S[i, i..d]
+            for (r, &kj) in row.iter_mut().zip(&k[i..]) {
+                *r += ki * kj;
+            }
+            off += d - i;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: T) {
+        ops::scale(alpha, &mut self.data);
+    }
+
+    /// y = S x (symmetric mat-vec over the packed triangle).
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
+        let d = self.d;
+        let mut y = vec![T::ZERO; d];
+        let mut off = 0;
+        for i in 0..d {
+            let row = &self.data[off..off + (d - i)];
+            // diagonal
+            y[i] += row[0] * x[i];
+            // off-diagonal contributes to both y[i] and y[j]
+            for (dj, &s) in row.iter().enumerate().skip(1) {
+                let j = i + dj;
+                y[i] += s * x[j];
+                y[j] += s * x[i];
+            }
+            off += d - i;
+        }
+        y
+    }
+
+    pub fn to_dense(&self) -> Mat<T> {
+        let mut m = Mat::zeros(self.d, self.d);
+        for i in 0..self.d {
+            for j in 0..self.d {
+                m[(i, j)] = self.get(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn packed_matches_dense() {
+        testing::quick("packed S == dense S", 16, |rng, _| {
+            let d = rng.range(1, 12);
+            let mut packed = PackedSym::<f64>::zeros(d);
+            let mut dense = Mat::<f64>::zeros(d, d);
+            for _ in 0..5 {
+                let k: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+                packed.add_outer_self(&k);
+                dense.add_outer(1.0, &k, &k);
+                packed.scale(0.95);
+                dense.scale(0.95);
+            }
+            testing::assert_close(&packed.to_dense().data, &dense.data, 1e-12, "dense")?;
+            let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            testing::assert_close(&packed.matvec(&x), &dense.matvec(&x), 1e-12, "matvec")
+        });
+    }
+
+    #[test]
+    fn storage_is_half() {
+        let p = PackedSym::<f32>::zeros(64);
+        assert_eq!(p.nbytes(), 4 * 64 * 65 / 2);
+        assert!(p.nbytes() < 4 * 64 * 64 * 3 / 5);
+    }
+}

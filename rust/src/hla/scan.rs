@@ -1,0 +1,144 @@
+//! Generic Blelloch scans over any associative segment monoid (Thm 4.1,
+//! Remark 4.2) — the parallel-training skeleton shared by second order,
+//! AHLA and third order.
+//!
+//! `Monoid` captures the paper's segment algebra: an identity (the
+//! zero-length segment E) and an associative `combine`.  Scans:
+//! * [`inclusive_scan`] / [`exclusive_scan`] — serial O(n) reference.
+//! * [`blelloch_exclusive`] — the up-sweep/down-sweep tree scan (O(n) work,
+//!   O(log n) span) exactly as in Blelloch (1990), validated against the
+//!   serial scans.
+//! * [`chunked_scan`] in [`super::chunk`] builds the two-level intra-/
+//!   inter-chunk strategy of §4.2 on top, with std::thread parallelism.
+
+pub trait Monoid: Clone {
+    /// The zero-length segment E (all-zero summaries, ρ = 1).
+    fn identity_like(&self) -> Self;
+    /// Segment concatenation: `self` (earlier, A) then `rhs` (later, B).
+    fn combine(&self, rhs: &Self) -> Self;
+}
+
+/// Inclusive prefixes I_t = T_1 ⊕ … ⊕ T_t (serial reference).
+pub fn inclusive_scan<M: Monoid>(leaves: &[M]) -> Vec<M> {
+    let mut out = Vec::with_capacity(leaves.len());
+    let mut acc: Option<M> = None;
+    for leaf in leaves {
+        let next = match &acc {
+            None => leaf.clone(),
+            Some(a) => a.combine(leaf),
+        };
+        out.push(next.clone());
+        acc = Some(next);
+    }
+    out
+}
+
+/// Exclusive prefixes P_t = E ⊕ T_1 ⊕ … ⊕ T_{t-1} (Remark 4.2).
+pub fn exclusive_scan<M: Monoid>(leaves: &[M]) -> Vec<M> {
+    if leaves.is_empty() {
+        return vec![];
+    }
+    let ident = leaves[0].identity_like();
+    let mut out = Vec::with_capacity(leaves.len());
+    let mut acc = ident;
+    for leaf in leaves {
+        out.push(acc.clone());
+        acc = acc.combine(leaf);
+    }
+    out
+}
+
+/// Blelloch work-efficient exclusive scan (up-sweep + down-sweep).
+///
+/// Produces exactly `exclusive_scan`'s output for any associative monoid;
+/// the tree reassociation is what Theorem 4.1 licenses.
+pub fn blelloch_exclusive<M: Monoid>(leaves: &[M]) -> Vec<M> {
+    let n = leaves.len();
+    if n == 0 {
+        return vec![];
+    }
+    let ident = leaves[0].identity_like();
+    // pad to a power of two with identities
+    let size = n.next_power_of_two();
+    let mut tree: Vec<M> = Vec::with_capacity(size);
+    tree.extend(leaves.iter().cloned());
+    tree.resize(size, ident.clone());
+
+    // up-sweep: tree[i + 2^k - 1] accumulates its segment
+    let mut stride = 1;
+    while stride < size {
+        let mut i = stride * 2 - 1;
+        while i < size {
+            let left = tree[i - stride].clone();
+            tree[i] = left.combine(&tree[i]);
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+
+    // down-sweep
+    tree[size - 1] = ident;
+    let mut stride = size / 2;
+    while stride >= 1 {
+        let mut i = stride * 2 - 1;
+        while i < size {
+            let left = tree[i - stride].clone();
+            tree[i - stride] = tree[i].clone();
+            tree[i] = tree[i].combine(&left);
+            i += stride * 2;
+        }
+        stride /= 2;
+    }
+
+    tree.truncate(n);
+    tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A deliberately *non-commutative* monoid (string concat) to make sure
+    /// the scans preserve order.
+    #[derive(Clone, Debug, PartialEq)]
+    struct Cat(String);
+
+    impl Monoid for Cat {
+        fn identity_like(&self) -> Self {
+            Cat(String::new())
+        }
+        fn combine(&self, rhs: &Self) -> Self {
+            Cat(format!("{}{}", self.0, rhs.0))
+        }
+    }
+
+    fn letters(n: usize) -> Vec<Cat> {
+        (0..n).map(|i| Cat(((b'a' + (i % 26) as u8) as char).to_string())).collect()
+    }
+
+    #[test]
+    fn exclusive_matches_definition() {
+        let leaves = letters(5);
+        let ex = exclusive_scan(&leaves);
+        assert_eq!(ex[0].0, "");
+        assert_eq!(ex[4].0, "abcd");
+    }
+
+    #[test]
+    fn blelloch_equals_serial_exclusive() {
+        for n in [1, 2, 3, 4, 5, 7, 8, 13, 16, 31, 64] {
+            let leaves = letters(n);
+            assert_eq!(blelloch_exclusive(&leaves), exclusive_scan(&leaves), "n={n}");
+        }
+    }
+
+    #[test]
+    fn inclusive_is_exclusive_plus_local() {
+        let leaves = letters(9);
+        let inc = inclusive_scan(&leaves);
+        let ex = blelloch_exclusive(&leaves);
+        for t in 0..9 {
+            assert_eq!(inc[t], ex[t].combine(&leaves[t]), "Remark 4.2 at t={t}");
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Masked second-order HLA streaming state (Theorem 3.1 / Algorithm 1).
+//!
+//! State tuple `(S, C, m, G, h)` per head; `step` is the monoid-consistent
+//! decayed online update (§3.1/§4.3 with DESIGN.md erratum #2: the carry —
+//! including the cross-term's `C_{t-1}`/`m_{t-1}` — is attenuated by γ,
+//! which is what the decayed semidirect product of §4.2 implies and what
+//! makes scan ≡ serial hold for γ < 1).
+//!
+//! Per-token cost: O(d² + d·d_v) — two rank-1 updates, two mat-vecs —
+//! independent of sequence length (bench E2 measures this).
+
+use crate::tensor::{ops, Mat, Scalar};
+
+use super::HlaOptions;
+
+/// Second-order state (per head): S [d,d], C [d,dv], m [d], G [d,dv], h [d].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hla2State<T> {
+    pub s: Mat<T>,
+    pub c: Mat<T>,
+    pub m: Vec<T>,
+    pub g: Mat<T>,
+    pub h: Vec<T>,
+}
+
+impl<T: Scalar> Hla2State<T> {
+    pub fn new(d: usize, dv: usize) -> Self {
+        Hla2State {
+            s: Mat::zeros(d, d),
+            c: Mat::zeros(d, dv),
+            m: vec![T::ZERO; d],
+            g: Mat::zeros(d, dv),
+            h: vec![T::ZERO; d],
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.s.rows
+    }
+
+    pub fn dv(&self) -> usize {
+        self.c.cols
+    }
+
+    /// Bytes of state per head (memory table, E6/E7).
+    pub fn nbytes(&self) -> usize {
+        std::mem::size_of::<T>()
+            * (self.s.data.len() + self.c.data.len() + self.m.len() + self.g.data.len() + self.h.len())
+    }
+
+    /// One online update (the paper's §3.1 updates with decay).
+    ///
+    /// Order matters: G/h consume C_{t-1}/m_{t-1} *before* C/m absorb the
+    /// token's deltas.
+    pub fn step(&mut self, q: &[T], k: &[T], v: &[T], gamma: T) {
+        // kc = k^T C_{t-1},  km = k^T m_{t-1}
+        let kc = self.c.t_matvec(k);
+        let km = ops::dot(k, &self.m);
+        // G <- g (G + k kc^T);  h <- g (h + km k)
+        self.g.add_outer(T::ONE, k, &kc);
+        if gamma != T::ONE {
+            self.g.scale(gamma);
+        }
+        ops::axpy(km, k, &mut self.h);
+        if gamma != T::ONE {
+            ops::scale(gamma, &mut self.h);
+        }
+        // S <- g S + k k^T;  C <- g C + q v^T;  m <- g m + q
+        if gamma != T::ONE {
+            self.s.scale(gamma);
+            self.c.scale(gamma);
+            ops::scale(gamma, &mut self.m);
+        }
+        self.s.add_outer(T::ONE, k, k);
+        self.c.add_outer(T::ONE, q, v);
+        ops::axpy(T::ONE, q, &mut self.m);
+    }
+
+    /// Per-token output from the inclusive state (Theorem 3.1).
+    pub fn output(&self, q: &[T], opts: &HlaOptions<T>) -> Vec<T> {
+        // u = q^T S (+ λ q)
+        let mut u = self.s.t_matvec(q);
+        if opts.lambda != T::ZERO {
+            ops::axpy(opts.lambda, q, &mut u);
+        }
+        let mut num = self.c.t_matvec(&u);
+        let mut den = ops::dot(&u, &self.m);
+        if opts.masked {
+            let qg = self.g.t_matvec(q);
+            for (n, g) in num.iter_mut().zip(&qg) {
+                *n = *n - *g;
+            }
+            den = den - ops::dot(q, &self.h);
+        }
+        opts.norm.apply(&mut num, den, opts.eps);
+        num
+    }
+}
+
+/// Full-sequence serial reference: q, k are [n, d] rows; v is [n, dv].
+pub fn hla2_serial<T: Scalar>(q: &Mat<T>, k: &Mat<T>, v: &Mat<T>, opts: &HlaOptions<T>) -> Mat<T> {
+    let (n, d, dv) = (q.rows, q.cols, v.cols);
+    assert_eq!(k.rows, n);
+    assert_eq!(v.rows, n);
+    let mut st = Hla2State::new(d, dv);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        st.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+        let o = st.output(q.row(t), opts);
+        out.row_mut(t).copy_from_slice(&o);
+    }
+    out
+}
+
+/// Materialized masked oracle (Theorem 3.1 right-hand side), γ = 1 only:
+/// `o_t = row_t[((L∘QKᵀ)(L∘QKᵀ)ᵀ ∘ L) V]` — O(n²d) time, used by tests/E1.
+pub fn hla2_quadratic<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    assert_eq!(opts.gamma, T::ONE, "quadratic oracle requires gamma == 1");
+    let n = q.rows;
+    let dv = v.cols;
+    // W = L ∘ (Q K^T)
+    let mut w = q.matmul_t(k);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            w[(i, j)] = T::ZERO;
+        }
+    }
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        // row t of (W W^T) for columns j <= t  (or the prefix form when unmasked)
+        let mut den = T::ZERO;
+        let mut acc = vec![T::ZERO; dv];
+        for j in 0..=t {
+            let limit = if opts.masked { j.min(t) } else { t };
+            let mut wgt = T::ZERO;
+            for i in 0..=limit {
+                wgt += w[(t, i)] * w_unmasked(k, q, j, i, opts.masked, &w);
+            }
+            if opts.lambda != T::ZERO {
+                wgt += opts.lambda * ops::dot(q.row(t), q.row(j));
+            }
+            ops::axpy(wgt, v.row(j), &mut acc);
+            den += wgt;
+        }
+        opts.norm.apply(&mut acc, den, opts.eps);
+        out.row_mut(t).copy_from_slice(&acc);
+    }
+    out
+}
+
+#[inline]
+fn w_unmasked<T: Scalar>(
+    k: &Mat<T>,
+    q: &Mat<T>,
+    j: usize,
+    i: usize,
+    masked: bool,
+    w: &Mat<T>,
+) -> T {
+    if masked {
+        // W_{j,i} already causally masked
+        w[(j, i)]
+    } else {
+        // prefix form uses the *unmasked* A_{j,i} = q_j . k_i
+        ops::dot(q.row(j), k.row(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hla::NormMode;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn random_qkv(rng: &mut Rng, n: usize, d: usize, dv: usize) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+        let scale = 1.0 / (d as f64).sqrt();
+        let mk = |rng: &mut Rng, r: usize, c: usize, s: f64| {
+            let mut m = Mat::zeros(r, c);
+            for x in &mut m.data {
+                *x = rng.normal() * s;
+            }
+            m
+        };
+        (mk(rng, n, d, scale), mk(rng, n, d, scale), mk(rng, n, dv, 1.0))
+    }
+
+    #[test]
+    fn serial_matches_quadratic_masked() {
+        testing::quick("hla2 serial==quadratic", 24, |rng, _| {
+            let n = rng.range(1, 24);
+            let d = rng.range(1, 8);
+            let dv = rng.range(1, 8);
+            let (q, k, v) = random_qkv(rng, n, d, dv);
+            let opts = HlaOptions::default();
+            let a = hla2_serial(&q, &k, &v, &opts);
+            let b = hla2_quadratic(&q, &k, &v, &opts);
+            testing::assert_close(&a.data, &b.data, 1e-10, "masked")
+        });
+    }
+
+    #[test]
+    fn serial_matches_quadratic_unmasked_and_ridge() {
+        testing::quick("hla2 prefix/ridge", 16, |rng, _| {
+            let (q, k, v) = random_qkv(rng, 17, 5, 4);
+            let unm = HlaOptions::default().unmasked();
+            testing::assert_close(
+                &hla2_serial(&q, &k, &v, &unm).data,
+                &hla2_quadratic(&q, &k, &v, &unm).data,
+                1e-10,
+                "prefix",
+            )?;
+            let ridge = HlaOptions::default().with_lambda(0.3);
+            testing::assert_close(
+                &hla2_serial(&q, &k, &v, &ridge).data,
+                &hla2_quadratic(&q, &k, &v, &ridge).data,
+                1e-10,
+                "ridge",
+            )
+        });
+    }
+
+    #[test]
+    fn normalization_modes() {
+        let mut rng = Rng::new(9);
+        let (q, k, v) = random_qkv(&mut rng, 12, 4, 4);
+        for norm in [NormMode::Linear, NormMode::Abs] {
+            let opts = HlaOptions::default().with_norm(norm);
+            let a = hla2_serial(&q, &k, &v, &opts);
+            let b = hla2_quadratic(&q, &k, &v, &opts);
+            testing::assert_close(&a.data, &b.data, 1e-10, "norm").unwrap();
+        }
+    }
+
+    #[test]
+    fn strict_causality() {
+        let mut rng = Rng::new(10);
+        let (q, k, v) = random_qkv(&mut rng, 16, 4, 4);
+        let (q2, k2, v2) = random_qkv(&mut rng, 16, 4, 4);
+        let opts = HlaOptions::default().with_gamma(0.9);
+        let base = hla2_serial(&q, &k, &v, &opts);
+        // splice different future
+        let t = 9;
+        let splice = |a: &Mat<f64>, b: &Mat<f64>| {
+            let mut m = a.clone();
+            for i in (t + 1)..16 {
+                m.row_mut(i).copy_from_slice(b.row(i));
+            }
+            m
+        };
+        let pert = hla2_serial(&splice(&q, &q2), &splice(&k, &k2), &splice(&v, &v2), &opts);
+        for i in 0..=t {
+            testing::assert_close(base.row(i), pert.row(i), 1e-12, "causal").unwrap();
+        }
+    }
+
+    #[test]
+    fn decay_bounds_state() {
+        let mut rng = Rng::new(11);
+        let (q, k, v) = random_qkv(&mut rng, 400, 4, 4);
+        let mut grow = Hla2State::<f64>::new(4, 4);
+        let mut decay = Hla2State::<f64>::new(4, 4);
+        for t in 0..400 {
+            grow.step(q.row(t), k.row(t), v.row(t), 1.0);
+            decay.step(q.row(t), k.row(t), v.row(t), 0.9);
+        }
+        assert!(decay.s.frobenius_norm() < 0.2 * grow.s.frobenius_norm());
+    }
+
+    #[test]
+    fn state_size_formula() {
+        let st = Hla2State::<f32>::new(64, 64);
+        // S + C + G : 3 * d*dv(=d) matrices, m + h : 2 * d vectors
+        assert_eq!(st.nbytes(), 4 * (3 * 64 * 64 + 2 * 64));
+    }
+}

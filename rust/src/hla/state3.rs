@@ -1,0 +1,372 @@
+//! Third-order HLA streaming (§7).
+//!
+//! Two operators (see DESIGN.md erratum #4):
+//!
+//! * [`Hla3State`] — the **canonical** strictly causal masked W-product
+//!   `(((W Wᵀ)∘L) W)∘L V`, which streams with the rank-1 recurrence
+//!   `F_t = γ F + (S_t q_t)(q_tᵀ P_t)ᵀ`.  Cheaper than the paper's form:
+//!   state (S, P, m, F, η), cost O(d² + d·d_v)/token.
+//! * [`Hla3PaperState`] — the paper-literal Eq. (7.5)/Algorithm 3 corrected
+//!   state (S^K, S^Q, P, m, F, η).  Its chunk scan (Algorithm 4 / Thm 7.2)
+//!   lives in [`super::monoid3`].
+
+use crate::tensor::{ops, Mat, Scalar};
+
+use super::HlaOptions;
+
+/// Canonical third-order state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hla3State<T> {
+    pub s: Mat<T>,
+    pub p: Mat<T>,
+    pub m: Vec<T>,
+    pub f: Mat<T>,
+    pub eta: Vec<T>,
+}
+
+impl<T: Scalar> Hla3State<T> {
+    pub fn new(d: usize, dv: usize) -> Self {
+        Hla3State {
+            s: Mat::zeros(d, d),
+            p: Mat::zeros(d, dv),
+            m: vec![T::ZERO; d],
+            f: Mat::zeros(d, dv),
+            eta: vec![T::ZERO; d],
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        std::mem::size_of::<T>()
+            * (self.s.data.len()
+                + self.p.data.len()
+                + self.m.len()
+                + self.f.data.len()
+                + self.eta.len())
+    }
+
+    pub fn step(&mut self, q: &[T], k: &[T], v: &[T], gamma: T) {
+        if gamma != T::ONE {
+            self.s.scale(gamma);
+            self.p.scale(gamma);
+            ops::scale(gamma, &mut self.m);
+            self.f.scale(gamma);
+            ops::scale(gamma, &mut self.eta);
+        }
+        self.s.add_outer(T::ONE, k, k);
+        self.p.add_outer(T::ONE, k, v);
+        ops::axpy(T::ONE, k, &mut self.m);
+        let sq = self.s.matvec(q); // S_t q_t
+        let qp = self.p.t_matvec(q); // q_t^T P_t
+        let qm = ops::dot(q, &self.m); // q_t^T m_t
+        self.f.add_outer(T::ONE, &sq, &qp);
+        ops::axpy(qm, &sq, &mut self.eta);
+    }
+
+    pub fn output(&self, q: &[T], opts: &HlaOptions<T>) -> Vec<T> {
+        let mut num = self.f.t_matvec(q);
+        let den = ops::dot(q, &self.eta);
+        opts.norm.apply(&mut num, den, opts.eps);
+        num
+    }
+}
+
+/// Full-sequence canonical third order.
+pub fn hla3_serial<T: Scalar>(q: &Mat<T>, k: &Mat<T>, v: &Mat<T>, opts: &HlaOptions<T>) -> Mat<T> {
+    let (n, d, dv) = (q.rows, q.cols, v.cols);
+    let mut st = Hla3State::new(d, dv);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        st.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+        out.row_mut(t).copy_from_slice(&st.output(q.row(t), opts));
+    }
+    out
+}
+
+/// Materialized canonical oracle `(((W Wᵀ)∘L) W)∘L V` (γ = 1).
+pub fn hla3_quadratic<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    assert_eq!(opts.gamma, T::ONE);
+    let n = q.rows;
+    let mut w = q.matmul_t(k);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            w[(i, j)] = T::ZERO;
+        }
+    }
+    let mut wwt = w.matmul_t(&w);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            wwt[(i, j)] = T::ZERO;
+        }
+    }
+    let t3 = wwt.matmul(&w);
+    let mut out = Mat::zeros(n, v.cols);
+    for t in 0..n {
+        let mut acc = vec![T::ZERO; v.cols];
+        let mut den = T::ZERO;
+        for j in 0..=t {
+            ops::axpy(t3[(t, j)], v.row(j), &mut acc);
+            den += t3[(t, j)];
+        }
+        opts.norm.apply(&mut acc, den, opts.eps);
+        out.row_mut(t).copy_from_slice(&acc);
+    }
+    out
+}
+
+/// Paper-literal Eq. (7.5) corrected state (Algorithm 3 semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hla3PaperState<T> {
+    pub sk: Mat<T>,
+    pub sq: Mat<T>,
+    pub p: Mat<T>,
+    pub m: Vec<T>,
+    pub f: Mat<T>,
+    pub eta: Vec<T>,
+}
+
+impl<T: Scalar> Hla3PaperState<T> {
+    pub fn new(d: usize, dv: usize) -> Self {
+        Hla3PaperState {
+            sk: Mat::zeros(d, d),
+            sq: Mat::zeros(d, d),
+            p: Mat::zeros(d, dv),
+            m: vec![T::ZERO; d],
+            f: Mat::zeros(d, dv),
+            eta: vec![T::ZERO; d],
+        }
+    }
+
+    /// Eq. (7.5) with monoid-consistent decay (carry attenuated by γ,
+    /// including inside the cross terms).  The four cross terms reduce to
+    /// rank-1 updates — see `python/compile/kernels/ref.py` for the algebra.
+    pub fn step(&mut self, q: &[T], k: &[T], v: &[T], gamma: T) {
+        if gamma != T::ONE {
+            self.sk.scale(gamma);
+            self.sq.scale(gamma);
+            self.p.scale(gamma);
+            ops::scale(gamma, &mut self.m);
+            self.f.scale(gamma);
+            ops::scale(gamma, &mut self.eta);
+        }
+        let kq = ops::dot(k, q);
+        let sk_q = self.sk.matvec(q); // S_{t-1}^K q
+        let sq_k = self.sq.matvec(k); // S_{t-1}^Q k
+        let k_sq_k = ops::dot(k, &sq_k);
+        let qp = self.p.t_matvec(q); // q^T P_{t-1}
+        let qm = ops::dot(q, &self.m);
+        // F += (S^K q)(kq v)^T + k(k_sq_k v)^T + k(kq q^T P)^T + k(kq^2 v)^T
+        let kq_v: Vec<T> = v.iter().map(|&x| x * kq).collect();
+        self.f.add_outer(T::ONE, &sk_q, &kq_v);
+        let mut inner: Vec<T> = v.iter().map(|&x| x * (k_sq_k + kq * kq)).collect();
+        for (a, b) in inner.iter_mut().zip(&qp) {
+            *a += kq * *b;
+        }
+        self.f.add_outer(T::ONE, k, &inner);
+        // eta += kq S^K q + (k_sq_k + kq qm + kq^2) k
+        ops::axpy(kq, &sk_q, &mut self.eta);
+        ops::axpy(k_sq_k + kq * qm + kq * kq, k, &mut self.eta);
+        // moments
+        self.sk.add_outer(T::ONE, k, k);
+        self.sq.add_outer(T::ONE, q, q);
+        self.p.add_outer(T::ONE, k, v);
+        ops::axpy(T::ONE, k, &mut self.m);
+    }
+
+    pub fn output(&self, q: &[T], opts: &HlaOptions<T>) -> Vec<T> {
+        let mut num = self.f.t_matvec(q);
+        let den = ops::dot(q, &self.eta);
+        opts.norm.apply(&mut num, den, opts.eps);
+        num
+    }
+}
+
+/// Full-sequence paper-literal third order (Algorithm 3).
+pub fn hla3_paper_serial<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    let (n, d, dv) = (q.rows, q.cols, v.cols);
+    let mut st = Hla3PaperState::new(d, dv);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        st.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+        out.row_mut(t).copy_from_slice(&st.output(q.row(t), opts));
+    }
+    out
+}
+
+/// The paper's G-form (Theorem 7.1 cross-summaries), direct from the
+/// definitions — O(d³)/token, used only to check F-form consistency.
+pub fn hla3_paper_gform<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    assert_eq!(opts.gamma, T::ONE);
+    let (n, d, dv) = (q.rows, q.cols, v.cols);
+    let mut sk = Mat::<T>::zeros(d, d);
+    let mut sq = Mat::<T>::zeros(d, d);
+    let mut p = Mat::<T>::zeros(d, dv);
+    let mut m = vec![T::ZERO; d];
+    let mut g1 = Mat::<T>::zeros(d, dv);
+    let mut g2 = Mat::<T>::zeros(d, dv);
+    let mut g3 = Mat::<T>::zeros(d, dv);
+    let mut h1 = vec![T::ZERO; d];
+    let mut h2 = vec![T::ZERO; d];
+    let mut h3 = vec![T::ZERO; d];
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        let (qt, kt, vt) = (q.row(t), k.row(t), v.row(t));
+        // G1 += kk^T S^Q_{t-1} P_{t-1}, etc.
+        let sqp = sq.matmul(&p);
+        let k_sqp = sqp.t_matvec(kt);
+        g1.add_outer(T::ONE, kt, &k_sqp);
+        let sqm = sq.matvec(&m);
+        ops::axpy(ops::dot(kt, &sqm), kt, &mut h1);
+        let sk_q = sk.matvec(qt);
+        let qp = p.t_matvec(qt);
+        g2.add_outer(T::ONE, &sk_q, &qp);
+        ops::axpy(ops::dot(qt, &m), &sk_q, &mut h2);
+        let sq_k = sq.matvec(kt);
+        let sk_sq_k = sk.matvec(&sq_k);
+        g3.add_outer(T::ONE, &sk_sq_k, vt);
+        ops::axpy(T::ONE, &sk_sq_k, &mut h3);
+        // moments
+        sk.add_outer(T::ONE, kt, kt);
+        sq.add_outer(T::ONE, qt, qt);
+        p.add_outer(T::ONE, kt, vt);
+        ops::axpy(T::ONE, kt, &mut m);
+        // num = q^T (S^K S^Q P - G1 - G2 - G3)
+        let skq = sk.t_matvec(qt); // q^T S^K
+        let skq_sq = sq.t_matvec(&skq); // q^T S^K S^Q
+        let mut num = p.t_matvec(&skq_sq);
+        for (i, x) in num.iter_mut().enumerate() {
+            *x = *x
+                - ops::dot(qt, &col(&g1, i))
+                - ops::dot(qt, &col(&g2, i))
+                - ops::dot(qt, &col(&g3, i));
+        }
+        let den = ops::dot(&skq_sq, &m)
+            - ops::dot(qt, &h1)
+            - ops::dot(qt, &h2)
+            - ops::dot(qt, &h3);
+        let mut o = num;
+        opts.norm.apply(&mut o, den, opts.eps);
+        out.row_mut(t).copy_from_slice(&o);
+    }
+    out
+}
+
+fn col<T: Scalar>(m: &Mat<T>, j: usize) -> Vec<T> {
+    (0..m.rows).map(|i| m[(i, j)]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, n: usize, d: usize, dv: usize) -> (Mat<f64>, Mat<f64>, Mat<f64>) {
+        let s = 1.0 / (d as f64).sqrt();
+        let mk = |rng: &mut Rng, r: usize, c: usize, sc: f64| {
+            let mut m = Mat::zeros(r, c);
+            for x in &mut m.data {
+                *x = rng.normal() * sc;
+            }
+            m
+        };
+        (mk(rng, n, d, s), mk(rng, n, d, s), mk(rng, n, dv, 1.0))
+    }
+
+    #[test]
+    fn canonical_matches_quadratic() {
+        testing::quick("hla3 canonical==quadratic", 16, |rng, _| {
+            let n = rng.range(1, 20);
+            let (q, k, v) = random(rng, n, 4, 4);
+            let opts = HlaOptions::default();
+            testing::assert_close(
+                &hla3_serial(&q, &k, &v, &opts).data,
+                &hla3_quadratic(&q, &k, &v, &opts).data,
+                1e-9,
+                "canonical",
+            )
+        });
+    }
+
+    #[test]
+    fn paper_fform_matches_gform() {
+        testing::quick("hla3 paper F==G (Thm 7.1 consistency)", 12, |rng, _| {
+            let n = rng.range(1, 16);
+            let (q, k, v) = random(rng, n, 3, 4);
+            let opts = HlaOptions::default();
+            testing::assert_close(
+                &hla3_paper_serial(&q, &k, &v, &opts).data,
+                &hla3_paper_gform(&q, &k, &v, &opts).data,
+                1e-9,
+                "paper-form",
+            )
+        });
+    }
+
+    #[test]
+    fn paper_form_differs_from_canonical() {
+        let mut rng = Rng::new(13);
+        let (q, k, v) = random(&mut rng, 12, 4, 4);
+        let opts = HlaOptions::default();
+        let paper = hla3_paper_serial(&q, &k, &v, &opts);
+        let canon = hla3_serial(&q, &k, &v, &opts);
+        assert!(paper.max_abs_diff(&canon) > 1e-9, "erratum #4: operators differ");
+        // but they agree on the first token
+        testing::assert_close(paper.row(0), canon.row(0), 1e-10, "t=0").unwrap();
+    }
+
+    #[test]
+    fn both_forms_are_causal() {
+        let mut rng = Rng::new(14);
+        let (q, k, v) = random(&mut rng, 14, 3, 3);
+        let (q2, k2, v2) = random(&mut rng, 14, 3, 3);
+        let opts = HlaOptions::default().with_gamma(0.9);
+        let t = 6usize;
+        let splice = |a: &Mat<f64>, b: &Mat<f64>| {
+            let mut m = a.clone();
+            for i in (t + 1)..14 {
+                m.row_mut(i).copy_from_slice(b.row(i));
+            }
+            m
+        };
+        for f in [hla3_serial::<f64>, hla3_paper_serial::<f64>] {
+            let base = f(&q, &k, &v, &opts);
+            let pert = f(&splice(&q, &q2), &splice(&k, &k2), &splice(&v, &v2), &opts);
+            for i in 0..=t {
+                testing::assert_close(base.row(i), pert.row(i), 1e-12, "causal").unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_state_smaller_than_paper_state() {
+        // canonical drops the S^Q moment: (S,P,F) + (m,eta) vs paper's
+        // (S^K,S^Q,P,F) + (m,eta)
+        let canon = Hla3State::<f32>::new(64, 64);
+        assert_eq!(canon.nbytes(), 4 * (3 * 64 * 64 + 2 * 64));
+        let paper = Hla3PaperState::<f32>::new(64, 64);
+        let paper_bytes = 4
+            * (paper.sk.data.len()
+                + paper.sq.data.len()
+                + paper.p.data.len()
+                + paper.m.len()
+                + paper.f.data.len()
+                + paper.eta.len());
+        assert_eq!(paper_bytes, 4 * (4 * 64 * 64 + 2 * 64));
+        assert!(canon.nbytes() < paper_bytes);
+    }
+}

@@ -1,0 +1,31 @@
+//! # hla — Higher-order Linear Attention, reproduced as a serving/training framework
+//!
+//! A production-shaped reproduction of *Higher-order Linear Attention*
+//! (Zhang, Qin, Wang, Gu, 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas chunk kernels, AOT-lowered.
+//! * **L2** (`python/compile/model.py`) — JAX HLA transformer (fwd/bwd,
+//!   prefill, decode), exported as HLO text artifacts.
+//! * **L3** (this crate) — the runtime and coordinator: PJRT execution of
+//!   the artifacts, continuous-batching decode with constant-size HLA
+//!   state, a training driver, plus a from-scratch reimplementation of the
+//!   paper's full algebra (`hla`) used for verification and CPU baselines.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-claim ↔ measurement map (benches E1–E12).
+
+pub mod attention;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod hla;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod train;
+pub mod workload;
+pub mod metrics;
+pub mod tensor;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,9 @@
+//! `hla` binary entrypoint — see `cli::USAGE`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = hla::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,258 @@
+//! Metrics substrate: log-bucketed latency histograms with percentile
+//! queries, throughput meters and a table reporter — replaces
+//! hdrhistogram/prometheus for the serving benches (E8) and the CLI.
+
+use std::time::{Duration, Instant};
+
+/// Log-bucketed histogram over microsecond latencies.
+///
+/// Buckets grow geometrically (~4.6% width) from 1us to ~1100s, giving
+/// percentile error well under the measurement jitter of the benches.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+const BUCKETS: usize = 460;
+const GROWTH: f64 = 1.046;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; BUCKETS],
+            count: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        (us.ln() / GROWTH.ln()).floor().min((BUCKETS - 1) as f64) as usize
+    }
+
+    fn bucket_value(i: usize) -> f64 {
+        GROWTH.powi(i as i32) * (1.0 + GROWTH) / 2.0
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// p in [0, 100].
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i).clamp(self.min_us, self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
+            self.count,
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.max_us
+        )
+    }
+}
+
+/// Events-per-second meter over a wall-clock window.
+#[derive(Debug)]
+pub struct Meter {
+    start: Instant,
+    events: u64,
+    units: u64,
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Meter { start: Instant::now(), events: 0, units: 0 }
+    }
+
+    /// Record one event carrying `units` work items (e.g. tokens).
+    pub fn tick(&mut self, units: u64) {
+        self.events += 1;
+        self.units += units;
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn units_per_sec(&self) -> f64 {
+        self.units as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn units(&self) -> u64 {
+        self.units
+    }
+}
+
+/// Fixed-width ASCII table writer for the bench harnesses (criterion-less).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{:>width$}", c, width = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.percentile_us(50.0);
+        let p95 = h.percentile_us(95.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // within bucket resolution of the true values
+        assert!((p50 - 500.0).abs() / 500.0 < 0.08, "{p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.08, "{p99}");
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record_us(10.0);
+        b.record_us(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.percentile_us(99.0) > 500.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["n", "tput"]);
+        t.row(&["1024".into(), "3.5".into()]);
+        t.row(&["64".into(), "12.25".into()]);
+        let s = t.render();
+        assert!(s.contains("1024"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn meter_counts() {
+        let mut m = Meter::new();
+        m.tick(10);
+        m.tick(20);
+        assert_eq!(m.events(), 2);
+        assert_eq!(m.units(), 30);
+        assert!(m.units_per_sec() > 0.0);
+    }
+}

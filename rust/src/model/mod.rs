@@ -1,0 +1,231 @@
+//! Pure-Rust HLA transformer (reference + CPU serving baseline).
+//!
+//! Mirrors `python/compile/model.py` exactly: same parameter layout (via the
+//! manifest's tree-flatten order), same RMSNorm/SwiGLU/tied-head block, same
+//! mixer semantics (delegating to `crate::hla`).  Used to
+//! * verify the AOT HLO path end-to-end (integration test: Rust forward ==
+//!   `fwd_<cfg>` artifact logits), and
+//! * serve as the no-XLA CPU decode baseline in benches.
+
+pub mod params;
+pub mod sampler;
+
+use crate::attention::{KvCache, LinearAttnState};
+use crate::hla::ahla::AhlaState;
+use crate::hla::state2::Hla2State;
+use crate::hla::state3::Hla3State;
+use crate::hla::{HlaOptions, NormMode};
+use crate::runtime::ModelCfg;
+use crate::tensor::{ops, Mat};
+pub use params::RustModel;
+
+/// Per-head recurrent mixer state (the serving state).
+#[derive(Debug, Clone)]
+pub enum MixerState {
+    Hla2(Hla2State<f32>),
+    Ahla(AhlaState<f32>),
+    Hla3(Hla3State<f32>),
+    Linear(LinearAttnState<f32>),
+    /// Softmax baseline: the KV-cache grows with context length.
+    Softmax(KvCache),
+}
+
+impl MixerState {
+    pub fn new(mixer: &str, dh: usize) -> MixerState {
+        match mixer {
+            "hla2" => MixerState::Hla2(Hla2State::new(dh, dh)),
+            "ahla" => MixerState::Ahla(AhlaState::new(dh, dh)),
+            "hla3" => MixerState::Hla3(Hla3State::new(dh, dh)),
+            "linear" => MixerState::Linear(LinearAttnState::new(dh, dh)),
+            "softmax" => MixerState::Softmax(KvCache::new()),
+            other => panic!("unknown mixer {other:?}"),
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        match self {
+            MixerState::Hla2(s) => s.nbytes(),
+            MixerState::Ahla(s) => s.nbytes(),
+            MixerState::Hla3(s) => s.nbytes(),
+            MixerState::Linear(s) => s.nbytes(),
+            MixerState::Softmax(c) => c.nbytes(),
+        }
+    }
+
+    /// One token through one head: update state, produce the head output.
+    pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], opts: &HlaOptions<f32>) -> Vec<f32> {
+        match self {
+            MixerState::Hla2(s) => {
+                s.step(q, k, v, opts.gamma);
+                s.output(q, opts)
+            }
+            MixerState::Ahla(s) => {
+                s.step(q, k, v, opts.gamma);
+                s.output(q, opts)
+            }
+            MixerState::Hla3(s) => {
+                s.step(q, k, v, opts.gamma);
+                s.output(q, opts)
+            }
+            MixerState::Linear(s) => {
+                s.step(k, v, opts.gamma);
+                s.output(q, opts.norm, opts.eps)
+            }
+            MixerState::Softmax(c) => c.step(q, k, v, 1.0),
+        }
+    }
+}
+
+/// Whole-model recurrent state: `[n_layers][n_heads]`.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub layers: Vec<Vec<MixerState>>,
+}
+
+impl ModelState {
+    pub fn new(cfg: &ModelCfg) -> ModelState {
+        ModelState {
+            layers: (0..cfg.n_layers)
+                .map(|_| (0..cfg.n_heads).map(|_| MixerState::new(&cfg.mixer, cfg.head_dim)).collect())
+                .collect(),
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.layers.iter().flatten().map(|s| s.nbytes()).sum()
+    }
+}
+
+pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let ms = ops::dot(x, x) / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * inv * wi;
+    }
+}
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Mixer options derived from a model config.
+pub fn mixer_opts(cfg: &ModelCfg) -> HlaOptions<f32> {
+    HlaOptions {
+        gamma: cfg.gamma as f32,
+        lambda: cfg.lam as f32,
+        norm: NormMode::parse(&cfg.norm_mode).unwrap_or(NormMode::Abs),
+        eps: cfg.eps as f32,
+        masked: true,
+    }
+}
+
+impl RustModel {
+    /// One decode step for a single sequence: token -> logits, state updated
+    /// in place.  This is the O(1)-memory serving path (except softmax).
+    pub fn decode_step(&self, state: &mut ModelState, token: u8) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let dh = cfg.head_dim;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let opts = mixer_opts(cfg);
+        let mut x = self.embed.row(token as usize).to_vec();
+        let mut h = vec![0f32; d];
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(&x, &layer.norm1, &mut h);
+            let q = layer.wq.t_matvec(&h);
+            let k = layer.wk.t_matvec(&h);
+            let v = layer.wv.t_matvec(&h);
+            let mut heads_out = vec![0f32; cfg.n_heads * dh];
+            for hi in 0..cfg.n_heads {
+                let kvh = if cfg.multi_query { 0 } else { hi };
+                let qh: Vec<f32> = q[hi * dh..(hi + 1) * dh].iter().map(|&x| x * scale).collect();
+                let kh: Vec<f32> =
+                    k[kvh * dh..(kvh + 1) * dh].iter().map(|&x| x * scale).collect();
+                let vh = &v[kvh * dh..(kvh + 1) * dh];
+                let o = state.layers[li][hi].step(&qh, &kh, vh, &opts);
+                heads_out[hi * dh..(hi + 1) * dh].copy_from_slice(&o);
+            }
+            let proj = layer.wo.t_matvec(&heads_out);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+            rmsnorm(&x, &layer.norm2, &mut h);
+            let gate = layer.w_gate.t_matvec(&h);
+            let up = layer.w_up.t_matvec(&h);
+            let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
+            let down = layer.w_down.t_matvec(&act);
+            for (xi, di) in x.iter_mut().zip(&down) {
+                *xi += di;
+            }
+        }
+        rmsnorm(&x.clone(), &self.norm_f, &mut x);
+        // tied LM head: logits = embed @ x
+        self.embed.matvec(&x)
+    }
+
+    /// Full forward over a token sequence (teacher-forced), returning the
+    /// logits matrix [n, vocab].  Uses the streaming path per token, which
+    /// equals the chunked training forward exactly (Theorem 4.1).
+    pub fn forward(&self, tokens: &[u8]) -> Mat<f32> {
+        let mut state = ModelState::new(&self.cfg);
+        let mut out = Mat::zeros(tokens.len(), self.cfg.vocab);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let logits = self.decode_step(&mut state, tok);
+            out.row_mut(t).copy_from_slice(&logits);
+        }
+        out
+    }
+
+    /// Mean next-token cross entropy over a sequence.
+    pub fn loss(&self, tokens: &[u8]) -> f32 {
+        assert!(tokens.len() >= 2);
+        let logits = self.forward(&tokens[..tokens.len() - 1]);
+        let mut total = 0.0;
+        for t in 0..tokens.len() - 1 {
+            let row = logits.row(t);
+            let lse = ops::logsumexp(row);
+            total += lse - row[tokens[t + 1] as usize];
+        }
+        total / (tokens.len() - 1) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0f32, 4.0];
+        let w = vec![1.0f32, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&x, &w, &mut out);
+        let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 2.0;
+        assert!((ms - 1.0).abs() < 1e-4, "{ms}");
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!(silu(10.0) > 9.9);
+        assert!(silu(-10.0) > -1e-3);
+    }
+
+    #[test]
+    fn mixer_state_sizes_ranked() {
+        // linear < ahla == (P,m,E,n) < hla2 (has S) ; softmax grows
+        let lin = MixerState::new("linear", 32);
+        let ahla = MixerState::new("ahla", 32);
+        let hla2 = MixerState::new("hla2", 32);
+        assert!(lin.nbytes() < ahla.nbytes());
+        assert!(ahla.nbytes() < hla2.nbytes());
+        let mut sm = MixerState::new("softmax", 32);
+        let opts = HlaOptions::<f32>::default();
+        assert_eq!(sm.nbytes(), 0);
+        let z = vec![0.1f32; 32];
+        for _ in 0..10 {
+            sm.step(&z, &z, &z, &opts);
+        }
+        assert_eq!(sm.nbytes(), 10 * 2 * 32 * 4);
+    }
+}

@@ -1,0 +1,144 @@
+//! Parameter container + loading from the manifest's tree-flatten order.
+//!
+//! `aot.py` records `param_paths` like `"['layers'][0]['wq']"` in the exact
+//! order the flat parameter tensors appear in every artifact signature; this
+//! module parses those names so the Rust model binds each tensor to the
+//! right weight regardless of tree layout changes.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::ModelCfg;
+use crate::tensor::{Mat, Tensor};
+
+/// One transformer layer's weights.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub norm1: Vec<f32>,
+    pub wq: Mat<f32>,
+    pub wk: Mat<f32>,
+    pub wv: Mat<f32>,
+    pub wo: Mat<f32>,
+    pub norm2: Vec<f32>,
+    pub w_gate: Mat<f32>,
+    pub w_up: Mat<f32>,
+    pub w_down: Mat<f32>,
+}
+
+/// The full model: config + weights (embedding is the tied LM head).
+#[derive(Debug, Clone)]
+pub struct RustModel {
+    pub cfg: ModelCfg,
+    pub embed: Mat<f32>,
+    pub norm_f: Vec<f32>,
+    pub layers: Vec<Layer>,
+}
+
+/// A parsed parameter path: layer index (None = top level) + field name.
+fn parse_path(path: &str) -> Result<(Option<usize>, String)> {
+    // formats: "['embed']", "['layers'][3]['wq']", "['norm_f']"
+    let parts: Vec<&str> = path
+        .split(['[', ']'])
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim_matches('\''))
+        .collect();
+    match parts.as_slice() {
+        [field] => Ok((None, field.to_string())),
+        ["layers", idx, field] => Ok((Some(idx.parse()?), field.to_string())),
+        _ => bail!("unparseable param path {path:?}"),
+    }
+}
+
+impl RustModel {
+    /// Bind flat parameter tensors (artifact order) to model weights.
+    pub fn from_tensors(cfg: &ModelCfg, tensors: &[Tensor]) -> Result<RustModel> {
+        if tensors.len() != cfg.param_paths.len() {
+            bail!("expected {} param tensors, got {}", cfg.param_paths.len(), tensors.len());
+        }
+        let mut embed = None;
+        let mut norm_f = None;
+        let mut layers: Vec<Option<Layer>> = (0..cfg.n_layers).map(|_| None).collect();
+        let blank = |cfg: &ModelCfg| Layer {
+            norm1: vec![],
+            wq: Mat::zeros(0, 0),
+            wk: Mat::zeros(0, 0),
+            wv: Mat::zeros(0, 0),
+            wo: Mat::zeros(0, 0),
+            norm2: vec![],
+            w_gate: Mat::zeros(cfg.d_model, 0),
+            w_up: Mat::zeros(0, 0),
+            w_down: Mat::zeros(0, 0),
+        };
+        for ((path, shape), tensor) in cfg.param_paths.iter().zip(tensors) {
+            if &tensor.shape != shape {
+                bail!("param {path}: manifest shape {shape:?} != tensor {:?}", tensor.shape);
+            }
+            let (layer_idx, field) = parse_path(path)?;
+            match layer_idx {
+                None => match field.as_str() {
+                    "embed" => embed = Some(tensor.to_mat()),
+                    "norm_f" => norm_f = Some(tensor.data.clone()),
+                    other => bail!("unknown top-level param {other:?}"),
+                },
+                Some(li) => {
+                    let slot = layers
+                        .get_mut(li)
+                        .ok_or_else(|| anyhow!("layer index {li} out of range"))?;
+                    let layer = slot.get_or_insert_with(|| blank(cfg));
+                    match field.as_str() {
+                        "norm1" => layer.norm1 = tensor.data.clone(),
+                        "norm2" => layer.norm2 = tensor.data.clone(),
+                        "wq" => layer.wq = tensor.to_mat(),
+                        "wk" => layer.wk = tensor.to_mat(),
+                        "wv" => layer.wv = tensor.to_mat(),
+                        "wo" => layer.wo = tensor.to_mat(),
+                        "w_gate" => layer.w_gate = tensor.to_mat(),
+                        "w_up" => layer.w_up = tensor.to_mat(),
+                        "w_down" => layer.w_down = tensor.to_mat(),
+                        other => bail!("unknown layer param {other:?}"),
+                    }
+                }
+            }
+        }
+        Ok(RustModel {
+            cfg: cfg.clone(),
+            embed: embed.ok_or_else(|| anyhow!("missing embed"))?,
+            norm_f: norm_f.ok_or_else(|| anyhow!("missing norm_f"))?,
+            layers: layers
+                .into_iter()
+                .enumerate()
+                .map(|(i, l)| l.ok_or_else(|| anyhow!("missing layer {i}")))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        let layer_n: usize = self
+            .layers
+            .iter()
+            .map(|l| {
+                l.norm1.len()
+                    + l.norm2.len()
+                    + l.wq.data.len()
+                    + l.wk.data.len()
+                    + l.wv.data.len()
+                    + l.wo.data.len()
+                    + l.w_gate.data.len()
+                    + l.w_up.data.len()
+                    + l.w_down.data.len()
+            })
+            .sum();
+        self.embed.data.len() + self.norm_f.len() + layer_n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_paths() {
+        assert_eq!(parse_path("['embed']").unwrap(), (None, "embed".into()));
+        assert_eq!(parse_path("['layers'][3]['wq']").unwrap(), (Some(3), "wq".into()));
+        assert!(parse_path("['a'][1]['b'][2]").is_err());
+    }
+}

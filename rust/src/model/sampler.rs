@@ -1,0 +1,104 @@
+//! Token sampling policies for generation.
+
+use crate::tensor::ops;
+use crate::util::rng::Rng;
+
+/// Sampling configuration for a generation request.
+#[derive(Debug, Clone)]
+pub struct SamplerCfg {
+    pub temperature: f32,
+    /// 0 disables top-k truncation.
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplerCfg {
+    fn default() -> Self {
+        SamplerCfg { temperature: 1.0, top_k: 0, seed: 0 }
+    }
+}
+
+impl SamplerCfg {
+    pub fn greedy() -> Self {
+        SamplerCfg { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+/// Stateful sampler (owns its RNG stream).
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    pub cfg: SamplerCfg,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(cfg: SamplerCfg) -> Sampler {
+        let rng = Rng::new(cfg.seed);
+        Sampler { cfg, rng }
+    }
+
+    /// Sample a token id from raw logits.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        if self.cfg.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        let mut probs: Vec<f32> =
+            logits.iter().map(|&l| l / self.cfg.temperature).collect();
+        if self.cfg.top_k > 0 && self.cfg.top_k < probs.len() {
+            // mask everything below the k-th largest logit
+            let mut sorted: Vec<f32> = probs.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let cutoff = sorted[self.cfg.top_k - 1];
+            for p in probs.iter_mut() {
+                if *p < cutoff {
+                    *p = f32::NEG_INFINITY;
+                }
+            }
+        }
+        ops::softmax_inplace(&mut probs);
+        self.rng.categorical(&probs)
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(SamplerCfg::greedy());
+        assert_eq!(s.sample(&[0.1, 5.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut s = Sampler::new(SamplerCfg { temperature: 1.0, top_k: 2, seed: 7 });
+        let logits = vec![10.0, 9.0, -50.0, -50.0];
+        for _ in 0..50 {
+            let t = s.sample(&logits);
+            assert!(t < 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn temperature_flattens() {
+        let logits = vec![2.0, 0.0];
+        let mut hot = Sampler::new(SamplerCfg { temperature: 10.0, top_k: 0, seed: 1 });
+        let mut cold = Sampler::new(SamplerCfg { temperature: 0.05, top_k: 0, seed: 1 });
+        let count = |s: &mut Sampler| (0..500).filter(|_| s.sample(&logits) == 1).count();
+        let hot_minor = count(&mut hot);
+        let cold_minor = count(&mut cold);
+        assert!(hot_minor > 100, "{hot_minor}");
+        assert!(cold_minor < 10, "{cold_minor}");
+    }
+}

@@ -1,0 +1,259 @@
+//! Manifest parsing: `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) describes every AOT artifact's I/O signature and
+//! every model config's layout (parameter/state tree-flatten order).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// dtype + shape of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j.get("shape").and_then(Json::as_shape).ok_or_else(|| anyhow!("shape"))?,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("dtype"))?
+                .to_string(),
+        })
+    }
+}
+
+/// One AOT artifact (an HLO-text program).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub kind: String,
+    pub config: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A model configuration (mirrors `model.HlaConfig` + shapes).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ffn: usize,
+    pub kv_heads: usize,
+    pub mixer: String,
+    pub chunk: usize,
+    pub gamma: f64,
+    pub lam: f64,
+    pub norm_mode: String,
+    pub eps: f64,
+    pub multi_query: bool,
+    pub n_params: usize,
+    pub n_param_tensors: usize,
+    pub n_state_tensors: usize,
+    /// (name, shape) in tree-flatten order.
+    pub param_paths: Vec<(String, Vec<usize>)>,
+    pub state_paths: Vec<(String, Vec<usize>)>,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub decode_batch: usize,
+    pub prefill_len: usize,
+}
+
+impl ModelCfg {
+    /// Bytes of recurrent state for the whole decode batch.
+    pub fn state_nbytes(&self) -> usize {
+        self.state_paths.iter().map(|(_, s)| s.iter().product::<usize>() * 4).sum()
+    }
+
+    /// Bytes of recurrent state per sequence (one decode lane).
+    pub fn state_nbytes_per_seq(&self) -> usize {
+        self.state_nbytes() / self.decode_batch.max(1)
+    }
+
+    /// Softmax-baseline KV-cache bytes per sequence at context length n.
+    pub fn kv_cache_nbytes(&self, n: usize) -> usize {
+        2 * n * self.n_layers * self.kv_heads * self.head_dim * 4
+    }
+
+    fn from_json(name: &str, j: &Json) -> Result<ModelCfg> {
+        let us =
+            |k: &str| j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("cfg field {k}"));
+        let fl = |k: &str| j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("cfg field {k}"));
+        let st = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("cfg field {k}"))
+        };
+        let paths = |k: &str| -> Result<Vec<(String, Vec<usize>)>> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("cfg field {k}"))?
+                .iter()
+                .map(|e| {
+                    let name = e.idx(0).and_then(Json::as_str).ok_or_else(|| anyhow!("path"))?;
+                    let shape = e.idx(1).and_then(Json::as_shape).ok_or_else(|| anyhow!("shape"))?;
+                    Ok((name.to_string(), shape))
+                })
+                .collect()
+        };
+        Ok(ModelCfg {
+            name: name.to_string(),
+            vocab: us("vocab")?,
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            head_dim: us("head_dim")?,
+            d_ffn: us("d_ffn")?,
+            kv_heads: us("kv_heads")?,
+            mixer: st("mixer")?,
+            chunk: us("chunk")?,
+            gamma: fl("gamma")?,
+            lam: fl("lam")?,
+            norm_mode: st("norm_mode")?,
+            eps: fl("eps")?,
+            multi_query: j.get("multi_query").and_then(Json::as_bool).unwrap_or(false),
+            n_params: us("n_params")?,
+            n_param_tensors: us("n_param_tensors")?,
+            n_state_tensors: us("n_state_tensors")?,
+            param_paths: paths("param_paths")?,
+            state_paths: paths("state_paths")?,
+            train_batch: us("train_batch")?,
+            train_seq: us("train_seq")?,
+            decode_batch: us("decode_batch")?,
+            prefill_len: us("prefill_len")?,
+        })
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ModelCfg>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut m = Manifest::default();
+        if let Some(cfgs) = j.get("configs").and_then(Json::as_obj) {
+            for (name, cj) in cfgs {
+                m.configs.insert(name.clone(), ModelCfg::from_json(name, cj)?);
+            }
+        }
+        if let Some(arts) = j.get("artifacts").and_then(Json::as_obj) {
+            for (name, aj) in arts {
+                let get_specs = |k: &str| -> Result<Vec<TensorSpec>> {
+                    aj.get(k)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("artifact {name}: {k}"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect()
+                };
+                m.artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        file: aj
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("file"))?
+                            .to_string(),
+                        kind: aj
+                            .get("kind")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        config: aj
+                            .get("config")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        inputs: get_specs("inputs")?,
+                        outputs: get_specs("outputs")?,
+                    },
+                );
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "configs": {
+        "t": {"vocab": 256, "d_model": 64, "n_layers": 2, "n_heads": 2,
+              "head_dim": 32, "d_ffn": 160, "kv_heads": 2, "mixer": "hla2",
+              "chunk": 16, "gamma": 0.99, "lam": 0.0, "norm_mode": "abs",
+              "eps": 1e-6, "multi_query": false, "n_params": 110000,
+              "n_param_tensors": 20, "n_state_tensors": 5,
+              "param_paths": [["['embed']", [256, 64]]],
+              "state_paths": [["['c']", [2, 2, 2, 32, 32]]],
+              "train_batch": 2, "train_seq": 32, "decode_batch": 2,
+              "prefill_len": 16, "ffn_mult": 2.6667, "name": "t"}
+      },
+      "artifacts": {
+        "fwd_t": {"file": "fwd_t.hlo.txt", "kind": "fwd", "config": "t",
+                   "inputs": [{"shape": [2, 32], "dtype": "int32"}],
+                   "outputs": [{"shape": [2, 32, 256], "dtype": "float32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let cfg = &m.configs["t"];
+        assert_eq!(cfg.d_model, 64);
+        assert_eq!(cfg.param_paths[0].0, "['embed']");
+        assert_eq!(cfg.state_paths[0].1, vec![2, 2, 2, 32, 32]);
+        let a = &m.artifacts["fwd_t"];
+        assert_eq!(a.inputs[0].shape, vec![2, 32]);
+        assert_eq!(a.outputs[0].dtype, "float32");
+    }
+
+    #[test]
+    fn state_memory_accounting() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let cfg = &m.configs["t"];
+        assert_eq!(cfg.state_nbytes(), 2 * 2 * 2 * 32 * 32 * 4);
+        assert_eq!(cfg.state_nbytes_per_seq(), cfg.state_nbytes() / 2);
+        // KV cache grows with n, state does not
+        assert!(cfg.kv_cache_nbytes(100_000) > 100 * cfg.state_nbytes_per_seq());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.configs.contains_key("micro"));
+            let micro = &m.configs["micro"];
+            assert_eq!(micro.n_state_tensors, micro.state_paths.len());
+            assert!(m.artifacts.contains_key("decode_step_micro"));
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Host tensor ⇄ `xla::Literal` conversions (f32 and i32 payloads).
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::{Tensor, TensorI32};
+
+/// A host-side input value for `Engine::run_host`.
+#[derive(Debug, Clone)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(TensorI32),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl HostValue {
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostValue::F32(t) => tensor_to_literal(t),
+            HostValue::I32(t) => tokens_to_literal(t),
+            HostValue::ScalarF32(v) => Ok(xla::Literal::scalar(*v)),
+            HostValue::ScalarI32(v) => Ok(xla::Literal::scalar(*v)),
+        }
+    }
+}
+
+impl From<Tensor> for HostValue {
+    fn from(t: Tensor) -> Self {
+        HostValue::F32(t)
+    }
+}
+
+impl From<TensorI32> for HostValue {
+    fn from(t: TensorI32) -> Self {
+        HostValue::I32(t)
+    }
+}
+
+/// f32 tensor -> literal (rank 0 handled via scalar).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    if t.shape.is_empty() {
+        return Ok(xla::Literal::scalar(t.data[0]));
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// i32 tensor -> literal.
+pub fn tokens_to_literal(t: &TensorI32) -> Result<xla::Literal> {
+    if t.shape.is_empty() {
+        return Ok(xla::Literal::scalar(t.data[0]));
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// literal -> f32 tensor (errors on non-f32 payloads).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal_to_tensor: {e}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// literal -> i32 tensor.
+pub fn literal_to_tokens(lit: &xla::Literal) -> Result<TensorI32> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<i32>().map_err(|e| anyhow!("literal_to_tokens: {e}"))?;
+    Ok(TensorI32::from_vec(&dims, data))
+}

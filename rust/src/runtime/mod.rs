@@ -1,0 +1,187 @@
+//! Runtime: load AOT artifacts (HLO text) and execute them on the PJRT CPU
+//! client — the only place the `xla` crate is touched.
+//!
+//! Threading: the xla wrapper types hold raw pointers and are not `Send`;
+//! the [`Engine`] therefore lives on exactly one thread (the coordinator's
+//! engine loop, the trainer main thread, or a bench).  Cross-thread access
+//! goes through `coordinator`'s message channels.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod literal;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::Histogram;
+use crate::tensor::{Tensor, TensorI32};
+pub use artifact::{ArtifactSpec, Manifest, ModelCfg, TensorSpec};
+pub use literal::{literal_to_tensor, tensor_to_literal, tokens_to_literal, HostValue};
+
+/// A compiled artifact plus its manifest spec.
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host literals; returns untupled output literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with *borrowed* literals — the decode hot path: callers keep
+    /// params/state alive across steps and pass references, so nothing is
+    /// deep-copied per step (EXPERIMENTS.md §Perf item 2).
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let out = self.exe.execute(inputs)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (the decode hot path): inputs
+    /// stay on device, outputs come back as device buffers (untupled when
+    /// PJRT returns a flattened row, otherwise via one host round-trip).
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let out = self.exe.execute_b(inputs)?;
+        let mut row = out.into_iter().next().ok_or_else(|| anyhow!("no replica output"))?;
+        if row.len() == 1 && self.spec.outputs.len() > 1 {
+            // single tuple buffer: round-trip through a literal to untuple
+            let lit = row[0].to_literal_sync()?;
+            let parts = lit.to_tuple()?;
+            let client = self.exe.client();
+            let device = client.devices().into_iter().next().ok_or_else(|| anyhow!("no device"))?;
+            return parts
+                .iter()
+                .map(|l| Ok(client.buffer_from_host_literal(Some(&device), l)?))
+                .collect();
+        }
+        Ok(row.drain(..).collect())
+    }
+}
+
+/// PJRT CPU engine: artifact registry + executable cache (single-threaded).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// compile + execute timing, for the perf log
+    pub compile_hist: RefCell<Histogram>,
+    pub exec_hist: RefCell<Histogram>,
+}
+
+impl Engine {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_hist: RefCell::new(Histogram::new()),
+            exec_hist: RefCell::new(Histogram::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let start = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compile_hist.borrow_mut().record(start.elapsed());
+        let exec = Rc::new(Executable { name: name.to_string(), spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Host-tensor convenience execute (copies in and out), timed.
+    pub fn run_host(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<Tensor>> {
+        let exe = self.load(name)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|h| h.to_literal()).collect::<Result<_>>()?;
+        let start = Instant::now();
+        let outs = exe.run(&lits)?;
+        self.exec_hist.borrow_mut().record(start.elapsed());
+        outs.iter().map(literal_to_tensor).collect()
+    }
+
+    /// Upload a literal to the device.
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let device = self.client.devices().into_iter().next().ok_or_else(|| anyhow!("no device"))?;
+        Ok(self.client.buffer_from_host_literal(Some(&device), lit)?)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn tensor_to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.to_device(&tensor_to_literal(t)?)
+    }
+
+    pub fn tokens_to_device(&self, t: &TensorI32) -> Result<xla::PjRtBuffer> {
+        self.to_device(&tokens_to_literal(t)?)
+    }
+
+    /// Run `init_<cfg>` and return the parameter literals (host side).
+    pub fn init_params(&self, cfg: &str, seed: i32) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(&format!("init_{cfg}"))?;
+        exe.run(&[xla::Literal::scalar(seed)])
+    }
+
+    pub fn model_cfg(&self, name: &str) -> Result<&ModelCfg> {
+        self.manifest.configs.get(name).ok_or_else(|| anyhow!("config {name:?} not in manifest"))
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}

@@ -1,0 +1,86 @@
+//! Blocking client for the line-JSON serving protocol (examples + benches).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One completed generation with client-side timing.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub text: String,
+    pub tokens: Vec<u8>,
+    pub finish: String,
+    /// time to first token
+    pub ttft: Duration,
+    /// total request latency
+    pub latency: Duration,
+}
+
+/// A persistent connection to the HLA server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Submit a prompt and stream the whole completion.
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        max_tokens: usize,
+        temperature: f32,
+        session: Option<u64>,
+    ) -> Result<Completion> {
+        let mut req = vec![
+            ("prompt", Json::str(prompt)),
+            ("max_tokens", Json::num(max_tokens as f64)),
+            ("temperature", Json::num(temperature as f64)),
+        ];
+        if let Some(s) = session {
+            req.push(("session", Json::num(s as f64)));
+        }
+        let start = Instant::now();
+        writeln!(self.writer, "{}", Json::obj(req))?;
+
+        let mut tokens = Vec::new();
+        let mut ttft = None;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(anyhow!("server closed connection mid-response"));
+            }
+            let msg = Json::parse(&line).map_err(|e| anyhow!("bad server line: {e}"))?;
+            if let Some(err) = msg.get("error").and_then(Json::as_str) {
+                return Err(anyhow!("server error: {err}"));
+            }
+            if let Some(tok) = msg.get("token").and_then(Json::as_i64) {
+                if ttft.is_none() {
+                    ttft = Some(start.elapsed());
+                }
+                tokens.push(tok as u8);
+            }
+            if msg.get("done").and_then(Json::as_bool) == Some(true) {
+                let finish =
+                    msg.get("finish").and_then(Json::as_str).unwrap_or("unknown").to_string();
+                return Ok(Completion {
+                    text: String::from_utf8_lossy(&tokens).to_string(),
+                    tokens,
+                    finish,
+                    ttft: ttft.unwrap_or_else(|| start.elapsed()),
+                    latency: start.elapsed(),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! TCP serving frontend: newline-delimited JSON over a plain socket.
+//!
+//! Protocol (one JSON object per line):
+//!   → `{"prompt": "...", "max_tokens": 32, "temperature": 0.8,
+//!      "top_k": 40, "seed": 7, "session": 123}`
+//!   ← `{"token": 104, "text": "h"}`           (streamed, one per token)
+//!   ← `{"done": true, "finish": "length", "n": 32}`  (final)
+//!
+//! The listener accepts on a std TcpListener; each connection gets a
+//! handler thread that submits to the [`Router`] and forwards token events
+//! back down the socket.  `shutdown` drops the router (closing all engine
+//! channels) so engine loops drain and exit.
+
+pub mod client;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::router::Router;
+use crate::coordinator::{FinishReason, GenRequest};
+use crate::model::sampler::SamplerCfg;
+use crate::util::json::Json;
+
+/// Serve until `stop` is set.  Returns the bound address immediately via
+/// the callback so tests can connect to an ephemeral port.
+pub fn serve(
+    addr: &str,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let router = router.clone();
+                // handlers are detached: they exit when their client hangs
+                // up (read_line returns 0), so shutdown never blocks on a
+                // connection that is idle but still open.
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &router);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match handle_request(&line, router, &mut writer) {
+            Ok(()) => {}
+            Err(e) => {
+                let err = Json::obj(vec![("error", Json::str(e.to_string()))]);
+                writeln!(writer, "{err}")?;
+            }
+        }
+    }
+    log::debug!("connection from {peer} closed");
+    Ok(())
+}
+
+fn handle_request(line: &str, router: &Router, writer: &mut TcpStream) -> Result<()> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+    let prompt = req.get("prompt").and_then(Json::as_str).unwrap_or("").as_bytes().to_vec();
+    let max_tokens = req.get("max_tokens").and_then(Json::as_usize).unwrap_or(32).clamp(1, 4096);
+    let sampler = SamplerCfg {
+        temperature: req.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+        top_k: req.get("top_k").and_then(Json::as_usize).unwrap_or(0),
+        seed: req.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+    };
+    let session = req.get("session").and_then(Json::as_i64).map(|s| s as u64);
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let id = router.fresh_id();
+    let replica = router.submit(GenRequest::new(id, prompt, max_tokens, sampler, tx), session)?;
+
+    let mut n = 0usize;
+    let mut finish = FinishReason::Aborted;
+    while let Ok(ev) = rx.recv() {
+        if let Some(tok) = ev.token {
+            n += 1;
+            let text = String::from_utf8_lossy(&[tok]).to_string();
+            let msg = Json::obj(vec![
+                ("token", Json::num(tok as f64)),
+                ("text", Json::str(text)),
+            ]);
+            writeln!(writer, "{msg}")?;
+        }
+        if ev.done {
+            finish = ev.finish.unwrap_or(FinishReason::Aborted);
+            break;
+        }
+    }
+    router.complete(replica);
+    let fin = match finish {
+        FinishReason::Length => "length",
+        FinishReason::Eos => "eos",
+        FinishReason::Aborted => "aborted",
+    };
+    let msg = Json::obj(vec![
+        ("done", Json::Bool(true)),
+        ("finish", Json::str(fin)),
+        ("n", Json::num(n as f64)),
+    ]);
+    writeln!(writer, "{msg}")?;
+    Ok(())
+}

@@ -1,0 +1,356 @@
+//! Dense tensor substrate (no ndarray offline).
+//!
+//! Two layers:
+//! * [`Mat`] — generic 2-D row-major matrix over `f32`/`f64`, the workhorse
+//!   of the pure-Rust HLA algebra (`crate::hla`) and baselines.  The
+//!   equivalence tests run it in `f64` (the paper's identities are exact in
+//!   real arithmetic); the serving path runs `f32`.
+//! * [`Tensor`] — N-d `f32` host tensor used at the runtime boundary
+//!   (conversion to/from `xla::Literal` lives in `crate::runtime` so this
+//!   module stays dependency-free).
+
+pub mod ops;
+
+pub use ops::Scalar;
+
+/// Row-major 2-D matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Scalar> Mat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![T::ZERO; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = T::ONE;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<T>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// C = A @ B (cache-friendly i-k-j loop).
+    pub fn matmul(&self, other: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate().take(k) {
+                if a == T::ZERO {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                ops::axpy(a, brow, orow);
+            }
+        }
+        out
+    }
+
+    /// C = A^T @ B without materializing A^T.
+    pub fn t_matmul(&self, other: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let arow = self.row(kk);
+            let brow = other.row(kk);
+            for (i, &a) in arow.iter().enumerate().take(m) {
+                if a == T::ZERO {
+                    continue;
+                }
+                ops::axpy(a, brow, &mut out.data[i * n..(i + 1) * n]);
+            }
+        }
+        out
+    }
+
+    /// C = A @ B^T without materializing B^T.
+    pub fn matmul_t(&self, other: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            for j in 0..n {
+                out[(i, j)] = ops::dot(arow, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// y = A @ x.
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| ops::dot(self.row(i), x)).collect()
+    }
+
+    /// y = A^T @ x (= x @ A for row vector x).
+    pub fn t_matvec(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![T::ZERO; self.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == T::ZERO {
+                continue;
+            }
+            ops::axpy(xi, self.row(i), &mut y);
+        }
+        y
+    }
+
+    pub fn transpose(&self) -> Mat<T> {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// self += alpha * other
+    pub fn add_scaled(&mut self, alpha: T, other: &Mat<T>) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        ops::axpy(alpha, &other.data, &mut self.data);
+    }
+
+    /// self = alpha * self
+    pub fn scale(&mut self, alpha: T) {
+        for x in &mut self.data {
+            *x = *x * alpha;
+        }
+    }
+
+    /// self += alpha * x y^T (rank-1 update — the HLA online-update primitive).
+    pub fn add_outer(&mut self, alpha: T, x: &[T], y: &[T]) {
+        assert_eq!(self.rows, x.len());
+        assert_eq!(self.cols, y.len());
+        for (i, &xi) in x.iter().enumerate() {
+            let s = alpha * xi;
+            if s == T::ZERO {
+                continue;
+            }
+            ops::axpy(s, y, self.row_mut(i));
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> T {
+        ops::dot(&self.data, &self.data).sqrt_()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat<T>) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a.to_f64() - b.to_f64()).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl<T: Scalar> std::ops::Index<(usize, usize)> for Mat<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &T {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> std::ops::IndexMut<(usize, usize)> for Mat<T> {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut T {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// N-dimensional `f32` host tensor for the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Bytes occupied by the payload (state-memory accounting, bench E6/E7).
+    pub fn nbytes(&self) -> usize {
+        self.numel() * std::mem::size_of::<f32>()
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.numel(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// View a rank-2 tensor as a Mat<f32> (copies).
+    pub fn to_mat(&self) -> Mat<f32> {
+        assert_eq!(self.rank(), 2, "to_mat on rank {}", self.rank());
+        Mat::from_vec(self.shape[0], self.shape[1], self.data.clone())
+    }
+
+    /// Row-major strided index of a position.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(x < dim, "index {x} out of bounds for dim {i} ({dim})");
+            off = off * dim + x;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+}
+
+/// Host tensor of i32 (token ids).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        TensorI32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorI32 { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::<f64>::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Mat::<f64>::eye(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::<f32>::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::<f32>::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transposed_matmuls_agree() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut a = Mat::<f64>::zeros(5, 7);
+        let mut b = Mat::<f64>::zeros(5, 4);
+        for x in &mut a.data {
+            *x = rng.normal();
+        }
+        for x in &mut b.data {
+            *x = rng.normal();
+        }
+        let direct = a.transpose().matmul(&b);
+        let fused = a.t_matmul(&b);
+        assert!(direct.max_abs_diff(&fused) < 1e-12);
+
+        let c = Mat::<f64>::from_vec(6, 7, (0..42).map(|i| i as f64).collect());
+        let direct = a.matmul(&c.transpose());
+        assert_eq!(a.matmul_t(&c).data, direct.data);
+    }
+
+    #[test]
+    fn matvec_agrees_with_matmul() {
+        let a = Mat::<f64>::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let x = vec![1.0, 0.5, -1.0];
+        let y = a.matvec(&x);
+        assert_eq!(y, vec![-1.0, 0.5]);
+        let yt = a.t_matvec(&[1.0, -1.0]);
+        assert_eq!(yt, vec![-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn rank1_update() {
+        let mut m = Mat::<f64>::zeros(2, 3);
+        m.add_outer(2.0, &[1.0, -1.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(m.data, vec![2.0, 4.0, 6.0, -2.0, -4.0, -6.0]);
+    }
+
+    #[test]
+    fn tensor_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 5.0);
+        assert_eq!(t.at(&[1, 2, 3]), 5.0);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+        assert_eq!(t.nbytes(), 2 * 3 * 4 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_check() {
+        let a = Mat::<f32>::zeros(2, 3);
+        let b = Mat::<f32>::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,183 @@
+//! Scalar abstraction + hot vector kernels shared by `Mat` and the models.
+//!
+//! `Scalar` is deliberately tiny (the subset of float behaviour the HLA
+//! algebra needs) so the whole algebra is generic over f32 (runtime) and
+//! f64 (exactness tests).
+
+use std::fmt::Debug;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+pub trait Scalar:
+    Copy
+    + Debug
+    + PartialEq
+    + PartialOrd
+    + Add<Output = Self>
+    + AddAssign
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn sqrt_(self) -> Self;
+    fn abs_(self) -> Self;
+    fn exp_(self) -> Self;
+    fn powi_(self, n: i32) -> Self;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn sqrt_(self) -> Self {
+        self.sqrt()
+    }
+    fn abs_(self) -> Self {
+        self.abs()
+    }
+    fn exp_(self) -> Self {
+        self.exp()
+    }
+    fn powi_(self, n: i32) -> Self {
+        self.powi(n)
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn sqrt_(self) -> Self {
+        self.sqrt()
+    }
+    fn abs_(self) -> Self {
+        self.abs()
+    }
+    fn exp_(self) -> Self {
+        self.exp()
+    }
+    fn powi_(self, n: i32) -> Self {
+        self.powi(n)
+    }
+}
+
+/// y += a * x — the inner loop of every matmul/rank-1 update here.
+/// Unrolled by 4 so LLVM vectorizes it reliably.
+#[inline]
+pub fn axpy<T: Scalar>(a: T, x: &[T], y: &mut [T]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4 * 4;
+    let (xc, xr) = x.split_at(chunks);
+    let (yc, yr) = y.split_at_mut(chunks);
+    for (xi, yi) in xc.chunks_exact(4).zip(yc.chunks_exact_mut(4)) {
+        yi[0] += a * xi[0];
+        yi[1] += a * xi[1];
+        yi[2] += a * xi[2];
+        yi[3] += a * xi[3];
+    }
+    for (xi, yi) in xr.iter().zip(yr.iter_mut()) {
+        *yi += a * *xi;
+    }
+}
+
+/// Dot product, 4-way unrolled.
+#[inline]
+pub fn dot<T: Scalar>(x: &[T], y: &[T]) -> T {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4 * 4;
+    let mut acc = [T::ZERO; 4];
+    for (xi, yi) in x[..chunks].chunks_exact(4).zip(y[..chunks].chunks_exact(4)) {
+        acc[0] += xi[0] * yi[0];
+        acc[1] += xi[1] * yi[1];
+        acc[2] += xi[2] * yi[2];
+        acc[3] += xi[3] * yi[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for (xi, yi) in x[chunks..].iter().zip(&y[chunks..]) {
+        s += *xi * *yi;
+    }
+    s
+}
+
+/// x *= a
+#[inline]
+pub fn scale<T: Scalar>(a: T, x: &mut [T]) {
+    for v in x {
+        *v = *v * a;
+    }
+}
+
+/// Numerically stable in-place softmax.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x {
+        *v *= inv;
+    }
+}
+
+/// log-sum-exp of a slice (stable).
+pub fn logsumexp(x: &[f32]) -> f32 {
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    max + x.iter().map(|v| (v - max).exp()).sum::<f32>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_matches_naive() {
+        let x: Vec<f64> = (0..13).map(|i| i as f64).collect();
+        let mut y = vec![1.0f64; 13];
+        axpy(2.0, &x, &mut y);
+        for (i, v) in y.iter().enumerate() {
+            assert_eq!(*v, 1.0 + 2.0 * i as f64);
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..11).map(|i| (i * 2) as f32).collect();
+        let want: f32 = (0..11).map(|i| (i * i * 2) as f32).sum();
+        assert_eq!(dot(&x, &y), want);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 1000.0];
+        softmax_inplace(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(x[3] > 0.99);
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let x = vec![1000.0f32, 1000.0];
+        let lse = logsumexp(&x);
+        assert!((lse - (1000.0 + (2.0f32).ln())).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,97 @@
+//! Property-testing substrate (proptest is unavailable offline).
+//!
+//! `check` runs a property over N deterministically-seeded random cases and
+//! panics with the offending seed on failure, so a red run is reproducible
+//! with `PropConfig { only_seed: Some(s), .. }`.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: u64,
+    pub base_seed: u64,
+    /// Re-run a single failing seed.
+    pub only_seed: Option<u64>,
+}
+
+/// Base seed (mnemonic: "HLA 2025").
+const HLA_SEED_BASE: u64 = 0x41AA_2025;
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, base_seed: HLA_SEED_BASE, only_seed: None }
+    }
+}
+
+/// Run `property(rng, case_index)`; panic with seed on failure or error.
+pub fn check<F>(name: &str, cfg: PropConfig, mut property: F)
+where
+    F: FnMut(&mut Rng, u64) -> Result<(), String>,
+{
+    let seeds: Vec<u64> = match cfg.only_seed {
+        Some(s) => vec![s],
+        None => (0..cfg.cases).map(|i| cfg.base_seed.wrapping_add(i)).collect(),
+    };
+    for (i, seed) in seeds.iter().enumerate() {
+        let mut rng = Rng::new(*seed);
+        if let Err(msg) = property(&mut rng, i as u64) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}):\n  {msg}\n  \
+                 reproduce with PropConfig {{ only_seed: Some({seed:#x}), ..Default::default() }}"
+            );
+        }
+    }
+}
+
+/// Convenience: default config with a given case count.
+pub fn quick<F>(name: &str, cases: u64, property: F)
+where
+    F: FnMut(&mut Rng, u64) -> Result<(), String>,
+{
+    check(name, PropConfig { cases, ..Default::default() }, property);
+}
+
+/// Assert two f64 slices are close; returns Err with context otherwise.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0f64.max(x.abs()).max(y.abs());
+        if (x - y).abs() / denom > tol {
+            return Err(format!("{what}: idx {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        quick("sum-commutes", 16, |rng, _| {
+            let a = rng.f64();
+            let b = rng.f64();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn reports_seed_on_failure() {
+        quick("always-fails", 4, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-12], 1e-9, "x").is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-9, "x").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-9, "x").is_err());
+    }
+}

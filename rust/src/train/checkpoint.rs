@@ -1,0 +1,148 @@
+//! Checkpoint format: a small self-describing binary container.
+//!
+//! Layout: magic "HLACKPT1" | meta-JSON length (u32 LE) | meta JSON |
+//! per-tensor: rank (u32) | dims (u32 each) | f32 payload (LE).
+//! Meta records config name, step, loss and tensor count for validation.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::ModelCfg;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"HLACKPT1";
+
+/// Checkpoint metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Meta {
+    pub config: String,
+    pub step: usize,
+    pub loss: f32,
+    pub n_tensors: usize,
+}
+
+/// Save parameter literals with metadata.
+pub fn save(
+    path: impl AsRef<Path>,
+    cfg: &ModelCfg,
+    params: &[xla::Literal],
+    step: usize,
+    loss: f32,
+) -> Result<()> {
+    let tensors: Vec<Tensor> = params
+        .iter()
+        .map(crate::runtime::literal::literal_to_tensor)
+        .collect::<Result<_>>()?;
+    save_tensors(path, &cfg.name, &tensors, step, loss)
+}
+
+/// Save host tensors with metadata.
+pub fn save_tensors(
+    path: impl AsRef<Path>,
+    config: &str,
+    tensors: &[Tensor],
+    step: usize,
+    loss: f32,
+) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref()).context("creating checkpoint")?);
+    w.write_all(MAGIC)?;
+    let meta = Json::obj(vec![
+        ("config", Json::str(config)),
+        ("step", Json::num(step as f64)),
+        ("loss", Json::num(loss as f64)),
+        ("n_tensors", Json::num(tensors.len() as f64)),
+    ])
+    .to_string();
+    w.write_all(&(meta.len() as u32).to_le_bytes())?;
+    w.write_all(meta.as_bytes())?;
+    for t in tensors {
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a checkpoint (tensors + metadata).
+pub fn load(path: impl AsRef<Path>) -> Result<(Meta, Vec<Tensor>)> {
+    let mut r = BufReader::new(File::open(path.as_ref()).context("opening checkpoint")?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an HLA checkpoint (bad magic)");
+    }
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let mut meta_buf = vec![0u8; u32::from_le_bytes(len4) as usize];
+    r.read_exact(&mut meta_buf)?;
+    let meta_json = Json::parse(std::str::from_utf8(&meta_buf)?)
+        .map_err(|e| anyhow!("checkpoint meta: {e}"))?;
+    let meta = Meta {
+        config: meta_json.get("config").and_then(Json::as_str).unwrap_or("").to_string(),
+        step: meta_json.get("step").and_then(Json::as_usize).unwrap_or(0),
+        loss: meta_json.get("loss").and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
+        n_tensors: meta_json.get("n_tensors").and_then(Json::as_usize).unwrap_or(0),
+    };
+    let mut tensors = Vec::with_capacity(meta.n_tensors);
+    for _ in 0..meta.n_tensors {
+        r.read_exact(&mut len4)?;
+        let rank = u32::from_le_bytes(len4) as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            r.read_exact(&mut len4)?;
+            shape.push(u32::from_le_bytes(len4) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let mut buf = vec![0u8; numel * 4];
+        r.read_exact(&mut buf)?;
+        for (x, b4) in data.iter_mut().zip(buf.chunks_exact(4)) {
+            *x = f32::from_le_bytes([b4[0], b4[1], b4[2], b4[3]]);
+        }
+        tensors.push(Tensor::from_vec(&shape, data));
+    }
+    Ok((meta, tensors))
+}
+
+/// Convert loaded tensors back to literals for the engine.
+pub fn tensors_to_literals(tensors: &[Tensor]) -> Result<Vec<xla::Literal>> {
+    tensors.iter().map(crate::runtime::literal::tensor_to_literal).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hla-ckpt-{}", std::process::id()));
+        let tensors = vec![
+            Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            Tensor::from_vec(&[4], vec![-1.0, 0.5, 0.25, 0.0]),
+            Tensor::scalar(7.5),
+        ];
+        save_tensors(&dir, "tiny", &tensors, 42, 1.23).unwrap();
+        let (meta, back) = load(&dir).unwrap();
+        assert_eq!(meta.config, "tiny");
+        assert_eq!(meta.step, 42);
+        assert!((meta.loss - 1.23).abs() < 1e-6);
+        assert_eq!(back, tensors);
+        std::fs::remove_file(dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("hla-bad-{}", std::process::id()));
+        std::fs::write(&dir, b"NOTACKPTxxxx").unwrap();
+        assert!(load(&dir).is_err());
+        std::fs::remove_file(dir).unwrap();
+    }
+}

@@ -1,0 +1,135 @@
+//! Training corpora: a small embedded public-domain text plus synthetic
+//! generators (pattern language, key-value recall) — the data substrate for
+//! the end-to-end training run (E10) and the recall probe (E11).
+
+use crate::util::rng::Rng;
+
+/// Public-domain seed text (Dickens, *A Tale of Two Cities*, 1859, opening;
+/// + *The Gutenberg* non-copyright boilerplate trimmed).  Byte-level models
+/// train on repetitions of this plus synthetic augmentation.
+pub const SEED_TEXT: &str = "\
+It was the best of times, it was the worst of times, it was the age of \
+wisdom, it was the age of foolishness, it was the epoch of belief, it was \
+the epoch of incredulity, it was the season of Light, it was the season of \
+Darkness, it was the spring of hope, it was the winter of despair, we had \
+everything before us, we had nothing before us, we were all going direct to \
+Heaven, we were all going direct the other way - in short, the period was \
+so far like the present period, that some of its noisiest authorities \
+insisted on its being received, for good or for evil, in the superlative \
+degree of comparison only. There were a king with a large jaw and a queen \
+with a plain face, on the throne of England; there were a king with a large \
+jaw and a queen with a fair face, on the throne of France. In both \
+countries it was clearer than crystal to the lords of the State preserves \
+of loaves and fishes, that things in general were settled for ever. It was \
+the year of Our Lord one thousand seven hundred and seventy-five. Spiritual \
+revelations were conceded to England at that favoured period, as at this. ";
+
+/// Build a byte corpus of at least `min_len` bytes by cycling the seed text
+/// and interleaving synthetic pattern sentences (so the LM has both natural
+/// text statistics and learnable regularities).
+pub fn build_corpus(min_len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(min_len + 1024);
+    while out.len() < min_len {
+        out.extend_from_slice(SEED_TEXT.as_bytes());
+        out.extend_from_slice(pattern_sentence(&mut rng).as_bytes());
+    }
+    out
+}
+
+const SUBJECTS: [&str; 8] =
+    ["the model", "the kernel", "the scan", "a monoid", "the state", "the chunk", "a query", "the key"];
+const VERBS: [&str; 8] =
+    ["updates", "composes", "attends to", "streams", "decays", "normalizes", "projects", "masks"];
+const OBJECTS: [&str; 8] = [
+    "the prefix", "the summary", "the carry", "the output", "the moment", "the sequence",
+    "the value", "the metric",
+];
+
+/// A grammatical synthetic sentence — compressible structure for the LM.
+pub fn pattern_sentence(rng: &mut Rng) -> String {
+    format!(
+        "{} {} {} and {} {} {}. ",
+        SUBJECTS[rng.below(8)],
+        VERBS[rng.below(8)],
+        OBJECTS[rng.below(8)],
+        SUBJECTS[rng.below(8)],
+        VERBS[rng.below(8)],
+        OBJECTS[rng.below(8)],
+    )
+}
+
+/// Associative-recall sequence (E11): `k1:v1 k2:v2 ... ? ki` should be
+/// continued with `vi`.  Keys/values are single letters; the probe key is
+/// drawn from the emitted pairs.  Returns (sequence, expected_value_byte).
+pub fn recall_sequence(n_pairs: usize, rng: &mut Rng) -> (Vec<u8>, u8) {
+    let mut keys: Vec<u8> = (b'a'..=b'z').collect();
+    rng.shuffle(&mut keys);
+    let keys = &keys[..n_pairs.min(26)];
+    let vals: Vec<u8> = (0..keys.len()).map(|_| b'0' + rng.below(10) as u8).collect();
+    let mut seq = Vec::new();
+    for (k, v) in keys.iter().zip(&vals) {
+        seq.push(*k);
+        seq.push(b':');
+        seq.push(*v);
+        seq.push(b' ');
+    }
+    let probe = rng.below(keys.len());
+    seq.push(b'?');
+    seq.push(keys[probe]);
+    seq.push(b':');
+    (seq, vals[probe])
+}
+
+/// An entire recall-task corpus: many recall sequences with answers, used
+/// to *train* the recall probe models.
+pub fn recall_corpus(n_sequences: usize, n_pairs: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for _ in 0..n_sequences {
+        let (mut seq, answer) = recall_sequence(n_pairs, &mut rng);
+        seq.push(answer);
+        seq.push(b'\n');
+        out.extend_from_slice(&seq);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_reaches_length() {
+        let c = build_corpus(10_000, 1);
+        assert!(c.len() >= 10_000);
+        // contains both natural text and synthetic patterns
+        let s = String::from_utf8_lossy(&c);
+        assert!(s.contains("best of times"));
+        assert!(s.contains(". "));
+    }
+
+    #[test]
+    fn recall_sequences_are_answerable() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let (seq, answer) = recall_sequence(5, &mut rng);
+            let s = String::from_utf8_lossy(&seq).to_string();
+            // the probe key appears earlier with the expected value
+            let probe_key = seq[seq.len() - 2] as char;
+            let needle = format!("{probe_key}:{}", answer as char);
+            assert!(s.contains(&needle), "{s} missing {needle}");
+        }
+    }
+
+    #[test]
+    fn recall_corpus_lines_end_with_answers() {
+        let c = recall_corpus(10, 4, 3);
+        let s = String::from_utf8_lossy(&c);
+        for line in s.lines() {
+            let bytes = line.as_bytes();
+            assert!(bytes[bytes.len() - 2] == b':');
+            assert!(bytes[bytes.len() - 1].is_ascii_digit());
+        }
+    }
+}

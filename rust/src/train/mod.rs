@@ -1,0 +1,188 @@
+//! Training driver: runs the AOT `train_step_<cfg>` artifact in a loop —
+//! Rust owns the schedule, data pipeline, logging and checkpoints; all
+//! gradient math lives in the lowered HLO (L2's jax.value_and_grad).
+
+pub mod checkpoint;
+pub mod corpus;
+pub mod data;
+
+use anyhow::Result;
+
+use crate::runtime::{literal, Engine};
+use crate::tensor::TensorI32;
+
+/// Learning-rate schedule: linear warmup then cosine decay.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub peak: f32,
+    pub warmup: usize,
+    pub total: usize,
+    pub floor: f32,
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        if step < self.warmup {
+            return self.peak * (step + 1) as f32 / self.warmup as f32;
+        }
+        let progress =
+            (step - self.warmup) as f32 / (self.total.saturating_sub(self.warmup)).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress.min(1.0)).cos());
+        self.floor + (self.peak - self.floor) * cos
+    }
+}
+
+/// Options for a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    pub cfg_name: String,
+    pub steps: usize,
+    pub lr: LrSchedule,
+    pub seed: u64,
+    pub log_every: usize,
+    pub checkpoint: Option<String>,
+    /// corpus size in bytes (synthesized deterministically)
+    pub corpus_bytes: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            cfg_name: "tiny".into(),
+            steps: 300,
+            lr: LrSchedule { peak: 3e-3, warmup: 20, total: 300, floor: 3e-4 },
+            seed: 0,
+            log_every: 10,
+            checkpoint: None,
+            corpus_bytes: 1 << 20,
+        }
+    }
+}
+
+/// One logged point of the loss curve.
+#[derive(Debug, Clone, Copy)]
+pub struct LossPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub tokens_per_sec: f64,
+}
+
+/// Run training; returns the loss curve and leaves final params on `engine`
+/// as literals (also checkpointed if requested).
+pub fn train(engine: &Engine, opts: &TrainOpts) -> Result<(Vec<LossPoint>, Vec<xla::Literal>)> {
+    let cfg = engine.model_cfg(&opts.cfg_name)?.clone();
+    let (b, t) = (cfg.train_batch, cfg.train_seq);
+    let step_exe = engine.load(&format!("train_step_{}", opts.cfg_name))?;
+    let n_params = cfg.n_param_tensors;
+
+    // init params + zeroed Adam moments
+    let mut params = engine.init_params(&opts.cfg_name, opts.seed as i32)?;
+    let mut mu = zeros_like(&params)?;
+    let mut nu = zeros_like(&params)?;
+
+    let corpus = corpus::build_corpus(opts.corpus_bytes, opts.seed ^ 0xC0FFEE);
+    let mut batches = data::Batches::new(&corpus, b, t + 1, opts.seed);
+
+    let mut curve = Vec::new();
+    let started = std::time::Instant::now();
+    let mut tokens_done = 0u64;
+    let mut last_loss = f32::NAN;
+    for step in 0..opts.steps {
+        let lr = opts.lr.at(step);
+        let tokens = batches.next_batch();
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * n_params + 3);
+        inputs.append(&mut params);
+        inputs.append(&mut mu);
+        inputs.append(&mut nu);
+        inputs.push(xla::Literal::scalar(step as f32));
+        inputs.push(literal::tokens_to_literal(&TensorI32::from_vec(&[b, t + 1], tokens))?);
+        inputs.push(xla::Literal::scalar(lr));
+        let mut outs = step_exe.run(&inputs)?;
+        let loss_lit = outs.pop().expect("train_step returns loss last");
+        last_loss = loss_lit.to_vec::<f32>()?[0];
+        nu = outs.split_off(2 * n_params);
+        mu = outs.split_off(n_params);
+        params = outs;
+        tokens_done += (b * t) as u64;
+        if step % opts.log_every == 0 || step + 1 == opts.steps {
+            let tps = tokens_done as f64 / started.elapsed().as_secs_f64();
+            curve.push(LossPoint { step, loss: last_loss, lr, tokens_per_sec: tps });
+            log::info!("step {step:>5}  loss {last_loss:.4}  lr {lr:.2e}  {tps:.0} tok/s");
+        }
+        if !last_loss.is_finite() {
+            anyhow::bail!("loss diverged at step {step}");
+        }
+    }
+    if let Some(path) = &opts.checkpoint {
+        checkpoint::save(path, &cfg, &params, opts.steps, last_loss)?;
+    }
+    Ok((curve, params))
+}
+
+fn zeros_like(params: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    params
+        .iter()
+        .map(|p| {
+            let shape = p.array_shape()?;
+            let n: i64 = shape.dims().iter().product();
+            Ok(xla::Literal::vec1(&vec![0f32; n as usize]).reshape(shape.dims())?)
+        })
+        .collect()
+}
+
+/// Evaluate mean loss of `params` on held-out batches via `loss_<cfg>`.
+pub fn evaluate(
+    engine: &Engine,
+    cfg_name: &str,
+    params: &[xla::Literal],
+    n_batches: usize,
+    seed: u64,
+) -> Result<f32> {
+    let cfg = engine.model_cfg(cfg_name)?.clone();
+    let (b, t) = (cfg.train_batch, cfg.train_seq);
+    let exe = engine.load(&format!("loss_{cfg_name}"))?;
+    let corpus = corpus::build_corpus(1 << 18, seed ^ 0xEAA1);
+    let mut batches = data::Batches::new(&corpus, b, t + 1, seed);
+    let mut total = 0.0f32;
+    for _ in 0..n_batches {
+        let tokens = batches.next_batch();
+        let mut inputs: Vec<xla::Literal> = params
+            .iter()
+            .map(|p| {
+                let shape = p.array_shape()?;
+                let data = p.to_vec::<f32>()?;
+                Ok(xla::Literal::vec1(&data).reshape(shape.dims())?)
+            })
+            .collect::<Result<_>>()?;
+        inputs.push(literal::tokens_to_literal(&TensorI32::from_vec(&[b, t + 1], tokens))?);
+        let outs = exe.run(&inputs)?;
+        total += outs[0].to_vec::<f32>()?[0];
+    }
+    Ok(total / n_batches as f32)
+}
+
+/// A random-model baseline loss: ln(vocab) for a uniform predictor.
+pub fn uniform_loss(vocab: usize) -> f32 {
+    (vocab as f32).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let s = LrSchedule { peak: 1.0, warmup: 10, total: 110, floor: 0.1 };
+        assert!(s.at(0) < s.at(9));
+        assert!((s.at(9) - 1.0).abs() < 0.11);
+        assert!(s.at(50) < 1.0);
+        assert!(s.at(109) >= 0.1 - 1e-6);
+        assert!(s.at(109) < s.at(50));
+    }
+
+    #[test]
+    fn uniform_loss_value() {
+        assert!((uniform_loss(256) - 5.545).abs() < 0.01);
+    }
+}

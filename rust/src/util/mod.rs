@@ -1,0 +1,39 @@
+//! Small shared substrates: PRNG, JSON, time helpers.
+
+pub mod json;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let start = Instant::now();
+    let r = f();
+    (r, start.elapsed().as_secs_f64())
+}
+
+/// Format a byte count human-readably.
+pub fn human_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(super::human_bytes(512), "512 B");
+        assert_eq!(super::human_bytes(2048), "2.00 KiB");
+        assert_eq!(super::human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

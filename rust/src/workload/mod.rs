@@ -1,0 +1,189 @@
+//! Synthetic serving/training workloads: arrival processes, length
+//! distributions, corpus generators and trace record/replay.  Substitutes
+//! for production traces per the reproduction rules (DESIGN.md §3).
+
+use crate::util::rng::Rng;
+
+/// Open-loop arrival process.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrivals {
+    /// Poisson with `rate` requests/sec.
+    Poisson { rate: f64 },
+    /// Fixed inter-arrival gap.
+    Uniform { rate: f64 },
+    /// Everything at t = 0 (closed burst).
+    Burst,
+}
+
+impl Arrivals {
+    /// Generate `n` arrival offsets in seconds, sorted ascending.
+    pub fn times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        match *self {
+            Arrivals::Poisson { rate } => {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exponential(rate);
+                        t
+                    })
+                    .collect()
+            }
+            Arrivals::Uniform { rate } => (0..n).map(|i| i as f64 / rate).collect(),
+            Arrivals::Burst => vec![0.0; n],
+        }
+    }
+}
+
+/// Prompt/output length distribution (log-normal-ish, clamped).
+#[derive(Debug, Clone, Copy)]
+pub struct Lengths {
+    pub mean_prompt: usize,
+    pub mean_output: usize,
+    pub min: usize,
+    pub max: usize,
+}
+
+impl Default for Lengths {
+    fn default() -> Self {
+        Lengths { mean_prompt: 32, mean_output: 32, min: 4, max: 256 }
+    }
+}
+
+impl Lengths {
+    fn sample(&self, mean: usize, rng: &mut Rng) -> usize {
+        // log-normal with sigma 0.5 around the mean
+        let mu = (mean as f64).ln() - 0.125;
+        let x = (mu + 0.5 * rng.normal()).exp();
+        (x.round() as usize).clamp(self.min, self.max)
+    }
+
+    pub fn prompt(&self, rng: &mut Rng) -> usize {
+        self.sample(self.mean_prompt, rng)
+    }
+
+    pub fn output(&self, rng: &mut Rng) -> usize {
+        self.sample(self.mean_output, rng)
+    }
+}
+
+/// One synthetic request in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceItem {
+    pub at_s: f64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    pub session: Option<u64>,
+}
+
+/// A reproducible request trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub items: Vec<TraceItem>,
+}
+
+impl Trace {
+    /// Synthesize a trace: arrivals + lengths + corpus-sampled prompts.
+    pub fn synthesize(
+        n: usize,
+        arrivals: Arrivals,
+        lengths: Lengths,
+        corpus: &[u8],
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Rng::new(seed);
+        let times = arrivals.times(n, &mut rng);
+        let items = times
+            .into_iter()
+            .map(|at_s| {
+                let plen = lengths.prompt(&mut rng);
+                let start = rng.below(corpus.len().saturating_sub(plen).max(1));
+                let prompt = corpus[start..(start + plen).min(corpus.len())].to_vec();
+                TraceItem {
+                    at_s,
+                    prompt,
+                    max_new_tokens: lengths.output(&mut rng),
+                    session: Some(rng.below(16) as u64),
+                }
+            })
+            .collect();
+        Trace { items }
+    }
+
+    /// Serialize as line-JSON (one item per line) for replay files.
+    pub fn to_lines(&self) -> String {
+        use crate::util::json::Json;
+        self.items
+            .iter()
+            .map(|it| {
+                Json::obj(vec![
+                    ("at_s", Json::num(it.at_s)),
+                    ("prompt", Json::str(String::from_utf8_lossy(&it.prompt).to_string())),
+                    ("max_new_tokens", Json::num(it.max_new_tokens as f64)),
+                    ("session", it.session.map_or(Json::Null, |s| Json::num(s as f64))),
+                ])
+                .to_string()
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    pub fn from_lines(text: &str) -> anyhow::Result<Trace> {
+        use crate::util::json::Json;
+        let mut items = vec![];
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let j = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line: {e}"))?;
+            items.push(TraceItem {
+                at_s: j.get("at_s").and_then(Json::as_f64).unwrap_or(0.0),
+                prompt: j
+                    .get("prompt")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .as_bytes()
+                    .to_vec(),
+                max_new_tokens: j.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(16),
+                session: j.get("session").and_then(Json::as_i64).map(|s| s as u64),
+            });
+        }
+        Ok(Trace { items })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximately_holds() {
+        let mut rng = Rng::new(1);
+        let times = Arrivals::Poisson { rate: 50.0 }.times(5000, &mut rng);
+        let span = times.last().unwrap() - times[0];
+        let rate = 5000.0 / span;
+        assert!((rate - 50.0).abs() < 5.0, "rate {rate}");
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn lengths_respect_bounds() {
+        let mut rng = Rng::new(2);
+        let l = Lengths { mean_prompt: 32, mean_output: 64, min: 8, max: 128 };
+        for _ in 0..500 {
+            let p = l.prompt(&mut rng);
+            assert!((8..=128).contains(&p), "{p}");
+        }
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let corpus = b"the quick brown fox jumps over the lazy dog, repeatedly and often";
+        let t = Trace::synthesize(10, Arrivals::Poisson { rate: 10.0 }, Lengths::default(), corpus, 3);
+        assert_eq!(t.items.len(), 10);
+        let text = t.to_lines();
+        let back = Trace::from_lines(&text).unwrap();
+        assert_eq!(back.items.len(), 10);
+        for (a, b) in t.items.iter().zip(&back.items) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert!((a.at_s - b.at_s).abs() < 1e-9);
+        }
+    }
+}

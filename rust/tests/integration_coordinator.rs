@@ -1,0 +1,146 @@
+//! Integration: continuous-batching coordinator over the micro artifacts.
+
+use std::sync::mpsc;
+
+use hla::coordinator::{collect_tokens, spawn_engine, FinishReason, GenRequest, SchedPolicy};
+use hla::model::sampler::SamplerCfg;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).exists()
+}
+
+fn artifacts() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+#[test]
+fn completes_more_requests_than_lanes() {
+    if !have_artifacts() {
+        return;
+    }
+    // micro has decode_batch = 2; submit 5 requests -> continuous batching
+    let (tx, handle) = spawn_engine(artifacts(), "micro".into(), SchedPolicy::PrefillFirst, 0);
+    let mut rxs = vec![];
+    for i in 0..5u64 {
+        let (etx, erx) = mpsc::channel();
+        let req = GenRequest::new(
+            i,
+            format!("request number {i} says ").into_bytes(),
+            6 + i as usize,
+            SamplerCfg::greedy(),
+            etx,
+        );
+        tx.send(req).unwrap();
+        rxs.push((i, erx));
+    }
+    drop(tx);
+    for (i, erx) in rxs {
+        let (tokens, finish) = collect_tokens(&erx);
+        assert_eq!(tokens.len(), 6 + i as usize, "request {i}");
+        assert_eq!(finish, Some(FinishReason::Length));
+    }
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.completed, 5);
+    assert!(stats.tokens_out >= 6 + 7 + 8 + 9 + 10);
+    assert!(stats.lane_occupancy > 0.3, "occupancy {}", stats.lane_occupancy);
+}
+
+#[test]
+fn greedy_generation_is_deterministic_across_batching() {
+    if !have_artifacts() {
+        return;
+    }
+    // Same prompt alone vs batched with other traffic must produce the same
+    // greedy tokens: lanes are state-isolated (the whole point of the pool).
+    let run = |with_noise: bool| -> Vec<u8> {
+        let (tx, handle) =
+            spawn_engine(artifacts(), "micro".into(), SchedPolicy::PrefillFirst, 0);
+        let (etx, erx) = mpsc::channel();
+        tx.send(GenRequest::new(
+            1,
+            b"the quick brown fox".to_vec(),
+            12,
+            SamplerCfg::greedy(),
+            etx,
+        ))
+        .unwrap();
+        if with_noise {
+            let (ntx, _nrx) = mpsc::channel();
+            tx.send(GenRequest::new(
+                2,
+                b"completely different interference prompt!".to_vec(),
+                20,
+                SamplerCfg { temperature: 1.0, top_k: 0, seed: 99 },
+                ntx,
+            ))
+            .unwrap();
+        }
+        drop(tx);
+        let (tokens, _) = collect_tokens(&erx);
+        handle.join().unwrap().unwrap();
+        tokens
+    };
+    let alone = run(false);
+    let batched = run(true);
+    assert_eq!(alone, batched, "lane isolation violated");
+}
+
+#[test]
+fn decode_first_policy_serializes_admissions() {
+    if !have_artifacts() {
+        return;
+    }
+    let (tx, handle) = spawn_engine(artifacts(), "micro".into(), SchedPolicy::DecodeFirst, 0);
+    let mut rxs = vec![];
+    for i in 0..3u64 {
+        let (etx, erx) = mpsc::channel();
+        tx.send(GenRequest::new(i, vec![b'a' + i as u8; 3], 4, SamplerCfg::greedy(), etx))
+            .unwrap();
+        rxs.push(erx);
+    }
+    drop(tx);
+    for erx in rxs {
+        let (tokens, finish) = collect_tokens(&erx);
+        assert_eq!(tokens.len(), 4);
+        assert_eq!(finish, Some(FinishReason::Length));
+    }
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn empty_prompt_and_long_prompt_edge_cases() {
+    if !have_artifacts() {
+        return;
+    }
+    let (tx, handle) = spawn_engine(artifacts(), "micro".into(), SchedPolicy::Hybrid(1), 0);
+    // empty prompt -> padded to one token
+    let (etx1, erx1) = mpsc::channel();
+    tx.send(GenRequest::new(1, vec![], 3, SamplerCfg::greedy(), etx1)).unwrap();
+    // long prompt (crosses many steps of decode-as-prefill)
+    let (etx2, erx2) = mpsc::channel();
+    tx.send(GenRequest::new(2, vec![b'x'; 100], 3, SamplerCfg::greedy(), etx2)).unwrap();
+    drop(tx);
+    let (t1, f1) = collect_tokens(&erx1);
+    let (t2, f2) = collect_tokens(&erx2);
+    assert_eq!((t1.len(), f1), (3, Some(FinishReason::Length)));
+    assert_eq!((t2.len(), f2), (3, Some(FinishReason::Length)));
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn all_micro_mixer_variants_serve() {
+    if !have_artifacts() {
+        return;
+    }
+    for cfg in ["micro", "micro-ahla", "micro-hla3", "micro-linear", "micro-mq"] {
+        let (tx, handle) =
+            spawn_engine(artifacts(), cfg.into(), SchedPolicy::PrefillFirst, 1);
+        let (etx, erx) = mpsc::channel();
+        tx.send(GenRequest::new(1, b"hello".to_vec(), 4, SamplerCfg::greedy(), etx)).unwrap();
+        drop(tx);
+        let (tokens, finish) = collect_tokens(&erx);
+        assert_eq!(tokens.len(), 4, "{cfg}");
+        assert_eq!(finish, Some(FinishReason::Length), "{cfg}");
+        handle.join().unwrap().unwrap();
+    }
+}

