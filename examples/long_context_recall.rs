@@ -4,7 +4,7 @@
 //!
 //! Trains `micro` (hla2) and `micro-linear` on a key-value recall corpus
 //! ("a:3 f:7 q:1 ?f:" → "7"), then measures probe accuracy on held-out
-//! sequences.  Results are recorded in EXPERIMENTS.md §E11.
+//! sequences.  Results correspond to the E-series benches (`rust/benches/`, see rust/DESIGN.md §4).
 //!
 //!     cargo run --release --example long_context_recall
 //!     HLA_STEPS=60 cargo run --release --example long_context_recall

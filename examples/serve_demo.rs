@@ -1,18 +1,41 @@
-//! Serving demo: bring up the full stack — N engine replicas, the router,
-//! the TCP server — drive it with concurrent clients under Poisson load,
-//! and report client-side latency percentiles (the E8 workload through the
-//! real network path).
+//! Serving demo: bring up the full stack — N engine replicas, a shared
+//! session store, the router, the TCP server — drive it with concurrent
+//! clients under Poisson load, then walk a multi-turn conversation with
+//! snapshot/resume and a copy-on-snapshot fork (the E8/E13 workloads
+//! through the real network path).
 //!
 //!     cargo run --release --example serve_demo [replicas] [requests]
+//!
+//! ## The session protocol (line-JSON over TCP; see `server/mod.rs`)
+//!
+//! Every field below is optional on top of the base request:
+//!
+//! ```text
+//! turn 1:  {"prompt": "hello", "max_tokens": 32, "session": 1}
+//!          -> on completion, lane state is snapshotted under session 1
+//! turn 2:  {"prompt": " and then", "session": 1, "resume": true}
+//!          -> state restored; the prompt is only the NEW text; the
+//!             history is already inside the constant-size HLA state
+//! continue:{"session": 1, "resume": true}            (empty prompt)
+//! fork:    {"session": 2, "fork_of": 1, "seed": 7}
+//!          -> session 1's snapshot is copied to 2 (O(state), not
+//!             O(context)) and generation resumes the fork
+//! errors:  {"error": "unknown session 42"}           (resume/fork of a
+//!          session the store does not hold; nothing is generated)
+//! final:   {"done": true, "finish": "length", "n": 32,
+//!           "session": 1, "resumed": true}
+//! ```
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use hla::coordinator::router::{RoutePolicy, Router};
-use hla::coordinator::{spawn_engine, SchedPolicy};
+use hla::coordinator::{spawn_engine_with_store, SchedPolicy};
 use hla::metrics::{Histogram, Table};
-use hla::server::{client::Client, serve};
+use hla::server::client::{Client, GenOpts};
+use hla::server::serve_sessions;
+use hla::session::SessionStore;
 use hla::train::corpus::build_corpus;
 use hla::workload::{Arrivals, Lengths, Trace};
 
@@ -21,12 +44,19 @@ fn main() -> anyhow::Result<()> {
     let replicas: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
     let n_requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(24);
 
-    // engines + router + server
+    // engines + shared session store + router + server: one store across
+    // all replicas, so any replica can resume any conversation
+    let store = Arc::new(SessionStore::in_memory(256));
     let mut senders = vec![];
     let mut engines = vec![];
     for r in 0..replicas {
-        let (tx, handle) =
-            spawn_engine("artifacts".into(), "micro".into(), SchedPolicy::PrefillFirst, r as i32);
+        let (tx, handle) = spawn_engine_with_store(
+            "artifacts".into(),
+            "micro".into(),
+            SchedPolicy::PrefillFirst,
+            r as i32,
+            Some(store.clone()),
+        );
         senders.push(tx);
         engines.push(handle);
     }
@@ -54,8 +84,12 @@ fn main() -> anyhow::Result<()> {
     let stop = Arc::new(AtomicBool::new(false));
     let (addr_tx, addr_rx) = mpsc::channel();
     let stop2 = stop.clone();
+    let store2 = store.clone();
     let server = std::thread::spawn(move || {
-        serve("127.0.0.1:0", router, stop2, move |a| addr_tx.send(a).unwrap()).unwrap();
+        serve_sessions("127.0.0.1:0", router, Some(store2), stop2, move |a| {
+            addr_tx.send(a).unwrap()
+        })
+        .unwrap();
     });
     let addr = addr_rx.recv()?.to_string();
     println!("serving micro on {addr} with {replicas} replica(s)");
@@ -113,6 +147,49 @@ fn main() -> anyhow::Result<()> {
         "{n_requests} requests, {tokens} tokens in {wall:.1}s -> {:.0} tok/s end-to-end",
         tokens as f64 / wall
     );
+
+    // --- multi-turn conversation + fork over the wire -------------------
+    println!("\nmulti-turn session demo (session 1000, then fork 1001):");
+    let mut client = Client::connect(&addr)?;
+    let t1 = client.generate_opts(
+        "It was the best of",
+        &GenOpts { max_tokens: 12, temperature: 0.7, session: Some(1000), ..GenOpts::default() },
+    )?;
+    println!("  turn 1 (fresh):   {:?}", t1.text);
+    let t2 = client.generate_opts(
+        " and after that",
+        &GenOpts {
+            max_tokens: 12,
+            temperature: 0.7,
+            session: Some(1000),
+            resume: true,
+            ..GenOpts::default()
+        },
+    )?;
+    println!("  turn 2 (resumed={}): {:?}", t2.resumed, t2.text);
+    // fork the conversation: same prefix state, fresh sampler seed
+    let f = client.generate_opts(
+        "",
+        &GenOpts {
+            max_tokens: 12,
+            temperature: 0.7,
+            session: Some(1001),
+            fork_of: Some(1000),
+            seed: Some(99),
+            ..GenOpts::default()
+        },
+    )?;
+    println!("  fork   (resumed={}): {:?}", f.resumed, f.text);
+    let st = store.stats();
+    println!(
+        "  store: {} snapshots, {} restores, hit-rate {:.2}, {} forks, {} resident",
+        st.snapshots,
+        st.restores,
+        st.hit_rate(),
+        st.forks,
+        st.resident
+    );
+    drop(client);
 
     stop.store(true, Ordering::Relaxed);
     server.join().expect("server thread");

@@ -6,7 +6,7 @@
 //!     cargo run --release --example train_tiny             # full (300 steps)
 //!     HLA_STEPS=40 cargo run --release --example train_tiny  # quick
 //!
-//! Results are recorded in EXPERIMENTS.md §E10.
+//! Results correspond to the E-series benches (`rust/benches/`, see rust/DESIGN.md §4).
 
 use hla::runtime::Engine;
 use hla::train::{evaluate, train, uniform_loss, LrSchedule, TrainOpts};

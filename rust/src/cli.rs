@@ -6,33 +6,40 @@
 //!   train      run the AOT train_step loop (E10 driver)
 //!   generate   one-shot generation through the coordinator
 //!   serve      TCP serving frontend over N engine replicas
+//!   sessions   list/inspect/evict spilled session snapshots
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::router::Router;
-use crate::coordinator::{collect_tokens, spawn_engine, GenRequest};
+use crate::coordinator::{collect_tokens, spawn_engine, spawn_engine_with_store, GenRequest};
 use crate::model::sampler::SamplerCfg;
 use crate::runtime::Engine;
+use crate::session::{spill_file, spill_sessions, SessionStore, StoreCfg};
 use crate::train::{train, LrSchedule, TrainOpts};
 use crate::util::human_bytes;
 
 pub const USAGE: &str = "\
 hla — Higher-order Linear Attention runtime
-usage: hla <info|selftest|train|generate|serve> [--flags]
+usage: hla <info|selftest|train|generate|serve|sessions> [--flags]
 common flags: --artifacts DIR --model NAME --seed N --config FILE.json
 train:    --steps N --lr F --warmup N --checkpoint PATH
 generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
-serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY";
+serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
+          --session-capacity N --spill-dir DIR
+sessions: <list|inspect|evict> --spill-dir DIR [--session-id N]";
 
 pub fn run(args: Vec<String>) -> Result<()> {
     let Some((cmd, rest)) = args.split_first() else {
         println!("{USAGE}");
         return Ok(());
     };
+    if cmd == "sessions" {
+        return cmd_sessions(rest);
+    }
     let cfg = RunConfig::from_args(rest)?;
     match cmd.as_str() {
         "info" => info(&cfg),
@@ -195,14 +202,21 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &RunConfig) -> Result<()> {
+    // one shared store across all replicas: any replica can resume any
+    // session, so rebalancing a conversation is just routing
+    let store = Arc::new(SessionStore::new(StoreCfg {
+        capacity: cfg.session_capacity,
+        spill_dir: cfg.spill_dir.clone().map(std::path::PathBuf::from),
+    }));
     let mut senders = vec![];
     let mut handles = vec![];
     for r in 0..cfg.replicas {
-        let (tx, handle) = spawn_engine(
+        let (tx, handle) = spawn_engine_with_store(
             cfg.artifacts.clone(),
             cfg.model.clone(),
             cfg.sched,
             cfg.seed as i32 + r as i32,
+            Some(store.clone()),
         );
         senders.push(tx);
         handles.push(handle);
@@ -210,11 +224,92 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     let router = Arc::new(Router::new(senders, cfg.route));
     let stop = Arc::new(AtomicBool::new(false));
     println!("serving {} ({} replica(s)) on {}", cfg.model, cfg.replicas, cfg.addr);
-    crate::server::serve(&cfg.addr, router, stop, |addr| {
+    // the serve loop only exits on kill, so report the session-store
+    // counters periodically from a daemon thread (it dies with the process)
+    {
+        let store = store.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(60));
+            let st = store.stats();
+            if st.snapshots > 0 {
+                println!(
+                    "sessions: {} snapshots, {} restores, resume hit-rate {:.2}, {} forks, {} spills, {} resident ({})",
+                    st.snapshots,
+                    st.restores,
+                    st.hit_rate(),
+                    st.forks,
+                    st.spills,
+                    st.resident,
+                    human_bytes(st.resident_bytes),
+                );
+            }
+        });
+    }
+    crate::server::serve_sessions(&cfg.addr, router, Some(store), stop, |addr| {
         println!("listening on {addr}");
     })?;
     for h in handles {
         let _ = h.join();
     }
     Ok(())
+}
+
+/// `hla sessions <list|inspect|evict>` — operate on a spill directory (the
+/// disk tier is the only cross-process view of a session store).
+fn cmd_sessions(rest: &[String]) -> Result<()> {
+    let Some((action, flags)) = rest.split_first() else {
+        bail!("sessions: expected <list|inspect|evict>\n{USAGE}");
+    };
+    let cfg = RunConfig::from_args(flags)?;
+    let dir = std::path::PathBuf::from(
+        cfg.spill_dir.ok_or_else(|| anyhow!("sessions: --spill-dir DIR is required"))?,
+    );
+    match action.as_str() {
+        "list" => {
+            let snaps = spill_sessions(&dir)?;
+            let mut table = crate::metrics::Table::new(&[
+                "session", "config", "tokens", "state", "components",
+            ]);
+            for s in &snaps {
+                table.row(&[
+                    s.id.to_string(),
+                    s.cfg_name.clone(),
+                    s.tokens_generated.to_string(),
+                    human_bytes(s.state_nbytes()),
+                    s.state.len().to_string(),
+                ]);
+            }
+            print!("{}", table.render());
+            println!("{} spilled session(s) in {}", snaps.len(), dir.display());
+            Ok(())
+        }
+        "inspect" => {
+            let id = cfg.session_id.ok_or_else(|| anyhow!("inspect: --session-id N required"))?;
+            let path = spill_file(&dir, id);
+            let bytes = std::fs::read(&path)
+                .map_err(|e| anyhow!("unknown session {id} ({}: {e})", path.display()))?;
+            let s = crate::session::SessionSnapshot::from_bytes(&bytes)?;
+            println!("session {} (config {}, checksum OK)", s.id, s.cfg_name);
+            println!("  tokens generated: {}", s.tokens_generated);
+            println!("  last token:       {} ({:?})", s.last_token, s.last_token as char);
+            println!(
+                "  sampler:          temp {} top_k {} seed {} rng {:#018x}",
+                s.sampler.temperature, s.sampler.top_k, s.sampler.seed, s.sampler.rng_state
+            );
+            println!("  state:            {} ({} components)", human_bytes(s.state_nbytes()), s.state.len());
+            for (i, t) in s.state.iter().enumerate() {
+                println!("    [{i}] shape {:?} ({})", t.shape, human_bytes(t.nbytes()));
+            }
+            Ok(())
+        }
+        "evict" => {
+            let id = cfg.session_id.ok_or_else(|| anyhow!("evict: --session-id N required"))?;
+            let path = spill_file(&dir, id);
+            std::fs::remove_file(&path)
+                .map_err(|e| anyhow!("unknown session {id} ({}: {e})", path.display()))?;
+            println!("evicted session {id}");
+            Ok(())
+        }
+        other => bail!("sessions: unknown action {other:?}\n{USAGE}"),
+    }
 }

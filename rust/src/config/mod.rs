@@ -23,6 +23,13 @@ pub struct RunConfig {
     pub replicas: usize,
     pub sched: SchedPolicy,
     pub route: RoutePolicy,
+    // sessions (snapshot/resume store)
+    /// max session snapshots resident in memory before LRU eviction
+    pub session_capacity: usize,
+    /// evicted snapshots spill here; also the `hla sessions` target dir
+    pub spill_dir: Option<String>,
+    /// target session for `hla sessions inspect|evict`
+    pub session_id: Option<u64>,
     // training
     pub steps: usize,
     pub lr: f32,
@@ -44,6 +51,9 @@ impl Default for RunConfig {
             replicas: 1,
             sched: SchedPolicy::PrefillFirst,
             route: RoutePolicy::LeastLoaded,
+            session_capacity: 1024,
+            spill_dir: None,
+            session_id: None,
             steps: 300,
             lr: 3e-3,
             warmup: 20,
@@ -100,6 +110,9 @@ impl RunConfig {
             "lr" => self.lr = value.parse()?,
             "warmup" => self.warmup = value.parse()?,
             "checkpoint" => self.checkpoint = Some(value.into()),
+            "session-capacity" | "session_capacity" => self.session_capacity = value.parse()?,
+            "spill-dir" | "spill_dir" => self.spill_dir = Some(value.into()),
+            "session-id" | "session_id" => self.session_id = Some(value.parse()?),
             "prompt" => self.prompt = value.into(),
             "max-tokens" | "max_tokens" => self.max_tokens = value.parse()?,
             "temperature" => self.temperature = value.parse()?,
@@ -172,6 +185,21 @@ mod tests {
         assert_eq!(cfg.model, "micro");
         assert_eq!(cfg.steps, 88);
         std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn session_flags_apply() {
+        let cfg = RunConfig::from_args(&s(&[
+            "--session-capacity",
+            "64",
+            "--spill-dir",
+            "/tmp/hla-sessions",
+            "--session-id=7",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.session_capacity, 64);
+        assert_eq!(cfg.spill_dir.as_deref(), Some("/tmp/hla-sessions"));
+        assert_eq!(cfg.session_id, Some(7));
     }
 
     #[test]

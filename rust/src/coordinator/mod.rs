@@ -17,7 +17,10 @@
 //! memory never grows with context length, and the step cost is independent
 //! of how long each sequence has been running (benches E6/E8).
 //!
-//! Multi-replica routing lives in [`router`].
+//! Multi-replica routing lives in [`router`].  Session-tagged requests
+//! additionally snapshot their lane's constant-size state into a shared
+//! [`crate::session::SessionStore`] on completion and restore it on
+//! resume, so a multi-turn conversation never re-prefills its history.
 
 pub mod batch;
 pub mod request;
@@ -26,13 +29,15 @@ pub mod state_pool;
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::metrics::{Histogram, Meter};
 use crate::runtime::{literal, Engine};
-use crate::tensor::TensorI32;
+use crate::session::{SamplerState, SessionSnapshot, SessionStore};
+use crate::tensor::{Tensor, TensorI32};
 pub use batch::{Lane, LaneStatus};
 pub use request::{collect_tokens, FinishReason, GenRequest, RequestId, TokenEvent};
 pub use state_pool::StatePool;
@@ -103,6 +108,10 @@ pub struct EngineLoop {
     waiting: VecDeque<GenRequest>,
     policy: SchedPolicy,
     rx: Receiver<GenRequest>,
+    /// Session snapshot store (None = stateless serving).  Shared across
+    /// replicas, which is what makes cross-replica migration a routing
+    /// decision: detach here on replica A, restore from here on replica B.
+    sessions: Option<Arc<SessionStore>>,
     // params + recurrent state live as literals across steps and are passed
     // by reference to PJRT — no per-step deep copies (§Perf item 2)
     params: Vec<xla::Literal>,
@@ -143,6 +152,7 @@ impl EngineLoop {
             waiting: VecDeque::new(),
             policy,
             rx,
+            sessions: None,
             params,
             state,
             step_hist: Histogram::new(),
@@ -159,6 +169,12 @@ impl EngineLoop {
     /// Load externally trained parameters (checkpoint) instead of init.
     pub fn set_params(&mut self, params: Vec<xla::Literal>) {
         self.params = params;
+    }
+
+    /// Attach a session store: lanes with a session id are detached into
+    /// it on completion and restored from it on `resume` requests.
+    pub fn set_session_store(&mut self, store: Arc<SessionStore>) {
+        self.sessions = Some(store);
     }
 
     /// Run until the request channel closes and all lanes drain.
@@ -195,6 +211,10 @@ impl EngineLoop {
     }
 
     /// Admit waiting requests into free lanes per the scheduler policy.
+    /// A `resume` request whose session snapshot is in the store restores
+    /// the lane state instead of zeroing it — skipping re-prefill of the
+    /// whole conversation prefix; a resume miss degrades to a fresh lane
+    /// (the request's prompt is then all the context there is).
     fn admit(&mut self) {
         let free: Vec<usize> =
             (0..self.batch).filter(|&b| !self.lanes[b].is_active()).collect();
@@ -202,9 +222,45 @@ impl EngineLoop {
         let n = self.policy.admissions(self.waiting.len(), free.len(), active);
         for &lane_idx in free.iter().take(n) {
             let req = self.waiting.pop_front().expect("admissions <= waiting");
-            self.pool.zero_lane(lane_idx);
-            self.zero_state_lane(lane_idx).expect("state zeroing");
-            self.lanes[lane_idx] = Lane::start(req);
+            let claimed = match (&self.sessions, req.resume, req.session) {
+                (Some(store), true, Some(sid)) => {
+                    store.claim(sid, Some(&self.cfg_name)).map(|s| (Arc::clone(store), s))
+                }
+                _ => None,
+            };
+            // a snapshot whose state layout does not match the artifact
+            // (e.g. written by an older model revision under the same
+            // config name) must not kill the engine thread: unclaim the
+            // one copy back for inspection/repair (rolling back the hit
+            // accounting) and degrade to a fresh lane, like any other
+            // resume miss
+            let snap = match claimed {
+                Some((store, s)) => match self.import_state_lane(lane_idx, &s.state) {
+                    Ok(()) => Some(s),
+                    Err(e) => {
+                        log::warn!(
+                            "session {}: snapshot incompatible, starting fresh: {e}",
+                            s.id
+                        );
+                        store.unclaim(s);
+                        None
+                    }
+                },
+                None => None,
+            };
+            match snap {
+                Some(snap) => {
+                    // keep the host StatePool mirror in sync (accounting/
+                    // diagnostics only — the decode path reads the literals)
+                    self.pool.write_lane(lane_idx, &snap.state);
+                    self.lanes[lane_idx] = Lane::resume(req, &snap);
+                }
+                None => {
+                    self.pool.zero_lane(lane_idx);
+                    self.zero_state_lane(lane_idx).expect("state zeroing");
+                    self.lanes[lane_idx] = Lane::start(req);
+                }
+            }
         }
     }
 
@@ -219,6 +275,60 @@ impl EngineLoop {
             for li in 0..l {
                 let off = (li * batch + b) * rest;
                 t.data[off..off + rest].fill(0.0);
+            }
+            *lit = literal::tensor_to_literal(&t)?;
+        }
+        Ok(())
+    }
+
+    /// Copy lane `b` out of the live state literals (session detach).
+    /// Same slicing as [`StatePool::read_lane`], but against the literals
+    /// the decode artifact actually consumes.
+    fn export_state_lane(&self, b: usize) -> Result<Vec<Tensor>> {
+        self.state
+            .iter()
+            .map(|lit| {
+                let t = literal::literal_to_tensor(lit)?;
+                let l = t.shape[0];
+                let batch = t.shape[1];
+                let rest: usize = t.shape[2..].iter().product();
+                let mut shape = t.shape.clone();
+                shape[1] = 1;
+                let mut out = Tensor::zeros(&shape);
+                for li in 0..l {
+                    let src = (li * batch + b) * rest;
+                    let dst = li * rest;
+                    out.data[dst..dst + rest].copy_from_slice(&t.data[src..src + rest]);
+                }
+                Ok(out)
+            })
+            .collect()
+    }
+
+    /// Write a snapshot's lane slice into the live state literals
+    /// (session restore — admission only, like [`Self::zero_state_lane`]).
+    fn import_state_lane(&mut self, b: usize, parts: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(
+            parts.len() == self.state.len(),
+            "state arity mismatch: snapshot has {}, artifact wants {}",
+            parts.len(),
+            self.state.len()
+        );
+        for (lit, part) in self.state.iter_mut().zip(parts) {
+            let mut t = literal::literal_to_tensor(lit)?;
+            let l = t.shape[0];
+            let batch = t.shape[1];
+            let rest: usize = t.shape[2..].iter().product();
+            anyhow::ensure!(
+                part.data.len() == l * rest,
+                "state slice mismatch: snapshot {} floats, lane wants {}",
+                part.data.len(),
+                l * rest
+            );
+            for li in 0..l {
+                let dst = (li * batch + b) * rest;
+                let src = li * rest;
+                t.data[dst..dst + rest].copy_from_slice(&part.data[src..src + rest]);
             }
             *lit = literal::tensor_to_literal(&t)?;
         }
@@ -272,7 +382,28 @@ impl EngineLoop {
             if let Lane::Active(a) = lane {
                 self.latency_hist.record(now - a.arrival);
                 self.completed += 1;
-                let _ = a.events.send(TokenEvent::finished(a.request_id, reason));
+                // detach the lane's state into the session store before the
+                // lane can be re-admitted: `self.state` still holds exactly
+                // the post-step state, and `a.last_token` is the next
+                // input an uninterrupted generation would feed
+                if let (Some(store), Some(sid)) = (&self.sessions, a.session) {
+                    match self.export_state_lane(b) {
+                        Ok(parts) => store.put(SessionSnapshot {
+                            id: sid,
+                            cfg_name: self.cfg_name.clone(),
+                            tokens_generated: a.prior_tokens + a.generated as u64,
+                            last_token: a.last_token,
+                            sampler: SamplerState::capture(&a.sampler),
+                            state: parts,
+                        }),
+                        Err(e) => log::warn!("session {sid}: snapshot failed: {e}"),
+                    }
+                }
+                let _ = a.events.send(TokenEvent::finished_resumed(
+                    a.request_id,
+                    reason,
+                    a.resumed,
+                ));
             }
         }
         self.step_hist.record(start.elapsed());
@@ -326,9 +457,26 @@ pub fn spawn_engine(
     policy: SchedPolicy,
     seed: i32,
 ) -> (Sender<GenRequest>, std::thread::JoinHandle<Result<ServeStats>>) {
+    spawn_engine_with_store(artifacts, cfg_name, policy, seed, None)
+}
+
+/// [`spawn_engine`] with a shared session store: session-tagged requests
+/// snapshot on completion and restore on resume.  Pass the *same* store to
+/// every replica (and the server frontend) — that sharing is what makes a
+/// session free to land on any replica after a routing change.
+pub fn spawn_engine_with_store(
+    artifacts: String,
+    cfg_name: String,
+    policy: SchedPolicy,
+    seed: i32,
+    store: Option<Arc<SessionStore>>,
+) -> (Sender<GenRequest>, std::thread::JoinHandle<Result<ServeStats>>) {
     let (tx, rx) = std::sync::mpsc::channel();
     let handle = std::thread::spawn(move || {
         let mut lp = EngineLoop::new(&artifacts, &cfg_name, policy, seed, rx)?;
+        if let Some(store) = store {
+            lp.set_session_store(store);
+        }
         lp.run()
     });
     (tx, handle)

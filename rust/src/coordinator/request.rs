@@ -25,15 +25,28 @@ pub struct TokenEvent {
     pub token: Option<u8>,
     pub done: bool,
     pub finish: Option<FinishReason>,
+    /// On the final event: did the lane actually restore a session
+    /// snapshot?  (A requested resume can degrade to a fresh lane if the
+    /// snapshot was evicted or incompatible by admission time — this flag
+    /// is the engine's ground truth, unlike any submit-time check.)
+    pub resumed: bool,
 }
 
 impl TokenEvent {
     pub fn token(request_id: RequestId, token: u8) -> TokenEvent {
-        TokenEvent { request_id, token: Some(token), done: false, finish: None }
+        TokenEvent { request_id, token: Some(token), done: false, finish: None, resumed: false }
     }
 
     pub fn finished(request_id: RequestId, reason: FinishReason) -> TokenEvent {
-        TokenEvent { request_id, token: None, done: true, finish: Some(reason) }
+        TokenEvent { request_id, token: None, done: true, finish: Some(reason), resumed: false }
+    }
+
+    pub fn finished_resumed(
+        request_id: RequestId,
+        reason: FinishReason,
+        resumed: bool,
+    ) -> TokenEvent {
+        TokenEvent { resumed, ..TokenEvent::finished(request_id, reason) }
     }
 }
 
@@ -49,6 +62,13 @@ pub struct GenRequest {
     pub sampler: SamplerCfg,
     /// Streaming channel for token events.
     pub events: Sender<TokenEvent>,
+    /// Durable conversation id: on completion the lane's state is detached
+    /// into the session store under this key (None = stateless request).
+    pub session: Option<u64>,
+    /// Restore this session's snapshot instead of starting from zero state
+    /// (the prompt then carries only the *new* turn's text, which may be
+    /// empty to continue generation in place).
+    pub resume: bool,
 }
 
 impl GenRequest {
@@ -59,7 +79,19 @@ impl GenRequest {
         sampler: SamplerCfg,
         events: Sender<TokenEvent>,
     ) -> GenRequest {
-        GenRequest { id, prompt, max_new_tokens, eos: None, sampler, events }
+        GenRequest { id, prompt, max_new_tokens, eos: None, sampler, events, session: None, resume: false }
+    }
+
+    /// Tag the request with a session id (snapshot on completion).
+    pub fn with_session(mut self, session: u64) -> GenRequest {
+        self.session = Some(session);
+        self
+    }
+
+    /// Ask the coordinator to restore the session's snapshot on admission.
+    pub fn resuming(mut self) -> GenRequest {
+        self.resume = true;
+        self
     }
 }
 

@@ -4,6 +4,7 @@
 //! an mpsc sender.  The router is `Send + Sync` (it holds only channels and
 //! atomics) so any number of frontend threads can submit through it.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Mutex;
@@ -46,6 +47,11 @@ pub struct Router {
     policy: RoutePolicy,
     rr: AtomicU64,
     next_id: AtomicU64,
+    /// Session -> replica overrides (rebalancing / migration).  A pinned
+    /// session routes to its pin regardless of policy; with a shared
+    /// session store, repinning *is* cross-replica migration — the state
+    /// follows through the store on the session's next resume.
+    pins: Mutex<HashMap<u64, usize>>,
 }
 
 impl Router {
@@ -58,6 +64,7 @@ impl Router {
             policy,
             rr: AtomicU64::new(0),
             next_id: AtomicU64::new(1),
+            pins: Mutex::new(HashMap::new()),
         }
     }
 
@@ -69,8 +76,26 @@ impl Router {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// Pin a session to a replica (overrides the routing policy).  Used to
+    /// rebalance conversations across replicas: the pinned replica restores
+    /// the session's state from the shared store on its next resume.
+    pub fn pin_session(&self, session: u64, replica: usize) {
+        assert!(replica < self.replicas.len(), "replica {replica} out of range");
+        self.pins.lock().unwrap().insert(session, replica);
+    }
+
+    /// Remove a pin; the session falls back to the routing policy.
+    pub fn unpin_session(&self, session: u64) {
+        self.pins.lock().unwrap().remove(&session);
+    }
+
     /// Pick the replica index for a request (session key optional).
     pub fn pick(&self, session: Option<u64>) -> usize {
+        if let Some(sid) = session {
+            if let Some(&replica) = self.pins.lock().unwrap().get(&sid) {
+                return replica;
+            }
+        }
         let n = self.replicas.len();
         match self.policy {
             RoutePolicy::RoundRobin => (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n,
@@ -159,6 +184,21 @@ mod tests {
         assert_eq!(router.submit(r3, None).unwrap(), 0);
         assert_eq!(rxs[0].try_iter().count(), 2);
         assert_eq!(rxs[1].try_iter().count(), 1);
+    }
+
+    #[test]
+    fn pinned_session_overrides_policy_until_unpinned() {
+        let (router, _rxs) = mk_router(4, RoutePolicy::SessionAffinity);
+        let natural = router.pick(Some(42));
+        let target = (natural + 1) % 4;
+        router.pin_session(42, target);
+        for _ in 0..5 {
+            assert_eq!(router.pick(Some(42)), target);
+        }
+        // other sessions are unaffected
+        assert_eq!(router.pick(Some(43)), router.pick(Some(43)));
+        router.unpin_session(42);
+        assert_eq!(router.pick(Some(42)), natural);
     }
 
     #[test]

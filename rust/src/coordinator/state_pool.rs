@@ -72,8 +72,9 @@ impl StatePool {
         Ok(())
     }
 
-    /// Read one lane's state slice (diagnostics / session migration).
-    pub fn export_lane(&self, b: usize) -> Vec<Tensor> {
+    /// Read one lane's state slice (session snapshot / migration — the
+    /// detach hook of [`crate::session`]).
+    pub fn read_lane(&self, b: usize) -> Vec<Tensor> {
         self.components
             .iter()
             .map(|comp| {
@@ -93,8 +94,9 @@ impl StatePool {
             .collect()
     }
 
-    /// Write one lane's state slice (session migration between replicas).
-    pub fn import_lane(&mut self, b: usize, parts: &[Tensor]) {
+    /// Write one lane's state slice (session restore / migration between
+    /// replicas — the attach hook of [`crate::session`]).
+    pub fn write_lane(&mut self, b: usize, parts: &[Tensor]) {
         assert_eq!(parts.len(), self.components.len());
         for (comp, part) in self.components.iter_mut().zip(parts) {
             let l = comp.shape[0];
@@ -140,16 +142,16 @@ mod tests {
         }
         pool.zero_lane(1);
         // lane 1 zero, lanes 0/2 untouched
-        let lane0 = pool.export_lane(0);
-        let lane1 = pool.export_lane(1);
-        let lane2 = pool.export_lane(2);
+        let lane0 = pool.read_lane(0);
+        let lane1 = pool.read_lane(1);
+        let lane2 = pool.read_lane(2);
         assert!(lane0.iter().all(|t| t.data.iter().all(|&x| x == 1.0)));
         assert!(lane1.iter().all(|t| t.data.iter().all(|&x| x == 0.0)));
         assert!(lane2.iter().all(|t| t.data.iter().all(|&x| x == 1.0)));
     }
 
     #[test]
-    fn export_import_roundtrip() {
+    fn read_zero_write_roundtrip_is_exact_and_surgical() {
         let cfg = test_cfg();
         let mut pool = StatePool::new(&cfg);
         for (i, c) in pool.components.iter_mut().enumerate() {
@@ -157,11 +159,17 @@ mod tests {
                 *x = (i * 1000 + j) as f32;
             }
         }
-        let saved = pool.export_lane(2);
+        // read_lane -> zero_lane -> write_lane restores the exact bytes...
+        let before = [pool.read_lane(0), pool.read_lane(1), pool.read_lane(2)];
+        let saved = pool.read_lane(2);
         pool.zero_lane(2);
-        pool.import_lane(2, &saved);
-        let back = pool.export_lane(2);
-        assert_eq!(saved, back);
+        assert!(pool.read_lane(2).iter().all(|t| t.data.iter().all(|&x| x == 0.0)));
+        pool.write_lane(2, &saved);
+        assert_eq!(pool.read_lane(2), saved);
+        // ...and leaves every other lane untouched throughout
+        for (b, orig) in before.iter().enumerate() {
+            assert_eq!(&pool.read_lane(b), orig, "lane {b} disturbed");
+        }
     }
 
     #[test]

@@ -119,7 +119,7 @@ where
 
 /// Chunk-parallel masked second-order HLA (outputs identical to serial).
 ///
-/// Hot-path layout (EXPERIMENTS.md §Perf): chunk summaries are built by
+/// Hot-path layout (rust/DESIGN.md §Perf): chunk summaries are built by
 /// *serial rank-1 stepping* (not per-token monoid combines, which cost an
 /// O(d³) matmul + five matrix clones per token), the exclusive Blelloch
 /// scan runs over the B_c summaries only, and each chunk then serial-steps

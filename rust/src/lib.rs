@@ -8,11 +8,12 @@
 //!   prefill, decode), exported as HLO text artifacts.
 //! * **L3** (this crate) — the runtime and coordinator: PJRT execution of
 //!   the artifacts, continuous-batching decode with constant-size HLA
-//!   state, a training driver, plus a from-scratch reimplementation of the
-//!   paper's full algebra (`hla`) used for verification and CPU baselines.
+//!   state, a session snapshot/resume/fork store (`session`), a training
+//!   driver, plus a from-scratch reimplementation of the paper's full
+//!   algebra (`hla`) used for verification and CPU baselines.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-claim ↔ measurement map (benches E1–E12).
+//! See `rust/DESIGN.md` for the system inventory and the `rust/benches/`
+//! E-series (E1–E13) for the paper-claim ↔ measurement map.
 
 pub mod attention;
 pub mod bench;
@@ -23,6 +24,7 @@ pub mod hla;
 pub mod model;
 pub mod runtime;
 pub mod server;
+pub mod session;
 pub mod train;
 pub mod workload;
 pub mod metrics;

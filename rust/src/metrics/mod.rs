@@ -1,8 +1,51 @@
 //! Metrics substrate: log-bucketed latency histograms with percentile
-//! queries, throughput meters and a table reporter — replaces
-//! hdrhistogram/prometheus for the serving benches (E8) and the CLI.
+//! queries, throughput meters, lock-free event counters and a table
+//! reporter — replaces hdrhistogram/prometheus for the serving benches
+//! (E8/E13) and the CLI.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+/// Lock-free monotonically increasing event counter, shareable across
+/// threads behind an `Arc` (e.g. the session store's snapshot/restore/
+/// hit-rate accounting read concurrently by server handlers and the CLI).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Increment by one; returns the new value.
+    pub fn incr(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Undo one increment (compensating entry, e.g. a claim that had to be
+    /// rolled back).  Caller guarantees a matching `incr` happened.
+    pub fn decr(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// `hits / (hits + misses)`, or 0 when nothing was recorded.
+pub fn hit_rate(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
 
 /// Log-bucketed histogram over microsecond latencies.
 ///
@@ -244,6 +287,34 @@ mod tests {
         let lines: Vec<&str> = s.lines().collect();
         assert_eq!(lines.len(), 4);
         assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn counter_concurrent_increments() {
+        use std::sync::Arc;
+        let c = Arc::new(Counter::new());
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.incr();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        c.add(5);
+        assert_eq!(c.get(), 4005);
+    }
+
+    #[test]
+    fn hit_rate_bounds() {
+        assert_eq!(hit_rate(0, 0), 0.0);
+        assert_eq!(hit_rate(3, 1), 0.75);
+        assert_eq!(hit_rate(0, 7), 0.0);
+        assert_eq!(hit_rate(7, 0), 1.0);
     }
 
     #[test]

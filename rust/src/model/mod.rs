@@ -10,13 +10,15 @@
 pub mod params;
 pub mod sampler;
 
+use anyhow::{bail, ensure, Result};
+
 use crate::attention::{KvCache, LinearAttnState};
 use crate::hla::ahla::AhlaState;
 use crate::hla::state2::Hla2State;
 use crate::hla::state3::Hla3State;
 use crate::hla::{HlaOptions, NormMode};
 use crate::runtime::ModelCfg;
-use crate::tensor::{ops, Mat};
+use crate::tensor::{ops, Mat, Tensor};
 pub use params::RustModel;
 
 /// Per-head recurrent mixer state (the serving state).
@@ -50,6 +52,87 @@ impl MixerState {
             MixerState::Linear(s) => s.nbytes(),
             MixerState::Softmax(c) => c.nbytes(),
         }
+    }
+
+    /// Flatten to one contiguous f32 vector — the session-snapshot carrier
+    /// (fields in declaration order).  Errors on the softmax baseline: its
+    /// KV-cache grows with context, which is exactly the cost HLA's
+    /// constant-size state lets snapshot/resume avoid.
+    pub fn state_vec(&self) -> Result<Vec<f32>> {
+        let mut out = vec![];
+        match self {
+            MixerState::Hla2(s) => {
+                out.extend_from_slice(&s.s.data);
+                out.extend_from_slice(&s.c.data);
+                out.extend_from_slice(&s.m);
+                out.extend_from_slice(&s.g.data);
+                out.extend_from_slice(&s.h);
+            }
+            MixerState::Ahla(s) => {
+                out.extend_from_slice(&s.p.data);
+                out.extend_from_slice(&s.m);
+                out.extend_from_slice(&s.e.data);
+                out.extend_from_slice(&s.n);
+            }
+            MixerState::Hla3(s) => {
+                out.extend_from_slice(&s.s.data);
+                out.extend_from_slice(&s.p.data);
+                out.extend_from_slice(&s.m);
+                out.extend_from_slice(&s.f.data);
+                out.extend_from_slice(&s.eta);
+            }
+            MixerState::Linear(s) => {
+                out.extend_from_slice(&s.p.data);
+                out.extend_from_slice(&s.m);
+            }
+            MixerState::Softmax(_) => {
+                bail!("softmax KV-cache is O(context); it has no constant-size snapshot")
+            }
+        }
+        Ok(out)
+    }
+
+    /// Restore from a [`MixerState::state_vec`] flat vector (shapes come
+    /// from the receiver, which must have been built for the same config).
+    pub fn load_state_vec(&mut self, mut data: &[f32]) -> Result<()> {
+        fn take<'a>(data: &mut &'a [f32], dst: &mut [f32]) -> Result<()> {
+            ensure!(data.len() >= dst.len(), "state vector too short");
+            let (a, b) = data.split_at(dst.len());
+            dst.copy_from_slice(a);
+            *data = b;
+            Ok(())
+        }
+        match self {
+            MixerState::Hla2(s) => {
+                take(&mut data, &mut s.s.data)?;
+                take(&mut data, &mut s.c.data)?;
+                take(&mut data, &mut s.m)?;
+                take(&mut data, &mut s.g.data)?;
+                take(&mut data, &mut s.h)?;
+            }
+            MixerState::Ahla(s) => {
+                take(&mut data, &mut s.p.data)?;
+                take(&mut data, &mut s.m)?;
+                take(&mut data, &mut s.e.data)?;
+                take(&mut data, &mut s.n)?;
+            }
+            MixerState::Hla3(s) => {
+                take(&mut data, &mut s.s.data)?;
+                take(&mut data, &mut s.p.data)?;
+                take(&mut data, &mut s.m)?;
+                take(&mut data, &mut s.f.data)?;
+                take(&mut data, &mut s.eta)?;
+            }
+            MixerState::Linear(s) => {
+                take(&mut data, &mut s.p.data)?;
+                take(&mut data, &mut s.m)?;
+            }
+            MixerState::Softmax(_) => {
+                bail!("softmax KV-cache is O(context); it has no constant-size snapshot")
+            }
+        }
+        ensure!(data.is_empty(), "{} trailing floats in state vector", data.len());
+        Ok(())
     }
 
     /// One token through one head: update state, produce the head output.
@@ -93,6 +176,30 @@ impl ModelState {
 
     pub fn nbytes(&self) -> usize {
         self.layers.iter().flatten().map(|s| s.nbytes()).sum()
+    }
+
+    /// Serialize as one tensor per (layer, head) — the carrier format of
+    /// [`crate::session::SessionSnapshot`] for the pure-Rust decode path.
+    pub fn to_tensors(&self) -> Result<Vec<Tensor>> {
+        self.layers
+            .iter()
+            .flatten()
+            .map(|m| {
+                let v = m.state_vec()?;
+                Ok(Tensor::from_vec(&[v.len()], v))
+            })
+            .collect()
+    }
+
+    /// Restore from [`ModelState::to_tensors`] parts (receiver must be a
+    /// fresh state for the same config).
+    pub fn load_tensors(&mut self, parts: &[Tensor]) -> Result<()> {
+        let n: usize = self.layers.iter().map(|l| l.len()).sum();
+        ensure!(parts.len() == n, "state arity mismatch: {} tensors for {n} heads", parts.len());
+        for (m, part) in self.layers.iter_mut().flatten().zip(parts) {
+            m.load_state_vec(&part.data)?;
+        }
+        Ok(())
     }
 }
 
@@ -209,6 +316,32 @@ mod tests {
         assert!((silu(0.0)).abs() < 1e-7);
         assert!(silu(10.0) > 9.9);
         assert!(silu(-10.0) > -1e-3);
+    }
+
+    #[test]
+    fn state_vec_roundtrip_all_constant_size_mixers() {
+        let opts = HlaOptions::<f32>::default();
+        for mixer in ["hla2", "ahla", "hla3", "linear"] {
+            let mut s = MixerState::new(mixer, 8);
+            let mut rng = crate::util::rng::Rng::new(3);
+            let mut q = vec![0f32; 8];
+            let mut k = vec![0f32; 8];
+            let mut v = vec![0f32; 8];
+            for _ in 0..5 {
+                rng.fill_normal(&mut q, 1.0);
+                rng.fill_normal(&mut k, 1.0);
+                rng.fill_normal(&mut v, 1.0);
+                s.step(&q, &k, &v, &opts);
+            }
+            let vec = s.state_vec().unwrap();
+            assert_eq!(vec.len() * 4, s.nbytes(), "{mixer}");
+            let mut fresh = MixerState::new(mixer, 8);
+            fresh.load_state_vec(&vec).unwrap();
+            assert_eq!(fresh.state_vec().unwrap(), vec, "{mixer}");
+            assert!(fresh.load_state_vec(&vec[..vec.len() - 1]).is_err(), "{mixer}: short");
+        }
+        // softmax is the contrast case: no constant-size snapshot exists
+        assert!(MixerState::new("softmax", 8).state_vec().is_err());
     }
 
     #[test]

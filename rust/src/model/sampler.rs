@@ -37,6 +37,17 @@ impl Sampler {
         Sampler { cfg, rng }
     }
 
+    /// Capture the RNG stream position (session snapshot / exact resume).
+    pub fn rng_parts(&self) -> (u64, Option<f64>) {
+        self.rng.parts()
+    }
+
+    /// Rebuild a sampler mid-stream from [`Sampler::rng_parts`]; sampling
+    /// continues exactly where the captured sampler left off.
+    pub fn from_parts(cfg: SamplerCfg, state: u64, spare: Option<f64>) -> Sampler {
+        Sampler { cfg, rng: Rng::from_parts(state, spare) }
+    }
+
     /// Sample a token id from raw logits.
     pub fn sample(&mut self, logits: &[f32]) -> usize {
         if self.cfg.temperature <= 0.0 {
@@ -87,6 +98,21 @@ mod tests {
         for _ in 0..50 {
             let t = s.sample(&logits);
             assert!(t < 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn rng_parts_resume_exact() {
+        let cfg = SamplerCfg { temperature: 1.0, top_k: 0, seed: 11 };
+        let mut a = Sampler::new(cfg.clone());
+        let logits = vec![1.0f32, 0.5, 0.2, 0.9];
+        for _ in 0..7 {
+            a.sample(&logits);
+        }
+        let (state, spare) = a.rng_parts();
+        let mut b = Sampler::from_parts(cfg, state, spare);
+        for _ in 0..32 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
         }
     }
 

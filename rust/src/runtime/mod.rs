@@ -42,7 +42,7 @@ impl Executable {
 
     /// Execute with *borrowed* literals — the decode hot path: callers keep
     /// params/state alive across steps and pass references, so nothing is
-    /// deep-copied per step (EXPERIMENTS.md §Perf item 2).
+    /// deep-copied per step (rust/DESIGN.md §Perf item 2).
     pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         if inputs.len() != self.spec.inputs.len() {
             return Err(anyhow!(

@@ -18,6 +18,37 @@ pub struct Completion {
     pub ttft: Duration,
     /// total request latency
     pub latency: Duration,
+    /// did the server restore a session snapshot for this request?
+    pub resumed: bool,
+}
+
+/// Request options for [`Client::generate_opts`] (the session-aware path).
+#[derive(Debug, Clone)]
+pub struct GenOpts {
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: Option<u64>,
+    /// Session id: snapshot on completion / resume target / fork child id.
+    pub session: Option<u64>,
+    /// Restore `session`'s snapshot; the prompt is just the new turn.
+    pub resume: bool,
+    /// Fork this parent session's snapshot into `session` and resume it.
+    pub fork_of: Option<u64>,
+}
+
+impl Default for GenOpts {
+    fn default() -> Self {
+        GenOpts {
+            max_tokens: 32,
+            temperature: 0.0,
+            top_k: 0,
+            seed: None,
+            session: None,
+            resume: false,
+            fork_of: None,
+        }
+    }
 }
 
 /// A persistent connection to the HLA server.
@@ -41,13 +72,33 @@ impl Client {
         temperature: f32,
         session: Option<u64>,
     ) -> Result<Completion> {
+        self.generate_opts(
+            prompt,
+            &GenOpts { max_tokens, temperature, session, ..GenOpts::default() },
+        )
+    }
+
+    /// Submit a prompt with full session options (resume / fork).
+    pub fn generate_opts(&mut self, prompt: &str, opts: &GenOpts) -> Result<Completion> {
         let mut req = vec![
             ("prompt", Json::str(prompt)),
-            ("max_tokens", Json::num(max_tokens as f64)),
-            ("temperature", Json::num(temperature as f64)),
+            ("max_tokens", Json::num(opts.max_tokens as f64)),
+            ("temperature", Json::num(opts.temperature as f64)),
         ];
-        if let Some(s) = session {
+        if opts.top_k > 0 {
+            req.push(("top_k", Json::num(opts.top_k as f64)));
+        }
+        if let Some(seed) = opts.seed {
+            req.push(("seed", Json::num(seed as f64)));
+        }
+        if let Some(s) = opts.session {
             req.push(("session", Json::num(s as f64)));
+        }
+        if opts.resume {
+            req.push(("resume", Json::Bool(true)));
+        }
+        if let Some(parent) = opts.fork_of {
+            req.push(("fork_of", Json::num(parent as f64)));
         }
         let start = Instant::now();
         writeln!(self.writer, "{}", Json::obj(req))?;
@@ -73,12 +124,14 @@ impl Client {
             if msg.get("done").and_then(Json::as_bool) == Some(true) {
                 let finish =
                     msg.get("finish").and_then(Json::as_str).unwrap_or("unknown").to_string();
+                let resumed = msg.get("resumed").and_then(Json::as_bool).unwrap_or(false);
                 return Ok(Completion {
                     text: String::from_utf8_lossy(&tokens).to_string(),
                     tokens,
                     finish,
                     ttft: ttft.unwrap_or_else(|| start.elapsed()),
                     latency: start.elapsed(),
+                    resumed,
                 });
             }
         }

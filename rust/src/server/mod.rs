@@ -4,7 +4,31 @@
 //!   → `{"prompt": "...", "max_tokens": 32, "temperature": 0.8,
 //!      "top_k": 40, "seed": 7, "session": 123}`
 //!   ← `{"token": 104, "text": "h"}`           (streamed, one per token)
-//!   ← `{"done": true, "finish": "length", "n": 32}`  (final)
+//!   ← `{"done": true, "finish": "length", "n": 32,
+//!      "session": 123, "resumed": false}`     (final; session fields only
+//!                                              when a session id was sent)
+//!
+//! Session extension (requires serving with a session store, see
+//! [`serve_sessions`]; each field is optional):
+//!   * `"session": <id>` — tag the request; on completion the lane's
+//!     constant-size HLA state is snapshotted into the store under `<id>`.
+//!   * `"resume": true` — restore `<id>`'s snapshot before generating, so
+//!     `"prompt"` carries only the new turn's text (it may be empty or
+//!     absent to continue generation in place).  The resumed sampler keeps
+//!     the snapshot's config and exact RNG position: the token stream is
+//!     identical to one uninterrupted generation.  Unknown `<id>` →
+//!     `{"error": "unknown session <id>"}` and nothing is generated.
+//!   * `"fork_of": <parent>` — copy-on-snapshot fork: `<parent>`'s state
+//!     is duplicated under `"session"` (required) at O(state) cost and the
+//!     request resumes the fork.  `"seed"` reseeds the fork's sampler so N
+//!     forks of one shared prompt prefix diverge.  Unknown parent →
+//!     `{"error": "unknown session <parent>"}`.
+//!
+//! Error replies are one-line objects: `{"error": "<reason>"}` — sent for
+//! malformed JSON, resume/fork without a session store, `fork_of` without
+//! a `"session"` id, unknown sessions, and out-of-range ids.  Session ids
+//! are JSON numbers and must be integers in `[0, 2^53)` — larger values
+//! do not survive the f64 round-trip and are rejected.
 //!
 //! The listener accepts on a std TcpListener; each connection gets a
 //! handler thread that submits to the [`Router`] and forwards token events
@@ -18,18 +42,33 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::router::Router;
 use crate::coordinator::{FinishReason, GenRequest};
 use crate::model::sampler::SamplerCfg;
+use crate::session::SessionStore;
 use crate::util::json::Json;
 
-/// Serve until `stop` is set.  Returns the bound address immediately via
-/// the callback so tests can connect to an ephemeral port.
+/// Serve until `stop` is set (stateless: no session snapshot/resume).
+/// Returns the bound address immediately via the callback so tests can
+/// connect to an ephemeral port.
 pub fn serve(
     addr: &str,
     router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    serve_sessions(addr, router, None, stop, on_bound)
+}
+
+/// [`serve`] with an optional session store enabling the `resume` /
+/// `fork_of` protocol fields.  Pass the same store the engine replicas
+/// were spawned with ([`crate::coordinator::spawn_engine_with_store`]).
+pub fn serve_sessions(
+    addr: &str,
+    router: Arc<Router>,
+    sessions: Option<Arc<SessionStore>>,
     stop: Arc<AtomicBool>,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> Result<()> {
@@ -40,11 +79,12 @@ pub fn serve(
         match listener.accept() {
             Ok((stream, _)) => {
                 let router = router.clone();
+                let sessions = sessions.clone();
                 // handlers are detached: they exit when their client hangs
                 // up (read_line returns 0), so shutdown never blocks on a
                 // connection that is idle but still open.
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &router);
+                    let _ = handle_conn(stream, &router, sessions.as_deref());
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -56,7 +96,7 @@ pub fn serve(
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
+fn handle_conn(stream: TcpStream, router: &Router, sessions: Option<&SessionStore>) -> Result<()> {
     let peer = stream.peer_addr()?;
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -65,7 +105,7 @@ fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        match handle_request(&line, router, &mut writer) {
+        match handle_request(&line, router, sessions, &mut writer) {
             Ok(()) => {}
             Err(e) => {
                 let err = Json::obj(vec![("error", Json::str(e.to_string()))]);
@@ -77,23 +117,74 @@ fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
     Ok(())
 }
 
-fn handle_request(line: &str, router: &Router, writer: &mut TcpStream) -> Result<()> {
+/// Session ids ride in JSON numbers, so only integers below 2^53 survive
+/// the f64 round-trip exactly; reject anything else rather than silently
+/// storing a snapshot under a corrupted id.
+fn parse_session_id(req: &Json, key: &str) -> Result<Option<u64>> {
+    match req.get(key).and_then(Json::as_f64) {
+        None => Ok(None),
+        Some(s) if s >= 0.0 && s.fract() == 0.0 && s < 9_007_199_254_740_992.0 => {
+            Ok(Some(s as u64))
+        }
+        Some(s) => Err(anyhow!("{key} must be an integer in [0, 2^53), got {s}")),
+    }
+}
+
+fn handle_request(
+    line: &str,
+    router: &Router,
+    sessions: Option<&SessionStore>,
+    writer: &mut TcpStream,
+) -> Result<()> {
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
     let prompt = req.get("prompt").and_then(Json::as_str).unwrap_or("").as_bytes().to_vec();
     let max_tokens = req.get("max_tokens").and_then(Json::as_usize).unwrap_or(32).clamp(1, 4096);
+    // seeds ride in JSON numbers like ids do, so they get the same exact-
+    // integer validation (a rounded seed would silently collide forks)
+    let seed = parse_session_id(&req, "seed")?;
     let sampler = SamplerCfg {
         temperature: req.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32,
         top_k: req.get("top_k").and_then(Json::as_usize).unwrap_or(0),
-        seed: req.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+        seed: seed.unwrap_or(0),
     };
-    let session = req.get("session").and_then(Json::as_i64).map(|s| s as u64);
+    let session = parse_session_id(&req, "session")?;
+    let resume = req.get("resume").and_then(Json::as_bool).unwrap_or(false);
+    let fork_of = parse_session_id(&req, "fork_of")?;
+
+    // session-extension validation: fail fast with an error reply rather
+    // than admitting a lane that cannot restore
+    let mut resume_requested = false;
+    if let Some(parent) = fork_of {
+        let store = sessions.ok_or_else(|| anyhow!("fork_of: serving without a session store"))?;
+        let child =
+            session.ok_or_else(|| anyhow!("fork_of requires a \"session\" id for the fork"))?;
+        store.fork(parent, child, seed).map_err(|_| anyhow!("unknown session {parent}"))?;
+        resume_requested = true;
+    } else if resume {
+        let store = sessions.ok_or_else(|| anyhow!("resume: serving without a session store"))?;
+        let sid = session.ok_or_else(|| anyhow!("resume requires a \"session\" id"))?;
+        if !store.contains(sid) {
+            return Err(anyhow!("unknown session {sid}"));
+        }
+        resume_requested = true;
+    }
 
     let (tx, rx) = std::sync::mpsc::channel();
     let id = router.fresh_id();
-    let replica = router.submit(GenRequest::new(id, prompt, max_tokens, sampler, tx), session)?;
+    let mut greq = GenRequest::new(id, prompt, max_tokens, sampler, tx);
+    if let Some(sid) = session {
+        greq = greq.with_session(sid);
+    }
+    if resume_requested {
+        greq = greq.resuming();
+    }
+    let replica = router.submit(greq, session)?;
 
     let mut n = 0usize;
     let mut finish = FinishReason::Aborted;
+    // ground truth from the engine: a requested resume can still degrade
+    // to a fresh lane (snapshot evicted/incompatible by admission time)
+    let mut resumed = false;
     while let Ok(ev) = rx.recv() {
         if let Some(tok) = ev.token {
             n += 1;
@@ -106,6 +197,7 @@ fn handle_request(line: &str, router: &Router, writer: &mut TcpStream) -> Result
         }
         if ev.done {
             finish = ev.finish.unwrap_or(FinishReason::Aborted);
+            resumed = ev.resumed;
             break;
         }
     }
@@ -115,11 +207,16 @@ fn handle_request(line: &str, router: &Router, writer: &mut TcpStream) -> Result
         FinishReason::Eos => "eos",
         FinishReason::Aborted => "aborted",
     };
-    let msg = Json::obj(vec![
+    let mut done = vec![
         ("done", Json::Bool(true)),
         ("finish", Json::str(fin)),
         ("n", Json::num(n as f64)),
-    ]);
+    ];
+    if let Some(sid) = session {
+        done.push(("session", Json::num(sid as f64)));
+        done.push(("resumed", Json::Bool(resumed)));
+    }
+    let msg = Json::obj(done);
     writeln!(writer, "{msg}")?;
     Ok(())
 }

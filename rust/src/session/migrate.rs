@@ -1,0 +1,151 @@
+//! Detach / attach / cross-replica migration of lane state.
+//!
+//! Built on [`StatePool::read_lane`] / [`StatePool::write_lane`]: because a
+//! lane's whole prefix is a constant-size tuple, moving a session between
+//! replicas is a fixed-size copy — no O(context) KV-cache paging.  With a
+//! shared [`super::SessionStore`], cross-replica migration is simply
+//! "detach on replica A, restore on replica B"; rebalancing which replica
+//! serves the session is a routing decision
+//! ([`crate::coordinator::router::Router::pin_session`]).
+
+use crate::coordinator::StatePool;
+use crate::model::sampler::Sampler;
+
+use super::snapshot::SamplerState;
+use super::{SessionId, SessionSnapshot, SessionStore};
+
+/// Detach one lane of a pool into a snapshot (the read_lane hook).
+pub fn detach(
+    pool: &StatePool,
+    lane: usize,
+    id: SessionId,
+    cfg_name: &str,
+    sampler: &Sampler,
+    last_token: u8,
+    tokens_generated: u64,
+) -> SessionSnapshot {
+    SessionSnapshot {
+        id,
+        cfg_name: cfg_name.to_string(),
+        tokens_generated,
+        last_token,
+        sampler: SamplerState::capture(sampler),
+        state: pool.read_lane(lane),
+    }
+}
+
+/// Restore a snapshot's state into one lane of a pool (the write_lane hook).
+pub fn attach(snap: &SessionSnapshot, pool: &mut StatePool, lane: usize) {
+    pool.write_lane(lane, &snap.state);
+}
+
+/// Copy a lane's state directly between two pools (same state layout) —
+/// the in-process fast path when both replicas are reachable.
+pub fn migrate_lane(src: &StatePool, src_lane: usize, dst: &mut StatePool, dst_lane: usize) {
+    let parts = src.read_lane(src_lane);
+    dst.write_lane(dst_lane, &parts);
+}
+
+/// Move a session's snapshot through the store from one pool to another:
+/// detach from `src`, restore into `dst`, counting the migration.  This is
+/// the store-mediated path used when replicas do not share an address
+/// space (the snapshot bytes are what would cross the wire).
+#[allow(clippy::too_many_arguments)]
+pub fn migrate_via_store(
+    store: &SessionStore,
+    id: SessionId,
+    cfg_name: &str,
+    src: &StatePool,
+    src_lane: usize,
+    sampler: &Sampler,
+    last_token: u8,
+    tokens_generated: u64,
+    dst: &mut StatePool,
+    dst_lane: usize,
+) -> anyhow::Result<SessionSnapshot> {
+    store.put(detach(src, src_lane, id, cfg_name, sampler, last_token, tokens_generated));
+    let snap = store
+        .claim(id, Some(cfg_name))
+        .ok_or_else(|| anyhow::anyhow!("session {id} vanished mid-migration"))?;
+    attach(&snap, dst, dst_lane);
+    store.migrations.incr();
+    Ok(snap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sampler::SamplerCfg;
+    use crate::runtime::{Manifest, ModelCfg};
+    use crate::util::rng::Rng;
+
+    fn test_cfg() -> ModelCfg {
+        let json = r#"{
+          "configs": {"t": {"vocab": 16, "d_model": 8, "n_layers": 2,
+            "n_heads": 2, "head_dim": 4, "d_ffn": 32, "kv_heads": 2,
+            "mixer": "hla2", "chunk": 4, "gamma": 1.0, "lam": 0.0,
+            "norm_mode": "abs", "eps": 1e-6, "n_params": 100,
+            "n_param_tensors": 2, "n_state_tensors": 2,
+            "param_paths": [["['embed']", [16, 8]]],
+            "state_paths": [["['c']", [2, 3, 2, 4, 4]], ["['m']", [2, 3, 2, 4]]],
+            "train_batch": 2, "train_seq": 8, "decode_batch": 3,
+            "prefill_len": 4}},
+          "artifacts": {}
+        }"#;
+        Manifest::parse(json).unwrap().configs["t"].clone()
+    }
+
+    fn filled_pool(cfg: &ModelCfg, seed: u64) -> StatePool {
+        let mut pool = StatePool::new(cfg);
+        let mut rng = Rng::new(seed);
+        for lane in 0..cfg.decode_batch {
+            let mut parts = pool.read_lane(lane);
+            for t in &mut parts {
+                rng.fill_normal(&mut t.data, 1.0);
+            }
+            pool.write_lane(lane, &parts);
+        }
+        pool
+    }
+
+    #[test]
+    fn migrate_lane_moves_exact_bytes() {
+        let cfg = test_cfg();
+        let src = filled_pool(&cfg, 1);
+        let mut dst = StatePool::new(&cfg);
+        migrate_lane(&src, 2, &mut dst, 0);
+        assert_eq!(dst.read_lane(0), src.read_lane(2));
+        // untouched destination lanes stay zero
+        assert!(dst.read_lane(1).iter().all(|t| t.data.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn detach_attach_roundtrip() {
+        let cfg = test_cfg();
+        let pool = filled_pool(&cfg, 2);
+        let sampler = Sampler::new(SamplerCfg { temperature: 0.7, top_k: 8, seed: 5 });
+        let snap = detach(&pool, 1, 77, "t", &sampler, b'x', 42);
+        assert_eq!(snap.state, pool.read_lane(1));
+        assert_eq!(snap.state_nbytes(), cfg.state_nbytes_per_seq());
+
+        let mut other = StatePool::new(&cfg);
+        attach(&snap, &mut other, 2);
+        assert_eq!(other.read_lane(2), pool.read_lane(1));
+    }
+
+    #[test]
+    fn store_mediated_migration() {
+        let cfg = test_cfg();
+        let src = filled_pool(&cfg, 3);
+        let mut dst = StatePool::new(&cfg);
+        let store = SessionStore::in_memory(4);
+        let sampler = Sampler::new(SamplerCfg::greedy());
+        let snap =
+            migrate_via_store(&store, 9, "t", &src, 0, &sampler, b'q', 11, &mut dst, 1)
+                .unwrap();
+        assert_eq!(dst.read_lane(1), src.read_lane(0));
+        assert_eq!(snap.tokens_generated, 11);
+        assert_eq!(store.stats().migrations, 1);
+        assert!(!store.contains(9), "migration consumes the snapshot");
+    }
+}

@@ -1,0 +1,41 @@
+//! Session state store: snapshot / resume / fork of the constant-size HLA
+//! prefix state.
+//!
+//! HLA's defining serving property (Theorem 3.1) is that the entire
+//! attention prefix is a compact, *constant-size* sufficient statistic —
+//! O(d² + d·d_v) per head — rather than an O(context) KV-cache.  This
+//! module turns that into a serving capability:
+//!
+//! * [`SessionSnapshot`] — a versioned, checksummed capture of one decode
+//!   lane: every state component, the sampler's exact RNG position, the
+//!   last sampled token, and the cumulative token count.  Fixed size no
+//!   matter how long the conversation ran.
+//! * [`SessionStore`] — an in-memory LRU tier with an optional disk-spill
+//!   tier, shared by all engine replicas.  Detach on completion, restore
+//!   on the next turn: a multi-turn conversation skips re-prefilling its
+//!   whole history.
+//! * [`SessionSnapshot::fork`] / [`SessionStore::fork`] — copy-on-snapshot:
+//!   N continuations of one shared prompt prefix cost O(state) each, not
+//!   O(context) each.
+//! * [`migrate`] — cross-replica moves over the
+//!   [`StatePool::read_lane`](crate::coordinator::StatePool::read_lane) /
+//!   [`write_lane`](crate::coordinator::StatePool::write_lane) hooks.
+//!
+//! Wiring: the coordinator detaches a finished lane into the store when
+//! the request carries a session id and restores it on `resume`; the TCP
+//! protocol grows `session` / `resume` / `fork_of` fields (see
+//! [`crate::server`]); `hla sessions` lists/inspects/evicts the spill
+//! tier; bench E13 measures snapshot/restore/fork cost against a
+//! simulated KV-cache checkpoint.
+
+pub mod codec;
+pub mod migrate;
+pub mod snapshot;
+pub mod store;
+
+/// Durable conversation identifier (the TCP protocol's `"session"` field).
+pub type SessionId = u64;
+
+pub use migrate::{attach, detach, migrate_lane, migrate_via_store};
+pub use snapshot::{SamplerState, SessionSnapshot, FORMAT_VERSION};
+pub use store::{spill_file, spill_sessions, SessionStore, StoreCfg, StoreStats};

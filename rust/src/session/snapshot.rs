@@ -1,0 +1,267 @@
+//! The versioned, checksummed session snapshot.
+//!
+//! A [`SessionSnapshot`] is everything needed to continue a generation
+//! exactly where it stopped: the lane's recurrent state tensors (the
+//! paper's constant-size sufficient statistic, O(d² + d·d_v) per head —
+//! Theorem 3.1), the sampler's RNG stream position, the last sampled
+//! token (the next step's input), and the cumulative token count.
+//!
+//! Because the state is constant-size, the snapshot is a fixed-size
+//! memcpy regardless of how long the conversation has run — the property
+//! that makes checkpoint/resume/fork O(state) instead of the O(context)
+//! paging a softmax KV-cache needs (bench E13 quantifies the gap).
+
+use anyhow::{ensure, Result};
+
+use super::codec::{Reader, Writer};
+use super::SessionId;
+use crate::model::sampler::{Sampler, SamplerCfg};
+use crate::tensor::Tensor;
+
+/// Binary format version (bump on layout change; readers reject unknown).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Magic prefix: "HLAS" little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"HLAS");
+
+/// Captured sampler: config plus the exact RNG stream position, so a
+/// resumed generation draws the same tokens an uninterrupted one would.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplerState {
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    pub rng_state: u64,
+    pub rng_spare: Option<f64>,
+}
+
+impl SamplerState {
+    pub fn capture(s: &Sampler) -> SamplerState {
+        let (rng_state, rng_spare) = s.rng_parts();
+        SamplerState {
+            temperature: s.cfg.temperature,
+            top_k: s.cfg.top_k,
+            seed: s.cfg.seed,
+            rng_state,
+            rng_spare,
+        }
+    }
+
+    /// Rebuild the sampler mid-stream.
+    pub fn rebuild(&self) -> Sampler {
+        let cfg = SamplerCfg { temperature: self.temperature, top_k: self.top_k, seed: self.seed };
+        Sampler::from_parts(cfg, self.rng_state, self.rng_spare)
+    }
+
+    /// A fresh stream from `seed` (fork divergence point).
+    pub fn reseeded(&self, seed: u64) -> SamplerState {
+        let sampler = Sampler::new(SamplerCfg {
+            temperature: self.temperature,
+            top_k: self.top_k,
+            seed,
+        });
+        SamplerState::capture(&sampler)
+    }
+}
+
+/// One detached session: the full prefix state of a decode lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    pub id: SessionId,
+    /// Model config the state belongs to; restore refuses a mismatch.
+    pub cfg_name: String,
+    /// Cumulative tokens generated across all turns of this session.
+    pub tokens_generated: u64,
+    /// Last sampled token — the first input token after resume.
+    pub last_token: u8,
+    pub sampler: SamplerState,
+    /// One tensor per state component (the lane slice, batch dim = 1).
+    pub state: Vec<Tensor>,
+}
+
+impl SessionSnapshot {
+    /// Bytes of recurrent state carried (constant per session).
+    pub fn state_nbytes(&self) -> usize {
+        self.state.iter().map(Tensor::nbytes).sum()
+    }
+
+    /// Copy-on-snapshot fork: a new session continuing from the same
+    /// prefix state.  With `reseed`, the fork's sampler starts a fresh
+    /// stream from that seed (so N forks of one prompt prefix diverge);
+    /// without, it inherits the parent's exact stream position.
+    pub fn fork(&self, child: SessionId, reseed: Option<u64>) -> SessionSnapshot {
+        SessionSnapshot {
+            id: child,
+            sampler: match reseed {
+                Some(seed) => self.sampler.reseeded(seed),
+                None => self.sampler.clone(),
+            },
+            ..self.clone()
+        }
+    }
+
+    /// Serialize: magic + version + fields + state tensors + CRC-32.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.u64(self.id);
+        w.str(&self.cfg_name);
+        w.u64(self.tokens_generated);
+        w.u8(self.last_token);
+        w.f32(self.sampler.temperature);
+        w.u64(self.sampler.top_k as u64);
+        w.u64(self.sampler.seed);
+        w.u64(self.sampler.rng_state);
+        match self.sampler.rng_spare {
+            Some(s) => {
+                w.u8(1);
+                w.f64(s);
+            }
+            None => {
+                w.u8(0);
+                w.f64(0.0);
+            }
+        }
+        w.u32(self.state.len() as u32);
+        for t in &self.state {
+            w.u32(t.shape.len() as u32);
+            for &d in &t.shape {
+                w.u32(d as u32);
+            }
+            w.f32_slice(&t.data);
+        }
+        w.finish_with_crc()
+    }
+
+    /// Deserialize + verify checksum, magic and version.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionSnapshot> {
+        let mut r = Reader::with_crc(bytes)?;
+        let magic = r.u32()?;
+        ensure!(magic == MAGIC, "not a session snapshot (magic {magic:#010x})");
+        let version = r.u32()?;
+        ensure!(
+            version == FORMAT_VERSION,
+            "snapshot format v{version} unsupported (this build reads v{FORMAT_VERSION})"
+        );
+        let id = r.u64()?;
+        let cfg_name = r.str()?;
+        let tokens_generated = r.u64()?;
+        let last_token = r.u8()?;
+        let temperature = r.f32()?;
+        let top_k = r.u64()? as usize;
+        let seed = r.u64()?;
+        let rng_state = r.u64()?;
+        let has_spare = r.u8()? != 0;
+        let spare = r.f64()?;
+        let n = r.u32()? as usize;
+        let mut state = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rank = r.u32()? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r.u32()? as usize);
+            }
+            let data = r.f32_slice()?;
+            ensure!(
+                data.len() == shape.iter().product::<usize>(),
+                "state tensor payload {} != shape {shape:?}",
+                data.len()
+            );
+            state.push(Tensor::from_vec(&shape, data));
+        }
+        ensure!(r.remaining() == 0, "{} trailing bytes after snapshot", r.remaining());
+        Ok(SessionSnapshot {
+            id,
+            cfg_name,
+            tokens_generated,
+            last_token,
+            sampler: SamplerState {
+                temperature,
+                top_k,
+                seed,
+                rng_state,
+                rng_spare: has_spare.then_some(spare),
+            },
+            state,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_snapshot(id: SessionId) -> SessionSnapshot {
+        let mut rng = Rng::new(id);
+        let mut t1 = Tensor::zeros(&[2, 1, 2, 4, 4]);
+        let mut t2 = Tensor::zeros(&[2, 1, 2, 4]);
+        rng.fill_normal(&mut t1.data, 1.0);
+        rng.fill_normal(&mut t2.data, 1.0);
+        SessionSnapshot {
+            id,
+            cfg_name: "micro".into(),
+            tokens_generated: 123,
+            last_token: 0x41,
+            sampler: SamplerState {
+                temperature: 0.8,
+                top_k: 40,
+                seed: 7,
+                rng_state: 0x1234_5678_9ABC_DEF0,
+                rng_spare: Some(-0.75),
+            },
+            state: vec![t1, t2],
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_exact() {
+        let snap = sample_snapshot(42);
+        let bytes = snap.to_bytes();
+        let back = SessionSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back, snap);
+
+        // None spare also roundtrips
+        let mut snap2 = sample_snapshot(43);
+        snap2.sampler.rng_spare = None;
+        assert_eq!(SessionSnapshot::from_bytes(&snap2.to_bytes()).unwrap(), snap2);
+    }
+
+    #[test]
+    fn corrupted_and_foreign_bytes_rejected() {
+        let snap = sample_snapshot(1);
+        let mut bytes = snap.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(SessionSnapshot::from_bytes(&bytes).is_err());
+        assert!(SessionSnapshot::from_bytes(b"not a snapshot").is_err());
+        assert!(SessionSnapshot::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn fork_diverges_only_by_sampler() {
+        let snap = sample_snapshot(7);
+        let fork = snap.fork(99, Some(1234));
+        assert_eq!(fork.id, 99);
+        assert_eq!(fork.state, snap.state);
+        assert_eq!(fork.last_token, snap.last_token);
+        assert_eq!(fork.tokens_generated, snap.tokens_generated);
+        assert_eq!(fork.sampler.temperature, snap.sampler.temperature);
+        assert_eq!(fork.sampler.top_k, snap.sampler.top_k);
+        assert_ne!(fork.sampler.rng_state, snap.sampler.rng_state);
+
+        // no reseed: exact continuation of the parent's stream
+        let twin = snap.fork(100, None);
+        assert_eq!(twin.sampler, snap.sampler);
+    }
+
+    #[test]
+    fn snapshot_size_is_state_dominated() {
+        let snap = sample_snapshot(5);
+        let bytes = snap.to_bytes();
+        // header + checksum overhead stays under 128 bytes
+        assert!(bytes.len() < snap.state_nbytes() + 128, "{}", bytes.len());
+        assert!(bytes.len() > snap.state_nbytes());
+    }
+}

@@ -1,0 +1,472 @@
+//! The session store: in-memory LRU tier + optional disk-spill tier.
+//!
+//! Sessions are small and constant-size (O(d² + d·d_v) per head), so the
+//! store is a plain map of snapshots with tick-based LRU eviction; evicted
+//! snapshots spill to `{spill_dir}/{id:016x}.hlas` when a spill directory
+//! is configured, and a resume that misses memory falls through to disk.
+//! All counters are lock-free ([`crate::metrics::Counter`]) so server
+//! handler threads and the CLI can read hit rates without contending with
+//! the engine loops.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{SessionId, SessionSnapshot};
+use crate::metrics::{hit_rate, Counter};
+
+/// Store sizing/placement knobs.
+#[derive(Debug, Clone)]
+pub struct StoreCfg {
+    /// Max snapshots resident in memory before LRU eviction.
+    pub capacity: usize,
+    /// Where evicted snapshots spill (None = evictions are dropped).
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for StoreCfg {
+    fn default() -> Self {
+        StoreCfg { capacity: 1024, spill_dir: None }
+    }
+}
+
+/// Point-in-time view of the store counters (CLI/bench reporting).
+#[derive(Debug, Default, Clone)]
+pub struct StoreStats {
+    pub snapshots: u64,
+    pub restores: u64,
+    pub resume_hits: u64,
+    pub resume_misses: u64,
+    pub forks: u64,
+    pub migrations: u64,
+    pub evictions: u64,
+    pub spills: u64,
+    pub spill_loads: u64,
+    /// Snapshots currently resident in memory.
+    pub resident: usize,
+    /// Bytes of state currently resident in memory.
+    pub resident_bytes: usize,
+}
+
+impl StoreStats {
+    /// Fraction of resume attempts served from the store (either tier).
+    pub fn hit_rate(&self) -> f64 {
+        hit_rate(self.resume_hits, self.resume_misses)
+    }
+}
+
+struct Entry {
+    snap: SessionSnapshot,
+    tick: u64,
+}
+
+struct Inner {
+    cfg: StoreCfg,
+    map: HashMap<SessionId, Entry>,
+    tick: u64,
+}
+
+/// Thread-safe snapshot store shared by engine replicas, server handlers
+/// and the CLI.  Because every replica detaches into and restores from the
+/// same store, moving a session between replicas is just routing — the
+/// state follows through here (see [`super::migrate`] and
+/// [`crate::coordinator::router::Router::pin_session`]).
+pub struct SessionStore {
+    inner: Mutex<Inner>,
+    pub snapshots: Counter,
+    pub restores: Counter,
+    pub resume_hits: Counter,
+    pub resume_misses: Counter,
+    pub forks: Counter,
+    pub migrations: Counter,
+    pub evictions: Counter,
+    pub spills: Counter,
+    pub spill_loads: Counter,
+}
+
+/// The spill-tier file for a session id — the single source of the
+/// on-disk naming convention (the `hla sessions` CLI reuses it).
+pub fn spill_file(dir: &Path, id: SessionId) -> PathBuf {
+    dir.join(format!("{id:016x}.hlas"))
+}
+
+impl SessionStore {
+    pub fn new(cfg: StoreCfg) -> SessionStore {
+        SessionStore {
+            inner: Mutex::new(Inner { cfg, map: HashMap::new(), tick: 0 }),
+            snapshots: Counter::new(),
+            restores: Counter::new(),
+            resume_hits: Counter::new(),
+            resume_misses: Counter::new(),
+            forks: Counter::new(),
+            migrations: Counter::new(),
+            evictions: Counter::new(),
+            spills: Counter::new(),
+            spill_loads: Counter::new(),
+        }
+    }
+
+    /// Memory-only store with the given capacity.
+    pub fn in_memory(capacity: usize) -> SessionStore {
+        SessionStore::new(StoreCfg { capacity, spill_dir: None })
+    }
+
+    /// Detach a snapshot into the store (replacing any previous snapshot of
+    /// the same session), evicting the least-recently-used entry past
+    /// capacity — to disk when a spill dir is configured.
+    pub fn put(&self, snap: SessionSnapshot) {
+        self.snapshots.incr();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let id = snap.id;
+        inner.map.insert(id, Entry { snap, tick });
+        while inner.map.len() > inner.cfg.capacity.max(1) {
+            // O(n) LRU scan: stores are small (thousands of entries) and
+            // eviction is off the decode hot path
+            let Some(&victim) =
+                inner.map.iter().filter(|(&k, _)| k != id).min_by_key(|(_, e)| e.tick).map(|(k, _)| k)
+            else {
+                break;
+            };
+            let entry = inner.map.remove(&victim).expect("victim came from the map");
+            self.evictions.incr();
+            if let Some(dir) = inner.cfg.spill_dir.clone() {
+                match Self::spill(&dir, &entry.snap) {
+                    Ok(()) => {
+                        self.spills.incr();
+                    }
+                    Err(e) => log::warn!("session {victim}: spill failed, dropping: {e}"),
+                }
+            }
+        }
+    }
+
+    fn spill(dir: &Path, snap: &SessionSnapshot) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        let path = spill_file(dir, snap.id);
+        std::fs::write(&path, snap.to_bytes())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Claim a session for resume: removes it from the store (the live lane
+    /// becomes the one copy) and counts the resume hit/miss.  With
+    /// `expect_cfg`, a snapshot from a different model config is left in
+    /// place and counted as a miss rather than restored into a lane whose
+    /// state layout it cannot match.
+    pub fn claim(&self, id: SessionId, expect_cfg: Option<&str>) -> Option<SessionSnapshot> {
+        let mut inner = self.inner.lock().unwrap();
+        // memory tier
+        if let Some(entry) = inner.map.get(&id) {
+            if let Some(cfg) = expect_cfg {
+                if entry.snap.cfg_name != cfg {
+                    log::warn!(
+                        "session {id}: snapshot is for config {:?}, not {cfg:?}",
+                        entry.snap.cfg_name
+                    );
+                    self.resume_misses.incr();
+                    return None;
+                }
+            }
+            let entry = inner.map.remove(&id).expect("checked above");
+            self.resume_hits.incr();
+            self.restores.incr();
+            return Some(entry.snap);
+        }
+        // disk tier — deliberately *under* the lock: claim is the "one
+        // live copy" handoff, so a concurrent claim of the same spilled
+        // session must observe the file already consumed (and a racing
+        // put must not be missed); sessions are small, the IO is a few µs
+        if let Some(dir) = inner.cfg.spill_dir.clone() {
+            let path = spill_file(&dir, id);
+            if let Ok(bytes) = std::fs::read(&path) {
+                match SessionSnapshot::from_bytes(&bytes) {
+                    Ok(snap) if expect_cfg.map_or(true, |c| snap.cfg_name == c) => {
+                        let _ = std::fs::remove_file(&path);
+                        self.spill_loads.incr();
+                        self.resume_hits.incr();
+                        self.restores.incr();
+                        return Some(snap);
+                    }
+                    Ok(snap) => {
+                        log::warn!(
+                            "session {id}: spilled snapshot is for config {:?}",
+                            snap.cfg_name
+                        );
+                    }
+                    Err(e) => log::warn!("session {id}: spilled snapshot unreadable: {e}"),
+                }
+            }
+            self.resume_misses.incr();
+            return None;
+        }
+        self.resume_misses.incr();
+        None
+    }
+
+    /// Re-insert a snapshot whose claim could not be applied (the lane
+    /// rejected its state layout): the claim's hit/restore accounting is
+    /// rolled back and the attempt recorded as a miss, so the headline
+    /// hit-rate only counts resumes that actually reached a lane.  Does
+    /// not count as a new snapshot.
+    pub fn unclaim(&self, snap: SessionSnapshot) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(snap.id, Entry { snap, tick });
+        drop(inner);
+        self.resume_hits.decr();
+        self.restores.decr();
+        self.resume_misses.incr();
+    }
+
+    /// Clone a snapshot without removing it (fork source, CLI inspection).
+    pub fn peek(&self, id: SessionId) -> Option<SessionSnapshot> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(entry) = inner.map.get_mut(&id) {
+            entry.tick = tick;
+            return Some(entry.snap.clone());
+        }
+        // read the disk tier under the lock so a concurrent claim cannot
+        // delete the file between our existence check and read
+        let dir = inner.cfg.spill_dir.clone()?;
+        let bytes = std::fs::read(spill_file(&dir, id)).ok()?;
+        SessionSnapshot::from_bytes(&bytes).ok()
+    }
+
+    /// Is the session resident in either tier?
+    pub fn contains(&self, id: SessionId) -> bool {
+        let inner = self.inner.lock().unwrap();
+        if inner.map.contains_key(&id) {
+            return true;
+        }
+        match &inner.cfg.spill_dir {
+            Some(dir) => spill_file(dir, id).exists(),
+            None => false,
+        }
+    }
+
+    /// Copy-on-snapshot fork: `child` continues from `parent`'s prefix
+    /// state at O(state) cost; `reseed` gives the fork its own sampler
+    /// stream so N forks of one shared prompt prefix diverge.
+    pub fn fork(&self, parent: SessionId, child: SessionId, reseed: Option<u64>) -> Result<()> {
+        let snap = self.peek(parent).ok_or_else(|| anyhow!("unknown session {parent}"))?;
+        self.put(snap.fork(child, reseed));
+        self.forks.incr();
+        Ok(())
+    }
+
+    /// Drop a session from both tiers; returns whether anything existed.
+    pub fn evict(&self, id: SessionId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let in_mem = inner.map.remove(&id).is_some();
+        let on_disk = match &inner.cfg.spill_dir {
+            Some(dir) => std::fs::remove_file(spill_file(dir, id)).is_ok(),
+            None => false,
+        };
+        if in_mem || on_disk {
+            self.evictions.incr();
+        }
+        in_mem || on_disk
+    }
+
+    /// Memory-resident session ids (ascending).
+    pub fn ids(&self) -> Vec<SessionId> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<SessionId> = inner.map.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let inner = self.inner.lock().unwrap();
+        StoreStats {
+            snapshots: self.snapshots.get(),
+            restores: self.restores.get(),
+            resume_hits: self.resume_hits.get(),
+            resume_misses: self.resume_misses.get(),
+            forks: self.forks.get(),
+            migrations: self.migrations.get(),
+            evictions: self.evictions.get(),
+            spills: self.spills.get(),
+            spill_loads: self.spill_loads.get(),
+            resident: inner.map.len(),
+            resident_bytes: inner.map.values().map(|e| e.snap.state_nbytes()).sum(),
+        }
+    }
+}
+
+/// Enumerate the snapshots in a spill directory (the `hla sessions` CLI:
+/// the disk tier is the only cross-process view of a store).
+pub fn spill_sessions(dir: &Path) -> Result<Vec<SessionSnapshot>> {
+    let mut out = vec![];
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading spill dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("hlas") {
+            continue;
+        }
+        let bytes = std::fs::read(&path)?;
+        match SessionSnapshot::from_bytes(&bytes) {
+            Ok(snap) => out.push(snap),
+            Err(e) => log::warn!("{}: skipping unreadable snapshot: {e}", path.display()),
+        }
+    }
+    out.sort_by_key(|s| s.id);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::snapshot::SamplerState;
+    use crate::tensor::Tensor;
+
+    fn snap(id: SessionId) -> SessionSnapshot {
+        SessionSnapshot {
+            id,
+            cfg_name: "micro".into(),
+            tokens_generated: id * 10,
+            last_token: id as u8,
+            sampler: SamplerState {
+                temperature: 0.5,
+                top_k: 0,
+                seed: id,
+                rng_state: id ^ 0xABCD,
+                rng_spare: None,
+            },
+            state: vec![Tensor::from_vec(&[1, 1, 4], vec![id as f32; 4])],
+        }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("hla-session-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn put_claim_roundtrip_and_counters() {
+        let store = SessionStore::in_memory(8);
+        store.put(snap(1));
+        assert!(store.contains(1));
+        assert_eq!(store.claim(1, Some("micro")).unwrap(), snap(1));
+        assert!(!store.contains(1), "claim removes the snapshot");
+        assert!(store.claim(1, None).is_none());
+        let st = store.stats();
+        assert_eq!((st.snapshots, st.resume_hits, st.resume_misses), (1, 1, 1));
+        assert_eq!(st.hit_rate(), 0.5);
+    }
+
+    #[test]
+    fn unclaim_restores_snapshot_and_rolls_back_accounting() {
+        let store = SessionStore::in_memory(8);
+        store.put(snap(1));
+        let s = store.claim(1, Some("micro")).unwrap();
+        store.unclaim(s);
+        assert!(store.contains(1), "unclaim puts the one copy back");
+        let st = store.stats();
+        assert_eq!((st.resume_hits, st.restores, st.resume_misses), (0, 0, 1));
+        assert_eq!(st.snapshots, 1, "unclaim is not a new snapshot");
+        assert_eq!(store.claim(1, Some("micro")).unwrap(), snap(1), "claimable again");
+    }
+
+    #[test]
+    fn cfg_mismatch_is_a_miss_and_preserves_snapshot() {
+        let store = SessionStore::in_memory(8);
+        store.put(snap(3));
+        assert!(store.claim(3, Some("other-model")).is_none());
+        assert!(store.contains(3), "mismatched claim must not destroy the snapshot");
+        assert_eq!(store.stats().resume_misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_spills_to_disk_and_loads_back() {
+        let dir = temp_dir("spill");
+        let store =
+            SessionStore::new(StoreCfg { capacity: 2, spill_dir: Some(dir.clone()) });
+        store.put(snap(1));
+        store.put(snap(2));
+        store.put(snap(3)); // evicts 1 (least recently used)
+        assert_eq!(store.ids(), vec![2, 3]);
+        assert!(store.contains(1), "evicted session lives on disk");
+        assert_eq!(store.stats().spills, 1);
+
+        let back = store.claim(1, Some("micro")).expect("disk-tier resume");
+        assert_eq!(back, snap(1));
+        assert_eq!(store.stats().spill_loads, 1);
+        assert!(!store.contains(1), "claim consumes the spill file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recency_protects_hot_sessions() {
+        let store = SessionStore::in_memory(2);
+        store.put(snap(1));
+        store.put(snap(2));
+        let _ = store.peek(1); // touch 1 -> 2 becomes LRU
+        store.put(snap(3));
+        assert_eq!(store.ids(), vec![1, 3]);
+    }
+
+    #[test]
+    fn corrupted_spill_file_is_a_miss() {
+        let dir = temp_dir("corrupt");
+        let store =
+            SessionStore::new(StoreCfg { capacity: 1, spill_dir: Some(dir.clone()) });
+        store.put(snap(1));
+        store.put(snap(2)); // spills 1
+        let path = dir.join(format!("{:016x}.hlas", 1u64));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        assert!(store.claim(1, Some("micro")).is_none());
+        assert_eq!(store.stats().resume_misses, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fork_and_evict() {
+        let store = SessionStore::in_memory(8);
+        store.put(snap(5));
+        store.fork(5, 6, Some(999)).unwrap();
+        assert!(store.contains(5) && store.contains(6));
+        let child = store.peek(6).unwrap();
+        assert_eq!(child.state, snap(5).state);
+        assert_eq!(child.sampler.seed, 999);
+        assert!(store.fork(404, 7, None).is_err(), "unknown parent");
+        assert!(store.evict(5));
+        assert!(!store.evict(5));
+        assert_eq!(store.stats().forks, 1);
+    }
+
+    #[test]
+    fn spill_listing_for_cli() {
+        let dir = temp_dir("list");
+        let store =
+            SessionStore::new(StoreCfg { capacity: 1, spill_dir: Some(dir.clone()) });
+        store.put(snap(9));
+        store.put(snap(4)); // spills 9
+        store.put(snap(2)); // spills 4
+        let listed = spill_sessions(&dir).unwrap();
+        assert_eq!(listed.iter().map(|s| s.id).collect::<Vec<_>>(), vec![4, 9]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

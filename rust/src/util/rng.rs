@@ -23,6 +23,16 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
     }
 
+    /// Capture the full generator state (session snapshot / exact resume).
+    pub fn parts(&self) -> (u64, Option<f64>) {
+        (self.state, self.spare)
+    }
+
+    /// Rebuild a generator from [`Rng::parts`] — continues the exact stream.
+    pub fn from_parts(state: u64, spare: Option<f64>) -> Rng {
+        Rng { state, spare }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -213,6 +223,23 @@ mod tests {
         }
         assert_eq!(counts[0], 0);
         assert!(counts[1] > 2 * counts[2]);
+    }
+
+    #[test]
+    fn parts_roundtrip_continues_stream() {
+        let mut a = Rng::new(9);
+        let _ = a.normal(); // populate the Box–Muller spare
+        let (state, spare) = a.parts();
+        let mut b = Rng::from_parts(state, spare);
+        for _ in 0..20 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // the cached spare is part of the state
+        let mut c = Rng::new(9);
+        let _ = c.normal();
+        let (state, spare) = c.parts();
+        let mut d = Rng::from_parts(state, spare);
+        assert_eq!(c.normal(), d.normal());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Synthetic serving/training workloads: arrival processes, length
-//! distributions, corpus generators and trace record/replay.  Substitutes
-//! for production traces per the reproduction rules (DESIGN.md §3).
+//! distributions, session mixes, corpus generators and trace
+//! record/replay.  Substitutes for production traces per the reproduction
+//! rules (see `rust/DESIGN.md`).
 
 use crate::util::rng::Rng;
 
@@ -66,6 +67,22 @@ impl Lengths {
     }
 }
 
+/// Session-behavior knobs for synthetic traces: how many distinct
+/// conversations the traffic spreads over, and how often a request to an
+/// already-seen session asks the coordinator to resume its snapshot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionMix {
+    pub n_sessions: usize,
+    /// P(resume) for a request whose session has appeared before.
+    pub resume_prob: f64,
+}
+
+impl Default for SessionMix {
+    fn default() -> Self {
+        SessionMix { n_sessions: 16, resume_prob: 0.0 }
+    }
+}
+
 /// One synthetic request in a trace.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceItem {
@@ -73,16 +90,22 @@ pub struct TraceItem {
     pub prompt: Vec<u8>,
     pub max_new_tokens: usize,
     pub session: Option<u64>,
+    /// Resume the session's snapshot (multi-turn continuation).
+    pub resume: bool,
 }
 
 /// A reproducible request trace.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
     pub items: Vec<TraceItem>,
+    /// The session mix the trace was synthesized with (serialized in the
+    /// replay file's meta line so replays are self-describing).
+    pub mix: SessionMix,
 }
 
 impl Trace {
-    /// Synthesize a trace: arrivals + lengths + corpus-sampled prompts.
+    /// Synthesize a trace: arrivals + lengths + corpus-sampled prompts,
+    /// with the default session mix (16 sessions, no resumes).
     pub fn synthesize(
         n: usize,
         arrivals: Arrivals,
@@ -90,39 +113,105 @@ impl Trace {
         corpus: &[u8],
         seed: u64,
     ) -> Trace {
+        Self::synthesize_sessions(n, arrivals, lengths, corpus, seed, SessionMix::default())
+    }
+
+    /// [`Trace::synthesize`] with explicit session-count / resume-probability
+    /// knobs.  A request can only resume a session that already appeared
+    /// earlier in the trace (there must be a snapshot to restore).
+    pub fn synthesize_sessions(
+        n: usize,
+        arrivals: Arrivals,
+        lengths: Lengths,
+        corpus: &[u8],
+        seed: u64,
+        mix: SessionMix,
+    ) -> Trace {
         let mut rng = Rng::new(seed);
         let times = arrivals.times(n, &mut rng);
+        let mut seen = std::collections::HashSet::new();
         let items = times
             .into_iter()
             .map(|at_s| {
+                // draw order (plen, start, output, session) matches the
+                // pre-session-mix generator, so existing seeds reproduce
+                // the exact same traces when resume_prob is 0
                 let plen = lengths.prompt(&mut rng);
                 let start = rng.below(corpus.len().saturating_sub(plen).max(1));
                 let prompt = corpus[start..(start + plen).min(corpus.len())].to_vec();
-                TraceItem {
+                let max_new_tokens = lengths.output(&mut rng);
+                let session = rng.below(mix.n_sessions.max(1)) as u64;
+                let resume =
+                    seen.contains(&session) && mix.resume_prob > 0.0 && rng.bool(mix.resume_prob);
+                seen.insert(session);
+                TraceItem { at_s, prompt, max_new_tokens, session: Some(session), resume }
+            })
+            .collect();
+        Trace { items, mix }
+    }
+
+    /// A multi-turn-conversation scenario: `n_sessions` conversations of
+    /// `turns` requests each.  Turn 1 starts fresh; every later turn
+    /// resumes the session's snapshot (mean `think_s` seconds of "user
+    /// think time" after the previous turn).  Arrival order interleaves
+    /// the conversations, so resumes land while other sessions hold lanes
+    /// — the snapshot/restore path under realistic contention.
+    pub fn synthesize_multiturn(
+        n_sessions: usize,
+        turns: usize,
+        arrivals: Arrivals,
+        lengths: Lengths,
+        corpus: &[u8],
+        seed: u64,
+        think_s: f64,
+    ) -> Trace {
+        let mut rng = Rng::new(seed);
+        let starts = arrivals.times(n_sessions, &mut rng);
+        let mut items = vec![];
+        for (sid, t0) in starts.into_iter().enumerate() {
+            let mut at_s = t0;
+            for turn in 0..turns {
+                let plen = lengths.prompt(&mut rng);
+                let start = rng.below(corpus.len().saturating_sub(plen).max(1));
+                let prompt = corpus[start..(start + plen).min(corpus.len())].to_vec();
+                items.push(TraceItem {
                     at_s,
                     prompt,
                     max_new_tokens: lengths.output(&mut rng),
-                    session: Some(rng.below(16) as u64),
-                }
-            })
-            .collect();
-        Trace { items }
+                    session: Some(sid as u64),
+                    resume: turn > 0,
+                });
+                at_s += rng.exponential(1.0 / think_s.max(1e-9));
+            }
+        }
+        // interleave conversations by arrival time; per-session turn order
+        // is preserved because each session's times are increasing
+        items.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        let resume_prob = if turns == 0 { 0.0 } else { (turns - 1) as f64 / turns as f64 };
+        Trace { items, mix: SessionMix { n_sessions, resume_prob } }
     }
 
-    /// Serialize as line-JSON (one item per line) for replay files.
+    /// Serialize as line-JSON for replay files: a self-describing meta
+    /// line (the session-mix knobs) followed by one item per line.
     pub fn to_lines(&self) -> String {
         use crate::util::json::Json;
-        self.items
-            .iter()
-            .map(|it| {
+        let meta = Json::obj(vec![
+            ("kind", Json::str("trace-meta")),
+            ("n_sessions", Json::num(self.mix.n_sessions as f64)),
+            ("resume_prob", Json::num(self.mix.resume_prob)),
+        ])
+        .to_string();
+        std::iter::once(meta)
+            .chain(self.items.iter().map(|it| {
                 Json::obj(vec![
                     ("at_s", Json::num(it.at_s)),
                     ("prompt", Json::str(String::from_utf8_lossy(&it.prompt).to_string())),
                     ("max_new_tokens", Json::num(it.max_new_tokens as f64)),
                     ("session", it.session.map_or(Json::Null, |s| Json::num(s as f64))),
+                    ("resume", Json::Bool(it.resume)),
                 ])
                 .to_string()
-            })
+            }))
             .collect::<Vec<_>>()
             .join("\n")
     }
@@ -130,8 +219,18 @@ impl Trace {
     pub fn from_lines(text: &str) -> anyhow::Result<Trace> {
         use crate::util::json::Json;
         let mut items = vec![];
+        let mut mix = SessionMix::default();
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
             let j = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line: {e}"))?;
+            if j.get("kind").and_then(Json::as_str) == Some("trace-meta") {
+                if let Some(n) = j.get("n_sessions").and_then(Json::as_usize) {
+                    mix.n_sessions = n;
+                }
+                if let Some(p) = j.get("resume_prob").and_then(Json::as_f64) {
+                    mix.resume_prob = p;
+                }
+                continue;
+            }
             items.push(TraceItem {
                 at_s: j.get("at_s").and_then(Json::as_f64).unwrap_or(0.0),
                 prompt: j
@@ -142,9 +241,10 @@ impl Trace {
                     .to_vec(),
                 max_new_tokens: j.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(16),
                 session: j.get("session").and_then(Json::as_i64).map(|s| s as u64),
+                resume: j.get("resume").and_then(Json::as_bool).unwrap_or(false),
             });
         }
-        Ok(Trace { items })
+        Ok(Trace { items, mix })
     }
 }
 
@@ -175,15 +275,70 @@ mod tests {
     #[test]
     fn trace_roundtrip() {
         let corpus = b"the quick brown fox jumps over the lazy dog, repeatedly and often";
-        let t = Trace::synthesize(10, Arrivals::Poisson { rate: 10.0 }, Lengths::default(), corpus, 3);
+        let t = Trace::synthesize_sessions(
+            10,
+            Arrivals::Poisson { rate: 10.0 },
+            Lengths::default(),
+            corpus,
+            3,
+            SessionMix { n_sessions: 4, resume_prob: 0.8 },
+        );
         assert_eq!(t.items.len(), 10);
         let text = t.to_lines();
         let back = Trace::from_lines(&text).unwrap();
         assert_eq!(back.items.len(), 10);
+        assert_eq!(back.mix, t.mix, "session knobs survive the replay file");
         for (a, b) in t.items.iter().zip(&back.items) {
             assert_eq!(a.prompt, b.prompt);
             assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.session, b.session);
+            assert_eq!(a.resume, b.resume);
             assert!((a.at_s - b.at_s).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn session_mix_knobs_shape_the_trace() {
+        let corpus = b"some corpus bytes for prompts, long enough to slice from";
+        // one session, always resume after the first sighting
+        let t = Trace::synthesize_sessions(
+            20,
+            Arrivals::Burst,
+            Lengths::default(),
+            corpus,
+            5,
+            SessionMix { n_sessions: 1, resume_prob: 1.0 },
+        );
+        assert!(t.items.iter().all(|it| it.session == Some(0)));
+        assert!(!t.items[0].resume, "first sighting cannot resume");
+        assert!(t.items[1..].iter().all(|it| it.resume));
+        // resume_prob 0 reproduces the stateless default
+        let t0 = Trace::synthesize(20, Arrivals::Burst, Lengths::default(), corpus, 5);
+        assert!(t0.items.iter().all(|it| !it.resume));
+        assert!(t0.items.iter().all(|it| it.session.unwrap() < 16));
+    }
+
+    #[test]
+    fn multiturn_trace_interleaves_but_preserves_turn_order() {
+        let corpus = b"a corpus with enough material to cut prompt windows from it";
+        let t = Trace::synthesize_multiturn(
+            4,
+            3,
+            Arrivals::Poisson { rate: 20.0 },
+            Lengths::default(),
+            corpus,
+            7,
+            0.05,
+        );
+        assert_eq!(t.items.len(), 12);
+        assert!(t.items.windows(2).all(|w| w[0].at_s <= w[1].at_s), "sorted by arrival");
+        for sid in 0..4u64 {
+            let turns: Vec<&TraceItem> =
+                t.items.iter().filter(|it| it.session == Some(sid)).collect();
+            assert_eq!(turns.len(), 3);
+            assert!(!turns[0].resume, "session {sid}: first turn is fresh");
+            assert!(turns[1].resume && turns[2].resume, "session {sid}: later turns resume");
+        }
+        assert_eq!(t.mix.n_sessions, 4);
     }
 }

@@ -1,0 +1,185 @@
+//! Integration: session snapshot/resume/fork through the real engine loop
+//! and the TCP protocol (requires artifacts, like the other integration
+//! suites — each test is a no-op without `artifacts/manifest.json`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use hla::coordinator::router::{RoutePolicy, Router};
+use hla::coordinator::{collect_tokens, spawn_engine_with_store, GenRequest, SchedPolicy};
+use hla::model::sampler::SamplerCfg;
+use hla::server::client::{Client, GenOpts};
+use hla::server::serve_sessions;
+use hla::session::SessionStore;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).exists()
+}
+
+fn artifacts() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn sampler() -> SamplerCfg {
+    SamplerCfg { temperature: 0.9, top_k: 0, seed: 3 }
+}
+
+/// One engine run: submit the given requests sequentially (waiting for
+/// each to finish) and return their token streams.
+fn run_requests(
+    store: Arc<SessionStore>,
+    reqs: Vec<(Vec<u8>, usize, Option<u64>, bool)>,
+) -> Vec<Vec<u8>> {
+    let (tx, handle) = spawn_engine_with_store(
+        artifacts(),
+        "micro".into(),
+        SchedPolicy::PrefillFirst,
+        0,
+        Some(store),
+    );
+    let mut streams = vec![];
+    for (i, (prompt, max_new, session, resume)) in reqs.into_iter().enumerate() {
+        let (etx, erx) = mpsc::channel();
+        let mut req = GenRequest::new(i as u64 + 1, prompt, max_new, sampler(), etx);
+        if let Some(sid) = session {
+            req = req.with_session(sid);
+        }
+        if resume {
+            req = req.resuming();
+        }
+        tx.send(req).unwrap();
+        let (tokens, _) = collect_tokens(&erx);
+        streams.push(tokens);
+    }
+    drop(tx);
+    handle.join().unwrap().unwrap();
+    streams
+}
+
+#[test]
+fn engine_resume_matches_uninterrupted_generation() {
+    if !have_artifacts() {
+        return;
+    }
+    let (n, m) = (10usize, 8usize);
+    let prompt = b"the quick brown fox".to_vec();
+
+    // uninterrupted reference: one N+M-token generation
+    let whole = run_requests(
+        Arc::new(SessionStore::in_memory(8)),
+        vec![(prompt.clone(), n + m, Some(1), false)],
+    )
+    .remove(0);
+
+    // split run: N tokens (snapshotted on completion), then resume with an
+    // empty prompt for M more — the lane state was evicted in between
+    // (the engine re-admits from the store, not from a held lane)
+    let store = Arc::new(SessionStore::in_memory(8));
+    let parts = run_requests(
+        store.clone(),
+        vec![(prompt, n, Some(1), false), (vec![], m, Some(1), true)],
+    );
+    let stitched: Vec<u8> =
+        parts[0].iter().chain(parts[1].iter()).copied().collect();
+
+    assert_eq!(
+        stitched, whole,
+        "resumed stream must equal the uninterrupted N+M stream"
+    );
+    let st = store.stats();
+    assert_eq!(st.resume_hits, 1);
+    assert_eq!(st.hit_rate(), 1.0);
+}
+
+#[test]
+fn engine_forks_diverge_only_by_seed() {
+    if !have_artifacts() {
+        return;
+    }
+    let store = Arc::new(SessionStore::in_memory(8));
+    // build the shared prefix once
+    let _ = run_requests(store.clone(), vec![(b"common prefix: ".to_vec(), 12, Some(1), false)]);
+    store.fork(1, 2, Some(100)).unwrap();
+    store.fork(1, 3, Some(200)).unwrap();
+    store.fork(1, 4, Some(100)).unwrap();
+    let streams = run_requests(
+        store,
+        vec![(vec![], 16, Some(2), true), (vec![], 16, Some(3), true), (vec![], 16, Some(4), true)],
+    );
+    assert_ne!(streams[0], streams[1], "different fork seeds must diverge");
+    assert_eq!(streams[0], streams[2], "equal fork seeds must agree");
+}
+
+#[test]
+fn server_protocol_resume_fork_and_unknown_session() {
+    if !have_artifacts() {
+        return;
+    }
+    let store = Arc::new(SessionStore::in_memory(8));
+    let (tx, engine_handle) = spawn_engine_with_store(
+        artifacts(),
+        "micro".into(),
+        SchedPolicy::PrefillFirst,
+        0,
+        Some(store.clone()),
+    );
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let store2 = store.clone();
+    let server_handle = std::thread::spawn(move || {
+        serve_sessions("127.0.0.1:0", router, Some(store2), stop2, move |addr| {
+            addr_tx.send(addr).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // resume of an unknown session is an error reply, not a generation
+    let err = client.generate_opts(
+        "hi",
+        &GenOpts { max_tokens: 4, session: Some(404), resume: true, ..GenOpts::default() },
+    );
+    assert!(err.is_err(), "unknown session must error");
+    assert!(format!("{}", err.unwrap_err()).contains("unknown session 404"));
+
+    // turn 1 creates the session; turn 2 resumes it over the same protocol
+    let t1 = client
+        .generate_opts(
+            "hello session",
+            &GenOpts { max_tokens: 6, session: Some(9), ..GenOpts::default() },
+        )
+        .unwrap();
+    assert!(!t1.resumed);
+    let t2 = client
+        .generate_opts(
+            "",
+            &GenOpts { max_tokens: 6, session: Some(9), resume: true, ..GenOpts::default() },
+        )
+        .unwrap();
+    assert!(t2.resumed);
+    assert_eq!(t2.tokens.len(), 6);
+
+    // fork 9 -> 10 with a fresh seed, over the protocol
+    let f = client
+        .generate_opts(
+            "",
+            &GenOpts {
+                max_tokens: 6,
+                session: Some(10),
+                fork_of: Some(9),
+                seed: Some(77),
+                ..GenOpts::default()
+            },
+        )
+        .unwrap();
+    assert!(f.resumed);
+    assert!(store.contains(10), "fork completion re-snapshots the child");
+
+    drop(client);
+    stop.store(true, Ordering::Relaxed);
+    server_handle.join().unwrap();
+    engine_handle.join().unwrap().unwrap();
+}
