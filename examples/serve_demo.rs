@@ -99,7 +99,7 @@ fn main() -> anyhow::Result<()> {
     let trace = Trace::synthesize(
         n_requests,
         Arrivals::Poisson { rate: 10.0 },
-        Lengths { mean_prompt: 16, mean_output: 20, min: 4, max: 64 },
+        Lengths { mean_prompt: 16, mean_output: 20, min: 4, max: 64, sigma: 0.5 },
         &corpus,
         7,
     );

@@ -6,16 +6,36 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use hla::bench::banner;
-use hla::coordinator::{collect_tokens, spawn_engine, GenRequest, SchedPolicy};
+use hla::coordinator::{
+    collect_tokens, spawn_engine_full, EngineOpts, GenRequest, SchedPolicy,
+};
 use hla::metrics::{Histogram, Table};
 use hla::model::sampler::SamplerCfg;
+use hla::prefill::PrefillCfg;
 use hla::train::corpus::build_corpus;
 use hla::util::rng::Rng;
 use hla::workload::{Arrivals, Lengths, Trace};
 
 fn run_load(policy: SchedPolicy, rate: f64, n_requests: usize, seed: u64) -> (hla::coordinator::ServeStats, Histogram, Histogram) {
+    run_trace_load(policy, rate, n_requests, seed, None, None)
+}
+
+/// Drive an open-loop trace through one engine replica; `trace` overrides
+/// the default short-prompt mix, `prefill` turns on the scan prefill path.
+fn run_trace_load(
+    policy: SchedPolicy,
+    rate: f64,
+    n_requests: usize,
+    seed: u64,
+    trace: Option<Trace>,
+    prefill: Option<PrefillCfg>,
+) -> (hla::coordinator::ServeStats, Histogram, Histogram) {
     let artifacts = "artifacts".to_string();
-    let (tx, handle) = spawn_engine(artifacts, "micro".into(), policy, 0);
+    let (tx, handle) = spawn_engine_full(
+        artifacts,
+        "micro".into(),
+        EngineOpts { policy: Some(policy), seed: 0, store: None, prefill },
+    );
     // warmup barrier: engine construction compiles the artifacts (~10s on
     // this CPU); measure serving, not startup.
     {
@@ -24,13 +44,15 @@ fn run_load(policy: SchedPolicy, rate: f64, n_requests: usize, seed: u64) -> (hl
         let _ = collect_tokens(&wrx);
     }
     let corpus = build_corpus(1 << 14, seed);
-    let trace = Trace::synthesize(
-        n_requests,
-        Arrivals::Poisson { rate },
-        Lengths { mean_prompt: 16, mean_output: 16, min: 4, max: 48 },
-        &corpus,
-        seed,
-    );
+    let trace = trace.unwrap_or_else(|| {
+        Trace::synthesize(
+            n_requests,
+            Arrivals::Poisson { rate },
+            Lengths { mean_prompt: 16, mean_output: 16, min: 4, max: 48, sigma: 0.5 },
+            &corpus,
+            seed,
+        )
+    });
     let start = Instant::now();
     let mut ttft = Histogram::new();
     let mut latency = Histogram::new();
@@ -127,6 +149,40 @@ fn main() {
     print!("{}", table.render());
     println!("expected shape: prefill-first minimizes TTFT; decode-first trades TTFT for");
     println!("decode-latency isolation; hybrid interpolates.");
+
+    banner("E8c", "long-prompt tail: decode-as-prefill vs chunked-scan prefill");
+    let corpus = build_corpus(1 << 14, 12);
+    let long = || {
+        hla::workload::Trace::synthesize_long_prompts(
+            24,
+            Arrivals::Poisson { rate: 4.0 },
+            192,
+            1.0,
+            1024,
+            &corpus,
+            12,
+        )
+    };
+    for (name, prefill) in [
+        ("decode-as-prefill", None),
+        ("scan w=32 x4", Some(PrefillCfg::scan(32, 4))),
+    ] {
+        let (stats, _, _) = run_trace_load(
+            SchedPolicy::PrefillFirst,
+            4.0,
+            24,
+            12,
+            Some(long()),
+            prefill,
+        );
+        println!(
+            "\n[{name}] {} prefilled lane(s), {} prompt tokens via scan; TTFT breakdown:",
+            stats.prefills, stats.prefilled_tokens
+        );
+        print!("{}", stats.ttft_table().render());
+    }
+    println!("expected shape: the scan rows move prompt time from first-decode into a");
+    println!("smaller prefill component, and the p99 TTFT gap widens with the tail.");
 
     // determinism sanity under concurrency
     let mut rng = Rng::new(1);

@@ -98,6 +98,57 @@ impl<T: Scalar> LinearAttnState<T> {
     }
 }
 
+/// First-order linear-attention segment: the (decayed) moments compose
+/// purely additively — the degenerate case of the paper's semidirect
+/// product (no cross terms).  Used by the prefill scan for `linear` lanes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearSeg<T> {
+    pub p: Mat<T>,
+    pub m: Vec<T>,
+    pub rho: T,
+}
+
+impl<T: Scalar> LinearSeg<T> {
+    pub fn empty(d: usize, dv: usize) -> Self {
+        LinearSeg { p: Mat::zeros(d, dv), m: vec![T::ZERO; d], rho: T::ONE }
+    }
+
+    pub fn token(k: &[T], v: &[T], gamma: T) -> Self {
+        let mut seg = LinearSeg::empty(k.len(), v.len());
+        seg.p.add_outer(T::ONE, k, v);
+        seg.m.copy_from_slice(k);
+        seg.rho = gamma;
+        seg
+    }
+
+    /// Embed a streaming state as a scan segment (resume case).  With no
+    /// cross terms the embedding is exact in any combine position, but by
+    /// convention it is only ever used as the scan's left-most segment.
+    pub fn from_state(st: &LinearAttnState<T>) -> Self {
+        LinearSeg { p: st.p.clone(), m: st.m.clone(), rho: T::ONE }
+    }
+
+    pub fn as_state(&self) -> LinearAttnState<T> {
+        LinearAttnState { p: self.p.clone(), m: self.m.clone() }
+    }
+}
+
+impl<T: Scalar> crate::hla::scan::Monoid for LinearSeg<T> {
+    fn identity_like(&self) -> Self {
+        LinearSeg::empty(self.p.rows, self.p.cols)
+    }
+
+    fn combine(&self, rhs: &Self) -> Self {
+        let rb = rhs.rho;
+        let mut p = self.p.clone();
+        p.scale(rb);
+        p.add_scaled(T::ONE, &rhs.p);
+        let mut m: Vec<T> = self.m.iter().map(|&x| x * rb).collect();
+        ops::axpy(T::ONE, &rhs.m, &mut m);
+        LinearSeg { p, m, rho: self.rho * rb }
+    }
+}
+
 /// Full-sequence linear attention via the streaming state.
 pub fn linear_attention_serial<T: Scalar>(
     q: &Mat<T>,
@@ -160,6 +211,28 @@ mod tests {
     fn linear_attention_is_constant_state() {
         let st = LinearAttnState::<f32>::new(64, 64);
         assert_eq!(st.nbytes(), 4 * (64 * 64 + 64));
+    }
+
+    #[test]
+    fn linear_seg_scan_matches_serial() {
+        use crate::hla::scan::{blelloch_exclusive, Monoid};
+        let mut rng = Rng::new(7);
+        let n = 17;
+        let (q, k, v) = (random(&mut rng, n, 4), random(&mut rng, n, 4), random(&mut rng, n, 4));
+        for gamma in [1.0f32, 0.9] {
+            let opts = HlaOptions::<f32>::default().with_gamma(gamma as f64);
+            let want = linear_attention_serial(&q, &k, &v, &opts);
+            let leaves: Vec<LinearSeg<f32>> =
+                (0..n).map(|t| LinearSeg::token(k.row(t), v.row(t), gamma)).collect();
+            let prefixes = blelloch_exclusive(&leaves);
+            for t in 0..n {
+                let st = prefixes[t].combine(&leaves[t]).as_state();
+                let got = st.output(q.row(t), opts.norm, opts.eps);
+                for (a, b) in got.iter().zip(want.row(t)) {
+                    assert!((a - b).abs() < 1e-4, "g={gamma} t={t}: {a} vs {b}");
+                }
+            }
+        }
     }
 
     #[test]

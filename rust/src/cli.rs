@@ -15,8 +15,9 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::router::Router;
-use crate::coordinator::{collect_tokens, spawn_engine, spawn_engine_with_store, GenRequest};
+use crate::coordinator::{collect_tokens, spawn_engine_full, EngineOpts, GenRequest};
 use crate::model::sampler::SamplerCfg;
+use crate::prefill::PrefillCfg;
 use crate::runtime::Engine;
 use crate::session::{spill_file, spill_sessions, SessionStore, StoreCfg};
 use crate::train::{train, LrSchedule, TrainOpts};
@@ -30,6 +31,7 @@ train:    --steps N --lr F --warmup N --checkpoint PATH
 generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
 serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
           --session-capacity N --spill-dir DIR
+          --prefill-chunk N --prefill-threads N  (0 0 = decode-as-prefill)
 sessions: <list|inspect|evict> --spill-dir DIR [--session-id N]";
 
 pub fn run(args: Vec<String>) -> Result<()> {
@@ -171,12 +173,21 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
     Ok(())
 }
 
+/// `--prefill-chunk N` (N > 0) turns on scan prefill for the serving path.
+fn prefill_cfg(cfg: &RunConfig) -> Option<PrefillCfg> {
+    (cfg.prefill_chunk > 0).then(|| PrefillCfg::scan(cfg.prefill_chunk, cfg.prefill_threads))
+}
+
 fn cmd_generate(cfg: &RunConfig) -> Result<()> {
-    let (tx, handle) = spawn_engine(
+    let (tx, handle) = spawn_engine_full(
         cfg.artifacts.clone(),
         cfg.model.clone(),
-        cfg.sched,
-        cfg.seed as i32,
+        EngineOpts {
+            policy: Some(cfg.sched),
+            seed: cfg.seed as i32,
+            store: None,
+            prefill: prefill_cfg(cfg),
+        },
     );
     let (etx, erx) = std::sync::mpsc::channel();
     let req = GenRequest::new(
@@ -211,12 +222,15 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     let mut senders = vec![];
     let mut handles = vec![];
     for r in 0..cfg.replicas {
-        let (tx, handle) = spawn_engine_with_store(
+        let (tx, handle) = spawn_engine_full(
             cfg.artifacts.clone(),
             cfg.model.clone(),
-            cfg.sched,
-            cfg.seed as i32 + r as i32,
-            Some(store.clone()),
+            EngineOpts {
+                policy: Some(cfg.sched),
+                seed: cfg.seed as i32 + r as i32,
+                store: Some(store.clone()),
+                prefill: prefill_cfg(cfg),
+            },
         );
         senders.push(tx);
         handles.push(handle);
@@ -224,6 +238,10 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     let router = Arc::new(Router::new(senders, cfg.route));
     let stop = Arc::new(AtomicBool::new(false));
     println!("serving {} ({} replica(s)) on {}", cfg.model, cfg.replicas, cfg.addr);
+    match prefill_cfg(cfg) {
+        Some(p) => println!("prefill: chunked scan (w={}, {} thread(s))", p.chunk, p.threads),
+        None => println!("prefill: decode-as-prefill (enable with --prefill-chunk N)"),
+    }
     // the serve loop only exits on kill, so report the session-store
     // counters periodically from a daemon thread (it dies with the process)
     {

@@ -23,6 +23,10 @@ pub struct RunConfig {
     pub replicas: usize,
     pub sched: SchedPolicy,
     pub route: RoutePolicy,
+    /// scan-prefill chunk width; 0 keeps decode-as-prefill
+    pub prefill_chunk: usize,
+    /// scan-prefill worker threads; 0 = one per available core, capped at 8
+    pub prefill_threads: usize,
     // sessions (snapshot/resume store)
     /// max session snapshots resident in memory before LRU eviction
     pub session_capacity: usize,
@@ -51,6 +55,8 @@ impl Default for RunConfig {
             replicas: 1,
             sched: SchedPolicy::PrefillFirst,
             route: RoutePolicy::LeastLoaded,
+            prefill_chunk: 0,
+            prefill_threads: 0,
             session_capacity: 1024,
             spill_dir: None,
             session_id: None,
@@ -106,6 +112,8 @@ impl RunConfig {
                 self.route = RoutePolicy::parse(value)
                     .ok_or_else(|| anyhow!("bad route {value:?} (round-robin|least-loaded|session-affinity)"))?
             }
+            "prefill-chunk" | "prefill_chunk" => self.prefill_chunk = value.parse()?,
+            "prefill-threads" | "prefill_threads" => self.prefill_threads = value.parse()?,
             "steps" => self.steps = value.parse()?,
             "lr" => self.lr = value.parse()?,
             "warmup" => self.warmup = value.parse()?,
@@ -200,6 +208,16 @@ mod tests {
         assert_eq!(cfg.session_capacity, 64);
         assert_eq!(cfg.spill_dir.as_deref(), Some("/tmp/hla-sessions"));
         assert_eq!(cfg.session_id, Some(7));
+    }
+
+    #[test]
+    fn prefill_flags_apply() {
+        let cfg = RunConfig::from_args(&s(&["--prefill-chunk", "64", "--prefill-threads=4"]))
+            .unwrap();
+        assert_eq!(cfg.prefill_chunk, 64);
+        assert_eq!(cfg.prefill_threads, 4);
+        // default keeps decode-as-prefill
+        assert_eq!(RunConfig::default().prefill_chunk, 0);
     }
 
     #[test]

@@ -34,7 +34,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::metrics::{Histogram, Meter};
+use crate::metrics::{Histogram, Meter, Table};
+use crate::prefill::{PrefillCfg, PrefillMode, Prefiller};
 use crate::runtime::{literal, Engine};
 use crate::session::{SamplerState, SessionSnapshot, SessionStore};
 use crate::tensor::{Tensor, TensorI32};
@@ -45,7 +46,10 @@ pub use state_pool::StatePool;
 /// Prefill/decode scheduling policy (E8b ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedPolicy {
-    /// Admit every waiting request before decoding (lowest TTFT).
+    /// Admit every waiting request before decoding (lowest TTFT).  With a
+    /// prefill engine attached ([`EngineLoop::set_prefill`]) this is
+    /// literal: each admission ingests its whole prompt via the chunked
+    /// scan before the next batched decode step runs.
     PrefillFirst,
     /// Only admit when the decode batch is empty (decode latency first).
     DecodeFirst,
@@ -79,6 +83,12 @@ impl SchedPolicy {
 }
 
 /// Aggregated serving metrics, snapshotted for benches/CLI.
+///
+/// TTFT (submission → first token) splits into queue-wait (submission →
+/// admission), prefill (admission-time prompt ingestion) and first-decode
+/// (decode steps until the first sampled token) — the three knobs a
+/// serving operator can actually turn (batch width, prefill threads,
+/// scheduler policy respectively).
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
     pub completed: u64,
@@ -90,12 +100,50 @@ pub struct ServeStats {
     pub ttft_us_p50: f64,
     pub ttft_us_p95: f64,
     pub ttft_us_p99: f64,
+    pub queue_us_p50: f64,
+    pub queue_us_p95: f64,
+    pub queue_us_p99: f64,
+    pub prefill_us_p50: f64,
+    pub prefill_us_p95: f64,
+    pub prefill_us_p99: f64,
+    pub first_decode_us_p50: f64,
+    pub first_decode_us_p95: f64,
+    pub first_decode_us_p99: f64,
+    /// Lanes whose prompt went through the scan prefill engine.
+    pub prefills: u64,
+    /// Prompt tokens ingested by the prefill engine (vs decode steps).
+    pub prefilled_tokens: u64,
     pub latency_us_p50: f64,
     pub latency_us_p95: f64,
     pub latency_us_p99: f64,
     pub tokens_per_sec: f64,
     pub state_bytes: usize,
     pub lane_occupancy: f64,
+}
+
+impl ServeStats {
+    /// The TTFT breakdown as a [`Table`] (the reporter benches/CLI print).
+    pub fn ttft_table(&self) -> Table {
+        let mut t = Table::new(&["phase", "p50 ms", "p95 ms", "p99 ms"]);
+        let mut row = |name: &str, p50: f64, p95: f64, p99: f64| {
+            t.row(&[
+                name.to_string(),
+                format!("{:.2}", p50 / 1e3),
+                format!("{:.2}", p95 / 1e3),
+                format!("{:.2}", p99 / 1e3),
+            ]);
+        };
+        row("queue-wait", self.queue_us_p50, self.queue_us_p95, self.queue_us_p99);
+        row("prefill", self.prefill_us_p50, self.prefill_us_p95, self.prefill_us_p99);
+        row(
+            "first-decode",
+            self.first_decode_us_p50,
+            self.first_decode_us_p95,
+            self.first_decode_us_p99,
+        );
+        row("ttft (e2e)", self.ttft_us_p50, self.ttft_us_p95, self.ttft_us_p99);
+        t
+    }
 }
 
 /// The single-replica engine loop: owns the PJRT engine + batch state.
@@ -112,6 +160,10 @@ pub struct EngineLoop {
     /// replicas, which is what makes cross-replica migration a routing
     /// decision: detach here on replica A, restore from here on replica B.
     sessions: Option<Arc<SessionStore>>,
+    /// Scan-based prompt ingestion (None = decode-as-prefill): admission
+    /// runs the chunked scan on the pure-Rust twin of the artifact model
+    /// and lands the state in the lane before the first decode step.
+    prefiller: Option<Prefiller>,
     // params + recurrent state live as literals across steps and are passed
     // by reference to PJRT — no per-step deep copies (§Perf item 2)
     params: Vec<xla::Literal>,
@@ -120,10 +172,15 @@ pub struct EngineLoop {
     pub step_hist: Histogram,
     pub ttft_hist: Histogram,
     pub latency_hist: Histogram,
+    pub queue_hist: Histogram,
+    pub prefill_hist: Histogram,
+    pub first_decode_hist: Histogram,
     meter: Meter,
     occupied_steps: u64,
     occupied_lanes: u64,
     completed: u64,
+    prefills: u64,
+    prefilled_tokens: u64,
     started: Instant,
 }
 
@@ -153,20 +210,28 @@ impl EngineLoop {
             policy,
             rx,
             sessions: None,
+            prefiller: None,
             params,
             state,
             step_hist: Histogram::new(),
             ttft_hist: Histogram::new(),
             latency_hist: Histogram::new(),
+            queue_hist: Histogram::new(),
+            prefill_hist: Histogram::new(),
+            first_decode_hist: Histogram::new(),
             meter: Meter::new(),
             occupied_steps: 0,
             occupied_lanes: 0,
             completed: 0,
+            prefills: 0,
+            prefilled_tokens: 0,
             started: Instant::now(),
         })
     }
 
     /// Load externally trained parameters (checkpoint) instead of init.
+    /// Call before [`EngineLoop::set_prefill`] — the prefill engine's
+    /// pure-Rust twin is built from the parameters current at that point.
     pub fn set_params(&mut self, params: Vec<xla::Literal>) {
         self.params = params;
     }
@@ -175,6 +240,42 @@ impl EngineLoop {
     /// it on completion and restored from it on `resume` requests.
     pub fn set_session_store(&mut self, store: Arc<SessionStore>) {
         self.sessions = Some(store);
+    }
+
+    /// Attach the scan prefill engine (serve `--prefill-chunk N`): builds
+    /// the pure-Rust twin of the artifact model from the loop's parameter
+    /// literals and ingests every admitted prompt (but its final token)
+    /// through the chunked scan.  `PrefillMode::Serial` or any failure to
+    /// build the twin (unscannable mixer, partial state layout) keeps
+    /// decode-as-prefill, with a warning rather than a dead engine.
+    ///
+    /// Scheduling note: the scan runs synchronously on the engine-loop
+    /// thread at admission, so active lanes wait out the scan before
+    /// their next batched decode step — prompt latency moves off the
+    /// per-token path and onto admission.  That is the stated contract of
+    /// `PrefillFirst`; under `DecodeFirst`/`Hybrid` (whose point is
+    /// decode-latency isolation) it adds head-of-line blocking that
+    /// decode-as-prefill did not have, so size `--prefill-chunk` /
+    /// `--prefill-threads` for your tail prompt length or keep those
+    /// policies on decode-as-prefill.
+    pub fn set_prefill(&mut self, cfg: PrefillCfg) {
+        if cfg.mode == PrefillMode::Serial {
+            self.prefiller = None;
+            return;
+        }
+        let built = (|| -> Result<Prefiller> {
+            let mc = self.engine.model_cfg(&self.cfg_name)?.clone();
+            let tensors: Vec<Tensor> =
+                self.params.iter().map(literal::literal_to_tensor).collect::<Result<_>>()?;
+            Prefiller::from_param_tensors(&mc, &tensors, cfg)
+        })();
+        match built {
+            Ok(p) => self.prefiller = Some(p),
+            Err(e) => {
+                log::warn!("prefill engine unavailable, keeping decode-as-prefill: {e}");
+                self.prefiller = None;
+            }
+        }
     }
 
     /// Run until the request channel closes and all lanes drain.
@@ -222,6 +323,7 @@ impl EngineLoop {
         let n = self.policy.admissions(self.waiting.len(), free.len(), active);
         for &lane_idx in free.iter().take(n) {
             let req = self.waiting.pop_front().expect("admissions <= waiting");
+            self.queue_hist.record(req.submitted.elapsed());
             let claimed = match (&self.sessions, req.resume, req.session) {
                 (Some(store), true, Some(sid)) => {
                     store.claim(sid, Some(&self.cfg_name)).map(|s| (Arc::clone(store), s))
@@ -233,7 +335,11 @@ impl EngineLoop {
             // config name) must not kill the engine thread: unclaim the
             // one copy back for inspection/repair (rolling back the hit
             // accounting) and degrade to a fresh lane, like any other
-            // resume miss
+            // resume miss.  (When scan prefill then runs, this import is
+            // overwritten by the post-prompt state — the eager import is
+            // kept anyway because it is the compatibility gate powering
+            // the unclaim/degrade path above, and admission sits off the
+            // per-token hot loop.)
             let snap = match claimed {
                 Some((store, s)) => match self.import_state_lane(lane_idx, &s.state) {
                     Ok(()) => Some(s),
@@ -248,19 +354,52 @@ impl EngineLoop {
                 },
                 None => None,
             };
-            match snap {
-                Some(snap) => {
+            let mut lane = match &snap {
+                Some(s) => {
                     // keep the host StatePool mirror in sync (accounting/
                     // diagnostics only — the decode path reads the literals)
-                    self.pool.write_lane(lane_idx, &snap.state);
-                    self.lanes[lane_idx] = Lane::resume(req, &snap);
+                    self.pool.write_lane(lane_idx, &s.state);
+                    Lane::resume(req, s)
                 }
                 None => {
                     self.pool.zero_lane(lane_idx);
                     self.zero_state_lane(lane_idx).expect("state zeroing");
-                    self.lanes[lane_idx] = Lane::start(req);
+                    Lane::start(req)
+                }
+            };
+            // scan prefill: ingest everything but the final prompt token
+            // on the pure-Rust twin (from the restored snapshot when
+            // resuming — the non-identity initial segment of the scan),
+            // land the state in the lane, and jump the cursor so the lane
+            // enters the sampling phase after one decode step
+            let scanned = match (&self.prefiller, &lane) {
+                (Some(pf), Lane::Active(a)) if a.prompt.len() >= 2 => {
+                    let t0 = Instant::now();
+                    match pf.ingest_lane(snap.as_ref().map(|s| s.state.as_slice()), &a.prompt) {
+                        Ok((parts, consumed)) => Some((parts, consumed, t0.elapsed())),
+                        Err(e) => {
+                            log::warn!("prefill failed, decode-as-prefill fallback: {e}");
+                            None
+                        }
+                    }
+                }
+                _ => None,
+            };
+            if let Some((parts, consumed, spent)) = scanned {
+                match self.import_state_lane(lane_idx, &parts) {
+                    Ok(()) => {
+                        self.pool.write_lane(lane_idx, &parts);
+                        lane.mark_prefilled(consumed);
+                        self.prefill_hist.record(spent);
+                        self.prefills += 1;
+                        self.prefilled_tokens += consumed as u64;
+                    }
+                    Err(e) => {
+                        log::warn!("prefill state import failed, decode-as-prefill fallback: {e}")
+                    }
                 }
             }
+            self.lanes[lane_idx] = lane;
         }
     }
 
@@ -371,6 +510,7 @@ impl EngineLoop {
             if lane.take_first_flag() {
                 if let Lane::Active(a) = lane {
                     self.ttft_hist.record(now - a.arrival);
+                    self.first_decode_hist.record(now - a.decode_start);
                 }
             }
             if lane.take_emitted_flag() {
@@ -423,6 +563,17 @@ impl EngineLoop {
             ttft_us_p50: self.ttft_hist.percentile_us(50.0),
             ttft_us_p95: self.ttft_hist.percentile_us(95.0),
             ttft_us_p99: self.ttft_hist.percentile_us(99.0),
+            queue_us_p50: self.queue_hist.percentile_us(50.0),
+            queue_us_p95: self.queue_hist.percentile_us(95.0),
+            queue_us_p99: self.queue_hist.percentile_us(99.0),
+            prefill_us_p50: self.prefill_hist.percentile_us(50.0),
+            prefill_us_p95: self.prefill_hist.percentile_us(95.0),
+            prefill_us_p99: self.prefill_hist.percentile_us(99.0),
+            first_decode_us_p50: self.first_decode_hist.percentile_us(50.0),
+            first_decode_us_p95: self.first_decode_hist.percentile_us(95.0),
+            first_decode_us_p99: self.first_decode_hist.percentile_us(99.0),
+            prefills: self.prefills,
+            prefilled_tokens: self.prefilled_tokens,
             latency_us_p50: self.latency_hist.percentile_us(50.0),
             latency_us_p95: self.latency_hist.percentile_us(95.0),
             latency_us_p99: self.latency_hist.percentile_us(99.0),
@@ -449,6 +600,18 @@ fn zero_state_literals(cfg: &crate::runtime::ModelCfg) -> Result<Vec<xla::Litera
         .collect()
 }
 
+/// Everything an engine replica can be configured with (the spawn-time
+/// superset of [`spawn_engine`]'s knobs).
+#[derive(Default)]
+pub struct EngineOpts {
+    pub policy: Option<SchedPolicy>,
+    pub seed: i32,
+    /// Shared session store (see [`spawn_engine_with_store`]).
+    pub store: Option<Arc<SessionStore>>,
+    /// Scan prefill configuration (None = decode-as-prefill).
+    pub prefill: Option<PrefillCfg>,
+}
+
 /// Spawn an engine loop on its own thread; returns the request sender and a
 /// join handle yielding the final stats.
 pub fn spawn_engine(
@@ -471,11 +634,28 @@ pub fn spawn_engine_with_store(
     seed: i32,
     store: Option<Arc<SessionStore>>,
 ) -> (Sender<GenRequest>, std::thread::JoinHandle<Result<ServeStats>>) {
+    spawn_engine_full(
+        artifacts,
+        cfg_name,
+        EngineOpts { policy: Some(policy), seed, store, prefill: None },
+    )
+}
+
+/// Fully configured spawn: session store and scan prefill engine included.
+pub fn spawn_engine_full(
+    artifacts: String,
+    cfg_name: String,
+    opts: EngineOpts,
+) -> (Sender<GenRequest>, std::thread::JoinHandle<Result<ServeStats>>) {
     let (tx, rx) = std::sync::mpsc::channel();
     let handle = std::thread::spawn(move || {
-        let mut lp = EngineLoop::new(&artifacts, &cfg_name, policy, seed, rx)?;
-        if let Some(store) = store {
+        let policy = opts.policy.unwrap_or(SchedPolicy::PrefillFirst);
+        let mut lp = EngineLoop::new(&artifacts, &cfg_name, policy, opts.seed, rx)?;
+        if let Some(store) = opts.store {
             lp.set_session_store(store);
+        }
+        if let Some(prefill) = opts.prefill {
+            lp.set_prefill(prefill);
         }
         lp.run()
     });

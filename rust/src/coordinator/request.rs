@@ -1,6 +1,7 @@
 //! Request/response types for the serving path.
 
 use std::sync::mpsc::Sender;
+use std::time::Instant;
 
 use crate::model::sampler::SamplerCfg;
 
@@ -69,6 +70,9 @@ pub struct GenRequest {
     /// (the prompt then carries only the *new* turn's text, which may be
     /// empty to continue generation in place).
     pub resume: bool,
+    /// When the request entered the system — the anchor for the TTFT
+    /// breakdown (queue-wait is admission − submission).
+    pub submitted: Instant,
 }
 
 impl GenRequest {
@@ -79,7 +83,17 @@ impl GenRequest {
         sampler: SamplerCfg,
         events: Sender<TokenEvent>,
     ) -> GenRequest {
-        GenRequest { id, prompt, max_new_tokens, eos: None, sampler, events, session: None, resume: false }
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            eos: None,
+            sampler,
+            events,
+            session: None,
+            resume: false,
+            submitted: Instant::now(),
+        }
     }
 
     /// Tag the request with a session id (snapshot on completion).

@@ -140,6 +140,21 @@ impl<T: Scalar> SegA<T> {
         seg
     }
 
+    /// Embed a streaming state as a scan segment (resume case; see
+    /// [`super::monoid2::Seg2::from_state`]).  The history's plain R̃ and ρ
+    /// are set to 0 and 1 — exact while the embedding stays the left
+    /// operand of every `combine`, which scan prefixes always do.
+    pub fn from_state(st: &AhlaState<T>) -> Self {
+        SegA {
+            r: Mat::zeros(st.p.rows, st.p.rows),
+            p: st.p.clone(),
+            m: st.m.clone(),
+            e: st.e.clone(),
+            n: st.n.clone(),
+            rho: T::ONE,
+        }
+    }
+
     pub fn as_state(&self) -> AhlaState<T> {
         AhlaState { p: self.p.clone(), m: self.m.clone(), e: self.e.clone(), n: self.n.clone() }
     }

@@ -30,6 +30,30 @@ where
     T: Scalar + Send + Sync,
     F: Fn(usize, &M, &mut [T]) + Send + Sync,
 {
+    chunked_scan_from(None, leaves, chunk, threads, dv, emit)
+}
+
+/// [`chunked_scan`] with a *non-identity initial segment* — the resume
+/// case: a lane restored from a `SessionSnapshot` re-enters the scan as
+/// the segment to the left of every leaf (Remark 4.2 with P_0 = init
+/// instead of E).  `init` is always the **left** operand of `combine`, so
+/// a state-only embedding (e.g. [`Seg2::from_state`]) whose auxiliary
+/// fields are unknowable is still exact: `combine` only folds a left
+/// argument's aux fields into result fields that no downstream output
+/// reads when the result itself stays a left operand.
+pub fn chunked_scan_from<M, T, F>(
+    init: Option<&M>,
+    leaves: &[M],
+    chunk: usize,
+    threads: usize,
+    dv: usize,
+    emit: F,
+) -> Mat<T>
+where
+    M: Monoid + Send + Sync,
+    T: Scalar + Send + Sync,
+    F: Fn(usize, &M, &mut [T]) + Send + Sync,
+{
     let n = leaves.len();
     let mut out = Mat::zeros(n, dv);
     if n == 0 {
@@ -53,8 +77,13 @@ where
     }
     let summaries: Vec<M> = summaries.into_iter().map(|s| s.unwrap()).collect();
 
-    // phase 2: exclusive scan over the B_c chunk summaries
+    // phase 2: exclusive scan over the B_c chunk summaries, then fold the
+    // initial segment in on the left (init ⊕ P_c stays a left operand)
     let carries = blelloch_exclusive(&summaries);
+    let carries: Vec<M> = match init {
+        Some(i) => carries.iter().map(|c| i.combine(c)).collect(),
+        None => carries,
+    };
 
     // phase 3: intra-chunk inclusive scans + merge + emit (parallel)
     {
@@ -87,7 +116,9 @@ where
 }
 
 /// Run `f(index, item)` over items on up to `threads` scoped threads.
-fn parallel_chunks<I, F>(items: Vec<I>, threads: usize, f: F)
+/// (Shared with [`crate::prefill`], whose per-head scans reuse this
+/// partitioning for chunk summaries and per-chunk recurrences.)
+pub(crate) fn parallel_chunks<I, F>(items: Vec<I>, threads: usize, f: F)
 where
     I: Send,
     F: Fn(usize, &mut I) + Send + Sync,
@@ -303,6 +334,165 @@ mod tests {
             let want = ahla_serial(&q, &k, &v, &opts);
             let got = ahla_chunked(&q, &k, &v, &opts, 8, 3);
             testing::assert_close(&want.data, &got.data, 1e-10, "ahla chunked")
+        });
+    }
+
+    // -- chunked_scan_from: non-identity initial segment (the resume case) --
+    //
+    // Each property builds a random "history", embeds it as the scan's
+    // initial segment two ways (the true segment with correct auxiliary
+    // fields, and the state-only embedding a SessionSnapshot restore can
+    // afford), and checks both against the serial recurrence stepped from
+    // the history's state — over chunk widths 1, non-divisors, and w > n.
+
+    const WIDTHS: [usize; 4] = [1, 3, 8, 64];
+
+    #[test]
+    fn scan_from_init_matches_serial_seg2() {
+        testing::quick("seg2 init scan==serial (resume)", 10, |rng, _| {
+            let n = rng.range(1, 40);
+            let hist = rng.range(1, 12);
+            let (d, dv) = (3, 4);
+            for gamma in [1.0, 0.9] {
+                let opts = HlaOptions::default().with_gamma(gamma);
+                let (hq, hk, hv) = random(rng, hist, d, dv);
+                let (q, k, v) = random(rng, n, d, dv);
+                // serial reference from the history's state
+                let mut st = crate::hla::state2::Hla2State::<f64>::new(d, dv);
+                for t in 0..hist {
+                    st.step(hq.row(t), hk.row(t), hv.row(t), opts.gamma);
+                }
+                let mut want = Mat::zeros(n, dv);
+                {
+                    let mut s = st.clone();
+                    for t in 0..n {
+                        s.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                        want.row_mut(t).copy_from_slice(&s.output(q.row(t), &opts));
+                    }
+                }
+                let true_seg = (0..hist)
+                    .map(|t| Seg2::<f64>::token(hq.row(t), hk.row(t), hv.row(t), opts.gamma))
+                    .reduce(|a, b| a.combine(&b))
+                    .unwrap();
+                let embed = Seg2::from_state(&st);
+                let leaves: Vec<Seg2<f64>> = (0..n)
+                    .map(|t| Seg2::token(q.row(t), k.row(t), v.row(t), opts.gamma))
+                    .collect();
+                for init in [&true_seg, &embed] {
+                    for w in WIDTHS {
+                        for threads in [1, 3] {
+                            let got = chunked_scan_from(Some(init), &leaves, w, threads, dv, |t, seg, row| {
+                                row.copy_from_slice(&seg.as_state().output(q.row(t), &opts));
+                            });
+                            testing::assert_close(
+                                &want.data,
+                                &got.data,
+                                1e-10,
+                                &format!("seg2 g={gamma} w={w} th={threads}"),
+                            )?;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scan_from_init_matches_serial_sega() {
+        testing::quick("segA init scan==serial (resume)", 10, |rng, _| {
+            let n = rng.range(1, 40);
+            let hist = rng.range(1, 12);
+            let (d, dv) = (3, 3);
+            for gamma in [1.0, 0.85] {
+                let opts = HlaOptions::default().with_gamma(gamma);
+                let (hq, hk, hv) = random(rng, hist, d, dv);
+                let (q, k, v) = random(rng, n, d, dv);
+                let mut st = crate::hla::ahla::AhlaState::<f64>::new(d, dv);
+                for t in 0..hist {
+                    st.step(hq.row(t), hk.row(t), hv.row(t), opts.gamma);
+                }
+                let mut want = Mat::zeros(n, dv);
+                {
+                    let mut s = st.clone();
+                    for t in 0..n {
+                        s.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                        want.row_mut(t).copy_from_slice(&s.output(q.row(t), &opts));
+                    }
+                }
+                let true_seg = (0..hist)
+                    .map(|t| SegA::<f64>::token(hq.row(t), hk.row(t), hv.row(t), opts.gamma))
+                    .reduce(|a, b| a.combine(&b))
+                    .unwrap();
+                let embed = SegA::from_state(&st);
+                let leaves: Vec<SegA<f64>> = (0..n)
+                    .map(|t| SegA::token(q.row(t), k.row(t), v.row(t), opts.gamma))
+                    .collect();
+                for init in [&true_seg, &embed] {
+                    for w in WIDTHS {
+                        let got = chunked_scan_from(Some(init), &leaves, w, 3, dv, |t, seg, row| {
+                            row.copy_from_slice(&seg.as_state().output(q.row(t), &opts));
+                        });
+                        testing::assert_close(
+                            &want.data,
+                            &got.data,
+                            1e-10,
+                            &format!("segA g={gamma} w={w}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scan_from_init_matches_serial_seg3() {
+        use crate::hla::monoid3::Seg3Decay;
+        use crate::hla::state3::Hla3State;
+        testing::quick("seg3 init scan==serial (resume)", 8, |rng, _| {
+            let n = rng.range(1, 32);
+            let hist = rng.range(1, 10);
+            let (d, dv) = (3, 3);
+            for gamma in [1.0, 0.9] {
+                let opts = HlaOptions::default().with_gamma(gamma);
+                let (hq, hk, hv) = random(rng, hist, d, dv);
+                let (q, k, v) = random(rng, n, d, dv);
+                let mut st = Hla3State::<f64>::new(d, dv);
+                for t in 0..hist {
+                    st.step(hq.row(t), hk.row(t), hv.row(t), opts.gamma);
+                }
+                let mut want = Mat::zeros(n, dv);
+                {
+                    let mut s = st.clone();
+                    for t in 0..n {
+                        s.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                        want.row_mut(t).copy_from_slice(&s.output(q.row(t), &opts));
+                    }
+                }
+                let true_seg = (0..hist)
+                    .map(|t| Seg3Decay::<f64>::token(hq.row(t), hk.row(t), hv.row(t), opts.gamma))
+                    .reduce(|a, b| a.combine(&b))
+                    .unwrap();
+                let embed = Seg3Decay::from_state(&st);
+                let leaves: Vec<Seg3Decay<f64>> = (0..n)
+                    .map(|t| Seg3Decay::token(q.row(t), k.row(t), v.row(t), opts.gamma))
+                    .collect();
+                for init in [&true_seg, &embed] {
+                    for w in WIDTHS {
+                        let got = chunked_scan_from(Some(init), &leaves, w, 3, dv, |t, seg, row| {
+                            row.copy_from_slice(&seg.as_state().output(q.row(t), &opts));
+                        });
+                        testing::assert_close(
+                            &want.data,
+                            &got.data,
+                            1e-9,
+                            &format!("seg3 g={gamma} w={w}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
         });
     }
 }

@@ -13,10 +13,13 @@
 //! * [`state3`]  — third order: canonical rank-1 form and the paper-literal
 //!                 Eq. 7.5 recurrence (Alg 3)
 //! * [`monoid3`] — paper's ⊗₃ with segment maps, dense *and* factored (Alg 4,
-//!                 Thm 7.2) + the cheap canonical third-order monoid
+//!                 Thm 7.2) + the cheap canonical third-order monoid and its
+//!                 decayed generalization (`Seg3Decay`, any γ — serving
+//!                 prefill uses it)
 //! * [`scan`]    — generic exclusive/inclusive Blelloch scan over any monoid
 //!                 (Thm 4.1, Rmk 4.2), serial and multi-threaded chunked
-//! * [`chunk`]   — two-level intra-/inter-chunk parallel driver (§4.2, Fig 1C)
+//! * [`chunk`]   — two-level intra-/inter-chunk parallel driver (§4.2, Fig 1C),
+//!                 incl. the non-identity-initial-segment form (resume)
 //! * [`packed`]  — packed symmetric storage for S (§5.2)
 
 pub mod ahla;

@@ -56,6 +56,28 @@ impl<T: Scalar> Seg2<T> {
         seg
     }
 
+    /// Embed a streaming state as a scan segment — the resume case: a lane
+    /// restored from a `SessionSnapshot` becomes the non-identity initial
+    /// segment of the prompt scan (Remark 4.2 with P_0 ≠ E).
+    ///
+    /// The history's plain S̃ moment and ρ are unknowable from the state
+    /// tuple, so they are set to 0 and 1.  That is exact **as long as the
+    /// embedding stays the left operand of every `combine`**: `combine`
+    /// reads its left argument's `st`/`rho` only additively into result
+    /// fields that no output consumes while the result itself stays a left
+    /// operand (which prefixes in an exclusive scan always do).
+    pub fn from_state(st: &Hla2State<T>) -> Self {
+        Seg2 {
+            s: st.s.clone(),
+            c: st.c.clone(),
+            m: st.m.clone(),
+            g: st.g.clone(),
+            h: st.h.clone(),
+            st: Mat::zeros(st.d(), st.d()),
+            rho: T::ONE,
+        }
+    }
+
     /// View the segment (interpreted as the prefix 1..t) as a state tuple.
     pub fn as_state(&self) -> Hla2State<T> {
         Hla2State {

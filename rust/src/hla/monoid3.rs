@@ -389,6 +389,174 @@ impl<T: Scalar> Monoid for Seg3Canon<T> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// decayed canonical third-order monoid — Seg3Canon generalized to γ < 1
+// ---------------------------------------------------------------------------
+
+/// Decayed canonical third-order segment: [`Seg3Canon`] extended to γ ≤ 1
+/// so the serving prefill scan covers decayed third-order lanes too (a
+/// repo finding; the paper states Algorithm 4 for γ = 1 only).
+///
+/// Invariants over a segment X of length L with 1-based positions j
+/// (derived from [`Hla3State::step`]'s scale-then-add recurrence; "loc"
+/// means accumulated within X from zero state):
+///
+///   S, P, m, F, η — the usual decayed moments / corrected state
+///   SQ̃_X = Σ_u γ^{j_u} q_u q_uᵀ          (decay-weighted query moment)
+///   R̃_X  = Σ_u q_u (q_uᵀ P^loc_u)ᵀ       (suffix-undecayed cross stats)
+///   r̃_X  = Σ_u (q_uᵀ m^loc_u) q_u
+///   Ñ_X  = Σ_u (S^loc_u q_u) q_uᵀ
+///   ρ_X  = γ^L
+///
+/// Composition (A then B; exact for concatenation, hence associative):
+///
+///   F_AB  = ρ_B F_A + F_B + ρ_B (S_A SQ̃_B P_A + S_A R̃_B + Ñ_B P_A)
+///   η_AB  = ρ_B η_A + η_B + ρ_B (S_A SQ̃_B m_A + S_A r̃_B + Ñ_B m_A)
+///   R̃_AB = R̃_A + R̃_B + SQ̃_B P_A        (r̃, Ñ analogous)
+///   SQ̃_AB = SQ̃_A + ρ_A SQ̃_B
+///
+/// At γ = 1 every ρ is 1, SQ̃ = S^Q and this is exactly [`Seg3Canon`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Seg3Decay<T> {
+    pub s: Mat<T>,
+    pub sq: Mat<T>,
+    pub p: Mat<T>,
+    pub m: Vec<T>,
+    pub f: Mat<T>,
+    pub eta: Vec<T>,
+    pub r: Mat<T>,
+    pub rv: Vec<T>,
+    pub nmat: Mat<T>,
+    pub rho: T,
+}
+
+impl<T: Scalar> Seg3Decay<T> {
+    pub fn empty(d: usize, dv: usize) -> Self {
+        Seg3Decay {
+            s: Mat::zeros(d, d),
+            sq: Mat::zeros(d, d),
+            p: Mat::zeros(d, dv),
+            m: vec![T::ZERO; d],
+            f: Mat::zeros(d, dv),
+            eta: vec![T::ZERO; d],
+            r: Mat::zeros(d, dv),
+            rv: vec![T::ZERO; d],
+            nmat: Mat::zeros(d, d),
+            rho: T::ONE,
+        }
+    }
+
+    /// Single-token segment (j = 1, so SQ̃ carries one γ).
+    pub fn token(q: &[T], k: &[T], v: &[T], gamma: T) -> Self {
+        let (d, dv) = (q.len(), v.len());
+        let mut s = Seg3Decay::empty(d, dv);
+        let kq = ops::dot(k, q);
+        s.s.add_outer(T::ONE, k, k);
+        s.p.add_outer(T::ONE, k, v);
+        s.m.copy_from_slice(k);
+        s.sq.add_outer(gamma, q, q);
+        s.f.add_outer(kq * kq, k, v);
+        ops::axpy(kq * kq, k, &mut s.eta);
+        s.r.add_outer(kq, q, v);
+        ops::axpy(kq, q, &mut s.rv);
+        s.nmat.add_outer(kq, k, q);
+        s.rho = gamma;
+        s
+    }
+
+    /// Embed a streaming state as a scan segment (resume case; see
+    /// [`super::monoid2::Seg2::from_state`]).  The history's SQ̃/R̃/r̃/Ñ
+    /// and ρ are set to 0 and 1 — exact while the embedding stays the
+    /// left operand of every `combine`, which scan prefixes always do.
+    pub fn from_state(st: &Hla3State<T>) -> Self {
+        let (d, dv) = (st.s.rows, st.p.cols);
+        let mut seg = Seg3Decay::empty(d, dv);
+        seg.s = st.s.clone();
+        seg.p = st.p.clone();
+        seg.m = st.m.clone();
+        seg.f = st.f.clone();
+        seg.eta = st.eta.clone();
+        seg
+    }
+
+    pub fn as_state(&self) -> Hla3State<T> {
+        Hla3State {
+            s: self.s.clone(),
+            p: self.p.clone(),
+            m: self.m.clone(),
+            f: self.f.clone(),
+            eta: self.eta.clone(),
+        }
+    }
+}
+
+impl<T: Scalar> Monoid for Seg3Decay<T> {
+    fn identity_like(&self) -> Self {
+        Seg3Decay::empty(self.s.rows, self.p.cols)
+    }
+
+    fn combine(&self, rhs: &Self) -> Self {
+        let (a, b) = (self, rhs);
+        let (ra, rb) = (a.rho, b.rho);
+        let s_sq = a.s.matmul(&b.sq); // S_A SQ̃_B
+        // F_AB = ρ_B F_A + F_B + ρ_B (S_A SQ̃_B P_A + S_A R̃_B + Ñ_B P_A)
+        let mut f = a.f.clone();
+        f.scale(rb);
+        f.add_scaled(T::ONE, &b.f);
+        f.add_scaled(rb, &s_sq.matmul(&a.p));
+        f.add_scaled(rb, &a.s.matmul(&b.r));
+        f.add_scaled(rb, &b.nmat.matmul(&a.p));
+        // η analogous
+        let mut eta: Vec<T> = a.eta.iter().map(|&x| x * rb).collect();
+        ops::axpy(T::ONE, &b.eta, &mut eta);
+        ops::axpy(rb, &s_sq.matvec(&a.m), &mut eta);
+        ops::axpy(rb, &a.s.matvec(&b.rv), &mut eta);
+        ops::axpy(rb, &b.nmat.matvec(&a.m), &mut eta);
+        // cross statistics (suffix-undecayed weights)
+        let mut r = a.r.clone();
+        r.add_scaled(T::ONE, &b.r);
+        r.add_scaled(T::ONE, &b.sq.matmul(&a.p));
+        let mut rv = a.rv.clone();
+        ops::axpy(T::ONE, &b.rv, &mut rv);
+        ops::axpy(T::ONE, &b.sq.matvec(&a.m), &mut rv);
+        let mut nmat = a.nmat.clone();
+        nmat.add_scaled(T::ONE, &b.nmat);
+        nmat.add_scaled(T::ONE, &s_sq);
+        let mut sq = a.sq.clone();
+        sq.add_scaled(ra, &b.sq);
+        // decayed moments
+        let mut s = a.s.clone();
+        s.scale(rb);
+        s.add_scaled(T::ONE, &b.s);
+        let mut p = a.p.clone();
+        p.scale(rb);
+        p.add_scaled(T::ONE, &b.p);
+        let mut m: Vec<T> = a.m.iter().map(|&x| x * rb).collect();
+        ops::axpy(T::ONE, &b.m, &mut m);
+        Seg3Decay { s, sq, p, m, f, eta, r, rv, nmat, rho: ra * rb }
+    }
+}
+
+/// Decayed canonical third order via exclusive Blelloch scan + local
+/// inclusion — exact for any γ ∈ (0, 1].
+pub fn hla3_decay_scan<T: Scalar>(
+    q: &Mat<T>,
+    k: &Mat<T>,
+    v: &Mat<T>,
+    opts: &HlaOptions<T>,
+) -> Mat<T> {
+    let (n, dv) = (q.rows, v.cols);
+    let leaves: Vec<Seg3Decay<T>> =
+        (0..n).map(|t| Seg3Decay::token(q.row(t), k.row(t), v.row(t), opts.gamma)).collect();
+    let prefixes = super::scan::blelloch_exclusive(&leaves);
+    let mut out = Mat::zeros(n, dv);
+    for t in 0..n {
+        let st = prefixes[t].combine(&leaves[t]).as_state();
+        out.row_mut(t).copy_from_slice(&st.output(q.row(t), opts));
+    }
+    out
+}
+
 /// Canonical third order via exclusive Blelloch scan (γ = 1): the exact
 /// chunk-parallel algorithm *without* O(d³ d_v) segment maps.
 pub fn hla3_canon_scan<T: Scalar>(
@@ -496,6 +664,68 @@ mod tests {
             testing::assert_close(&l.r.data, &r.r.data, 1e-10, "R")?;
             testing::assert_close(&l.nmat.data, &r.nmat.data, 1e-10, "N")
         });
+    }
+
+    #[test]
+    fn decay_scan_matches_serial_all_gammas() {
+        testing::quick("hla3 decay scan==serial", 12, |rng, _| {
+            let n = rng.range(1, 24);
+            let (q, k, v) = random(rng, n, 4, 4);
+            for gamma in [1.0, 0.9, 0.98] {
+                let opts = HlaOptions::default().with_gamma(gamma);
+                let serial = hla3_serial(&q, &k, &v, &opts);
+                let scan = hla3_decay_scan(&q, &k, &v, &opts);
+                testing::assert_close(&serial.data, &scan.data, 1e-9, &format!("g={gamma}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decay_monoid_associative() {
+        testing::quick("seg3 decay associativity", 16, |rng, _| {
+            let seg = |rng: &mut Rng| {
+                let len = rng.range(1, 4);
+                let (q, k, v) = random(rng, len, 3, 3);
+                (0..len)
+                    .map(|t| Seg3Decay::<f64>::token(q.row(t), k.row(t), v.row(t), 0.9))
+                    .reduce(|a, b| a.combine(&b))
+                    .unwrap()
+            };
+            let (a, b, c) = (seg(rng), seg(rng), seg(rng));
+            let l = a.combine(&b).combine(&c);
+            let r = a.combine(&b.combine(&c));
+            testing::assert_close(&l.f.data, &r.f.data, 1e-10, "F")?;
+            testing::assert_close(&l.eta, &r.eta, 1e-10, "eta")?;
+            testing::assert_close(&l.r.data, &r.r.data, 1e-10, "R")?;
+            testing::assert_close(&l.rv, &r.rv, 1e-10, "r")?;
+            testing::assert_close(&l.nmat.data, &r.nmat.data, 1e-10, "N")?;
+            testing::assert_close(&l.sq.data, &r.sq.data, 1e-10, "SQ")?;
+            if (l.rho - r.rho).abs() > 1e-12 {
+                return Err("rho".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decay_monoid_reduces_to_canon_at_gamma_one() {
+        let mut rng = Rng::new(21);
+        let (q, k, v) = random(&mut rng, 7, 3, 4);
+        let dec = (0..7)
+            .map(|t| Seg3Decay::<f64>::token(q.row(t), k.row(t), v.row(t), 1.0))
+            .reduce(|a, b| a.combine(&b))
+            .unwrap();
+        let can = (0..7)
+            .map(|t| Seg3Canon::<f64>::token(q.row(t), k.row(t), v.row(t)))
+            .reduce(|a, b| a.combine(&b))
+            .unwrap();
+        testing::assert_close(&dec.f.data, &can.f.data, 1e-11, "F").unwrap();
+        testing::assert_close(&dec.eta, &can.eta, 1e-11, "eta").unwrap();
+        testing::assert_close(&dec.sq.data, &can.sq.data, 1e-11, "SQ").unwrap();
+        testing::assert_close(&dec.r.data, &can.r.data, 1e-11, "R").unwrap();
+        testing::assert_close(&dec.nmat.data, &can.nmat.data, 1e-11, "N").unwrap();
+        assert_eq!(dec.rho, 1.0);
     }
 
     #[test]

@@ -8,12 +8,13 @@
 //!   prefill, decode), exported as HLO text artifacts.
 //! * **L3** (this crate) — the runtime and coordinator: PJRT execution of
 //!   the artifacts, continuous-batching decode with constant-size HLA
-//!   state, a session snapshot/resume/fork store (`session`), a training
-//!   driver, plus a from-scratch reimplementation of the paper's full
-//!   algebra (`hla`) used for verification and CPU baselines.
+//!   state, a chunk-parallel prompt-ingestion engine (`prefill`), a
+//!   session snapshot/resume/fork store (`session`), a training driver,
+//!   plus a from-scratch reimplementation of the paper's full algebra
+//!   (`hla`) used for verification and CPU baselines.
 //!
 //! See `rust/DESIGN.md` for the system inventory and the `rust/benches/`
-//! E-series (E1–E13) for the paper-claim ↔ measurement map.
+//! E-series (E1–E14) for the paper-claim ↔ measurement map.
 
 pub mod attention;
 pub mod bench;
@@ -22,6 +23,7 @@ pub mod config;
 pub mod coordinator;
 pub mod hla;
 pub mod model;
+pub mod prefill;
 pub mod runtime;
 pub mod server;
 pub mod session;

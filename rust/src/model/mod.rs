@@ -135,6 +135,57 @@ impl MixerState {
         Ok(())
     }
 
+    /// Borrow one named state component (the manifest's `state_paths`
+    /// field names, e.g. `"s"`/`"c"`/`"m"`/`"g"`/`"h"` for hla2) — the
+    /// glue between this per-head state and the artifact's stacked
+    /// `[L, B, H, ...]` component tensors.
+    pub fn component(&self, name: &str) -> Result<&[f32]> {
+        let slice: Option<&[f32]> = match (self, name) {
+            (MixerState::Hla2(s), "s") => Some(&s.s.data),
+            (MixerState::Hla2(s), "c") => Some(&s.c.data),
+            (MixerState::Hla2(s), "m") => Some(&s.m),
+            (MixerState::Hla2(s), "g") => Some(&s.g.data),
+            (MixerState::Hla2(s), "h") => Some(&s.h),
+            (MixerState::Ahla(s), "p") => Some(&s.p.data),
+            (MixerState::Ahla(s), "m") => Some(&s.m),
+            (MixerState::Ahla(s), "e") => Some(&s.e.data),
+            (MixerState::Ahla(s), "n") => Some(&s.n),
+            (MixerState::Hla3(s), "s") => Some(&s.s.data),
+            (MixerState::Hla3(s), "p") => Some(&s.p.data),
+            (MixerState::Hla3(s), "m") => Some(&s.m),
+            (MixerState::Hla3(s), "f") => Some(&s.f.data),
+            (MixerState::Hla3(s), "eta") => Some(&s.eta),
+            (MixerState::Linear(s), "p") => Some(&s.p.data),
+            (MixerState::Linear(s), "m") => Some(&s.m),
+            _ => None,
+        };
+        slice.ok_or_else(|| anyhow::anyhow!("mixer has no state component {name:?}"))
+    }
+
+    /// Mutable twin of [`MixerState::component`].
+    pub fn component_mut(&mut self, name: &str) -> Result<&mut [f32]> {
+        let slice: Option<&mut [f32]> = match (self, name) {
+            (MixerState::Hla2(s), "s") => Some(&mut s.s.data),
+            (MixerState::Hla2(s), "c") => Some(&mut s.c.data),
+            (MixerState::Hla2(s), "m") => Some(&mut s.m),
+            (MixerState::Hla2(s), "g") => Some(&mut s.g.data),
+            (MixerState::Hla2(s), "h") => Some(&mut s.h),
+            (MixerState::Ahla(s), "p") => Some(&mut s.p.data),
+            (MixerState::Ahla(s), "m") => Some(&mut s.m),
+            (MixerState::Ahla(s), "e") => Some(&mut s.e.data),
+            (MixerState::Ahla(s), "n") => Some(&mut s.n),
+            (MixerState::Hla3(s), "s") => Some(&mut s.s.data),
+            (MixerState::Hla3(s), "p") => Some(&mut s.p.data),
+            (MixerState::Hla3(s), "m") => Some(&mut s.m),
+            (MixerState::Hla3(s), "f") => Some(&mut s.f.data),
+            (MixerState::Hla3(s), "eta") => Some(&mut s.eta),
+            (MixerState::Linear(s), "p") => Some(&mut s.p.data),
+            (MixerState::Linear(s), "m") => Some(&mut s.m),
+            _ => None,
+        };
+        slice.ok_or_else(|| anyhow::anyhow!("mixer has no state component {name:?}"))
+    }
+
     /// One token through one head: update state, produce the head output.
     pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], opts: &HlaOptions<f32>) -> Vec<f32> {
         match self {
@@ -200,6 +251,100 @@ impl ModelState {
             m.load_state_vec(&part.data)?;
         }
         Ok(())
+    }
+
+    /// Serialize in the *artifact's* component layout: one tensor per
+    /// `state_paths` entry, shaped `[L, 1, H, ...]` (a single decode
+    /// lane's slice) — the format `StatePool::read_lane`/`write_lane` and
+    /// the coordinator's state literals speak.  Fails if the manifest's
+    /// components do not cover the mixer's full state, so a lossy
+    /// round-trip is impossible.
+    pub fn to_components(&self, cfg: &ModelCfg) -> Result<Vec<Tensor>> {
+        let (l, h) = (cfg.n_layers, cfg.n_heads);
+        let mut total = 0usize;
+        let parts = cfg
+            .state_paths
+            .iter()
+            .map(|(path, shape)| {
+                let name = parse_state_path(path)?;
+                ensure!(
+                    shape.len() >= 3 && shape[0] == l && shape[2] == h,
+                    "state component {path}: shape {shape:?} is not [L, B, H, ...]"
+                );
+                let rest: usize = shape[3..].iter().product();
+                let mut out_shape = shape.clone();
+                out_shape[1] = 1;
+                let mut out = Tensor::zeros(&out_shape);
+                for (li, layer) in self.layers.iter().enumerate() {
+                    for (hi, head) in layer.iter().enumerate() {
+                        let src = head.component(&name)?;
+                        ensure!(
+                            src.len() == rest,
+                            "state component {path}: {} floats per head, shape wants {rest}",
+                            src.len()
+                        );
+                        let dst = (li * h + hi) * rest;
+                        out.data[dst..dst + rest].copy_from_slice(src);
+                        total += rest;
+                    }
+                }
+                Ok(out)
+            })
+            .collect::<Result<Vec<Tensor>>>()?;
+        let want: usize =
+            self.layers.iter().flatten().map(|m| m.state_vec().map(|v| v.len())).sum::<Result<usize>>()?;
+        ensure!(
+            total == want,
+            "state_paths cover {total} floats but the mixer state holds {want}"
+        );
+        Ok(parts)
+    }
+
+    /// Restore from [`ModelState::to_components`]-layout tensors (also the
+    /// layout of coordinator session snapshots).
+    pub fn load_components(&mut self, cfg: &ModelCfg, parts: &[Tensor]) -> Result<()> {
+        ensure!(
+            parts.len() == cfg.state_paths.len(),
+            "component arity mismatch: {} tensors for {} state paths",
+            parts.len(),
+            cfg.state_paths.len()
+        );
+        let h = cfg.n_heads;
+        for ((path, shape), part) in cfg.state_paths.iter().zip(parts) {
+            let name = parse_state_path(path)?;
+            ensure!(
+                shape.len() >= 3,
+                "state component {path}: shape {shape:?} is not [L, B, H, ...]"
+            );
+            let rest: usize = shape[3..].iter().product();
+            ensure!(
+                part.data.len() == cfg.n_layers * h * rest,
+                "state component {path}: {} floats for a lane slice of {}",
+                part.data.len(),
+                cfg.n_layers * h * rest
+            );
+            for (li, layer) in self.layers.iter_mut().enumerate() {
+                for (hi, head) in layer.iter_mut().enumerate() {
+                    let dst = head.component_mut(&name)?;
+                    let src = (li * h + hi) * rest;
+                    dst.copy_from_slice(&part.data[src..src + rest]);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a `state_paths` name like `"['eta']"` into `eta`.
+fn parse_state_path(path: &str) -> Result<String> {
+    let parts: Vec<&str> = path
+        .split(['[', ']'])
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim_matches('\''))
+        .collect();
+    match parts.as_slice() {
+        [field] => Ok(field.to_string()),
+        _ => bail!("unparseable state path {path:?}"),
     }
 }
 
@@ -271,16 +416,26 @@ impl RustModel {
     }
 
     /// Full forward over a token sequence (teacher-forced), returning the
-    /// logits matrix [n, vocab].  Uses the streaming path per token, which
-    /// equals the chunked training forward exactly (Theorem 4.1).
+    /// logits matrix [n, vocab].  Routed through the chunk-parallel
+    /// prefill engine (`crate::prefill`), which equals the streaming path
+    /// exactly up to f32 reassociation (Theorem 4.1); softmax mixers fall
+    /// back to the serial path automatically.
     pub fn forward(&self, tokens: &[u8]) -> Mat<f32> {
         let mut state = ModelState::new(&self.cfg);
-        let mut out = Mat::zeros(tokens.len(), self.cfg.vocab);
-        for (t, &tok) in tokens.iter().enumerate() {
-            let logits = self.decode_step(&mut state, tok);
-            out.row_mut(t).copy_from_slice(&logits);
-        }
-        out
+        let cfg = crate::prefill::PrefillCfg::auto(&self.cfg);
+        crate::prefill::forward_logits(self, &mut state, tokens, &cfg)
+    }
+
+    /// Serial reference forward (one `decode_step` per token) — kept as
+    /// the differential-testing baseline for the scan prefill path.
+    pub fn forward_serial(&self, tokens: &[u8]) -> Mat<f32> {
+        let mut state = ModelState::new(&self.cfg);
+        crate::prefill::forward_logits(
+            self,
+            &mut state,
+            tokens,
+            &crate::prefill::PrefillCfg::serial(),
+        )
     }
 
     /// Mean next-token cross entropy over a sequence.
@@ -342,6 +497,56 @@ mod tests {
         }
         // softmax is the contrast case: no constant-size snapshot exists
         assert!(MixerState::new("softmax", 8).state_vec().is_err());
+    }
+
+    #[test]
+    fn component_layout_roundtrip_and_coverage_check() {
+        use crate::runtime::Manifest;
+        let json = r#"{
+          "configs": {"t": {"vocab": 16, "d_model": 8, "n_layers": 2,
+            "n_heads": 2, "head_dim": 4, "d_ffn": 16, "kv_heads": 2,
+            "mixer": "hla2", "chunk": 4, "gamma": 0.98, "lam": 0.0,
+            "norm_mode": "abs", "eps": 1e-6, "n_params": 100,
+            "n_param_tensors": 1, "n_state_tensors": 5,
+            "param_paths": [["['embed']", [16, 8]]],
+            "state_paths": [
+              ["['s']", [2, 3, 2, 4, 4]],
+              ["['c']", [2, 3, 2, 4, 4]],
+              ["['m']", [2, 3, 2, 4]],
+              ["['g']", [2, 3, 2, 4, 4]],
+              ["['h']", [2, 3, 2, 4]]],
+            "train_batch": 1, "train_seq": 8, "decode_batch": 3,
+            "prefill_len": 4}},
+          "artifacts": {}
+        }"#;
+        let cfg = Manifest::parse(json).unwrap().configs["t"].clone();
+        let mut state = ModelState::new(&cfg);
+        let opts = HlaOptions::<f32>::default().with_gamma(0.98);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut buf = vec![0f32; 4];
+        for head in state.layers.iter_mut().flatten() {
+            for _ in 0..3 {
+                rng.fill_normal(&mut buf, 1.0);
+                let q = buf.clone();
+                rng.fill_normal(&mut buf, 1.0);
+                let k = buf.clone();
+                rng.fill_normal(&mut buf, 1.0);
+                head.step(&q, &k, &buf, &opts);
+            }
+        }
+        let parts = state.to_components(&cfg).unwrap();
+        assert_eq!(parts.len(), 5);
+        assert_eq!(parts[0].shape, vec![2, 1, 2, 4, 4]);
+        let mut back = ModelState::new(&cfg);
+        back.load_components(&cfg, &parts).unwrap();
+        for (a, b) in state.layers.iter().flatten().zip(back.layers.iter().flatten()) {
+            assert_eq!(a.state_vec().unwrap(), b.state_vec().unwrap());
+        }
+        // a manifest that covers only part of the state must be rejected
+        let mut partial = cfg.clone();
+        partial.state_paths.truncate(2);
+        assert!(state.to_components(&partial).is_err(), "lossy layout accepted");
+        assert!(back.load_components(&partial, &parts).is_err(), "arity mismatch accepted");
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! Chunk-parallel prefill engine: scan-based prompt ingestion for the
+//! serving path.
+//!
+//! The paper's chunk-parallel scheme (§4.2, Thm 4.1) reproduces the serial
+//! recurrence exactly, so a prompt does not have to be fed one
+//! `decode_step` at a time ("decode-as-prefill") — it can be ingested as
+//! per-token monoid leaves, scanned with the two-level intra-/inter-chunk
+//! driver, and the resulting *constant-size* state landed directly in a
+//! lane.  TTFT then scales with `n / threads` instead of `n` (bench E14).
+//!
+//! Entry points, all sharing one prompt loop (no more hand-rolled
+//! `decode_step` loops in `Model::forward` or the coordinator):
+//!
+//! * [`advance`] — push tokens through the state, no logits (the
+//!   coordinator's admission-time prompt ingestion).
+//! * [`ingest`] — ditto, returning the last position's logits.
+//! * [`forward_logits`] — all positions' logits (the training-forward /
+//!   teacher-forcing path behind [`RustModel::forward`]).
+//! * [`Prefiller`] — the coordinator-facing wrapper: converts a lane's
+//!   component-layout state tensors to a [`ModelState`], ingests all but
+//!   the final prompt token, and converts back.  The final token stays
+//!   with the lane so the first sampled token flows through the unchanged
+//!   batched decode/sampling path.
+//!
+//! Exactness: the per-head scans ([`scan`]) fold the lane's incoming state
+//! in as the scan's left-most segment (resume-from-`SessionSnapshot` as
+//! Remark 4.2's non-identity P_0), and the segment monoids already encode
+//! the decayed-carry erratum (#2) — so scan prefill equals the serial
+//! recurrence up to f32 reassociation (differential test:
+//! `rust/tests/prefill_differential.rs`).  [`PrefillMode::Serial`] keeps
+//! the step-by-step path as the differential-testing baseline.
+
+pub mod scan;
+
+use anyhow::{ensure, Result};
+
+use crate::hla::chunk::parallel_chunks;
+use crate::model::{mixer_opts, rmsnorm, silu, MixerState, ModelState, RustModel};
+use crate::runtime::ModelCfg;
+use crate::tensor::{Mat, Tensor};
+
+/// How to run the prompt through the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillMode {
+    /// One `decode_step` per token — exact reference, O(n) serial.
+    Serial,
+    /// Two-level chunked scan per layer/head — same math, parallel.
+    Scan,
+}
+
+/// Prefill configuration (chunk width w and worker threads).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillCfg {
+    pub mode: PrefillMode,
+    pub chunk: usize,
+    pub threads: usize,
+}
+
+impl PrefillCfg {
+    /// The serial decode-as-prefill baseline.
+    pub fn serial() -> PrefillCfg {
+        PrefillCfg { mode: PrefillMode::Serial, chunk: 1, threads: 1 }
+    }
+
+    /// Scan prefill with chunk width `chunk` (clamped to ≥ 1) and
+    /// `threads` workers (0 = one per available core, capped at 8).
+    pub fn scan(chunk: usize, threads: usize) -> PrefillCfg {
+        PrefillCfg {
+            mode: PrefillMode::Scan,
+            chunk: chunk.max(1),
+            threads: if threads == 0 { auto_threads() } else { threads },
+        }
+    }
+
+    /// Scan with the model's training chunk width when the mixer supports
+    /// it, serial otherwise (softmax has no segment monoid).
+    pub fn auto(cfg: &ModelCfg) -> PrefillCfg {
+        if supports_scan(&cfg.mixer) {
+            PrefillCfg::scan(cfg.chunk.max(1), 0)
+        } else {
+            PrefillCfg::serial()
+        }
+    }
+
+    fn resolved(&self, cfg: &ModelCfg) -> PrefillMode {
+        if self.mode == PrefillMode::Scan && supports_scan(&cfg.mixer) {
+            PrefillMode::Scan
+        } else {
+            PrefillMode::Serial
+        }
+    }
+}
+
+/// Does this mixer have a segment monoid (i.e. can its prompt be scanned)?
+pub fn supports_scan(mixer: &str) -> bool {
+    matches!(mixer, "hla2" | "ahla" | "hla3" | "linear")
+}
+
+fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Push `tokens` through `state` (no logits) — admission-time ingestion.
+pub fn advance(model: &RustModel, state: &mut ModelState, tokens: &[u8], cfg: &PrefillCfg) {
+    if tokens.is_empty() {
+        return;
+    }
+    match cfg.resolved(&model.cfg) {
+        PrefillMode::Serial => {
+            for &tok in tokens {
+                model.decode_step(state, tok);
+            }
+        }
+        PrefillMode::Scan => {
+            let _ = scan_hidden(model, state, tokens, cfg.chunk, cfg.threads);
+        }
+    }
+}
+
+/// Push `tokens` through `state`, returning the last position's logits.
+pub fn ingest(model: &RustModel, state: &mut ModelState, tokens: &[u8], cfg: &PrefillCfg) -> Vec<f32> {
+    assert!(!tokens.is_empty(), "ingest needs at least one token");
+    match cfg.resolved(&model.cfg) {
+        PrefillMode::Serial => {
+            let mut logits = vec![];
+            for &tok in tokens {
+                logits = model.decode_step(state, tok);
+            }
+            logits
+        }
+        PrefillMode::Scan => {
+            let hidden = scan_hidden(model, state, tokens, cfg.chunk, cfg.threads);
+            model.embed.matvec(hidden.row(tokens.len() - 1))
+        }
+    }
+}
+
+/// Teacher-forced logits for every position `[n, vocab]` — the
+/// training-forward path ([`RustModel::forward`] delegates here).
+pub fn forward_logits(
+    model: &RustModel,
+    state: &mut ModelState,
+    tokens: &[u8],
+    cfg: &PrefillCfg,
+) -> Mat<f32> {
+    let n = tokens.len();
+    let mut out = Mat::zeros(n, model.cfg.vocab);
+    if n == 0 {
+        return out;
+    }
+    match cfg.resolved(&model.cfg) {
+        PrefillMode::Serial => {
+            for (t, &tok) in tokens.iter().enumerate() {
+                let logits = model.decode_step(state, tok);
+                out.row_mut(t).copy_from_slice(&logits);
+            }
+        }
+        PrefillMode::Scan => {
+            let hidden = scan_hidden(model, state, tokens, cfg.chunk, cfg.threads);
+            par_rowwise(&mut out, cfg.threads, |t, row| {
+                row.copy_from_slice(&model.embed.matvec(hidden.row(t)));
+            });
+        }
+    }
+    out
+}
+
+/// Layer-by-layer chunk-parallel forward: every position-wise op is the
+/// exact per-row op `decode_step` uses (bit-identical), and every mixer
+/// runs the two-level scan from the lane's current state.  Returns the
+/// final-rmsnormed hidden states `[n, d_model]`; `state` is advanced past
+/// all `tokens`.
+fn scan_hidden(
+    model: &RustModel,
+    state: &mut ModelState,
+    tokens: &[u8],
+    chunk: usize,
+    threads: usize,
+) -> Mat<f32> {
+    let cfg = &model.cfg;
+    let n = tokens.len();
+    let d = cfg.d_model;
+    let dh = cfg.head_dim;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let opts = mixer_opts(cfg);
+
+    // residual stream x: [n, d]
+    let mut x = Mat::zeros(n, d);
+    for (t, &tok) in tokens.iter().enumerate() {
+        x.row_mut(t).copy_from_slice(model.embed.row(tok as usize));
+    }
+    for (li, layer) in model.layers.iter().enumerate() {
+        // pre-norm + Q/K/V projections, position-parallel
+        let mut h = Mat::zeros(n, d);
+        par_rowwise(&mut h, threads, |t, row| rmsnorm(x.row(t), &layer.norm1, row));
+        let mut qm = Mat::zeros(n, layer.wq.cols);
+        par_rowwise(&mut qm, threads, |t, row| row.copy_from_slice(&layer.wq.t_matvec(h.row(t))));
+        let mut km = Mat::zeros(n, layer.wk.cols);
+        par_rowwise(&mut km, threads, |t, row| row.copy_from_slice(&layer.wk.t_matvec(h.row(t))));
+        let mut vm = Mat::zeros(n, layer.wv.cols);
+        par_rowwise(&mut vm, threads, |t, row| row.copy_from_slice(&layer.wv.t_matvec(h.row(t))));
+
+        // per-head mixer scans (chunk-parallel inside each head)
+        let mut heads_out = Mat::zeros(n, cfg.n_heads * dh);
+        for hi in 0..cfg.n_heads {
+            let kvh = if cfg.multi_query { 0 } else { hi };
+            let mut qh = Mat::zeros(n, dh);
+            let mut kh = Mat::zeros(n, dh);
+            let mut vh = Mat::zeros(n, dh);
+            for t in 0..n {
+                for j in 0..dh {
+                    qh[(t, j)] = qm[(t, hi * dh + j)] * scale;
+                    kh[(t, j)] = km[(t, kvh * dh + j)] * scale;
+                    vh[(t, j)] = vm[(t, kvh * dh + j)];
+                }
+            }
+            let out_h = match &mut state.layers[li][hi] {
+                MixerState::Hla2(s) => scan::scan_hla2(s, &qh, &kh, &vh, &opts, chunk, threads),
+                MixerState::Ahla(s) => scan::scan_ahla(s, &qh, &kh, &vh, &opts, chunk, threads),
+                MixerState::Hla3(s) => scan::scan_hla3(s, &qh, &kh, &vh, &opts, chunk, threads),
+                MixerState::Linear(s) => scan::scan_linear(s, &qh, &kh, &vh, &opts, chunk, threads),
+                MixerState::Softmax(_) => {
+                    unreachable!("scan prefill requires a constant-state mixer (gated by supports_scan)")
+                }
+            };
+            for t in 0..n {
+                heads_out.row_mut(t)[hi * dh..(hi + 1) * dh].copy_from_slice(out_h.row(t));
+            }
+        }
+
+        // attention output projection + residual
+        let mut proj = Mat::zeros(n, d);
+        par_rowwise(&mut proj, threads, |t, row| {
+            row.copy_from_slice(&layer.wo.t_matvec(heads_out.row(t)));
+        });
+        x.add_scaled(1.0, &proj);
+
+        // SwiGLU FFN + residual, position-parallel
+        let mut delta = Mat::zeros(n, d);
+        par_rowwise(&mut delta, threads, |t, row| {
+            let mut ht = vec![0f32; d];
+            rmsnorm(x.row(t), &layer.norm2, &mut ht);
+            let gate = layer.w_gate.t_matvec(&ht);
+            let up = layer.w_up.t_matvec(&ht);
+            let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
+            row.copy_from_slice(&layer.w_down.t_matvec(&act));
+        });
+        x.add_scaled(1.0, &delta);
+    }
+    // final norm
+    let mut out = Mat::zeros(n, d);
+    par_rowwise(&mut out, threads, |t, row| rmsnorm(x.row(t), &model.norm_f, row));
+    out
+}
+
+/// Run `f(row_index, out_row)` over `out`'s rows on up to `threads`
+/// contiguous row bands (the position-wise counterpart of the per-chunk
+/// partitioning in [`scan`]).
+fn par_rowwise<F>(out: &mut Mat<f32>, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Send + Sync,
+{
+    let (n, cols) = (out.rows, out.cols);
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1);
+    let per = n.div_ceil(threads);
+    let mut bands = Vec::with_capacity(threads);
+    let mut rest = out.data.as_mut_slice();
+    let mut start = 0usize;
+    while start < n {
+        let take = per.min(n - start);
+        let (band, tail) = rest.split_at_mut(take * cols);
+        bands.push((start, band));
+        rest = tail;
+        start += take;
+    }
+    parallel_chunks(bands, threads, |_, (start, band)| {
+        for (i, row) in band.chunks_mut(cols).enumerate() {
+            f(*start + i, row);
+        }
+    });
+}
+
+/// Coordinator-facing prefill runner: ingests a lane's prompt on the
+/// pure-Rust twin of the artifact model and lands the state back in the
+/// lane's component-layout tensors (`StatePool` / state-literal slices).
+pub struct Prefiller {
+    model: RustModel,
+    cfg: PrefillCfg,
+}
+
+impl Prefiller {
+    /// Validates up front that the mixer is scannable and that the model
+    /// config's `state_paths` carry the mixer's full state (so lane
+    /// round-trips are lossless) — a mismatch fails here, at attach time,
+    /// instead of corrupting a lane at admission time.
+    pub fn new(model: RustModel, cfg: PrefillCfg) -> Result<Prefiller> {
+        ensure!(
+            supports_scan(&model.cfg.mixer),
+            "mixer {:?} has no segment monoid; keep decode-as-prefill",
+            model.cfg.mixer
+        );
+        ModelState::new(&model.cfg).to_components(&model.cfg)?;
+        Ok(Prefiller { model, cfg })
+    }
+
+    /// Build from the artifact's parameter tensors (the coordinator path).
+    pub fn from_param_tensors(
+        mc: &ModelCfg,
+        tensors: &[Tensor],
+        cfg: PrefillCfg,
+    ) -> Result<Prefiller> {
+        Prefiller::new(RustModel::from_tensors(mc, tensors)?, cfg)
+    }
+
+    pub fn model(&self) -> &RustModel {
+        &self.model
+    }
+
+    pub fn cfg(&self) -> &PrefillCfg {
+        &self.cfg
+    }
+
+    /// Ingest all but the final prompt token into a lane state (fresh, or
+    /// restored from `resume` component tensors).  Returns the post-prompt
+    /// component tensors and the number of tokens consumed; the caller
+    /// advances the lane cursor by that count so the final token flows
+    /// through the normal batched decode step (which samples the first
+    /// token through the unchanged path).
+    pub fn ingest_lane(
+        &self,
+        resume: Option<&[Tensor]>,
+        prompt: &[u8],
+    ) -> Result<(Vec<Tensor>, usize)> {
+        ensure!(prompt.len() >= 2, "prompt of {} token(s): nothing to prefill", prompt.len());
+        let mc = &self.model.cfg;
+        let mut state = ModelState::new(mc);
+        if let Some(parts) = resume {
+            state.load_components(mc, parts)?;
+        }
+        let consumed = prompt.len() - 1;
+        advance(&self.model, &mut state, &prompt[..consumed], &self.cfg);
+        Ok((state.to_components(mc)?, consumed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_normalizes_knobs() {
+        let s = PrefillCfg::scan(0, 3);
+        assert_eq!(s.chunk, 1);
+        assert_eq!(s.threads, 3);
+        let auto = PrefillCfg::scan(16, 0);
+        assert!(auto.threads >= 1);
+        assert_eq!(PrefillCfg::serial().mode, PrefillMode::Serial);
+    }
+
+    #[test]
+    fn scan_support_by_mixer() {
+        for m in ["hla2", "ahla", "hla3", "linear"] {
+            assert!(supports_scan(m), "{m}");
+        }
+        assert!(!supports_scan("softmax"));
+    }
+}

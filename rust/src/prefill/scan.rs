@@ -1,0 +1,354 @@
+//! Per-head chunk-parallel mixer scans with a non-identity initial state —
+//! the serving-path counterpart of `hla::chunk`'s training drivers.
+//!
+//! Hot-path layout (rust/DESIGN.md §Perf): chunk summaries are built by
+//! serial rank-1 stepping (not per-token monoid materialization), the
+//! exclusive Blelloch scan runs over the B_c summaries only, the lane's
+//! incoming state is folded in as the scan's left-most segment (exact per
+//! Thm 4.1 / Remark 4.2, including the decayed-carry erratum #2 — the
+//! monoids already encode it), and each chunk then serial-steps from its
+//! carried-in state.  Each function advances `st` to the post-sequence
+//! state and returns the per-token head outputs `[n, dv]`.
+
+use crate::attention::{LinearAttnState, LinearSeg};
+use crate::hla::ahla::{AhlaState, SegA};
+use crate::hla::chunk::parallel_chunks;
+use crate::hla::monoid2::Seg2;
+use crate::hla::monoid3::Seg3Decay;
+use crate::hla::scan::{blelloch_exclusive, Monoid};
+use crate::hla::state2::Hla2State;
+use crate::hla::state3::Hla3State;
+use crate::hla::HlaOptions;
+use crate::tensor::{ops, Mat};
+
+/// Split `out`'s rows into per-chunk bands paired with end-state slots.
+fn bands<'a, S>(
+    out: &'a mut Mat<f32>,
+    ends: &'a mut [Option<S>],
+    n: usize,
+    chunk: usize,
+    dv: usize,
+) -> Vec<(usize, &'a mut [f32], &'a mut Option<S>)> {
+    let nc = ends.len();
+    let mut items = Vec::with_capacity(nc);
+    let mut rest = out.data.as_mut_slice();
+    for (c, end) in ends.iter_mut().enumerate() {
+        let lo = c * chunk;
+        let hi = (lo + chunk).min(n);
+        let (band, tail) = rest.split_at_mut((hi - lo) * dv);
+        items.push((c, band, end));
+        rest = tail;
+    }
+    items
+}
+
+/// Chunk-parallel masked second-order prefill scan from `st`.
+pub fn scan_hla2(
+    st: &mut Hla2State<f32>,
+    q: &Mat<f32>,
+    k: &Mat<f32>,
+    v: &Mat<f32>,
+    opts: &HlaOptions<f32>,
+    chunk: usize,
+    threads: usize,
+) -> Mat<f32> {
+    let n = q.rows;
+    let (d, dv) = (q.cols, v.cols);
+    let mut out = Mat::zeros(n, dv);
+    if n == 0 {
+        return out;
+    }
+    let nc = n.div_ceil(chunk);
+
+    // phase 1: chunk summaries via serial stepping (rank-1 updates only)
+    let mut summaries: Vec<Option<Seg2<f32>>> = vec![None; nc];
+    {
+        let slots: Vec<_> = summaries.iter_mut().collect();
+        parallel_chunks(slots, threads, |c, slot| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut s = Hla2State::new(d, dv);
+            let mut stp = Mat::zeros(d, d); // plain S-tilde
+            let mut rho = 1f32;
+            for t in lo..hi {
+                s.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                stp.add_outer(1.0, k.row(t), k.row(t));
+                rho *= opts.gamma;
+            }
+            **slot = Some(Seg2 { s: s.s, c: s.c, m: s.m, g: s.g, h: s.h, st: stp, rho });
+        });
+    }
+    let summaries: Vec<Seg2<f32>> = summaries.into_iter().map(|s| s.unwrap()).collect();
+
+    // phase 2: exclusive scan + fold the lane state in on the left
+    let init = Seg2::from_state(st);
+    let carries: Vec<Seg2<f32>> =
+        blelloch_exclusive(&summaries).iter().map(|c| init.combine(c)).collect();
+
+    // phase 3: per-chunk serial recurrence from the carried-in state
+    let mut ends: Vec<Option<Hla2State<f32>>> = vec![None; nc];
+    {
+        let items = bands(&mut out, &mut ends, n, chunk, dv);
+        parallel_chunks(items, threads, |_, (c, band, end)| {
+            let c = *c;
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut s = carries[c].as_state();
+            for (i, t) in (lo..hi).enumerate() {
+                s.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                let o = s.output(q.row(t), opts);
+                band[i * dv..(i + 1) * dv].copy_from_slice(&o);
+            }
+            **end = Some(s);
+        });
+    }
+    *st = ends.pop().unwrap().unwrap();
+    out
+}
+
+/// Chunk-parallel AHLA prefill scan from `st`.
+pub fn scan_ahla(
+    st: &mut AhlaState<f32>,
+    q: &Mat<f32>,
+    k: &Mat<f32>,
+    v: &Mat<f32>,
+    opts: &HlaOptions<f32>,
+    chunk: usize,
+    threads: usize,
+) -> Mat<f32> {
+    let n = q.rows;
+    let (d, dv) = (q.cols, v.cols);
+    let mut out = Mat::zeros(n, dv);
+    if n == 0 {
+        return out;
+    }
+    let nc = n.div_ceil(chunk);
+    let mut summaries: Vec<Option<SegA<f32>>> = vec![None; nc];
+    {
+        let slots: Vec<_> = summaries.iter_mut().collect();
+        parallel_chunks(slots, threads, |c, slot| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut s = AhlaState::new(d, dv);
+            let mut r = Mat::zeros(d, d); // plain R^KQ
+            let mut rho = 1f32;
+            for t in lo..hi {
+                s.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                r.add_outer(1.0, k.row(t), q.row(t));
+                rho *= opts.gamma;
+            }
+            **slot = Some(SegA { r, p: s.p, m: s.m, e: s.e, n: s.n, rho });
+        });
+    }
+    let summaries: Vec<SegA<f32>> = summaries.into_iter().map(|s| s.unwrap()).collect();
+    let init = SegA::from_state(st);
+    let carries: Vec<SegA<f32>> =
+        blelloch_exclusive(&summaries).iter().map(|c| init.combine(c)).collect();
+    let mut ends: Vec<Option<AhlaState<f32>>> = vec![None; nc];
+    {
+        let items = bands(&mut out, &mut ends, n, chunk, dv);
+        parallel_chunks(items, threads, |_, (c, band, end)| {
+            let c = *c;
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut s = carries[c].as_state();
+            for (i, t) in (lo..hi).enumerate() {
+                s.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                let o = s.output(q.row(t), opts);
+                band[i * dv..(i + 1) * dv].copy_from_slice(&o);
+            }
+            **end = Some(s);
+        });
+    }
+    *st = ends.pop().unwrap().unwrap();
+    out
+}
+
+/// Chunk-parallel canonical third-order prefill scan from `st` (any γ,
+/// via the decayed [`Seg3Decay`] monoid).
+pub fn scan_hla3(
+    st: &mut Hla3State<f32>,
+    q: &Mat<f32>,
+    k: &Mat<f32>,
+    v: &Mat<f32>,
+    opts: &HlaOptions<f32>,
+    chunk: usize,
+    threads: usize,
+) -> Mat<f32> {
+    let n = q.rows;
+    let (d, dv) = (q.cols, v.cols);
+    let mut out = Mat::zeros(n, dv);
+    if n == 0 {
+        return out;
+    }
+    let nc = n.div_ceil(chunk);
+    let mut summaries: Vec<Option<Seg3Decay<f32>>> = vec![None; nc];
+    {
+        let slots: Vec<_> = summaries.iter_mut().collect();
+        parallel_chunks(slots, threads, |c, slot| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut s = Hla3State::new(d, dv);
+            let mut sq = Mat::zeros(d, d);
+            let mut r = Mat::zeros(d, dv);
+            let mut rv = vec![0f32; d];
+            let mut nmat = Mat::zeros(d, d);
+            let mut w = 1f32; // γ^j, j = 1-based position within the chunk
+            for t in lo..hi {
+                s.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                let qt = q.row(t);
+                w *= opts.gamma;
+                sq.add_outer(w, qt, qt);
+                // cross stats read the *local inclusive* state (post-step)
+                let qp = s.p.t_matvec(qt);
+                r.add_outer(1.0, qt, &qp);
+                let qm = ops::dot(qt, &s.m);
+                ops::axpy(qm, qt, &mut rv);
+                let sqv = s.s.matvec(qt);
+                nmat.add_outer(1.0, &sqv, qt);
+            }
+            **slot = Some(Seg3Decay {
+                s: s.s,
+                sq,
+                p: s.p,
+                m: s.m,
+                f: s.f,
+                eta: s.eta,
+                r,
+                rv,
+                nmat,
+                rho: w,
+            });
+        });
+    }
+    let summaries: Vec<Seg3Decay<f32>> = summaries.into_iter().map(|s| s.unwrap()).collect();
+    let init = Seg3Decay::from_state(st);
+    let carries: Vec<Seg3Decay<f32>> =
+        blelloch_exclusive(&summaries).iter().map(|c| init.combine(c)).collect();
+    let mut ends: Vec<Option<Hla3State<f32>>> = vec![None; nc];
+    {
+        let items = bands(&mut out, &mut ends, n, chunk, dv);
+        parallel_chunks(items, threads, |_, (c, band, end)| {
+            let c = *c;
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut s = carries[c].as_state();
+            for (i, t) in (lo..hi).enumerate() {
+                s.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+                let o = s.output(q.row(t), opts);
+                band[i * dv..(i + 1) * dv].copy_from_slice(&o);
+            }
+            **end = Some(s);
+        });
+    }
+    *st = ends.pop().unwrap().unwrap();
+    out
+}
+
+/// Chunk-parallel first-order linear-attention prefill scan from `st`.
+pub fn scan_linear(
+    st: &mut LinearAttnState<f32>,
+    q: &Mat<f32>,
+    k: &Mat<f32>,
+    v: &Mat<f32>,
+    opts: &HlaOptions<f32>,
+    chunk: usize,
+    threads: usize,
+) -> Mat<f32> {
+    let n = q.rows;
+    let (d, dv) = (q.cols, v.cols);
+    let mut out = Mat::zeros(n, dv);
+    if n == 0 {
+        return out;
+    }
+    let nc = n.div_ceil(chunk);
+    let mut summaries: Vec<Option<LinearSeg<f32>>> = vec![None; nc];
+    {
+        let slots: Vec<_> = summaries.iter_mut().collect();
+        parallel_chunks(slots, threads, |c, slot| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut s = LinearAttnState::new(d, dv);
+            let mut rho = 1f32;
+            for t in lo..hi {
+                s.step(k.row(t), v.row(t), opts.gamma);
+                rho *= opts.gamma;
+            }
+            **slot = Some(LinearSeg { p: s.p, m: s.m, rho });
+        });
+    }
+    let summaries: Vec<LinearSeg<f32>> = summaries.into_iter().map(|s| s.unwrap()).collect();
+    let init = LinearSeg::from_state(st);
+    let carries: Vec<LinearSeg<f32>> =
+        blelloch_exclusive(&summaries).iter().map(|c| init.combine(c)).collect();
+    let mut ends: Vec<Option<LinearAttnState<f32>>> = vec![None; nc];
+    {
+        let items = bands(&mut out, &mut ends, n, chunk, dv);
+        parallel_chunks(items, threads, |_, (c, band, end)| {
+            let c = *c;
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut s = carries[c].as_state();
+            for (i, t) in (lo..hi).enumerate() {
+                s.step(k.row(t), v.row(t), opts.gamma);
+                let o = s.output(q.row(t), opts.norm, opts.eps);
+                band[i * dv..(i + 1) * dv].copy_from_slice(&o);
+            }
+            **end = Some(s);
+        });
+    }
+    *st = ends.pop().unwrap().unwrap();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, n: usize, d: usize) -> Mat<f32> {
+        let mut m = Mat::zeros(n, d);
+        let s = 1.0 / (d as f64).sqrt();
+        for x in &mut m.data {
+            *x = (rng.normal() * s) as f32;
+        }
+        m
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let denom = 1f32.max(x.abs()).max(y.abs());
+            assert!((x - y).abs() / denom < tol, "{what}: idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn hla2_scan_from_state_matches_serial_f32() {
+        let mut rng = Rng::new(3);
+        let (d, dv, hist, n) = (4, 4, 9, 37);
+        let opts = HlaOptions::<f32>::default().with_gamma(0.97);
+        let (hq, hk, hv) = (random(&mut rng, hist, d), random(&mut rng, hist, d), random(&mut rng, hist, dv));
+        let (q, k, v) = (random(&mut rng, n, d), random(&mut rng, n, d), random(&mut rng, n, dv));
+        let mut st = Hla2State::<f32>::new(d, dv);
+        for t in 0..hist {
+            st.step(hq.row(t), hk.row(t), hv.row(t), opts.gamma);
+        }
+        // serial reference from the same restored state
+        let mut serial = st.clone();
+        let mut want = Mat::zeros(n, dv);
+        for t in 0..n {
+            serial.step(q.row(t), k.row(t), v.row(t), opts.gamma);
+            want.row_mut(t).copy_from_slice(&serial.output(q.row(t), &opts));
+        }
+        for chunk in [1usize, 5, 16, 64] {
+            for threads in [1usize, 4] {
+                let mut scanned = st.clone();
+                let got = scan_hla2(&mut scanned, &q, &k, &v, &opts, chunk, threads);
+                close(&got.data, &want.data, 1e-3, &format!("out w={chunk} th={threads}"));
+                close(&scanned.s.data, &serial.s.data, 1e-3, "end S");
+                close(&scanned.g.data, &serial.g.data, 1e-3, "end G");
+            }
+        }
+    }
+}

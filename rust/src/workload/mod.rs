@@ -35,26 +35,37 @@ impl Arrivals {
     }
 }
 
-/// Prompt/output length distribution (log-normal-ish, clamped).
+/// Prompt/output length distribution (log-normal, clamped).  `sigma` is
+/// the tail knob: 0.5 reproduces the historical traces; larger values
+/// fatten the right tail (the long-prompt scenarios of E8c/E14 use ~1.0,
+/// where p99 prompts run several times the median).
 #[derive(Debug, Clone, Copy)]
 pub struct Lengths {
     pub mean_prompt: usize,
     pub mean_output: usize,
     pub min: usize,
     pub max: usize,
+    /// log-normal shape parameter (tail heaviness)
+    pub sigma: f64,
 }
 
 impl Default for Lengths {
     fn default() -> Self {
-        Lengths { mean_prompt: 32, mean_output: 32, min: 4, max: 256 }
+        Lengths { mean_prompt: 32, mean_output: 32, min: 4, max: 256, sigma: 0.5 }
     }
 }
 
 impl Lengths {
+    /// A heavy-tailed long-prompt distribution: median well below the
+    /// mean, p99 near `max` — the regime where scan prefill pays off.
+    pub fn long_prompts(mean_prompt: usize, sigma: f64, max: usize) -> Lengths {
+        Lengths { mean_prompt, mean_output: 32, min: 16, max, sigma }
+    }
+
     fn sample(&self, mean: usize, rng: &mut Rng) -> usize {
-        // log-normal with sigma 0.5 around the mean
-        let mu = (mean as f64).ln() - 0.125;
-        let x = (mu + 0.5 * rng.normal()).exp();
+        // log-normal with E[x] = mean: mu = ln(mean) - sigma^2/2
+        let mu = (mean as f64).ln() - self.sigma * self.sigma / 2.0;
+        let x = (mu + self.sigma * rng.normal()).exp();
         (x.round() as usize).clamp(self.min, self.max)
     }
 
@@ -148,6 +159,43 @@ impl Trace {
             })
             .collect();
         Trace { items, mix }
+    }
+
+    /// The long-prompt scenario (E8c / E14): heavy-tailed log-normal
+    /// prompt lengths with a knob-controlled tail (`sigma`), short
+    /// outputs — prompt ingestion dominates, which is exactly where
+    /// decode-as-prefill's O(prompt) TTFT hurts and the chunked scan
+    /// prefill pays.  Prompts wrap around the corpus so the tail is not
+    /// silently clipped by corpus length.
+    pub fn synthesize_long_prompts(
+        n: usize,
+        arrivals: Arrivals,
+        mean_prompt: usize,
+        sigma: f64,
+        max_prompt: usize,
+        corpus: &[u8],
+        seed: u64,
+    ) -> Trace {
+        let lengths = Lengths::long_prompts(mean_prompt, sigma, max_prompt);
+        let mut rng = Rng::new(seed);
+        let times = arrivals.times(n, &mut rng);
+        let items = times
+            .into_iter()
+            .map(|at_s| {
+                let plen = lengths.prompt(&mut rng);
+                let start = rng.below(corpus.len().max(1));
+                let prompt: Vec<u8> =
+                    corpus.iter().cycle().skip(start).take(plen).copied().collect();
+                TraceItem {
+                    at_s,
+                    prompt,
+                    max_new_tokens: lengths.output(&mut rng),
+                    session: None,
+                    resume: false,
+                }
+            })
+            .collect();
+        Trace { items, mix: SessionMix { n_sessions: 0, resume_prob: 0.0 } }
     }
 
     /// A multi-turn-conversation scenario: `n_sessions` conversations of
@@ -265,11 +313,49 @@ mod tests {
     #[test]
     fn lengths_respect_bounds() {
         let mut rng = Rng::new(2);
-        let l = Lengths { mean_prompt: 32, mean_output: 64, min: 8, max: 128 };
+        let l = Lengths { mean_prompt: 32, mean_output: 64, min: 8, max: 128, sigma: 0.5 };
         for _ in 0..500 {
             let p = l.prompt(&mut rng);
             assert!((8..=128).contains(&p), "{p}");
         }
+    }
+
+    #[test]
+    fn sigma_knob_controls_the_prompt_tail() {
+        let quantiles = |sigma: f64| -> (usize, usize) {
+            let mut rng = Rng::new(3);
+            let l = Lengths::long_prompts(256, sigma, 1 << 14);
+            let mut xs: Vec<usize> = (0..2000).map(|_| l.prompt(&mut rng)).collect();
+            xs.sort_unstable();
+            (xs[xs.len() / 2], xs[xs.len() * 99 / 100])
+        };
+        let (med_light, p99_light) = quantiles(0.4);
+        let (med_heavy, p99_heavy) = quantiles(1.2);
+        let ratio_light = p99_light as f64 / med_light as f64;
+        let ratio_heavy = p99_heavy as f64 / med_heavy as f64;
+        assert!(
+            ratio_heavy > 2.0 * ratio_light,
+            "tail knob inert: {ratio_light:.2} vs {ratio_heavy:.2}"
+        );
+    }
+
+    #[test]
+    fn long_prompt_scenario_wraps_the_corpus() {
+        let corpus = b"0123456789";
+        let t = Trace::synthesize_long_prompts(
+            50,
+            Arrivals::Burst,
+            64,
+            1.0,
+            512,
+            corpus,
+            11,
+        );
+        assert_eq!(t.items.len(), 50);
+        // prompts can exceed the 10-byte corpus thanks to wrap-around
+        assert!(t.items.iter().any(|it| it.prompt.len() > corpus.len()));
+        assert!(t.items.iter().all(|it| it.prompt.len() >= 16 && it.prompt.len() <= 512));
+        assert!(t.items.iter().all(|it| !it.resume && it.session.is_none()));
     }
 
     #[test]

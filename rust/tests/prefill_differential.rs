@@ -1,0 +1,278 @@
+//! Differential acceptance test for the chunk-parallel prefill engine:
+//! for random prompts, scan-based prefill must produce lane state and the
+//! first sampled token identical to decode-as-prefill — fresh lanes and
+//! resumed sessions, for second order, AHLA, third order and the linear
+//! baseline.  Runs artifact-free on the pure-Rust model, like
+//! `session_resume.rs`.
+//!
+//! "Identical" is exact for the sampled token (greedy argmax) and up to
+//! f32 reassociation for the state floats: the scan reorders the same
+//! additions Theorem 4.1 licenses, so the relative-diff distribution sits
+//! at f32 noise (median ≲ 1e-6; compared by quantiles because the
+//! abs-normalized outputs amplify noise wherever |den| ~ 0) while the
+//! serial path stays the bit-exact reference.
+
+use hla::model::sampler::argmax;
+use hla::model::{ModelState, RustModel};
+use hla::prefill::{advance, forward_logits, ingest, PrefillCfg};
+use hla::runtime::Manifest;
+use hla::util::rng::Rng;
+
+const CFG_TEMPLATE: &str = r#"{
+  "configs": {"t": {"vocab": 64, "d_model": 16, "n_layers": 2,
+    "n_heads": 2, "head_dim": 8, "d_ffn": 32, "kv_heads": 2,
+    "mixer": "MIXER", "chunk": 8, "gamma": GAMMA, "lam": 0.0,
+    "norm_mode": "abs", "eps": 1e-6, "n_params": 4000,
+    "n_param_tensors": 20, "n_state_tensors": 2,
+    "param_paths": [
+      ["['embed']", [64, 16]],
+      ["['norm_f']", [16]],
+      ["['layers'][0]['norm1']", [16]],
+      ["['layers'][0]['wq']", [16, 16]],
+      ["['layers'][0]['wk']", [16, 16]],
+      ["['layers'][0]['wv']", [16, 16]],
+      ["['layers'][0]['wo']", [16, 16]],
+      ["['layers'][0]['norm2']", [16]],
+      ["['layers'][0]['w_gate']", [16, 32]],
+      ["['layers'][0]['w_up']", [16, 32]],
+      ["['layers'][0]['w_down']", [32, 16]],
+      ["['layers'][1]['norm1']", [16]],
+      ["['layers'][1]['wq']", [16, 16]],
+      ["['layers'][1]['wk']", [16, 16]],
+      ["['layers'][1]['wv']", [16, 16]],
+      ["['layers'][1]['wo']", [16, 16]],
+      ["['layers'][1]['norm2']", [16]],
+      ["['layers'][1]['w_gate']", [16, 32]],
+      ["['layers'][1]['w_up']", [16, 32]],
+      ["['layers'][1]['w_down']", [32, 16]]],
+    "state_paths": [["['c']", [2, 1, 2, 8, 8]], ["['m']", [2, 1, 2, 8]]],
+    "train_batch": 1, "train_seq": 8, "decode_batch": 1,
+    "prefill_len": 8}},
+  "artifacts": {}
+}"#;
+
+fn build_model(mixer: &str, gamma: f64, seed: u64) -> RustModel {
+    let json = CFG_TEMPLATE.replace("MIXER", mixer).replace("GAMMA", &gamma.to_string());
+    let cfg = Manifest::parse(&json).unwrap().configs["t"].clone();
+    let mut rng = Rng::new(seed);
+    let tensors: Vec<hla::tensor::Tensor> = cfg
+        .param_paths
+        .iter()
+        .map(|(_, shape)| {
+            let mut t = hla::tensor::Tensor::zeros(shape);
+            if shape.len() == 1 {
+                for x in &mut t.data {
+                    *x = 1.0 + 0.1 * rng.normal() as f32;
+                }
+            } else {
+                rng.fill_normal(&mut t.data, 0.3);
+            }
+            t
+        })
+        .collect();
+    RustModel::from_tensors(&cfg, &tensors).unwrap()
+}
+
+fn random_prompt(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| (rng.below(64)) as u8).collect()
+}
+
+/// Relative closeness for f32 slices, judged by quantiles: the model's
+/// abs-normalized mixer outputs amplify f32 reassociation noise wherever
+/// |den| ~ 0 (same reason the kernel-artifact test compares by quantiles),
+/// so a rare position may drift while the distribution stays tight.
+fn assert_quantile_close(diffs: &mut [f32], what: &str) {
+    assert!(!diffs.is_empty(), "{what}: nothing compared");
+    diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| diffs[(p * (diffs.len() - 1) as f64) as usize];
+    assert!(q(0.5) < 1e-4, "{what}: median rel diff {}", q(0.5));
+    assert!(q(0.99) < 2e-2, "{what}: p99 rel diff {}", q(0.99));
+}
+
+/// Relative closeness for f32 state vectors (scan reassociation noise).
+fn assert_state_close(a: &ModelState, b: &ModelState, what: &str) {
+    let mut diffs = vec![];
+    for (i, (ha, hb)) in a.layers.iter().flatten().zip(b.layers.iter().flatten()).enumerate() {
+        let va = ha.state_vec().unwrap();
+        let vb = hb.state_vec().unwrap();
+        assert_eq!(va.len(), vb.len(), "{what}: head {i} arity");
+        for (x, y) in va.iter().zip(&vb) {
+            let denom = 1f32.max(x.abs()).max(y.abs());
+            diffs.push((x - y).abs() / denom);
+        }
+    }
+    assert_quantile_close(&mut diffs, what);
+}
+
+/// The coordinator's two prompt paths, side by side: decode-as-prefill
+/// (serial decode_step over the prompt) vs scan prefill of prompt[..n-1]
+/// followed by one normal decode step on the final token.
+fn differential(model: &RustModel, prompt: &[u8], chunk: usize, threads: usize, what: &str) {
+    // path A: decode-as-prefill
+    let mut state_a = ModelState::new(&model.cfg);
+    let logits_a = ingest(model, &mut state_a, prompt, &PrefillCfg::serial());
+    // path B: scan prefill all but the last token, then a decode step
+    let mut state_b = ModelState::new(&model.cfg);
+    advance(model, &mut state_b, &prompt[..prompt.len() - 1], &PrefillCfg::scan(chunk, threads));
+    let logits_b = model.decode_step(&mut state_b, prompt[prompt.len() - 1]);
+    assert_state_close(&state_a, &state_b, what);
+    assert_eq!(
+        argmax(&logits_a),
+        argmax(&logits_b),
+        "{what}: first sampled token diverged"
+    );
+}
+
+#[test]
+fn scan_prefill_matches_decode_as_prefill_fresh_lanes() {
+    let mut rng = Rng::new(41);
+    for mixer in ["hla2", "ahla", "hla3", "linear"] {
+        let model = build_model(mixer, 0.98, 17);
+        for n in [2usize, 9, 64, 193] {
+            let prompt = random_prompt(&mut rng, n);
+            for (chunk, threads) in [(1usize, 1usize), (7, 3), (32, 4), (256, 2)] {
+                differential(&model, &prompt, chunk, threads, &format!("{mixer} n={n} w={chunk}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn scan_prefill_matches_decode_as_prefill_gamma_one_third_order() {
+    let mut rng = Rng::new(43);
+    let model = build_model("hla3", 1.0, 19);
+    let prompt = random_prompt(&mut rng, 80);
+    for (chunk, threads) in [(1usize, 1usize), (16, 4), (128, 2)] {
+        differential(&model, &prompt, chunk, threads, &format!("hla3 g=1 w={chunk}"));
+    }
+}
+
+#[test]
+fn scan_prefill_matches_decode_as_prefill_resumed_sessions() {
+    // a resumed lane's restored state enters the scan as the non-identity
+    // initial segment; the new turn's prompt must land the same state and
+    // token as serially decoding it from the restored state
+    let mut rng = Rng::new(47);
+    for mixer in ["hla2", "ahla", "hla3", "linear"] {
+        let model = build_model(mixer, 0.98, 29);
+        // first turn: serial, shared by both paths (this is the snapshot)
+        let mut restored = ModelState::new(&model.cfg);
+        let turn1 = random_prompt(&mut rng, 57);
+        advance(&model, &mut restored, &turn1, &PrefillCfg::serial());
+        let turn2 = random_prompt(&mut rng, 91);
+
+        let mut state_a = restored.clone();
+        let logits_a = ingest(&model, &mut state_a, &turn2, &PrefillCfg::serial());
+        let mut state_b = restored.clone();
+        advance(&model, &mut state_b, &turn2[..turn2.len() - 1], &PrefillCfg::scan(16, 4));
+        let logits_b = model.decode_step(&mut state_b, turn2[turn2.len() - 1]);
+
+        assert_state_close(&state_a, &state_b, &format!("{mixer} resumed"));
+        assert_eq!(argmax(&logits_a), argmax(&logits_b), "{mixer}: resumed token diverged");
+    }
+}
+
+#[test]
+fn forward_scan_matches_forward_serial() {
+    // Model::forward now routes through the prefill engine; the serial
+    // fallback is the differential baseline (teacher-forced logits)
+    let mut rng = Rng::new(53);
+    for mixer in ["hla2", "ahla", "hla3", "linear"] {
+        let model = build_model(mixer, 0.98, 31);
+        let tokens = random_prompt(&mut rng, 70);
+        let scan = model.forward(&tokens);
+        let serial = model.forward_serial(&tokens);
+        assert_eq!(scan.rows, serial.rows);
+        let mut diffs: Vec<f32> = scan
+            .data
+            .iter()
+            .zip(&serial.data)
+            .map(|(a, b)| (a - b).abs() / 1f32.max(a.abs()).max(b.abs()))
+            .collect();
+        assert_quantile_close(&mut diffs, &format!("{mixer} forward"));
+        // softmax mixers have no monoid: forward must fall back serially
+        // and stay exactly equal
+        let sm = build_model("softmax", 1.0, 31);
+        let a = sm.forward(&tokens[..20]);
+        let b = sm.forward_serial(&tokens[..20]);
+        assert_eq!(a.data, b.data, "softmax forward must be the serial path");
+    }
+}
+
+#[test]
+fn prefiller_lands_lane_components_and_leaves_final_token() {
+    use hla::prefill::Prefiller;
+    // a manifest whose state_paths cover the full hla2 state
+    let json = CFG_TEMPLATE
+        .replace("MIXER", "hla2")
+        .replace("GAMMA", "0.98")
+        .replace(
+            r#""state_paths": [["['c']", [2, 1, 2, 8, 8]], ["['m']", [2, 1, 2, 8]]]"#,
+            r#""state_paths": [["['s']", [2, 1, 2, 8, 8]], ["['c']", [2, 1, 2, 8, 8]],
+              ["['m']", [2, 1, 2, 8]], ["['g']", [2, 1, 2, 8, 8]], ["['h']", [2, 1, 2, 8]]]"#,
+        );
+    let cfg = Manifest::parse(&json).unwrap().configs["t"].clone();
+    let mut rng = Rng::new(61);
+    let tensors: Vec<hla::tensor::Tensor> = cfg
+        .param_paths
+        .iter()
+        .map(|(_, shape)| {
+            let mut t = hla::tensor::Tensor::zeros(shape);
+            if shape.len() == 1 {
+                for x in &mut t.data {
+                    *x = 1.0 + 0.1 * rng.normal() as f32;
+                }
+            } else {
+                rng.fill_normal(&mut t.data, 0.3);
+            }
+            t
+        })
+        .collect();
+    let model = RustModel::from_tensors(&cfg, &tensors).unwrap();
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(8, 2)).unwrap();
+
+    let prompt = random_prompt(&mut rng, 40);
+    let (parts, consumed) = pf.ingest_lane(None, &prompt).unwrap();
+    assert_eq!(consumed, prompt.len() - 1, "final token stays with the lane");
+    assert_eq!(parts.len(), cfg.state_paths.len());
+
+    // the landed components equal the serial state over the same tokens
+    let mut want = ModelState::new(&cfg);
+    advance(&model, &mut want, &prompt[..consumed], &PrefillCfg::serial());
+    let mut got = ModelState::new(&cfg);
+    got.load_components(&cfg, &parts).unwrap();
+    assert_state_close(&want, &got, "prefilled lane components");
+
+    // resume: the components round-trip back in as the initial segment
+    let turn2 = random_prompt(&mut rng, 33);
+    let (parts2, consumed2) = pf.ingest_lane(Some(&parts), &turn2).unwrap();
+    assert_eq!(consumed2, turn2.len() - 1);
+    let mut want2 = got.clone();
+    advance(&model, &mut want2, &turn2[..consumed2], &PrefillCfg::serial());
+    let mut got2 = ModelState::new(&cfg);
+    got2.load_components(&cfg, &parts2).unwrap();
+    assert_state_close(&want2, &got2, "resumed lane components");
+
+    // single-token prompts have nothing to prefill
+    assert!(pf.ingest_lane(None, &prompt[..1]).is_err());
+}
+
+#[test]
+fn forward_logits_shares_one_prompt_loop() {
+    // the dedup check: forward_logits over a prompt then one decode_step
+    // equals ingest over prompt+token — both route through prefill
+    let model = build_model("hla2", 0.98, 37);
+    let mut rng = Rng::new(59);
+    let prompt = random_prompt(&mut rng, 30);
+    let cfg = PrefillCfg::scan(8, 2);
+
+    let mut s1 = ModelState::new(&model.cfg);
+    let all = forward_logits(&model, &mut s1, &prompt, &cfg);
+    let mut s2 = ModelState::new(&model.cfg);
+    let last = ingest(&model, &mut s2, &prompt, &cfg);
+    for (a, b) in all.row(prompt.len() - 1).iter().zip(&last) {
+        let denom = 1f32.max(a.abs()).max(b.abs());
+        assert!((a - b).abs() / denom < 1e-5, "{a} vs {b}");
+    }
+    assert_state_close(&s1, &s2, "forward vs ingest state");
+}
