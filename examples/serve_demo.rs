@@ -20,6 +20,18 @@
 //! fork:    {"session": 2, "fork_of": 1, "seed": 7}
 //!          -> session 1's snapshot is copied to 2 (O(state), not
 //!             O(context)) and generation resumes the fork
+//! spec:    {"prompt": "hello", "max_tokens": 32, "spec": true}
+//!          -> opt into speculative draft/verify/rollback decode
+//!             (`GenOpts { spec: true, .. }` on the client).  Requires
+//!             the server side to run with a spec engine attached —
+//!             `hla serve --spec-k 4 [--spec-drafter ngram|model|
+//!             model:<cfg>]` — otherwise the flag is a no-op, not an
+//!             error.  The acceptance rule is lossless: greedy output
+//!             is byte-identical, sampled output draws from identical
+//!             distributions (see server/mod.rs for the exactness
+//!             fine print).  `hla generate --spec true` runs the same
+//!             engine one-shot and prints the accept-rate/rollback
+//!             counters.
 //! errors:  {"error": "unknown session 42"}           (resume/fork of a
 //!          session the store does not hold; nothing is generated)
 //! final:   {"done": true, "finish": "length", "n": 32,

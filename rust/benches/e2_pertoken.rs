@@ -7,7 +7,22 @@ use hla::bench::{banner, bench, black_box};
 use hla::hla::state2::Hla2State;
 use hla::hla::HlaOptions;
 use hla::metrics::Table;
+use hla::tensor::ops;
 use hla::util::rng::Rng;
+
+/// Reference scalar dot: one sequential FP dependency chain, no manual
+/// unroll — what `ops::dot` would cost if the reassociation were left to
+/// chance (LLVM may not reorder f32 adds).
+fn naive_dot(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// Reference scalar axpy, straight indexing loop.
+fn naive_axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * *xi;
+    }
+}
 
 fn main() {
     banner("E2", "per-token cost vs context length (HLA O(1) vs softmax O(t))");
@@ -50,4 +65,61 @@ fn main() {
     }
     print!("{}", table.render());
     println!("expected shape: hla2 column flat; softmax column grows ~linearly in t.");
+
+    banner("E2b", "hot-kernel microbench: unrolled ops::dot/axpy vs naive loops");
+    // dot and axpy are the inner loops of every matvec / rank-1 state
+    // update, i.e. the per-token cost above and the chunked verify /
+    // prefill scans are made of them.  Measure the 8-wide unroll against
+    // the naive loop instead of assuming it pays (ops.rs points here).
+    let mut rng = Rng::new(3);
+    let mut table =
+        Table::new(&["n", "dot ns", "naive dot ns", "dot gain", "axpy ns", "naive axpy ns", "axpy gain"]);
+    for n in [16usize, 64, 256, 1024, 4096] {
+        let mut x = vec![0f32; n];
+        let mut y = vec![0f32; n];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut y, 1.0);
+        // amortize timer resolution: many calls per measured iteration
+        let reps = (1 << 16) / n.max(1);
+        let s_dot = bench(3, 30, || {
+            let mut acc = 0f32;
+            for _ in 0..reps {
+                acc += ops::dot(black_box(&x[..]), black_box(&y[..]));
+            }
+            black_box(acc);
+        });
+        let s_naive_dot = bench(3, 30, || {
+            let mut acc = 0f32;
+            for _ in 0..reps {
+                acc += naive_dot(black_box(&x[..]), black_box(&y[..]));
+            }
+            black_box(acc);
+        });
+        let s_axpy = bench(3, 30, || {
+            for _ in 0..reps {
+                ops::axpy(1.0e-6f32, black_box(&x[..]), black_box(&mut y[..]));
+            }
+            black_box(&y);
+        });
+        let s_naive_axpy = bench(3, 30, || {
+            for _ in 0..reps {
+                naive_axpy(1.0e-6f32, black_box(&x[..]), black_box(&mut y[..]));
+            }
+            black_box(&y);
+        });
+        let per = |s: &hla::bench::Stats| s.mean_s * 1e9 / reps as f64;
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", per(&s_dot)),
+            format!("{:.1}", per(&s_naive_dot)),
+            format!("{:.2}x", per(&s_naive_dot) / per(&s_dot)),
+            format!("{:.1}", per(&s_axpy)),
+            format!("{:.1}", per(&s_naive_axpy)),
+            format!("{:.2}x", per(&s_naive_axpy) / per(&s_axpy)),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("expected shape: dot gains most (the unroll breaks the f32 add dependency");
+    println!("chain); axpy gains less (elementwise, vectorizable either way).  Gains");
+    println!("should widen with n until memory bandwidth takes over.");
 }

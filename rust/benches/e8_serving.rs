@@ -34,7 +34,7 @@ fn run_trace_load(
     let (tx, handle) = spawn_engine_full(
         artifacts,
         "micro".into(),
-        EngineOpts { policy: Some(policy), seed: 0, store: None, prefill },
+        EngineOpts { policy: Some(policy), seed: 0, store: None, prefill, spec: None },
     );
     // warmup barrier: engine construction compiles the artifacts (~10s on
     // this CPU); measure serving, not startup.

@@ -19,6 +19,7 @@ use crate::coordinator::{collect_tokens, spawn_engine_full, EngineOpts, GenReque
 use crate::model::sampler::SamplerCfg;
 use crate::prefill::PrefillCfg;
 use crate::runtime::Engine;
+use crate::spec::SpecCfg;
 use crate::session::{spill_file, spill_sessions, SessionStore, StoreCfg};
 use crate::train::{train, LrSchedule, TrainOpts};
 use crate::util::human_bytes;
@@ -29,9 +30,12 @@ usage: hla <info|selftest|train|generate|serve|sessions> [--flags]
 common flags: --artifacts DIR --model NAME --seed N --config FILE.json
 train:    --steps N --lr F --warmup N --checkpoint PATH
 generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
+          --spec true [--spec-k N --spec-drafter ngram|model|model:<cfg>]
 serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
           --session-capacity N --spill-dir DIR
           --prefill-chunk N --prefill-threads N  (0 0 = decode-as-prefill)
+          --spec-k N --spec-drafter D  (spec engine; requests opt in
+          with \"spec\": true on the wire)
 sessions: <list|inspect|evict> --spill-dir DIR [--session-id N]";
 
 pub fn run(args: Vec<String>) -> Result<()> {
@@ -178,7 +182,23 @@ fn prefill_cfg(cfg: &RunConfig) -> Option<PrefillCfg> {
     (cfg.prefill_chunk > 0).then(|| PrefillCfg::scan(cfg.prefill_chunk, cfg.prefill_threads))
 }
 
+/// `--spec true` / `--spec-k N` attach the speculative decoding engine;
+/// k stays adaptive ([`crate::spec::AdaptiveK`]) with `--spec-k` as the
+/// starting draft length.  The drafter string was validated at parse time.
+fn spec_cfg(cfg: &RunConfig) -> Option<SpecCfg> {
+    (cfg.spec || cfg.spec_k > 0).then(|| {
+        let defaults = SpecCfg::default();
+        SpecCfg {
+            k: if cfg.spec_k > 0 { cfg.spec_k } else { defaults.k },
+            drafter: crate::spec::DrafterKind::parse(&cfg.spec_drafter)
+                .expect("validated by RunConfig::apply"),
+            ..defaults
+        }
+    })
+}
+
 fn cmd_generate(cfg: &RunConfig) -> Result<()> {
+    let spec = spec_cfg(cfg);
     let (tx, handle) = spawn_engine_full(
         cfg.artifacts.clone(),
         cfg.model.clone(),
@@ -187,16 +207,20 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
             seed: cfg.seed as i32,
             store: None,
             prefill: prefill_cfg(cfg),
+            spec: spec.clone(),
         },
     );
     let (etx, erx) = std::sync::mpsc::channel();
-    let req = GenRequest::new(
+    let mut req = GenRequest::new(
         1,
         cfg.prompt.as_bytes().to_vec(),
         cfg.max_tokens,
         SamplerCfg { temperature: cfg.temperature, top_k: 40, seed: cfg.seed },
         etx,
     );
+    if spec.is_some() {
+        req = req.with_spec();
+    }
     tx.send(req).ok();
     drop(tx);
     let (tokens, finish) = collect_tokens(&erx);
@@ -209,6 +233,15 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
         stats.tokens_per_sec,
         stats.step_us_p50 / 1e3
     );
+    if stats.spec_rounds > 0 {
+        println!(
+            "[spec: {} rounds, {:.2} accepted/step, accept rate {:.2}, {} rollbacks]",
+            stats.spec_rounds,
+            stats.accepted_per_step(),
+            stats.spec_accept_rate(),
+            stats.spec_rollbacks
+        );
+    }
     Ok(())
 }
 
@@ -230,6 +263,7 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
                 seed: cfg.seed as i32 + r as i32,
                 store: Some(store.clone()),
                 prefill: prefill_cfg(cfg),
+                spec: spec_cfg(cfg),
             },
         );
         senders.push(tx);
@@ -241,6 +275,16 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     match prefill_cfg(cfg) {
         Some(p) => println!("prefill: chunked scan (w={}, {} thread(s))", p.chunk, p.threads),
         None => println!("prefill: decode-as-prefill (enable with --prefill-chunk N)"),
+    }
+    match spec_cfg(cfg) {
+        Some(s) => println!(
+            "speculative decode: k={} (adaptive {}..{}), drafter {} — requests opt in with \"spec\": true",
+            s.k,
+            s.k_min,
+            s.k_max,
+            s.drafter.label()
+        ),
+        None => println!("speculative decode: off (enable with --spec-k N)"),
     }
     // the serve loop only exits on kill, so report the session-store
     // counters periodically from a daemon thread (it dies with the process)

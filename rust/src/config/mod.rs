@@ -27,6 +27,14 @@ pub struct RunConfig {
     pub prefill_chunk: usize,
     /// scan-prefill worker threads; 0 = one per available core, capped at 8
     pub prefill_threads: usize,
+    // speculative decoding (draft/verify/rollback)
+    /// initial draft length; 0 keeps the spec engine detached (serve) —
+    /// requests opt in per "spec": true once attached
+    pub spec_k: usize,
+    /// drafter: "ngram" | "model" (self-draft) | "model:<cfg>"
+    pub spec_drafter: String,
+    /// `generate --spec true`: run the one-shot generation speculatively
+    pub spec: bool,
     // sessions (snapshot/resume store)
     /// max session snapshots resident in memory before LRU eviction
     pub session_capacity: usize,
@@ -57,6 +65,9 @@ impl Default for RunConfig {
             route: RoutePolicy::LeastLoaded,
             prefill_chunk: 0,
             prefill_threads: 0,
+            spec_k: 0,
+            spec_drafter: "ngram".into(),
+            spec: false,
             session_capacity: 1024,
             spill_dir: None,
             session_id: None,
@@ -114,6 +125,14 @@ impl RunConfig {
             }
             "prefill-chunk" | "prefill_chunk" => self.prefill_chunk = value.parse()?,
             "prefill-threads" | "prefill_threads" => self.prefill_threads = value.parse()?,
+            "spec-k" | "spec_k" => self.spec_k = value.parse()?,
+            "spec-drafter" | "spec_drafter" => {
+                crate::spec::DrafterKind::parse(value).ok_or_else(|| {
+                    anyhow!("bad spec-drafter {value:?} (ngram|model|model:<cfg>)")
+                })?;
+                self.spec_drafter = value.into();
+            }
+            "spec" => self.spec = parse_bool(value)?,
             "steps" => self.steps = value.parse()?,
             "lr" => self.lr = value.parse()?,
             "warmup" => self.warmup = value.parse()?,
@@ -127,6 +146,15 @@ impl RunConfig {
             other => bail!("unknown option --{other}"),
         }
         Ok(())
+    }
+}
+
+/// Lenient bool parsing for flag values (`--spec true` / `--spec 1`).
+fn parse_bool(value: &str) -> Result<bool> {
+    match value {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => bail!("expected a boolean, got {other:?}"),
     }
 }
 
@@ -223,5 +251,28 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(RunConfig::from_args(&s(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn spec_flags_apply_and_validate() {
+        let cfg = RunConfig::from_args(&s(&[
+            "--spec-k",
+            "8",
+            "--spec-drafter",
+            "model:tiny-draft",
+            "--spec=true",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.spec_k, 8);
+        assert_eq!(cfg.spec_drafter, "model:tiny-draft");
+        assert!(cfg.spec);
+        // defaults keep the spec engine detached, drafting by n-gram
+        let d = RunConfig::default();
+        assert_eq!(d.spec_k, 0);
+        assert_eq!(d.spec_drafter, "ngram");
+        assert!(!d.spec);
+        // a bogus drafter fails fast, before any engine spawns
+        assert!(RunConfig::from_args(&s(&["--spec-drafter", "oracle"])).is_err());
+        assert!(RunConfig::from_args(&s(&["--spec", "maybe"])).is_err());
     }
 }

@@ -35,9 +35,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::metrics::{Histogram, Meter, Table};
+use crate::model::RustModel;
 use crate::prefill::{PrefillCfg, PrefillMode, Prefiller};
 use crate::runtime::{literal, Engine};
 use crate::session::{SamplerState, SessionSnapshot, SessionStore};
+use crate::spec::{DrafterKind, SpecCfg, SpecEngine};
 use crate::tensor::{Tensor, TensorI32};
 pub use batch::{Lane, LaneStatus};
 pub use request::{collect_tokens, FinishReason, GenRequest, RequestId, TokenEvent};
@@ -119,9 +121,39 @@ pub struct ServeStats {
     pub tokens_per_sec: f64,
     pub state_bytes: usize,
     pub lane_occupancy: f64,
+    /// Speculative draft/verify rounds run across all lanes.
+    pub spec_rounds: u64,
+    /// Draft tokens proposed / accepted (acceptance rate = ratio).
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
+    /// Rounds that restored the pre-draft O(state) snapshot.
+    pub spec_rollbacks: u64,
+    /// Tokens emitted by speculative rounds (vs. 1 per batched step).
+    pub spec_tokens: u64,
 }
 
 impl ServeStats {
+    /// Mean draft tokens accepted per speculative verify step (0 when no
+    /// speculative rounds ran).  The serial baseline emits exactly 1
+    /// token per step, so `accepted_per_step + 1` ≈ the per-step speedup
+    /// surface.
+    pub fn accepted_per_step(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_rounds as f64
+        }
+    }
+
+    /// Fraction of drafted tokens accepted (0 when nothing was drafted).
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
+    }
+
     /// The TTFT breakdown as a [`Table`] (the reporter benches/CLI print).
     pub fn ttft_table(&self) -> Table {
         let mut t = Table::new(&["phase", "p50 ms", "p95 ms", "p99 ms"]);
@@ -164,6 +196,14 @@ pub struct EngineLoop {
     /// runs the chunked scan on the pure-Rust twin of the artifact model
     /// and lands the state in the lane before the first decode step.
     prefiller: Option<Prefiller>,
+    /// Speculative decoding engine (None = every lane decodes serially).
+    /// Opted-in lanes leave the batched step once their prompt is done:
+    /// each engine cycle gives them one draft/verify/rollback round on
+    /// the pure-Rust twin, so they coexist with batched lanes under the
+    /// same scheduler policy.
+    spec: Option<SpecEngine>,
+    /// Seed the loop was spawned with (draft-model init shares it).
+    seed: i32,
     // params + recurrent state live as literals across steps and are passed
     // by reference to PJRT — no per-step deep copies (§Perf item 2)
     params: Vec<xla::Literal>,
@@ -211,6 +251,8 @@ impl EngineLoop {
             rx,
             sessions: None,
             prefiller: None,
+            spec: None,
+            seed,
             params,
             state,
             step_hist: Histogram::new(),
@@ -278,6 +320,43 @@ impl EngineLoop {
         }
     }
 
+    /// Attach the speculative decoding engine (`serve --spec-k N`): builds
+    /// the pure-Rust twin of the artifact model as the verify target (the
+    /// same twin-building path as [`EngineLoop::set_prefill`]) and, for a
+    /// [`DrafterKind::Model`] drafter, the named manifest config as the
+    /// draft model (empty name = self-draft with the target's own
+    /// weights).  Call after [`EngineLoop::set_params`].  Any failure to
+    /// build keeps plain batched decode, with a warning rather than a
+    /// dead engine.  Lanes still opt in per request
+    /// ([`GenRequest::with_spec`]).
+    pub fn set_spec(&mut self, cfg: SpecCfg) {
+        let built = (|| -> Result<SpecEngine> {
+            let mc = self.engine.model_cfg(&self.cfg_name)?.clone();
+            let tensors: Vec<Tensor> =
+                self.params.iter().map(literal::literal_to_tensor).collect::<Result<_>>()?;
+            let target = RustModel::from_tensors(&mc, &tensors)?;
+            let draft = match &cfg.drafter {
+                DrafterKind::Model(name) if name.is_empty() => Some(target.clone()),
+                DrafterKind::Model(name) => {
+                    let dmc = self.engine.model_cfg(name)?.clone();
+                    let dparams = self.engine.init_params(name, self.seed)?;
+                    let dtensors: Vec<Tensor> =
+                        dparams.iter().map(literal::literal_to_tensor).collect::<Result<_>>()?;
+                    Some(RustModel::from_tensors(&dmc, &dtensors)?)
+                }
+                DrafterKind::Ngram => None,
+            };
+            SpecEngine::new(target, draft, cfg)
+        })();
+        match built {
+            Ok(e) => self.spec = Some(e),
+            Err(e) => {
+                log::warn!("speculative engine unavailable, keeping batched decode: {e}");
+                self.spec = None;
+            }
+        }
+    }
+
     /// Run until the request channel closes and all lanes drain.
     pub fn run(&mut self) -> Result<ServeStats> {
         let mut open = true;
@@ -306,7 +385,16 @@ impl EngineLoop {
                 continue;
             }
             self.admit();
-            self.step()?;
+            // the batched artifact step serves every lane that is not
+            // speculatively active (including spec-requested lanes still
+            // ingesting their prompt, whose first token samples through
+            // the unchanged batched path); skip it when speculative lanes
+            // are all that's left
+            let batched = self.lanes.iter().any(|l| l.is_active() && !l.is_spec_active());
+            if batched {
+                self.step()?;
+            }
+            self.spec_rounds(batched);
         }
         Ok(self.stats())
     }
@@ -503,6 +591,14 @@ impl EngineLoop {
                 continue;
             }
             active_ct += 1;
+            if lane.is_spec_active() {
+                // speculative lanes ride the batch as passengers (they do
+                // occupy their lane — counted above): their tokens come
+                // from spec_rounds on the pure-Rust twin, and their slice
+                // of the state literals is dead weight until the lane is
+                // recycled
+                continue;
+            }
             let row = &logits.data[b * vocab..(b + 1) * vocab];
             if let Some(reason) = lane.consume_output(row, now) {
                 finished.push((b, reason));
@@ -518,33 +614,10 @@ impl EngineLoop {
             }
         }
         for (b, reason) in finished {
-            let lane = std::mem::replace(&mut self.lanes[b], Lane::empty());
-            if let Lane::Active(a) = lane {
-                self.latency_hist.record(now - a.arrival);
-                self.completed += 1;
-                // detach the lane's state into the session store before the
-                // lane can be re-admitted: `self.state` still holds exactly
-                // the post-step state, and `a.last_token` is the next
-                // input an uninterrupted generation would feed
-                if let (Some(store), Some(sid)) = (&self.sessions, a.session) {
-                    match self.export_state_lane(b) {
-                        Ok(parts) => store.put(SessionSnapshot {
-                            id: sid,
-                            cfg_name: self.cfg_name.clone(),
-                            tokens_generated: a.prior_tokens + a.generated as u64,
-                            last_token: a.last_token,
-                            sampler: SamplerState::capture(&a.sampler),
-                            state: parts,
-                        }),
-                        Err(e) => log::warn!("session {sid}: snapshot failed: {e}"),
-                    }
-                }
-                let _ = a.events.send(TokenEvent::finished_resumed(
-                    a.request_id,
-                    reason,
-                    a.resumed,
-                ));
-            }
+            self.finish_lane(b, reason, now);
+        }
+        if self.spec.is_some() {
+            self.activate_spec_lanes();
         }
         self.step_hist.record(start.elapsed());
         self.occupied_steps += 1;
@@ -552,7 +625,152 @@ impl EngineLoop {
         Ok(())
     }
 
+    /// Detach lane `b`: latency accounting, optional session snapshot,
+    /// final token event, slot freed.  Shared by the batched step and the
+    /// speculative rounds.
+    fn finish_lane(&mut self, b: usize, reason: FinishReason, now: Instant) {
+        let lane = std::mem::replace(&mut self.lanes[b], Lane::empty());
+        let Lane::Active(a) = lane else { return };
+        self.latency_hist.record(now - a.arrival);
+        self.completed += 1;
+        // detach the lane's state into the session store before the lane
+        // can be re-admitted.  Batched lanes live in the state literals
+        // (which hold exactly the post-step state); speculative lanes
+        // live on the pure-Rust twin, so their host ModelState is the
+        // ground truth — `a.last_token` is the next input an
+        // uninterrupted generation would feed either way.
+        if let (Some(store), Some(sid)) = (&self.sessions, a.session) {
+            let parts = match (&a.spec, &self.spec) {
+                (Some(sl), Some(eng)) => sl.state.to_components(&eng.model().cfg),
+                _ => self.export_state_lane(b),
+            };
+            match parts {
+                Ok(parts) => store.put(SessionSnapshot {
+                    id: sid,
+                    cfg_name: self.cfg_name.clone(),
+                    tokens_generated: a.prior_tokens + a.generated as u64,
+                    last_token: a.last_token,
+                    sampler: SamplerState::capture(&a.sampler),
+                    state: parts,
+                }),
+                Err(e) => log::warn!("session {sid}: snapshot failed: {e}"),
+            }
+        }
+        let _ = a.events.send(TokenEvent::finished_resumed(a.request_id, reason, a.resumed));
+    }
+
+    /// Attach a [`crate::spec::SpecLane`] to every lane that requested
+    /// speculation and just finished its prompt: export the lane's slice
+    /// of the state literals (the post-prompt state, first token already
+    /// sampled through the unchanged batched path), land it in a
+    /// host-side [`crate::model::ModelState`], and warm the drafter with
+    /// the lane's context.  Runs right after the batched step, off the
+    /// per-token hot loop.  Failure degrades the lane to batched decode.
+    fn activate_spec_lanes(&mut self) {
+        let pending: Vec<usize> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.spec_pending())
+            .map(|(b, _)| b)
+            .collect();
+        for b in pending {
+            let built = (|| -> Result<crate::spec::SpecLane> {
+                let eng =
+                    self.spec.as_ref().ok_or_else(|| anyhow::anyhow!("no spec engine attached"))?;
+                let parts = self.export_state_lane(b)?;
+                let mut sl = eng.new_lane();
+                sl.state.load_components(&eng.model().cfg, &parts)?;
+                if let Lane::Active(a) = &self.lanes[b] {
+                    // drafter context: the prompt plus the first sampled
+                    // token (for resumed lanes this is the new turn only —
+                    // earlier turns live in the state, not as tokens)
+                    let mut ctx = a.prompt.clone();
+                    ctx.push(a.last_token);
+                    sl.drafter.commit(&ctx);
+                }
+                Ok(sl)
+            })();
+            if let Lane::Active(a) = &mut self.lanes[b] {
+                match built {
+                    Ok(sl) => a.spec = Some(sl),
+                    Err(e) => {
+                        log::warn!(
+                            "request {}: speculative activation failed, staying on batched decode: {e}",
+                            a.request_id
+                        );
+                        a.spec_requested = false;
+                    }
+                }
+            }
+        }
+    }
+
+    /// One draft/verify/rollback round for every speculatively active
+    /// lane.  Each round emits between 1 and `remaining` tokens (accepted
+    /// draft prefix + correction/bonus), so speculative lanes make
+    /// guaranteed progress every engine cycle even when every draft
+    /// misses.  A failed round aborts only its own lane.
+    ///
+    /// `batched` says whether this engine cycle also ran [`Self::step`]
+    /// (which already recorded the cycle into `step_hist` and counted
+    /// every active lane — spec lanes included — into the occupancy
+    /// tallies).  On spec-only cycles this round sweep *is* the engine
+    /// step, so it does that accounting itself; `step_us` percentiles
+    /// and `lane_occupancy` therefore cover speculative decode instead
+    /// of silently excluding it.
+    fn spec_rounds(&mut self, batched: bool) {
+        if self.spec.is_none() {
+            return;
+        }
+        let start = Instant::now();
+        let mut spec_lanes = 0u64;
+        let mut finished: Vec<(usize, FinishReason)> = vec![];
+        {
+            let eng = self.spec.as_mut().expect("checked above");
+            for (b, lane) in self.lanes.iter_mut().enumerate() {
+                let Lane::Active(a) = lane else { continue };
+                let Some(sl) = a.spec.as_mut() else { continue };
+                spec_lanes += 1;
+                let remaining = a.max_new_tokens.saturating_sub(a.generated);
+                if remaining == 0 {
+                    finished.push((b, FinishReason::Length));
+                    continue;
+                }
+                let outcome = match eng.round(sl, &mut a.sampler, a.last_token, remaining, a.eos) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        log::warn!("request {}: speculative round failed: {e}", a.request_id);
+                        finished.push((b, FinishReason::Aborted));
+                        continue;
+                    }
+                };
+                for &t in &outcome.emitted {
+                    a.generated += 1;
+                    a.last_token = t;
+                    let _ = a.events.send(TokenEvent::token(a.request_id, t));
+                }
+                self.meter.tick(outcome.emitted.len() as u64);
+                if a.eos.is_some() && outcome.emitted.last().copied() == a.eos {
+                    finished.push((b, FinishReason::Eos));
+                } else if a.generated >= a.max_new_tokens {
+                    finished.push((b, FinishReason::Length));
+                }
+            }
+        }
+        let now = Instant::now();
+        for (b, reason) in finished {
+            self.finish_lane(b, reason, now);
+        }
+        if !batched && spec_lanes > 0 {
+            self.step_hist.record(start.elapsed());
+            self.occupied_steps += 1;
+            self.occupied_lanes += spec_lanes;
+        }
+    }
+
     pub fn stats(&self) -> ServeStats {
+        let spec = self.spec.as_ref().map(|e| e.stats.clone()).unwrap_or_default();
         ServeStats {
             completed: self.completed,
             tokens_out: self.meter.units(),
@@ -584,6 +802,11 @@ impl EngineLoop {
             } else {
                 self.occupied_lanes as f64 / (self.occupied_steps * self.batch as u64) as f64
             },
+            spec_rounds: spec.rounds,
+            spec_drafted: spec.drafted,
+            spec_accepted: spec.accepted,
+            spec_rollbacks: spec.rollbacks,
+            spec_tokens: spec.emitted,
         }
     }
 }
@@ -610,6 +833,9 @@ pub struct EngineOpts {
     pub store: Option<Arc<SessionStore>>,
     /// Scan prefill configuration (None = decode-as-prefill).
     pub prefill: Option<PrefillCfg>,
+    /// Speculative decoding engine configuration (None = no spec engine;
+    /// requests opt in per [`GenRequest::with_spec`] when attached).
+    pub spec: Option<SpecCfg>,
 }
 
 /// Spawn an engine loop on its own thread; returns the request sender and a
@@ -637,7 +863,7 @@ pub fn spawn_engine_with_store(
     spawn_engine_full(
         artifacts,
         cfg_name,
-        EngineOpts { policy: Some(policy), seed, store, prefill: None },
+        EngineOpts { policy: Some(policy), seed, store, prefill: None, spec: None },
     )
 }
 
@@ -656,6 +882,9 @@ pub fn spawn_engine_full(
         }
         if let Some(prefill) = opts.prefill {
             lp.set_prefill(prefill);
+        }
+        if let Some(spec) = opts.spec {
+            lp.set_spec(spec);
         }
         lp.run()
     });
@@ -679,5 +908,60 @@ mod tests {
         assert_eq!(SchedPolicy::DecodeFirst.admissions(5, 3, 1), 0);
         assert_eq!(SchedPolicy::DecodeFirst.admissions(5, 3, 0), 3);
         assert_eq!(SchedPolicy::Hybrid(1).admissions(5, 3, 2), 1);
+    }
+
+    #[test]
+    fn serve_stats_empty_is_all_zeros_and_renders() {
+        // a loop that served nothing must report clean zeros, not NaNs —
+        // the reporter benches divide by these fields
+        let s = ServeStats::default();
+        assert_eq!(s.ttft_us_p50, 0.0);
+        assert_eq!(s.accepted_per_step(), 0.0, "no rounds: no accepted-per-step");
+        assert_eq!(s.spec_accept_rate(), 0.0, "no drafts: no acceptance rate");
+        let rendered = s.ttft_table().render();
+        for phase in ["queue-wait", "prefill", "first-decode", "ttft (e2e)"] {
+            assert!(rendered.contains(phase), "missing {phase} row:\n{rendered}");
+        }
+        // empty histogram backs all of those zeros
+        let h = Histogram::new();
+        assert_eq!(h.percentile_us(50.0), 0.0);
+        assert_eq!(h.percentile_us(99.0), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn serve_stats_single_sample_percentiles_degenerate_sanely() {
+        // one sample: every percentile is that sample (bucket-clamped)
+        let mut h = Histogram::new();
+        h.record_us(1500.0);
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            let v = h.percentile_us(p);
+            assert!((v - 1500.0).abs() < 1500.0 * 0.05, "p{p} = {v}");
+        }
+        let stats = ServeStats {
+            ttft_us_p50: h.percentile_us(50.0),
+            ttft_us_p95: h.percentile_us(95.0),
+            ttft_us_p99: h.percentile_us(99.0),
+            ..Default::default()
+        };
+        let rendered = stats.ttft_table().render();
+        assert!(rendered.contains("1.5"), "1500us renders as ~1.50 ms:\n{rendered}");
+    }
+
+    #[test]
+    fn serve_stats_speculative_counters() {
+        let s = ServeStats {
+            spec_rounds: 10,
+            spec_drafted: 40,
+            spec_accepted: 30,
+            spec_rollbacks: 4,
+            spec_tokens: 40,
+            ..Default::default()
+        };
+        assert!((s.accepted_per_step() - 3.0).abs() < 1e-12);
+        assert!((s.spec_accept_rate() - 0.75).abs() < 1e-12);
+        assert!(s.spec_rollbacks <= s.spec_rounds);
+        // emitted = accepted + one correction/bonus per round
+        assert_eq!(s.spec_tokens, s.spec_accepted + s.spec_rounds);
     }
 }

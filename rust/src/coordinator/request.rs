@@ -70,6 +70,13 @@ pub struct GenRequest {
     /// (the prompt then carries only the *new* turn's text, which may be
     /// empty to continue generation in place).
     pub resume: bool,
+    /// Opt this request into speculative decoding (requires an engine
+    /// spawned with a spec engine attached; otherwise it decodes normally).
+    /// The acceptance rule is lossless: greedy streams are identical to
+    /// non-speculative decode, sampled streams draw from the identical
+    /// distributions (draw-for-draw identical under the serial verify
+    /// backend — `rust/tests/spec_differential.rs` pins both claims).
+    pub spec: bool,
     /// When the request entered the system — the anchor for the TTFT
     /// breakdown (queue-wait is admission − submission).
     pub submitted: Instant,
@@ -92,6 +99,7 @@ impl GenRequest {
             events,
             session: None,
             resume: false,
+            spec: false,
             submitted: Instant::now(),
         }
     }
@@ -105,6 +113,12 @@ impl GenRequest {
     /// Ask the coordinator to restore the session's snapshot on admission.
     pub fn resuming(mut self) -> GenRequest {
         self.resume = true;
+        self
+    }
+
+    /// Opt into speculative decoding (draft/verify/rollback lanes).
+    pub fn with_spec(mut self) -> GenRequest {
+        self.spec = true;
         self
     }
 }

@@ -9,12 +9,14 @@
 //! * **L3** (this crate) — the runtime and coordinator: PJRT execution of
 //!   the artifacts, continuous-batching decode with constant-size HLA
 //!   state, a chunk-parallel prompt-ingestion engine (`prefill`), a
-//!   session snapshot/resume/fork store (`session`), a training driver,
-//!   plus a from-scratch reimplementation of the paper's full algebra
-//!   (`hla`) used for verification and CPU baselines.
+//!   session snapshot/resume/fork store (`session`), a speculative
+//!   decoding engine with draft/verify/rollback over the constant-size
+//!   state (`spec`), a training driver, plus a from-scratch
+//!   reimplementation of the paper's full algebra (`hla`) used for
+//!   verification and CPU baselines.
 //!
 //! See `rust/DESIGN.md` for the system inventory and the `rust/benches/`
-//! E-series (E1–E14) for the paper-claim ↔ measurement map.
+//! E-series (E1–E15) for the paper-claim ↔ measurement map.
 
 pub mod attention;
 pub mod bench;
@@ -27,6 +29,7 @@ pub mod prefill;
 pub mod runtime;
 pub mod server;
 pub mod session;
+pub mod spec;
 pub mod train;
 pub mod workload;
 pub mod metrics;

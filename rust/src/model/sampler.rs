@@ -1,4 +1,11 @@
 //! Token sampling policies for generation.
+//!
+//! Besides drawing tokens, the sampler exposes the draft-vs-target
+//! acceptance primitives speculative decoding needs ([`Sampler::prob_of`],
+//! [`Sampler::u01`], [`Sampler::sample_residual`]) and the exact RNG
+//! stream capture/restore that keeps speculative rollback and session
+//! resume in lockstep with uninterrupted decode
+//! ([`Sampler::rng_parts`]/[`Sampler::from_parts`]).
 
 use crate::tensor::ops;
 use crate::util::rng::Rng;
@@ -22,6 +29,16 @@ impl SamplerCfg {
     pub fn greedy() -> Self {
         SamplerCfg { temperature: 0.0, top_k: 0, seed: 0 }
     }
+}
+
+/// The decision a sampler config induces over one logits row: greedy /
+/// temperature-0 collapses to a point mass, everything else to a softmax
+/// distribution.  [`Sampler::sample`], [`Sampler::prob_of`] and
+/// [`Sampler::sample_residual`] all branch on this one value, so the
+/// greedy and stochastic paths share a single code path and cannot drift.
+enum Decision {
+    Point(usize),
+    Probs(Vec<f32>),
 }
 
 /// Stateful sampler (owns its RNG stream).
@@ -48,10 +65,9 @@ impl Sampler {
         Sampler { cfg, rng: Rng::from_parts(state, spare) }
     }
 
-    /// Sample a token id from raw logits.
-    pub fn sample(&mut self, logits: &[f32]) -> usize {
+    fn decision(&self, logits: &[f32]) -> Decision {
         if self.cfg.temperature <= 0.0 {
-            return argmax(logits);
+            return Decision::Point(argmax(logits));
         }
         let mut probs: Vec<f32> =
             logits.iter().map(|&l| l / self.cfg.temperature).collect();
@@ -67,7 +83,57 @@ impl Sampler {
             }
         }
         ops::softmax_inplace(&mut probs);
-        self.rng.categorical(&probs)
+        Decision::Probs(probs)
+    }
+
+    /// Sample a token id from raw logits.  Greedy consumes no randomness;
+    /// otherwise exactly one uniform draw is spent per call — the
+    /// invariant speculative verification relies on (one draw per
+    /// *emitted* token, in stream order).
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        match self.decision(logits) {
+            Decision::Point(i) => i,
+            Decision::Probs(p) => self.rng.categorical(&p),
+        }
+    }
+
+    /// Probability this sampler assigns `token` under its temperature /
+    /// top-k distribution over `logits` — the target side of the
+    /// draft-vs-target acceptance test.  Consumes no randomness.
+    pub fn prob_of(&self, logits: &[f32], token: usize) -> f32 {
+        match self.decision(logits) {
+            Decision::Point(i) => {
+                if i == token {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Decision::Probs(p) => p.get(token).copied().unwrap_or(0.0),
+        }
+    }
+
+    /// One seeded uniform draw in [0, 1) from the sampler's own stream —
+    /// the acceptance coin of the two-draw rejection-sampling rule.
+    pub fn u01(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    /// Sample from the renormalized residual `max(0, p − δ_rejected)` —
+    /// the resample half of the lossless rejection-sampling rule for a
+    /// point-mass draft distribution (Chen et al., 2023).
+    pub fn sample_residual(&mut self, logits: &[f32], rejected: usize) -> usize {
+        match self.decision(logits) {
+            // the residual of one point mass minus another is the point
+            // mass itself (the rule only rejects when they differ)
+            Decision::Point(i) => i,
+            Decision::Probs(mut p) => {
+                if rejected < p.len() {
+                    p[rejected] = 0.0;
+                }
+                self.rng.categorical(&p)
+            }
+        }
     }
 }
 
@@ -126,5 +192,75 @@ mod tests {
         let cold_minor = count(&mut cold);
         assert!(hot_minor > 100, "{hot_minor}");
         assert!(cold_minor < 10, "{cold_minor}");
+    }
+
+    #[test]
+    fn prob_of_is_a_distribution_and_matches_masking() {
+        let logits = vec![2.0f32, 1.0, 0.5, -3.0];
+        // greedy: point mass on the argmax
+        let g = Sampler::new(SamplerCfg::greedy());
+        assert_eq!(g.prob_of(&logits, 0), 1.0);
+        assert_eq!(g.prob_of(&logits, 1), 0.0);
+        assert_eq!(g.prob_of(&logits, 99), 0.0, "out-of-range token has probability 0");
+        // stochastic: sums to 1, monotone in the logits, respects top-k
+        let s = Sampler::new(SamplerCfg { temperature: 0.7, top_k: 2, seed: 3 });
+        let total: f32 = (0..logits.len()).map(|t| s.prob_of(&logits, t)).sum();
+        assert!((total - 1.0).abs() < 1e-5, "{total}");
+        assert!(s.prob_of(&logits, 0) > s.prob_of(&logits, 1));
+        assert_eq!(s.prob_of(&logits, 2), 0.0, "token below the top-k cutoff");
+        assert_eq!(s.prob_of(&logits, 3), 0.0);
+    }
+
+    #[test]
+    fn residual_never_returns_the_rejected_token() {
+        let logits = vec![3.0f32, 2.9, -1.0, -1.0];
+        let mut s = Sampler::new(SamplerCfg { temperature: 1.0, top_k: 0, seed: 5 });
+        for _ in 0..100 {
+            assert_ne!(s.sample_residual(&logits, 0), 0);
+        }
+        // greedy residual is the argmax itself (rule only fires on mismatch)
+        let mut g = Sampler::new(SamplerCfg::greedy());
+        assert_eq!(g.sample_residual(&logits, 1), 0);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_mid_stream() {
+        // speculative rollback + session resume both rebuild samplers via
+        // from_parts(rng_parts()) mid-stream; a desync here would silently
+        // fork resumed token streams, so: property-test it across configs,
+        // stream positions and interleavings of every draw primitive
+        crate::testing::quick("sampler-from-parts-roundtrip", 48, |rng, _| {
+            let temps = [0.0f32, 0.5, 1.0, 2.0];
+            let ks = [0usize, 1, 3, 8];
+            let cfg = SamplerCfg {
+                temperature: temps[rng.below(temps.len())],
+                top_k: ks[rng.below(ks.len())],
+                seed: rng.next_u64(),
+            };
+            let mut logits = vec![0f32; 16];
+            let mut a = Sampler::new(cfg.clone());
+            for _ in 0..rng.below(20) {
+                rng.fill_normal(&mut logits, 2.0);
+                let _ = a.sample(&logits);
+                if rng.bool(0.3) {
+                    let _ = a.u01();
+                }
+            }
+            let (state, spare) = a.rng_parts();
+            let mut b = Sampler::from_parts(cfg, state, spare);
+            for step in 0..32 {
+                rng.fill_normal(&mut logits, 2.0);
+                if a.sample(&logits) != b.sample(&logits) {
+                    return Err(format!("sample stream diverged at step {step}"));
+                }
+                if a.u01() != b.u01() {
+                    return Err(format!("u01 stream diverged at step {step}"));
+                }
+                if a.prob_of(&logits, 3) != b.prob_of(&logits, 3) {
+                    return Err(format!("prob_of diverged at step {step}"));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -35,6 +35,11 @@ pub struct GenOpts {
     pub resume: bool,
     /// Fork this parent session's snapshot into `session` and resume it.
     pub fork_of: Option<u64>,
+    /// Opt into speculative draft/verify/rollback decode (needs a server
+    /// running with `--spec-k`; a no-op otherwise).  Lossless: greedy
+    /// streams are identical, sampled streams come from the identical
+    /// distributions (see the protocol notes in `server/mod.rs`).
+    pub spec: bool,
 }
 
 impl Default for GenOpts {
@@ -47,6 +52,7 @@ impl Default for GenOpts {
             session: None,
             resume: false,
             fork_of: None,
+            spec: false,
         }
     }
 }
@@ -99,6 +105,9 @@ impl Client {
         }
         if let Some(parent) = opts.fork_of {
             req.push(("fork_of", Json::num(parent as f64)));
+        }
+        if opts.spec {
+            req.push(("spec", Json::Bool(true)));
         }
         let start = Instant::now();
         writeln!(self.writer, "{}", Json::obj(req))?;

@@ -24,6 +24,17 @@
 //!     forks of one shared prompt prefix diverge.  Unknown parent →
 //!     `{"error": "unknown session <parent>"}`.
 //!
+//! Speculative decoding extension (requires serving with `--spec-k`):
+//!   * `"spec": true` — opt this request into speculative
+//!     draft/verify/rollback decode.  The acceptance rule is lossless:
+//!     greedy requests emit the identical token stream, and sampled
+//!     requests draw from the identical distributions — draw-for-draw
+//!     identical under the serial verify backend, while the default
+//!     chunked-scan verify (and the pure-Rust twin it samples on, vs.
+//!     the artifact) can shift a draw at an f32 probability boundary
+//!     without changing the distribution.  Without a spec engine
+//!     attached the flag is a no-op, not an error.
+//!
 //! Error replies are one-line objects: `{"error": "<reason>"}` — sent for
 //! malformed JSON, resume/fork without a session store, `fork_of` without
 //! a `"session"` id, unknown sessions, and out-of-range ids.  Session ids
@@ -177,6 +188,9 @@ fn handle_request(
     }
     if resume_requested {
         greq = greq.resuming();
+    }
+    if req.get("spec").and_then(Json::as_bool).unwrap_or(false) {
+        greq = greq.with_spec();
     }
     let replica = router.submit(greq, session)?;
 

@@ -1,0 +1,233 @@
+//! Draft-token proposers for speculative decoding.
+//!
+//! A [`Drafter`] guesses the next few tokens of a stream cheaply; the
+//! [`crate::spec::Verifier`] then checks the whole guess against the
+//! target model in one chunked scan.  Two implementations:
+//!
+//! * [`NgramDrafter`] — suffix matching over the request's own context
+//!   ("prompt lookup" drafting).  Needs no second set of weights, costs
+//!   O(context · order) per proposal, and shines on repetitive traces
+//!   (code, templates, multi-turn boilerplate).
+//! * [`ModelDrafter`] — a small HLA draft model decoded greedily.  Its
+//!   own recurrent state is constant-size too, so the tentative decode is
+//!   snapshot → k steps → O(state) restore, mirroring the target's
+//!   rollback discipline.
+//!
+//! Contract: `commit` sees every token that actually enters the stream
+//! (prompt text and emitted tokens alike, in order); `propose` never
+//! mutates the committed stream.  Proposals must stay inside the target
+//! vocabulary — both implementations guarantee this because they only
+//! ever emit tokens they were fed (n-gram) or tokens below their own
+//! vocab (draft model, which [`crate::spec::SpecEngine`] checks fits
+//! inside the target's).
+
+use crate::model::sampler::argmax;
+use crate::model::{ModelState, RustModel};
+use crate::prefill::{advance, PrefillCfg};
+
+/// A cheap proposer of draft tokens for speculative decoding.
+pub trait Drafter: Send {
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `k` tokens continuing the committed stream.  May
+    /// return fewer (or none) when the drafter has no usable signal — an
+    /// empty proposal degrades the round to one ordinary decode step.
+    fn propose(&mut self, k: usize) -> Vec<u8>;
+
+    /// Observe tokens that actually entered the stream (prompt and
+    /// emitted tokens alike, in stream order).
+    fn commit(&mut self, tokens: &[u8]);
+
+    /// Forget all context (lane reuse).
+    fn reset(&mut self);
+}
+
+/// Default longest suffix the n-gram drafter tries to match.
+pub const NGRAM_MAX_ORDER: usize = 4;
+
+/// Default context bound for the n-gram drafter (bytes).
+pub const NGRAM_MAX_CTX: usize = 4096;
+
+/// Weight-free suffix-match drafter: propose the continuation of the most
+/// recent earlier occurrence of the current suffix, longest match first.
+#[derive(Debug, Clone)]
+pub struct NgramDrafter {
+    ctx: Vec<u8>,
+    max_order: usize,
+    max_ctx: usize,
+}
+
+impl Default for NgramDrafter {
+    fn default() -> Self {
+        NgramDrafter::new(NGRAM_MAX_ORDER, NGRAM_MAX_CTX)
+    }
+}
+
+impl NgramDrafter {
+    pub fn new(max_order: usize, max_ctx: usize) -> NgramDrafter {
+        NgramDrafter { ctx: vec![], max_order: max_order.max(1), max_ctx: max_ctx.max(64) }
+    }
+
+    /// Most recent earlier occurrence of the final `order`-byte suffix
+    /// (excluding the suffix's own position).
+    fn find_suffix(&self, order: usize) -> Option<usize> {
+        let n = self.ctx.len();
+        if order == 0 || n < order + 1 {
+            return None;
+        }
+        let suffix = &self.ctx[n - order..];
+        (0..n - order).rev().find(|&i| &self.ctx[i..i + order] == suffix)
+    }
+}
+
+impl Drafter for NgramDrafter {
+    fn name(&self) -> &'static str {
+        "ngram"
+    }
+
+    fn propose(&mut self, k: usize) -> Vec<u8> {
+        if k == 0 {
+            return vec![];
+        }
+        for order in (1..=self.max_order).rev() {
+            if let Some(i) = self.find_suffix(order) {
+                let start = i + order;
+                let end = (start + k).min(self.ctx.len());
+                return self.ctx[start..end].to_vec();
+            }
+        }
+        vec![]
+    }
+
+    fn commit(&mut self, tokens: &[u8]) {
+        self.ctx.extend_from_slice(tokens);
+        if self.ctx.len() > self.max_ctx {
+            let cut = self.ctx.len() - self.max_ctx;
+            self.ctx.drain(..cut);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.ctx.clear();
+    }
+}
+
+/// Greedy decode on a small HLA model.  The tentative k-step decode runs
+/// on a snapshot of the drafter's own constant-size state and restores it
+/// afterwards, so `commit` is the only thing that moves the drafter's
+/// stream forward — the same snapshot/rollback discipline the target
+/// verifier uses, at draft-model cost.
+pub struct ModelDrafter {
+    model: RustModel,
+    state: ModelState,
+    /// Most recent committed token, not yet absorbed into `state` (it is
+    /// the input that produces the next-token distribution).
+    pending: Option<u8>,
+    prefill: PrefillCfg,
+}
+
+impl ModelDrafter {
+    pub fn new(model: RustModel) -> ModelDrafter {
+        let prefill = PrefillCfg::auto(&model.cfg);
+        ModelDrafter::with_prefill(model, prefill)
+    }
+
+    /// [`ModelDrafter::new`] with an explicit commit-ingestion backend.
+    /// [`PrefillCfg::serial`] keeps the drafter's state bit-identical to
+    /// serially replaying the stream — with self-draft (the target's own
+    /// weights) that makes greedy proposals *exactly* the target's greedy
+    /// continuation, the 100%-acceptance calibration case the
+    /// differential test pins down.
+    pub fn with_prefill(model: RustModel, prefill: PrefillCfg) -> ModelDrafter {
+        let state = ModelState::new(&model.cfg);
+        ModelDrafter { model, state, pending: None, prefill }
+    }
+
+    pub fn model(&self) -> &RustModel {
+        &self.model
+    }
+}
+
+impl Drafter for ModelDrafter {
+    fn name(&self) -> &'static str {
+        "model"
+    }
+
+    fn propose(&mut self, k: usize) -> Vec<u8> {
+        let Some(mut last) = self.pending else { return vec![] };
+        if k == 0 {
+            return vec![];
+        }
+        let Ok(snapshot) = self.state.to_tensors() else { return vec![] };
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let logits = self.model.decode_step(&mut self.state, last);
+            let t = argmax(&logits) as u8;
+            out.push(t);
+            last = t;
+        }
+        self.state
+            .load_tensors(&snapshot)
+            .expect("a state snapshot restores into the state it came from");
+        out
+    }
+
+    fn commit(&mut self, tokens: &[u8]) {
+        let Some((&newest, absorbed)) = tokens.split_last() else { return };
+        let mut feed = Vec::with_capacity(tokens.len());
+        if let Some(p) = self.pending.take() {
+            feed.push(p);
+        }
+        feed.extend_from_slice(absorbed);
+        advance(&self.model, &mut self.state, &feed, &self.prefill);
+        self.pending = Some(newest);
+    }
+
+    fn reset(&mut self) {
+        self.state = ModelState::new(&self.model.cfg);
+        self.pending = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_proposes_repeated_continuation() {
+        let mut d = NgramDrafter::new(4, 4096);
+        d.commit(b"abcdef abcdef abc");
+        // suffix "abc" last occurred earlier, followed by "def abcdef..."
+        assert_eq!(d.propose(4), b"def ".to_vec());
+        // longest-match preference: after more context the proposal tracks
+        // the most recent occurrence
+        d.commit(b"def");
+        assert_eq!(d.propose(2), b" a".to_vec());
+    }
+
+    #[test]
+    fn ngram_no_signal_on_fresh_or_novel_context() {
+        let mut d = NgramDrafter::default();
+        assert!(d.propose(4).is_empty(), "no context, no proposal");
+        d.commit(b"abcdefgh");
+        assert!(d.propose(4).is_empty(), "all-novel context has no repeated suffix");
+        assert!(d.propose(0).is_empty());
+    }
+
+    #[test]
+    fn ngram_context_is_bounded() {
+        let mut d = NgramDrafter::new(4, 64);
+        d.commit(&vec![7u8; 500]);
+        assert!(d.ctx.len() <= 64);
+        d.reset();
+        assert!(d.propose(3).is_empty());
+    }
+
+    #[test]
+    fn ngram_falls_back_to_shorter_orders() {
+        let mut d = NgramDrafter::new(4, 4096);
+        // only a 1-byte suffix repeats
+        d.commit(b"xyzqx");
+        assert_eq!(d.propose(2), b"yz".to_vec());
+    }
+}

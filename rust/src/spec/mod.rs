@@ -1,0 +1,476 @@
+//! Speculative decoding over constant-size HLA state: draft / verify /
+//! rollback.
+//!
+//! Speculative decoding (Leviathan et al., 2023; Chen et al., 2023) turns
+//! one serial decode step into `k` cheap draft tokens plus one target-model
+//! verification pass.  HLA makes both halves unusually cheap:
+//!
+//! * **verify** — the prefix state is a constant-size sufficient statistic
+//!   (PAPER.md §2), so the target advances over a k-token draft as *one*
+//!   chunked scan (§5 identities, via [`crate::prefill`]) instead of k
+//!   serial steps;
+//! * **rollback** — rejecting draft tokens is an O(state) snapshot restore
+//!   (the [`crate::session`] tensor carrier), not an O(context) KV-cache
+//!   truncation.
+//!
+//! Layout:
+//!
+//! * [`draft`] — the [`Drafter`] trait + the weight-free [`NgramDrafter`]
+//!   and the small-model [`ModelDrafter`].
+//! * [`verify`] — the [`Verifier`]: one chunked pass over the draft, the
+//!   lossless acceptance rule, O(state) rollback.
+//! * here — [`SpecCfg`] / [`DrafterKind`] knobs, the [`AdaptiveK`]
+//!   acceptance-rate controller, [`SpecStats`], the per-lane
+//!   [`SpecLane`] bundle, the [`SpecEngine`] round driver shared by the
+//!   coordinator ([`crate::coordinator::EngineLoop`] runs speculative
+//!   lanes next to its batched decode), and the standalone
+//!   [`SpecDecoder`] used by `hla generate --spec`, bench E15 and the
+//!   differential test.
+//!
+//! Correctness bar (enforced by `rust/tests/spec_differential.rs`): the
+//! emitted token stream is byte-identical to non-speculative decode —
+//! greedy *and* seeded sampling under the serial verify backend, greedy
+//! under the chunked scan (whose logits agree up to f32 reassociation,
+//! the `prefill_differential.rs` bar) — speculation changes the
+//! schedule, never the tokens.
+
+pub mod draft;
+pub mod verify;
+
+use std::fmt;
+
+use anyhow::{ensure, Result};
+
+use crate::model::sampler::{Sampler, SamplerCfg};
+use crate::model::{ModelState, RustModel};
+use crate::prefill::{advance, PrefillCfg};
+pub use draft::{Drafter, ModelDrafter, NgramDrafter, NGRAM_MAX_CTX, NGRAM_MAX_ORDER};
+pub use verify::{AcceptRule, Verifier, VerifyOutcome};
+
+/// Which drafter a speculative lane runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DrafterKind {
+    /// Weight-free suffix matching over the request's own context.
+    Ngram,
+    /// A small HLA draft model; the string names the manifest config to
+    /// build it from (empty = self-draft with the target's own weights, a
+    /// debug mode with ~perfect greedy acceptance and no speedup).
+    Model(String),
+}
+
+impl DrafterKind {
+    /// Parse the `--spec-drafter` value: `ngram` | `model` | `model:<cfg>`.
+    pub fn parse(s: &str) -> Option<DrafterKind> {
+        match s {
+            "ngram" => Some(DrafterKind::Ngram),
+            "model" => Some(DrafterKind::Model(String::new())),
+            other => other.strip_prefix("model:").map(|n| DrafterKind::Model(n.to_string())),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DrafterKind::Ngram => "ngram".into(),
+            DrafterKind::Model(name) if name.is_empty() => "model(self)".into(),
+            DrafterKind::Model(name) => format!("model:{name}"),
+        }
+    }
+}
+
+/// Speculative-decoding knobs.
+#[derive(Debug, Clone)]
+pub struct SpecCfg {
+    /// Initial draft length.
+    pub k: usize,
+    /// Adaptive-k clamp range.
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Drive k from the observed acceptance rate ([`AdaptiveK`]).
+    pub adaptive: bool,
+    pub drafter: DrafterKind,
+    pub rule: AcceptRule,
+    /// Verify-scan chunk width; 0 = serial verify (the bit-exact
+    /// reference backend, no chunk parallelism).
+    pub verify_chunk: usize,
+    pub verify_threads: usize,
+}
+
+impl Default for SpecCfg {
+    fn default() -> Self {
+        SpecCfg {
+            k: 4,
+            k_min: 1,
+            k_max: 16,
+            adaptive: true,
+            drafter: DrafterKind::Ngram,
+            rule: AcceptRule::Coupled,
+            verify_chunk: 32,
+            verify_threads: 1,
+        }
+    }
+}
+
+impl SpecCfg {
+    pub fn verify_cfg(&self) -> PrefillCfg {
+        if self.verify_chunk == 0 {
+            PrefillCfg::serial()
+        } else {
+            PrefillCfg::scan(self.verify_chunk, self.verify_threads.max(1))
+        }
+    }
+}
+
+const EWMA_ALPHA: f64 = 0.25;
+const K_GROW: f64 = 1.25;
+const K_SHRINK: f64 = 0.75;
+const ACCEPT_HI: f64 = 0.8;
+const ACCEPT_LO: f64 = 0.4;
+
+/// Acceptance-rate-driven draft-length controller: an EWMA of the
+/// per-round acceptance fraction grows k multiplicatively while drafts
+/// keep landing (amortizing verification over longer drafts) and shrinks
+/// it when they keep missing (bounding wasted verify work), clamped to
+/// `[k_min, k_max]`.
+#[derive(Debug, Clone)]
+pub struct AdaptiveK {
+    k: f64,
+    k_min: usize,
+    k_max: usize,
+    ewma: f64,
+    adaptive: bool,
+}
+
+impl AdaptiveK {
+    pub fn new(cfg: &SpecCfg) -> AdaptiveK {
+        let k_min = cfg.k_min.max(1);
+        let k_max = cfg.k_max.max(k_min);
+        AdaptiveK {
+            k: (cfg.k.clamp(k_min, k_max)) as f64,
+            k_min,
+            k_max,
+            ewma: 0.5,
+            adaptive: cfg.adaptive,
+        }
+    }
+
+    /// Current draft length.
+    pub fn k(&self) -> usize {
+        self.k.round() as usize
+    }
+
+    /// Smoothed observed acceptance rate.
+    pub fn accept_ewma(&self) -> f64 {
+        self.ewma
+    }
+
+    /// Feed one round's outcome (`accepted` of `drafted` tokens landed).
+    pub fn observe(&mut self, drafted: usize, accepted: usize) {
+        if !self.adaptive || drafted == 0 {
+            return;
+        }
+        let rate = accepted as f64 / drafted as f64;
+        self.ewma = (1.0 - EWMA_ALPHA) * self.ewma + EWMA_ALPHA * rate;
+        if self.ewma > ACCEPT_HI {
+            self.k *= K_GROW;
+        } else if self.ewma < ACCEPT_LO {
+            self.k *= K_SHRINK;
+        }
+        self.k = self.k.clamp(self.k_min as f64, self.k_max as f64);
+    }
+}
+
+/// Aggregate speculative-decoding counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpecStats {
+    /// Draft/verify rounds run.
+    pub rounds: u64,
+    /// Draft tokens proposed.
+    pub drafted: u64,
+    /// Draft tokens accepted.
+    pub accepted: u64,
+    /// Rounds that restored the pre-draft snapshot.
+    pub rollbacks: u64,
+    /// Tokens emitted by speculative rounds (accepted + corrections/bonus).
+    pub emitted: u64,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens accepted (0 when nothing was drafted).
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Mean accepted draft tokens per verify round.
+    pub fn accepted_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.rounds as f64
+        }
+    }
+
+    /// Mean tokens emitted per verify round (the serial baseline is 1.0).
+    pub fn tokens_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.emitted as f64 / self.rounds as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.rounds += other.rounds;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.rollbacks += other.rollbacks;
+        self.emitted += other.emitted;
+    }
+}
+
+/// Per-lane speculative state: the lane's host-side model state (the
+/// verify scans run on the pure-Rust twin), its drafter, and its
+/// draft-length controller.
+pub struct SpecLane {
+    pub state: ModelState,
+    pub drafter: Box<dyn Drafter>,
+    pub ctrl: AdaptiveK,
+}
+
+impl fmt::Debug for SpecLane {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SpecLane")
+            .field("drafter", &self.drafter.name())
+            .field("k", &self.ctrl.k())
+            .finish_non_exhaustive()
+    }
+}
+
+/// The round driver: owns the target verifier, the draft-model template
+/// and the aggregate counters; lanes ([`SpecLane`]) carry the per-request
+/// state.  The coordinator holds one of these per engine replica; the
+/// standalone [`SpecDecoder`] wraps one with a single lane.
+pub struct SpecEngine {
+    verifier: Verifier,
+    cfg: SpecCfg,
+    draft_model: Option<RustModel>,
+    pub stats: SpecStats,
+}
+
+impl SpecEngine {
+    /// `draft_model` is required for [`DrafterKind::Model`] (and its vocab
+    /// must fit inside the target's, so proposals are always feedable).
+    pub fn new(target: RustModel, draft_model: Option<RustModel>, cfg: SpecCfg) -> Result<SpecEngine> {
+        if let Some(dm) = &draft_model {
+            ensure!(
+                dm.cfg.vocab <= target.cfg.vocab,
+                "draft vocab {} exceeds target vocab {}",
+                dm.cfg.vocab,
+                target.cfg.vocab
+            );
+        }
+        if matches!(cfg.drafter, DrafterKind::Model(_)) {
+            ensure!(draft_model.is_some(), "drafter {:?} needs a draft model", cfg.drafter.label());
+        }
+        let verifier = Verifier::new(target, cfg.verify_cfg())?;
+        Ok(SpecEngine { verifier, cfg, draft_model, stats: SpecStats::default() })
+    }
+
+    pub fn model(&self) -> &RustModel {
+        self.verifier.model()
+    }
+
+    pub fn cfg(&self) -> &SpecCfg {
+        &self.cfg
+    }
+
+    /// A fresh lane with the configured drafter.
+    pub fn new_lane(&self) -> SpecLane {
+        let drafter: Box<dyn Drafter> = match &self.cfg.drafter {
+            DrafterKind::Ngram => Box::new(NgramDrafter::default()),
+            DrafterKind::Model(_) => Box::new(ModelDrafter::new(
+                self.draft_model.clone().expect("checked in SpecEngine::new"),
+            )),
+        };
+        self.lane_with(drafter)
+    }
+
+    /// A fresh lane with a caller-supplied drafter.
+    pub fn lane_with(&self, drafter: Box<dyn Drafter>) -> SpecLane {
+        SpecLane {
+            state: ModelState::new(&self.model().cfg),
+            drafter,
+            ctrl: AdaptiveK::new(&self.cfg),
+        }
+    }
+
+    /// One draft/verify/rollback round for `lane`.  `state`/`sampler`/
+    /// `last` follow the [`Verifier::verify`] contract; `remaining` is the
+    /// lane's token budget (≥ 1).  Emits between 1 and `remaining` tokens.
+    pub fn round(
+        &mut self,
+        lane: &mut SpecLane,
+        sampler: &mut Sampler,
+        last: u8,
+        remaining: usize,
+        eos: Option<u8>,
+    ) -> Result<VerifyOutcome> {
+        let want = if self.cfg.adaptive { lane.ctrl.k() } else { self.cfg.k };
+        let draft = if remaining > 1 { lane.drafter.propose(want.min(remaining - 1)) } else { vec![] };
+        let out =
+            self.verifier.verify(&mut lane.state, sampler, last, &draft, eos, remaining, self.cfg.rule)?;
+        lane.ctrl.observe(draft.len(), out.accepted);
+        lane.drafter.commit(&out.emitted);
+        self.stats.rounds += 1;
+        self.stats.drafted += draft.len() as u64;
+        self.stats.accepted += out.accepted as u64;
+        self.stats.emitted += out.emitted.len() as u64;
+        if out.rolled_back {
+            self.stats.rollbacks += 1;
+        }
+        Ok(out)
+    }
+}
+
+/// Single-sequence speculative decoder: a [`SpecEngine`] plus one lane.
+/// The artifact-free twin of a coordinator speculative lane — `hla
+/// generate --spec`, bench E15 and the differential test drive this.
+pub struct SpecDecoder {
+    pub engine: SpecEngine,
+    pub lane: SpecLane,
+}
+
+impl SpecDecoder {
+    pub fn new(target: RustModel, draft_model: Option<RustModel>, cfg: SpecCfg) -> Result<SpecDecoder> {
+        let engine = SpecEngine::new(target, draft_model, cfg)?;
+        let lane = engine.new_lane();
+        Ok(SpecDecoder { engine, lane })
+    }
+
+    /// Replace the lane's drafter (keeps state/controller fresh).
+    pub fn with_drafter(mut self, drafter: Box<dyn Drafter>) -> SpecDecoder {
+        self.lane = self.engine.lane_with(drafter);
+        self
+    }
+
+    /// Generate up to `max_new` tokens after `prompt` on a fresh lane.
+    /// The prompt is ingested with the verify backend (serial or chunked
+    /// scan — the same two paths the prefill differential test equates).
+    pub fn generate(
+        &mut self,
+        prompt: &[u8],
+        scfg: SamplerCfg,
+        max_new: usize,
+        eos: Option<u8>,
+    ) -> Result<Vec<u8>> {
+        ensure!(!prompt.is_empty(), "generate needs at least one prompt token");
+        self.lane.state = ModelState::new(&self.engine.model().cfg);
+        self.lane.drafter.reset();
+        self.lane.ctrl = AdaptiveK::new(self.engine.cfg());
+        let mut sampler = Sampler::new(scfg);
+        self.lane.drafter.commit(prompt);
+        let prefill = *self.engine.verifier.cfg();
+        advance(self.engine.model(), &mut self.lane.state, &prompt[..prompt.len() - 1], &prefill);
+        self.run(&mut sampler, prompt[prompt.len() - 1], max_new, eos)
+    }
+
+    /// Continue from wherever the lane currently stands (`state` has
+    /// absorbed everything before `last`; the drafter has committed the
+    /// full stream).  This is the resume path: load a session snapshot
+    /// into `self.lane.state`, rebuild the sampler, and call this.
+    pub fn run(
+        &mut self,
+        sampler: &mut Sampler,
+        mut last: u8,
+        max_new: usize,
+        eos: Option<u8>,
+    ) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(max_new);
+        while out.len() < max_new {
+            let outcome =
+                self.engine.round(&mut self.lane, sampler, last, max_new - out.len(), eos)?;
+            ensure!(!outcome.emitted.is_empty(), "verify round emitted nothing");
+            out.extend_from_slice(&outcome.emitted);
+            last = *out.last().expect("just extended");
+            if eos == Some(last) {
+                break;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drafter_kind_parses() {
+        assert_eq!(DrafterKind::parse("ngram"), Some(DrafterKind::Ngram));
+        assert_eq!(DrafterKind::parse("model"), Some(DrafterKind::Model(String::new())));
+        assert_eq!(
+            DrafterKind::parse("model:tiny-draft"),
+            Some(DrafterKind::Model("tiny-draft".into()))
+        );
+        assert_eq!(DrafterKind::parse("nope"), None);
+        assert_eq!(DrafterKind::parse("model:t").unwrap().label(), "model:t");
+    }
+
+    #[test]
+    fn adaptive_k_tracks_acceptance() {
+        let cfg = SpecCfg { k: 4, k_min: 1, k_max: 16, ..Default::default() };
+        let mut up = AdaptiveK::new(&cfg);
+        for _ in 0..40 {
+            let k = up.k();
+            up.observe(k, k); // everything lands
+        }
+        assert_eq!(up.k(), 16, "sustained acceptance must reach k_max");
+        assert!(up.accept_ewma() > 0.95);
+
+        let mut down = AdaptiveK::new(&cfg);
+        for _ in 0..40 {
+            down.observe(down.k(), 0); // nothing lands
+        }
+        assert_eq!(down.k(), 1, "sustained rejection must reach k_min");
+
+        let mut fixed = AdaptiveK::new(&SpecCfg { adaptive: false, ..cfg });
+        for _ in 0..40 {
+            fixed.observe(4, 0);
+        }
+        assert_eq!(fixed.k(), 4, "non-adaptive controller must not move");
+    }
+
+    #[test]
+    fn adaptive_k_ignores_empty_rounds_and_clamps_cfg() {
+        let cfg = SpecCfg { k: 100, k_min: 2, k_max: 8, ..Default::default() };
+        let mut c = AdaptiveK::new(&cfg);
+        assert_eq!(c.k(), 8, "initial k clamps into range");
+        let before = c.accept_ewma();
+        c.observe(0, 0);
+        assert_eq!(c.accept_ewma(), before, "a draftless round is not evidence");
+    }
+
+    #[test]
+    fn spec_stats_rates() {
+        let mut s = SpecStats::default();
+        assert_eq!(s.accept_rate(), 0.0);
+        assert_eq!(s.accepted_per_round(), 0.0);
+        assert_eq!(s.tokens_per_round(), 0.0);
+        s.merge(&SpecStats { rounds: 4, drafted: 16, accepted: 12, rollbacks: 2, emitted: 16 });
+        assert!((s.accept_rate() - 0.75).abs() < 1e-12);
+        assert!((s.accepted_per_round() - 3.0).abs() < 1e-12);
+        assert!((s.tokens_per_round() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_cfg_verify_backend() {
+        let serial = SpecCfg { verify_chunk: 0, ..Default::default() };
+        assert_eq!(serial.verify_cfg().mode, crate::prefill::PrefillMode::Serial);
+        let scan = SpecCfg::default();
+        assert_eq!(scan.verify_cfg().mode, crate::prefill::PrefillMode::Scan);
+        assert_eq!(scan.verify_cfg().chunk, 32);
+    }
+}

@@ -1,0 +1,171 @@
+//! Target-model verification of a k-token draft in one chunked step.
+//!
+//! The verifier feeds `[last, d_1, .., d_k]` through the target's
+//! chunk-parallel prefill engine ([`crate::prefill::forward_logits`]) —
+//! one scan instead of k serial decode steps — and walks the k+1 logits
+//! rows with the lane's own [`Sampler`].  Row `j` is exactly the
+//! distribution serial decode would sample position `j` from (conditioned
+//! on the accepted prefix), so the walk recovers the serial stream:
+//!
+//! * **Coupled** (default): accept draft token `d_j` iff it equals the
+//!   token the lane sampler draws from row `j`.  This is the lossless
+//!   rejection-sampling rule of Chen et al. (2023) under the maximal
+//!   coupling for our *deterministic* drafters: with a point-mass draft
+//!   distribution `q = δ_x`, the rule accepts `x` with probability
+//!   `p_t(x)` and otherwise emits a sample of the residual
+//!   `norm(max(0, p_t − q))` — which is precisely "the serial sample, if
+//!   it happens to be `x`; the serial sample, otherwise".  Sharing the
+//!   single categorical draw between the accept decision and the residual
+//!   makes the emitted stream *byte-identical* to non-speculative decode
+//!   (greedy and seeded sampling alike), which
+//!   `rust/tests/spec_differential.rs` proves.
+//! * **Rejection**: the textbook two-draw form of the same rule
+//!   (`u < p_t(x)` via [`Sampler::u01`]/[`Sampler::prob_of`], residual
+//!   resample on failure).  Distribution-lossless but *not* stream-
+//!   identical — it spends uniforms differently than serial decode.
+//!   Kept for the E15 acceptance-rate ablation.
+//!
+//! On any early stop (draft mismatch, EOS, emission budget) the target
+//! state has over-consumed the speculative inputs; the verifier restores
+//! the pre-draft snapshot — an O(state) memcpy, the HLA payoff that
+//! replaces KV-cache truncation — and serially re-advances the accepted
+//! prefix, so the landed state is bit-identical to the serial path's.
+
+use anyhow::{ensure, Result};
+
+use crate::model::sampler::Sampler;
+use crate::model::{ModelState, RustModel};
+use crate::prefill::{advance, forward_logits, PrefillCfg};
+
+/// How the draft is judged against the target distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AcceptRule {
+    /// Maximal coupling with the target stream (stream-identical, default).
+    #[default]
+    Coupled,
+    /// Two-draw rejection sampling (distribution-lossless; bench ablation).
+    Rejection,
+}
+
+/// Result of one draft/verify round.
+#[derive(Debug, Clone)]
+pub struct VerifyOutcome {
+    /// Tokens emitted this round: the accepted draft prefix plus one —
+    /// the correction on mismatch, or the bonus token on full acceptance.
+    pub emitted: Vec<u8>,
+    /// How many draft tokens were accepted.
+    pub accepted: usize,
+    /// Whether the pre-draft snapshot had to be restored.
+    pub rolled_back: bool,
+    /// Tokens the chunked verify pass fed (draft length + 1).
+    pub fed: usize,
+}
+
+/// Advances the target model over drafts and arbitrates acceptance.
+pub struct Verifier {
+    model: RustModel,
+    cfg: PrefillCfg,
+}
+
+impl Verifier {
+    /// `cfg` selects the verify backend: a chunked scan (the speculative
+    /// payoff) or [`PrefillCfg::serial`] (the bit-exact reference).  Fails
+    /// up front for mixers without a constant-size snapshot (softmax).
+    pub fn new(model: RustModel, cfg: PrefillCfg) -> Result<Verifier> {
+        ModelState::new(&model.cfg)
+            .to_tensors()
+            .map_err(|e| e.context("speculative decode needs a snapshot-able mixer state"))?;
+        Ok(Verifier { model, cfg })
+    }
+
+    pub fn model(&self) -> &RustModel {
+        &self.model
+    }
+
+    pub fn cfg(&self) -> &PrefillCfg {
+        &self.cfg
+    }
+
+    /// Run one draft/verify/rollback round.
+    ///
+    /// `state` must have absorbed every stream token *before* `last`
+    /// (`last` itself still pending — the serial-decode convention), and
+    /// `sampler` must be the lane's live sampler: exactly one draw is
+    /// spent per emitted token, in stream order, so speculative and
+    /// serial decode stay in RNG lockstep.  `limit` caps emissions (the
+    /// lane's remaining token budget, ≥ 1); `eos` stops the walk the
+    /// moment it is emitted.  On return, `state` has absorbed everything
+    /// before the final emitted token, exactly as serial decode would.
+    #[allow(clippy::too_many_arguments)]
+    pub fn verify(
+        &self,
+        state: &mut ModelState,
+        sampler: &mut Sampler,
+        last: u8,
+        draft: &[u8],
+        eos: Option<u8>,
+        limit: usize,
+        rule: AcceptRule,
+    ) -> Result<VerifyOutcome> {
+        ensure!(limit >= 1, "verify needs room to emit at least one token");
+        let vocab = self.model.cfg.vocab;
+        // a draft token beyond limit-1 can never be emitted, and an
+        // out-of-vocab token can never be fed: clip the draft up front
+        let k = draft
+            .iter()
+            .take(limit - 1)
+            .take_while(|&&t| (t as usize) < vocab)
+            .count();
+        let draft = &draft[..k];
+
+        // O(state) pre-draft snapshot (the session-snapshot tensor carrier)
+        let snapshot = state.to_tensors()?;
+        let mut inputs = Vec::with_capacity(k + 1);
+        inputs.push(last);
+        inputs.extend_from_slice(draft);
+        // one chunked step over the whole draft: k+1 logits rows
+        let logits = forward_logits(&self.model, state, &inputs, &self.cfg);
+
+        let mut emitted = Vec::with_capacity(k + 1);
+        let mut accepted = 0usize;
+        for j in 0..=k {
+            if emitted.len() >= limit {
+                break;
+            }
+            let row = logits.row(j);
+            let y = match rule {
+                AcceptRule::Coupled => sampler.sample(row) as u8,
+                AcceptRule::Rejection if j < k => {
+                    let d = draft[j] as usize;
+                    if sampler.u01() < sampler.prob_of(row, d) as f64 {
+                        draft[j]
+                    } else {
+                        sampler.sample_residual(row, d) as u8
+                    }
+                }
+                AcceptRule::Rejection => sampler.sample(row) as u8,
+            };
+            emitted.push(y);
+            if eos == Some(y) {
+                break;
+            }
+            if j < k && y == draft[j] {
+                accepted += 1;
+                continue;
+            }
+            break;
+        }
+
+        // serial decode would have fed `last` plus every emitted token but
+        // the final one (still pending); anything beyond that is rolled
+        // back: O(state) restore, then a bit-exact serial re-advance of
+        // the accepted prefix
+        let needed = emitted.len();
+        let rolled_back = needed < inputs.len();
+        if rolled_back {
+            state.load_tensors(&snapshot)?;
+            advance(&self.model, state, &inputs[..needed], &PrefillCfg::serial());
+        }
+        Ok(VerifyOutcome { emitted, accepted, rolled_back, fed: inputs.len() })
+    }
+}

@@ -1,0 +1,167 @@
+//! Synthetic pure-Rust byte-LM fixtures for the artifact-free
+//! differential tests and E-series benches.
+//!
+//! Every artifact-free test/bench needs the same thing: a [`ModelCfg`]
+//! with manifest-ordered param paths and a deterministically-initialized
+//! [`RustModel`] built from it.  Building the config directly (instead of
+//! each file carrying its own ~40-line manifest-JSON template) keeps the
+//! fixture in one place; the manifest *parsing* path has its own tests in
+//! `runtime/artifact.rs`.
+
+use crate::model::RustModel;
+use crate::runtime::ModelCfg;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Shape knobs for a synthetic byte-LM fixture.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelShape {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ffn: usize,
+    pub chunk: usize,
+    pub gamma: f64,
+}
+
+impl Default for ModelShape {
+    /// The differential-test shape (2 layers, d_model 16) used by
+    /// `prefill_differential.rs` / `spec_differential.rs`.
+    fn default() -> Self {
+        ModelShape {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 8,
+            d_ffn: 32,
+            chunk: 8,
+            gamma: 0.98,
+        }
+    }
+}
+
+impl ModelShape {
+    /// The serving-shaped bench twin (E14/E15): d_model 32, head_dim 16.
+    pub fn bench() -> Self {
+        ModelShape { d_model: 32, head_dim: 16, d_ffn: 64, chunk: 32, ..Default::default() }
+    }
+
+    /// A 1-layer draft-model shape (d_model 8) — cheap enough that
+    /// drafting k tokens costs a fraction of one target step.
+    pub fn draft() -> Self {
+        ModelShape { d_model: 8, n_layers: 1, head_dim: 4, d_ffn: 16, chunk: 4, ..Default::default() }
+    }
+}
+
+/// A [`ModelCfg`] for `shape` with param paths in the manifest's
+/// tree-flatten order (embed, norm_f, then per-layer norm1, wq, wk, wv,
+/// wo, norm2, w_gate, w_up, w_down) — the order `RustModel::from_tensors`
+/// binds and the order [`build_model`] draws its init randomness in.
+pub fn model_cfg(mixer: &str, s: &ModelShape) -> ModelCfg {
+    let d = s.d_model;
+    let mut param_paths: Vec<(String, Vec<usize>)> = vec![
+        ("['embed']".into(), vec![s.vocab, d]),
+        ("['norm_f']".into(), vec![d]),
+    ];
+    for li in 0..s.n_layers {
+        let p = |f: &str| format!("['layers'][{li}]['{f}']");
+        param_paths.push((p("norm1"), vec![d]));
+        param_paths.push((p("wq"), vec![d, d]));
+        param_paths.push((p("wk"), vec![d, d]));
+        param_paths.push((p("wv"), vec![d, d]));
+        param_paths.push((p("wo"), vec![d, d]));
+        param_paths.push((p("norm2"), vec![d]));
+        param_paths.push((p("w_gate"), vec![d, s.d_ffn]));
+        param_paths.push((p("w_up"), vec![d, s.d_ffn]));
+        param_paths.push((p("w_down"), vec![s.d_ffn, d]));
+    }
+    let n_params = param_paths.iter().map(|(_, sh)| sh.iter().product::<usize>()).sum();
+    let n_param_tensors = param_paths.len();
+    ModelCfg {
+        name: "fixture".into(),
+        vocab: s.vocab,
+        d_model: d,
+        n_layers: s.n_layers,
+        n_heads: s.n_heads,
+        head_dim: s.head_dim,
+        d_ffn: s.d_ffn,
+        kv_heads: s.n_heads,
+        mixer: mixer.into(),
+        chunk: s.chunk,
+        gamma: s.gamma,
+        lam: 0.0,
+        norm_mode: "abs".into(),
+        eps: 1e-6,
+        multi_query: false,
+        n_params,
+        n_param_tensors,
+        n_state_tensors: 2,
+        param_paths,
+        // hla2-shaped artifact lane layout; the pure-Rust ModelState
+        // derives its real per-mixer layout from `mixer`, not from here
+        state_paths: vec![
+            ("['c']".into(), vec![s.n_layers, 1, s.n_heads, s.head_dim, s.head_dim]),
+            ("['m']".into(), vec![s.n_layers, 1, s.n_heads, s.head_dim]),
+        ],
+        train_batch: 1,
+        train_seq: s.chunk,
+        decode_batch: 1,
+        prefill_len: s.chunk,
+    }
+}
+
+/// Deterministically-initialized pure-Rust model: 1-d params (norms) near
+/// 1, matrices ~N(0, 0.3) — the init every artifact-free test/bench uses.
+pub fn build_model(mixer: &str, shape: &ModelShape, seed: u64) -> RustModel {
+    let cfg = model_cfg(mixer, shape);
+    let mut rng = Rng::new(seed);
+    let tensors: Vec<Tensor> = cfg
+        .param_paths
+        .iter()
+        .map(|(_, sh)| {
+            let mut t = Tensor::zeros(sh);
+            if sh.len() == 1 {
+                for x in &mut t.data {
+                    *x = 1.0 + 0.1 * rng.normal() as f32;
+                }
+            } else {
+                rng.fill_normal(&mut t.data, 0.3);
+            }
+            t
+        })
+        .collect();
+    RustModel::from_tensors(&cfg, &tensors).expect("fixture param paths bind by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelState;
+
+    #[test]
+    fn fixture_models_build_and_step_for_every_scannable_mixer() {
+        for mixer in ["hla2", "ahla", "hla3", "linear"] {
+            for shape in [ModelShape::default(), ModelShape::bench(), ModelShape::draft()] {
+                let m = build_model(mixer, &shape, 7);
+                assert_eq!(m.cfg.param_paths.len(), 2 + 9 * shape.n_layers);
+                assert_eq!(m.layers.len(), shape.n_layers);
+                let mut state = ModelState::new(&m.cfg);
+                let logits = m.decode_step(&mut state, 3);
+                assert_eq!(logits.len(), shape.vocab);
+                assert!(logits.iter().all(|x| x.is_finite()), "{mixer}: non-finite logits");
+            }
+        }
+    }
+
+    #[test]
+    fn fixture_init_is_deterministic() {
+        let a = build_model("hla2", &ModelShape::default(), 11);
+        let b = build_model("hla2", &ModelShape::default(), 11);
+        assert_eq!(a.embed.data, b.embed.data);
+        let c = build_model("hla2", &ModelShape::default(), 12);
+        assert_ne!(a.embed.data, c.embed.data);
+    }
+}

@@ -6,6 +6,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod fixtures;
+
 #[derive(Debug, Clone)]
 pub struct PropConfig {
     pub cases: u64,

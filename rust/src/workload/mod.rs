@@ -198,6 +198,53 @@ impl Trace {
         Trace { items, mix: SessionMix { n_sessions: 0, resume_prob: 0.0 } }
     }
 
+    /// The speculative-decoding acceptance scenario (E15): an
+    /// acceptance-rate-diverse request mix.  A `repeat_frac` fraction of
+    /// requests carry *repetitive* prompts — a short corpus motif of
+    /// `motif` bytes tiled to the prompt length, the regime where suffix
+    /// drafters and small draft models land almost every guess — and the
+    /// rest carry *high-entropy* prompts of uniform random bytes below
+    /// `vocab`, where almost nothing is predictable and an adaptive-k
+    /// controller should collapse toward serial decode.  Outputs follow
+    /// `lengths.output`; requests are stateless (no sessions).
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthesize_spec_mix(
+        n: usize,
+        arrivals: Arrivals,
+        lengths: Lengths,
+        repeat_frac: f64,
+        motif: usize,
+        vocab: usize,
+        corpus: &[u8],
+        seed: u64,
+    ) -> Trace {
+        let motif = motif.max(1);
+        let vocab = vocab.max(2);
+        let mut rng = Rng::new(seed);
+        let times = arrivals.times(n, &mut rng);
+        let items = times
+            .into_iter()
+            .map(|at_s| {
+                let plen = lengths.prompt(&mut rng);
+                let prompt: Vec<u8> = if rng.bool(repeat_frac) {
+                    let start = rng.below(corpus.len().saturating_sub(motif).max(1));
+                    let pattern = &corpus[start..(start + motif).min(corpus.len())];
+                    pattern.iter().cycle().take(plen).copied().collect()
+                } else {
+                    (0..plen).map(|_| rng.below(vocab) as u8).collect()
+                };
+                TraceItem {
+                    at_s,
+                    prompt,
+                    max_new_tokens: lengths.output(&mut rng),
+                    session: None,
+                    resume: false,
+                }
+            })
+            .collect();
+        Trace { items, mix: SessionMix { n_sessions: 0, resume_prob: 0.0 } }
+    }
+
     /// A multi-turn-conversation scenario: `n_sessions` conversations of
     /// `turns` requests each.  Turn 1 starts fresh; every later turn
     /// resumes the session's snapshot (mean `think_s` seconds of "user
@@ -402,6 +449,44 @@ mod tests {
         let t0 = Trace::synthesize(20, Arrivals::Burst, Lengths::default(), corpus, 5);
         assert!(t0.items.iter().all(|it| !it.resume));
         assert!(t0.items.iter().all(|it| it.session.unwrap() < 16));
+    }
+
+    #[test]
+    fn spec_mix_balances_repetitive_and_high_entropy_prompts() {
+        let corpus = b"the quick brown fox jumps over the lazy dog and keeps on jumping";
+        let lengths = Lengths { mean_prompt: 48, mean_output: 16, min: 24, max: 96, sigma: 0.4 };
+        let t = Trace::synthesize_spec_mix(
+            200,
+            Arrivals::Burst,
+            lengths,
+            0.5,
+            8,
+            64,
+            corpus,
+            13,
+        );
+        assert_eq!(t.items.len(), 200);
+        assert!(t.items.iter().all(|it| it.session.is_none() && !it.resume));
+        assert!(t.items.iter().all(|it| it.prompt.iter().all(|&b| (b as usize) < 128)));
+        // a motif-tiled prompt is exactly periodic with period ≤ 8; a
+        // 24+-byte uniform random prompt essentially never is
+        let periodic = |p: &[u8]| {
+            (1..=8).any(|m| m < p.len() && p.iter().enumerate().all(|(i, &b)| b == p[i % m]))
+        };
+        let reps = t.items.iter().filter(|it| periodic(&it.prompt)).count();
+        assert!(
+            (60..=140).contains(&reps),
+            "repeat_frac 0.5 over 200 items gave {reps} repetitive prompts"
+        );
+        // the knob's extremes
+        let all = Trace::synthesize_spec_mix(
+            40, Arrivals::Burst, lengths, 1.0, 8, 64, corpus, 14,
+        );
+        assert!(all.items.iter().all(|it| periodic(&it.prompt)));
+        let none = Trace::synthesize_spec_mix(
+            40, Arrivals::Burst, lengths, 0.0, 8, 64, corpus, 15,
+        );
+        assert!(none.items.iter().all(|it| it.prompt.iter().all(|&b| (b as usize) < 64)));
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Differential acceptance test for the speculative decoding engine:
+//! the emitted token stream must be **byte-identical** to non-speculative
+//! serial decode — greedy and seeded sampling, hla2/ahla/hla3, both
+//! drafters, fresh lanes and session-resumed lanes.  Speculation may
+//! change the schedule (how many tokens land per verify step), never the
+//! tokens.  Runs artifact-free on the pure-Rust model, like
+//! `session_resume.rs` / `prefill_differential.rs`.
+//!
+//! Exactness ledger:
+//! * **Serial verify backend** (`verify_chunk: 0`): the verifier's
+//!   forward is the same `decode_step` chain serial decode runs, its
+//!   rollback re-advance is serial, and the coupled acceptance rule
+//!   spends exactly one sampler draw per emitted token — so equality is
+//!   *bit-exact by construction*, and the seeded-sampling grid asserts it
+//!   there.
+//! * **Scan verify backend** (one chunked step per draft — the perf
+//!   path): logits agree with serial up to f32 reassociation (Thm 4.1),
+//!   so the greedy grid asserts exact token equality on it, the same
+//!   robustness bar `prefill_differential.rs` already holds the scan to.
+
+use hla::model::sampler::{Sampler, SamplerCfg};
+use hla::model::{ModelState, RustModel};
+use hla::prefill::{advance, PrefillCfg};
+use hla::session::SamplerState;
+use hla::spec::{Drafter, DrafterKind, ModelDrafter, NgramDrafter, SpecCfg, SpecDecoder};
+use hla::testing::fixtures::{build_model, ModelShape};
+use hla::util::rng::Rng;
+
+/// 2-layer target (d_model 16) — the shared differential-test shape —
+/// and the 1-layer small-config draft model (d_model 8).
+fn target_model(mixer: &str, seed: u64) -> RustModel {
+    build_model(mixer, &ModelShape::default(), seed)
+}
+
+fn draft_model(mixer: &str, seed: u64) -> RustModel {
+    build_model(mixer, &ModelShape::draft(), seed)
+}
+
+fn random_prompt(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(64) as u8).collect()
+}
+
+/// The non-speculative reference: one `decode_step` + one sampler draw
+/// per emitted token (exactly the coordinator lane's generating phase).
+fn serial_generate(
+    model: &RustModel,
+    state: &mut ModelState,
+    sampler: &mut Sampler,
+    mut last: u8,
+    max_new: usize,
+    eos: Option<u8>,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(max_new);
+    while out.len() < max_new {
+        let logits = model.decode_step(state, last);
+        let y = sampler.sample(&logits) as u8;
+        out.push(y);
+        if eos == Some(y) {
+            break;
+        }
+        last = y;
+    }
+    out
+}
+
+fn serial_from_prompt(
+    model: &RustModel,
+    prompt: &[u8],
+    scfg: SamplerCfg,
+    max_new: usize,
+    eos: Option<u8>,
+) -> Vec<u8> {
+    let mut state = ModelState::new(&model.cfg);
+    let mut sampler = Sampler::new(scfg);
+    advance(model, &mut state, &prompt[..prompt.len() - 1], &PrefillCfg::serial());
+    serial_generate(model, &mut state, &mut sampler, prompt[prompt.len() - 1], max_new, eos)
+}
+
+/// Serial verify backend (bit-exact) with a fixed draft length.
+fn serial_cfg(k: usize, drafter: DrafterKind) -> SpecCfg {
+    SpecCfg { k, adaptive: false, drafter, verify_chunk: 0, ..Default::default() }
+}
+
+/// Chunked-scan verify backend (the perf path) with a fixed draft length.
+fn scan_cfg(k: usize, drafter: DrafterKind) -> SpecCfg {
+    SpecCfg { k, adaptive: false, drafter, verify_chunk: 8, verify_threads: 2, ..Default::default() }
+}
+
+/// Build a decoder for (target, cfg), honoring the drafter kind; the
+/// drafters' own stream ingestion is kept serial so self-draft is a
+/// bit-exact calibration case.
+fn decoder(target: &RustModel, draft: Option<&RustModel>, cfg: SpecCfg) -> SpecDecoder {
+    let kind = cfg.drafter.clone();
+    let dm = match &kind {
+        DrafterKind::Ngram => None,
+        DrafterKind::Model(name) if name.is_empty() => Some(target.clone()),
+        DrafterKind::Model(_) => Some(draft.expect("model drafter needs a draft model").clone()),
+    };
+    let dec = SpecDecoder::new(target.clone(), dm, cfg).unwrap();
+    match kind {
+        DrafterKind::Ngram => dec.with_drafter(Box::new(NgramDrafter::default())),
+        DrafterKind::Model(name) => {
+            let dm = if name.is_empty() { target.clone() } else { draft.unwrap().clone() };
+            dec.with_drafter(Box::new(ModelDrafter::with_prefill(dm, PrefillCfg::serial())))
+        }
+    }
+}
+
+#[test]
+fn spec_matches_serial_greedy_both_backends_all_mixers() {
+    let mut rng = Rng::new(71);
+    for mixer in ["hla2", "ahla", "hla3"] {
+        let target = target_model(mixer, 17);
+        let draft = draft_model(mixer, 19);
+        let prompt = random_prompt(&mut rng, 23);
+        let want = serial_from_prompt(&target, &prompt, SamplerCfg::greedy(), 64, None);
+        assert_eq!(want.len(), 64);
+        for kind in [
+            DrafterKind::Ngram,
+            DrafterKind::Model(String::new()), // self-draft
+            DrafterKind::Model("d".into()),    // small-config draft model
+        ] {
+            for k in [1usize, 4, 8] {
+                for cfg in [serial_cfg(k, kind.clone()), scan_cfg(k, kind.clone())] {
+                    let label = format!("{mixer} {} k={k} chunk={}", kind.label(), cfg.verify_chunk);
+                    let mut dec = decoder(&target, Some(&draft), cfg);
+                    let got =
+                        dec.generate(&prompt, SamplerCfg::greedy(), 64, None).unwrap();
+                    assert_eq!(got, want, "{label}: stream diverged");
+                    let stats = &dec.engine.stats;
+                    assert_eq!(stats.emitted, 64, "{label}: emitted accounting");
+                    assert!(stats.accepted <= stats.drafted, "{label}");
+                    assert!(stats.rollbacks <= stats.rounds, "{label}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn self_draft_greedy_serial_backend_accepts_everything() {
+    // self-draft + serial verify + serial drafter ingestion: the draft IS
+    // the target's greedy continuation, bit for bit, so every proposal
+    // must land and no rollback may ever fire — the calibration case that
+    // catches off-by-one desyncs between draft, verify and commit.
+    let mut rng = Rng::new(73);
+    for mixer in ["hla2", "ahla", "hla3"] {
+        let target = target_model(mixer, 29);
+        let prompt = random_prompt(&mut rng, 17);
+        let want = serial_from_prompt(&target, &prompt, SamplerCfg::greedy(), 48, None);
+        let mut dec = decoder(&target, None, serial_cfg(6, DrafterKind::Model(String::new())));
+        let got = dec.generate(&prompt, SamplerCfg::greedy(), 48, None).unwrap();
+        assert_eq!(got, want, "{mixer}");
+        let stats = &dec.engine.stats;
+        assert_eq!(stats.accepted, stats.drafted, "{mixer}: a self-draft must always land");
+        assert_eq!(stats.rollbacks, 0, "{mixer}: full acceptance never rolls back");
+        assert!(
+            stats.rounds < 48,
+            "{mixer}: {} rounds for 48 tokens is not speculation",
+            stats.rounds
+        );
+    }
+}
+
+#[test]
+fn spec_matches_serial_seeded_sampling() {
+    // seeded sampling on the bit-exact serial verify backend: the coupled
+    // acceptance rule spends exactly one categorical draw per emitted
+    // token, so the stream — and the RNG position after it — must equal
+    // serial decode's exactly
+    let mut rng = Rng::new(79);
+    for mixer in ["hla2", "ahla", "hla3"] {
+        let target = target_model(mixer, 31);
+        let draft = draft_model(mixer, 37);
+        for scfg in [
+            SamplerCfg { temperature: 0.9, top_k: 8, seed: 11 },
+            SamplerCfg { temperature: 1.3, top_k: 0, seed: 12 },
+        ] {
+            let prompt = random_prompt(&mut rng, 19);
+            let want = serial_from_prompt(&target, &prompt, scfg.clone(), 56, None);
+            for kind in [DrafterKind::Ngram, DrafterKind::Model("d".into())] {
+                for k in [1usize, 3, 8] {
+                    let label = format!("{mixer} {} k={k} t={}", kind.label(), scfg.temperature);
+                    let mut dec = decoder(&target, Some(&draft), serial_cfg(k, kind.clone()));
+                    let got = dec.generate(&prompt, scfg.clone(), 56, None).unwrap();
+                    assert_eq!(got, want, "{label}: sampled stream diverged");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn spec_sessions_resume_without_desync() {
+    // a conversation that decodes turn 1 speculatively, snapshots, and
+    // resumes (speculatively or serially) must emit exactly the one
+    // uninterrupted serial stream — state, sampler RNG position and last
+    // token all survive the snapshot
+    let mut rng = Rng::new(83);
+    for mixer in ["hla2", "ahla", "hla3"] {
+        let target = target_model(mixer, 41);
+        let scfg = SamplerCfg { temperature: 0.8, top_k: 12, seed: 23 };
+        let prompt = random_prompt(&mut rng, 21);
+        let full = serial_from_prompt(&target, &prompt, scfg.clone(), 96, None);
+        assert_eq!(full.len(), 96);
+
+        // turn 1: speculative (serial verify backend = bit-exact)
+        let mut dec = decoder(&target, None, serial_cfg(5, DrafterKind::Ngram));
+        let mut sampler = Sampler::new(scfg.clone());
+        dec.lane.drafter.commit(&prompt);
+        advance(
+            dec.engine.model(),
+            &mut dec.lane.state,
+            &prompt[..prompt.len() - 1],
+            &PrefillCfg::serial(),
+        );
+        let t1 = dec.run(&mut sampler, prompt[prompt.len() - 1], 40, None).unwrap();
+        assert_eq!(t1, full[..40], "{mixer}: turn 1 diverged");
+
+        // snapshot: state tensors + sampler stream position + last token
+        // (the session-store carrier formats)
+        let parts = dec.lane.state.to_tensors().unwrap();
+        let samp = SamplerState::capture(&sampler);
+        let last = *t1.last().unwrap();
+
+        // resume speculatively in a fresh decoder
+        let mut dec2 = decoder(&target, None, serial_cfg(5, DrafterKind::Ngram));
+        dec2.lane.state.load_tensors(&parts).unwrap();
+        let mut ctx = prompt.clone();
+        ctx.extend_from_slice(&t1);
+        dec2.lane.drafter.commit(&ctx);
+        let mut sampler2 = samp.rebuild();
+        let t2 = dec2.run(&mut sampler2, last, 56, None).unwrap();
+        assert_eq!(t2, full[40..], "{mixer}: speculative resume diverged");
+
+        // and resume serially from the very same snapshot
+        let mut state3 = ModelState::new(&target.cfg);
+        state3.load_tensors(&parts).unwrap();
+        let mut sampler3 = samp.rebuild();
+        let t3 = serial_generate(&target, &mut state3, &mut sampler3, last, 56, None);
+        assert_eq!(t3, full[40..], "{mixer}: serial resume from a spec snapshot diverged");
+    }
+}
+
+#[test]
+fn eos_and_token_budget_do_not_desync_the_stream() {
+    let mut rng = Rng::new(89);
+    let target = target_model("hla2", 43);
+    let prompt = random_prompt(&mut rng, 15);
+    let scfg = SamplerCfg { temperature: 0.9, top_k: 8, seed: 31 };
+
+    // eos: pick a token known to appear mid-stream; speculative decode
+    // must stop exactly where serial stops (drafts beyond the eos are
+    // rolled back, not absorbed)
+    let probe = serial_from_prompt(&target, &prompt, scfg.clone(), 32, None);
+    let eos = probe[7];
+    let want = serial_from_prompt(&target, &prompt, scfg.clone(), 32, Some(eos));
+    assert_eq!(want.last(), Some(&eos));
+    for cfg in [serial_cfg(8, DrafterKind::Ngram), serial_cfg(8, DrafterKind::Model(String::new()))]
+    {
+        let mut dec = decoder(&target, None, cfg);
+        let got = dec.generate(&prompt, scfg.clone(), 32, Some(eos)).unwrap();
+        assert_eq!(got, want, "eos stream diverged");
+    }
+
+    // token budget: a k=8 decoder asked for 5 tokens must emit exactly 5
+    // AND leave state + sampler where serial left them — proven by
+    // continuing the same lane for 10 more and matching serial's 15
+    let want15 = serial_from_prompt(&target, &prompt, scfg.clone(), 15, None);
+    let mut dec = decoder(&target, None, serial_cfg(8, DrafterKind::Model(String::new())));
+    let first5 = dec.generate(&prompt, scfg.clone(), 5, None).unwrap();
+    assert_eq!(first5.len(), 5);
+    assert_eq!(first5, want15[..5]);
+    // generate() consumed its own sampler; rebuild the continuation draw
+    // stream the way a session resume would
+    let mut sampler = Sampler::new(scfg);
+    let mut burn = ModelState::new(&target.cfg);
+    burn.load_tensors(&dec.lane.state.to_tensors().unwrap()).unwrap();
+    // replay serial's first 5 draws to align the fresh sampler
+    {
+        let mut s = ModelState::new(&target.cfg);
+        advance(&target, &mut s, &prompt[..prompt.len() - 1], &PrefillCfg::serial());
+        serial_generate(&target, &mut s, &mut sampler, prompt[prompt.len() - 1], 5, None);
+    }
+    let rest = dec.run(&mut sampler, first5[4], 10, None).unwrap();
+    assert_eq!(rest, want15[5..], "continuation after a budget-capped round diverged");
+}
+
+#[test]
+fn adaptive_k_grows_on_acceptance_and_shrinks_on_rejection() {
+    let mut rng = Rng::new(97);
+    let target = target_model("hla2", 47);
+    let prompt = random_prompt(&mut rng, 13);
+    let want = serial_from_prompt(&target, &prompt, SamplerCfg::greedy(), 96, None);
+
+    // self-draft greedy: every draft lands, so the controller must ride
+    // acceptance up to k_max — and the stream still equals serial
+    let grow_cfg = SpecCfg {
+        k: 2,
+        adaptive: true,
+        drafter: DrafterKind::Model(String::new()),
+        verify_chunk: 0,
+        ..Default::default()
+    };
+    let mut grower = decoder(&target, None, grow_cfg.clone());
+    let got = grower.generate(&prompt, SamplerCfg::greedy(), 96, None).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(grower.lane.ctrl.k(), grow_cfg.k_max, "sustained acceptance must max out k");
+    assert!(grower.engine.stats.accept_rate() > 0.99);
+
+    // a wrong-weights draft model: almost nothing lands, so k must
+    // collapse to k_min (speculation self-throttles toward serial) while
+    // the stream stays exact
+    let wrong = target_model("hla2", 999);
+    let shrink_cfg = SpecCfg {
+        k: 8,
+        adaptive: true,
+        drafter: DrafterKind::Model("w".into()),
+        verify_chunk: 0,
+        ..Default::default()
+    };
+    let mut shrinker = decoder(&target, Some(&wrong), shrink_cfg.clone());
+    let got = shrinker.generate(&prompt, SamplerCfg::greedy(), 96, None).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(shrinker.lane.ctrl.k(), shrink_cfg.k_min, "sustained rejection must floor k");
+    assert!(shrinker.engine.stats.rollbacks > 0, "rejections must exercise the rollback path");
+}
