@@ -32,6 +32,22 @@
 //!             fine print).  `hla generate --spec true` runs the same
 //!             engine one-shot and prints the accept-rate/rollback
 //!             counters.
+//! no_cache:{"prompt": "secret ...", "no_cache": true}
+//!          -> opt this request out of the server's shared-prefix
+//!             cache (`GenOpts { no_cache: true, .. }` on the client):
+//!             its prompt is prefill-scanned cold and contributes no
+//!             boundary snapshots — for prompts carrying per-user
+//!             material a shared cache must not retain.  Requires the
+//!             server side to run with `hla serve --prefix-cache-mb N
+//!             [--prefix-cache-chunk W]` (plus --prefill-chunk) for the
+//!             cache to exist at all; without one the flag is a no-op,
+//!             not an error.  Warm and cold runs of the cached path are
+//!             byte-identical; the opt-out path scans with a different
+//!             segmentation, so greedy output is identical and seeded
+//!             output distribution-identical (see server/mod.rs and
+//!             rust/tests/prefix_cache_differential.rs for the
+//!             exactness fine print).  Resumed sessions always bypass
+//!             the cache.
 //! errors:  {"error": "unknown session 42"}           (resume/fork of a
 //!          session the store does not hold; nothing is generated)
 //! final:   {"done": true, "finish": "length", "n": 32,

@@ -34,7 +34,14 @@ fn run_trace_load(
     let (tx, handle) = spawn_engine_full(
         artifacts,
         "micro".into(),
-        EngineOpts { policy: Some(policy), seed: 0, store: None, prefill, spec: None },
+        EngineOpts {
+            policy: Some(policy),
+            seed: 0,
+            store: None,
+            prefill,
+            prefix_cache: None,
+            spec: None,
+        },
     );
     // warmup barrier: engine construction compiles the artifacts (~10s on
     // this CPU); measure serving, not startup.

@@ -1,0 +1,394 @@
+//! Shared-prefix radix cache: constant-size HLA prefix states reused
+//! across requests.
+//!
+//! HLA summarizes an entire prefix in a constant-size tuple of sufficient
+//! statistics (Theorem 3.1), which makes *any* token boundary a resumable
+//! point.  Serving traffic is dominated by shared prefixes — one system
+//! prompt or few-shot preamble fanning out into thousands of per-request
+//! suffixes — so that prefix should be prefill-scanned **once** per
+//! replica, not once per request.  This module is the cache that makes it
+//! so:
+//!
+//! * [`PrefixCache`] — a [`trie::RadixTrie`] keyed on token prefixes,
+//!   holding CRC-checksummed snapshots (the [`crate::session::codec`]
+//!   wire format) of the post-prefix model state at **chunk-aligned**
+//!   boundaries, LRU-evicted under a byte budget.
+//! * [`crate::prefill::Prefiller::ingest_lane_cached`] — the consumer:
+//!   admission seeds the chunked scan from the longest cached strict
+//!   prefix of the prompt and inserts the fresh boundary states it
+//!   computes on the way to the end of the prompt.
+//!
+//! Exactness contract (pinned by `rust/tests/prefix_cache_differential.rs`):
+//! because the cache-aware ingest *always* cuts its scan at the same
+//! chunk-aligned boundaries — warm or cold — the state stored at boundary
+//! `b` is a deterministic function of `tokens[..b]` alone.  A warm hit
+//! therefore lands bit-identical floats to the cold path, and the emitted
+//! token stream is byte-identical, greedy and seeded alike.  Snapshots
+//! are checksummed on the way in and verified on the way out; a corrupt
+//! entry is dropped and the lookup falls back to the next-shallower
+//! boundary (degrading toward a cold scan, never into a wrong state).
+//!
+//! Sessions and speculative decode compose for free: a *resumed* lane's
+//! state already encodes its private history, so resumes bypass the cache
+//! (keys are prefixes from the zero state); a *speculative* lane only
+//! diverges from the batched path after its prompt is ingested and its
+//! first token sampled, both of which sit downstream of the cache seed.
+
+pub mod trie;
+
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use crate::metrics::{hit_rate, Counter};
+use crate::session::codec::{Reader, Writer};
+use crate::tensor::Tensor;
+pub use trie::{InsertOutcome, RadixTrie};
+
+/// Snapshot wire magic: "HLAC" little-endian (cache entries are not
+/// session snapshots — different header, same codec substrate).
+pub const MAGIC: u32 = u32::from_le_bytes(*b"HLAC");
+
+/// Entry format version (readers reject unknown).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Cache sizing knobs (the `serve --prefix-cache-mb/--prefix-cache-chunk`
+/// flags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheCfg {
+    /// Byte budget for resident snapshots (LRU-evicted past it).
+    pub budget_bytes: usize,
+    /// Snapshot boundary stride in tokens: states are stored (and scans
+    /// are cut) at multiples of this — the exactness anchor (see module
+    /// docs).  Clamped to ≥ 1.
+    pub chunk: usize,
+}
+
+impl PrefixCacheCfg {
+    pub fn new(budget_bytes: usize, chunk: usize) -> PrefixCacheCfg {
+        PrefixCacheCfg { budget_bytes: budget_bytes.max(1), chunk: chunk.max(1) }
+    }
+
+    /// Budget in whole mebibytes (the CLI flag's unit).
+    pub fn megabytes(mb: usize, chunk: usize) -> PrefixCacheCfg {
+        PrefixCacheCfg::new(mb.max(1) << 20, chunk)
+    }
+}
+
+/// Point-in-time counter view (bench/CLI/`ServeStats` reporting).
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Prompt tokens skipped by warm hits (the work the cache saved).
+    pub hit_tokens: u64,
+    /// Entries dropped for failing their checksum on the way out.
+    pub corrupt: u64,
+    /// Snapshots currently resident.
+    pub resident: usize,
+    /// Bytes of snapshots currently resident.
+    pub resident_bytes: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups that found a reusable boundary.
+    pub fn hit_rate(&self) -> f64 {
+        hit_rate(self.hits, self.misses)
+    }
+}
+
+/// Thread-safe shared-prefix state cache: one per engine replica (cached
+/// states are functions of the replica's weights), shared between its
+/// admission path and any diagnostics readers.  Counters are lock-free so
+/// stats reads never contend with admissions.
+pub struct PrefixCache {
+    trie: Mutex<RadixTrie>,
+    chunk: usize,
+    pub hits: Counter,
+    pub misses: Counter,
+    pub inserts: Counter,
+    pub evictions: Counter,
+    pub hit_tokens: Counter,
+    pub corrupt: Counter,
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheCfg) -> PrefixCache {
+        PrefixCache {
+            trie: Mutex::new(RadixTrie::new(cfg.budget_bytes.max(1))),
+            chunk: cfg.chunk.max(1),
+            hits: Counter::new(),
+            misses: Counter::new(),
+            inserts: Counter::new(),
+            evictions: Counter::new(),
+            hit_tokens: Counter::new(),
+            corrupt: Counter::new(),
+        }
+    }
+
+    /// The snapshot boundary stride in tokens.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn len(&self) -> usize {
+        self.trie.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.trie.lock().unwrap().nbytes()
+    }
+
+    /// The deepest cached boundary that is a strict, chunk-aligned prefix
+    /// of `query` (the serving path passes the full prompt: strictness
+    /// then guarantees the lane keeps at least its final token), decoded
+    /// and checksum-verified.  A corrupt entry is evicted and the lookup
+    /// retries at the next-shallower boundary, so the worst outcome of
+    /// corruption is extra cold work, never a wrong state.  Counts one
+    /// hit or miss per call.
+    pub fn lookup(&self, query: &[u8]) -> Option<(usize, Vec<Tensor>)> {
+        let mut trie = self.trie.lock().unwrap();
+        loop {
+            let Some((key, bytes)) = trie.longest_prefix(query) else {
+                self.misses.incr();
+                return None;
+            };
+            match decode(bytes) {
+                Ok((n_tokens, parts)) if n_tokens == key.len() => {
+                    self.hits.incr();
+                    self.hit_tokens.add(key.len() as u64);
+                    return Some((key.len(), parts));
+                }
+                Ok((n_tokens, _)) => {
+                    log::warn!(
+                        "prefix cache: entry at depth {} claims {n_tokens} tokens; dropping",
+                        key.len()
+                    );
+                    trie.remove(&key);
+                    self.corrupt.incr();
+                }
+                Err(e) => {
+                    log::warn!("prefix cache: corrupt entry at depth {}: {e}", key.len());
+                    trie.remove(&key);
+                    self.corrupt.incr();
+                }
+            }
+        }
+    }
+
+    /// Store the post-`prefix` state components at a chunk-aligned
+    /// boundary.  Returns whether a fresh entry landed (refreshes and
+    /// over-budget rejections return false).
+    pub fn insert(&self, prefix: &[u8], parts: &[Tensor]) -> Result<bool> {
+        ensure!(!prefix.is_empty(), "empty prefix has nothing to cache");
+        ensure!(
+            prefix.len() % self.chunk == 0,
+            "prefix of {} tokens is not aligned to the {}-token boundary stride",
+            prefix.len(),
+            self.chunk
+        );
+        let bytes = encode(prefix.len(), parts);
+        let mut trie = self.trie.lock().unwrap();
+        let out = trie.insert(prefix, bytes);
+        drop(trie);
+        if out.fresh {
+            self.inserts.incr();
+        }
+        self.evictions.add(out.evicted as u64);
+        Ok(out.fresh)
+    }
+
+    /// Drop every resident snapshot (weights changed; counters survive).
+    pub fn clear(&self) {
+        let mut trie = self.trie.lock().unwrap();
+        let budget = trie.budget();
+        *trie = RadixTrie::new(budget);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let trie = self.trie.lock().unwrap();
+        CacheStats {
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            inserts: self.inserts.get(),
+            evictions: self.evictions.get(),
+            hit_tokens: self.hit_tokens.get(),
+            corrupt: self.corrupt.get(),
+            resident: trie.len(),
+            resident_bytes: trie.nbytes(),
+        }
+    }
+}
+
+/// Serialize state components: magic + version + token count + tensors +
+/// CRC-32 (the session codec's framing discipline).
+fn encode(n_tokens: usize, parts: &[Tensor]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(MAGIC);
+    w.u32(FORMAT_VERSION);
+    w.u64(n_tokens as u64);
+    w.u32(parts.len() as u32);
+    for t in parts {
+        w.u32(t.shape.len() as u32);
+        for &d in &t.shape {
+            w.u32(d as u32);
+        }
+        w.f32_slice(&t.data);
+    }
+    w.finish_with_crc()
+}
+
+/// Checksum-verify and decode an entry back into state components.
+fn decode(bytes: &[u8]) -> Result<(usize, Vec<Tensor>)> {
+    let mut r = Reader::with_crc(bytes)?;
+    let magic = r.u32()?;
+    ensure!(magic == MAGIC, "not a prefix-cache entry (magic {magic:#010x})");
+    let version = r.u32()?;
+    ensure!(
+        version == FORMAT_VERSION,
+        "prefix-cache entry v{version} unsupported (this build reads v{FORMAT_VERSION})"
+    );
+    let n_tokens = r.u64()? as usize;
+    let n = r.u32()? as usize;
+    let mut parts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rank = r.u32()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u32()? as usize);
+        }
+        let data = r.f32_slice()?;
+        ensure!(
+            data.len() == shape.iter().product::<usize>(),
+            "entry tensor payload {} != shape {shape:?}",
+            data.len()
+        );
+        parts.push(Tensor::from_vec(&shape, data));
+    }
+    ensure!(r.remaining() == 0, "{} trailing bytes after entry", r.remaining());
+    Ok((n_tokens, parts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn with_suffix(p: &[u8]) -> Vec<u8> {
+        let mut v = p.to_vec();
+        v.push(b'x');
+        v
+    }
+
+    fn parts(seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        let mut a = Tensor::zeros(&[2, 1, 2, 4, 4]);
+        let mut b = Tensor::zeros(&[2, 1, 2, 4]);
+        rng.fill_normal(&mut a.data, 1.0);
+        rng.fill_normal(&mut b.data, 1.0);
+        vec![a, b]
+    }
+
+    #[test]
+    fn entry_roundtrip_is_exact() {
+        let want = parts(3);
+        let bytes = encode(16, &want);
+        let (n, got) = decode(&bytes).unwrap();
+        assert_eq!(n, 16);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.shape, b.shape);
+            // bit-exact floats: the cache must not perturb a state
+            let ab: Vec<u32> = a.data.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb);
+        }
+    }
+
+    #[test]
+    fn lookup_hit_miss_and_alignment() {
+        let cache = PrefixCache::new(PrefixCacheCfg::new(1 << 20, 8));
+        assert_eq!(cache.chunk(), 8);
+        let prefix: Vec<u8> = (0..16).collect();
+        cache.insert(&prefix, &parts(1)).unwrap();
+        // misaligned inserts are a bug upstream: refuse loudly
+        assert!(cache.insert(&prefix[..13], &parts(1)).is_err());
+        assert!(cache.insert(&[], &parts(1)).is_err());
+
+        let mut query = prefix.clone();
+        query.extend_from_slice(b"suffix");
+        let (n, got) = cache.lookup(&query).unwrap();
+        assert_eq!(n, 16);
+        assert_eq!(got[0].shape, vec![2, 1, 2, 4, 4]);
+        // strict: the full prefix alone cannot hit its own entry
+        assert!(cache.lookup(&prefix).is_none());
+        assert!(cache.lookup(b"unrelated").is_none());
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.inserts), (1, 2, 1));
+        assert_eq!(st.hit_tokens, 16);
+        assert!((st.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(st.resident, 1);
+        assert!(st.resident_bytes > 0);
+    }
+
+    #[test]
+    fn corrupt_entry_degrades_to_shallower_boundary() {
+        let cache = PrefixCache::new(PrefixCacheCfg::new(1 << 20, 4));
+        let prefix: Vec<u8> = (0..12).collect();
+        cache.insert(&prefix[..4], &parts(1)).unwrap();
+        cache.insert(&prefix, &parts(2)).unwrap();
+        // corrupt the deep entry in place
+        {
+            let mut trie = cache.trie.lock().unwrap();
+            let (_, bytes) = trie.longest_prefix(&with_suffix(&prefix)).unwrap();
+            let mut evil = bytes.to_vec();
+            let mid = evil.len() / 2;
+            evil[mid] ^= 0xFF;
+            trie.insert(&prefix, evil);
+        }
+        let mut query = prefix.clone();
+        query.push(99);
+        let (n, _) = cache.lookup(&query).unwrap();
+        assert_eq!(n, 4, "corrupt deep entry must fall back to the shallow boundary");
+        let st = cache.stats();
+        assert_eq!(st.corrupt, 1);
+        assert_eq!(st.resident, 1, "the corrupt entry was dropped");
+    }
+
+    #[test]
+    fn budget_evicts_lru_and_clear_resets() {
+        let one = encode(4, &parts(1)).len();
+        let cache = PrefixCache::new(PrefixCacheCfg::new(2 * one, 4));
+        let keys: Vec<Vec<u8>> = (0..3u8).map(|t| vec![t; 4]).collect();
+        cache.insert(&keys[0], &parts(1)).unwrap();
+        cache.insert(&keys[1], &parts(2)).unwrap();
+        // touch key 0 so key 1 is the LRU victim
+        assert!(cache.lookup(&with_suffix(&keys[0])).is_some());
+        cache.insert(&keys[2], &parts(3)).unwrap();
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.resident, 2);
+        assert!(st.resident_bytes <= 2 * one);
+        assert!(cache.lookup(&with_suffix(&keys[1])).is_none(), "LRU victim gone");
+        assert!(cache.lookup(&with_suffix(&keys[2])).is_some());
+
+        cache.clear();
+        assert!(cache.is_empty());
+        assert!(cache.stats().evictions >= 1, "counters survive clear");
+    }
+
+    #[test]
+    fn megabytes_cfg_and_clamps() {
+        let cfg = PrefixCacheCfg::megabytes(2, 0);
+        assert_eq!(cfg.budget_bytes, 2 << 20);
+        assert_eq!(cfg.chunk, 1);
+        let tiny = PrefixCacheCfg::new(0, 0);
+        assert_eq!((tiny.budget_bytes, tiny.chunk), (1, 1));
+    }
+}

@@ -1,0 +1,515 @@
+//! Compressed radix trie over token prefixes with LRU eviction under a
+//! byte budget.
+//!
+//! The trie stores opaque payload bytes (the cache's checksummed state
+//! snapshots) at token-prefix keys.  Edges carry multi-token labels
+//! (path compression), so the node count scales with the number of
+//! *distinct* stored prefixes, not with their length — the natural shape
+//! for serving traffic where a handful of system prompts fan out into
+//! many per-request suffixes.
+//!
+//! Structural invariants (pinned by the property tests below and by
+//! [`RadixTrie::check_invariants`]):
+//!
+//! * a lookup result is always a **strict** token-prefix of the query
+//!   (the serving path must keep at least the final prompt token for the
+//!   normal decode step);
+//! * `resident_bytes` never exceeds the byte budget — inserting past it
+//!   evicts least-recently-used payloads first;
+//! * eviction removes *payloads*, never a node that still has live
+//!   descendants: a payload-less interior node survives as long as ≥ 2
+//!   children hang off it, and single-child payload-less nodes are merged
+//!   back into their child (full path re-compression).
+
+use std::collections::HashMap;
+
+/// One stored payload plus its LRU recency.
+#[derive(Debug)]
+struct Payload {
+    bytes: Vec<u8>,
+    tick: u64,
+}
+
+#[derive(Debug, Default)]
+struct Node {
+    /// Edge label from the parent (empty only at the root).
+    edge: Vec<u8>,
+    /// Children keyed by the first token of their edge.
+    children: HashMap<u8, Node>,
+    payload: Option<Payload>,
+}
+
+/// What an insert did (the cache's counter hooks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InsertOutcome {
+    /// False when the payload alone exceeds the whole budget (rejected)
+    /// or the key was already resident (recency refreshed, bytes swapped).
+    pub fresh: bool,
+    /// LRU payloads evicted to get back under budget.
+    pub evicted: usize,
+}
+
+/// The trie: payload bytes at token-prefix keys, LRU within a byte budget.
+#[derive(Debug)]
+pub struct RadixTrie {
+    root: Node,
+    budget: usize,
+    resident_bytes: usize,
+    entries: usize,
+    tick: u64,
+}
+
+impl RadixTrie {
+    pub fn new(budget: usize) -> RadixTrie {
+        RadixTrie {
+            root: Node::default(),
+            budget: budget.max(1),
+            resident_bytes: 0,
+            entries: 0,
+            tick: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Insert (or refresh) `bytes` at `key`, then evict LRU payloads
+    /// until the budget holds again.  A payload larger than the whole
+    /// budget is rejected outright rather than evicting everything else
+    /// for an entry that still cannot fit.
+    pub fn insert(&mut self, key: &[u8], bytes: Vec<u8>) -> InsertOutcome {
+        if bytes.len() > self.budget {
+            return InsertOutcome { fresh: false, evicted: 0 };
+        }
+        self.tick += 1;
+        let payload = Payload { bytes, tick: self.tick };
+        let delta_new = payload.bytes.len();
+        let replaced = insert_in(&mut self.root, key, payload);
+        self.resident_bytes += delta_new;
+        let fresh = match replaced {
+            Some(old) => {
+                self.resident_bytes -= old.bytes.len();
+                false
+            }
+            None => {
+                self.entries += 1;
+                true
+            }
+        };
+        let mut evicted = 0;
+        while self.resident_bytes > self.budget {
+            // O(entries) LRU scan, like the session store: the trie is
+            // small (hundreds of boundaries) and insert runs at
+            // admission, off the per-token hot loop
+            let victim = self.lru_key().expect("over budget implies a resident payload");
+            self.remove(&victim);
+            evicted += 1;
+        }
+        InsertOutcome { fresh, evicted }
+    }
+
+    /// The deepest stored key that is a **strict** prefix of `query`
+    /// (shorter than it), with its payload bytes; refreshes LRU recency.
+    pub fn longest_prefix(&mut self, query: &[u8]) -> Option<(Vec<u8>, &[u8])> {
+        let depth = best_depth(&self.root, query, 0)?;
+        self.tick += 1;
+        let tick = self.tick;
+        let payload = payload_at(&mut self.root, &query[..depth]).expect("best_depth found it");
+        payload.tick = tick;
+        Some((query[..depth].to_vec(), payload.bytes.as_slice()))
+    }
+
+    /// Does the trie hold a payload at exactly `key`? (No recency touch.)
+    pub fn contains(&mut self, key: &[u8]) -> bool {
+        payload_at(&mut self.root, key).is_some()
+    }
+
+    /// Remove the payload at `key` (pruning/merging emptied nodes);
+    /// returns whether anything was stored there.
+    pub fn remove(&mut self, key: &[u8]) -> bool {
+        match remove_in(&mut self.root, key) {
+            Some(old) => {
+                self.resident_bytes -= old.bytes.len();
+                self.entries -= 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The least-recently-used stored key.
+    fn lru_key(&self) -> Option<Vec<u8>> {
+        let mut best: Option<(u64, Vec<u8>)> = None;
+        visit(&self.root, &mut Vec::new(), &mut |key, p| {
+            if best.as_ref().map_or(true, |(t, _)| p.tick < *t) {
+                best = Some((p.tick, key.to_vec()));
+            }
+        });
+        best.map(|(_, k)| k)
+    }
+
+    /// All stored keys (ascending by key) — test/diagnostic surface.
+    pub fn keys(&self) -> Vec<Vec<u8>> {
+        let mut out = vec![];
+        visit(&self.root, &mut Vec::new(), &mut |key, _| out.push(key.to_vec()));
+        out.sort();
+        out
+    }
+
+    /// Verify every structural invariant; returns a description of the
+    /// first violation.  Used by the property tests after every operation.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut entries = 0usize;
+        let mut bytes = 0usize;
+        check_node(&self.root, true, &mut entries, &mut bytes)?;
+        if entries != self.entries {
+            return Err(format!("entry accounting: counted {entries}, stored {}", self.entries));
+        }
+        if bytes != self.resident_bytes {
+            return Err(format!("byte accounting: counted {bytes}, stored {}", self.resident_bytes));
+        }
+        if self.resident_bytes > self.budget {
+            return Err(format!("budget exceeded: {} > {}", self.resident_bytes, self.budget));
+        }
+        Ok(())
+    }
+}
+
+/// Insert `payload` at `key` under `node`; returns the replaced payload.
+fn insert_in(node: &mut Node, key: &[u8], payload: Payload) -> Option<Payload> {
+    if key.is_empty() {
+        return node.payload.replace(payload);
+    }
+    let first = key[0];
+    let Some(child) = node.children.get_mut(&first) else {
+        node.children.insert(
+            first,
+            Node { edge: key.to_vec(), children: HashMap::new(), payload: Some(payload) },
+        );
+        return None;
+    };
+    let lcp = common_prefix(&child.edge, key);
+    if lcp == child.edge.len() {
+        return insert_in(child, &key[lcp..], payload);
+    }
+    // split the edge: child becomes a grandchild of a new interior node
+    let mut old = node.children.remove(&first).expect("child exists");
+    let shared = old.edge[..lcp].to_vec();
+    let old_rest = old.edge[lcp..].to_vec();
+    old.edge = old_rest;
+    let mut mid = Node { edge: shared, children: HashMap::new(), payload: None };
+    mid.children.insert(old.edge[0], old);
+    if key.len() == lcp {
+        mid.payload = Some(payload);
+    } else {
+        let rest = key[lcp..].to_vec();
+        mid.children.insert(
+            rest[0],
+            Node { edge: rest, children: HashMap::new(), payload: Some(payload) },
+        );
+    }
+    node.children.insert(first, mid);
+    None
+}
+
+/// Depth (in tokens) of the deepest payload-bearing node whose key is a
+/// strict prefix of `query`.
+fn best_depth(node: &Node, remaining: &[u8], depth: usize) -> Option<usize> {
+    let mut best = match (&node.payload, remaining.is_empty()) {
+        // strict: a payload at the full query depth is NOT a hit
+        (Some(_), false) => Some(depth),
+        _ => None,
+    };
+    if !remaining.is_empty() {
+        if let Some(child) = node.children.get(&remaining[0]) {
+            if remaining.len() >= child.edge.len() && remaining.starts_with(&child.edge) {
+                if let Some(d) =
+                    best_depth(child, &remaining[child.edge.len()..], depth + child.edge.len())
+                {
+                    best = Some(best.map_or(d, |b| b.max(d)));
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Mutable payload at exactly `key`.
+fn payload_at<'a>(node: &'a mut Node, key: &[u8]) -> Option<&'a mut Payload> {
+    if key.is_empty() {
+        return node.payload.as_mut();
+    }
+    let child = node.children.get_mut(&key[0])?;
+    if key.len() < child.edge.len() || !key.starts_with(&child.edge) {
+        return None;
+    }
+    let edge_len = child.edge.len();
+    payload_at(child, &key[edge_len..])
+}
+
+/// Remove the payload at `key`, pruning/merging the emptied path.
+fn remove_in(node: &mut Node, key: &[u8]) -> Option<Payload> {
+    if key.is_empty() {
+        return node.payload.take();
+    }
+    let first = key[0];
+    let child = node.children.get_mut(&first)?;
+    if key.len() < child.edge.len() || !key.starts_with(&child.edge) {
+        return None;
+    }
+    let edge_len = child.edge.len();
+    let removed = remove_in(child, &key[edge_len..]);
+    if removed.is_some() && child.payload.is_none() {
+        match child.children.len() {
+            // a bare leaf: drop it
+            0 => {
+                node.children.remove(&first);
+            }
+            // path re-compression: merge the only grandchild up
+            1 => {
+                let child = node.children.get_mut(&first).expect("still there");
+                let (_, mut gc) = child.children.drain().next().expect("len checked");
+                let mut edge = child.edge.clone();
+                edge.extend_from_slice(&gc.edge);
+                gc.edge = edge;
+                node.children.insert(first, gc);
+            }
+            // live descendants on both sides: the node must survive
+            _ => {}
+        }
+    }
+    removed
+}
+
+fn common_prefix(a: &[u8], b: &[u8]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Visit every stored payload with its full key.
+fn visit<'a>(node: &'a Node, prefix: &mut Vec<u8>, f: &mut impl FnMut(&[u8], &'a Payload)) {
+    prefix.extend_from_slice(&node.edge);
+    if let Some(p) = &node.payload {
+        f(prefix, p);
+    }
+    for child in node.children.values() {
+        visit(child, prefix, f);
+    }
+    prefix.truncate(prefix.len() - node.edge.len());
+}
+
+fn check_node(
+    node: &Node,
+    is_root: bool,
+    entries: &mut usize,
+    bytes: &mut usize,
+) -> Result<(), String> {
+    if is_root {
+        if !node.edge.is_empty() {
+            return Err("root must have an empty edge".into());
+        }
+    } else {
+        if node.edge.is_empty() {
+            return Err("non-root node with an empty edge".into());
+        }
+        if node.payload.is_none() && node.children.len() < 2 {
+            return Err(format!(
+                "payload-less non-root node with {} child(ren) survived pruning",
+                node.children.len()
+            ));
+        }
+    }
+    if let Some(p) = &node.payload {
+        *entries += 1;
+        *bytes += p.bytes.len();
+    }
+    for (&k, child) in &node.children {
+        if child.edge.first() != Some(&k) {
+            return Err(format!("child keyed {k} but edge starts {:?}", child.edge.first()));
+        }
+        check_node(child, false, entries, bytes)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::HashMap as Map;
+
+    fn payload(tag: u8, n: usize) -> Vec<u8> {
+        vec![tag; n]
+    }
+
+    #[test]
+    fn insert_lookup_remove_basics() {
+        let mut t = RadixTrie::new(1 << 20);
+        assert!(t.is_empty());
+        assert!(t.longest_prefix(b"anything").is_none());
+        assert!(t.insert(b"sys", payload(1, 8)).fresh);
+        assert!(t.insert(b"system prompt", payload(2, 8)).fresh);
+        // shared-edge split happened under the hood
+        t.check_invariants().unwrap();
+        assert_eq!(t.len(), 2);
+
+        // deepest strict prefix wins
+        let (key, bytes) = t.longest_prefix(b"system prompt + user turn").unwrap();
+        assert_eq!(key, b"system prompt");
+        assert_eq!(bytes, payload(2, 8));
+        // a query equal to a stored key must fall back to the shallower
+        // boundary: the result is a STRICT prefix
+        let (key, _) = t.longest_prefix(b"system prompt").unwrap();
+        assert_eq!(key, b"sys");
+        assert!(t.longest_prefix(b"sys").is_none(), "no strict prefix of the shortest key");
+        assert!(t.longest_prefix(b"other").is_none());
+
+        assert!(t.remove(b"sys"));
+        assert!(!t.remove(b"sys"));
+        t.check_invariants().unwrap();
+        assert_eq!(t.len(), 1);
+        assert!(t.longest_prefix(b"system prompt").is_none());
+    }
+
+    #[test]
+    fn replacing_a_key_swaps_bytes_without_double_count() {
+        let mut t = RadixTrie::new(100);
+        assert!(t.insert(b"abc", payload(1, 40)).fresh);
+        let out = t.insert(b"abc", payload(2, 60));
+        assert!(!out.fresh, "same key is a refresh, not a new entry");
+        assert_eq!(out.evicted, 0);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.nbytes(), 60);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversize_payload_is_rejected_not_thrashed() {
+        let mut t = RadixTrie::new(64);
+        t.insert(b"keep", payload(1, 32));
+        let out = t.insert(b"huge", payload(2, 65));
+        assert!(!out.fresh);
+        assert_eq!(out.evicted, 0, "a hopeless insert must not evict residents");
+        assert_eq!(t.len(), 1);
+        assert!(t.longest_prefix(b"keep it").is_some());
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency() {
+        let mut t = RadixTrie::new(100);
+        t.insert(b"aa", payload(1, 40));
+        t.insert(b"bb", payload(2, 40));
+        // touch aa so bb becomes LRU
+        assert!(t.longest_prefix(b"aaX").is_some());
+        let out = t.insert(b"cc", payload(3, 40));
+        assert_eq!(out.evicted, 1);
+        assert_eq!(t.keys(), vec![b"aa".to_vec(), b"cc".to_vec()]);
+        t.check_invariants().unwrap();
+    }
+
+    /// Property test: the trie against a brute-force shadow map oracle —
+    /// random inserts/lookups/removes over a tiny alphabet (forcing deep
+    /// shared prefixes and edge splits), with every structural invariant
+    /// checked after every operation.  Budget is unbounded here so the
+    /// oracle stays exact; eviction behavior has its own property below.
+    #[test]
+    fn property_matches_shadow_map_oracle() {
+        let mut rng = Rng::new(0xCAFE);
+        let mut t = RadixTrie::new(usize::MAX);
+        let mut shadow: Map<Vec<u8>, Vec<u8>> = Map::new();
+        let key = |rng: &mut Rng| -> Vec<u8> {
+            let n = rng.range(1, 12);
+            (0..n).map(|_| rng.below(3) as u8).collect()
+        };
+        for step in 0..600 {
+            match rng.below(10) {
+                0..=4 => {
+                    let k = key(&mut rng);
+                    let v = payload(rng.below(256) as u8, rng.range(1, 16));
+                    let out = t.insert(&k, v.clone());
+                    assert_eq!(out.fresh, !shadow.contains_key(&k), "step {step}");
+                    shadow.insert(k, v);
+                }
+                5..=7 => {
+                    let q = key(&mut rng);
+                    // oracle: the longest stored strict prefix of q
+                    let want = shadow
+                        .iter()
+                        .filter(|(k, _)| k.len() < q.len() && q.starts_with(k))
+                        .max_by_key(|(k, _)| k.len());
+                    match (t.longest_prefix(&q), want) {
+                        (None, None) => {}
+                        (Some((k, b)), Some((wk, wb))) => {
+                            assert_eq!(&k, wk, "step {step}: wrong prefix for {q:?}");
+                            assert_eq!(b, wb.as_slice(), "step {step}");
+                            assert!(k.len() < q.len(), "step {step}: lookup not strict");
+                        }
+                        (got, want) => {
+                            panic!("step {step}: got {got:?}, oracle {want:?}")
+                        }
+                    }
+                }
+                _ => {
+                    let k = key(&mut rng);
+                    assert_eq!(t.remove(&k), shadow.remove(&k).is_some(), "step {step}");
+                }
+            }
+            t.check_invariants().unwrap_or_else(|e| panic!("step {step}: {e}"));
+            assert_eq!(t.len(), shadow.len(), "step {step}");
+            assert_eq!(
+                t.nbytes(),
+                shadow.values().map(Vec::len).sum::<usize>(),
+                "step {step}"
+            );
+        }
+        assert!(!t.is_empty(), "the walk should leave residue");
+    }
+
+    /// Property test: under a tight budget, the byte budget is never
+    /// exceeded, the most-recently-touched key always survives eviction,
+    /// and pruning/merging never violates the structure invariants.
+    #[test]
+    fn property_eviction_under_byte_budget() {
+        let mut rng = Rng::new(0xBEEF);
+        let budget = 200usize;
+        let mut t = RadixTrie::new(budget);
+        let mut last_touched: Option<Vec<u8>> = None;
+        for step in 0..400 {
+            let n = rng.range(1, 10);
+            let k: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+            let size = rng.range(8, 64);
+            let out = t.insert(&k, payload(step as u8, size));
+            if size <= budget {
+                assert!(t.contains(&k), "step {step}: fitting insert must land");
+            }
+            last_touched = Some(k);
+            if rng.bool(0.3) {
+                let q: Vec<u8> = (0..rng.range(2, 12)).map(|_| rng.below(4) as u8).collect();
+                if let Some((hit, _)) = t.longest_prefix(&q) {
+                    assert!(q.starts_with(&hit) && hit.len() < q.len(), "step {step}");
+                    last_touched = Some(hit);
+                }
+            }
+            t.check_invariants().unwrap_or_else(|e| panic!("step {step}: {e}"));
+            assert!(t.nbytes() <= budget, "step {step}: {} > {budget}", t.nbytes());
+            if let Some(lt) = &last_touched {
+                assert!(
+                    out.evicted == 0 || t.contains(lt),
+                    "step {step}: most-recently-used key was evicted"
+                );
+            }
+        }
+    }
+}

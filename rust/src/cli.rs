@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::cache::PrefixCacheCfg;
 use crate::config::RunConfig;
 use crate::coordinator::router::Router;
 use crate::coordinator::{collect_tokens, spawn_engine_full, EngineOpts, GenRequest};
@@ -34,6 +35,9 @@ generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
 serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
           --session-capacity N --spill-dir DIR
           --prefill-chunk N --prefill-threads N  (0 0 = decode-as-prefill)
+          --prefix-cache-mb N --prefix-cache-chunk N  (shared-prefix
+          cache, per replica; needs --prefill-chunk; requests opt out
+          with \"no_cache\": true on the wire)
           --spec-k N --spec-drafter D  (spec engine; requests opt in
           with \"spec\": true on the wire)
 sessions: <list|inspect|evict> --spill-dir DIR [--session-id N]";
@@ -182,6 +186,13 @@ fn prefill_cfg(cfg: &RunConfig) -> Option<PrefillCfg> {
     (cfg.prefill_chunk > 0).then(|| PrefillCfg::scan(cfg.prefill_chunk, cfg.prefill_threads))
 }
 
+/// `--prefix-cache-mb N` (N > 0) attaches the shared-prefix cache (one
+/// per replica — cached states are functions of the replica's weights).
+fn prefix_cache_cfg(cfg: &RunConfig) -> Option<PrefixCacheCfg> {
+    (cfg.prefix_cache_mb > 0)
+        .then(|| PrefixCacheCfg::megabytes(cfg.prefix_cache_mb, cfg.prefix_cache_chunk))
+}
+
 /// `--spec true` / `--spec-k N` attach the speculative decoding engine;
 /// k stays adaptive ([`crate::spec::AdaptiveK`]) with `--spec-k` as the
 /// starting draft length.  The drafter string was validated at parse time.
@@ -207,6 +218,7 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
             seed: cfg.seed as i32,
             store: None,
             prefill: prefill_cfg(cfg),
+            prefix_cache: None,
             spec: spec.clone(),
         },
     );
@@ -263,6 +275,7 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
                 seed: cfg.seed as i32 + r as i32,
                 store: Some(store.clone()),
                 prefill: prefill_cfg(cfg),
+                prefix_cache: prefix_cache_cfg(cfg),
                 spec: spec_cfg(cfg),
             },
         );
@@ -275,6 +288,19 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     match prefill_cfg(cfg) {
         Some(p) => println!("prefill: chunked scan (w={}, {} thread(s))", p.chunk, p.threads),
         None => println!("prefill: decode-as-prefill (enable with --prefill-chunk N)"),
+    }
+    match prefix_cache_cfg(cfg) {
+        Some(c) => {
+            println!(
+                "prefix cache: {} per replica, boundary stride {} tokens — requests opt out with \"no_cache\": true",
+                human_bytes(c.budget_bytes),
+                c.chunk
+            );
+            if prefill_cfg(cfg).is_none() {
+                println!("  (inert without --prefill-chunk: admissions never scan on the host twin)");
+            }
+        }
+        None => println!("prefix cache: off (enable with --prefix-cache-mb N)"),
     }
     match spec_cfg(cfg) {
         Some(s) => println!(

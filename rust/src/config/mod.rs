@@ -27,6 +27,11 @@ pub struct RunConfig {
     pub prefill_chunk: usize,
     /// scan-prefill worker threads; 0 = one per available core, capped at 8
     pub prefill_threads: usize,
+    // shared-prefix cache (per replica)
+    /// byte budget in MiB for cached prefix-boundary snapshots; 0 = off
+    pub prefix_cache_mb: usize,
+    /// snapshot boundary stride in tokens (prompt scans cut here)
+    pub prefix_cache_chunk: usize,
     // speculative decoding (draft/verify/rollback)
     /// initial draft length; 0 keeps the spec engine detached (serve) —
     /// requests opt in per "spec": true once attached
@@ -65,6 +70,8 @@ impl Default for RunConfig {
             route: RoutePolicy::LeastLoaded,
             prefill_chunk: 0,
             prefill_threads: 0,
+            prefix_cache_mb: 0,
+            prefix_cache_chunk: 32,
             spec_k: 0,
             spec_drafter: "ngram".into(),
             spec: false,
@@ -125,6 +132,13 @@ impl RunConfig {
             }
             "prefill-chunk" | "prefill_chunk" => self.prefill_chunk = value.parse()?,
             "prefill-threads" | "prefill_threads" => self.prefill_threads = value.parse()?,
+            "prefix-cache-mb" | "prefix_cache_mb" => self.prefix_cache_mb = value.parse()?,
+            "prefix-cache-chunk" | "prefix_cache_chunk" => {
+                self.prefix_cache_chunk = value.parse()?;
+                if self.prefix_cache_chunk == 0 {
+                    bail!("prefix-cache-chunk must be >= 1 (it is the snapshot boundary stride)");
+                }
+            }
             "spec-k" | "spec_k" => self.spec_k = value.parse()?,
             "spec-drafter" | "spec_drafter" => {
                 crate::spec::DrafterKind::parse(value).ok_or_else(|| {
@@ -246,6 +260,20 @@ mod tests {
         assert_eq!(cfg.prefill_threads, 4);
         // default keeps decode-as-prefill
         assert_eq!(RunConfig::default().prefill_chunk, 0);
+    }
+
+    #[test]
+    fn prefix_cache_flags_apply_and_validate() {
+        let cfg = RunConfig::from_args(&s(&["--prefix-cache-mb", "64", "--prefix-cache-chunk=16"]))
+            .unwrap();
+        assert_eq!(cfg.prefix_cache_mb, 64);
+        assert_eq!(cfg.prefix_cache_chunk, 16);
+        // defaults keep the cache off but a sane stride for when it's on
+        let d = RunConfig::default();
+        assert_eq!(d.prefix_cache_mb, 0);
+        assert_eq!(d.prefix_cache_chunk, 32);
+        // a zero stride can never snapshot a boundary: fail at parse time
+        assert!(RunConfig::from_args(&s(&["--prefix-cache-chunk", "0"])).is_err());
     }
 
     #[test]

@@ -21,6 +21,10 @@
 //! additionally snapshot their lane's constant-size state into a shared
 //! [`crate::session::SessionStore`] on completion and restore it on
 //! resume, so a multi-turn conversation never re-prefills its history.
+//! With a [`crate::cache::PrefixCache`] attached, fresh lanes also seed
+//! their admission-time scan from the longest cached prefix boundary of
+//! their prompt, so a shared system prompt is prefill-scanned once per
+//! replica instead of once per request.
 
 pub mod batch;
 pub mod request;
@@ -34,6 +38,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cache::{PrefixCache, PrefixCacheCfg};
 use crate::metrics::{Histogram, Meter, Table};
 use crate::model::RustModel;
 use crate::prefill::{PrefillCfg, PrefillMode, Prefiller};
@@ -115,6 +120,26 @@ pub struct ServeStats {
     pub prefills: u64,
     /// Prompt tokens ingested by the prefill engine (vs decode steps).
     pub prefilled_tokens: u64,
+    /// Prefix-cache lookups that seeded a prefill from a cached boundary
+    /// / that found nothing reusable.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Boundary snapshots inserted / LRU-evicted under the byte budget.
+    pub cache_inserts: u64,
+    pub cache_evictions: u64,
+    /// Prompt tokens skipped by warm hits (work the cache saved).
+    pub cache_hit_tokens: u64,
+    /// Bytes of cached boundary snapshots resident at shutdown.
+    pub cache_resident_bytes: usize,
+    /// TTFT split by cache outcome: lanes seeded from a cached prefix
+    /// (warm) vs lanes that scanned their whole prompt (cold) — the
+    /// headline the shared-prefix workload buys (bench E16).
+    pub ttft_warm_us_p50: f64,
+    pub ttft_warm_us_p95: f64,
+    pub ttft_warm_us_p99: f64,
+    pub ttft_cold_us_p50: f64,
+    pub ttft_cold_us_p95: f64,
+    pub ttft_cold_us_p99: f64,
     pub latency_us_p50: f64,
     pub latency_us_p95: f64,
     pub latency_us_p99: f64,
@@ -154,6 +179,12 @@ impl ServeStats {
         }
     }
 
+    /// Fraction of prefix-cache lookups that seeded a prefill (0 when the
+    /// cache was off or never consulted).
+    pub fn cache_hit_rate(&self) -> f64 {
+        crate::metrics::hit_rate(self.cache_hits, self.cache_misses)
+    }
+
     /// The TTFT breakdown as a [`Table`] (the reporter benches/CLI print).
     pub fn ttft_table(&self) -> Table {
         let mut t = Table::new(&["phase", "p50 ms", "p95 ms", "p99 ms"]);
@@ -174,6 +205,8 @@ impl ServeStats {
             self.first_decode_us_p99,
         );
         row("ttft (e2e)", self.ttft_us_p50, self.ttft_us_p95, self.ttft_us_p99);
+        row("ttft (warm-hit)", self.ttft_warm_us_p50, self.ttft_warm_us_p95, self.ttft_warm_us_p99);
+        row("ttft (cold)", self.ttft_cold_us_p50, self.ttft_cold_us_p95, self.ttft_cold_us_p99);
         t
     }
 }
@@ -196,6 +229,13 @@ pub struct EngineLoop {
     /// runs the chunked scan on the pure-Rust twin of the artifact model
     /// and lands the state in the lane before the first decode step.
     prefiller: Option<Prefiller>,
+    /// Shared-prefix radix cache (None = every prompt scans cold).  Fresh
+    /// non-opted-out lanes seed their prefill from the longest cached
+    /// boundary and contribute the fresh boundaries they compute.  One
+    /// cache per replica: cached states are functions of the replica's
+    /// weights.  Requires a prefiller — without the pure-Rust twin there
+    /// is no host-side scan to seed or to harvest boundaries from.
+    prefix_cache: Option<Arc<PrefixCache>>,
     /// Speculative decoding engine (None = every lane decodes serially).
     /// Opted-in lanes leave the batched step once their prompt is done:
     /// each engine cycle gives them one draft/verify/rollback round on
@@ -215,6 +255,10 @@ pub struct EngineLoop {
     pub queue_hist: Histogram,
     pub prefill_hist: Histogram,
     pub first_decode_hist: Histogram,
+    /// TTFT split by prefix-cache outcome (warm = seeded from a cached
+    /// boundary; cold = everything else, cache or no cache).
+    pub ttft_warm_hist: Histogram,
+    pub ttft_cold_hist: Histogram,
     meter: Meter,
     occupied_steps: u64,
     occupied_lanes: u64,
@@ -251,6 +295,7 @@ impl EngineLoop {
             rx,
             sessions: None,
             prefiller: None,
+            prefix_cache: None,
             spec: None,
             seed,
             params,
@@ -261,6 +306,8 @@ impl EngineLoop {
             queue_hist: Histogram::new(),
             prefill_hist: Histogram::new(),
             first_decode_hist: Histogram::new(),
+            ttft_warm_hist: Histogram::new(),
+            ttft_cold_hist: Histogram::new(),
             meter: Meter::new(),
             occupied_steps: 0,
             occupied_lanes: 0,
@@ -318,6 +365,27 @@ impl EngineLoop {
                 self.prefiller = None;
             }
         }
+    }
+
+    /// Attach a shared-prefix cache (`serve --prefix-cache-mb N`): fresh
+    /// lanes seed their admission-time scan from the longest cached
+    /// boundary of their prompt and insert the boundaries they compute.
+    /// Call after [`EngineLoop::set_prefill`] — the cache rides the
+    /// prefill engine's pure-Rust twin, so without one it is inert (a
+    /// warning, not an error, matching the other attachment surfaces).
+    pub fn set_prefix_cache(&mut self, cfg: PrefixCacheCfg) {
+        if self.prefiller.is_none() {
+            log::warn!(
+                "prefix cache configured without a prefill engine; \
+                 enable --prefill-chunk so admissions scan on the host twin"
+            );
+        }
+        self.prefix_cache = Some(Arc::new(PrefixCache::new(cfg)));
+    }
+
+    /// The attached prefix cache, if any (stats/diagnostics surface).
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.prefix_cache.as_ref()
     }
 
     /// Attach the speculative decoding engine (`serve --spec-k N`): builds
@@ -459,12 +527,27 @@ impl EngineLoop {
             // on the pure-Rust twin (from the restored snapshot when
             // resuming — the non-identity initial segment of the scan),
             // land the state in the lane, and jump the cursor so the lane
-            // enters the sampling phase after one decode step
+            // enters the sampling phase after one decode step.  Fresh
+            // lanes that did not opt out go through the shared-prefix
+            // cache: the scan seeds from the longest cached boundary and
+            // contributes the fresh boundaries it computes.
             let scanned = match (&self.prefiller, &lane) {
                 (Some(pf), Lane::Active(a)) if a.prompt.len() >= 2 => {
                     let t0 = Instant::now();
-                    match pf.ingest_lane(snap.as_ref().map(|s| s.state.as_slice()), &a.prompt) {
-                        Ok((parts, consumed)) => Some((parts, consumed, t0.elapsed())),
+                    let cache = match (&self.prefix_cache, &snap) {
+                        (Some(c), None) if a.cache => Some(c),
+                        _ => None,
+                    };
+                    let ingested = match cache {
+                        Some(c) => pf
+                            .ingest_lane_cached(c, &a.prompt)
+                            .map(|(parts, consumed, out)| (parts, consumed, out.hit_tokens > 0)),
+                        None => pf
+                            .ingest_lane(snap.as_ref().map(|s| s.state.as_slice()), &a.prompt)
+                            .map(|(parts, consumed)| (parts, consumed, false)),
+                    };
+                    match ingested {
+                        Ok((parts, consumed, warm)) => Some((parts, consumed, warm, t0.elapsed())),
                         Err(e) => {
                             log::warn!("prefill failed, decode-as-prefill fallback: {e}");
                             None
@@ -473,11 +556,14 @@ impl EngineLoop {
                 }
                 _ => None,
             };
-            if let Some((parts, consumed, spent)) = scanned {
+            if let Some((parts, consumed, warm, spent)) = scanned {
                 match self.import_state_lane(lane_idx, &parts) {
                     Ok(()) => {
                         self.pool.write_lane(lane_idx, &parts);
                         lane.mark_prefilled(consumed);
+                        if let Lane::Active(a) = &mut lane {
+                            a.cache_warm = warm;
+                        }
                         self.prefill_hist.record(spent);
                         self.prefills += 1;
                         self.prefilled_tokens += consumed as u64;
@@ -607,6 +693,13 @@ impl EngineLoop {
                 if let Lane::Active(a) = lane {
                     self.ttft_hist.record(now - a.arrival);
                     self.first_decode_hist.record(now - a.decode_start);
+                    // the cold-vs-warm breakdown: a warm lane's prompt was
+                    // seeded from a cached prefix boundary
+                    if a.cache_warm {
+                        self.ttft_warm_hist.record(now - a.arrival);
+                    } else {
+                        self.ttft_cold_hist.record(now - a.arrival);
+                    }
                 }
             }
             if lane.take_emitted_flag() {
@@ -771,6 +864,7 @@ impl EngineLoop {
 
     pub fn stats(&self) -> ServeStats {
         let spec = self.spec.as_ref().map(|e| e.stats.clone()).unwrap_or_default();
+        let cache = self.prefix_cache.as_ref().map(|c| c.stats()).unwrap_or_default();
         ServeStats {
             completed: self.completed,
             tokens_out: self.meter.units(),
@@ -792,6 +886,18 @@ impl EngineLoop {
             first_decode_us_p99: self.first_decode_hist.percentile_us(99.0),
             prefills: self.prefills,
             prefilled_tokens: self.prefilled_tokens,
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            cache_inserts: cache.inserts,
+            cache_evictions: cache.evictions,
+            cache_hit_tokens: cache.hit_tokens,
+            cache_resident_bytes: cache.resident_bytes,
+            ttft_warm_us_p50: self.ttft_warm_hist.percentile_us(50.0),
+            ttft_warm_us_p95: self.ttft_warm_hist.percentile_us(95.0),
+            ttft_warm_us_p99: self.ttft_warm_hist.percentile_us(99.0),
+            ttft_cold_us_p50: self.ttft_cold_hist.percentile_us(50.0),
+            ttft_cold_us_p95: self.ttft_cold_hist.percentile_us(95.0),
+            ttft_cold_us_p99: self.ttft_cold_hist.percentile_us(99.0),
             latency_us_p50: self.latency_hist.percentile_us(50.0),
             latency_us_p95: self.latency_hist.percentile_us(95.0),
             latency_us_p99: self.latency_hist.percentile_us(99.0),
@@ -833,6 +939,10 @@ pub struct EngineOpts {
     pub store: Option<Arc<SessionStore>>,
     /// Scan prefill configuration (None = decode-as-prefill).
     pub prefill: Option<PrefillCfg>,
+    /// Shared-prefix cache configuration (None = cold prefills; needs
+    /// `prefill` attached to do anything).  Requests opt out per
+    /// [`GenRequest::without_cache`].
+    pub prefix_cache: Option<PrefixCacheCfg>,
     /// Speculative decoding engine configuration (None = no spec engine;
     /// requests opt in per [`GenRequest::with_spec`] when attached).
     pub spec: Option<SpecCfg>,
@@ -863,7 +973,14 @@ pub fn spawn_engine_with_store(
     spawn_engine_full(
         artifacts,
         cfg_name,
-        EngineOpts { policy: Some(policy), seed, store, prefill: None, spec: None },
+        EngineOpts {
+            policy: Some(policy),
+            seed,
+            store,
+            prefill: None,
+            prefix_cache: None,
+            spec: None,
+        },
     )
 }
 
@@ -882,6 +999,9 @@ pub fn spawn_engine_full(
         }
         if let Some(prefill) = opts.prefill {
             lp.set_prefill(prefill);
+        }
+        if let Some(cache) = opts.prefix_cache {
+            lp.set_prefix_cache(cache);
         }
         if let Some(spec) = opts.spec {
             lp.set_spec(spec);
@@ -919,9 +1039,12 @@ mod tests {
         assert_eq!(s.accepted_per_step(), 0.0, "no rounds: no accepted-per-step");
         assert_eq!(s.spec_accept_rate(), 0.0, "no drafts: no acceptance rate");
         let rendered = s.ttft_table().render();
-        for phase in ["queue-wait", "prefill", "first-decode", "ttft (e2e)"] {
+        for phase in
+            ["queue-wait", "prefill", "first-decode", "ttft (e2e)", "ttft (warm-hit)", "ttft (cold)"]
+        {
             assert!(rendered.contains(phase), "missing {phase} row:\n{rendered}");
         }
+        assert_eq!(s.cache_hit_rate(), 0.0, "no lookups: no cache hit rate");
         // empty histogram backs all of those zeros
         let h = Histogram::new();
         assert_eq!(h.percentile_us(50.0), 0.0);
@@ -946,6 +1069,25 @@ mod tests {
         };
         let rendered = stats.ttft_table().render();
         assert!(rendered.contains("1.5"), "1500us renders as ~1.50 ms:\n{rendered}");
+    }
+
+    #[test]
+    fn serve_stats_cache_counters() {
+        let s = ServeStats {
+            cache_hits: 30,
+            cache_misses: 10,
+            cache_inserts: 12,
+            cache_evictions: 4,
+            cache_hit_tokens: 900,
+            ttft_warm_us_p50: 200.0,
+            ttft_cold_us_p50: 1500.0,
+            ..Default::default()
+        };
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(s.ttft_warm_us_p50 < s.ttft_cold_us_p50, "warm hits skip prefix work");
+        let rendered = s.ttft_table().render();
+        assert!(rendered.contains("ttft (warm-hit)"), "{rendered}");
+        assert!(rendered.contains("ttft (cold)"), "{rendered}");
     }
 
     #[test]

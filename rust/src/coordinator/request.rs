@@ -77,6 +77,15 @@ pub struct GenRequest {
     /// distributions (draw-for-draw identical under the serial verify
     /// backend — `rust/tests/spec_differential.rs` pins both claims).
     pub spec: bool,
+    /// Allow the shared-prefix cache to seed this request's prefill (the
+    /// default).  `false` opts out per request (`"no_cache": true` on the
+    /// wire): the prompt is scanned cold and contributes no boundary
+    /// snapshots — for prompts that carry per-user secrets a shared
+    /// cache must not retain.  Warm and cold runs of the cached path are
+    /// byte-identical; vs. the opt-out path (a different scan
+    /// segmentation) greedy streams are identical and seeded ones
+    /// distribution-identical (`rust/tests/prefix_cache_differential.rs`).
+    pub cache: bool,
     /// When the request entered the system — the anchor for the TTFT
     /// breakdown (queue-wait is admission − submission).
     pub submitted: Instant,
@@ -100,6 +109,7 @@ impl GenRequest {
             session: None,
             resume: false,
             spec: false,
+            cache: true,
             submitted: Instant::now(),
         }
     }
@@ -119,6 +129,12 @@ impl GenRequest {
     /// Opt into speculative decoding (draft/verify/rollback lanes).
     pub fn with_spec(mut self) -> GenRequest {
         self.spec = true;
+        self
+    }
+
+    /// Opt out of the shared-prefix cache for this request.
+    pub fn without_cache(mut self) -> GenRequest {
+        self.cache = false;
         self
     }
 }
@@ -142,6 +158,19 @@ pub fn collect_tokens(rx: &std::sync::mpsc::Receiver<TokenEvent>) -> (Vec<u8>, O
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn builders_set_flags() {
+        use crate::model::sampler::SamplerCfg;
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let req = GenRequest::new(1, vec![1, 2], 4, SamplerCfg::greedy(), tx);
+        assert!(req.cache, "cache participation is the default");
+        assert!(!req.spec && !req.resume && req.session.is_none());
+        let req = req.with_session(9).resuming().with_spec().without_cache();
+        assert_eq!(req.session, Some(9));
+        assert!(req.resume && req.spec);
+        assert!(!req.cache, "without_cache opts the request out");
+    }
 
     #[test]
     fn collect_reads_until_done() {

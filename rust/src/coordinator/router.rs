@@ -173,6 +173,55 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_rotation_is_load_blind_and_session_blind() {
+        // rotation advances on every pick, ignores in-flight counts and
+        // (absent a pin) session keys
+        let (router, _rxs) = mk_router(2, RoutePolicy::RoundRobin);
+        let (r1, _e1) = mk_req(1);
+        assert_eq!(router.submit(r1, None).unwrap(), 0);
+        // replica 0 is loaded, but rotation still hands out 1, 0, 1, ...
+        assert_eq!(router.pick(Some(7)), 1);
+        assert_eq!(router.pick(Some(7)), 0, "no affinity under round-robin");
+        assert_eq!(router.pick(None), 1);
+        assert_eq!(router.in_flight(0), 1);
+        assert_eq!(router.in_flight(1), 0);
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_at_lowest_index() {
+        let (router, _rxs) = mk_router(3, RoutePolicy::LeastLoaded);
+        // all idle: lowest index wins the tie
+        assert_eq!(router.pick(None), 0);
+        let (r1, _e1) = mk_req(1);
+        assert_eq!(router.submit(r1, None).unwrap(), 0);
+        // 1 and 2 tie at zero load: again the lowest index
+        assert_eq!(router.pick(None), 1);
+        let (r2, _e2) = mk_req(2);
+        let (r3, _e3) = mk_req(3);
+        router.submit(r2, None).unwrap();
+        router.submit(r3, None).unwrap();
+        // loads are now [1, 1, 1]: the three-way tie goes to 0
+        assert_eq!(router.pick(None), 0);
+    }
+
+    #[test]
+    fn complete_accounting_drives_least_loaded() {
+        let (router, _rxs) = mk_router(2, RoutePolicy::LeastLoaded);
+        let (r1, _e1) = mk_req(1);
+        let (r2, _e2) = mk_req(2);
+        let a = router.submit(r1, None).unwrap();
+        let b = router.submit(r2, None).unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert_eq!((router.in_flight(0), router.in_flight(1)), (1, 1));
+        // completing on 1 makes it the unique least-loaded pick
+        router.complete(1);
+        assert_eq!((router.in_flight(0), router.in_flight(1)), (1, 0));
+        assert_eq!(router.pick(None), 1);
+        router.complete(0);
+        assert_eq!(router.in_flight(0), 0, "every submit is matched by one complete");
+    }
+
+    #[test]
     fn least_loaded_balances() {
         let (router, rxs) = mk_router(2, RoutePolicy::LeastLoaded);
         let (r1, _e1) = mk_req(1);
@@ -212,5 +261,46 @@ mod tests {
         let picks: std::collections::HashSet<usize> =
             (0..64).map(|s| router.pick(Some(s))).collect();
         assert!(picks.len() > 1);
+    }
+
+    #[test]
+    fn session_affinity_is_submission_independent() {
+        // the hash ignores load and routing history: interleaving other
+        // traffic never moves a session (that is the point of affinity)
+        let (router, _rxs) = mk_router(4, RoutePolicy::SessionAffinity);
+        let home = router.pick(Some(7));
+        for s in 0..32u64 {
+            let (r, _e) = mk_req(s);
+            router.submit(r, Some(s)).unwrap();
+        }
+        assert_eq!(router.pick(Some(7)), home);
+        // sessionless picks under affinity fall back to rotation, so they
+        // spread rather than piling on one replica
+        let spread: std::collections::HashSet<usize> =
+            (0..16).map(|_| router.pick(None)).collect();
+        assert!(spread.len() > 1);
+    }
+
+    #[test]
+    fn pin_session_overrides_every_policy_and_submit_routes_to_it() {
+        for policy in
+            [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::SessionAffinity]
+        {
+            let (router, rxs) = mk_router(3, policy);
+            router.pin_session(5, 2);
+            for i in 0..4 {
+                let (r, _e) = mk_req(i);
+                assert_eq!(router.submit(r, Some(5)).unwrap(), 2, "{policy:?}");
+            }
+            assert_eq!(rxs[2].try_iter().count(), 4, "{policy:?}: all four landed on the pin");
+            assert_eq!(router.in_flight(2), 4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn pin_to_missing_replica_fails_fast() {
+        let (router, _rxs) = mk_router(2, RoutePolicy::RoundRobin);
+        router.pin_session(1, 2);
     }
 }

@@ -9,9 +9,11 @@
 //! * **L3** (this crate) — the runtime and coordinator: PJRT execution of
 //!   the artifacts, continuous-batching decode with constant-size HLA
 //!   state, a chunk-parallel prompt-ingestion engine (`prefill`), a
-//!   session snapshot/resume/fork store (`session`), a speculative
-//!   decoding engine with draft/verify/rollback over the constant-size
-//!   state (`spec`), a training driver, plus a from-scratch
+//!   session snapshot/resume/fork store (`session`), a shared-prefix
+//!   radix cache reusing constant-size prefix states across requests
+//!   (`cache`), a speculative decoding engine with draft/verify/rollback
+//!   over the constant-size state (`spec`), a training driver, plus a
+//!   from-scratch
 //!   reimplementation of the paper's full algebra (`hla`) used for
 //!   verification and CPU baselines.
 //!
@@ -20,6 +22,7 @@
 
 pub mod attention;
 pub mod bench;
+pub mod cache;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

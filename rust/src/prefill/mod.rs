@@ -20,7 +20,10 @@
 //!   component-layout state tensors to a [`ModelState`], ingests all but
 //!   the final prompt token, and converts back.  The final token stays
 //!   with the lane so the first sampled token flows through the unchanged
-//!   batched decode/sampling path.
+//!   batched decode/sampling path.  [`Prefiller::ingest_lane_cached`] is
+//!   the same landing through the shared-prefix radix cache
+//!   ([`crate::cache`]): the scan seeds from the longest cached boundary
+//!   and contributes the fresh boundaries it computes.
 //!
 //! Exactness: the per-head scans ([`scan`]) fold the lane's incoming state
 //! in as the scan's left-most segment (resume-from-`SessionSnapshot` as
@@ -34,6 +37,7 @@ pub mod scan;
 
 use anyhow::{ensure, Result};
 
+use crate::cache::PrefixCache;
 use crate::hla::chunk::parallel_chunks;
 use crate::model::{mixer_opts, rmsnorm, silu, MixerState, ModelState, RustModel};
 use crate::runtime::ModelCfg;
@@ -344,6 +348,72 @@ impl Prefiller {
         advance(&self.model, &mut state, &prompt[..consumed], &self.cfg);
         Ok((state.to_components(mc)?, consumed))
     }
+
+    /// [`Prefiller::ingest_lane`] through the shared-prefix cache, for
+    /// *fresh* lanes (resumed lanes bypass the cache: their incoming
+    /// state already encodes private history, so the prompt is not a
+    /// prefix from the zero state).
+    ///
+    /// The scan is seeded from the longest cached strict prefix of the
+    /// *prompt* — strictness against the full prompt still leaves the
+    /// final token with the lane, while letting an identical repeated
+    /// prompt reuse a boundary stored at exactly its head length — and
+    /// the boundary states computed past the hit point are inserted
+    /// back.  Exactness anchor: the ingest *always* advances in
+    /// `cache.chunk()`-aligned segments — warm or cold — so the state
+    /// at boundary `b` is a deterministic function of `prompt[..b]` alone
+    /// and a warm hit lands bit-identical floats to the cold path (the
+    /// differential suite pins the streams byte-identical).
+    pub fn ingest_lane_cached(
+        &self,
+        cache: &PrefixCache,
+        prompt: &[u8],
+    ) -> Result<(Vec<Tensor>, usize, CacheOutcome)> {
+        ensure!(prompt.len() >= 2, "prompt of {} token(s): nothing to prefill", prompt.len());
+        let mc = &self.model.cfg;
+        let consumed = prompt.len() - 1;
+        let mut state = ModelState::new(mc);
+        let mut pos = 0usize;
+        let mut outcome = CacheOutcome::default();
+        if let Some((depth, parts)) = cache.lookup(prompt) {
+            state.load_components(mc, &parts)?;
+            pos = depth;
+            outcome.hit_tokens = depth;
+        }
+        let w = cache.chunk();
+        // reuse the final boundary's serialization as the return value
+        // when the head length is itself chunk-aligned
+        let mut final_parts = None;
+        while pos < consumed {
+            let next = ((pos / w + 1) * w).min(consumed);
+            advance(&self.model, &mut state, &prompt[pos..next], &self.cfg);
+            pos = next;
+            if pos % w == 0 {
+                // a boundary state fresh off the scan: share it forward
+                let parts = state.to_components(mc)?;
+                if cache.insert(&prompt[..pos], &parts)? {
+                    outcome.inserted += 1;
+                }
+                if pos == consumed {
+                    final_parts = Some(parts);
+                }
+            }
+        }
+        let parts = match final_parts {
+            Some(p) => p,
+            None => state.to_components(mc)?,
+        };
+        Ok((parts, consumed, outcome))
+    }
+}
+
+/// What the cache did for one [`Prefiller::ingest_lane_cached`] call.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheOutcome {
+    /// Prompt tokens skipped by seeding from a cached boundary (0 = cold).
+    pub hit_tokens: usize,
+    /// Fresh boundary snapshots inserted on the way to the prompt end.
+    pub inserted: usize,
 }
 
 #[cfg(test)]

@@ -40,6 +40,13 @@ pub struct GenOpts {
     /// streams are identical, sampled streams come from the identical
     /// distributions (see the protocol notes in `server/mod.rs`).
     pub spec: bool,
+    /// Opt out of the server's shared-prefix cache for this request
+    /// (`"no_cache": true` on the wire; a no-op when the server runs
+    /// without `--prefix-cache-mb`).  Greedy streams are identical either
+    /// way; seeded streams draw from the identical distributions (the
+    /// opt-out path scans with a different segmentation — see the
+    /// protocol notes in `server/mod.rs`).
+    pub no_cache: bool,
 }
 
 impl Default for GenOpts {
@@ -53,6 +60,7 @@ impl Default for GenOpts {
             resume: false,
             fork_of: None,
             spec: false,
+            no_cache: false,
         }
     }
 }
@@ -108,6 +116,9 @@ impl Client {
         }
         if opts.spec {
             req.push(("spec", Json::Bool(true)));
+        }
+        if opts.no_cache {
+            req.push(("no_cache", Json::Bool(true)));
         }
         let start = Instant::now();
         writeln!(self.writer, "{}", Json::obj(req))?;

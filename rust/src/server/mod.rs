@@ -35,6 +35,21 @@
 //!     without changing the distribution.  Without a spec engine
 //!     attached the flag is a no-op, not an error.
 //!
+//! Prefix-cache extension (requires serving with `--prefix-cache-mb`):
+//!   * `"no_cache": true` — opt this request out of the shared-prefix
+//!     cache: its prompt is prefill-scanned cold and contributes no
+//!     boundary snapshots (for prompts carrying per-user material a
+//!     shared cache must not retain).  Exactness: warm and cold runs of
+//!     the *cached* path are byte-identical, greedy and seeded alike;
+//!     the opt-out path scans with a different segmentation, so vs. the
+//!     cached path greedy streams are identical while a seeded draw at
+//!     an f32 probability boundary can shift without changing the
+//!     distribution — the same caveat as the chunked-scan verify
+//!     backend (`rust/tests/prefix_cache_differential.rs`).  Without a
+//!     cache attached the flag is a no-op, not an error.  Resumed
+//!     sessions always bypass the cache (their restored state already
+//!     encodes private history).
+//!
 //! Error replies are one-line objects: `{"error": "<reason>"}` — sent for
 //! malformed JSON, resume/fork without a session store, `fork_of` without
 //! a `"session"` id, unknown sessions, and out-of-range ids.  Session ids
@@ -191,6 +206,9 @@ fn handle_request(
     }
     if req.get("spec").and_then(Json::as_bool).unwrap_or(false) {
         greq = greq.with_spec();
+    }
+    if req.get("no_cache").and_then(Json::as_bool).unwrap_or(false) {
+        greq = greq.without_cache();
     }
     let replica = router.submit(greq, session)?;
 

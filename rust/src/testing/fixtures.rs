@@ -113,10 +113,41 @@ pub fn model_cfg(mixer: &str, s: &ModelShape) -> ModelCfg {
     }
 }
 
+/// A [`model_cfg`] whose `state_paths` cover the mixer's **full** state
+/// (every [`crate::model::MixerState::component`] name), so
+/// `ModelState::to_components`/`load_components` round-trips are lossless
+/// — the shape [`crate::prefill::Prefiller`] and the prefix cache
+/// ([`crate::cache`]) require.
+pub fn model_cfg_full_state(mixer: &str, s: &ModelShape) -> ModelCfg {
+    let mut cfg = model_cfg(mixer, s);
+    let (l, h, dh) = (s.n_layers, s.n_heads, s.head_dim);
+    let mat = |name: &str| (format!("['{name}']"), vec![l, 1, h, dh, dh]);
+    let vec_ = |name: &str| (format!("['{name}']"), vec![l, 1, h, dh]);
+    cfg.state_paths = match mixer {
+        "hla2" => vec![mat("s"), mat("c"), vec_("m"), mat("g"), vec_("h")],
+        "ahla" => vec![mat("p"), vec_("m"), mat("e"), vec_("n")],
+        "hla3" => vec![mat("s"), mat("p"), vec_("m"), mat("f"), vec_("eta")],
+        "linear" => vec![mat("p"), vec_("m")],
+        other => panic!("no full-state layout for mixer {other:?}"),
+    };
+    cfg.n_state_tensors = cfg.state_paths.len();
+    cfg
+}
+
 /// Deterministically-initialized pure-Rust model: 1-d params (norms) near
 /// 1, matrices ~N(0, 0.3) — the init every artifact-free test/bench uses.
 pub fn build_model(mixer: &str, shape: &ModelShape, seed: u64) -> RustModel {
-    let cfg = model_cfg(mixer, shape);
+    model_from_cfg(model_cfg(mixer, shape), seed)
+}
+
+/// [`build_model`] over a [`model_cfg_full_state`] config — same weights
+/// for the same seed (init draws follow `param_paths`, which the state
+/// layout does not touch), but lane component round-trips are lossless.
+pub fn build_model_full(mixer: &str, shape: &ModelShape, seed: u64) -> RustModel {
+    model_from_cfg(model_cfg_full_state(mixer, shape), seed)
+}
+
+fn model_from_cfg(cfg: ModelCfg, seed: u64) -> RustModel {
     let mut rng = Rng::new(seed);
     let tensors: Vec<Tensor> = cfg
         .param_paths
@@ -134,6 +165,39 @@ pub fn build_model(mixer: &str, shape: &ModelShape, seed: u64) -> RustModel {
         })
         .collect();
     RustModel::from_tensors(&cfg, &tensors).expect("fixture param paths bind by construction")
+}
+
+/// A uniform random byte prompt below `vocab` — the prompt generator the
+/// differential tests share (formerly hand-rolled per file).
+pub fn random_prompt(rng: &mut Rng, n: usize, vocab: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(vocab.max(2)) as u8).collect()
+}
+
+/// Shared-prefix prompt sets for the prefix-cache tests: `n_prefixes`
+/// random preambles of `prefix_len` tokens, each fanned out into
+/// `n_per_prefix` full prompts with distinct `suffix_len`-token suffixes.
+/// Prompts are grouped by prefix: `out[p][i]` shares `out[p][j]`'s first
+/// `prefix_len` tokens and nothing else (almost surely).
+pub fn shared_prefix_prompts(
+    rng: &mut Rng,
+    n_prefixes: usize,
+    prefix_len: usize,
+    n_per_prefix: usize,
+    suffix_len: usize,
+    vocab: usize,
+) -> Vec<Vec<Vec<u8>>> {
+    (0..n_prefixes.max(1))
+        .map(|_| {
+            let prefix = random_prompt(rng, prefix_len, vocab);
+            (0..n_per_prefix)
+                .map(|_| {
+                    let mut p = prefix.clone();
+                    p.extend(random_prompt(rng, suffix_len, vocab));
+                    p
+                })
+                .collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -154,6 +218,44 @@ mod tests {
                 assert!(logits.iter().all(|x| x.is_finite()), "{mixer}: non-finite logits");
             }
         }
+    }
+
+    #[test]
+    fn full_state_cfg_round_trips_every_scannable_mixer() {
+        for mixer in ["hla2", "ahla", "hla3", "linear"] {
+            let shape = ModelShape::default();
+            let m = build_model_full(mixer, &shape, 7);
+            let mut state = ModelState::new(&m.cfg);
+            m.decode_step(&mut state, 5);
+            // lossless: every mixer component is covered by state_paths
+            let parts = state.to_components(&m.cfg).unwrap_or_else(|e| panic!("{mixer}: {e}"));
+            assert_eq!(parts.len(), m.cfg.state_paths.len());
+            let mut back = ModelState::new(&m.cfg);
+            back.load_components(&m.cfg, &parts).unwrap();
+            for (a, b) in state.layers.iter().flatten().zip(back.layers.iter().flatten()) {
+                assert_eq!(a.state_vec().unwrap(), b.state_vec().unwrap(), "{mixer}");
+            }
+            // same seed, same weights as the plain fixture
+            let plain = build_model(mixer, &shape, 7);
+            assert_eq!(m.embed.data, plain.embed.data, "{mixer}: init must not shift");
+        }
+    }
+
+    #[test]
+    fn shared_prefix_prompts_share_exactly_the_prefix() {
+        let mut rng = Rng::new(9);
+        let groups = shared_prefix_prompts(&mut rng, 3, 24, 5, 8, 64);
+        assert_eq!(groups.len(), 3);
+        for group in &groups {
+            assert_eq!(group.len(), 5);
+            let prefix = &group[0][..24];
+            for p in group {
+                assert_eq!(p.len(), 32);
+                assert_eq!(&p[..24], prefix, "group shares its preamble");
+                assert!(p.iter().all(|&b| (b as usize) < 64));
+            }
+        }
+        assert_ne!(&groups[0][0][..24], &groups[1][0][..24], "distinct preambles");
     }
 
     #[test]

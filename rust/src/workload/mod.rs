@@ -245,6 +245,55 @@ impl Trace {
         Trace { items, mix: SessionMix { n_sessions: 0, resume_prob: 0.0 } }
     }
 
+    /// The shared-prefix scenario (E16): a few long "system prompts"
+    /// fanned out across many requests.  Each request's prompt is one of
+    /// `n_prefixes` fixed `prefix_len`-byte corpus windows followed by a
+    /// per-request suffix drawn from `lengths.prompt` — the traffic shape
+    /// where a prefix cache turns O(prompt) cold prefills into O(suffix)
+    /// warm ones.  Requests are stateless (no sessions): prefix reuse is
+    /// *cross-request* sharing, which is exactly what sessions cannot
+    /// capture.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthesize_shared_prefix(
+        n: usize,
+        arrivals: Arrivals,
+        n_prefixes: usize,
+        prefix_len: usize,
+        lengths: Lengths,
+        corpus: &[u8],
+        seed: u64,
+    ) -> Trace {
+        let n_prefixes = n_prefixes.max(1);
+        let mut rng = Rng::new(seed);
+        // the shared preambles: fixed corpus windows, drawn once up front
+        // (wrap-around so short corpora still yield full-length prefixes)
+        let prefixes: Vec<Vec<u8>> = (0..n_prefixes)
+            .map(|_| {
+                let start = rng.below(corpus.len().max(1));
+                corpus.iter().cycle().skip(start).take(prefix_len).copied().collect()
+            })
+            .collect();
+        let times = arrivals.times(n, &mut rng);
+        let items = times
+            .into_iter()
+            .map(|at_s| {
+                let pfx = &prefixes[rng.below(n_prefixes)];
+                let slen = lengths.prompt(&mut rng);
+                let start = rng.below(corpus.len().max(1));
+                let mut prompt = pfx.clone();
+                prompt.extend(corpus.iter().cycle().skip(start).take(slen));
+                TraceItem {
+                    at_s,
+                    prompt,
+                    max_new_tokens: lengths.output(&mut rng),
+                    session: None,
+                    resume: false,
+                }
+            })
+            .collect();
+        Trace { items, mix: SessionMix { n_sessions: 0, resume_prob: 0.0 } }
+    }
+
     /// A multi-turn-conversation scenario: `n_sessions` conversations of
     /// `turns` requests each.  Turn 1 starts fresh; every later turn
     /// resumes the session's snapshot (mean `think_s` seconds of "user
@@ -487,6 +536,46 @@ mod tests {
             40, Arrivals::Burst, lengths, 0.0, 8, 64, corpus, 15,
         );
         assert!(none.items.iter().all(|it| it.prompt.iter().all(|&b| (b as usize) < 64)));
+    }
+
+    #[test]
+    fn shared_prefix_trace_reuses_a_few_preambles() {
+        let corpus = b"a corpus with enough bytes to cut shared system prompts from it";
+        let lengths = Lengths { mean_prompt: 24, mean_output: 8, min: 8, max: 64, sigma: 0.5 };
+        let t = Trace::synthesize_shared_prefix(
+            120,
+            Arrivals::Burst,
+            3,
+            48,
+            lengths,
+            corpus,
+            21,
+        );
+        assert_eq!(t.items.len(), 120);
+        assert!(t.items.iter().all(|it| it.session.is_none() && !it.resume));
+        // every prompt = one of exactly <= 3 distinct 48-byte prefixes + a suffix
+        let mut seen: std::collections::HashSet<Vec<u8>> = std::collections::HashSet::new();
+        for it in &t.items {
+            assert!(it.prompt.len() > 48, "prefix plus a non-empty suffix");
+            seen.insert(it.prompt[..48].to_vec());
+        }
+        assert!(seen.len() <= 3, "{} distinct prefixes", seen.len());
+        // with 120 draws over <= 3 prefixes, each one is heavily reused
+        for p in &seen {
+            let uses = t.items.iter().filter(|it| it.prompt.starts_with(p)).count();
+            assert!(uses >= 10, "prefix reused only {uses} times");
+        }
+        // determinism: the same seed reproduces the same trace
+        let t2 = Trace::synthesize_shared_prefix(
+            120,
+            Arrivals::Burst,
+            3,
+            48,
+            lengths,
+            corpus,
+            21,
+        );
+        assert_eq!(t, t2);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! first sampled token identical to decode-as-prefill — fresh lanes and
 //! resumed sessions, for second order, AHLA, third order and the linear
 //! baseline.  Runs artifact-free on the pure-Rust model, like
-//! `session_resume.rs`.
+//! `session_resume.rs`, on the shared [`hla::testing::fixtures`] models.
 //!
 //! "Identical" is exact for the sampled token (greedy argmax) and up to
 //! f32 reassociation for the state floats: the scan reorders the same
@@ -15,66 +15,12 @@
 use hla::model::sampler::argmax;
 use hla::model::{ModelState, RustModel};
 use hla::prefill::{advance, forward_logits, ingest, PrefillCfg};
-use hla::runtime::Manifest;
+use hla::testing::fixtures::{build_model, build_model_full, random_prompt, ModelShape};
 use hla::util::rng::Rng;
 
-const CFG_TEMPLATE: &str = r#"{
-  "configs": {"t": {"vocab": 64, "d_model": 16, "n_layers": 2,
-    "n_heads": 2, "head_dim": 8, "d_ffn": 32, "kv_heads": 2,
-    "mixer": "MIXER", "chunk": 8, "gamma": GAMMA, "lam": 0.0,
-    "norm_mode": "abs", "eps": 1e-6, "n_params": 4000,
-    "n_param_tensors": 20, "n_state_tensors": 2,
-    "param_paths": [
-      ["['embed']", [64, 16]],
-      ["['norm_f']", [16]],
-      ["['layers'][0]['norm1']", [16]],
-      ["['layers'][0]['wq']", [16, 16]],
-      ["['layers'][0]['wk']", [16, 16]],
-      ["['layers'][0]['wv']", [16, 16]],
-      ["['layers'][0]['wo']", [16, 16]],
-      ["['layers'][0]['norm2']", [16]],
-      ["['layers'][0]['w_gate']", [16, 32]],
-      ["['layers'][0]['w_up']", [16, 32]],
-      ["['layers'][0]['w_down']", [32, 16]],
-      ["['layers'][1]['norm1']", [16]],
-      ["['layers'][1]['wq']", [16, 16]],
-      ["['layers'][1]['wk']", [16, 16]],
-      ["['layers'][1]['wv']", [16, 16]],
-      ["['layers'][1]['wo']", [16, 16]],
-      ["['layers'][1]['norm2']", [16]],
-      ["['layers'][1]['w_gate']", [16, 32]],
-      ["['layers'][1]['w_up']", [16, 32]],
-      ["['layers'][1]['w_down']", [32, 16]]],
-    "state_paths": [["['c']", [2, 1, 2, 8, 8]], ["['m']", [2, 1, 2, 8]]],
-    "train_batch": 1, "train_seq": 8, "decode_batch": 1,
-    "prefill_len": 8}},
-  "artifacts": {}
-}"#;
-
-fn build_model(mixer: &str, gamma: f64, seed: u64) -> RustModel {
-    let json = CFG_TEMPLATE.replace("MIXER", mixer).replace("GAMMA", &gamma.to_string());
-    let cfg = Manifest::parse(&json).unwrap().configs["t"].clone();
-    let mut rng = Rng::new(seed);
-    let tensors: Vec<hla::tensor::Tensor> = cfg
-        .param_paths
-        .iter()
-        .map(|(_, shape)| {
-            let mut t = hla::tensor::Tensor::zeros(shape);
-            if shape.len() == 1 {
-                for x in &mut t.data {
-                    *x = 1.0 + 0.1 * rng.normal() as f32;
-                }
-            } else {
-                rng.fill_normal(&mut t.data, 0.3);
-            }
-            t
-        })
-        .collect();
-    RustModel::from_tensors(&cfg, &tensors).unwrap()
-}
-
-fn random_prompt(rng: &mut Rng, n: usize) -> Vec<u8> {
-    (0..n).map(|_| (rng.below(64)) as u8).collect()
+/// The shared differential-test fixture (2 layers, d_model 16) at γ.
+fn fixture_model(mixer: &str, gamma: f64, seed: u64) -> RustModel {
+    build_model(mixer, &ModelShape { gamma, ..ModelShape::default() }, seed)
 }
 
 /// Relative closeness for f32 slices, judged by quantiles: the model's
@@ -127,9 +73,9 @@ fn differential(model: &RustModel, prompt: &[u8], chunk: usize, threads: usize, 
 fn scan_prefill_matches_decode_as_prefill_fresh_lanes() {
     let mut rng = Rng::new(41);
     for mixer in ["hla2", "ahla", "hla3", "linear"] {
-        let model = build_model(mixer, 0.98, 17);
+        let model = fixture_model(mixer, 0.98, 17);
         for n in [2usize, 9, 64, 193] {
-            let prompt = random_prompt(&mut rng, n);
+            let prompt = random_prompt(&mut rng, n, 64);
             for (chunk, threads) in [(1usize, 1usize), (7, 3), (32, 4), (256, 2)] {
                 differential(&model, &prompt, chunk, threads, &format!("{mixer} n={n} w={chunk}"));
             }
@@ -140,8 +86,8 @@ fn scan_prefill_matches_decode_as_prefill_fresh_lanes() {
 #[test]
 fn scan_prefill_matches_decode_as_prefill_gamma_one_third_order() {
     let mut rng = Rng::new(43);
-    let model = build_model("hla3", 1.0, 19);
-    let prompt = random_prompt(&mut rng, 80);
+    let model = fixture_model("hla3", 1.0, 19);
+    let prompt = random_prompt(&mut rng, 80, 64);
     for (chunk, threads) in [(1usize, 1usize), (16, 4), (128, 2)] {
         differential(&model, &prompt, chunk, threads, &format!("hla3 g=1 w={chunk}"));
     }
@@ -154,12 +100,12 @@ fn scan_prefill_matches_decode_as_prefill_resumed_sessions() {
     // token as serially decoding it from the restored state
     let mut rng = Rng::new(47);
     for mixer in ["hla2", "ahla", "hla3", "linear"] {
-        let model = build_model(mixer, 0.98, 29);
+        let model = fixture_model(mixer, 0.98, 29);
         // first turn: serial, shared by both paths (this is the snapshot)
         let mut restored = ModelState::new(&model.cfg);
-        let turn1 = random_prompt(&mut rng, 57);
+        let turn1 = random_prompt(&mut rng, 57, 64);
         advance(&model, &mut restored, &turn1, &PrefillCfg::serial());
-        let turn2 = random_prompt(&mut rng, 91);
+        let turn2 = random_prompt(&mut rng, 91, 64);
 
         let mut state_a = restored.clone();
         let logits_a = ingest(&model, &mut state_a, &turn2, &PrefillCfg::serial());
@@ -178,8 +124,8 @@ fn forward_scan_matches_forward_serial() {
     // fallback is the differential baseline (teacher-forced logits)
     let mut rng = Rng::new(53);
     for mixer in ["hla2", "ahla", "hla3", "linear"] {
-        let model = build_model(mixer, 0.98, 31);
-        let tokens = random_prompt(&mut rng, 70);
+        let model = fixture_model(mixer, 0.98, 31);
+        let tokens = random_prompt(&mut rng, 70, 64);
         let scan = model.forward(&tokens);
         let serial = model.forward_serial(&tokens);
         assert_eq!(scan.rows, serial.rows);
@@ -192,7 +138,7 @@ fn forward_scan_matches_forward_serial() {
         assert_quantile_close(&mut diffs, &format!("{mixer} forward"));
         // softmax mixers have no monoid: forward must fall back serially
         // and stay exactly equal
-        let sm = build_model("softmax", 1.0, 31);
+        let sm = build_model("softmax", &ModelShape { gamma: 1.0, ..ModelShape::default() }, 31);
         let a = sm.forward(&tokens[..20]);
         let b = sm.forward_serial(&tokens[..20]);
         assert_eq!(a.data, b.data, "softmax forward must be the serial path");
@@ -202,36 +148,14 @@ fn forward_scan_matches_forward_serial() {
 #[test]
 fn prefiller_lands_lane_components_and_leaves_final_token() {
     use hla::prefill::Prefiller;
-    // a manifest whose state_paths cover the full hla2 state
-    let json = CFG_TEMPLATE
-        .replace("MIXER", "hla2")
-        .replace("GAMMA", "0.98")
-        .replace(
-            r#""state_paths": [["['c']", [2, 1, 2, 8, 8]], ["['m']", [2, 1, 2, 8]]]"#,
-            r#""state_paths": [["['s']", [2, 1, 2, 8, 8]], ["['c']", [2, 1, 2, 8, 8]],
-              ["['m']", [2, 1, 2, 8]], ["['g']", [2, 1, 2, 8, 8]], ["['h']", [2, 1, 2, 8]]]"#,
-        );
-    let cfg = Manifest::parse(&json).unwrap().configs["t"].clone();
-    let mut rng = Rng::new(61);
-    let tensors: Vec<hla::tensor::Tensor> = cfg
-        .param_paths
-        .iter()
-        .map(|(_, shape)| {
-            let mut t = hla::tensor::Tensor::zeros(shape);
-            if shape.len() == 1 {
-                for x in &mut t.data {
-                    *x = 1.0 + 0.1 * rng.normal() as f32;
-                }
-            } else {
-                rng.fill_normal(&mut t.data, 0.3);
-            }
-            t
-        })
-        .collect();
-    let model = RustModel::from_tensors(&cfg, &tensors).unwrap();
+    // the full-state fixture: state_paths cover the whole hla2 state, so
+    // lane component round-trips are lossless (Prefiller::new checks)
+    let model = build_model_full("hla2", &ModelShape::default(), 61);
+    let cfg = model.cfg.clone();
     let pf = Prefiller::new(model.clone(), PrefillCfg::scan(8, 2)).unwrap();
 
-    let prompt = random_prompt(&mut rng, 40);
+    let mut rng = Rng::new(61);
+    let prompt = random_prompt(&mut rng, 40, 64);
     let (parts, consumed) = pf.ingest_lane(None, &prompt).unwrap();
     assert_eq!(consumed, prompt.len() - 1, "final token stays with the lane");
     assert_eq!(parts.len(), cfg.state_paths.len());
@@ -244,7 +168,7 @@ fn prefiller_lands_lane_components_and_leaves_final_token() {
     assert_state_close(&want, &got, "prefilled lane components");
 
     // resume: the components round-trip back in as the initial segment
-    let turn2 = random_prompt(&mut rng, 33);
+    let turn2 = random_prompt(&mut rng, 33, 64);
     let (parts2, consumed2) = pf.ingest_lane(Some(&parts), &turn2).unwrap();
     assert_eq!(consumed2, turn2.len() - 1);
     let mut want2 = got.clone();
@@ -261,9 +185,9 @@ fn prefiller_lands_lane_components_and_leaves_final_token() {
 fn forward_logits_shares_one_prompt_loop() {
     // the dedup check: forward_logits over a prompt then one decode_step
     // equals ingest over prompt+token — both route through prefill
-    let model = build_model("hla2", 0.98, 37);
+    let model = fixture_model("hla2", 0.98, 37);
     let mut rng = Rng::new(59);
-    let prompt = random_prompt(&mut rng, 30);
+    let prompt = random_prompt(&mut rng, 30, 64);
     let cfg = PrefillCfg::scan(8, 2);
 
     let mut s1 = ModelState::new(&model.cfg);

@@ -1,0 +1,346 @@
+//! Differential acceptance test for the shared-prefix radix cache: a
+//! warm-hit stream must be **byte-identical** to its cold counterpart —
+//! the cache moves *work*, never tokens.  Runs artifact-free on the
+//! pure-Rust [`hla::testing::fixtures`] models, like the prefill and
+//! spec differential suites.
+//!
+//! Exactness ledger (mirrors `spec_differential.rs`):
+//! * **Warm vs cold through the cache path**: bit-exact by construction
+//!   under BOTH prefill modes — the cache-aware ingest always cuts its
+//!   scan at the same chunk-aligned boundaries, so the state at boundary
+//!   `b` is a function of `prompt[..b]` alone, whether it was computed
+//!   in this request or restored from the cache.  Asserted for greedy
+//!   AND seeded sampling, state floats compared bit-for-bit.
+//! * **Cache path vs serial decode**: with serial ingestion the
+//!   segmentation is irrelevant (a `decode_step` chain splits anywhere),
+//!   so equality is bit-exact and asserted for seeded sampling too.
+//!   With scan ingestion the logits agree up to f32 reassociation
+//!   (Thm 4.1), so exact token equality is asserted on the greedy grid —
+//!   the same robustness bar `prefill_differential.rs` holds the scan to.
+//!
+//! `HLA_PREFIX_CACHE_BUDGET` (bytes) overrides the churn test's budget;
+//! CI runs the suite at a tiny budget to force eviction churn under the
+//! same byte-identity assertions.
+
+use hla::cache::{PrefixCache, PrefixCacheCfg};
+use hla::model::sampler::{Sampler, SamplerCfg};
+use hla::model::{ModelState, RustModel};
+use hla::prefill::{advance, PrefillCfg, Prefiller};
+use hla::session::SamplerState;
+use hla::spec::{Drafter, DrafterKind, SpecCfg, SpecDecoder};
+use hla::tensor::Tensor;
+use hla::testing::fixtures::{build_model_full, random_prompt, shared_prefix_prompts, ModelShape};
+use hla::util::rng::Rng;
+
+/// Boundary stride shared by every cache in this suite.
+const CHUNK: usize = 8;
+
+fn seeded() -> SamplerCfg {
+    SamplerCfg { temperature: 0.9, top_k: 20, seed: 7 }
+}
+
+fn cache(budget: usize) -> PrefixCache {
+    PrefixCache::new(PrefixCacheCfg::new(budget, CHUNK))
+}
+
+/// The coordinator lane's generating phase: one `decode_step` + one
+/// sampler draw per emitted token, starting from `first_input`.
+fn decode_stream(
+    model: &RustModel,
+    state: &mut ModelState,
+    sampler: &mut Sampler,
+    first_input: u8,
+    max_new: usize,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(max_new);
+    let mut last = first_input;
+    while out.len() < max_new {
+        let logits = model.decode_step(state, last);
+        let y = sampler.sample(&logits) as u8;
+        out.push(y);
+        last = y;
+    }
+    out
+}
+
+/// Serial decode from scratch — the bit-exact reference stream.
+fn serial_stream(model: &RustModel, prompt: &[u8], scfg: &SamplerCfg, max_new: usize) -> Vec<u8> {
+    let mut state = ModelState::new(&model.cfg);
+    let mut sampler = Sampler::new(scfg.clone());
+    advance(model, &mut state, &prompt[..prompt.len() - 1], &PrefillCfg::serial());
+    decode_stream(model, &mut state, &mut sampler, prompt[prompt.len() - 1], max_new)
+}
+
+/// One request through the cache-enabled admission path: cached ingest,
+/// then the normal decode loop.  Returns the stream, the post-generation
+/// state parts, and how many prompt tokens the cache skipped.
+fn cached_generate(
+    pf: &Prefiller,
+    cache: &PrefixCache,
+    prompt: &[u8],
+    scfg: &SamplerCfg,
+    max_new: usize,
+) -> (Vec<u8>, Vec<Tensor>, usize) {
+    let mc = &pf.model().cfg;
+    let (parts, consumed, outcome) = pf.ingest_lane_cached(cache, prompt).unwrap();
+    let mut state = ModelState::new(mc);
+    state.load_components(mc, &parts).unwrap();
+    let mut sampler = Sampler::new(scfg.clone());
+    let stream = decode_stream(pf.model(), &mut state, &mut sampler, prompt[consumed], max_new);
+    (stream, state.to_components(mc).unwrap(), outcome.hit_tokens)
+}
+
+/// Bit-level equality for state component tensors (f32 compared by bits:
+/// the cache must not perturb a single ULP).
+fn assert_state_bits_equal(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: component arity");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.shape, y.shape, "{what}: component {i} shape");
+        let xb: Vec<u32> = x.data.iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u32> = y.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb, "{what}: component {i} floats drifted");
+    }
+}
+
+#[test]
+fn warm_hit_byte_identical_to_cold_prefill_all_mixers_greedy_and_seeded() {
+    let mut rng = Rng::new(101);
+    for mixer in ["hla2", "ahla", "hla3"] {
+        let model = build_model_full(mixer, &ModelShape::default(), 17);
+        for (mode, pcfg) in [("scan", PrefillCfg::scan(8, 2)), ("serial", PrefillCfg::serial())] {
+            let pf = Prefiller::new(model.clone(), pcfg).unwrap();
+            // one 32-token preamble fanned into three full prompts
+            let groups = shared_prefix_prompts(&mut rng, 1, 4 * CHUNK, 3, 11, 64);
+            let group = &groups[0];
+            for scfg in [SamplerCfg::greedy(), seeded()] {
+                let warm_cache = cache(1 << 20);
+                for (i, prompt) in group.iter().enumerate() {
+                    let label = format!("{mixer} {mode} t={} req {i}", scfg.temperature);
+                    // cold twin: the same request on an empty cache
+                    let (cold, cold_parts, cold_hit) =
+                        cached_generate(&pf, &cache(1 << 20), prompt, &scfg, 32);
+                    assert_eq!(cold_hit, 0, "{label}: empty cache cannot hit");
+                    // warm: the shared cache has seen this preamble before
+                    let (warm, warm_parts, warm_hit) =
+                        cached_generate(&pf, &warm_cache, prompt, &scfg, 32);
+                    if i > 0 {
+                        assert!(
+                            warm_hit >= 4 * CHUNK,
+                            "{label}: expected a preamble-deep hit, got {warm_hit}"
+                        );
+                    }
+                    assert_eq!(warm, cold, "{label}: warm stream diverged from cold");
+                    assert_state_bits_equal(&warm_parts, &cold_parts, &label);
+                    // vs the serial reference: bit-exact when the
+                    // ingestion itself is serial; greedy-exact on the scan
+                    let want = serial_stream(&model, prompt, &scfg, 32);
+                    if mode == "serial" || scfg.temperature == 0.0 {
+                        assert_eq!(warm, want, "{label}: diverged from serial decode");
+                    }
+                }
+                let st = warm_cache.stats();
+                assert!(st.hits >= 2, "{mixer} {mode}: warm cache never hit");
+                assert_eq!(st.evictions, 0, "roomy budget must not evict");
+            }
+        }
+    }
+}
+
+#[test]
+fn spec_decode_tolerates_cache_seeded_prompts() {
+    // a speculative lane only diverges from the batched path after its
+    // prompt is ingested — which is exactly what the cache seeds.  Under
+    // the serial verify backend the whole pipeline is bit-exact, so the
+    // cache-seeded spec stream must equal serial decode byte-for-byte,
+    // greedy AND seeded.
+    let mut rng = Rng::new(211);
+    for mixer in ["hla2", "hla3"] {
+        let model = build_model_full(mixer, &ModelShape::default(), 17);
+        let pf = Prefiller::new(model.clone(), PrefillCfg::serial()).unwrap();
+        let groups = shared_prefix_prompts(&mut rng, 1, 3 * CHUNK, 2, 9, 64);
+        let group = &groups[0];
+        let spec_cfg = SpecCfg {
+            k: 4,
+            adaptive: false,
+            drafter: DrafterKind::Ngram,
+            verify_chunk: 0,
+            ..Default::default()
+        };
+        for scfg in [SamplerCfg::greedy(), seeded()] {
+            let shared = cache(1 << 20);
+            for (i, prompt) in group.iter().enumerate() {
+                let label = format!("{mixer} spec t={} req {i}", scfg.temperature);
+                let want = serial_stream(&model, prompt, &scfg, 40);
+                // non-cached spec decode (the spec suite's pinned path)
+                let mut dec = SpecDecoder::new(model.clone(), None, spec_cfg.clone()).unwrap();
+                let plain = dec.generate(prompt, scfg.clone(), 40, None).unwrap();
+                assert_eq!(plain, want, "{label}: plain spec diverged");
+                // cache-seeded prompt: land the cached ingest in the spec
+                // lane, commit the drafter context, and run rounds
+                let (parts, consumed, hit) = pf.ingest_lane_cached(&shared, prompt).unwrap();
+                if i > 0 {
+                    assert!(hit > 0, "{label}: expected a warm hit");
+                }
+                let mut dec = SpecDecoder::new(model.clone(), None, spec_cfg.clone()).unwrap();
+                dec.lane.state.load_components(&model.cfg, &parts).unwrap();
+                dec.lane.drafter.commit(&prompt[..=consumed]);
+                let mut sampler = Sampler::new(scfg.clone());
+                let got = dec.run(&mut sampler, prompt[consumed], 40, None).unwrap();
+                assert_eq!(got, want, "{label}: cache-seeded spec diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_paths_stay_exact_across_session_resume() {
+    // turn 1 warm-hits the cache; the lane detaches into a session
+    // snapshot; turn 2 resumes it (bypassing the cache, as the engine
+    // does).  Both turns must be byte-identical to one uninterrupted
+    // two-turn generation that never saw the cache.
+    let mut rng = Rng::new(307);
+    let model = build_model_full("hla2", &ModelShape::default(), 17);
+    let mc = model.cfg.clone();
+    let pf = Prefiller::new(model.clone(), PrefillCfg::serial()).unwrap();
+    let groups = shared_prefix_prompts(&mut rng, 1, 3 * CHUNK, 2, 7, 64);
+    let group = &groups[0];
+    let turn2_text = random_prompt(&mut rng, 13, 64);
+    let scfg = seeded();
+
+    // reference: cold turn 1, then turn 2 continues in place — the
+    // resumed lane feeds [last_token] ++ turn2 before sampling again
+    let reference = |prompt: &[u8]| -> (Vec<u8>, Vec<u8>) {
+        let mut state = ModelState::new(&mc);
+        let mut sampler = Sampler::new(scfg.clone());
+        advance(&model, &mut state, &prompt[..prompt.len() - 1], &PrefillCfg::serial());
+        let t1 = decode_stream(&model, &mut state, &mut sampler, prompt[prompt.len() - 1], 24);
+        let mut turn2 = vec![*t1.last().unwrap()];
+        turn2.extend_from_slice(&turn2_text);
+        advance(&model, &mut state, &turn2[..turn2.len() - 1], &PrefillCfg::serial());
+        let t2 = decode_stream(&model, &mut state, &mut sampler, turn2[turn2.len() - 1], 24);
+        (t1, t2)
+    };
+
+    let shared = cache(1 << 20);
+    // request 0 populates the preamble boundaries; request 1 warm-hits
+    for (i, prompt) in group.iter().enumerate() {
+        let (want_t1, want_t2) = reference(prompt);
+        // turn 1 through the cache path
+        let (parts, consumed, hit) = pf.ingest_lane_cached(&shared, prompt).unwrap();
+        if i > 0 {
+            assert!(hit > 0, "req {i}: second sighting of the preamble must hit");
+        }
+        let mut state = ModelState::new(&mc);
+        state.load_components(&mc, &parts).unwrap();
+        let mut sampler = Sampler::new(scfg.clone());
+        let t1 = decode_stream(&model, &mut state, &mut sampler, prompt[consumed], 24);
+        assert_eq!(t1, want_t1, "req {i}: turn 1 diverged");
+        // detach: state components + exact sampler position (what the
+        // engine snapshots into the session store)
+        let snap_parts = state.to_components(&mc).unwrap();
+        let snap_sampler = SamplerState::capture(&sampler);
+        let last_token = *t1.last().unwrap();
+        // resume on a "different lane": fresh state, restored snapshot —
+        // the cache is NOT consulted (resumed lanes bypass it)
+        let mut lane = ModelState::new(&mc);
+        lane.load_components(&mc, &snap_parts).unwrap();
+        let mut sampler = snap_sampler.rebuild();
+        let mut turn2 = vec![last_token];
+        turn2.extend_from_slice(&turn2_text);
+        advance(&model, &mut lane, &turn2[..turn2.len() - 1], &PrefillCfg::serial());
+        let t2 = decode_stream(&model, &mut lane, &mut sampler, turn2[turn2.len() - 1], 24);
+        assert_eq!(t2, want_t2, "req {i}: resumed turn 2 diverged");
+    }
+}
+
+#[test]
+fn eviction_churn_keeps_streams_byte_identical() {
+    // a tiny byte budget forces constant LRU churn (this is the CI gate:
+    // HLA_PREFIX_CACHE_BUDGET shrinks it further) — eviction may cost
+    // hits, but it must never cost correctness
+    let (budget, from_env) = match std::env::var("HLA_PREFIX_CACHE_BUDGET") {
+        Ok(v) => (v.parse::<usize>().expect("HLA_PREFIX_CACHE_BUDGET must be bytes"), true),
+        Err(_) => (12 * 1024, false),
+    };
+    let mut rng = Rng::new(401);
+    let model = build_model_full("hla2", &ModelShape::default(), 17);
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(8, 2)).unwrap();
+    let groups = shared_prefix_prompts(&mut rng, 2, 4 * CHUNK, 4, 9, 64);
+    let tiny = cache(budget);
+    for (g, group) in groups.iter().enumerate() {
+        for (i, prompt) in group.iter().enumerate() {
+            let label = format!("group {g} req {i} (budget {budget})");
+            let (cold, cold_parts, _) =
+                cached_generate(&pf, &cache(1 << 20), prompt, &seeded(), 24);
+            let (warm, warm_parts, _) = cached_generate(&pf, &tiny, prompt, &seeded(), 24);
+            assert_eq!(warm, cold, "{label}: stream diverged under churn");
+            assert_state_bits_equal(&warm_parts, &cold_parts, &label);
+            let st = tiny.stats();
+            assert!(
+                st.resident_bytes <= budget,
+                "{label}: resident {} over budget",
+                st.resident_bytes
+            );
+        }
+    }
+    let st = tiny.stats();
+    if !from_env {
+        // the default 12 KiB holds ~3 boundary snapshots of this fixture:
+        // 8 requests x 4 boundaries each must have churned…
+        assert!(st.evictions > 0, "budget never forced an eviction: {st:?}");
+        // …while back-to-back same-preamble requests still hit
+        assert!(st.hits > 0, "no warm hits under churn: {st:?}");
+    }
+}
+
+#[test]
+fn repeated_identical_prompt_reuses_its_deepest_boundary() {
+    // lookup is strict against the full prompt, not the head — so a
+    // resubmitted prompt whose head length is chunk-aligned reuses the
+    // boundary stored at exactly that depth and skips prefill entirely
+    let mut rng = Rng::new(601);
+    let model = build_model_full("hla2", &ModelShape::default(), 17);
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(8, 2)).unwrap();
+    let shared = cache(1 << 20);
+    // prompt of 41 tokens: head = 40 = 5 chunks, exactly boundary-aligned
+    let prompt = random_prompt(&mut rng, 4 * CHUNK + 9, 64);
+    let (a, a_parts, hit_a) = cached_generate(&pf, &shared, &prompt, &SamplerCfg::greedy(), 24);
+    assert_eq!(hit_a, 0, "first sighting is cold");
+    let (b, b_parts, hit_b) = cached_generate(&pf, &shared, &prompt, &SamplerCfg::greedy(), 24);
+    assert_eq!(hit_b, prompt.len() - 1, "aligned head must be reused in full");
+    assert_eq!(b, a, "full-head reuse changed the stream");
+    assert_state_bits_equal(&b_parts, &a_parts, "full-head reuse");
+    // and the warm full-hit still equals a fresh cold twin
+    let (c, c_parts, _) = cached_generate(&pf, &cache(1 << 20), &prompt, &SamplerCfg::greedy(), 24);
+    assert_eq!(c, a, "cold twin agrees with the populating run");
+    assert_state_bits_equal(&c_parts, &a_parts, "repeat cold");
+}
+
+#[test]
+fn opt_out_path_matches_cached_path_greedy() {
+    // the per-request opt-out takes the plain ingest_lane route; for
+    // greedy sampling its stream must match the cache-enabled route (the
+    // two only differ by scan segmentation, which argmax shrugs off) —
+    // and it must leave no trace in the cache
+    let mut rng = Rng::new(503);
+    let model = build_model_full("ahla", &ModelShape::default(), 17);
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(8, 2)).unwrap();
+    let mc = model.cfg.clone();
+    let prompt = random_prompt(&mut rng, 40, 64);
+
+    let shared = cache(1 << 20);
+    let (with_cache, _, _) = cached_generate(&pf, &shared, &prompt, &SamplerCfg::greedy(), 24);
+    let inserted = shared.stats().inserts;
+    assert!(inserted > 0, "the cached route contributes boundaries");
+
+    // opt-out: plain ingest, no cache interaction at all
+    let (parts, consumed) = pf.ingest_lane(None, &prompt).unwrap();
+    let mut state = ModelState::new(&mc);
+    state.load_components(&mc, &parts).unwrap();
+    let mut sampler = Sampler::new(SamplerCfg::greedy());
+    let opted_out = decode_stream(&model, &mut state, &mut sampler, prompt[consumed], 24);
+    assert_eq!(opted_out, with_cache, "opt-out changed the greedy stream");
+    let st = shared.stats();
+    assert_eq!(st.inserts, inserted, "opt-out must not insert");
+    assert_eq!(st.hits + st.misses, 1, "opt-out must not even look");
+}
