@@ -6,53 +6,27 @@
 //!
 //!     cargo run --release --example serve_demo [replicas] [requests]
 //!
-//! ## The session protocol (line-JSON over TCP; see `server/mod.rs`)
+//! ## The wire protocol (line-JSON over TCP)
 //!
-//! Every field below is optional on top of the base request:
+//! Full reference — every request field, reply framing, and error
+//! replies, each with a copy-pasteable example — lives in
+//! **`rust/docs/PROTOCOL.md`** (implementation notes in
+//! `server/mod.rs`).  The shapes this demo exercises, at a glance:
 //!
 //! ```text
 //! turn 1:  {"prompt": "hello", "max_tokens": 32, "session": 1}
-//!          -> on completion, lane state is snapshotted under session 1
 //! turn 2:  {"prompt": " and then", "session": 1, "resume": true}
-//!          -> state restored; the prompt is only the NEW text; the
-//!             history is already inside the constant-size HLA state
 //! continue:{"session": 1, "resume": true}            (empty prompt)
 //! fork:    {"session": 2, "fork_of": 1, "seed": 7}
-//!          -> session 1's snapshot is copied to 2 (O(state), not
-//!             O(context)) and generation resumes the fork
-//! spec:    {"prompt": "hello", "max_tokens": 32, "spec": true}
-//!          -> opt into speculative draft/verify/rollback decode
-//!             (`GenOpts { spec: true, .. }` on the client).  Requires
-//!             the server side to run with a spec engine attached —
-//!             `hla serve --spec-k 4 [--spec-drafter ngram|model|
-//!             model:<cfg>]` — otherwise the flag is a no-op, not an
-//!             error.  The acceptance rule is lossless: greedy output
-//!             is byte-identical, sampled output draws from identical
-//!             distributions (see server/mod.rs for the exactness
-//!             fine print).  `hla generate --spec true` runs the same
-//!             engine one-shot and prints the accept-rate/rollback
-//!             counters.
+//! spec:    {"prompt": "hello", "spec": true}         (lossless opt-in)
 //! no_cache:{"prompt": "secret ...", "no_cache": true}
-//!          -> opt this request out of the server's shared-prefix
-//!             cache (`GenOpts { no_cache: true, .. }` on the client):
-//!             its prompt is prefill-scanned cold and contributes no
-//!             boundary snapshots — for prompts carrying per-user
-//!             material a shared cache must not retain.  Requires the
-//!             server side to run with `hla serve --prefix-cache-mb N
-//!             [--prefix-cache-chunk W]` (plus --prefill-chunk) for the
-//!             cache to exist at all; without one the flag is a no-op,
-//!             not an error.  Warm and cold runs of the cached path are
-//!             byte-identical; the opt-out path scans with a different
-//!             segmentation, so greedy output is identical and seeded
-//!             output distribution-identical (see server/mod.rs and
-//!             rust/tests/prefix_cache_differential.rs for the
-//!             exactness fine print).  Resumed sessions always bypass
-//!             the cache.
-//! errors:  {"error": "unknown session 42"}           (resume/fork of a
-//!          session the store does not hold; nothing is generated)
+//! errors:  {"error": "unknown session 42"}
 //! final:   {"done": true, "finish": "length", "n": 32,
 //!           "session": 1, "resumed": true}
 //! ```
+//!
+//! On the Rust client these map to `GenOpts { session, resume, fork_of,
+//! spec, no_cache, .. }`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};

@@ -310,6 +310,35 @@ def emit_config(out_dir, name, entry, manifest, only=None):
             name,
         )
 
+        # occupancy-adaptive bucketing (rust coordinator): the same
+        # decode step at every power-of-two batch width below decode_b.
+        # Params are batch-independent; only the state leaves and the
+        # token vector narrow.  The Rust side discovers these by token
+        # shape (runtime/bucket.rs) and repacks lane state exactly
+        # between widths, so narrow buckets serve low occupancy without
+        # paying the full-width step.
+        w = 1
+        while w < db:
+            state_shape_w = jax.eval_shape(lambda w=w: model.state_init(cfg, w))
+            sflat_w, stree_w = jax.tree_util.tree_flatten(_tree_sds(state_shape_w))
+
+            def dec_fn_w(*args, stree_w=stree_w):
+                p = unflatten_p(args[:n_params])
+                s = jax.tree_util.tree_unflatten(stree_w, args[n_params : n_params + n_state])
+                logits, s2 = model.decode_step(cfg, p, s, args[n_params + n_state])
+                return (logits, *jax.tree_util.tree_leaves(s2))
+
+            _emit(
+                out_dir,
+                f"decode_step_{name}_b{w}",
+                dec_fn_w,
+                (*pflat, *sflat_w, _sds((w,), jnp.int32)),
+                manifest,
+                "decode_step",
+                name,
+            )
+            w *= 2
+
 
 def emit_kernels(out_dir, manifest, only=None):
     """Kernel-only artifacts through the Pallas path (interpret=True)."""

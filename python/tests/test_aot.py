@@ -44,6 +44,13 @@ def test_manifest_for_micro_config(tmp_path):
     dec = manifest["artifacts"]["decode_step_micro"]
     assert len(dec["inputs"]) == cfg["n_param_tensors"] + cfg["n_state_tensors"] + 1
     assert dec["outputs"][0]["shape"] == [cfg["decode_batch"], cfg["vocab"]]
+    # bucketed decode widths ride along (micro: decode_b=2 → one b1
+    # rung): same arity, token input and logits narrowed to width 1 —
+    # the shapes runtime/bucket.rs discovers the ladder from
+    b1 = manifest["artifacts"]["decode_step_micro_b1"]
+    assert len(b1["inputs"]) == len(dec["inputs"])
+    assert b1["inputs"][-1]["shape"] == [1]
+    assert b1["outputs"][0]["shape"] == [1, cfg["vocab"]]
     for art in manifest["artifacts"].values():
         assert os.path.exists(os.path.join(out, art["file"]))
     # manifest is valid JSON end to end

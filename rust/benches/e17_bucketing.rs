@@ -1,0 +1,159 @@
+//! E17 — occupancy-adaptive decode bucketing: per-step latency and
+//! tokens/s vs live-lane occupancy, bucketed vs fixed-width, plus the
+//! repack cost and the hysteresis (shrink-after) sweep.
+//!
+//! Claim: a fixed-width decode batch pays for its full width every step
+//! — a replica with 1 live lane in a B=8 engine still runs the 8-wide
+//! program.  Because HLA lane state is a constant-size block of floats
+//! (Thm 3.1), lanes can be repacked into the smallest compiled width
+//! that fits occupancy at O(state) cost, so per-step latency tracks
+//! *live* lanes, not capacity.  No artifacts needed: the pure-Rust twin
+//! models the batched step as one `decode_step` per slot — live or pad,
+//! every slot pays, exactly like the fixed-shape program — and the
+//! repack/hysteresis machinery measured here is the very code the
+//! coordinator runs (`coordinator::{repack, bucket}`).
+
+use hla::bench::{banner, bench, black_box};
+use hla::coordinator::repack::{compaction_moves, identity_moves, remap_components};
+use hla::coordinator::{BucketSpec, BucketSwitch, BucketTracker};
+use hla::metrics::Table;
+use hla::model::ModelState;
+use hla::tensor::Tensor;
+use hla::testing::fixtures::{build_model_full, random_prompt, ModelShape};
+use hla::util::rng::Rng;
+
+/// Engine capacity for the whole bench (the fixed-width baseline).
+const B_MAX: usize = 8;
+
+fn main() {
+    let model = build_model_full("hla2", &ModelShape::bench(), 17);
+    let mc = model.cfg.clone();
+    let ladder = BucketSpec::Pow2.ladder(B_MAX);
+    let mut rng = Rng::new(7);
+
+    // -----------------------------------------------------------------
+    banner("E17", "per-step latency vs occupancy: bucketed width vs fixed width");
+    // one ModelState per slot; a batched step costs one decode_step per
+    // slot whether the slot is live or pad — the fixed-shape contract
+    let mut states: Vec<ModelState> = (0..B_MAX).map(|_| ModelState::new(&mc)).collect();
+    // warm the live states so lanes decode from realistic context
+    for s in states.iter_mut() {
+        let warm = random_prompt(&mut rng, 16, mc.vocab);
+        for &t in &warm {
+            black_box(model.decode_step(s, t));
+        }
+    }
+    let mut table = Table::new(&[
+        "live lanes",
+        "width (bucketed)",
+        "fixed step ms",
+        "bucketed step ms",
+        "step speedup",
+        "fixed tok/s",
+        "bucketed tok/s",
+    ]);
+    for &live in &[1usize, 2, 3, 4, 6, 8] {
+        let width = *ladder.iter().find(|&&w| w >= live).unwrap_or(&B_MAX);
+        let step_at = |w: usize, states: &mut [ModelState]| {
+            // every slot pays: live lanes feed a token, pads feed PAD
+            for (slot, s) in states.iter_mut().take(w).enumerate() {
+                let tok = if slot < live { (slot + 1) as u8 } else { 0 };
+                black_box(model.decode_step(s, tok));
+            }
+        };
+        let fixed = bench(3, 30, || step_at(B_MAX, &mut states));
+        let bucketed = bench(3, 30, || step_at(width, &mut states));
+        table.row(&[
+            live.to_string(),
+            width.to_string(),
+            format!("{:.3}", fixed.mean_ms()),
+            format!("{:.3}", bucketed.mean_ms()),
+            format!("{:.2}x", fixed.mean_us() / bucketed.mean_us().max(1e-9)),
+            format!("{:.0}", live as f64 / (fixed.mean_us() / 1e6)),
+            format!("{:.0}", live as f64 / (bucketed.mean_us() / 1e6)),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "(a lane emits 1 token per step, so tok/s at occupancy k is k / step-time; \
+         at full occupancy the two columns converge by construction)"
+    );
+
+    // -----------------------------------------------------------------
+    banner("E17b", "exact repack cost (the price of one bucket switch)");
+    let comps: Vec<Tensor> = mc
+        .state_paths
+        .iter()
+        .map(|(_, sh)| {
+            let mut sh = sh.clone();
+            sh[1] = B_MAX;
+            let mut t = Tensor::zeros(&sh);
+            rng.fill_normal(&mut t.data, 1.0);
+            t
+        })
+        .collect();
+    let state_bytes: usize = comps.iter().map(Tensor::nbytes).sum();
+    let mut table = Table::new(&["switch", "moves", "mean us", "MB/s"]);
+    for (label, moves, new_w) in [
+        ("shrink 8→2 (2 live)", compaction_moves(&[1, 6]), 2usize),
+        ("shrink 8→4 (3 live)", compaction_moves(&[0, 3, 7]), 4),
+        ("grow 2→8 (2 live)", identity_moves(&[0, 1]), 8),
+    ] {
+        let st = bench(3, 50, || {
+            black_box(remap_components(&comps, &moves, new_w));
+        });
+        table.row(&[
+            label.into(),
+            moves.len().to_string(),
+            format!("{:.1}", st.mean_us()),
+            format!("{:.0}", state_bytes as f64 / 1e6 / (st.mean_us() / 1e6)),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("(repack is O(state), amortized over shrink_after+ steps by the hysteresis)");
+
+    // -----------------------------------------------------------------
+    banner("E17c", "hysteresis sweep: bucket switches under admit/finish churn");
+    // a synthetic occupancy trace with bursty arrivals and steady
+    // finishes — the pattern that thrashes a debounce-free controller
+    let mut occupancy = Vec::with_capacity(512);
+    let mut live = 0i64;
+    let mut orng = Rng::new(99);
+    for cycle in 0..512u64 {
+        if cycle % 7 == 0 {
+            live += 1 + (orng.below(3) as i64); // burst admission
+        }
+        if cycle % 2 == 0 && live > 0 {
+            live -= 1; // steady completion drain
+        }
+        live = live.clamp(0, B_MAX as i64);
+        occupancy.push(live as usize);
+    }
+    let mut table = Table::new(&["shrink_after", "grows", "shrinks", "switch/step", "mean width"]);
+    for shrink_after in [1usize, 2, 4, 8, 16] {
+        let mut tracker = BucketTracker::new(ladder.clone(), shrink_after, B_MAX);
+        let (mut grows, mut shrinks) = (0u64, 0u64);
+        let mut width_sum = 0u64;
+        for &live in &occupancy {
+            if matches!(tracker.on_admit(live), Some(BucketSwitch::Grow(_))) {
+                grows += 1;
+            }
+            if matches!(tracker.after_step(live), Some(BucketSwitch::Shrink(_))) {
+                shrinks += 1;
+            }
+            width_sum += tracker.width() as u64;
+        }
+        table.row(&[
+            shrink_after.to_string(),
+            grows.to_string(),
+            shrinks.to_string(),
+            format!("{:.3}", (grows + shrinks) as f64 / occupancy.len() as f64),
+            format!("{:.2}", width_sum as f64 / occupancy.len() as f64),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "(larger shrink_after trades a wider mean step for fewer repacks; \
+         --bucket-shrink-after picks the point for your admission churn)"
+    );
+}

@@ -37,10 +37,12 @@ fn run_trace_load(
         EngineOpts {
             policy: Some(policy),
             seed: 0,
+            checkpoint: None,
             store: None,
             prefill,
             prefix_cache: None,
             spec: None,
+            buckets: None,
         },
     );
     // warmup barrier: engine construction compiles the artifacts (~10s on

@@ -16,7 +16,9 @@ use anyhow::{anyhow, bail, Result};
 use crate::cache::PrefixCacheCfg;
 use crate::config::RunConfig;
 use crate::coordinator::router::Router;
-use crate::coordinator::{collect_tokens, spawn_engine_full, EngineOpts, GenRequest};
+use crate::coordinator::{
+    collect_tokens, spawn_engine_full, BucketCfg, BucketSpec, EngineOpts, GenRequest,
+};
 use crate::model::sampler::SamplerCfg;
 use crate::prefill::PrefillCfg;
 use crate::runtime::Engine;
@@ -33,8 +35,12 @@ train:    --steps N --lr F --warmup N --checkpoint PATH
 generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
           --spec true [--spec-k N --spec-drafter ngram|model|model:<cfg>]
 serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
+          [--checkpoint PATH]  (trained weights; default is seeded init)
           --session-capacity N --spill-dir DIR
           --prefill-chunk N --prefill-threads N  (0 0 = decode-as-prefill)
+          --batch-buckets off|pow2|w1,w2,...  --bucket-shrink-after K
+          (occupancy-adaptive decode width; grows on admission, shrinks
+          after K under-occupied steps; needs bucketed decode artifacts)
           --prefix-cache-mb N --prefix-cache-chunk N  (shared-prefix
           cache, per replica; needs --prefill-chunk; requests opt out
           with \"no_cache\": true on the wire)
@@ -193,6 +199,17 @@ fn prefix_cache_cfg(cfg: &RunConfig) -> Option<PrefixCacheCfg> {
         .then(|| PrefixCacheCfg::megabytes(cfg.prefix_cache_mb, cfg.prefix_cache_chunk))
 }
 
+/// `--batch-buckets pow2|w1,w2,...` turns on occupancy-adaptive decode
+/// bucketing; `--bucket-shrink-after K` sets the shrink hysteresis.  The
+/// ladder string was validated at parse time.
+fn bucket_cfg(cfg: &RunConfig) -> Option<BucketCfg> {
+    let spec = BucketSpec::parse(&cfg.batch_buckets).expect("validated by RunConfig::apply");
+    if spec == BucketSpec::Off {
+        return None;
+    }
+    Some(BucketCfg { spec, shrink_after: cfg.bucket_shrink_after })
+}
+
 /// `--spec true` / `--spec-k N` attach the speculative decoding engine;
 /// k stays adaptive ([`crate::spec::AdaptiveK`]) with `--spec-k` as the
 /// starting draft length.  The drafter string was validated at parse time.
@@ -216,10 +233,12 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
         EngineOpts {
             policy: Some(cfg.sched),
             seed: cfg.seed as i32,
+            checkpoint: cfg.checkpoint.clone(),
             store: None,
             prefill: prefill_cfg(cfg),
             prefix_cache: None,
             spec: spec.clone(),
+            buckets: bucket_cfg(cfg),
         },
     );
     let (etx, erx) = std::sync::mpsc::channel();
@@ -254,10 +273,35 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
             stats.spec_rollbacks
         );
     }
+    if stats.bucket_switches() > 0 {
+        println!(
+            "[buckets: mean step width {:.2}, {} grow(s) + {} shrink(s), repack p50 {:.0}us]",
+            stats.step_width_mean,
+            stats.bucket_grows,
+            stats.bucket_shrinks,
+            stats.repack_us_p50
+        );
+    }
     Ok(())
 }
 
 fn cmd_serve(cfg: &RunConfig) -> Result<()> {
+    // fail fast on a bad --checkpoint: the replicas load it inside their
+    // own threads, where an error would only surface at join (i.e. at
+    // shutdown) while the listener keeps accepting doomed requests.
+    // Header-only read — the tensor payload is deserialized once per
+    // replica thread (literals are !Send, so each engine owns its copy).
+    if let Some(path) = &cfg.checkpoint {
+        let meta = crate::train::checkpoint::load_meta(path)
+            .map_err(|e| anyhow!("checkpoint {path}: {e}"))?;
+        if meta.config != cfg.model {
+            bail!(
+                "checkpoint {path} was trained for config {:?}, serving {:?}",
+                meta.config,
+                cfg.model
+            );
+        }
+    }
     // one shared store across all replicas: any replica can resume any
     // session, so rebalancing a conversation is just routing
     let store = Arc::new(SessionStore::new(StoreCfg {
@@ -273,10 +317,12 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
             EngineOpts {
                 policy: Some(cfg.sched),
                 seed: cfg.seed as i32 + r as i32,
+                checkpoint: cfg.checkpoint.clone(),
                 store: Some(store.clone()),
                 prefill: prefill_cfg(cfg),
                 prefix_cache: prefix_cache_cfg(cfg),
                 spec: spec_cfg(cfg),
+                buckets: bucket_cfg(cfg),
             },
         );
         senders.push(tx);
@@ -285,6 +331,10 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     let router = Arc::new(Router::new(senders, cfg.route));
     let stop = Arc::new(AtomicBool::new(false));
     println!("serving {} ({} replica(s)) on {}", cfg.model, cfg.replicas, cfg.addr);
+    match &cfg.checkpoint {
+        Some(p) => println!("weights: checkpoint {p}"),
+        None => println!("weights: seeded init (pass --checkpoint PATH to serve trained weights)"),
+    }
     match prefill_cfg(cfg) {
         Some(p) => println!("prefill: chunked scan (w={}, {} thread(s))", p.chunk, p.threads),
         None => println!("prefill: decode-as-prefill (enable with --prefill-chunk N)"),
@@ -301,6 +351,14 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
             }
         }
         None => println!("prefix cache: off (enable with --prefix-cache-mb N)"),
+    }
+    match bucket_cfg(cfg) {
+        Some(b) => println!(
+            "decode bucketing: {} (shrink after {} under-occupied step(s)) — \
+             widths without artifacts are dropped at spawn",
+            cfg.batch_buckets, b.shrink_after
+        ),
+        None => println!("decode bucketing: off (enable with --batch-buckets pow2)"),
     }
     match spec_cfg(cfg) {
         Some(s) => println!(

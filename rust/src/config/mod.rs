@@ -27,6 +27,11 @@ pub struct RunConfig {
     pub prefill_chunk: usize,
     /// scan-prefill worker threads; 0 = one per available core, capped at 8
     pub prefill_threads: usize,
+    // occupancy-adaptive decode bucketing
+    /// decode-width ladder: "off" (fixed width), "pow2", or "w1,w2,..."
+    pub batch_buckets: String,
+    /// consecutive under-occupied steps before the bucket shrinks (≥ 1)
+    pub bucket_shrink_after: usize,
     // shared-prefix cache (per replica)
     /// byte budget in MiB for cached prefix-boundary snapshots; 0 = off
     pub prefix_cache_mb: usize,
@@ -70,6 +75,8 @@ impl Default for RunConfig {
             route: RoutePolicy::LeastLoaded,
             prefill_chunk: 0,
             prefill_threads: 0,
+            batch_buckets: "off".into(),
+            bucket_shrink_after: 4,
             prefix_cache_mb: 0,
             prefix_cache_chunk: 32,
             spec_k: 0,
@@ -132,6 +139,18 @@ impl RunConfig {
             }
             "prefill-chunk" | "prefill_chunk" => self.prefill_chunk = value.parse()?,
             "prefill-threads" | "prefill_threads" => self.prefill_threads = value.parse()?,
+            "batch-buckets" | "batch_buckets" => {
+                crate::coordinator::BucketSpec::parse(value).ok_or_else(|| {
+                    anyhow!("bad batch-buckets {value:?} (off|pow2|w1,w2,... with widths >= 1)")
+                })?;
+                self.batch_buckets = value.into();
+            }
+            "bucket-shrink-after" | "bucket_shrink_after" => {
+                self.bucket_shrink_after = value.parse()?;
+                if self.bucket_shrink_after == 0 {
+                    bail!("bucket-shrink-after must be >= 1 (steps of hysteresis before a shrink)");
+                }
+            }
             "prefix-cache-mb" | "prefix_cache_mb" => self.prefix_cache_mb = value.parse()?,
             "prefix-cache-chunk" | "prefix_cache_chunk" => {
                 self.prefix_cache_chunk = value.parse()?;
@@ -274,6 +293,27 @@ mod tests {
         assert_eq!(d.prefix_cache_chunk, 32);
         // a zero stride can never snapshot a boundary: fail at parse time
         assert!(RunConfig::from_args(&s(&["--prefix-cache-chunk", "0"])).is_err());
+    }
+
+    #[test]
+    fn bucket_flags_apply_and_validate() {
+        let cfg = RunConfig::from_args(&s(&["--batch-buckets", "pow2", "--bucket-shrink-after=8"]))
+            .unwrap();
+        assert_eq!(cfg.batch_buckets, "pow2");
+        assert_eq!(cfg.bucket_shrink_after, 8);
+        // explicit width lists pass parse-time validation too
+        let cfg = RunConfig::from_args(&s(&["--batch-buckets", "1,2,4"])).unwrap();
+        assert_eq!(cfg.batch_buckets, "1,2,4");
+        // defaults keep fixed-width decode with sane hysteresis for later
+        let d = RunConfig::default();
+        assert_eq!(d.batch_buckets, "off");
+        assert_eq!(d.bucket_shrink_after, 4);
+        // a bogus ladder or a zero-step hysteresis fails fast, before any
+        // engine spawns (the --batch-buckets parsing edge cases)
+        assert!(RunConfig::from_args(&s(&["--batch-buckets", "fast"])).is_err());
+        assert!(RunConfig::from_args(&s(&["--batch-buckets", "1,0,4"])).is_err());
+        assert!(RunConfig::from_args(&s(&["--batch-buckets", "1,,4"])).is_err());
+        assert!(RunConfig::from_args(&s(&["--bucket-shrink-after", "0"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Occupancy-adaptive decode bucketing: pick how wide the batched
+//! `decode_step` should be from how many lanes are actually live.
+//!
+//! A fixed-width decode batch pays for its full width every step: a
+//! replica serving 3 live lanes in a B=32 engine still runs the 32-wide
+//! artifact.  Because an HLA lane's entire context is a *constant-size*
+//! block of floats (Theorem 3.1), a lane can be moved between batch slots
+//! with a fixed-size memcpy — no O(context) KV shuffling — which makes
+//! iteration-level batch-width adaptation (Orca/vLLM-style continuous
+//! batching, specialized to a ladder of compiled widths) nearly free.
+//!
+//! This module holds the *policy* half of the feature:
+//!
+//! * [`BucketSpec`] — the `serve --batch-buckets` grammar
+//!   (`off | pow2 | w1,w2,...`), parsed at config time and materialized
+//!   into a width ladder once the engine's `decode_batch` is known.
+//! * [`BucketTracker`] — the hysteresis controller: **grow eagerly on
+//!   admission** (a waiting request must never be refused because the
+//!   current bucket is full), **shrink only after `shrink_after`
+//!   consecutive under-occupied steps** (admission churn must not thrash
+//!   recompiles or repacks).
+//!
+//! The *mechanism* half lives elsewhere: the per-width executable ladder
+//! in [`crate::runtime::bucket`], and the exact state repack (gather live
+//! lanes into the compact layout / scatter back on grow) in
+//! [`super::repack`].  The engine loop composes the three; the
+//! differential suite (`rust/tests/bucketing_differential.rs`) pins
+//! bucketed token streams byte-identical to fixed-batch serial decode.
+
+/// How `serve --batch-buckets` chooses the decode-width ladder.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BucketSpec {
+    /// Fixed-width decode (the pre-bucketing behaviour).
+    Off,
+    /// Power-of-two widths up to the config's `decode_batch`
+    /// (e.g. B=8 → 1/2/4/8; the full width is always included).
+    Pow2,
+    /// An explicit width list; widths above `decode_batch` are dropped
+    /// and the full width is always included.
+    List(Vec<usize>),
+}
+
+impl BucketSpec {
+    /// Parse the `--batch-buckets` flag value.  Accepts `off`, `pow2`,
+    /// or a comma-separated width list (`1,2,4`); rejects empty items,
+    /// zero widths, and non-numeric input.
+    pub fn parse(s: &str) -> Option<BucketSpec> {
+        match s.trim() {
+            "off" | "" => Some(BucketSpec::Off),
+            "pow2" => Some(BucketSpec::Pow2),
+            list => {
+                let widths: Option<Vec<usize>> = list
+                    .split(',')
+                    .map(|w| w.trim().parse::<usize>().ok().filter(|&w| w > 0))
+                    .collect();
+                widths.filter(|w| !w.is_empty()).map(BucketSpec::List)
+            }
+        }
+    }
+
+    /// Materialize the width ladder for a `decode_batch` of `b_max`:
+    /// sorted, deduplicated, every width in `1..=b_max`, and always
+    /// ending in `b_max` itself (the engine must be able to serve a full
+    /// batch whatever the operator listed).
+    pub fn ladder(&self, b_max: usize) -> Vec<usize> {
+        let b_max = b_max.max(1);
+        let mut widths = match self {
+            BucketSpec::Off => vec![],
+            BucketSpec::Pow2 => {
+                let mut w = 1;
+                let mut v = vec![];
+                while w < b_max {
+                    v.push(w);
+                    w *= 2;
+                }
+                v
+            }
+            BucketSpec::List(ws) => ws.iter().copied().filter(|&w| w < b_max).collect(),
+        };
+        widths.push(b_max);
+        widths.sort_unstable();
+        widths.dedup();
+        widths
+    }
+}
+
+/// Bucketing configuration carried from the CLI to the engine spawn.
+#[derive(Debug, Clone)]
+pub struct BucketCfg {
+    pub spec: BucketSpec,
+    /// Consecutive under-occupied steps required before shrinking.
+    pub shrink_after: usize,
+}
+
+impl Default for BucketCfg {
+    fn default() -> Self {
+        BucketCfg { spec: BucketSpec::Pow2, shrink_after: 4 }
+    }
+}
+
+/// What the tracker asked the engine to do after an occupancy event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BucketSwitch {
+    /// Widen the layout to the given width (slots keep their indices).
+    Grow(usize),
+    /// Compact live lanes into the given narrower width.
+    Shrink(usize),
+}
+
+/// The hysteresis controller over a width ladder.
+///
+/// Grow decisions are taken at admission time and are immediate: an
+/// admitted request needs a slot *this* cycle.  Shrink decisions are
+/// taken after each engine step and are debounced: only after
+/// `shrink_after` consecutive steps whose live-lane count fits a
+/// narrower bucket does the tracker ask for a shrink — so a stream of
+/// admit/finish churn around a bucket edge settles instead of repacking
+/// every step.  Any step that does *not* fit narrower (or any grow)
+/// resets the debounce counter.
+#[derive(Debug, Clone)]
+pub struct BucketTracker {
+    ladder: Vec<usize>,
+    shrink_after: usize,
+    width: usize,
+    under: usize,
+}
+
+impl BucketTracker {
+    /// `ladder` must be non-empty and sorted ascending (as produced by
+    /// [`BucketSpec::ladder`]); `start_width` is the width of the layout
+    /// the engine currently holds (its `decode_batch` at spawn).
+    pub fn new(ladder: Vec<usize>, shrink_after: usize, start_width: usize) -> BucketTracker {
+        assert!(!ladder.is_empty(), "bucket ladder must be non-empty");
+        debug_assert!(ladder.windows(2).all(|w| w[0] < w[1]), "ladder must be sorted");
+        BucketTracker { ladder, shrink_after: shrink_after.max(1), width: start_width, under: 0 }
+    }
+
+    /// The current layout width the tracker believes the engine holds.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Smallest ladder width that fits `live` lanes (the full width when
+    /// nothing narrower does; the narrowest bucket when `live == 0`).
+    pub fn width_for(&self, live: usize) -> usize {
+        self.ladder
+            .iter()
+            .copied()
+            .find(|&w| w >= live)
+            .unwrap_or(*self.ladder.last().expect("non-empty ladder"))
+    }
+
+    /// Admission-time check: `live` is the lane count *after* the pending
+    /// admissions land.  Grows eagerly (and resets the shrink debounce);
+    /// never shrinks — admissions prove demand, not idleness.
+    pub fn on_admit(&mut self, live: usize) -> Option<BucketSwitch> {
+        let target = self.width_for(live);
+        if target > self.width {
+            self.width = target;
+            self.under = 0;
+            Some(BucketSwitch::Grow(target))
+        } else {
+            None
+        }
+    }
+
+    /// Post-step check: `live` is the lane count after the step (and any
+    /// completions).  Returns a shrink only after `shrink_after`
+    /// consecutive under-occupied steps.
+    pub fn after_step(&mut self, live: usize) -> Option<BucketSwitch> {
+        let target = self.width_for(live);
+        if target >= self.width {
+            self.under = 0;
+            return None;
+        }
+        self.under += 1;
+        if self.under < self.shrink_after {
+            return None;
+        }
+        self.under = 0;
+        self.width = target;
+        Some(BucketSwitch::Shrink(target))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_accepts_the_grammar() {
+        assert_eq!(BucketSpec::parse("off"), Some(BucketSpec::Off));
+        assert_eq!(BucketSpec::parse(""), Some(BucketSpec::Off));
+        assert_eq!(BucketSpec::parse("pow2"), Some(BucketSpec::Pow2));
+        assert_eq!(BucketSpec::parse("1,2,4"), Some(BucketSpec::List(vec![1, 2, 4])));
+        assert_eq!(BucketSpec::parse(" 4, 2 ,1 "), Some(BucketSpec::List(vec![4, 2, 1])));
+        assert_eq!(BucketSpec::parse("8"), Some(BucketSpec::List(vec![8])));
+    }
+
+    #[test]
+    fn spec_parsing_rejects_garbage() {
+        // zero-width buckets, empty list items, and non-numbers all fail
+        // at parse time — before any engine spawns
+        assert_eq!(BucketSpec::parse("0"), None);
+        assert_eq!(BucketSpec::parse("1,0,4"), None);
+        assert_eq!(BucketSpec::parse("1,,4"), None);
+        assert_eq!(BucketSpec::parse("fast"), None);
+        assert_eq!(BucketSpec::parse("1,2,x"), None);
+        assert_eq!(BucketSpec::parse("-2"), None);
+    }
+
+    #[test]
+    fn ladders_are_sorted_deduped_and_capped() {
+        assert_eq!(BucketSpec::Pow2.ladder(8), vec![1, 2, 4, 8]);
+        // a non-power-of-two full width still tops the ladder
+        assert_eq!(BucketSpec::Pow2.ladder(6), vec![1, 2, 4, 6]);
+        assert_eq!(BucketSpec::Pow2.ladder(1), vec![1]);
+        // explicit lists: unsorted input sorts, oversize widths drop,
+        // duplicates collapse, full width always appended
+        assert_eq!(BucketSpec::List(vec![4, 2, 2, 64]).ladder(8), vec![2, 4, 8]);
+        assert_eq!(BucketSpec::List(vec![64]).ladder(8), vec![8]);
+        assert_eq!(BucketSpec::Off.ladder(8), vec![8]);
+    }
+
+    #[test]
+    fn width_for_picks_the_smallest_fitting_bucket() {
+        let t = BucketTracker::new(vec![1, 2, 4, 8], 2, 8);
+        assert_eq!(t.width_for(0), 1);
+        assert_eq!(t.width_for(1), 1);
+        assert_eq!(t.width_for(2), 2);
+        assert_eq!(t.width_for(3), 4);
+        assert_eq!(t.width_for(8), 8);
+        // overload clamps to the full width (admission caps at capacity)
+        assert_eq!(t.width_for(9), 8);
+    }
+
+    #[test]
+    fn grows_eagerly_on_admission() {
+        let mut t = BucketTracker::new(vec![1, 2, 4, 8], 4, 1);
+        // one live lane: already fits, no switch
+        assert_eq!(t.on_admit(1), None);
+        // a burst of admissions grows in one jump, not ladder-step-wise
+        assert_eq!(t.on_admit(5), Some(BucketSwitch::Grow(8)));
+        assert_eq!(t.width(), 8);
+        // admissions never shrink, however empty the batch got
+        assert_eq!(t.on_admit(1), None);
+        assert_eq!(t.width(), 8);
+    }
+
+    #[test]
+    fn shrinks_only_after_k_consecutive_under_occupied_steps() {
+        let mut t = BucketTracker::new(vec![1, 2, 4, 8], 3, 8);
+        assert_eq!(t.after_step(2), None);
+        assert_eq!(t.after_step(2), None);
+        // third consecutive under-occupied step: shrink to the fit
+        assert_eq!(t.after_step(2), Some(BucketSwitch::Shrink(2)));
+        assert_eq!(t.width(), 2);
+        // fully-occupied steps never shrink
+        assert_eq!(t.after_step(2), None);
+        assert_eq!(t.after_step(2), None);
+        assert_eq!(t.after_step(2), None);
+        assert_eq!(t.width(), 2);
+    }
+
+    #[test]
+    fn occupied_step_resets_the_shrink_debounce() {
+        let mut t = BucketTracker::new(vec![1, 2, 4, 8], 3, 8);
+        assert_eq!(t.after_step(1), None);
+        assert_eq!(t.after_step(1), None);
+        // occupancy recovers for one step: the countdown restarts
+        assert_eq!(t.after_step(8), None);
+        assert_eq!(t.after_step(1), None);
+        assert_eq!(t.after_step(1), None);
+        assert_eq!(t.after_step(1), Some(BucketSwitch::Shrink(1)));
+    }
+
+    #[test]
+    fn admit_finish_churn_does_not_thrash() {
+        // lanes oscillate across the 4/8 bucket edge every cycle; with
+        // shrink_after = 4 the tracker must settle at 8, not repack per
+        // step (the hysteresis acceptance criterion)
+        let mut t = BucketTracker::new(vec![1, 2, 4, 8], 4, 8);
+        let mut switches = 0;
+        for cycle in 0..64 {
+            let live = if cycle % 2 == 0 { 4 } else { 5 };
+            if t.on_admit(live).is_some() {
+                switches += 1;
+            }
+            if t.after_step(live).is_some() {
+                switches += 1;
+            }
+        }
+        assert_eq!(switches, 0, "churn across a bucket edge must not thrash");
+        assert_eq!(t.width(), 8);
+    }
+
+    #[test]
+    fn grow_resets_the_shrink_debounce() {
+        let mut t = BucketTracker::new(vec![1, 2, 4, 8], 2, 4);
+        assert_eq!(t.after_step(1), None);
+        // an admission burst interrupts the countdown...
+        assert_eq!(t.on_admit(8), Some(BucketSwitch::Grow(8)));
+        // ...so the next under-occupied step starts the count from one
+        assert_eq!(t.after_step(1), None);
+        assert_eq!(t.after_step(1), Some(BucketSwitch::Shrink(1)));
+    }
+
+    #[test]
+    fn drain_to_idle_shrinks_to_the_narrowest_bucket() {
+        let mut t = BucketTracker::new(vec![1, 2, 4, 8], 2, 8);
+        assert_eq!(t.after_step(0), None);
+        assert_eq!(t.after_step(0), Some(BucketSwitch::Shrink(1)));
+        assert_eq!(t.width(), 1);
+        // and an idle engine stays put (no switch storm at zero load)
+        assert_eq!(t.after_step(0), None);
+        assert_eq!(t.after_step(0), None);
+    }
+}

@@ -7,7 +7,9 @@
 //!   clients ──(mpsc GenRequest)──► EngineLoop (owns the PJRT Engine;
 //!                                   xla types are !Send so everything
 //!                                   device-touching lives on this thread)
-//!             ◄─(mpsc TokenEvent)── │  fixed-width decode batch, B lanes
+//!             ◄─(mpsc TokenEvent)── │  batched decode, ≤ B lanes; with
+//!                                   │  bucketing the step width follows
+//!                                   │  occupancy ([`bucket`], [`repack`])
 //!                                   │  StatePool: per-lane HLA state slices
 //!                                   │  Scheduler: prefill/decode policy
 //! ```
@@ -15,7 +17,11 @@
 //! Because the per-sequence state is a *constant-size* tuple (Theorem 3.1)
 //! rather than a growing KV-cache, lane admission is O(state) zeroing, lane
 //! memory never grows with context length, and the step cost is independent
-//! of how long each sequence has been running (benches E6/E8).
+//! of how long each sequence has been running (benches E6/E8).  The same
+//! property makes a lane cheap to *move*: with bucketing enabled
+//! ([`EngineLoop::set_buckets`]) the loop repacks live lanes between
+//! compiled decode widths as occupancy changes, so a near-empty replica
+//! stops paying for its full batch width (bench E17).
 //!
 //! Multi-replica routing lives in [`router`].  Session-tagged requests
 //! additionally snapshot their lane's constant-size state into a shared
@@ -27,6 +33,8 @@
 //! replica instead of once per request.
 
 pub mod batch;
+pub mod bucket;
+pub mod repack;
 pub mod request;
 pub mod router;
 pub mod state_pool;
@@ -42,11 +50,12 @@ use crate::cache::{PrefixCache, PrefixCacheCfg};
 use crate::metrics::{Histogram, Meter, Table};
 use crate::model::RustModel;
 use crate::prefill::{PrefillCfg, PrefillMode, Prefiller};
-use crate::runtime::{literal, Engine};
+use crate::runtime::{literal, DecodeBuckets, Engine};
 use crate::session::{SamplerState, SessionSnapshot, SessionStore};
 use crate::spec::{DrafterKind, SpecCfg, SpecEngine};
 use crate::tensor::{Tensor, TensorI32};
 pub use batch::{Lane, LaneStatus};
+pub use bucket::{BucketCfg, BucketSpec, BucketSwitch, BucketTracker};
 pub use request::{collect_tokens, FinishReason, GenRequest, RequestId, TokenEvent};
 pub use state_pool::StatePool;
 
@@ -146,6 +155,19 @@ pub struct ServeStats {
     pub tokens_per_sec: f64,
     pub state_bytes: usize,
     pub lane_occupancy: f64,
+    /// Bucket-layout grows (admission bursts) / shrinks (sustained
+    /// under-occupancy) — both 0 when bucketing is off or never fired.
+    pub bucket_grows: u64,
+    pub bucket_shrinks: u64,
+    /// Exact state repacks run (one per bucket switch) and their cost —
+    /// the overhead side of the E17 trade.
+    pub repacks: u64,
+    pub repack_us_p50: f64,
+    pub repack_us_p99: f64,
+    /// Mean width of the batched decode steps actually executed
+    /// (== `decode_batch` when bucketing is off).  Lower than the batch
+    /// width at low occupancy is the bucketing win (bench E17).
+    pub step_width_mean: f64,
     /// Speculative draft/verify rounds run across all lanes.
     pub spec_rounds: u64,
     /// Draft tokens proposed / accepted (acceptance rate = ratio).
@@ -183,6 +205,14 @@ impl ServeStats {
     /// cache was off or never consulted).
     pub fn cache_hit_rate(&self) -> f64 {
         crate::metrics::hit_rate(self.cache_hits, self.cache_misses)
+    }
+
+    /// Total bucket switches (grows + shrinks).  Under a healthy
+    /// hysteresis setting this stays far below `steps`; a ratio near 1
+    /// means the shrink debounce is too aggressive for the admission
+    /// churn (raise `--bucket-shrink-after`).
+    pub fn bucket_switches(&self) -> u64 {
+        self.bucket_grows + self.bucket_shrinks
     }
 
     /// The TTFT breakdown as a [`Table`] (the reporter benches/CLI print).
@@ -242,6 +272,19 @@ pub struct EngineLoop {
     /// the pure-Rust twin, so they coexist with batched lanes under the
     /// same scheduler policy.
     spec: Option<SpecEngine>,
+    /// Occupancy-adaptive decode bucketing (None = fixed-width decode):
+    /// the per-width executable ladder plus the hysteresis tracker.
+    buckets: Option<Bucketing>,
+    /// Batch width of the live state literals: `batch` when bucketing is
+    /// off, otherwise the current bucket's width.
+    width: usize,
+    /// Lane-id → slot within the state literals' batch dimension.  The
+    /// identity map without bucketing; under bucketing a lane keeps its
+    /// id (the `lanes` index) for its whole lifetime while its *slot*
+    /// follows grows/shrinks — so session detach, spec activation and
+    /// logits routing all read the lane's current slot, never its
+    /// admission slot.  Entries of inactive lanes are meaningless.
+    slot_of: Vec<usize>,
     /// Seed the loop was spawned with (draft-model init shares it).
     seed: i32,
     // params + recurrent state live as literals across steps and are passed
@@ -259,13 +302,27 @@ pub struct EngineLoop {
     /// boundary; cold = everything else, cache or no cache).
     pub ttft_warm_hist: Histogram,
     pub ttft_cold_hist: Histogram,
+    /// Time per exact state repack (one sample per bucket switch).
+    pub repack_hist: Histogram,
     meter: Meter,
     occupied_steps: u64,
     occupied_lanes: u64,
+    bucket_grows: u64,
+    bucket_shrinks: u64,
+    /// Sum of step widths / count of batched steps (mean step width).
+    width_steps: u64,
+    batched_steps: u64,
     completed: u64,
     prefills: u64,
     prefilled_tokens: u64,
     started: Instant,
+}
+
+/// Live bucketing state: the compiled executable ladder plus the
+/// hysteresis tracker that decides when to walk it.
+struct Bucketing {
+    exes: DecodeBuckets,
+    tracker: BucketTracker,
 }
 
 impl EngineLoop {
@@ -297,6 +354,9 @@ impl EngineLoop {
             prefiller: None,
             prefix_cache: None,
             spec: None,
+            buckets: None,
+            width: batch,
+            slot_of: (0..batch).collect(),
             seed,
             params,
             state,
@@ -308,9 +368,14 @@ impl EngineLoop {
             first_decode_hist: Histogram::new(),
             ttft_warm_hist: Histogram::new(),
             ttft_cold_hist: Histogram::new(),
+            repack_hist: Histogram::new(),
             meter: Meter::new(),
             occupied_steps: 0,
             occupied_lanes: 0,
+            bucket_grows: 0,
+            bucket_shrinks: 0,
+            width_steps: 0,
+            batched_steps: 0,
             completed: 0,
             prefills: 0,
             prefilled_tokens: 0,
@@ -425,6 +490,99 @@ impl EngineLoop {
         }
     }
 
+    /// Attach occupancy-adaptive decode bucketing (`serve --batch-buckets
+    /// pow2|w1,w2,...`): compile the requested ladder of `decode_step`
+    /// executables up front, then size every batched step to live-lane
+    /// occupancy — growing eagerly on admission, shrinking only after
+    /// `shrink_after` consecutive under-occupied steps, with lane state
+    /// repacked **exactly** between widths ([`repack`]; the differential
+    /// suite `tests/bucketing_differential.rs` pins bucketed streams
+    /// byte-identical to fixed-batch decode).  Ladder entries without a
+    /// compiled artifact are dropped; if nothing narrower than the full
+    /// width survives, fixed-width decode is kept with a warning rather
+    /// than a dead engine — matching the other attachment surfaces.
+    pub fn set_buckets(&mut self, cfg: BucketCfg) {
+        let ladder = cfg.spec.ladder(self.batch);
+        if ladder.len() <= 1 {
+            // the operator's own flag produced a one-rung ladder (e.g.
+            // --batch-buckets listing only widths >= decode_batch) —
+            // nothing to switch between, and no artifact is to blame
+            log::warn!(
+                "batch bucketing: requested ladder has nothing narrower than the full \
+                 width {}; keeping fixed-width decode (list a width below decode_batch)",
+                self.batch
+            );
+            return;
+        }
+        let exes =
+            DecodeBuckets::discover(&self.engine.manifest, &self.cfg_name, &ladder, self.batch);
+        if exes.widths().len() <= 1 {
+            log::warn!(
+                "batch bucketing requested but no bucketed decode_step artifacts exist for \
+                 {:?}; keeping fixed width {} (re-run python/compile/aot.py to emit them)",
+                self.cfg_name,
+                self.batch
+            );
+            return;
+        }
+        // pay all compiles now, so a bucket switch under load never
+        // stalls the serving path on a compiler
+        match exes.warm(&self.engine) {
+            Ok(_) => {
+                let widths = exes.widths().to_vec();
+                self.buckets = Some(Bucketing {
+                    exes,
+                    tracker: BucketTracker::new(widths, cfg.shrink_after, self.width),
+                });
+            }
+            Err(e) => log::warn!("bucketed decode unavailable, keeping fixed width: {e}"),
+        }
+    }
+
+    /// Apply a bucket switch: rebuild the state literals at the new width
+    /// (an exact gather/scatter of live-lane slices — bytes verbatim) and
+    /// update the lane-id→slot table from the same move set.  O(state),
+    /// off the per-token hot loop (admission / post-step only).
+    fn apply_switch(&mut self, sw: BucketSwitch) {
+        let t0 = Instant::now();
+        // live lanes in lane-id order: deterministic slot assignment
+        let live_lanes: Vec<usize> =
+            (0..self.batch).filter(|&b| self.lanes[b].is_active()).collect();
+        let live_slots: Vec<usize> = live_lanes.iter().map(|&b| self.slot_of[b]).collect();
+        let (new_width, moves) = match sw {
+            // grow: every slot index stays valid in the wider layout
+            BucketSwitch::Grow(w) => (w, repack::identity_moves(&live_slots)),
+            // shrink: the i-th live lane (by lane id) compacts to slot i
+            BucketSwitch::Shrink(w) => (w, repack::compaction_moves(&live_slots)),
+        };
+        debug_assert!(live_lanes.len() <= new_width, "switch must fit every live lane");
+        self.repack_state(new_width, &moves)
+            .expect("state repack is pure host-side copies over validated shapes");
+        for (i, &b) in live_lanes.iter().enumerate() {
+            self.slot_of[b] = moves[i].1;
+        }
+        self.width = new_width;
+        match sw {
+            BucketSwitch::Grow(_) => self.bucket_grows += 1,
+            BucketSwitch::Shrink(_) => self.bucket_shrinks += 1,
+        }
+        self.repack_hist.record(t0.elapsed());
+    }
+
+    /// Rebuild the state literals at `new_width` per `moves` (src slot →
+    /// dst slot), zero-filling pad slots.  The float payload is copied
+    /// byte-verbatim, so repacked lanes are bit-identical to un-repacked
+    /// ones — the invariant the bucketing differential test asserts.
+    fn repack_state(&mut self, new_width: usize, moves: &[(usize, usize)]) -> Result<()> {
+        let comps: Vec<Tensor> =
+            self.state.iter().map(literal::literal_to_tensor).collect::<Result<_>>()?;
+        self.state = repack::remap_components(&comps, moves, new_width)
+            .iter()
+            .map(literal::tensor_to_literal)
+            .collect::<Result<_>>()?;
+        Ok(())
+    }
+
     /// Run until the request channel closes and all lanes drain.
     pub fn run(&mut self) -> Result<ServeStats> {
         let mut open = true;
@@ -463,6 +621,12 @@ impl EngineLoop {
                 self.step()?;
             }
             self.spec_rounds(batched);
+            // bucketing: debounced shrink toward the occupancy after this
+            // cycle's completions (grows happen eagerly inside admit)
+            let live = self.lanes.iter().filter(|l| l.is_active()).count();
+            if let Some(sw) = self.buckets.as_mut().and_then(|b| b.tracker.after_step(live)) {
+                self.apply_switch(sw);
+            }
         }
         Ok(self.stats())
     }
@@ -477,7 +641,28 @@ impl EngineLoop {
             (0..self.batch).filter(|&b| !self.lanes[b].is_active()).collect();
         let active = self.batch - free.len();
         let n = self.policy.admissions(self.waiting.len(), free.len(), active);
+        // bucketing: grow eagerly so every admission below has a slot —
+        // a waiting request is never refused because the bucket is full
+        if n > 0 {
+            if let Some(sw) = self.buckets.as_mut().and_then(|b| b.tracker.on_admit(active + n)) {
+                self.apply_switch(sw);
+            }
+        }
+        // slots already held by live lanes; admissions claim the gaps in
+        // ascending order (the identity assignment when bucketing is off)
+        let mut occupied = vec![false; self.width];
+        for b in 0..self.batch {
+            if self.lanes[b].is_active() {
+                occupied[self.slot_of[b]] = true;
+            }
+        }
         for &lane_idx in free.iter().take(n) {
+            let slot = occupied
+                .iter()
+                .position(|&o| !o)
+                .expect("admission grow guarantees a free slot");
+            occupied[slot] = true;
+            self.slot_of[lane_idx] = slot;
             let req = self.waiting.pop_front().expect("admissions <= waiting");
             self.queue_hist.record(req.submitted.elapsed());
             let claimed = match (&self.sessions, req.resume, req.session) {
@@ -497,7 +682,7 @@ impl EngineLoop {
             // the unclaim/degrade path above, and admission sits off the
             // per-token hot loop.)
             let snap = match claimed {
-                Some((store, s)) => match self.import_state_lane(lane_idx, &s.state) {
+                Some((store, s)) => match self.import_state_lane(slot, &s.state) {
                     Ok(()) => Some(s),
                     Err(e) => {
                         log::warn!(
@@ -519,7 +704,7 @@ impl EngineLoop {
                 }
                 None => {
                     self.pool.zero_lane(lane_idx);
-                    self.zero_state_lane(lane_idx).expect("state zeroing");
+                    self.zero_state_lane(slot).expect("state zeroing");
                     Lane::start(req)
                 }
             };
@@ -557,7 +742,7 @@ impl EngineLoop {
                 _ => None,
             };
             if let Some((parts, consumed, warm, spent)) = scanned {
-                match self.import_state_lane(lane_idx, &parts) {
+                match self.import_state_lane(slot, &parts) {
                     Ok(()) => {
                         self.pool.write_lane(lane_idx, &parts);
                         lane.mark_prefilled(consumed);
@@ -577,50 +762,32 @@ impl EngineLoop {
         }
     }
 
-    /// Zero lane `b` of the live state literals (admission only — the hot
-    /// decode loop never round-trips state through the host).
-    fn zero_state_lane(&mut self, b: usize) -> Result<()> {
+    /// Zero slot `slot` of the live state literals (admission only — the
+    /// hot decode loop never round-trips state through the host).
+    fn zero_state_lane(&mut self, slot: usize) -> Result<()> {
         for lit in self.state.iter_mut() {
             let mut t = literal::literal_to_tensor(lit)?;
-            let l = t.shape[0];
-            let batch = t.shape[1];
-            let rest: usize = t.shape[2..].iter().product();
-            for li in 0..l {
-                let off = (li * batch + b) * rest;
-                t.data[off..off + rest].fill(0.0);
-            }
+            crate::model::zero_component_lane(&mut t, slot);
             *lit = literal::tensor_to_literal(&t)?;
         }
         Ok(())
     }
 
-    /// Copy lane `b` out of the live state literals (session detach).
-    /// Same slicing as [`StatePool::read_lane`], but against the literals
-    /// the decode artifact actually consumes.
-    fn export_state_lane(&self, b: usize) -> Result<Vec<Tensor>> {
-        self.state
-            .iter()
-            .map(|lit| {
-                let t = literal::literal_to_tensor(lit)?;
-                let l = t.shape[0];
-                let batch = t.shape[1];
-                let rest: usize = t.shape[2..].iter().product();
-                let mut shape = t.shape.clone();
-                shape[1] = 1;
-                let mut out = Tensor::zeros(&shape);
-                for li in 0..l {
-                    let src = (li * batch + b) * rest;
-                    let dst = li * rest;
-                    out.data[dst..dst + rest].copy_from_slice(&t.data[src..src + rest]);
-                }
-                Ok(out)
-            })
-            .collect()
+    /// Copy slot `slot` out of the live state literals (session detach /
+    /// spec activation).  Same slicing as [`StatePool::read_lane`], but
+    /// against the literals the decode artifact actually consumes —
+    /// callers pass `slot_of[lane]`, the lane's *current* slot.
+    fn export_state_lane(&self, slot: usize) -> Result<Vec<Tensor>> {
+        let comps: Vec<Tensor> =
+            self.state.iter().map(literal::literal_to_tensor).collect::<Result<_>>()?;
+        Ok(crate::model::slice_components(&comps, slot))
     }
 
-    /// Write a snapshot's lane slice into the live state literals
-    /// (session restore — admission only, like [`Self::zero_state_lane`]).
-    fn import_state_lane(&mut self, b: usize, parts: &[Tensor]) -> Result<()> {
+    /// Write a snapshot's lane slice into slot `slot` of the live state
+    /// literals (session restore — admission only, like
+    /// [`Self::zero_state_lane`]).  The shape `ensure!`s are the
+    /// compatibility gate admission's unclaim/degrade path relies on.
+    fn import_state_lane(&mut self, slot: usize, parts: &[Tensor]) -> Result<()> {
         anyhow::ensure!(
             parts.len() == self.state.len(),
             "state arity mismatch: snapshot has {}, artifact wants {}",
@@ -630,7 +797,6 @@ impl EngineLoop {
         for (lit, part) in self.state.iter_mut().zip(parts) {
             let mut t = literal::literal_to_tensor(lit)?;
             let l = t.shape[0];
-            let batch = t.shape[1];
             let rest: usize = t.shape[2..].iter().product();
             anyhow::ensure!(
                 part.data.len() == l * rest,
@@ -638,26 +804,30 @@ impl EngineLoop {
                 part.data.len(),
                 l * rest
             );
-            for li in 0..l {
-                let dst = (li * batch + b) * rest;
-                let src = li * rest;
-                t.data[dst..dst + rest].copy_from_slice(&part.data[src..src + rest]);
-            }
+            crate::model::copy_component_lane(part, 0, &mut t, slot);
             *lit = literal::tensor_to_literal(&t)?;
         }
         Ok(())
     }
 
-    /// One batched decode step over all lanes.
+    /// One batched decode step over all live lanes, at the current
+    /// bucket width (the full batch width when bucketing is off).
     fn step(&mut self) -> Result<()> {
         let start = Instant::now();
-        // build the token vector: prompt token, last sampled token, or pad
-        let mut tokens = vec![0i32; self.batch];
+        let width = self.width;
+        // build the token vector: each live lane's prompt token or last
+        // sampled token at its slot; pad slots feed PAD and are ignored
+        let mut tokens = vec![batch::PAD_TOKEN as i32; width];
         for (b, lane) in self.lanes.iter_mut().enumerate() {
-            tokens[b] = lane.next_input_token() as i32;
+            if lane.is_active() {
+                tokens[self.slot_of[b]] = lane.next_input_token() as i32;
+            }
         }
-        let exe = self.engine.load(&format!("decode_step_{}", self.cfg_name))?;
-        let token_lit = literal::tokens_to_literal(&TensorI32::from_vec(&[self.batch], tokens))?;
+        let exe = match &self.buckets {
+            Some(bk) => self.engine.load(&bk.exes.artifact_name(width))?,
+            None => self.engine.load(&format!("decode_step_{}", self.cfg_name))?,
+        };
+        let token_lit = literal::tokens_to_literal(&TensorI32::from_vec(&[width], tokens))?;
         let mut inputs: Vec<&xla::Literal> =
             Vec::with_capacity(self.params.len() + self.state.len() + 1);
         inputs.extend(self.params.iter());
@@ -685,7 +855,8 @@ impl EngineLoop {
                 // recycled
                 continue;
             }
-            let row = &logits.data[b * vocab..(b + 1) * vocab];
+            let slot = self.slot_of[b];
+            let row = &logits.data[slot * vocab..(slot + 1) * vocab];
             if let Some(reason) = lane.consume_output(row, now) {
                 finished.push((b, reason));
             }
@@ -715,6 +886,8 @@ impl EngineLoop {
         self.step_hist.record(start.elapsed());
         self.occupied_steps += 1;
         self.occupied_lanes += active_ct;
+        self.width_steps += width as u64;
+        self.batched_steps += 1;
         Ok(())
     }
 
@@ -735,7 +908,9 @@ impl EngineLoop {
         if let (Some(store), Some(sid)) = (&self.sessions, a.session) {
             let parts = match (&a.spec, &self.spec) {
                 (Some(sl), Some(eng)) => sl.state.to_components(&eng.model().cfg),
-                _ => self.export_state_lane(b),
+                // the lane's *current* slot — repacks may have moved it
+                // since admission
+                _ => self.export_state_lane(self.slot_of[b]),
             };
             match parts {
                 Ok(parts) => store.put(SessionSnapshot {
@@ -771,7 +946,7 @@ impl EngineLoop {
             let built = (|| -> Result<crate::spec::SpecLane> {
                 let eng =
                     self.spec.as_ref().ok_or_else(|| anyhow::anyhow!("no spec engine attached"))?;
-                let parts = self.export_state_lane(b)?;
+                let parts = self.export_state_lane(self.slot_of[b])?;
                 let mut sl = eng.new_lane();
                 sl.state.load_components(&eng.model().cfg, &parts)?;
                 if let Lane::Active(a) = &self.lanes[b] {
@@ -908,6 +1083,16 @@ impl EngineLoop {
             } else {
                 self.occupied_lanes as f64 / (self.occupied_steps * self.batch as u64) as f64
             },
+            bucket_grows: self.bucket_grows,
+            bucket_shrinks: self.bucket_shrinks,
+            repacks: self.repack_hist.count(),
+            repack_us_p50: self.repack_hist.percentile_us(50.0),
+            repack_us_p99: self.repack_hist.percentile_us(99.0),
+            step_width_mean: if self.batched_steps == 0 {
+                0.0
+            } else {
+                self.width_steps as f64 / self.batched_steps as f64
+            },
             spec_rounds: spec.rounds,
             spec_drafted: spec.drafted,
             spec_accepted: spec.accepted,
@@ -935,6 +1120,12 @@ fn zero_state_literals(cfg: &crate::runtime::ModelCfg) -> Result<Vec<xla::Litera
 pub struct EngineOpts {
     pub policy: Option<SchedPolicy>,
     pub seed: i32,
+    /// Checkpoint path to load trained parameters from (None = seeded
+    /// init).  Loaded inside the engine thread — literals are !Send, so
+    /// the path crosses the spawn boundary, not the tensors.  A
+    /// mismatched config name fails the spawn rather than serving the
+    /// wrong weights.
+    pub checkpoint: Option<String>,
     /// Shared session store (see [`spawn_engine_with_store`]).
     pub store: Option<Arc<SessionStore>>,
     /// Scan prefill configuration (None = decode-as-prefill).
@@ -946,6 +1137,8 @@ pub struct EngineOpts {
     /// Speculative decoding engine configuration (None = no spec engine;
     /// requests opt in per [`GenRequest::with_spec`] when attached).
     pub spec: Option<SpecCfg>,
+    /// Occupancy-adaptive decode bucketing (None = fixed-width decode).
+    pub buckets: Option<BucketCfg>,
 }
 
 /// Spawn an engine loop on its own thread; returns the request sender and a
@@ -976,10 +1169,12 @@ pub fn spawn_engine_with_store(
         EngineOpts {
             policy: Some(policy),
             seed,
+            checkpoint: None,
             store,
             prefill: None,
             prefix_cache: None,
             spec: None,
+            buckets: None,
         },
     )
 }
@@ -994,6 +1189,17 @@ pub fn spawn_engine_full(
     let handle = std::thread::spawn(move || {
         let policy = opts.policy.unwrap_or(SchedPolicy::PrefillFirst);
         let mut lp = EngineLoop::new(&artifacts, &cfg_name, policy, opts.seed, rx)?;
+        // trained weights replace the seeded init before any twin-building
+        // attachment (set_prefill/set_spec snapshot the params they see)
+        if let Some(path) = opts.checkpoint {
+            let (meta, tensors) = crate::train::checkpoint::load(&path)?;
+            anyhow::ensure!(
+                meta.config == cfg_name,
+                "checkpoint {path} was trained for config {:?}, serving {cfg_name:?}",
+                meta.config
+            );
+            lp.set_params(crate::train::checkpoint::tensors_to_literals(&tensors)?);
+        }
         if let Some(store) = opts.store {
             lp.set_session_store(store);
         }
@@ -1005,6 +1211,9 @@ pub fn spawn_engine_full(
         }
         if let Some(spec) = opts.spec {
             lp.set_spec(spec);
+        }
+        if let Some(buckets) = opts.buckets {
+            lp.set_buckets(buckets);
         }
         lp.run()
     });
@@ -1088,6 +1297,33 @@ mod tests {
         let rendered = s.ttft_table().render();
         assert!(rendered.contains("ttft (warm-hit)"), "{rendered}");
         assert!(rendered.contains("ttft (cold)"), "{rendered}");
+    }
+
+    #[test]
+    fn serve_stats_bucketing_counters() {
+        // bucketing off (or never fired): clean zeros, not NaNs
+        let off = ServeStats::default();
+        assert_eq!(off.bucket_switches(), 0);
+        assert_eq!(off.step_width_mean, 0.0);
+        assert_eq!(off.repack_us_p50, 0.0);
+        let s = ServeStats {
+            steps: 100,
+            bucket_grows: 3,
+            bucket_shrinks: 2,
+            repacks: 5,
+            repack_us_p50: 40.0,
+            repack_us_p99: 90.0,
+            step_width_mean: 2.5,
+            lane_occupancy: 0.3,
+            ..Default::default()
+        };
+        assert_eq!(s.bucket_switches(), 5);
+        // one repack per switch, never more
+        assert_eq!(s.repacks, s.bucket_switches());
+        // the E17 headline relation: at 30% occupancy of a B=8 engine the
+        // mean executed width sits well under the full batch width
+        assert!(s.step_width_mean < 8.0 * 0.5, "bucketed width tracks occupancy");
+        assert!(s.bucket_switches() < s.steps, "hysteresis keeps switches rare");
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Exact state repacking between decode-batch layouts of different
+//! widths — the mechanism that makes occupancy-adaptive bucketing free
+//! of approximation.
+//!
+//! A lane's entire context is a constant-size block of floats (Theorem
+//! 3.1), laid out as a slice of each `[L, B, ...]` state component.
+//! Moving a lane between batch slots — or between layouts of different
+//! widths B — is therefore a gather of those slices, copied **byte
+//! verbatim** ([`crate::model::copy_component_lane`]).  No scan, no
+//! renormalization, no numeric work touches the floats, which is what
+//! lets `rust/tests/bucketing_differential.rs` assert that a stream
+//! served through any sequence of grows/shrinks is *bit-identical* to
+//! the fixed-batch stream.
+//!
+//! Two canonical move sets:
+//!
+//! * **shrink** — [`compaction_moves`]: live slots gather into the rank
+//!   prefix `0..n` of the narrower layout;
+//! * **grow** — [`identity_moves`]: slots scatter into the same indices
+//!   of the wider layout (every old slot index is valid in a wider
+//!   layout), so growth never relocates a live lane.
+//!
+//! [`remap_components`] applies a move set to host tensors; the engine
+//! loop wraps it with literal↔tensor conversion for the live state
+//! literals and updates its lane-id→slot table from the same moves.
+
+use crate::model::copy_component_lane;
+use crate::tensor::Tensor;
+
+/// Rebuild batched `[L, B_old, ...]` components at width `new_batch`,
+/// copying lane `src` to lane `dst` for every `(src, dst)` in `moves`
+/// and zero-filling every slot no move writes.  Source slots may be
+/// read more than once; destination slots must be distinct.
+pub fn remap_components(
+    comps: &[Tensor],
+    moves: &[(usize, usize)],
+    new_batch: usize,
+) -> Vec<Tensor> {
+    debug_assert!(
+        {
+            let mut dsts: Vec<usize> = moves.iter().map(|&(_, d)| d).collect();
+            dsts.sort_unstable();
+            dsts.windows(2).all(|w| w[0] != w[1])
+        },
+        "destination slots must be distinct"
+    );
+    comps
+        .iter()
+        .map(|comp| {
+            let mut shape = comp.shape.clone();
+            shape[1] = new_batch;
+            let mut out = Tensor::zeros(&shape);
+            for &(src, dst) in moves {
+                copy_component_lane(comp, src, &mut out, dst);
+            }
+            out
+        })
+        .collect()
+}
+
+/// Shrink move set: each occupied slot, in the given order, gathers into
+/// rank position `0..n` of the compact layout.  Callers pass occupied
+/// slots in lane-id order so the lane-id→slot table stays deterministic.
+pub fn compaction_moves(occupied_slots: &[usize]) -> Vec<(usize, usize)> {
+    occupied_slots.iter().copied().zip(0..).collect()
+}
+
+/// Grow move set: every occupied slot keeps its index in the wider
+/// layout (old slot indices are always valid after a grow).
+pub fn identity_moves(occupied_slots: &[usize]) -> Vec<(usize, usize)> {
+    occupied_slots.iter().map(|&s| (s, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Batched components shaped like a 2-layer hla2 state, filled with
+    /// distinct deterministic values per (component, element).
+    fn filled_components(batch: usize) -> Vec<Tensor> {
+        let shapes = [vec![2, batch, 2, 4, 4], vec![2, batch, 2, 4]];
+        let mut rng = Rng::new(41);
+        shapes
+            .iter()
+            .map(|sh| {
+                let mut t = Tensor::zeros(sh);
+                rng.fill_normal(&mut t.data, 1.0);
+                t
+            })
+            .collect()
+    }
+
+    fn lane_bits(comps: &[Tensor], lane: usize) -> Vec<u32> {
+        crate::model::slice_components(comps, lane)
+            .iter()
+            .flat_map(|t| t.data.iter().map(|v| v.to_bits()))
+            .collect()
+    }
+
+    #[test]
+    fn shrink_gather_is_bit_exact_and_ordered() {
+        let comps = filled_components(8);
+        // live lanes sit in scattered slots 1, 4, 6
+        let moves = compaction_moves(&[1, 4, 6]);
+        assert_eq!(moves, vec![(1, 0), (4, 1), (6, 2)]);
+        let packed = remap_components(&comps, &moves, 4);
+        assert_eq!(packed[0].shape, vec![2, 4, 2, 4, 4]);
+        for (rank, &slot) in [1usize, 4, 6].iter().enumerate() {
+            assert_eq!(lane_bits(&packed, rank), lane_bits(&comps, slot), "slot {slot}");
+        }
+        // the unwritten pad slot is zero, not stale garbage
+        assert!(lane_bits(&packed, 3).iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn grow_scatter_keeps_slot_indices_and_zeroes_new_slots() {
+        let comps = filled_components(2);
+        let grown = remap_components(&comps, &identity_moves(&[0, 1]), 8);
+        assert_eq!(grown[1].shape, vec![2, 8, 2, 4]);
+        for slot in 0..2 {
+            assert_eq!(lane_bits(&grown, slot), lane_bits(&comps, slot));
+        }
+        for slot in 2..8 {
+            assert!(lane_bits(&grown, slot).iter().all(|&b| b == 0), "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn shrink_then_grow_round_trips_every_live_lane() {
+        // the churn a serving replica actually sees: compact 3 live lanes
+        // out of width 8, serve a while, grow back to 8 — every lane's
+        // floats must round-trip bit-for-bit through both repacks
+        let comps = filled_components(8);
+        let live = [0usize, 3, 7];
+        let before: Vec<Vec<u32>> = live.iter().map(|&s| lane_bits(&comps, s)).collect();
+        let packed = remap_components(&comps, &compaction_moves(&live), 4);
+        let grown = remap_components(&packed, &identity_moves(&[0, 1, 2]), 8);
+        for (rank, bits) in before.iter().enumerate() {
+            assert_eq!(&lane_bits(&grown, rank), bits, "lane rank {rank}");
+        }
+    }
+
+    #[test]
+    fn empty_move_set_is_a_zeroed_layout() {
+        let comps = filled_components(4);
+        let idle = remap_components(&comps, &[], 1);
+        assert_eq!(idle[0].shape, vec![2, 1, 2, 4, 4]);
+        assert!(idle.iter().all(|t| t.data.iter().all(|&x| x == 0.0)));
+    }
+}

@@ -42,14 +42,7 @@ impl StatePool {
     pub fn zero_lane(&mut self, b: usize) {
         assert!(b < self.batch, "lane {b} out of range");
         for comp in &mut self.components {
-            // shape [L, B, rest...]
-            let l = comp.shape[0];
-            let batch = comp.shape[1];
-            let rest: usize = comp.shape[2..].iter().product();
-            for li in 0..l {
-                let off = (li * batch + b) * rest;
-                comp.data[off..off + rest].fill(0.0);
-            }
+            crate::model::zero_component_lane(comp, b);
         }
     }
 
@@ -75,39 +68,13 @@ impl StatePool {
     /// Read one lane's state slice (session snapshot / migration — the
     /// detach hook of [`crate::session`]).
     pub fn read_lane(&self, b: usize) -> Vec<Tensor> {
-        self.components
-            .iter()
-            .map(|comp| {
-                let l = comp.shape[0];
-                let batch = comp.shape[1];
-                let rest: usize = comp.shape[2..].iter().product();
-                let mut shape = comp.shape.clone();
-                shape[1] = 1;
-                let mut out = Tensor::zeros(&shape);
-                for li in 0..l {
-                    let src = (li * batch + b) * rest;
-                    let dst = li * rest;
-                    out.data[dst..dst + rest].copy_from_slice(&comp.data[src..src + rest]);
-                }
-                out
-            })
-            .collect()
+        crate::model::slice_components(&self.components, b)
     }
 
     /// Write one lane's state slice (session restore / migration between
     /// replicas — the attach hook of [`crate::session`]).
     pub fn write_lane(&mut self, b: usize, parts: &[Tensor]) {
-        assert_eq!(parts.len(), self.components.len());
-        for (comp, part) in self.components.iter_mut().zip(parts) {
-            let l = comp.shape[0];
-            let batch = comp.shape[1];
-            let rest: usize = comp.shape[2..].iter().product();
-            for li in 0..l {
-                let dst = (li * batch + b) * rest;
-                let src = li * rest;
-                comp.data[dst..dst + rest].copy_from_slice(&part.data[src..src + rest]);
-            }
-        }
+        crate::model::splice_components(&mut self.components, b, parts);
     }
 }
 

@@ -8,17 +8,20 @@
 //!   prefill, decode), exported as HLO text artifacts.
 //! * **L3** (this crate) — the runtime and coordinator: PJRT execution of
 //!   the artifacts, continuous-batching decode with constant-size HLA
-//!   state, a chunk-parallel prompt-ingestion engine (`prefill`), a
-//!   session snapshot/resume/fork store (`session`), a shared-prefix
-//!   radix cache reusing constant-size prefix states across requests
-//!   (`cache`), a speculative decoding engine with draft/verify/rollback
-//!   over the constant-size state (`spec`), a training driver, plus a
-//!   from-scratch
-//!   reimplementation of the paper's full algebra (`hla`) used for
-//!   verification and CPU baselines.
+//!   state at an occupancy-adaptive batch width (`coordinator::bucket` /
+//!   `coordinator::repack`), a chunk-parallel prompt-ingestion engine
+//!   (`prefill`), a session snapshot/resume/fork store (`session`), a
+//!   shared-prefix radix cache reusing constant-size prefix states
+//!   across requests (`cache`), a speculative decoding engine with
+//!   draft/verify/rollback over the constant-size state (`spec`), a
+//!   training driver, plus a from-scratch reimplementation of the
+//!   paper's full algebra (`hla`) used for verification and CPU
+//!   baselines.
 //!
-//! See `rust/DESIGN.md` for the system inventory and the `rust/benches/`
-//! E-series (E1–E15) for the paper-claim ↔ measurement map.
+//! See `rust/DESIGN.md` for the system inventory, the `rust/benches/`
+//! E-series (E1–E17) for the paper-claim ↔ measurement map,
+//! `rust/docs/ARCHITECTURE.md` for one request walked end to end through
+//! the serving stack, and `rust/docs/PROTOCOL.md` for the wire format.
 
 pub mod attention;
 pub mod bench;

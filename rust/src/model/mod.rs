@@ -335,6 +335,67 @@ impl ModelState {
     }
 }
 
+/// Copy one lane's slice between batched `[L, B, ...]` component tensors
+/// whose batch widths may differ — the single primitive behind
+/// [`crate::coordinator::StatePool`] lane reads/writes and the
+/// coordinator's occupancy-adaptive state repack.  Bytes move verbatim
+/// (`copy_from_slice` on the f32 payload), so a lane carried through any
+/// chain of copies is bit-identical to the original: the exactness anchor
+/// of `tests/bucketing_differential.rs`.
+///
+/// Panics (debug) on rank/shape mismatch; lanes must be in range.
+pub fn copy_component_lane(src: &Tensor, src_lane: usize, dst: &mut Tensor, dst_lane: usize) {
+    let l = src.shape[0];
+    let (bs, bd) = (src.shape[1], dst.shape[1]);
+    let rest: usize = src.shape[2..].iter().product();
+    debug_assert_eq!(dst.shape[0], l, "layer-count mismatch");
+    debug_assert_eq!(&dst.shape[2..], &src.shape[2..], "per-lane shape mismatch");
+    assert!(src_lane < bs && dst_lane < bd, "lane out of range ({src_lane}/{bs}, {dst_lane}/{bd})");
+    for li in 0..l {
+        let s = (li * bs + src_lane) * rest;
+        let d = (li * bd + dst_lane) * rest;
+        dst.data[d..d + rest].copy_from_slice(&src.data[s..s + rest]);
+    }
+}
+
+/// Zero one lane's slice of a batched `[L, B, ...]` component tensor
+/// (admission reset; other lanes untouched).
+pub fn zero_component_lane(comp: &mut Tensor, lane: usize) {
+    let l = comp.shape[0];
+    let batch = comp.shape[1];
+    let rest: usize = comp.shape[2..].iter().product();
+    assert!(lane < batch, "lane {lane} out of range (batch {batch})");
+    for li in 0..l {
+        let off = (li * batch + lane) * rest;
+        comp.data[off..off + rest].fill(0.0);
+    }
+}
+
+/// Extract lane `lane` of every batched component into `[L, 1, ...]`
+/// parts — the session-snapshot / spec-activation read path.
+pub fn slice_components(comps: &[Tensor], lane: usize) -> Vec<Tensor> {
+    comps
+        .iter()
+        .map(|comp| {
+            let mut shape = comp.shape.clone();
+            shape[1] = 1;
+            let mut out = Tensor::zeros(&shape);
+            copy_component_lane(comp, lane, &mut out, 0);
+            out
+        })
+        .collect()
+}
+
+/// Write `[L, 1, ...]` parts into lane `lane` of every batched component —
+/// the session-restore / prefill-landing write path.  Panics on arity
+/// mismatch (callers validate against the manifest first).
+pub fn splice_components(comps: &mut [Tensor], lane: usize, parts: &[Tensor]) {
+    assert_eq!(parts.len(), comps.len(), "component arity mismatch");
+    for (comp, part) in comps.iter_mut().zip(parts) {
+        copy_component_lane(part, 0, comp, lane);
+    }
+}
+
 /// Parse a `state_paths` name like `"['eta']"` into `eta`.
 fn parse_state_path(path: &str) -> Result<String> {
     let parts: Vec<&str> = path
@@ -547,6 +608,39 @@ mod tests {
         partial.state_paths.truncate(2);
         assert!(state.to_components(&partial).is_err(), "lossy layout accepted");
         assert!(back.load_components(&partial, &parts).is_err(), "arity mismatch accepted");
+    }
+
+    #[test]
+    fn component_lane_copies_are_surgical_and_bit_exact() {
+        // two components, [L=2, B=3, rest] and [L=2, B=2, rest]: copy a
+        // lane across differing batch widths and check bytes + neighbours
+        let mut src = Tensor::zeros(&[2, 3, 4]);
+        for (i, x) in src.data.iter_mut().enumerate() {
+            *x = i as f32 * 0.5 + 0.1;
+        }
+        let mut dst = Tensor::zeros(&[2, 2, 4]);
+        dst.data.fill(9.0);
+        copy_component_lane(&src, 1, &mut dst, 0);
+        for li in 0..2 {
+            let s = (li * 3 + 1) * 4;
+            let d = (li * 2) * 4;
+            assert_eq!(&dst.data[d..d + 4], &src.data[s..s + 4], "layer {li}");
+            // the other destination lane is untouched
+            assert!(dst.data[d + 4..d + 8].iter().all(|&x| x == 9.0), "layer {li} neighbour");
+        }
+        // slice/splice round-trip through a [L, 1, rest] part
+        let parts = slice_components(std::slice::from_ref(&src), 2);
+        assert_eq!(parts[0].shape, vec![2, 1, 4]);
+        let mut comps = vec![Tensor::zeros(&[2, 3, 4])];
+        splice_components(&mut comps, 0, &parts);
+        let back = slice_components(&comps, 0);
+        assert_eq!(back[0].data, parts[0].data, "splice/slice round-trip");
+        // zeroing is surgical too
+        zero_component_lane(&mut src, 1);
+        let lane1 = slice_components(std::slice::from_ref(&src), 1);
+        assert!(lane1[0].data.iter().all(|&x| x == 0.0));
+        let lane0 = slice_components(std::slice::from_ref(&src), 0);
+        assert!(lane0[0].data.iter().all(|&x| x != 0.0));
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Bucketed decode-step executable ladder: one compiled `decode_step`
+//! artifact per batch width, resolved by name and cached through the
+//! engine's compile cache.
+//!
+//! The AOT pipeline (`python/compile/aot.py`) emits the full-width
+//! program as `decode_step_<cfg>` (the pre-bucketing name, kept for
+//! compatibility) and narrower variants as `decode_step_<cfg>_b<W>` at
+//! power-of-two widths below `decode_batch`.  Parameters are
+//! batch-independent, and the state inputs are the same components at
+//! batch width W — so switching buckets is purely a state-repack plus a
+//! different executable, never a weight reload.
+//!
+//! This module is the *mechanism* half of occupancy-adaptive decode:
+//! discovery (which widths actually have artifacts — a ladder entry the
+//! manifest cannot back is silently dropped, so an old artifact
+//! directory degrades to fixed-width serving instead of erroring) and
+//! name resolution.  The *policy* half (hysteresis, when to switch)
+//! lives in [`crate::coordinator::bucket`].
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::{Engine, Executable, Manifest};
+
+/// The name a decode-step artifact of width `w` carries for config
+/// `cfg`: the bare `decode_step_<cfg>` at full width, `_b<w>` otherwise.
+pub fn decode_artifact_name(cfg: &str, width: usize, full_width: usize) -> String {
+    if width == full_width {
+        format!("decode_step_{cfg}")
+    } else {
+        format!("decode_step_{cfg}_b{width}")
+    }
+}
+
+impl Manifest {
+    /// Decode-step rungs available for `cfg`: batch width → the artifact
+    /// *actually holding* that width, for the full-width
+    /// `decode_step_<cfg>` (when present) and every bucketed
+    /// `decode_step_<cfg>_b<W>` variant.  Widths are taken from the
+    /// artifact's token-input shape (`[W] i32`, the last input), not the
+    /// name suffix, so a mislabelled artifact still registers under its
+    /// *real* width (and is loaded by its real name, not a reconstructed
+    /// one).  On a width collision the canonically-named artifact wins.
+    pub fn decode_rungs(&self, cfg: &str, full_width: usize) -> BTreeMap<usize, String> {
+        let full = format!("decode_step_{cfg}");
+        let bucket_prefix = format!("decode_step_{cfg}_b");
+        let mut rungs: BTreeMap<usize, String> = BTreeMap::new();
+        for (name, spec) in &self.artifacts {
+            // the manifest's own config tag is the authority: a sibling
+            // config whose *name* collides (e.g. "t_b4", whose full-width
+            // artifact is "decode_step_t_b4") must not leak its program
+            // into config "t"'s ladder.  Empty tags (older manifests)
+            // fall through to the name filters below.
+            if !(spec.config.is_empty() || spec.config == cfg) {
+                continue;
+            }
+            let named_ok = *name == full
+                || name
+                    .strip_prefix(&bucket_prefix)
+                    // all-digit suffix only, so a config named
+                    // "t_bucketed" cannot leak into config "t"'s ladder
+                    .is_some_and(|w| !w.is_empty() && w.bytes().all(|b| b.is_ascii_digit()));
+            if !named_ok {
+                continue;
+            }
+            let Some(tokens) = spec.inputs.last() else { continue };
+            if tokens.shape.len() != 1 {
+                continue;
+            }
+            let w = tokens.shape[0];
+            let canonical = decode_artifact_name(cfg, w, full_width);
+            match rungs.entry(w) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(name.clone());
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => {
+                    if *name == canonical {
+                        e.insert(name.clone());
+                    }
+                }
+            }
+        }
+        rungs
+    }
+
+    /// The widths of [`Manifest::decode_rungs`], sorted ascending
+    /// (diagnostics surface; `full_width` only disambiguates naming).
+    pub fn decode_widths(&self, cfg: &str) -> Vec<usize> {
+        let full = self
+            .configs
+            .get(cfg)
+            .map(|c| c.decode_batch)
+            .unwrap_or(usize::MAX);
+        self.decode_rungs(cfg, full).into_keys().collect()
+    }
+}
+
+/// A validated ladder of decode widths for one config, every rung bound
+/// to the manifest artifact that actually holds it.
+#[derive(Debug, Clone)]
+pub struct DecodeBuckets {
+    cfg_name: String,
+    full_width: usize,
+    /// (width, artifact name), sorted ascending by width.
+    rungs: Vec<(usize, String)>,
+    widths: Vec<usize>,
+}
+
+impl DecodeBuckets {
+    /// Intersect the requested ladder with the rungs the manifest can
+    /// back, keeping each rung bound to its real artifact name — so one
+    /// mislabelled artifact costs at most its own rung, never the whole
+    /// feature.  `full_width` (the config's `decode_batch`) is always
+    /// included under the bare name — the engine force-compiled that
+    /// artifact at spawn.
+    pub fn discover(
+        manifest: &Manifest,
+        cfg_name: &str,
+        requested: &[usize],
+        full_width: usize,
+    ) -> DecodeBuckets {
+        let available = manifest.decode_rungs(cfg_name, full_width);
+        let mut rungs: Vec<(usize, String)> = requested
+            .iter()
+            .filter(|&&w| w != full_width)
+            .filter_map(|w| available.get(w).map(|name| (*w, name.clone())))
+            .collect();
+        rungs.push((full_width, decode_artifact_name(cfg_name, full_width, full_width)));
+        rungs.sort_by_key(|(w, _)| *w);
+        rungs.dedup_by_key(|r| r.0);
+        let widths = rungs.iter().map(|(w, _)| *w).collect();
+        DecodeBuckets { cfg_name: cfg_name.to_string(), full_width, rungs, widths }
+    }
+
+    /// The validated ladder, sorted ascending (always ends in the full
+    /// width).  A single-entry ladder means bucketing has nothing to
+    /// switch between — callers keep fixed-width decode.
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// The artifact name serving width `w`: the manifest-bound rung when
+    /// one exists, the canonical [`decode_artifact_name`] otherwise.
+    pub fn artifact_name(&self, width: usize) -> String {
+        self.rungs
+            .iter()
+            .find(|(w, _)| *w == width)
+            .map(|(_, name)| name.clone())
+            .unwrap_or_else(|| decode_artifact_name(&self.cfg_name, width, self.full_width))
+    }
+
+    /// Compile-and-cache every rung up front so a bucket switch on the
+    /// serving path never pays compile latency.  Returns the executables
+    /// in ladder order (kept alive by the engine's cache regardless).
+    pub fn warm(&self, engine: &Engine) -> Result<Vec<Rc<Executable>>> {
+        self.rungs.iter().map(|(_, name)| engine.load(name)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A manifest with decode_step artifacts at widths 8 (full), 4, 2
+    /// for config "t" — plus a mislabelled `_b16` whose real token shape
+    /// is `[4]`, and another config's bucket, neither of which may
+    /// perturb "t"'s ladder.
+    fn bucketed_manifest() -> Manifest {
+        let json = r#"{
+          "configs": {},
+          "artifacts": {
+            "decode_step_t": {"file": "a.hlo.txt", "kind": "decode_step", "config": "t",
+              "inputs": [{"shape": [256, 64], "dtype": "f32"}, {"shape": [8], "dtype": "int32"}],
+              "outputs": [{"shape": [8, 256], "dtype": "f32"}]},
+            "decode_step_t_b4": {"file": "b.hlo.txt", "kind": "decode_step", "config": "t",
+              "inputs": [{"shape": [256, 64], "dtype": "f32"}, {"shape": [4], "dtype": "int32"}],
+              "outputs": [{"shape": [4, 256], "dtype": "f32"}]},
+            "decode_step_t_b2": {"file": "c.hlo.txt", "kind": "decode_step", "config": "t",
+              "inputs": [{"shape": [256, 64], "dtype": "f32"}, {"shape": [2], "dtype": "int32"}],
+              "outputs": [{"shape": [2, 256], "dtype": "f32"}]},
+            "decode_step_t_b16": {"file": "e.hlo.txt", "kind": "decode_step", "config": "t",
+              "inputs": [{"shape": [256, 64], "dtype": "f32"}, {"shape": [4], "dtype": "int32"}],
+              "outputs": [{"shape": [4, 256], "dtype": "f32"}]},
+            "decode_step_t_b9": {"file": "f.hlo.txt", "kind": "decode_step", "config": "t_b9",
+              "inputs": [{"shape": [9], "dtype": "int32"}],
+              "outputs": [{"shape": [9, 256], "dtype": "f32"}]},
+            "decode_step_other_b1": {"file": "d.hlo.txt", "kind": "decode_step", "config": "other",
+              "inputs": [{"shape": [1], "dtype": "int32"}],
+              "outputs": [{"shape": [1, 256], "dtype": "f32"}]}
+          }
+        }"#;
+        Manifest::parse(json).unwrap()
+    }
+
+    #[test]
+    fn widths_come_from_token_shapes_not_names() {
+        let m = bucketed_manifest();
+        // the mislabelled _b16 (token shape [4]) merges into width 4
+        // instead of inventing a phantom width 16, and the sibling
+        // config "t_b9" — whose full-width artifact name collides with
+        // "t"'s bucket naming — is excluded by its manifest config tag
+        assert_eq!(m.decode_widths("t"), vec![2, 4, 8]);
+        // other configs' buckets don't leak in, and "t_b9" sees its own
+        assert_eq!(m.decode_widths("other"), vec![1]);
+        assert_eq!(m.decode_widths("t_b9"), vec![9]);
+        assert_eq!(m.decode_widths("absent"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn discovery_intersects_request_with_artifacts() {
+        let m = bucketed_manifest();
+        // requested 1 has no artifact: dropped; 2/4 backed; 8 is full
+        let b = DecodeBuckets::discover(&m, "t", &[1, 2, 4, 8], 8);
+        assert_eq!(b.widths(), &[2, 4, 8]);
+        assert_eq!(b.artifact_name(8), "decode_step_t");
+        // width-4 collision (real b4 vs mislabelled b16): canonical wins
+        assert_eq!(b.artifact_name(4), "decode_step_t_b4");
+        // an empty/unbackable request degrades to fixed-width, not error
+        let fixed = DecodeBuckets::discover(&m, "t", &[1], 8);
+        assert_eq!(fixed.widths(), &[8]);
+        let no_arts = DecodeBuckets::discover(&m, "absent", &[1, 2, 4], 4);
+        assert_eq!(no_arts.widths(), &[4]);
+    }
+
+    #[test]
+    fn mislabelled_rung_is_loaded_by_its_real_name() {
+        // only a mislabelled artifact backs width 4 (named _b16, token
+        // shape [4]): the rung must bind to the REAL name so warm()
+        // loads it instead of failing on a reconstructed "_b4" — and a
+        // bad rung can never cost more than itself
+        let json = r#"{
+          "configs": {},
+          "artifacts": {
+            "decode_step_t": {"file": "a.hlo.txt", "kind": "decode_step", "config": "t",
+              "inputs": [{"shape": [8], "dtype": "int32"}],
+              "outputs": [{"shape": [8, 256], "dtype": "f32"}]},
+            "decode_step_t_b16": {"file": "e.hlo.txt", "kind": "decode_step", "config": "t",
+              "inputs": [{"shape": [4], "dtype": "int32"}],
+              "outputs": [{"shape": [4, 256], "dtype": "f32"}]}
+          }
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        let b = DecodeBuckets::discover(&m, "t", &[1, 2, 4, 8], 8);
+        assert_eq!(b.widths(), &[4, 8]);
+        assert_eq!(b.artifact_name(4), "decode_step_t_b16");
+        assert_eq!(b.artifact_name(8), "decode_step_t");
+    }
+}

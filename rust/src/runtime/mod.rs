@@ -11,6 +11,7 @@
 //! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
 
 pub mod artifact;
+pub mod bucket;
 pub mod literal;
 
 use std::cell::RefCell;
@@ -24,6 +25,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::metrics::Histogram;
 use crate::tensor::{Tensor, TensorI32};
 pub use artifact::{ArtifactSpec, Manifest, ModelCfg, TensorSpec};
+pub use bucket::{decode_artifact_name, DecodeBuckets};
 pub use literal::{literal_to_tensor, tensor_to_literal, tokens_to_literal, HostValue};
 
 /// A compiled artifact plus its manifest spec.

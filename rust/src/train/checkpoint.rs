@@ -71,9 +71,8 @@ pub fn save_tensors(
     Ok(())
 }
 
-/// Load a checkpoint (tensors + metadata).
-pub fn load(path: impl AsRef<Path>) -> Result<(Meta, Vec<Tensor>)> {
-    let mut r = BufReader::new(File::open(path.as_ref()).context("opening checkpoint")?);
+/// Read just the header of an open checkpoint stream (magic + meta).
+fn read_meta(r: &mut impl Read) -> Result<Meta> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -85,12 +84,28 @@ pub fn load(path: impl AsRef<Path>) -> Result<(Meta, Vec<Tensor>)> {
     r.read_exact(&mut meta_buf)?;
     let meta_json = Json::parse(std::str::from_utf8(&meta_buf)?)
         .map_err(|e| anyhow!("checkpoint meta: {e}"))?;
-    let meta = Meta {
+    Ok(Meta {
         config: meta_json.get("config").and_then(Json::as_str).unwrap_or("").to_string(),
         step: meta_json.get("step").and_then(Json::as_usize).unwrap_or(0),
         loss: meta_json.get("loss").and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
         n_tensors: meta_json.get("n_tensors").and_then(Json::as_usize).unwrap_or(0),
-    };
+    })
+}
+
+/// Load only the metadata header — cheap validation for callers that
+/// just need to know what the file claims to hold (e.g. `hla serve
+/// --checkpoint` fails fast on a typo'd path or wrong config without
+/// deserializing the tensor payload).
+pub fn load_meta(path: impl AsRef<Path>) -> Result<Meta> {
+    let mut r = BufReader::new(File::open(path.as_ref()).context("opening checkpoint")?);
+    read_meta(&mut r)
+}
+
+/// Load a checkpoint (tensors + metadata).
+pub fn load(path: impl AsRef<Path>) -> Result<(Meta, Vec<Tensor>)> {
+    let mut r = BufReader::new(File::open(path.as_ref()).context("opening checkpoint")?);
+    let meta = read_meta(&mut r)?;
+    let mut len4 = [0u8; 4];
     let mut tensors = Vec::with_capacity(meta.n_tensors);
     for _ in 0..meta.n_tensors {
         r.read_exact(&mut len4)?;
@@ -135,6 +150,9 @@ mod tests {
         assert_eq!(meta.step, 42);
         assert!((meta.loss - 1.23).abs() < 1e-6);
         assert_eq!(back, tensors);
+        // header-only read agrees with the full load (the serve
+        // fail-fast validation path)
+        assert_eq!(load_meta(&dir).unwrap(), meta);
         std::fs::remove_file(dir).unwrap();
     }
 

@@ -1,0 +1,507 @@
+//! Differential acceptance test for occupancy-adaptive decode
+//! bucketing: a stream served through any sequence of bucket grows and
+//! shrinks must be **byte-identical** to its fixed-batch serial
+//! counterpart — repacking moves *state bytes*, never math.  Runs
+//! artifact-free on the pure-Rust [`hla::testing::fixtures`] models,
+//! like the prefill / spec / prefix-cache differential suites.
+//!
+//! Exactness ledger:
+//! * A lane's slice of the batched `[L, W, ...]` component layout is a
+//!   constant-size block of floats (Thm 3.1).  The repack move sets
+//!   (`coordinator::repack`) copy those floats verbatim, so the state a
+//!   lane decodes from after any grow/shrink is bit-identical to the
+//!   state it wrote — asserted here after *every* repack against a
+//!   shadow map, and end-to-end by token-stream equality (greedy AND
+//!   seeded) against serial decode.
+//! * Composition: session detach reads the lane's *current* slot (not
+//!   its admission slot), prefix-cache seeds splice into whatever slot
+//!   the bucketed layout assigns, and speculative passenger lanes ride
+//!   the layout as dead weight — all three run here under forced bucket
+//!   churn (`shrink_after = 1`, staggered admissions and finishes).
+//!
+//! The harness below (`BucketedPool` + `LaneSim`) is the host-side twin
+//! of `EngineLoop`'s bucketed state handling: same [`BucketTracker`]
+//! policy, same move sets, same slice/splice primitives — only the
+//! batched artifact step is replaced by per-lane `decode_step` on the
+//! extracted slice, which is exactly the per-slot math the artifact
+//! runs.
+
+use std::collections::HashMap;
+
+use hla::cache::{PrefixCache, PrefixCacheCfg};
+use hla::coordinator::repack::{compaction_moves, identity_moves, remap_components};
+use hla::coordinator::{BucketSpec, BucketSwitch, BucketTracker};
+use hla::model::sampler::{Sampler, SamplerCfg};
+use hla::model::{
+    slice_components, splice_components, zero_component_lane, ModelState, RustModel,
+};
+use hla::prefill::{advance, PrefillCfg, Prefiller};
+use hla::runtime::ModelCfg;
+use hla::session::SamplerState;
+use hla::spec::{DrafterKind, SpecCfg, SpecDecoder};
+use hla::tensor::Tensor;
+use hla::testing::fixtures::{build_model_full, random_prompt, ModelShape};
+use hla::util::rng::Rng;
+
+/// Engine capacity (B_max) for every harness in this suite; the pow2
+/// ladder under it is 1/2/4, so 3-ish live lanes cross bucket edges.
+const CAPACITY: usize = 4;
+
+fn seeded(seed: u64) -> SamplerCfg {
+    SamplerCfg { temperature: 0.9, top_k: 20, seed }
+}
+
+/// Bit-level equality for state component tensors (f32 compared by
+/// bits: a repack must not perturb a single ULP).
+fn assert_state_bits_equal(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: component arity");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let xb: Vec<u32> = x.data.iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u32> = y.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb, "{what}: component {i} bits");
+    }
+}
+
+/// Host-side twin of the engine loop's bucketed state handling: batched
+/// component tensors at the current bucket width, the lane-id→slot
+/// table, and the exact repack move sets `EngineLoop` applies.  Every
+/// repack is audited bit-for-bit against a shadow of each live lane's
+/// last-written parts.
+struct BucketedPool {
+    comps: Vec<Tensor>,
+    capacity: usize,
+    tracker: BucketTracker,
+    slot_of: Vec<usize>,
+    active: Vec<bool>,
+    shadow: HashMap<usize, Vec<Tensor>>,
+    grows: usize,
+    shrinks: usize,
+}
+
+impl BucketedPool {
+    fn new(cfg: &ModelCfg, capacity: usize, shrink_after: usize) -> BucketedPool {
+        let comps = cfg
+            .state_paths
+            .iter()
+            .map(|(_, sh)| {
+                let mut sh = sh.clone();
+                sh[1] = capacity;
+                Tensor::zeros(&sh)
+            })
+            .collect();
+        BucketedPool {
+            comps,
+            capacity,
+            tracker: BucketTracker::new(
+                BucketSpec::Pow2.ladder(capacity),
+                shrink_after,
+                capacity,
+            ),
+            slot_of: vec![0; capacity],
+            active: vec![false; capacity],
+            shadow: HashMap::new(),
+            grows: 0,
+            shrinks: 0,
+        }
+    }
+
+    fn live(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    fn read(&self, lane: usize) -> Vec<Tensor> {
+        slice_components(&self.comps, self.slot_of[lane])
+    }
+
+    fn write(&mut self, lane: usize, parts: &[Tensor]) {
+        splice_components(&mut self.comps, self.slot_of[lane], parts);
+        self.shadow.insert(lane, parts.to_vec());
+    }
+
+    /// Apply a switch with the engine loop's move sets, then audit every
+    /// live lane's slice against its shadow — the repack exactness gate.
+    fn apply(&mut self, sw: BucketSwitch) {
+        let lanes: Vec<usize> = (0..self.capacity).filter(|&b| self.active[b]).collect();
+        let slots: Vec<usize> = lanes.iter().map(|&b| self.slot_of[b]).collect();
+        let (w, moves) = match sw {
+            BucketSwitch::Grow(w) => {
+                self.grows += 1;
+                (w, identity_moves(&slots))
+            }
+            BucketSwitch::Shrink(w) => {
+                self.shrinks += 1;
+                (w, compaction_moves(&slots))
+            }
+        };
+        self.comps = remap_components(&self.comps, &moves, w);
+        for (i, &b) in lanes.iter().enumerate() {
+            self.slot_of[b] = moves[i].1;
+        }
+        for &b in &lanes {
+            assert_state_bits_equal(&self.read(b), &self.shadow[&b], "post-repack lane slice");
+        }
+    }
+
+    /// Admit into the lowest free slot, growing the layout first when the
+    /// new live count does not fit (the engine's grow-on-admission).
+    /// `parts` seeds the slot (session resume / cache-seeded prefill);
+    /// `None` zeroes it (a fresh lane).
+    fn admit(&mut self, lane: usize, parts: Option<&[Tensor]>) {
+        assert!(!self.active[lane], "lane {lane} already live");
+        if let Some(sw) = self.tracker.on_admit(self.live() + 1) {
+            self.apply(sw);
+        }
+        let used: Vec<usize> =
+            (0..self.capacity).filter(|&b| self.active[b]).map(|b| self.slot_of[b]).collect();
+        let slot = (0..self.tracker.width())
+            .find(|s| !used.contains(s))
+            .expect("admission grow guarantees a free slot");
+        self.active[lane] = true;
+        self.slot_of[lane] = slot;
+        match parts {
+            Some(p) => self.write(lane, p),
+            None => {
+                for c in &mut self.comps {
+                    zero_component_lane(c, slot);
+                }
+                let zeros = self.read(lane);
+                self.shadow.insert(lane, zeros);
+            }
+        }
+    }
+
+    /// Detach: read the lane's state from its *current* slot (repacks may
+    /// have moved it since admission — the session-detach invariant).
+    fn finish(&mut self, lane: usize) -> Vec<Tensor> {
+        let parts = self.read(lane);
+        self.active[lane] = false;
+        self.shadow.remove(&lane);
+        parts
+    }
+
+    /// The engine cycle's debounced shrink check.
+    fn after_cycle(&mut self) {
+        let live = self.live();
+        if let Some(sw) = self.tracker.after_step(live) {
+            self.apply(sw);
+        }
+    }
+}
+
+/// One decode lane driven through the pool: decode-as-prefill over its
+/// pending input tokens, then sampling — the `Lane` state machine.
+struct LaneSim {
+    lane: usize,
+    /// Which workload request this lane serves (stream bookkeeping).
+    req: usize,
+    inputs: Vec<u8>,
+    cursor: usize,
+    sampler: Sampler,
+    last: u8,
+    max_new: usize,
+    out: Vec<u8>,
+}
+
+impl LaneSim {
+    fn fresh(lane: usize, prompt: &[u8], scfg: &SamplerCfg, max_new: usize) -> LaneSim {
+        LaneSim {
+            lane,
+            req: 0,
+            inputs: prompt.to_vec(),
+            cursor: 0,
+            sampler: Sampler::new(scfg.clone()),
+            last: 0,
+            max_new,
+            out: vec![],
+        }
+    }
+}
+
+/// One batched-step slot's worth of work: extract the lane's slice, run
+/// `decode_step` on it, write it back.  Returns true when finished.
+fn step_lane(model: &RustModel, pool: &mut BucketedPool, sim: &mut LaneSim) -> bool {
+    let mc = &model.cfg;
+    let mut state = ModelState::new(mc);
+    state.load_components(mc, &pool.read(sim.lane)).unwrap();
+    let tok = if sim.cursor < sim.inputs.len() {
+        let t = sim.inputs[sim.cursor];
+        sim.cursor += 1;
+        t
+    } else {
+        sim.last
+    };
+    let logits = model.decode_step(&mut state, tok);
+    pool.write(sim.lane, &state.to_components(mc).unwrap());
+    if sim.cursor < sim.inputs.len() {
+        return false; // mid-prompt: logits ignored, like the engine lane
+    }
+    let y = sim.sampler.sample(&logits) as u8;
+    sim.last = y;
+    sim.out.push(y);
+    sim.out.len() >= sim.max_new
+}
+
+/// Serial decode from scratch — the bit-exact fixed-batch reference.
+fn serial_stream(model: &RustModel, prompt: &[u8], scfg: &SamplerCfg, max_new: usize) -> Vec<u8> {
+    let mut state = ModelState::new(&model.cfg);
+    let mut sampler = Sampler::new(scfg.clone());
+    advance(model, &mut state, &prompt[..prompt.len() - 1], &PrefillCfg::serial());
+    let mut out = Vec::with_capacity(max_new);
+    let mut last = prompt[prompt.len() - 1];
+    while out.len() < max_new {
+        let logits = model.decode_step(&mut state, last);
+        let y = sampler.sample(&logits) as u8;
+        out.push(y);
+        last = y;
+    }
+    out
+}
+
+/// Drive a staggered multi-request workload through the bucketed pool
+/// with maximal churn (`shrink_after = 1`) and pin every stream to its
+/// serial reference, byte for byte.
+fn churn_workload(mixer: &str, scfg_of: impl Fn(u64) -> SamplerCfg) {
+    let model = build_model_full(mixer, &ModelShape::default(), 11);
+    let mut rng = Rng::new(23);
+    let vocab = model.cfg.vocab;
+    // 8 requests, staggered arrivals, varied prompt/output lengths — the
+    // admit/finish pattern walks occupancy 0→3→1→2→0 across bucket edges
+    let requests: Vec<(usize, Vec<u8>, usize)> = (0..8)
+        .map(|i| {
+            let arrive = i * 3;
+            let prompt = random_prompt(&mut rng, 4 + (i % 5) * 3, vocab);
+            let max_new = 5 + (i % 4) * 3;
+            (arrive, prompt, max_new)
+        })
+        .collect();
+
+    let mut pool = BucketedPool::new(&model.cfg, CAPACITY, 1);
+    let mut waiting: Vec<(usize, usize)> = (0..requests.len()).map(|i| (requests[i].0, i)).collect();
+    let mut running: Vec<LaneSim> = vec![];
+    let mut done: HashMap<usize, Vec<u8>> = HashMap::new();
+    let mut cycle = 0usize;
+    while done.len() < requests.len() {
+        // admissions: arrived requests into free lanes (FIFO)
+        while let Some(pos) = waiting.iter().position(|&(at, _)| at <= cycle) {
+            let free_lane = (0..CAPACITY).find(|b| !running.iter().any(|s| s.lane == *b));
+            let Some(lane) = free_lane else { break };
+            let (_, req) = waiting.remove(pos);
+            let (_, prompt, max_new) = &requests[req];
+            pool.admit(lane, None);
+            let mut sim = LaneSim::fresh(lane, prompt, &scfg_of(req as u64), *max_new);
+            sim.req = req;
+            running.push(sim);
+        }
+        // one batched step over every live lane
+        let mut finished: Vec<usize> = vec![];
+        for sim in running.iter_mut() {
+            if step_lane(&model, &mut pool, sim) {
+                finished.push(sim.lane);
+            }
+        }
+        for lane in finished {
+            let pos = running.iter().position(|s| s.lane == lane).unwrap();
+            let sim = running.remove(pos);
+            pool.finish(lane);
+            done.insert(sim.req, sim.out);
+        }
+        pool.after_cycle();
+        cycle += 1;
+        assert!(cycle < 10_000, "workload did not drain");
+    }
+    assert!(pool.grows >= 2, "{mixer}: workload must force grows (got {})", pool.grows);
+    assert!(pool.shrinks >= 2, "{mixer}: workload must force shrinks (got {})", pool.shrinks);
+    for (req, (_, prompt, max_new)) in requests.iter().enumerate() {
+        let want = serial_stream(&model, prompt, &scfg_of(req as u64), *max_new);
+        assert_eq!(done[&req], want, "{mixer}: request {req} diverged from serial decode");
+    }
+}
+
+#[test]
+fn bucketed_streams_match_serial_greedy_all_mixers() {
+    for mixer in ["hla2", "ahla", "hla3"] {
+        churn_workload(mixer, |_| SamplerCfg::greedy());
+    }
+}
+
+#[test]
+fn bucketed_streams_match_serial_seeded_all_mixers() {
+    for mixer in ["hla2", "ahla", "hla3"] {
+        churn_workload(mixer, |req| seeded(100 + req));
+    }
+}
+
+#[test]
+fn session_detach_reads_the_current_slot_across_repacks() {
+    // lane A runs a conversation turn while lanes B/C churn the bucket
+    // layout around it (A's slot moves under compaction); A then
+    // detaches, and a later resumed lane continues — the combined stream
+    // must equal one uninterrupted serial generation, greedy and seeded.
+    for scfg in [SamplerCfg::greedy(), seeded(7)] {
+        let model = build_model_full("hla2", &ModelShape::default(), 13);
+        let mut rng = Rng::new(5);
+        let prompt = random_prompt(&mut rng, 10, model.cfg.vocab);
+        let (turn1, turn2) = (6usize, 6usize);
+        let want = serial_stream(&model, &prompt, &scfg, turn1 + turn2);
+
+        let mut pool = BucketedPool::new(&model.cfg, CAPACITY, 1);
+        // churn companions admitted BEFORE A so they hold the lower
+        // slots: their mid-turn finishes trigger compactions that
+        // genuinely relocate A's slot (slot 2 → 0)
+        pool.admit(1, None);
+        let mut b = LaneSim::fresh(1, &random_prompt(&mut rng, 6, model.cfg.vocab), &scfg, 3);
+        pool.admit(2, None);
+        let mut c = LaneSim::fresh(2, &random_prompt(&mut rng, 5, model.cfg.vocab), &scfg, 2);
+        pool.admit(0, None);
+        let mut a = LaneSim::fresh(0, &prompt, &scfg, turn1);
+        let mut a_done = false;
+        let (mut b_done, mut c_done) = (false, false);
+        while !a_done {
+            a_done = step_lane(&model, &mut pool, &mut a);
+            if !b_done && step_lane(&model, &mut pool, &mut b) {
+                pool.finish(1);
+                b_done = true;
+            }
+            if !c_done && step_lane(&model, &mut pool, &mut c) {
+                pool.finish(2);
+                c_done = true;
+            }
+            pool.after_cycle();
+        }
+        // detach A from whatever slot churn left it in
+        let (parts, sstate, last) = (pool.finish(0), SamplerState::capture(&a.sampler), a.last);
+        assert!(pool.shrinks >= 1, "companion finishes must have compacted the layout");
+        let first_half = a.out.clone();
+
+        // resume on a fresh lane id; continue-in-place feeds the
+        // snapshot's last sampled token first (Lane::resume semantics)
+        pool.admit(3, Some(&parts[..]));
+        let mut resumed = LaneSim {
+            lane: 3,
+            req: 0,
+            inputs: vec![last],
+            cursor: 0,
+            sampler: sstate.rebuild(),
+            last,
+            max_new: turn2,
+            out: vec![],
+        };
+        while !step_lane(&model, &mut pool, &mut resumed) {}
+        pool.finish(3);
+
+        let got: Vec<u8> = first_half.iter().chain(&resumed.out).copied().collect();
+        assert_eq!(got, want, "detach/resume across repacks diverged (temp {})", scfg.temperature);
+    }
+}
+
+#[test]
+fn cache_seeded_lanes_stay_byte_identical_under_churn() {
+    // two requests share a chunk-aligned prefix; the second is seeded
+    // warm from the prefix cache and decodes through a churning bucketed
+    // layout.  Warm and cold streams must be byte-identical (greedy and
+    // seeded), and greedy must also equal plain serial decode.
+    const CHUNK: usize = 8;
+    let model = build_model_full("hla2", &ModelShape::default(), 17);
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(CHUNK, 2)).unwrap();
+    let cache = PrefixCache::new(PrefixCacheCfg::new(1 << 20, CHUNK));
+    let mut rng = Rng::new(29);
+    let prefix = random_prompt(&mut rng, 2 * CHUNK, model.cfg.vocab);
+    let mut prompt = prefix.clone();
+    prompt.extend(random_prompt(&mut rng, 5, model.cfg.vocab));
+    let max_new = 8;
+
+    let run_cached = |scfg: &SamplerCfg| -> (Vec<u8>, Vec<Tensor>, usize) {
+        let (parts, consumed, outcome) = pf.ingest_lane_cached(&cache, &prompt).unwrap();
+        let mut pool = BucketedPool::new(&model.cfg, CAPACITY, 1);
+        // the churn companion holds the lower slot, so its finish
+        // compacts the cached lane's seeded state into a new slot
+        pool.admit(1, None);
+        let mut side = LaneSim::fresh(1, &prompt[..4], scfg, 3);
+        pool.admit(0, Some(&parts[..]));
+        let mut sim = LaneSim::fresh(0, &prompt[consumed..], scfg, max_new);
+        let mut side_done = false;
+        while !step_lane(&model, &mut pool, &mut sim) {
+            if !side_done && step_lane(&model, &mut pool, &mut side) {
+                pool.finish(1);
+                side_done = true;
+            }
+            pool.after_cycle();
+        }
+        let parts = pool.finish(0);
+        assert!(pool.shrinks + pool.grows >= 1, "cached decode must see churn");
+        (sim.out, parts, outcome.hit_tokens)
+    };
+
+    for scfg in [SamplerCfg::greedy(), seeded(3)] {
+        cache.clear();
+        let (cold, cold_state, cold_hits) = run_cached(&scfg);
+        assert_eq!(cold_hits, 0, "first pass must be cold");
+        let (warm, warm_state, warm_hits) = run_cached(&scfg);
+        assert!(warm_hits > 0, "second pass must hit the shared prefix");
+        assert_eq!(warm, cold, "warm vs cold under churn (temp {})", scfg.temperature);
+        assert_state_bits_equal(&warm_state, &cold_state, "warm vs cold landing state");
+    }
+    // the scan path equals serial decode exactly on the greedy grid
+    let (cold, _, _) = {
+        cache.clear();
+        run_cached(&SamplerCfg::greedy())
+    };
+    assert_eq!(cold, serial_stream(&model, &prompt, &SamplerCfg::greedy(), max_new));
+}
+
+#[test]
+fn spec_passenger_lanes_compose_with_bucket_churn() {
+    // a speculative lane occupies a slot as dead weight (its tokens come
+    // from draft/verify rounds on the host twin) while batched lanes
+    // grow/shrink the layout around it.  The passenger's stream is
+    // pinned to serial decode via the serial verify backend, and the
+    // batched lanes must be untouched by the passenger's slot moves.
+    let model = build_model_full("hla2", &ModelShape::default(), 19);
+    let mut rng = Rng::new(37);
+    let spec_prompt = random_prompt(&mut rng, 12, model.cfg.vocab);
+    let batched_prompt = random_prompt(&mut rng, 9, model.cfg.vocab);
+    let max_new = 10;
+    for scfg in [SamplerCfg::greedy(), seeded(41)] {
+        let mut pool = BucketedPool::new(&model.cfg, CAPACITY, 1);
+        // the short-lived companion takes the lowest slot so its finish
+        // relocates both the passenger and the batched lane
+        pool.admit(2, None);
+        let mut side = LaneSim::fresh(2, &batched_prompt[..3], &scfg, 2);
+        // the passenger occupies lane 0; its slice never advances
+        pool.admit(0, None);
+        // batched lane churns beside it
+        pool.admit(1, None);
+        let mut sim = LaneSim::fresh(1, &batched_prompt, &scfg, max_new);
+        let mut side_done = false;
+        while !step_lane(&model, &mut pool, &mut sim) {
+            if !side_done && step_lane(&model, &mut pool, &mut side) {
+                pool.finish(2);
+                side_done = true;
+            }
+            pool.after_cycle();
+        }
+        assert!(pool.shrinks >= 1, "companion finish must compact around the passenger");
+        // the passenger's dead-weight slice is still the zeros it was
+        // admitted with — repacks moved it without corruption
+        let passenger = pool.finish(0);
+        assert!(
+            passenger.iter().all(|t| t.data.iter().all(|&x| x == 0.0)),
+            "passenger slice corrupted by churn"
+        );
+        // batched stream unaffected by the passenger
+        assert_eq!(sim.out, serial_stream(&model, &batched_prompt, &scfg, max_new));
+        // and the passenger's own (host-side) speculative stream equals
+        // serial decode — the spec engine's lossless rule, unchanged by
+        // bucketing because spec state never lives in the batched layout
+        let cfg = SpecCfg {
+            k: 3,
+            adaptive: false,
+            drafter: DrafterKind::Ngram,
+            verify_chunk: 0,
+            ..Default::default()
+        };
+        let mut dec = SpecDecoder::new(model.clone(), None, cfg).unwrap();
+        let spec_stream = dec.generate(&spec_prompt, scfg.clone(), max_new, None).unwrap();
+        assert_eq!(spec_stream, serial_stream(&model, &spec_prompt, &scfg, max_new));
+    }
+}

@@ -144,3 +144,54 @@ fn all_micro_mixer_variants_serve() {
         handle.join().unwrap().unwrap();
     }
 }
+
+/// Drive the REAL EngineLoop with bucketing enabled and pin its streams
+/// to the fixed-width engine's, token for token — the production wiring
+/// (admit's occupied-slot scan, step's slot-routed tokens/logits,
+/// apply_switch's slot_of updates) exercised end to end, not the host
+/// twin the artifact-free differential suite uses.  Staggered request
+/// sizes force admit/finish churn; shrink_after = 1 maximizes repacks.
+/// If the artifact dir predates the bucketed emission, set_buckets
+/// degrades to fixed width and the assertion still holds (trivially).
+#[test]
+fn bucketed_engine_streams_match_fixed_width() {
+    if !have_artifacts() {
+        return;
+    }
+    use hla::coordinator::{spawn_engine_full, BucketCfg, BucketSpec, EngineOpts};
+    let run = |buckets: Option<BucketCfg>| -> Vec<Vec<u8>> {
+        let (tx, handle) = spawn_engine_full(
+            artifacts(),
+            "micro".into(),
+            EngineOpts {
+                policy: Some(SchedPolicy::Hybrid(1)),
+                seed: 0,
+                buckets,
+                ..Default::default()
+            },
+        );
+        let mut rxs = vec![];
+        for i in 0..5u64 {
+            let (etx, erx) = mpsc::channel();
+            let prompt = format!("bucketed request {i} ").into_bytes();
+            tx.send(GenRequest::new(i, prompt, 4 + i as usize, SamplerCfg::greedy(), etx))
+                .unwrap();
+            rxs.push(erx);
+        }
+        drop(tx);
+        let streams: Vec<Vec<u8>> = rxs
+            .iter()
+            .map(|erx| {
+                let (tokens, finish) = collect_tokens(erx);
+                assert_eq!(finish, Some(FinishReason::Length));
+                tokens
+            })
+            .collect();
+        let stats = handle.join().unwrap().unwrap();
+        assert_eq!(stats.completed, 5);
+        streams
+    };
+    let fixed = run(None);
+    let bucketed = run(Some(BucketCfg { spec: BucketSpec::Pow2, shrink_after: 1 }));
+    assert_eq!(bucketed, fixed, "bucketed decode must be byte-identical to fixed-width");
+}
