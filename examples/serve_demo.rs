@@ -20,23 +20,24 @@
 //! fork:    {"session": 2, "fork_of": 1, "seed": 7}
 //! spec:    {"prompt": "hello", "spec": true}         (lossless opt-in)
 //! no_cache:{"prompt": "secret ...", "no_cache": true}
+//! stats:   {"stats": true}                           (live fleet snapshot)
 //! errors:  {"error": "unknown session 42"}
 //! final:   {"done": true, "finish": "length", "n": 32,
 //!           "session": 1, "resumed": true}
 //! ```
 //!
 //! On the Rust client these map to `GenOpts { session, resume, fork_of,
-//! spec, no_cache, .. }`.
+//! spec, no_cache, .. }` plus `Client::stats()`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use hla::coordinator::router::{RoutePolicy, Router};
-use hla::coordinator::{spawn_engine_with_store, SchedPolicy};
-use hla::metrics::{Histogram, Table};
+use hla::coordinator::{spawn_engine_full, EngineOpts, SchedPolicy};
+use hla::metrics::{Histogram, LiveStats, Table};
 use hla::server::client::{Client, GenOpts};
-use hla::server::serve_sessions;
+use hla::server::{serve_full, ServeObs};
 use hla::session::SessionStore;
 use hla::train::corpus::build_corpus;
 use hla::workload::{Arrivals, Lengths, Trace};
@@ -51,16 +52,23 @@ fn main() -> anyhow::Result<()> {
     let store = Arc::new(SessionStore::in_memory(256));
     let mut senders = vec![];
     let mut engines = vec![];
+    let mut registries = vec![];
     for r in 0..replicas {
-        let (tx, handle) = spawn_engine_with_store(
+        let stats = Arc::new(LiveStats::new());
+        let (tx, handle) = spawn_engine_full(
             "artifacts".into(),
             "micro".into(),
-            SchedPolicy::PrefillFirst,
-            r as i32,
-            Some(store.clone()),
+            EngineOpts {
+                policy: Some(SchedPolicy::PrefillFirst),
+                seed: r as i32,
+                store: Some(store.clone()),
+                stats: Some(stats.clone()),
+                ..Default::default()
+            },
         );
         senders.push(tx);
         engines.push(handle);
+        registries.push(stats);
     }
     let router = Arc::new(Router::new(senders, RoutePolicy::LeastLoaded));
     // warmup barrier: engine construction compiles artifacts; route one
@@ -87,8 +95,9 @@ fn main() -> anyhow::Result<()> {
     let (addr_tx, addr_rx) = mpsc::channel();
     let stop2 = stop.clone();
     let store2 = store.clone();
+    let obs = Arc::new(ServeObs { stats: registries });
     let server = std::thread::spawn(move || {
-        serve_sessions("127.0.0.1:0", router, Some(store2), stop2, move |a| {
+        serve_full("127.0.0.1:0", router, Some(store2), Some(obs), stop2, move |a| {
             addr_tx.send(a).unwrap()
         })
         .unwrap();
@@ -149,6 +158,13 @@ fn main() -> anyhow::Result<()> {
         "{n_requests} requests, {tokens} tokens in {wall:.1}s -> {:.0} tok/s end-to-end",
         tokens as f64 / wall
     );
+
+    // live fleet snapshot over the wire: the "stats" admin request merges
+    // every replica's registry (what `hla top` polls)
+    let mut admin = Client::connect(&addr)?;
+    let live = admin.stats()?;
+    println!("stats over the wire: [{}]", live.summary_line());
+    drop(admin);
 
     // --- multi-turn conversation + fork over the wire -------------------
     println!("\nmulti-turn session demo (session 1000, then fork 1001):");

@@ -5,7 +5,7 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use hla::bench::banner;
+use hla::bench::{banner, BenchReport};
 use hla::coordinator::{
     collect_tokens, spawn_engine_full, EngineOpts, GenRequest, SchedPolicy,
 };
@@ -43,6 +43,8 @@ fn run_trace_load(
             prefix_cache: None,
             spec: None,
             buckets: None,
+            stats: None,
+            tracer: None,
         },
     );
     // warmup barrier: engine construction compiles the artifacts (~10s on
@@ -115,6 +117,10 @@ fn main() {
         return;
     }
     banner("E8", "serving under Poisson load (micro, B=2 lanes): throughput + latency");
+    let mut report = BenchReport::new(
+        "e8",
+        "serving under Poisson load: throughput, occupancy, latency percentiles",
+    );
     let mut table = Table::new(&[
         "rate req/s", "done", "tok/s", "occupancy", "ttft p50 ms", "ttft p99 ms", "lat p50 ms", "lat p99 ms",
     ]);
@@ -123,6 +129,18 @@ fn main() {
         eprintln!(
             "[debug] rate {rate}: steps={} step p50={:.2}ms p99={:.2}ms engine-elapsed={:.1}s",
             stats.steps, stats.step_us_p50 / 1e3, stats.step_us_p99 / 1e3, stats.elapsed_s
+        );
+        report.case(
+            &format!("load/rate_{rate}"),
+            &[
+                ("completed", stats.completed as f64),
+                ("tokens_per_sec", stats.tokens_per_sec),
+                ("lane_occupancy", stats.lane_occupancy),
+                ("ttft_p50_ms", ttft.percentile_us(50.0) / 1e3),
+                ("ttft_p99_ms", ttft.percentile_us(99.0) / 1e3),
+                ("latency_p50_ms", latency.percentile_us(50.0) / 1e3),
+                ("latency_p99_ms", latency.percentile_us(99.0) / 1e3),
+            ],
         );
         table.row(&[
             format!("{rate}"),
@@ -147,6 +165,15 @@ fn main() {
         ("hybrid-1", SchedPolicy::Hybrid(1)),
     ] {
         let (stats, ttft, latency) = run_load(policy, 16.0, 32, 9);
+        report.case(
+            &format!("policy/{name}"),
+            &[
+                ("tokens_per_sec", stats.tokens_per_sec),
+                ("ttft_p50_ms", ttft.percentile_us(50.0) / 1e3),
+                ("ttft_p99_ms", ttft.percentile_us(99.0) / 1e3),
+                ("latency_p99_ms", latency.percentile_us(99.0) / 1e3),
+            ],
+        );
         table.row(&[
             name.to_string(),
             format!("{:.0}", stats.tokens_per_sec),
@@ -192,6 +219,11 @@ fn main() {
     }
     println!("expected shape: the scan rows move prompt time from first-decode into a");
     println!("smaller prefill component, and the p99 TTFT gap widens with the tail.");
+
+    match report.write_repo_root() {
+        Ok(path) => println!("\nperf trajectory: {}", path.display()),
+        Err(e) => eprintln!("\nperf trajectory NOT written: {e}"),
+    }
 
     // determinism sanity under concurrency
     let mut rng = Rng::new(1);

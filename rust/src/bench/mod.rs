@@ -2,6 +2,14 @@
 //! iterations with mean/stddev/min, plus a black_box and table output via
 //! `metrics::Table`.  Used by every `rust/benches/e*.rs` target
 //! (`harness = false`, driven by `cargo bench`).
+//!
+//! [`report`] persists a run's results as a schema-versioned
+//! `BENCH_<id>.json` at the repo root — the perf trajectory the
+//! acceptance gates diff against (see `ROADMAP.md`).
+
+pub mod report;
+
+pub use report::BenchReport;
 
 use std::hint::black_box as hint_black_box;
 use std::time::Instant;

@@ -1,0 +1,259 @@
+//! Persisted perf trajectory: serialize an E-series bench run as a
+//! schema-versioned `BENCH_<id>.json` at the repo root.
+//!
+//! Committing the file turns a bench run into a trajectory: every PR that
+//! re-runs the bench diffs against the last committed numbers, so perf
+//! regressions show up in review rather than in production.  The writer is
+//! paired with [`validate`], which CI runs against the emitted file — a
+//! report that drops a field or records a NaN fails the build, not the
+//! reader six months later.
+//!
+//! Layout (schema `hla-bench/1`):
+//!
+//! ```json
+//! {
+//!   "schema": "hla-bench/1",
+//!   "bench": "e8",
+//!   "title": "serving stack",
+//!   "created_unix_s": 1754550000,
+//!   "cases": [
+//!     {"name": "decode/base", "metrics": {"ns_per_token": 812.4}}
+//!   ]
+//! }
+//! ```
+//!
+//! Numbers are f64 throughout (the substrate is `util::json`); metric keys
+//! are free-form but stable per bench — renaming one breaks the trajectory
+//! diff just like deleting it, so treat keys as part of the schema.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Schema tag every report carries; bump on layout changes.
+pub const BENCH_SCHEMA: &str = "hla-bench/1";
+
+/// One named measurement set within a report (a bench "case").
+#[derive(Debug, Clone)]
+pub struct BenchCase {
+    pub name: String,
+    /// ordered (key, value) metric pairs; values must be finite
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// A bench run headed for `BENCH_<id>.json` at the repo root.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// short bench id, e.g. `"e8"` — names the output file
+    pub bench: String,
+    /// one-line description of what the bench pins
+    pub title: String,
+    pub cases: Vec<BenchCase>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str, title: &str) -> BenchReport {
+        BenchReport { bench: bench.into(), title: title.into(), cases: Vec::new() }
+    }
+
+    /// Append one case.  Non-finite metric values are recorded as given —
+    /// [`validate`] (and therefore [`write_repo_root`](Self::write_repo_root))
+    /// rejects them, which is the point: a NaN should fail the bench run,
+    /// not silently poison the trajectory.
+    pub fn case(&mut self, name: &str, metrics: &[(&str, f64)]) -> &mut Self {
+        self.cases.push(BenchCase {
+            name: name.into(),
+            metrics: metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let created = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        let cases: Vec<Json> = self
+            .cases
+            .iter()
+            .map(|c| {
+                let metrics: Vec<(&str, Json)> =
+                    c.metrics.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect();
+                Json::obj(vec![
+                    ("name", Json::str(c.name.clone())),
+                    ("metrics", Json::obj(metrics)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("bench", Json::str(self.bench.clone())),
+            ("title", Json::str(self.title.clone())),
+            ("created_unix_s", Json::num(created)),
+            ("cases", Json::Arr(cases)),
+        ])
+    }
+
+    /// Validate, then write `BENCH_<bench>.json` into the repo root
+    /// (tmp-file + rename, so a crashed bench never leaves a torn report).
+    /// `HLA_BENCH_DIR` overrides the destination directory — CI points it
+    /// at a scratch dir, tests at a tempdir.
+    pub fn write_repo_root(&self) -> Result<PathBuf> {
+        let j = self.to_json();
+        validate(&j).with_context(|| format!("bench {} produced an invalid report", self.bench))?;
+        let dir = match std::env::var_os("HLA_BENCH_DIR") {
+            Some(d) => PathBuf::from(d),
+            // benches run with cwd = crate root; the repo root is one up
+            None => Path::new(env!("CARGO_MANIFEST_DIR")).join(".."),
+        };
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        let tmp = dir.join(format!("BENCH_{}.json.tmp", self.bench));
+        std::fs::write(&tmp, format!("{j}\n"))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Check a report against schema `hla-bench/1`.  Fails on a missing or
+/// mistyped field, an empty case list, and any non-finite number — the
+/// gate CI runs over every committed `BENCH_*.json`.
+pub fn validate(j: &Json) -> Result<()> {
+    let schema = j
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing \"schema\""))?;
+    if schema != BENCH_SCHEMA {
+        bail!("schema {schema:?}, want {BENCH_SCHEMA:?}");
+    }
+    let bench =
+        j.get("bench").and_then(Json::as_str).ok_or_else(|| anyhow!("missing \"bench\""))?;
+    if bench.is_empty() {
+        bail!("empty \"bench\" id");
+    }
+    j.get("title").and_then(Json::as_str).ok_or_else(|| anyhow!("missing \"title\""))?;
+    let created = j
+        .get("created_unix_s")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing \"created_unix_s\""))?;
+    if !created.is_finite() || created < 0.0 {
+        bail!("bad created_unix_s {created}");
+    }
+    let cases =
+        j.get("cases").and_then(Json::as_arr).ok_or_else(|| anyhow!("missing \"cases\""))?;
+    if cases.is_empty() {
+        bail!("empty \"cases\" (a report with nothing measured)");
+    }
+    for (i, c) in cases.iter().enumerate() {
+        let name = c
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("case {i}: missing \"name\""))?;
+        let metrics = c
+            .get("metrics")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("case {name:?}: missing \"metrics\""))?;
+        if metrics.is_empty() {
+            bail!("case {name:?}: empty \"metrics\"");
+        }
+        for (k, v) in metrics {
+            let v = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("case {name:?}: metric {k:?} is not a number"))?;
+            if !v.is_finite() {
+                bail!("case {name:?}: metric {k:?} is non-finite ({v})");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load and validate a committed `BENCH_<id>.json`.
+pub fn load(path: &Path) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    validate(&j).with_context(|| format!("{} failed validation", path.display()))?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        let mut r = BenchReport::new("e99", "report round-trip");
+        r.case("decode/base", &[("ns_per_token", 812.4), ("tokens", 4096.0)]);
+        r.case("decode/traced", &[("ns_per_token", 820.1), ("overhead_pct", 0.9)]);
+        r
+    }
+
+    #[test]
+    fn round_trips_and_validates() {
+        let j = sample().to_json();
+        validate(&j).unwrap();
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        validate(&j2).unwrap();
+        assert_eq!(j2.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
+        assert_eq!(j2.get("bench").unwrap().as_str(), Some("e99"));
+        let cases = j2.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(
+            cases[0].path("metrics.ns_per_token").unwrap().as_f64(),
+            Some(812.4)
+        );
+    }
+
+    #[test]
+    fn validate_rejects_missing_fields() {
+        for drop in ["schema", "bench", "title", "created_unix_s", "cases"] {
+            let j = sample().to_json();
+            let Json::Obj(mut m) = j else { unreachable!() };
+            m.remove(drop);
+            assert!(validate(&Json::Obj(m)).is_err(), "surviving without {drop:?}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        // wrong schema tag
+        let mut r = sample().to_json();
+        if let Json::Obj(m) = &mut r {
+            m.insert("schema".into(), Json::str("hla-bench/0"));
+        }
+        assert!(validate(&r).is_err());
+        // empty case list
+        let mut r = sample().to_json();
+        if let Json::Obj(m) = &mut r {
+            m.insert("cases".into(), Json::Arr(vec![]));
+        }
+        assert!(validate(&r).is_err());
+        // non-finite metric
+        let mut rep = sample();
+        rep.case("bad", &[("nan_metric", f64::NAN)]);
+        assert!(validate(&rep.to_json()).is_err());
+        let mut rep = sample();
+        rep.case("bad", &[("inf_metric", f64::INFINITY)]);
+        assert!(validate(&rep.to_json()).is_err());
+    }
+
+    #[test]
+    fn write_respects_bench_dir_override() {
+        let dir = std::env::temp_dir().join(format!("hla-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // serialize env mutation: tests in this module run on one thread
+        // each but share the process env, so scope it tightly
+        std::env::set_var("HLA_BENCH_DIR", &dir);
+        let path = sample().write_repo_root().unwrap();
+        std::env::remove_var("HLA_BENCH_DIR");
+        assert_eq!(path, dir.join("BENCH_e99.json"));
+        let j = load(&path).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("e99"));
+        // tmp file never survives the rename
+        assert!(!dir.join("BENCH_e99.json.tmp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

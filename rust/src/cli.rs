@@ -6,6 +6,7 @@
 //!   train      run the AOT train_step loop (E10 driver)
 //!   generate   one-shot generation through the coordinator
 //!   serve      TCP serving frontend over N engine replicas
+//!   top        poll a serving fleet's live stats (the "stats" request)
 //!   sessions   list/inspect/evict spilled session snapshots
 
 use std::sync::atomic::AtomicBool;
@@ -19,9 +20,12 @@ use crate::coordinator::router::Router;
 use crate::coordinator::{
     collect_tokens, spawn_engine_full, BucketCfg, BucketSpec, EngineOpts, GenRequest,
 };
+use crate::metrics::trace::write_chrome_trace;
+use crate::metrics::{LiveStats, TraceCfg, Tracer};
 use crate::model::sampler::SamplerCfg;
 use crate::prefill::PrefillCfg;
 use crate::runtime::Engine;
+use crate::server::ServeObs;
 use crate::spec::SpecCfg;
 use crate::session::{spill_file, spill_sessions, SessionStore, StoreCfg};
 use crate::train::{train, LrSchedule, TrainOpts};
@@ -29,11 +33,12 @@ use crate::util::human_bytes;
 
 pub const USAGE: &str = "\
 hla — Higher-order Linear Attention runtime
-usage: hla <info|selftest|train|generate|serve|sessions> [--flags]
+usage: hla <info|selftest|train|generate|serve|top|sessions> [--flags]
 common flags: --artifacts DIR --model NAME --seed N --config FILE.json
 train:    --steps N --lr F --warmup N --checkpoint PATH
 generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
           --spec true [--spec-k N --spec-drafter ngram|model|model:<cfg>]
+          --trace-out PATH.json  (Chrome trace of the engine cycle)
 serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
           [--checkpoint PATH]  (trained weights; default is seeded init)
           --session-capacity N --spill-dir DIR
@@ -46,6 +51,9 @@ serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
           with \"no_cache\": true on the wire)
           --spec-k N --spec-drafter D  (spec engine; requests opt in
           with \"spec\": true on the wire)
+          --trace-out PATH.json --trace-sample P  (request-span tracing;
+          P in [0,1] picks which requests record spans, default 1)
+top:      --addr HOST:PORT --interval SECS --count N  (0 = forever)
 sessions: <list|inspect|evict> --spill-dir DIR [--session-id N]";
 
 pub fn run(args: Vec<String>) -> Result<()> {
@@ -63,6 +71,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "train" => cmd_train(&cfg),
         "generate" => cmd_generate(&cfg),
         "serve" => cmd_serve(&cfg),
+        "top" => cmd_top(&cfg),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -225,8 +234,31 @@ fn spec_cfg(cfg: &RunConfig) -> Option<SpecCfg> {
     })
 }
 
+/// `--trace-out PATH` attaches a span recorder; `--trace-sample P` picks
+/// which requests record spans (engine-scoped spans always record).
+fn tracer_cfg(cfg: &RunConfig) -> Option<Arc<Tracer>> {
+    cfg.trace_out
+        .as_ref()
+        .map(|_| Arc::new(Tracer::new(&TraceCfg { sample: cfg.trace_sample, ..TraceCfg::default() })))
+}
+
+/// Export one Chrome trace file covering every replica's recorder.
+fn export_trace(path: &str, tracers: &[Arc<Tracer>]) {
+    let pairs: Vec<(usize, &Tracer)> =
+        tracers.iter().enumerate().map(|(i, t)| (i, &**t)).collect();
+    match write_chrome_trace(std::path::Path::new(path), &pairs) {
+        Ok(()) => {
+            let n: usize = tracers.iter().map(|t| t.recorded().min(t.capacity() as u64) as usize).sum();
+            println!("[trace: {n} span(s) -> {path} (load in Perfetto / chrome://tracing)]");
+        }
+        Err(e) => eprintln!("[trace: writing {path} failed: {e}]"),
+    }
+}
+
 fn cmd_generate(cfg: &RunConfig) -> Result<()> {
     let spec = spec_cfg(cfg);
+    let stats = Arc::new(LiveStats::new());
+    let tracer = tracer_cfg(cfg);
     let (tx, handle) = spawn_engine_full(
         cfg.artifacts.clone(),
         cfg.model.clone(),
@@ -239,6 +271,8 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
             prefix_cache: None,
             spec: spec.clone(),
             buckets: bucket_cfg(cfg),
+            stats: Some(stats.clone()),
+            tracer: tracer.clone(),
         },
     );
     let (etx, erx) = std::sync::mpsc::channel();
@@ -258,29 +292,9 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
     println!("{}{}", cfg.prompt, String::from_utf8_lossy(&tokens));
     println!("[finish: {finish:?}]");
     let stats = handle.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
-    println!(
-        "[{} tokens, {:.1} tok/s, step p50 {:.1}ms]",
-        stats.tokens_out,
-        stats.tokens_per_sec,
-        stats.step_us_p50 / 1e3
-    );
-    if stats.spec_rounds > 0 {
-        println!(
-            "[spec: {} rounds, {:.2} accepted/step, accept rate {:.2}, {} rollbacks]",
-            stats.spec_rounds,
-            stats.accepted_per_step(),
-            stats.spec_accept_rate(),
-            stats.spec_rollbacks
-        );
-    }
-    if stats.bucket_switches() > 0 {
-        println!(
-            "[buckets: mean step width {:.2}, {} grow(s) + {} shrink(s), repack p50 {:.0}us]",
-            stats.step_width_mean,
-            stats.bucket_grows,
-            stats.bucket_shrinks,
-            stats.repack_us_p50
-        );
+    println!("[{}]", stats.summary_line());
+    if let (Some(path), Some(t)) = (&cfg.trace_out, &tracer) {
+        export_trace(path, std::slice::from_ref(t));
     }
     Ok(())
 }
@@ -310,7 +324,11 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     }));
     let mut senders = vec![];
     let mut handles = vec![];
+    let mut registries = vec![];
+    let mut tracers = vec![];
     for r in 0..cfg.replicas {
+        let stats = Arc::new(LiveStats::new());
+        let tracer = tracer_cfg(cfg);
         let (tx, handle) = spawn_engine_full(
             cfg.artifacts.clone(),
             cfg.model.clone(),
@@ -323,10 +341,14 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
                 prefix_cache: prefix_cache_cfg(cfg),
                 spec: spec_cfg(cfg),
                 buckets: bucket_cfg(cfg),
+                stats: Some(stats.clone()),
+                tracer: tracer.clone(),
             },
         );
         senders.push(tx);
         handles.push(handle);
+        registries.push(stats);
+        tracers.extend(tracer);
     }
     let router = Arc::new(Router::new(senders, cfg.route));
     let stop = Arc::new(AtomicBool::new(false));
@@ -370,12 +392,25 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         ),
         None => println!("speculative decode: off (enable with --spec-k N)"),
     }
-    // the serve loop only exits on kill, so report the session-store
-    // counters periodically from a daemon thread (it dies with the process)
+    match &cfg.trace_out {
+        Some(p) => println!(
+            "tracing: spans -> {p} (sample {:.2}, re-exported every 60s) — inspect in Perfetto",
+            cfg.trace_sample
+        ),
+        None => println!("tracing: off (enable with --trace-out PATH.json)"),
+    }
+    println!("stats: live registry on — poll with `hla top --addr {}` or a \"stats\" request", cfg.addr);
+    // the serve loop only exits on kill, so report the fleet's live stats
+    // and the session-store counters periodically from a daemon thread
+    // (it dies with the process), and keep the trace file fresh
     {
         let store = store.clone();
+        let registries = registries.clone();
+        let tracers = tracers.clone();
+        let trace_out = cfg.trace_out.clone();
         std::thread::spawn(move || loop {
             std::thread::sleep(std::time::Duration::from_secs(60));
+            println!("[{}]", LiveStats::merged(&registries).summary_line());
             let st = store.stats();
             if st.snapshots > 0 {
                 println!(
@@ -389,15 +424,44 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
                     human_bytes(st.resident_bytes),
                 );
             }
+            if let Some(path) = &trace_out {
+                let pairs: Vec<(usize, &Tracer)> =
+                    tracers.iter().enumerate().map(|(i, t)| (i, &**t)).collect();
+                if let Err(e) = write_chrome_trace(std::path::Path::new(path), &pairs) {
+                    eprintln!("[trace: writing {path} failed: {e}]");
+                }
+            }
         });
     }
-    crate::server::serve_sessions(&cfg.addr, router, Some(store), stop, |addr| {
+    let obs = Arc::new(ServeObs { stats: registries });
+    crate::server::serve_full(&cfg.addr, router, Some(store), Some(obs), stop, |addr| {
         println!("listening on {addr}");
     })?;
+    if let Some(path) = &cfg.trace_out {
+        export_trace(path, &tracers);
+    }
     for h in handles {
         let _ = h.join();
     }
     Ok(())
+}
+
+/// `hla top` — poll a live server's `"stats"` request and print one
+/// merged summary line per tick (a `top`-style view of the fleet).
+fn cmd_top(cfg: &RunConfig) -> Result<()> {
+    use crate::server::client::Client;
+    let mut client = Client::connect(&cfg.addr)
+        .map_err(|e| anyhow!("top: connecting {}: {e} (is `hla serve` running?)", cfg.addr))?;
+    let mut tick = 0usize;
+    loop {
+        let stats = client.stats().map_err(|e| anyhow!("top: {e}"))?;
+        println!("[{}]", stats.summary_line());
+        tick += 1;
+        if cfg.count > 0 && tick >= cfg.count {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(cfg.interval));
+    }
 }
 
 /// `hla sessions <list|inspect|evict>` — operate on a spill directory (the

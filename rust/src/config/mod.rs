@@ -61,6 +61,15 @@ pub struct RunConfig {
     pub prompt: String,
     pub max_tokens: usize,
     pub temperature: f32,
+    // observability
+    /// write a Chrome trace-event JSON here on exit (generate/serve)
+    pub trace_out: Option<String>,
+    /// per-request trace sampling probability in [0, 1]
+    pub trace_sample: f64,
+    /// `hla top` refresh interval in seconds
+    pub interval: f64,
+    /// `hla top` tick count; 0 = poll until the server goes away
+    pub count: usize,
 }
 
 impl Default for RunConfig {
@@ -92,6 +101,10 @@ impl Default for RunConfig {
             prompt: "It was the".into(),
             max_tokens: 64,
             temperature: 0.8,
+            trace_out: None,
+            trace_sample: 1.0,
+            interval: 2.0,
+            count: 0,
         }
     }
 }
@@ -176,6 +189,20 @@ impl RunConfig {
             "prompt" => self.prompt = value.into(),
             "max-tokens" | "max_tokens" => self.max_tokens = value.parse()?,
             "temperature" => self.temperature = value.parse()?,
+            "trace-out" | "trace_out" => self.trace_out = Some(value.into()),
+            "trace-sample" | "trace_sample" => {
+                self.trace_sample = value.parse()?;
+                if !(0.0..=1.0).contains(&self.trace_sample) {
+                    bail!("trace-sample must be in [0, 1] (a per-request probability)");
+                }
+            }
+            "interval" => {
+                self.interval = value.parse()?;
+                if !self.interval.is_finite() || self.interval <= 0.0 {
+                    bail!("interval must be a positive number of seconds");
+                }
+            }
+            "count" => self.count = value.parse()?,
             other => bail!("unknown option --{other}"),
         }
         Ok(())
@@ -319,6 +346,37 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(RunConfig::from_args(&s(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn trace_flags_apply_and_validate() {
+        let cfg = RunConfig::from_args(&s(&[
+            "--trace-out",
+            "/tmp/hla.trace.json",
+            "--trace-sample=0.25",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("/tmp/hla.trace.json"));
+        assert!((cfg.trace_sample - 0.25).abs() < 1e-12);
+        // defaults: no trace file, but full sampling once one is requested
+        let d = RunConfig::default();
+        assert!(d.trace_out.is_none());
+        assert!((d.trace_sample - 1.0).abs() < 1e-12);
+        // probabilities live in [0, 1]; fail fast at parse time
+        assert!(RunConfig::from_args(&s(&["--trace-sample", "1.5"])).is_err());
+        assert!(RunConfig::from_args(&s(&["--trace-sample", "-0.1"])).is_err());
+    }
+
+    #[test]
+    fn top_flags_apply_and_validate() {
+        let cfg = RunConfig::from_args(&s(&["--interval", "0.5", "--count=3"])).unwrap();
+        assert!((cfg.interval - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.count, 3);
+        let d = RunConfig::default();
+        assert!((d.interval - 2.0).abs() < 1e-12);
+        assert_eq!(d.count, 0);
+        assert!(RunConfig::from_args(&s(&["--interval", "0"])).is_err());
+        assert!(RunConfig::from_args(&s(&["--interval", "nan"])).is_err());
     }
 
     #[test]

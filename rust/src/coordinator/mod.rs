@@ -47,7 +47,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cache::{PrefixCache, PrefixCacheCfg};
-use crate::metrics::{Histogram, Meter, Table};
+use crate::metrics::{LiveStats, Stage, Tracer};
 use crate::model::RustModel;
 use crate::prefill::{PrefillCfg, PrefillMode, Prefiller};
 use crate::runtime::{literal, DecodeBuckets, Engine};
@@ -56,6 +56,10 @@ use crate::spec::{DrafterKind, SpecCfg, SpecEngine};
 use crate::tensor::{Tensor, TensorI32};
 pub use batch::{Lane, LaneStatus};
 pub use bucket::{BucketCfg, BucketSpec, BucketSwitch, BucketTracker};
+// ServeStats moved to the metrics registry in the observability PR (the
+// engine now *updates* a shared LiveStats rather than owning the only
+// copy); re-exported here so existing imports keep resolving.
+pub use crate::metrics::registry::ServeStats;
 pub use request::{collect_tokens, FinishReason, GenRequest, RequestId, TokenEvent};
 pub use state_pool::StatePool;
 
@@ -95,149 +99,6 @@ impl SchedPolicy {
             }
             SchedPolicy::Hybrid(n) => waiting.min(free).min(n),
         }
-    }
-}
-
-/// Aggregated serving metrics, snapshotted for benches/CLI.
-///
-/// TTFT (submission → first token) splits into queue-wait (submission →
-/// admission), prefill (admission-time prompt ingestion) and first-decode
-/// (decode steps until the first sampled token) — the three knobs a
-/// serving operator can actually turn (batch width, prefill threads,
-/// scheduler policy respectively).
-#[derive(Debug, Default, Clone)]
-pub struct ServeStats {
-    pub completed: u64,
-    pub tokens_out: u64,
-    pub steps: u64,
-    pub elapsed_s: f64,
-    pub step_us_p50: f64,
-    pub step_us_p99: f64,
-    pub ttft_us_p50: f64,
-    pub ttft_us_p95: f64,
-    pub ttft_us_p99: f64,
-    pub queue_us_p50: f64,
-    pub queue_us_p95: f64,
-    pub queue_us_p99: f64,
-    pub prefill_us_p50: f64,
-    pub prefill_us_p95: f64,
-    pub prefill_us_p99: f64,
-    pub first_decode_us_p50: f64,
-    pub first_decode_us_p95: f64,
-    pub first_decode_us_p99: f64,
-    /// Lanes whose prompt went through the scan prefill engine.
-    pub prefills: u64,
-    /// Prompt tokens ingested by the prefill engine (vs decode steps).
-    pub prefilled_tokens: u64,
-    /// Prefix-cache lookups that seeded a prefill from a cached boundary
-    /// / that found nothing reusable.
-    pub cache_hits: u64,
-    pub cache_misses: u64,
-    /// Boundary snapshots inserted / LRU-evicted under the byte budget.
-    pub cache_inserts: u64,
-    pub cache_evictions: u64,
-    /// Prompt tokens skipped by warm hits (work the cache saved).
-    pub cache_hit_tokens: u64,
-    /// Bytes of cached boundary snapshots resident at shutdown.
-    pub cache_resident_bytes: usize,
-    /// TTFT split by cache outcome: lanes seeded from a cached prefix
-    /// (warm) vs lanes that scanned their whole prompt (cold) — the
-    /// headline the shared-prefix workload buys (bench E16).
-    pub ttft_warm_us_p50: f64,
-    pub ttft_warm_us_p95: f64,
-    pub ttft_warm_us_p99: f64,
-    pub ttft_cold_us_p50: f64,
-    pub ttft_cold_us_p95: f64,
-    pub ttft_cold_us_p99: f64,
-    pub latency_us_p50: f64,
-    pub latency_us_p95: f64,
-    pub latency_us_p99: f64,
-    pub tokens_per_sec: f64,
-    pub state_bytes: usize,
-    pub lane_occupancy: f64,
-    /// Bucket-layout grows (admission bursts) / shrinks (sustained
-    /// under-occupancy) — both 0 when bucketing is off or never fired.
-    pub bucket_grows: u64,
-    pub bucket_shrinks: u64,
-    /// Exact state repacks run (one per bucket switch) and their cost —
-    /// the overhead side of the E17 trade.
-    pub repacks: u64,
-    pub repack_us_p50: f64,
-    pub repack_us_p99: f64,
-    /// Mean width of the batched decode steps actually executed
-    /// (== `decode_batch` when bucketing is off).  Lower than the batch
-    /// width at low occupancy is the bucketing win (bench E17).
-    pub step_width_mean: f64,
-    /// Speculative draft/verify rounds run across all lanes.
-    pub spec_rounds: u64,
-    /// Draft tokens proposed / accepted (acceptance rate = ratio).
-    pub spec_drafted: u64,
-    pub spec_accepted: u64,
-    /// Rounds that restored the pre-draft O(state) snapshot.
-    pub spec_rollbacks: u64,
-    /// Tokens emitted by speculative rounds (vs. 1 per batched step).
-    pub spec_tokens: u64,
-}
-
-impl ServeStats {
-    /// Mean draft tokens accepted per speculative verify step (0 when no
-    /// speculative rounds ran).  The serial baseline emits exactly 1
-    /// token per step, so `accepted_per_step + 1` ≈ the per-step speedup
-    /// surface.
-    pub fn accepted_per_step(&self) -> f64 {
-        if self.spec_rounds == 0 {
-            0.0
-        } else {
-            self.spec_accepted as f64 / self.spec_rounds as f64
-        }
-    }
-
-    /// Fraction of drafted tokens accepted (0 when nothing was drafted).
-    pub fn spec_accept_rate(&self) -> f64 {
-        if self.spec_drafted == 0 {
-            0.0
-        } else {
-            self.spec_accepted as f64 / self.spec_drafted as f64
-        }
-    }
-
-    /// Fraction of prefix-cache lookups that seeded a prefill (0 when the
-    /// cache was off or never consulted).
-    pub fn cache_hit_rate(&self) -> f64 {
-        crate::metrics::hit_rate(self.cache_hits, self.cache_misses)
-    }
-
-    /// Total bucket switches (grows + shrinks).  Under a healthy
-    /// hysteresis setting this stays far below `steps`; a ratio near 1
-    /// means the shrink debounce is too aggressive for the admission
-    /// churn (raise `--bucket-shrink-after`).
-    pub fn bucket_switches(&self) -> u64 {
-        self.bucket_grows + self.bucket_shrinks
-    }
-
-    /// The TTFT breakdown as a [`Table`] (the reporter benches/CLI print).
-    pub fn ttft_table(&self) -> Table {
-        let mut t = Table::new(&["phase", "p50 ms", "p95 ms", "p99 ms"]);
-        let mut row = |name: &str, p50: f64, p95: f64, p99: f64| {
-            t.row(&[
-                name.to_string(),
-                format!("{:.2}", p50 / 1e3),
-                format!("{:.2}", p95 / 1e3),
-                format!("{:.2}", p99 / 1e3),
-            ]);
-        };
-        row("queue-wait", self.queue_us_p50, self.queue_us_p95, self.queue_us_p99);
-        row("prefill", self.prefill_us_p50, self.prefill_us_p95, self.prefill_us_p99);
-        row(
-            "first-decode",
-            self.first_decode_us_p50,
-            self.first_decode_us_p95,
-            self.first_decode_us_p99,
-        );
-        row("ttft (e2e)", self.ttft_us_p50, self.ttft_us_p95, self.ttft_us_p99);
-        row("ttft (warm-hit)", self.ttft_warm_us_p50, self.ttft_warm_us_p95, self.ttft_warm_us_p99);
-        row("ttft (cold)", self.ttft_cold_us_p50, self.ttft_cold_us_p95, self.ttft_cold_us_p99);
-        t
     }
 }
 
@@ -291,31 +152,15 @@ pub struct EngineLoop {
     // by reference to PJRT — no per-step deep copies (§Perf item 2)
     params: Vec<xla::Literal>,
     state: Vec<xla::Literal>,
-    // metrics
-    pub step_hist: Histogram,
-    pub ttft_hist: Histogram,
-    pub latency_hist: Histogram,
-    pub queue_hist: Histogram,
-    pub prefill_hist: Histogram,
-    pub first_decode_hist: Histogram,
-    /// TTFT split by prefix-cache outcome (warm = seeded from a cached
-    /// boundary; cold = everything else, cache or no cache).
-    pub ttft_warm_hist: Histogram,
-    pub ttft_cold_hist: Histogram,
-    /// Time per exact state repack (one sample per bucket switch).
-    pub repack_hist: Histogram,
-    meter: Meter,
-    occupied_steps: u64,
-    occupied_lanes: u64,
-    bucket_grows: u64,
-    bucket_shrinks: u64,
-    /// Sum of step widths / count of batched steps (mean step width).
-    width_steps: u64,
-    batched_steps: u64,
-    completed: u64,
-    prefills: u64,
-    prefilled_tokens: u64,
-    started: Instant,
+    /// Live metrics registry the loop updates in place on its hot path.
+    /// Own by default; [`EngineLoop::set_stats`] swaps in a shared one so
+    /// server threads snapshot/merge it while the loop runs.  The
+    /// warm/cold TTFT split, occupancy tallies and bucket counters all
+    /// live here — see [`crate::metrics::registry`].
+    stats: Arc<LiveStats>,
+    /// Request-span tracer (None = tracing off; the hot path pays one
+    /// `Option` check).  Attached via [`EngineLoop::set_tracer`].
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// Live bucketing state: the compiled executable ladder plus the
@@ -341,7 +186,7 @@ impl EngineLoop {
         engine.load(&format!("decode_step_{cfg_name}"))?;
         let batch = cfg.decode_batch;
         let state = zero_state_literals(&cfg)?;
-        Ok(EngineLoop {
+        let lp = EngineLoop {
             engine,
             cfg_name: cfg_name.to_string(),
             batch,
@@ -360,27 +205,61 @@ impl EngineLoop {
             seed,
             params,
             state,
-            step_hist: Histogram::new(),
-            ttft_hist: Histogram::new(),
-            latency_hist: Histogram::new(),
-            queue_hist: Histogram::new(),
-            prefill_hist: Histogram::new(),
-            first_decode_hist: Histogram::new(),
-            ttft_warm_hist: Histogram::new(),
-            ttft_cold_hist: Histogram::new(),
-            repack_hist: Histogram::new(),
-            meter: Meter::new(),
-            occupied_steps: 0,
-            occupied_lanes: 0,
-            bucket_grows: 0,
-            bucket_shrinks: 0,
-            width_steps: 0,
-            batched_steps: 0,
-            completed: 0,
-            prefills: 0,
-            prefilled_tokens: 0,
-            started: Instant::now(),
-        })
+            stats: Arc::new(LiveStats::new()),
+            tracer: None,
+        };
+        lp.publish_gauges();
+        Ok(lp)
+    }
+
+    /// Swap in a shared live registry (`serve` builds one per replica and
+    /// hands the set to the stats endpoint).  Call before [`Self::run`];
+    /// counters already accumulated on the default registry do not carry
+    /// over.
+    pub fn set_stats(&mut self, stats: Arc<LiveStats>) {
+        self.stats = stats;
+        self.publish_gauges();
+    }
+
+    /// The live registry this loop updates (snapshot it from any thread).
+    pub fn live_stats(&self) -> Arc<LiveStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Attach a request-span tracer (`serve --trace-out`).  Request-scoped
+    /// spans follow the tracer's sampling decision; engine-scoped spans
+    /// (decode steps, repacks) are always recorded while attached.
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = Some(tracer);
+    }
+
+    /// Mirror the slow-moving gauges into the registry.
+    fn publish_gauges(&self) {
+        self.stats.batch_lanes.set(self.batch as u64);
+        self.stats.state_bytes.set(self.pool.nbytes() as u64);
+    }
+
+    /// Mirror attachment-owned tallies (spec engine, prefix cache) into
+    /// the registry, so a mid-run snapshot sees them without reaching
+    /// into `!Send` engine internals.  An atomic store per field; runs
+    /// once per engine cycle, off the per-token path.
+    fn publish_attachments(&self) {
+        if let Some(eng) = &self.spec {
+            self.stats.spec_rounds.set(eng.stats.rounds);
+            self.stats.spec_drafted.set(eng.stats.drafted);
+            self.stats.spec_accepted.set(eng.stats.accepted);
+            self.stats.spec_rollbacks.set(eng.stats.rollbacks);
+            self.stats.spec_tokens.set(eng.stats.emitted);
+        }
+        if let Some(cache) = &self.prefix_cache {
+            let cs = cache.stats();
+            self.stats.cache_hits.set(cs.hits);
+            self.stats.cache_misses.set(cs.misses);
+            self.stats.cache_inserts.set(cs.inserts);
+            self.stats.cache_evictions.set(cs.evictions);
+            self.stats.cache_hit_tokens.set(cs.hit_tokens);
+            self.stats.cache_resident_bytes.set(cs.resident_bytes as u64);
+        }
     }
 
     /// Load externally trained parameters (checkpoint) instead of init.
@@ -563,10 +442,13 @@ impl EngineLoop {
         }
         self.width = new_width;
         match sw {
-            BucketSwitch::Grow(_) => self.bucket_grows += 1,
-            BucketSwitch::Shrink(_) => self.bucket_shrinks += 1,
+            BucketSwitch::Grow(_) => self.stats.bucket_grows.incr(),
+            BucketSwitch::Shrink(_) => self.stats.bucket_shrinks.incr(),
+        };
+        self.stats.repack_hist.record(t0.elapsed());
+        if let Some(t) = &self.tracer {
+            t.engine_span(Stage::Repack, t0, new_width as u64);
         }
-        self.repack_hist.record(t0.elapsed());
     }
 
     /// Rebuild the state literals at `new_width` per `moves` (src slot →
@@ -627,6 +509,9 @@ impl EngineLoop {
             if let Some(sw) = self.buckets.as_mut().and_then(|b| b.tracker.after_step(live)) {
                 self.apply_switch(sw);
             }
+            // keep the live registry's view of attachment-owned tallies
+            // fresh for mid-run snapshots (an atomic store per field)
+            self.publish_attachments();
         }
         Ok(self.stats())
     }
@@ -664,7 +549,9 @@ impl EngineLoop {
             occupied[slot] = true;
             self.slot_of[lane_idx] = slot;
             let req = self.waiting.pop_front().expect("admissions <= waiting");
-            self.queue_hist.record(req.submitted.elapsed());
+            let t_admit = Instant::now();
+            let (req_id, prompt_len) = (req.id, req.prompt.len());
+            self.stats.queue_hist.record(req.submitted.elapsed());
             let claimed = match (&self.sessions, req.resume, req.session) {
                 (Some(store), true, Some(sid)) => {
                     store.claim(sid, Some(&self.cfg_name)).map(|s| (Arc::clone(store), s))
@@ -723,16 +610,21 @@ impl EngineLoop {
                         (Some(c), None) if a.cache => Some(c),
                         _ => None,
                     };
+                    let cache_probed = cache.is_some();
+                    // hit_tokens: prompt tokens a cached boundary saved
+                    // (0 = cold probe or no cache on this admission)
                     let ingested = match cache {
                         Some(c) => pf
                             .ingest_lane_cached(c, &a.prompt)
-                            .map(|(parts, consumed, out)| (parts, consumed, out.hit_tokens > 0)),
+                            .map(|(parts, consumed, out)| (parts, consumed, out.hit_tokens)),
                         None => pf
                             .ingest_lane(snap.as_ref().map(|s| s.state.as_slice()), &a.prompt)
-                            .map(|(parts, consumed)| (parts, consumed, false)),
+                            .map(|(parts, consumed)| (parts, consumed, 0)),
                     };
                     match ingested {
-                        Ok((parts, consumed, warm)) => Some((parts, consumed, warm, t0.elapsed())),
+                        Ok((parts, consumed, hit_tokens)) => {
+                            Some((parts, consumed, hit_tokens, cache_probed, t0))
+                        }
                         Err(e) => {
                             log::warn!("prefill failed, decode-as-prefill fallback: {e}");
                             None
@@ -741,17 +633,25 @@ impl EngineLoop {
                 }
                 _ => None,
             };
-            if let Some((parts, consumed, warm, spent)) = scanned {
+            if let Some((parts, consumed, hit_tokens, cache_probed, t0)) = scanned {
+                if cache_probed {
+                    if let Some(t) = &self.tracer {
+                        t.instant_event(Stage::CacheLookup, req_id, lane_idx, hit_tokens as u64);
+                    }
+                }
                 match self.import_state_lane(slot, &parts) {
                     Ok(()) => {
                         self.pool.write_lane(lane_idx, &parts);
                         lane.mark_prefilled(consumed);
                         if let Lane::Active(a) = &mut lane {
-                            a.cache_warm = warm;
+                            a.cache_warm = hit_tokens > 0;
                         }
-                        self.prefill_hist.record(spent);
-                        self.prefills += 1;
-                        self.prefilled_tokens += consumed as u64;
+                        self.stats.prefill_hist.record(t0.elapsed());
+                        self.stats.prefills.incr();
+                        self.stats.prefilled_tokens.add(consumed as u64);
+                        if let Some(t) = &self.tracer {
+                            t.span(Stage::Prefill, req_id, lane_idx, t0, consumed as u64);
+                        }
                     }
                     Err(e) => {
                         log::warn!("prefill state import failed, decode-as-prefill fallback: {e}")
@@ -759,6 +659,9 @@ impl EngineLoop {
                 }
             }
             self.lanes[lane_idx] = lane;
+            if let Some(t) = &self.tracer {
+                t.span(Stage::Admission, req_id, lane_idx, t_admit, prompt_len as u64);
+            }
         }
     }
 
@@ -862,19 +765,19 @@ impl EngineLoop {
             }
             if lane.take_first_flag() {
                 if let Lane::Active(a) = lane {
-                    self.ttft_hist.record(now - a.arrival);
-                    self.first_decode_hist.record(now - a.decode_start);
+                    self.stats.ttft_hist.record(now - a.arrival);
+                    self.stats.first_decode_hist.record(now - a.decode_start);
                     // the cold-vs-warm breakdown: a warm lane's prompt was
                     // seeded from a cached prefix boundary
                     if a.cache_warm {
-                        self.ttft_warm_hist.record(now - a.arrival);
+                        self.stats.ttft_warm_hist.record(now - a.arrival);
                     } else {
-                        self.ttft_cold_hist.record(now - a.arrival);
+                        self.stats.ttft_cold_hist.record(now - a.arrival);
                     }
                 }
             }
             if lane.take_emitted_flag() {
-                self.meter.tick(1);
+                self.stats.tokens_out.incr();
             }
         }
         for (b, reason) in finished {
@@ -883,11 +786,14 @@ impl EngineLoop {
         if self.spec.is_some() {
             self.activate_spec_lanes();
         }
-        self.step_hist.record(start.elapsed());
-        self.occupied_steps += 1;
-        self.occupied_lanes += active_ct;
-        self.width_steps += width as u64;
-        self.batched_steps += 1;
+        self.stats.step_hist.record(start.elapsed());
+        self.stats.steps.incr();
+        self.stats.occupied_lanes.add(active_ct);
+        self.stats.width_steps.add(width as u64);
+        self.stats.batched_steps.incr();
+        if let Some(t) = &self.tracer {
+            t.engine_span(Stage::DecodeStep, start, width as u64);
+        }
         Ok(())
     }
 
@@ -897,8 +803,8 @@ impl EngineLoop {
     fn finish_lane(&mut self, b: usize, reason: FinishReason, now: Instant) {
         let lane = std::mem::replace(&mut self.lanes[b], Lane::empty());
         let Lane::Active(a) = lane else { return };
-        self.latency_hist.record(now - a.arrival);
-        self.completed += 1;
+        self.stats.latency_hist.record(now - a.arrival);
+        self.stats.completed.incr();
         // detach the lane's state into the session store before the lane
         // can be re-admitted.  Batched lanes live in the state literals
         // (which hold exactly the post-step state); speculative lanes
@@ -906,6 +812,7 @@ impl EngineLoop {
         // ground truth — `a.last_token` is the next input an
         // uninterrupted generation would feed either way.
         if let (Some(store), Some(sid)) = (&self.sessions, a.session) {
+            let t0 = Instant::now();
             let parts = match (&a.spec, &self.spec) {
                 (Some(sl), Some(eng)) => sl.state.to_components(&eng.model().cfg),
                 // the lane's *current* slot — repacks may have moved it
@@ -922,6 +829,9 @@ impl EngineLoop {
                     state: parts,
                 }),
                 Err(e) => log::warn!("session {sid}: snapshot failed: {e}"),
+            }
+            if let Some(t) = &self.tracer {
+                t.span(Stage::Detach, a.request_id, b, t0, a.generated as u64);
             }
         }
         let _ = a.events.send(TokenEvent::finished_resumed(a.request_id, reason, a.resumed));
@@ -1005,6 +915,7 @@ impl EngineLoop {
                     finished.push((b, FinishReason::Length));
                     continue;
                 }
+                let t_round = Instant::now();
                 let outcome = match eng.round(sl, &mut a.sampler, a.last_token, remaining, a.eos) {
                     Ok(o) => o,
                     Err(e) => {
@@ -1018,7 +929,10 @@ impl EngineLoop {
                     a.last_token = t;
                     let _ = a.events.send(TokenEvent::token(a.request_id, t));
                 }
-                self.meter.tick(outcome.emitted.len() as u64);
+                self.stats.tokens_out.add(outcome.emitted.len() as u64);
+                if let Some(tr) = &self.tracer {
+                    tr.span(Stage::SpecRound, a.request_id, b, t_round, outcome.emitted.len() as u64);
+                }
                 if a.eos.is_some() && outcome.emitted.last().copied() == a.eos {
                     finished.push((b, FinishReason::Eos));
                 } else if a.generated >= a.max_new_tokens {
@@ -1031,74 +945,19 @@ impl EngineLoop {
             self.finish_lane(b, reason, now);
         }
         if !batched && spec_lanes > 0 {
-            self.step_hist.record(start.elapsed());
-            self.occupied_steps += 1;
-            self.occupied_lanes += spec_lanes;
+            self.stats.step_hist.record(start.elapsed());
+            self.stats.steps.incr();
+            self.stats.occupied_lanes.add(spec_lanes);
         }
     }
 
+    /// A snapshot of the live registry as of now (attachment tallies
+    /// republished first, so callers on the engine thread — `run`'s
+    /// return value, the benches — see final spec/cache totals even if
+    /// the last cycle exited before its publish).
     pub fn stats(&self) -> ServeStats {
-        let spec = self.spec.as_ref().map(|e| e.stats.clone()).unwrap_or_default();
-        let cache = self.prefix_cache.as_ref().map(|c| c.stats()).unwrap_or_default();
-        ServeStats {
-            completed: self.completed,
-            tokens_out: self.meter.units(),
-            steps: self.occupied_steps,
-            elapsed_s: self.started.elapsed().as_secs_f64(),
-            step_us_p50: self.step_hist.percentile_us(50.0),
-            step_us_p99: self.step_hist.percentile_us(99.0),
-            ttft_us_p50: self.ttft_hist.percentile_us(50.0),
-            ttft_us_p95: self.ttft_hist.percentile_us(95.0),
-            ttft_us_p99: self.ttft_hist.percentile_us(99.0),
-            queue_us_p50: self.queue_hist.percentile_us(50.0),
-            queue_us_p95: self.queue_hist.percentile_us(95.0),
-            queue_us_p99: self.queue_hist.percentile_us(99.0),
-            prefill_us_p50: self.prefill_hist.percentile_us(50.0),
-            prefill_us_p95: self.prefill_hist.percentile_us(95.0),
-            prefill_us_p99: self.prefill_hist.percentile_us(99.0),
-            first_decode_us_p50: self.first_decode_hist.percentile_us(50.0),
-            first_decode_us_p95: self.first_decode_hist.percentile_us(95.0),
-            first_decode_us_p99: self.first_decode_hist.percentile_us(99.0),
-            prefills: self.prefills,
-            prefilled_tokens: self.prefilled_tokens,
-            cache_hits: cache.hits,
-            cache_misses: cache.misses,
-            cache_inserts: cache.inserts,
-            cache_evictions: cache.evictions,
-            cache_hit_tokens: cache.hit_tokens,
-            cache_resident_bytes: cache.resident_bytes,
-            ttft_warm_us_p50: self.ttft_warm_hist.percentile_us(50.0),
-            ttft_warm_us_p95: self.ttft_warm_hist.percentile_us(95.0),
-            ttft_warm_us_p99: self.ttft_warm_hist.percentile_us(99.0),
-            ttft_cold_us_p50: self.ttft_cold_hist.percentile_us(50.0),
-            ttft_cold_us_p95: self.ttft_cold_hist.percentile_us(95.0),
-            ttft_cold_us_p99: self.ttft_cold_hist.percentile_us(99.0),
-            latency_us_p50: self.latency_hist.percentile_us(50.0),
-            latency_us_p95: self.latency_hist.percentile_us(95.0),
-            latency_us_p99: self.latency_hist.percentile_us(99.0),
-            tokens_per_sec: self.meter.units_per_sec(),
-            state_bytes: self.pool.nbytes(),
-            lane_occupancy: if self.occupied_steps == 0 {
-                0.0
-            } else {
-                self.occupied_lanes as f64 / (self.occupied_steps * self.batch as u64) as f64
-            },
-            bucket_grows: self.bucket_grows,
-            bucket_shrinks: self.bucket_shrinks,
-            repacks: self.repack_hist.count(),
-            repack_us_p50: self.repack_hist.percentile_us(50.0),
-            repack_us_p99: self.repack_hist.percentile_us(99.0),
-            step_width_mean: if self.batched_steps == 0 {
-                0.0
-            } else {
-                self.width_steps as f64 / self.batched_steps as f64
-            },
-            spec_rounds: spec.rounds,
-            spec_drafted: spec.drafted,
-            spec_accepted: spec.accepted,
-            spec_rollbacks: spec.rollbacks,
-            spec_tokens: spec.emitted,
-        }
+        self.publish_attachments();
+        self.stats.snapshot()
     }
 }
 
@@ -1139,6 +998,13 @@ pub struct EngineOpts {
     pub spec: Option<SpecCfg>,
     /// Occupancy-adaptive decode bucketing (None = fixed-width decode).
     pub buckets: Option<BucketCfg>,
+    /// Shared live metrics registry (None = the loop keeps a private one,
+    /// still readable via the final [`ServeStats`]).  Hand the same
+    /// registry to the server's stats endpoint to expose this replica.
+    pub stats: Option<Arc<LiveStats>>,
+    /// Request-span tracer (None = tracing off).  Share one tracer across
+    /// replicas or give each its own — the Chrome exporter takes a set.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 /// Spawn an engine loop on its own thread; returns the request sender and a
@@ -1166,16 +1032,7 @@ pub fn spawn_engine_with_store(
     spawn_engine_full(
         artifacts,
         cfg_name,
-        EngineOpts {
-            policy: Some(policy),
-            seed,
-            checkpoint: None,
-            store,
-            prefill: None,
-            prefix_cache: None,
-            spec: None,
-            buckets: None,
-        },
+        EngineOpts { policy: Some(policy), seed, store, ..Default::default() },
     )
 }
 
@@ -1215,6 +1072,12 @@ pub fn spawn_engine_full(
         if let Some(buckets) = opts.buckets {
             lp.set_buckets(buckets);
         }
+        if let Some(stats) = opts.stats {
+            lp.set_stats(stats);
+        }
+        if let Some(tracer) = opts.tracer {
+            lp.set_tracer(tracer);
+        }
         lp.run()
     });
     (tx, handle)
@@ -1223,6 +1086,7 @@ pub fn spawn_engine_full(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::Histogram;
 
     #[test]
     fn policy_parsing() {

@@ -14,12 +14,13 @@
 //!   shared-prefix radix cache reusing constant-size prefix states
 //!   across requests (`cache`), a speculative decoding engine with
 //!   draft/verify/rollback over the constant-size state (`spec`), a
-//!   training driver, plus a from-scratch reimplementation of the
-//!   paper's full algebra (`hla`) used for verification and CPU
-//!   baselines.
+//!   live observability layer (`metrics`: shared stats registry,
+//!   request-span tracing, persisted perf trajectory), a training
+//!   driver, plus a from-scratch reimplementation of the paper's full
+//!   algebra (`hla`) used for verification and CPU baselines.
 //!
 //! See `rust/DESIGN.md` for the system inventory, the `rust/benches/`
-//! E-series (E1–E17) for the paper-claim ↔ measurement map,
+//! E-series (E1–E18) for the paper-claim ↔ measurement map,
 //! `rust/docs/ARCHITECTURE.md` for one request walked end to end through
 //! the serving stack, and `rust/docs/PROTOCOL.md` for the wire format.
 

@@ -1,9 +1,21 @@
 //! Metrics substrate: log-bucketed latency histograms with percentile
 //! queries, throughput meters, lock-free event counters and a table
 //! reporter — replaces hdrhistogram/prometheus for the serving benches
-//! (E8/E13) and the CLI.
+//! (E8/E13/E18) and the CLI.
+//!
+//! Submodules extend this into the live observability layer:
+//! [`registry`] holds the shared [`registry::LiveStats`] the engine loop
+//! updates in place (and the [`registry::ServeStats`] snapshot it exports),
+//! [`trace`] holds the lock-free span ring and Chrome-trace exporter.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{LiveStats, ServeStats};
+pub use trace::{Stage, TraceCfg, Tracer};
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Lock-free monotonically increasing event counter, shareable across
@@ -35,6 +47,14 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
+
+    /// Overwrite the current value.  For gauges mirrored from a source of
+    /// truth owned elsewhere (e.g. the engine republishing `SpecStats` or
+    /// `CacheStats` totals into the live registry each cycle) — not for
+    /// event counting, where `incr`/`add` compose across writers.
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
 }
 
 /// `hits / (hits + misses)`, or 0 when nothing was recorded.
@@ -58,6 +78,7 @@ pub struct Histogram {
     sum_us: f64,
     min_us: f64,
     max_us: f64,
+    dropped: u64,
 }
 
 const BUCKETS: usize = 460;
@@ -77,6 +98,7 @@ impl Histogram {
             sum_us: 0.0,
             min_us: f64::INFINITY,
             max_us: 0.0,
+            dropped: 0,
         }
     }
 
@@ -96,6 +118,13 @@ impl Histogram {
     }
 
     pub fn record_us(&mut self, us: f64) {
+        // A NaN or negative sample (clock skew, a subtraction that went the
+        // wrong way upstream) must not corrupt bucket 0 / mean / min: drop
+        // it and count the drop so the corruption is visible, not silent.
+        if !us.is_finite() || us < 0.0 {
+            self.dropped += 1;
+            return;
+        }
         self.buckets[Self::bucket_of(us)] += 1;
         self.count += 1;
         self.sum_us += us;
@@ -111,10 +140,16 @@ impl Histogram {
         self.sum_us += other.sum_us;
         self.min_us = self.min_us.min(other.min_us);
         self.max_us = self.max_us.max(other.max_us);
+        self.dropped += other.dropped;
     }
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Samples rejected by the `record_us` finite/non-negative guard.
+    pub fn dropped_samples(&self) -> u64 {
+        self.dropped
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -151,6 +186,46 @@ impl Histogram {
             self.percentile_us(99.0),
             self.max_us
         )
+    }
+}
+
+/// A [`Histogram`] shareable across threads behind an `Arc`: writers
+/// record under a short critical section, readers take whole-histogram
+/// [`SharedHistogram::snapshot`]s which merge cleanly across replicas.
+///
+/// A `Mutex` (not per-bucket atomics) keeps `{count, sum, min, max,
+/// buckets}` mutually consistent — a snapshot is always *some* prefix of
+/// the sample stream, never a torn mix.  The lock is uncontended in
+/// practice (one engine-loop writer, occasional `"stats"` reader) and a
+/// poisoned lock degrades to the inner value rather than panicking the
+/// serving thread.
+#[derive(Debug, Default)]
+pub struct SharedHistogram(Mutex<Histogram>);
+
+impl SharedHistogram {
+    pub fn new() -> Self {
+        SharedHistogram(Mutex::new(Histogram::new()))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Histogram> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.lock().record(d);
+    }
+
+    pub fn record_us(&self, us: f64) {
+        self.lock().record_us(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.lock().count()
+    }
+
+    /// A consistent copy of the histogram as of now.
+    pub fn snapshot(&self) -> Histogram {
+        self.lock().clone()
     }
 }
 
@@ -315,6 +390,137 @@ mod tests {
         assert_eq!(hit_rate(3, 1), 0.75);
         assert_eq!(hit_rate(0, 7), 0.0);
         assert_eq!(hit_rate(7, 0), 1.0);
+    }
+
+    /// Property: merge(a, b) must be indistinguishable from recording all
+    /// samples into a single histogram — count, dropped, sum (exact: both
+    /// sides add the same finite f64s, just in a different grouping order
+    /// within each histogram's own sequential sum), min/max, and every
+    /// percentile.  100 random splits of random sample sets.
+    #[test]
+    fn prop_merge_equals_recording_into_one() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x4d45524745);
+        for _ in 0..100 {
+            let n = 1 + rng.below(400);
+            let samples: Vec<f64> = (0..n)
+                .map(|_| {
+                    // span the bucket range, include hostile samples
+                    match rng.below(20) {
+                        0 => f64::NAN,
+                        1 => -(rng.f64() * 100.0) - 0.001,
+                        2 => f64::INFINITY,
+                        _ => rng.f64() * 10f64.powi(rng.below(8) as i32),
+                    }
+                })
+                .collect();
+            let split = rng.below(n + 1);
+            let (mut a, mut b, mut whole) = (Histogram::new(), Histogram::new(), Histogram::new());
+            for (i, &s) in samples.iter().enumerate() {
+                if i < split {
+                    a.record_us(s);
+                } else {
+                    b.record_us(s);
+                }
+                whole.record_us(s);
+            }
+            a.merge(&b);
+            assert_eq!(a.count(), whole.count());
+            assert_eq!(a.dropped_samples(), whole.dropped_samples());
+            assert_eq!(a.min_us, whole.min_us, "split {split} of {n}");
+            assert_eq!(a.max_us, whole.max_us);
+            let tol = 1e-9 * whole.sum_us.abs().max(1.0);
+            assert!((a.sum_us - whole.sum_us).abs() <= tol, "{} vs {}", a.sum_us, whole.sum_us);
+            for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                assert_eq!(a.percentile_us(p), whole.percentile_us(p), "p{p}");
+            }
+        }
+    }
+
+    /// Property: p50 <= p95 <= p99 <= max over random sample sets (and
+    /// percentile_us is monotone in p generally).
+    #[test]
+    fn prop_percentiles_monotone_in_p() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x504354);
+        for _ in 0..100 {
+            let mut h = Histogram::new();
+            for _ in 0..1 + rng.below(300) {
+                h.record_us(rng.f64() * 10f64.powi(rng.below(7) as i32));
+            }
+            let mut prev = 0.0;
+            for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+                let v = h.percentile_us(p);
+                assert!(v >= prev, "p{p}: {v} < {prev}");
+                prev = v;
+            }
+            assert!(prev <= h.max_us, "p100 {prev} exceeds max {}", h.max_us);
+            assert!(
+                h.percentile_us(50.0) <= h.percentile_us(95.0)
+                    && h.percentile_us(95.0) <= h.percentile_us(99.0)
+                    && h.percentile_us(99.0) <= h.max_us
+            );
+        }
+    }
+
+    #[test]
+    fn record_us_guards_nan_and_negative() {
+        let mut h = Histogram::new();
+        h.record_us(5.0);
+        h.record_us(f64::NAN);
+        h.record_us(-1.0);
+        h.record_us(f64::NEG_INFINITY);
+        h.record_us(f64::INFINITY);
+        assert_eq!(h.count(), 1, "bad samples must not count");
+        assert_eq!(h.dropped_samples(), 4);
+        assert_eq!(h.mean_us(), 5.0, "mean must not absorb NaN/negative");
+        assert_eq!(h.min_us, 5.0);
+        assert_eq!(h.max_us, 5.0);
+        // zero is a legal sample (bucket 0), not a drop
+        h.record_us(0.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min_us, 0.0);
+    }
+
+    #[test]
+    fn shared_histogram_concurrent_recording_snapshots_consistently() {
+        use std::sync::Arc;
+        let h = Arc::new(SharedHistogram::new());
+        let mut handles = vec![];
+        for t in 0..4u64 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    h.record_us((t * 500 + i) as f64);
+                }
+            }));
+        }
+        // reader races the writers: snapshots are internally consistent
+        for _ in 0..50 {
+            let s = h.snapshot();
+            assert_eq!(s.count() + s.dropped_samples(), s.count(), "no drops expected");
+            if s.count() > 0 {
+                assert!(s.min_us <= s.max_us);
+                assert!(s.percentile_us(50.0) <= s.percentile_us(99.0));
+            }
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 2000);
+        let s = h.snapshot();
+        assert_eq!(s.min_us, 0.0);
+        assert_eq!(s.max_us, 1999.0);
+    }
+
+    #[test]
+    fn counter_set_overwrites() {
+        let c = Counter::new();
+        c.add(10);
+        c.set(3);
+        assert_eq!(c.get(), 3);
+        c.incr();
+        assert_eq!(c.get(), 4);
     }
 
     #[test]

@@ -1,0 +1,756 @@
+//! Live metrics registry: the shared, always-current serving counters.
+//!
+//! PRs 1–5 accumulated metrics as private fields on the engine loop,
+//! visible only as the [`ServeStats`] value returned when the loop
+//! *exits* — useless for a server that exits on SIGKILL.  [`LiveStats`]
+//! inverts that: the engine updates a shared registry of lock-free
+//! [`Counter`]s and lock-guarded [`SharedHistogram`]s **in place**, and
+//! any thread can take a consistent [`LiveStats::snapshot`] at any time —
+//! the `"stats"` admin request on the wire protocol, the `hla top`
+//! polling view, the 60s serve heartbeat.  Multi-replica deployments
+//! merge per-replica registries with [`LiveStats::merged`]: counters add,
+//! histograms merge bucket-wise (exactly — see the merge property test in
+//! the parent module), occupancy merges as a ratio of summed tallies.
+//!
+//! [`ServeStats`] itself (the snapshot type, its wire JSON form, the
+//! Prometheus text form, and the one-line [`ServeStats::summary_line`]
+//! every CLI surface prints) lives here too; `coordinator` re-exports it,
+//! so existing `hla::coordinator::ServeStats` imports still hold.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::{hit_rate, Counter, Histogram, SharedHistogram, Table};
+
+/// Aggregated serving metrics, snapshotted for benches/CLI/the wire.
+///
+/// TTFT (submission → first token) splits into queue-wait (submission →
+/// admission), prefill (admission-time prompt ingestion) and first-decode
+/// (decode steps until the first sampled token) — the three knobs a
+/// serving operator can actually turn (batch width, prefill threads,
+/// scheduler policy respectively).
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub tokens_out: u64,
+    pub steps: u64,
+    pub elapsed_s: f64,
+    pub step_us_p50: f64,
+    pub step_us_p99: f64,
+    pub ttft_us_p50: f64,
+    pub ttft_us_p95: f64,
+    pub ttft_us_p99: f64,
+    pub queue_us_p50: f64,
+    pub queue_us_p95: f64,
+    pub queue_us_p99: f64,
+    pub prefill_us_p50: f64,
+    pub prefill_us_p95: f64,
+    pub prefill_us_p99: f64,
+    pub first_decode_us_p50: f64,
+    pub first_decode_us_p95: f64,
+    pub first_decode_us_p99: f64,
+    /// Lanes whose prompt went through the scan prefill engine.
+    pub prefills: u64,
+    /// Prompt tokens ingested by the prefill engine (vs decode steps).
+    pub prefilled_tokens: u64,
+    /// Prefix-cache lookups that seeded a prefill from a cached boundary
+    /// / that found nothing reusable.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Boundary snapshots inserted / LRU-evicted under the byte budget.
+    pub cache_inserts: u64,
+    pub cache_evictions: u64,
+    /// Prompt tokens skipped by warm hits (work the cache saved).
+    pub cache_hit_tokens: u64,
+    /// Bytes of cached boundary snapshots resident at snapshot time.
+    pub cache_resident_bytes: usize,
+    /// TTFT split by cache outcome: lanes seeded from a cached prefix
+    /// (warm) vs lanes that scanned their whole prompt (cold) — the
+    /// headline the shared-prefix workload buys (bench E16).
+    pub ttft_warm_us_p50: f64,
+    pub ttft_warm_us_p95: f64,
+    pub ttft_warm_us_p99: f64,
+    pub ttft_cold_us_p50: f64,
+    pub ttft_cold_us_p95: f64,
+    pub ttft_cold_us_p99: f64,
+    pub latency_us_p50: f64,
+    pub latency_us_p95: f64,
+    pub latency_us_p99: f64,
+    pub tokens_per_sec: f64,
+    pub state_bytes: usize,
+    pub lane_occupancy: f64,
+    /// Bucket-layout grows (admission bursts) / shrinks (sustained
+    /// under-occupancy) — both 0 when bucketing is off or never fired.
+    pub bucket_grows: u64,
+    pub bucket_shrinks: u64,
+    /// Exact state repacks run (one per bucket switch) and their cost —
+    /// the overhead side of the E17 trade.
+    pub repacks: u64,
+    pub repack_us_p50: f64,
+    pub repack_us_p99: f64,
+    /// Mean width of the batched decode steps actually executed
+    /// (== `decode_batch` when bucketing is off).  Lower than the batch
+    /// width at low occupancy is the bucketing win (bench E17).
+    pub step_width_mean: f64,
+    /// Speculative draft/verify rounds run across all lanes.
+    pub spec_rounds: u64,
+    /// Draft tokens proposed / accepted (acceptance rate = ratio).
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
+    /// Rounds that restored the pre-draft O(state) snapshot.
+    pub spec_rollbacks: u64,
+    /// Tokens emitted by speculative rounds (vs. 1 per batched step).
+    pub spec_tokens: u64,
+}
+
+/// Schema tag on the wire JSON form (bump on breaking field changes).
+pub const STATS_SCHEMA: &str = "hla-stats/1";
+
+impl ServeStats {
+    /// Mean draft tokens accepted per speculative verify step (0 when no
+    /// speculative rounds ran).  The serial baseline emits exactly 1
+    /// token per step, so `accepted_per_step + 1` ≈ the per-step speedup
+    /// surface.
+    pub fn accepted_per_step(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_rounds as f64
+        }
+    }
+
+    /// Fraction of drafted tokens accepted (0 when nothing was drafted).
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
+    }
+
+    /// Fraction of prefix-cache lookups that seeded a prefill (0 when the
+    /// cache was off or never consulted).
+    pub fn cache_hit_rate(&self) -> f64 {
+        hit_rate(self.cache_hits, self.cache_misses)
+    }
+
+    /// Total bucket switches (grows + shrinks).  Under a healthy
+    /// hysteresis setting this stays far below `steps`; a ratio near 1
+    /// means the shrink debounce is too aggressive for the admission
+    /// churn (raise `--bucket-shrink-after`).
+    pub fn bucket_switches(&self) -> u64 {
+        self.bucket_grows + self.bucket_shrinks
+    }
+
+    /// The TTFT breakdown as a [`Table`] (the reporter benches/CLI print).
+    pub fn ttft_table(&self) -> Table {
+        let mut t = Table::new(&["phase", "p50 ms", "p95 ms", "p99 ms"]);
+        let mut row = |name: &str, p50: f64, p95: f64, p99: f64| {
+            t.row(&[
+                name.to_string(),
+                format!("{:.2}", p50 / 1e3),
+                format!("{:.2}", p95 / 1e3),
+                format!("{:.2}", p99 / 1e3),
+            ]);
+        };
+        row("queue-wait", self.queue_us_p50, self.queue_us_p95, self.queue_us_p99);
+        row("prefill", self.prefill_us_p50, self.prefill_us_p95, self.prefill_us_p99);
+        row(
+            "first-decode",
+            self.first_decode_us_p50,
+            self.first_decode_us_p95,
+            self.first_decode_us_p99,
+        );
+        row("ttft (e2e)", self.ttft_us_p50, self.ttft_us_p95, self.ttft_us_p99);
+        row("ttft (warm-hit)", self.ttft_warm_us_p50, self.ttft_warm_us_p95, self.ttft_warm_us_p99);
+        row("ttft (cold)", self.ttft_cold_us_p50, self.ttft_cold_us_p95, self.ttft_cold_us_p99);
+        t
+    }
+
+    /// The one-line rollup every CLI surface prints — `generate`'s
+    /// end-of-run line, `serve`'s heartbeat, each `hla top` poll.
+    /// Optional subsystems (cache, spec, buckets) only appear once they
+    /// have fired, so the line stays short on a plain engine and counters
+    /// added later get a consumer by extending this one method.
+    pub fn summary_line(&self) -> String {
+        let mut s = format!(
+            "{} req | {} tok | {:.1} tok/s | step p50/p99 {:.2}/{:.2} ms | \
+             ttft p50 {:.1} ms | occ {:.2}",
+            self.completed,
+            self.tokens_out,
+            self.tokens_per_sec,
+            self.step_us_p50 / 1e3,
+            self.step_us_p99 / 1e3,
+            self.ttft_us_p50 / 1e3,
+            self.lane_occupancy,
+        );
+        if self.cache_hits + self.cache_misses > 0 {
+            s.push_str(&format!(
+                " | cache {:.0}% hit ({} tok saved)",
+                self.cache_hit_rate() * 100.0,
+                self.cache_hit_tokens
+            ));
+        }
+        if self.spec_rounds > 0 {
+            s.push_str(&format!(
+                " | spec {:.2} acc/step ({:.0}% rate)",
+                self.accepted_per_step(),
+                self.spec_accept_rate() * 100.0
+            ));
+        }
+        if self.bucket_switches() > 0 {
+            s.push_str(&format!(
+                " | width {:.2} ({}g/{}s, repack p50 {:.0} us)",
+                self.step_width_mean,
+                self.bucket_grows,
+                self.bucket_shrinks,
+                self.repack_us_p50
+            ));
+        }
+        s
+    }
+
+    /// The wire JSON form (the `"stats"` admin reply's payload): every
+    /// struct field flat under its own name, plus the derived rates and
+    /// the [`STATS_SCHEMA`] tag.
+    pub fn to_json(&self) -> Json {
+        let u = |v: u64| Json::num(v as f64);
+        Json::obj(vec![
+            ("schema", Json::str(STATS_SCHEMA)),
+            ("completed", u(self.completed)),
+            ("tokens_out", u(self.tokens_out)),
+            ("steps", u(self.steps)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("step_us_p50", Json::num(self.step_us_p50)),
+            ("step_us_p99", Json::num(self.step_us_p99)),
+            ("ttft_us_p50", Json::num(self.ttft_us_p50)),
+            ("ttft_us_p95", Json::num(self.ttft_us_p95)),
+            ("ttft_us_p99", Json::num(self.ttft_us_p99)),
+            ("queue_us_p50", Json::num(self.queue_us_p50)),
+            ("queue_us_p95", Json::num(self.queue_us_p95)),
+            ("queue_us_p99", Json::num(self.queue_us_p99)),
+            ("prefill_us_p50", Json::num(self.prefill_us_p50)),
+            ("prefill_us_p95", Json::num(self.prefill_us_p95)),
+            ("prefill_us_p99", Json::num(self.prefill_us_p99)),
+            ("first_decode_us_p50", Json::num(self.first_decode_us_p50)),
+            ("first_decode_us_p95", Json::num(self.first_decode_us_p95)),
+            ("first_decode_us_p99", Json::num(self.first_decode_us_p99)),
+            ("prefills", u(self.prefills)),
+            ("prefilled_tokens", u(self.prefilled_tokens)),
+            ("cache_hits", u(self.cache_hits)),
+            ("cache_misses", u(self.cache_misses)),
+            ("cache_inserts", u(self.cache_inserts)),
+            ("cache_evictions", u(self.cache_evictions)),
+            ("cache_hit_tokens", u(self.cache_hit_tokens)),
+            ("cache_resident_bytes", u(self.cache_resident_bytes as u64)),
+            ("ttft_warm_us_p50", Json::num(self.ttft_warm_us_p50)),
+            ("ttft_warm_us_p95", Json::num(self.ttft_warm_us_p95)),
+            ("ttft_warm_us_p99", Json::num(self.ttft_warm_us_p99)),
+            ("ttft_cold_us_p50", Json::num(self.ttft_cold_us_p50)),
+            ("ttft_cold_us_p95", Json::num(self.ttft_cold_us_p95)),
+            ("ttft_cold_us_p99", Json::num(self.ttft_cold_us_p99)),
+            ("latency_us_p50", Json::num(self.latency_us_p50)),
+            ("latency_us_p95", Json::num(self.latency_us_p95)),
+            ("latency_us_p99", Json::num(self.latency_us_p99)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec)),
+            ("state_bytes", u(self.state_bytes as u64)),
+            ("lane_occupancy", Json::num(self.lane_occupancy)),
+            ("bucket_grows", u(self.bucket_grows)),
+            ("bucket_shrinks", u(self.bucket_shrinks)),
+            ("repacks", u(self.repacks)),
+            ("repack_us_p50", Json::num(self.repack_us_p50)),
+            ("repack_us_p99", Json::num(self.repack_us_p99)),
+            ("step_width_mean", Json::num(self.step_width_mean)),
+            ("spec_rounds", u(self.spec_rounds)),
+            ("spec_drafted", u(self.spec_drafted)),
+            ("spec_accepted", u(self.spec_accepted)),
+            ("spec_rollbacks", u(self.spec_rollbacks)),
+            ("spec_tokens", u(self.spec_tokens)),
+            // derived, for consumers that don't want to recompute
+            ("cache_hit_rate", Json::num(self.cache_hit_rate())),
+            ("spec_accept_rate", Json::num(self.spec_accept_rate())),
+            ("accepted_per_step", Json::num(self.accepted_per_step())),
+        ])
+    }
+
+    /// Rebuild a snapshot from its wire JSON form (`hla top`, the test
+    /// client).  Missing fields read as 0 — a newer server may add
+    /// fields, an older one lack them; neither should break the reader.
+    pub fn from_json(j: &Json) -> ServeStats {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let u = |k: &str| f(k) as u64;
+        ServeStats {
+            completed: u("completed"),
+            tokens_out: u("tokens_out"),
+            steps: u("steps"),
+            elapsed_s: f("elapsed_s"),
+            step_us_p50: f("step_us_p50"),
+            step_us_p99: f("step_us_p99"),
+            ttft_us_p50: f("ttft_us_p50"),
+            ttft_us_p95: f("ttft_us_p95"),
+            ttft_us_p99: f("ttft_us_p99"),
+            queue_us_p50: f("queue_us_p50"),
+            queue_us_p95: f("queue_us_p95"),
+            queue_us_p99: f("queue_us_p99"),
+            prefill_us_p50: f("prefill_us_p50"),
+            prefill_us_p95: f("prefill_us_p95"),
+            prefill_us_p99: f("prefill_us_p99"),
+            first_decode_us_p50: f("first_decode_us_p50"),
+            first_decode_us_p95: f("first_decode_us_p95"),
+            first_decode_us_p99: f("first_decode_us_p99"),
+            prefills: u("prefills"),
+            prefilled_tokens: u("prefilled_tokens"),
+            cache_hits: u("cache_hits"),
+            cache_misses: u("cache_misses"),
+            cache_inserts: u("cache_inserts"),
+            cache_evictions: u("cache_evictions"),
+            cache_hit_tokens: u("cache_hit_tokens"),
+            cache_resident_bytes: u("cache_resident_bytes") as usize,
+            ttft_warm_us_p50: f("ttft_warm_us_p50"),
+            ttft_warm_us_p95: f("ttft_warm_us_p95"),
+            ttft_warm_us_p99: f("ttft_warm_us_p99"),
+            ttft_cold_us_p50: f("ttft_cold_us_p50"),
+            ttft_cold_us_p95: f("ttft_cold_us_p95"),
+            ttft_cold_us_p99: f("ttft_cold_us_p99"),
+            latency_us_p50: f("latency_us_p50"),
+            latency_us_p95: f("latency_us_p95"),
+            latency_us_p99: f("latency_us_p99"),
+            tokens_per_sec: f("tokens_per_sec"),
+            state_bytes: u("state_bytes") as usize,
+            lane_occupancy: f("lane_occupancy"),
+            bucket_grows: u("bucket_grows"),
+            bucket_shrinks: u("bucket_shrinks"),
+            repacks: u("repacks"),
+            repack_us_p50: f("repack_us_p50"),
+            repack_us_p99: f("repack_us_p99"),
+            step_width_mean: f("step_width_mean"),
+            spec_rounds: u("spec_rounds"),
+            spec_drafted: u("spec_drafted"),
+            spec_accepted: u("spec_accepted"),
+            spec_rollbacks: u("spec_rollbacks"),
+            spec_tokens: u("spec_tokens"),
+        }
+    }
+
+    /// Prometheus text exposition of the snapshot (`{"stats":
+    /// "prometheus"}` on the wire; travels as a JSON string so the
+    /// protocol stays line-JSON).  Counters as `_total`, gauges plain,
+    /// histogram percentiles as `{quantile="..."}` series.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, v: u64| {
+            out.push_str(&format!("# TYPE hla_{name}_total counter\nhla_{name}_total {v}\n"));
+        };
+        counter("requests_completed", self.completed);
+        counter("tokens_out", self.tokens_out);
+        counter("engine_steps", self.steps);
+        counter("prefills", self.prefills);
+        counter("prefilled_tokens", self.prefilled_tokens);
+        counter("cache_hits", self.cache_hits);
+        counter("cache_misses", self.cache_misses);
+        counter("cache_inserts", self.cache_inserts);
+        counter("cache_evictions", self.cache_evictions);
+        counter("cache_hit_tokens", self.cache_hit_tokens);
+        counter("bucket_grows", self.bucket_grows);
+        counter("bucket_shrinks", self.bucket_shrinks);
+        counter("repacks", self.repacks);
+        counter("spec_rounds", self.spec_rounds);
+        counter("spec_drafted", self.spec_drafted);
+        counter("spec_accepted", self.spec_accepted);
+        counter("spec_rollbacks", self.spec_rollbacks);
+        counter("spec_tokens", self.spec_tokens);
+        let mut gauge = |name: &str, v: f64| {
+            out.push_str(&format!("# TYPE hla_{name} gauge\nhla_{name} {v}\n"));
+        };
+        gauge("elapsed_seconds", self.elapsed_s);
+        gauge("tokens_per_sec", self.tokens_per_sec);
+        gauge("lane_occupancy", self.lane_occupancy);
+        gauge("step_width_mean", self.step_width_mean);
+        gauge("state_bytes", self.state_bytes as f64);
+        gauge("cache_resident_bytes", self.cache_resident_bytes as f64);
+        let mut quant = |name: &str, series: &[(&str, f64)]| {
+            out.push_str(&format!("# TYPE hla_{name}_us summary\n"));
+            for (q, v) in series {
+                out.push_str(&format!("hla_{name}_us{{quantile=\"{q}\"}} {v}\n"));
+            }
+        };
+        quant("step", &[("0.5", self.step_us_p50), ("0.99", self.step_us_p99)]);
+        quant(
+            "ttft",
+            &[("0.5", self.ttft_us_p50), ("0.95", self.ttft_us_p95), ("0.99", self.ttft_us_p99)],
+        );
+        quant(
+            "queue",
+            &[("0.5", self.queue_us_p50), ("0.95", self.queue_us_p95), ("0.99", self.queue_us_p99)],
+        );
+        quant(
+            "prefill",
+            &[
+                ("0.5", self.prefill_us_p50),
+                ("0.95", self.prefill_us_p95),
+                ("0.99", self.prefill_us_p99),
+            ],
+        );
+        quant(
+            "first_decode",
+            &[
+                ("0.5", self.first_decode_us_p50),
+                ("0.95", self.first_decode_us_p95),
+                ("0.99", self.first_decode_us_p99),
+            ],
+        );
+        quant(
+            "ttft_warm",
+            &[
+                ("0.5", self.ttft_warm_us_p50),
+                ("0.95", self.ttft_warm_us_p95),
+                ("0.99", self.ttft_warm_us_p99),
+            ],
+        );
+        quant(
+            "ttft_cold",
+            &[
+                ("0.5", self.ttft_cold_us_p50),
+                ("0.95", self.ttft_cold_us_p95),
+                ("0.99", self.ttft_cold_us_p99),
+            ],
+        );
+        quant(
+            "latency",
+            &[
+                ("0.5", self.latency_us_p50),
+                ("0.95", self.latency_us_p95),
+                ("0.99", self.latency_us_p99),
+            ],
+        );
+        quant("repack", &[("0.5", self.repack_us_p50), ("0.99", self.repack_us_p99)]);
+        out
+    }
+}
+
+/// The live registry one engine replica writes into: lock-free counters
+/// for the tallies, lock-guarded histograms for the latency phases, and
+/// two mirrored gauges (`batch_lanes`, `state_bytes`) the occupancy and
+/// footprint derivations need.  All fields are public — the engine loop
+/// updates them directly on its hot path (an atomic add per event), and
+/// artifact-free tests drive them without an engine.
+#[derive(Debug)]
+pub struct LiveStats {
+    pub started: Instant,
+    /// Batch width of the owning replica (occupancy denominator).
+    pub batch_lanes: Counter,
+    pub completed: Counter,
+    pub tokens_out: Counter,
+    /// Engine cycles that served at least one lane.
+    pub steps: Counter,
+    /// Sum over steps of live lanes served (occupancy numerator).
+    pub occupied_lanes: Counter,
+    /// Batched decode steps executed / sum of their widths.
+    pub batched_steps: Counter,
+    pub width_steps: Counter,
+    pub prefills: Counter,
+    pub prefilled_tokens: Counter,
+    pub bucket_grows: Counter,
+    pub bucket_shrinks: Counter,
+    // gauges mirrored from subsystems that own their accounting
+    pub state_bytes: Counter,
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub cache_inserts: Counter,
+    pub cache_evictions: Counter,
+    pub cache_hit_tokens: Counter,
+    pub cache_resident_bytes: Counter,
+    pub spec_rounds: Counter,
+    pub spec_drafted: Counter,
+    pub spec_accepted: Counter,
+    pub spec_rollbacks: Counter,
+    pub spec_tokens: Counter,
+    // latency phases
+    pub step_hist: SharedHistogram,
+    pub ttft_hist: SharedHistogram,
+    pub latency_hist: SharedHistogram,
+    pub queue_hist: SharedHistogram,
+    pub prefill_hist: SharedHistogram,
+    pub first_decode_hist: SharedHistogram,
+    pub ttft_warm_hist: SharedHistogram,
+    pub ttft_cold_hist: SharedHistogram,
+    pub repack_hist: SharedHistogram,
+}
+
+impl Default for LiveStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LiveStats {
+    pub fn new() -> LiveStats {
+        LiveStats {
+            started: Instant::now(),
+            batch_lanes: Counter::new(),
+            completed: Counter::new(),
+            tokens_out: Counter::new(),
+            steps: Counter::new(),
+            occupied_lanes: Counter::new(),
+            batched_steps: Counter::new(),
+            width_steps: Counter::new(),
+            prefills: Counter::new(),
+            prefilled_tokens: Counter::new(),
+            bucket_grows: Counter::new(),
+            bucket_shrinks: Counter::new(),
+            state_bytes: Counter::new(),
+            cache_hits: Counter::new(),
+            cache_misses: Counter::new(),
+            cache_inserts: Counter::new(),
+            cache_evictions: Counter::new(),
+            cache_hit_tokens: Counter::new(),
+            cache_resident_bytes: Counter::new(),
+            spec_rounds: Counter::new(),
+            spec_drafted: Counter::new(),
+            spec_accepted: Counter::new(),
+            spec_rollbacks: Counter::new(),
+            spec_tokens: Counter::new(),
+            step_hist: SharedHistogram::new(),
+            ttft_hist: SharedHistogram::new(),
+            latency_hist: SharedHistogram::new(),
+            queue_hist: SharedHistogram::new(),
+            prefill_hist: SharedHistogram::new(),
+            first_decode_hist: SharedHistogram::new(),
+            ttft_warm_hist: SharedHistogram::new(),
+            ttft_cold_hist: SharedHistogram::new(),
+            repack_hist: SharedHistogram::new(),
+        }
+    }
+
+    /// A consistent-enough snapshot as of now.  Counters are read
+    /// individually (each is exact; cross-counter skew is bounded by one
+    /// engine cycle), histograms snapshot under their lock.
+    pub fn snapshot(&self) -> ServeStats {
+        Self::assemble(&[self])
+    }
+
+    /// Merge per-replica registries into one fleet-wide snapshot:
+    /// counters add, histograms merge bucket-wise, occupancy and mean
+    /// width merge as ratios of the summed tallies (never as averages of
+    /// averages), elapsed is the longest-lived replica's.
+    pub fn merged(replicas: &[Arc<LiveStats>]) -> ServeStats {
+        let refs: Vec<&LiveStats> = replicas.iter().map(|r| r.as_ref()).collect();
+        Self::assemble(&refs)
+    }
+
+    fn assemble(rs: &[&LiveStats]) -> ServeStats {
+        fn sum(rs: &[&LiveStats], f: impl Fn(&LiveStats) -> &Counter) -> u64 {
+            rs.iter().map(|r| f(r).get()).sum()
+        }
+        fn hist(rs: &[&LiveStats], f: impl Fn(&LiveStats) -> &SharedHistogram) -> Histogram {
+            let mut h = Histogram::new();
+            for r in rs {
+                h.merge(&f(r).snapshot());
+            }
+            h
+        }
+        let step = hist(rs, |r| &r.step_hist);
+        let ttft = hist(rs, |r| &r.ttft_hist);
+        let latency = hist(rs, |r| &r.latency_hist);
+        let queue = hist(rs, |r| &r.queue_hist);
+        let prefill = hist(rs, |r| &r.prefill_hist);
+        let first_decode = hist(rs, |r| &r.first_decode_hist);
+        let warm = hist(rs, |r| &r.ttft_warm_hist);
+        let cold = hist(rs, |r| &r.ttft_cold_hist);
+        let repack = hist(rs, |r| &r.repack_hist);
+        let elapsed_s = rs
+            .iter()
+            .map(|r| r.started.elapsed().as_secs_f64())
+            .fold(0.0, f64::max);
+        let tokens_out = sum(rs, |r| &r.tokens_out);
+        let steps = sum(rs, |r| &r.steps);
+        // occupancy: each replica's denominator is its own steps × width
+        let occ_den: u64 = rs.iter().map(|r| r.steps.get() * r.batch_lanes.get()).sum();
+        let occ_num = sum(rs, |r| &r.occupied_lanes);
+        let batched_steps = sum(rs, |r| &r.batched_steps);
+        let width_steps = sum(rs, |r| &r.width_steps);
+        ServeStats {
+            completed: sum(rs, |r| &r.completed),
+            tokens_out,
+            steps,
+            elapsed_s,
+            step_us_p50: step.percentile_us(50.0),
+            step_us_p99: step.percentile_us(99.0),
+            ttft_us_p50: ttft.percentile_us(50.0),
+            ttft_us_p95: ttft.percentile_us(95.0),
+            ttft_us_p99: ttft.percentile_us(99.0),
+            queue_us_p50: queue.percentile_us(50.0),
+            queue_us_p95: queue.percentile_us(95.0),
+            queue_us_p99: queue.percentile_us(99.0),
+            prefill_us_p50: prefill.percentile_us(50.0),
+            prefill_us_p95: prefill.percentile_us(95.0),
+            prefill_us_p99: prefill.percentile_us(99.0),
+            first_decode_us_p50: first_decode.percentile_us(50.0),
+            first_decode_us_p95: first_decode.percentile_us(95.0),
+            first_decode_us_p99: first_decode.percentile_us(99.0),
+            prefills: sum(rs, |r| &r.prefills),
+            prefilled_tokens: sum(rs, |r| &r.prefilled_tokens),
+            cache_hits: sum(rs, |r| &r.cache_hits),
+            cache_misses: sum(rs, |r| &r.cache_misses),
+            cache_inserts: sum(rs, |r| &r.cache_inserts),
+            cache_evictions: sum(rs, |r| &r.cache_evictions),
+            cache_hit_tokens: sum(rs, |r| &r.cache_hit_tokens),
+            cache_resident_bytes: sum(rs, |r| &r.cache_resident_bytes) as usize,
+            ttft_warm_us_p50: warm.percentile_us(50.0),
+            ttft_warm_us_p95: warm.percentile_us(95.0),
+            ttft_warm_us_p99: warm.percentile_us(99.0),
+            ttft_cold_us_p50: cold.percentile_us(50.0),
+            ttft_cold_us_p95: cold.percentile_us(95.0),
+            ttft_cold_us_p99: cold.percentile_us(99.0),
+            latency_us_p50: latency.percentile_us(50.0),
+            latency_us_p95: latency.percentile_us(95.0),
+            latency_us_p99: latency.percentile_us(99.0),
+            tokens_per_sec: tokens_out as f64 / elapsed_s.max(1e-9),
+            state_bytes: sum(rs, |r| &r.state_bytes) as usize,
+            lane_occupancy: if occ_den == 0 { 0.0 } else { occ_num as f64 / occ_den as f64 },
+            bucket_grows: sum(rs, |r| &r.bucket_grows),
+            bucket_shrinks: sum(rs, |r| &r.bucket_shrinks),
+            repacks: repack.count(),
+            repack_us_p50: repack.percentile_us(50.0),
+            repack_us_p99: repack.percentile_us(99.0),
+            step_width_mean: if batched_steps == 0 {
+                0.0
+            } else {
+                width_steps as f64 / batched_steps as f64
+            },
+            spec_rounds: sum(rs, |r| &r.spec_rounds),
+            spec_drafted: sum(rs, |r| &r.spec_drafted),
+            spec_accepted: sum(rs, |r| &r.spec_accepted),
+            spec_rollbacks: sum(rs, |r| &r.spec_rollbacks),
+            spec_tokens: sum(rs, |r| &r.spec_tokens),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled() -> Arc<LiveStats> {
+        let s = Arc::new(LiveStats::new());
+        s.batch_lanes.set(4);
+        s.completed.add(3);
+        s.tokens_out.add(120);
+        s.steps.add(50);
+        s.occupied_lanes.add(100);
+        s.batched_steps.add(50);
+        s.width_steps.add(150);
+        s.prefills.add(3);
+        s.prefilled_tokens.add(90);
+        s.cache_hits.add(2);
+        s.cache_misses.add(1);
+        s.cache_hit_tokens.add(64);
+        s.spec_rounds.add(10);
+        s.spec_drafted.add(40);
+        s.spec_accepted.add(30);
+        s.spec_tokens.add(40);
+        s.bucket_grows.add(2);
+        s.bucket_shrinks.add(1);
+        s.state_bytes.set(4096);
+        for i in 1..=50u64 {
+            s.step_hist.record_us(100.0 + i as f64);
+            s.repack_hist.record_us(40.0);
+        }
+        for i in 0..3u64 {
+            s.ttft_hist.record_us(5_000.0 + 1_000.0 * i as f64);
+            s.latency_hist.record_us(50_000.0);
+            s.queue_hist.record_us(200.0);
+            s.prefill_hist.record_us(3_000.0);
+            s.first_decode_hist.record_us(1_000.0);
+            s.ttft_cold_hist.record_us(6_000.0);
+        }
+        s
+    }
+
+    #[test]
+    fn snapshot_reflects_live_counters() {
+        let live = filled();
+        let s = live.snapshot();
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.tokens_out, 120);
+        assert_eq!(s.steps, 50);
+        assert_eq!(s.prefilled_tokens, 90);
+        assert!((s.lane_occupancy - 100.0 / 200.0).abs() < 1e-12);
+        assert!((s.step_width_mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.repacks, 50);
+        assert!(s.step_us_p50 > 100.0 && s.step_us_p50 < 160.0);
+        assert!(s.elapsed_s >= 0.0 && s.tokens_per_sec > 0.0);
+        // live: more events move the snapshot
+        live.tokens_out.incr();
+        assert_eq!(live.snapshot().tokens_out, 121);
+    }
+
+    #[test]
+    fn merged_sums_counters_and_merges_histograms() {
+        let a = filled();
+        let b = filled();
+        b.ttft_hist.record_us(100_000.0); // one slow outlier on replica b
+        let m = LiveStats::merged(&[a.clone(), b.clone()]);
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.tokens_out, 240);
+        assert_eq!(m.steps, 100);
+        assert_eq!(m.spec_drafted, 80);
+        // occupancy is a ratio of summed tallies, unchanged for twins
+        assert!((m.lane_occupancy - 0.5).abs() < 1e-12);
+        // the merged p99 sees replica b's outlier
+        assert!(m.ttft_us_p99 > 50_000.0, "p99 {}", m.ttft_us_p99);
+        assert!(m.ttft_us_p50 < 10_000.0, "p50 {}", m.ttft_us_p50);
+        // single-replica merge == snapshot (modulo elapsed jitter)
+        let one = LiveStats::merged(&[a.clone()]);
+        assert_eq!(one.tokens_out, a.snapshot().tokens_out);
+    }
+
+    #[test]
+    fn wire_json_round_trips_every_field() {
+        let s = filled().snapshot();
+        let j = s.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(STATS_SCHEMA));
+        let back = ServeStats::from_json(&j);
+        // the JSON forms must agree exactly — every field survived
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        // and a reparse of the serialized line also survives
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(ServeStats::from_json(&reparsed).to_json().to_string(), j.to_string());
+        // missing fields read as zero, not as an error
+        let sparse = ServeStats::from_json(&Json::parse(r#"{"tokens_out": 7}"#).unwrap());
+        assert_eq!(sparse.tokens_out, 7);
+        assert_eq!(sparse.completed, 0);
+    }
+
+    #[test]
+    fn summary_line_grows_with_active_subsystems() {
+        let plain = ServeStats { completed: 2, tokens_out: 80, ..Default::default() };
+        let line = plain.summary_line();
+        assert!(line.contains("2 req"), "{line}");
+        assert!(!line.contains("cache"), "inactive cache must not clutter: {line}");
+        assert!(!line.contains("spec"), "{line}");
+        assert!(!line.contains("width"), "{line}");
+        let full = filled().snapshot().summary_line();
+        for seg in ["cache", "tok saved", "spec", "acc/step", "width", "repack"] {
+            assert!(full.contains(seg), "missing {seg}: {full}");
+        }
+    }
+
+    #[test]
+    fn prometheus_form_exposes_counters_and_quantiles() {
+        let text = filled().snapshot().to_prometheus();
+        assert!(text.contains("hla_tokens_out_total 120"), "{text}");
+        assert!(text.contains("hla_requests_completed_total 3"), "{text}");
+        assert!(text.contains("hla_ttft_us{quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("# TYPE hla_lane_occupancy gauge"), "{text}");
+        // every line is either a comment or `name value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# ") || line.splitn(2, ' ').count() == 2,
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+}

@@ -1,0 +1,488 @@
+//! Request-span tracing: a lock-free ring of fixed-size span records the
+//! engine loop writes on its hot path, exportable as Chrome trace-event
+//! JSON (`chrome://tracing` / [Perfetto](https://ui.perfetto.dev)).
+//!
+//! ## Design
+//!
+//! The writer is the engine thread (plus, rarely, server threads); the
+//! reader is whoever exports — `generate --trace-out`, the `serve`
+//! flush daemon, a test.  Requirements: recording must cost nanoseconds
+//! and never block, and a reader racing the writer must never see a torn
+//! record.  The ring is a seqlock per slot over plain atomics — no
+//! `unsafe`, no locks:
+//!
+//! - a writer claims a slot by `fetch_add` on a global ticket, then
+//!   stores `2*ticket+1` (odd: in progress) into the slot's `seq`,
+//!   writes the four payload words, and stores `2*ticket+2` (even:
+//!   committed, generation-stamped);
+//! - a reader loads `seq`, skips odd/zero, reads the payload, re-loads
+//!   `seq`, and discards the record if it changed underneath it.
+//!
+//! Every cell is an `AtomicU64`, so a race is at worst a *discarded*
+//! record, never undefined behavior.  When the ring wraps, the oldest
+//! spans are overwritten — a trace is a window onto the tail of the run,
+//! sized by [`TraceCfg::capacity`].
+//!
+//! Per-request sampling hashes the request id through a SplitMix64
+//! finalizer and compares against `sample * 2^64`: a request is either
+//! fully traced or fully untraced (spans from one request never
+//! disappear mid-life), and sampling costs one multiply-free hash on the
+//! untraced path.  Engine-scoped spans (decode steps, repacks) ignore
+//! sampling — there is one per step, not one per request-token.
+
+use std::fs;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Span taxonomy: one variant per engine-cycle stage worth seeing on a
+/// timeline.  The discriminant is packed into the ring record, so keep
+/// variants dense from 0 and append-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Request admitted to a lane (includes session restore if resuming).
+    Admission = 0,
+    /// Prefix-cache probe during admission (instant event; detail = hit tokens).
+    CacheLookup = 1,
+    /// Prompt ingestion — serial or chunked scan (detail = tokens consumed).
+    Prefill = 2,
+    /// One batched decode step across all lanes (detail = batch width).
+    DecodeStep = 3,
+    /// One speculative draft/verify round on a lane (detail = tokens emitted).
+    SpecRound = 4,
+    /// Bucket switch: state repack to a new batch width (detail = new width).
+    Repack = 5,
+    /// Session snapshot on lane retirement (detail = tokens generated).
+    Detach = 6,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::CacheLookup => "cache_lookup",
+            Stage::Prefill => "prefill",
+            Stage::DecodeStep => "decode_step",
+            Stage::SpecRound => "spec_round",
+            Stage::Repack => "repack",
+            Stage::Detach => "detach",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Stage> {
+        Some(match v {
+            0 => Stage::Admission,
+            1 => Stage::CacheLookup,
+            2 => Stage::Prefill,
+            3 => Stage::DecodeStep,
+            4 => Stage::SpecRound,
+            5 => Stage::Repack,
+            6 => Stage::Detach,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded span, times in microseconds since the tracer's epoch.
+/// `lane` is `None` for engine-scoped spans (whole-batch decode steps,
+/// repacks); `dur_us == 0` with [`SpanEvent::instant`] marks an instant
+/// event (cache lookups) rather than a zero-length slice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub stage: Stage,
+    /// Request id, 0 for engine-scoped spans.
+    pub request: u64,
+    pub lane: Option<usize>,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Stage-specific payload (see [`Stage`] docs); saturates at `u32::MAX`.
+    pub detail: u32,
+    instant: bool,
+}
+
+impl SpanEvent {
+    pub fn instant(&self) -> bool {
+        self.instant
+    }
+}
+
+// meta word layout: stage(8) | lane_plus1(16) | instant(1) | detail(32 high)
+const LANE_SHIFT: u32 = 8;
+const INSTANT_BIT: u64 = 1 << 24;
+const DETAIL_SHIFT: u32 = 32;
+
+struct Slot {
+    seq: AtomicU64,
+    request: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+    meta: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            request: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Tracing knobs (`--trace-sample`, ring size).
+#[derive(Debug, Clone)]
+pub struct TraceCfg {
+    /// Fraction of requests traced, in `[0, 1]`.  Engine-scoped spans are
+    /// always recorded while a tracer is attached.
+    pub sample: f64,
+    /// Ring capacity in spans; rounded up to a power of two.  At 5 spans
+    /// per request-token the default (64Ki) holds the tail ~10k tokens.
+    pub capacity: usize,
+}
+
+impl Default for TraceCfg {
+    fn default() -> Self {
+        TraceCfg { sample: 1.0, capacity: 1 << 16 }
+    }
+}
+
+/// The span recorder: a [`TraceCfg`]-sized seqlock ring plus the sampling
+/// threshold and the epoch all timestamps are relative to.  Share behind
+/// an `Arc`; recording takes `&self`.
+pub struct Tracer {
+    slots: Vec<Slot>,
+    mask: u64,
+    next: AtomicU64,
+    threshold: u64,
+    epoch: Instant,
+}
+
+fn splitmix_hash(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Tracer {
+    pub fn new(cfg: &TraceCfg) -> Tracer {
+        let cap = cfg.capacity.max(64).next_power_of_two();
+        let sample = cfg.sample.clamp(0.0, 1.0);
+        let threshold = if sample >= 1.0 {
+            u64::MAX
+        } else {
+            // sample * 2^64, computed without overflow at the top end
+            (sample * 2f64.powi(64)).min(u64::MAX as f64) as u64
+        };
+        Tracer {
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+            mask: (cap - 1) as u64,
+            next: AtomicU64::new(0),
+            threshold,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Is this request in the sampled set?  Deterministic per id, so all
+    /// spans of a request share one fate.
+    pub fn sampled(&self, request: u64) -> bool {
+        self.threshold == u64::MAX || splitmix_hash(request) < self.threshold
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Spans written over the tracer's lifetime (>= capacity means the
+    /// ring wrapped and the oldest were overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    pub fn overwritten(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn write(&self, stage: Stage, request: u64, lane: Option<usize>, start_us: u64, dur_us: u64, instant: bool, detail: u64) {
+        let ticket = self.next.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket & self.mask) as usize];
+        let lane_plus1 = lane.map_or(0, |l| (l + 1).min(u16::MAX as usize)) as u64;
+        let meta = (stage as u64)
+            | (lane_plus1 << LANE_SHIFT)
+            | if instant { INSTANT_BIT } else { 0 }
+            | (detail.min(u32::MAX as u64) << DETAIL_SHIFT);
+        slot.seq.store(2 * ticket + 1, Ordering::Release); // odd: in progress
+        slot.request.store(request, Ordering::Relaxed);
+        slot.start_us.store(start_us, Ordering::Relaxed);
+        slot.dur_us.store(dur_us, Ordering::Relaxed);
+        slot.meta.store(meta, Ordering::Relaxed);
+        slot.seq.store(2 * ticket + 2, Ordering::Release); // even: committed
+    }
+
+    /// Record a request-scoped span that began at `start`; no-op unless
+    /// the request is sampled.
+    pub fn span(&self, stage: Stage, request: u64, lane: usize, start: Instant, detail: u64) {
+        if !self.sampled(request) {
+            return;
+        }
+        let start_us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        let dur_us = self.now_us().saturating_sub(start_us);
+        self.write(stage, request, Some(lane), start_us, dur_us, false, detail);
+    }
+
+    /// Record an engine-scoped span (always recorded while attached).
+    pub fn engine_span(&self, stage: Stage, start: Instant, detail: u64) {
+        let start_us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        let dur_us = self.now_us().saturating_sub(start_us);
+        self.write(stage, 0, None, start_us, dur_us, false, detail);
+    }
+
+    /// Record a request-scoped instant event (a point, not a slice).
+    pub fn instant_event(&self, stage: Stage, request: u64, lane: usize, detail: u64) {
+        if !self.sampled(request) {
+            return;
+        }
+        self.write(stage, request, Some(lane), self.now_us(), 0, true, detail);
+    }
+
+    /// Decode every committed, untorn record, oldest first.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let mut out: Vec<(u64, SpanEvent)> = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let s0 = slot.seq.load(Ordering::Acquire);
+            if s0 == 0 || s0 % 2 == 1 {
+                continue; // never written, or write in progress
+            }
+            let request = slot.request.load(Ordering::Relaxed);
+            let start_us = slot.start_us.load(Ordering::Relaxed);
+            let dur_us = slot.dur_us.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            if slot.seq.load(Ordering::Acquire) != s0 {
+                continue; // torn: a writer lapped us mid-read
+            }
+            let Some(stage) = Stage::from_u8((meta & 0xff) as u8) else {
+                continue;
+            };
+            let lane_plus1 = ((meta >> LANE_SHIFT) & 0xffff) as usize;
+            out.push((
+                s0,
+                SpanEvent {
+                    stage,
+                    request,
+                    lane: lane_plus1.checked_sub(1),
+                    start_us,
+                    dur_us,
+                    detail: (meta >> DETAIL_SHIFT) as u32,
+                    instant: meta & INSTANT_BIT != 0,
+                },
+            ));
+        }
+        out.sort_by_key(|(seq, _)| *seq);
+        out.into_iter().map(|(_, e)| e).collect()
+    }
+
+    /// Chrome trace-event objects for this tracer under process id `pid`
+    /// (one pid per replica).  Engine-scoped spans land on tid 0, lane
+    /// spans on tid lane+1, so Perfetto renders one track per lane.
+    pub fn chrome_events(&self, pid: usize) -> Vec<Json> {
+        let mut events = vec![Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as u32)),
+            ("args", Json::obj(vec![("name", Json::str(format!("replica {pid}")))])),
+        ])];
+        let mut tids_seen = vec![];
+        for e in self.events() {
+            let tid = e.lane.map_or(0, |l| l + 1);
+            if !tids_seen.contains(&tid) {
+                tids_seen.push(tid);
+                let tname = if tid == 0 { "engine".to_string() } else { format!("lane {}", tid - 1) };
+                events.push(Json::obj(vec![
+                    ("name", Json::str("thread_name")),
+                    ("ph", Json::str("M")),
+                    ("pid", Json::num(pid as u32)),
+                    ("tid", Json::num(tid as u32)),
+                    ("args", Json::obj(vec![("name", Json::str(tname))])),
+                ]));
+            }
+            let args = Json::obj(vec![
+                ("request", Json::num(e.request as f64)),
+                ("detail", Json::num(e.detail as f64)),
+            ]);
+            let mut fields = vec![
+                ("name", Json::str(e.stage.name())),
+                ("cat", Json::str(if e.lane.is_some() { "request" } else { "engine" })),
+                ("ph", Json::str(if e.instant { "i" } else { "X" })),
+                ("ts", Json::num(e.start_us as f64)),
+                ("pid", Json::num(pid as u32)),
+                ("tid", Json::num(tid as u32)),
+                ("args", args),
+            ];
+            if e.instant {
+                fields.push(("s", Json::str("t"))); // thread-scoped instant
+            } else {
+                fields.push(("dur", Json::num(e.dur_us as f64)));
+            }
+            events.push(Json::obj(fields));
+        }
+        events
+    }
+}
+
+/// Assemble `{pid, tracer}` pairs into one Chrome trace-event JSON file,
+/// written atomically (tmp + rename) so a live flush never leaves a
+/// half-written file for Perfetto to choke on.
+pub fn write_chrome_trace(path: &Path, tracers: &[(usize, &Tracer)]) -> Result<()> {
+    let mut events = vec![];
+    for (pid, t) in tracers {
+        events.extend(t.chrome_events(*pid));
+    }
+    let doc = Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ]);
+    let tmp = path.with_extension("json.tmp");
+    fs::write(&tmp, doc.to_string()).with_context(|| format!("write {}", tmp.display()))?;
+    fs::rename(&tmp, path).with_context(|| format!("rename to {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer(sample: f64, capacity: usize) -> Tracer {
+        Tracer::new(&TraceCfg { sample, capacity })
+    }
+
+    #[test]
+    fn spans_round_trip_through_the_ring() {
+        let t = tracer(1.0, 256);
+        let start = Instant::now();
+        t.span(Stage::Prefill, 7, 2, start, 33);
+        t.engine_span(Stage::DecodeStep, start, 4);
+        t.instant_event(Stage::CacheLookup, 7, 2, 12);
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].stage, Stage::Prefill);
+        assert_eq!(evs[0].request, 7);
+        assert_eq!(evs[0].lane, Some(2));
+        assert_eq!(evs[0].detail, 33);
+        assert!(!evs[0].instant());
+        assert_eq!(evs[1].stage, Stage::DecodeStep);
+        assert_eq!(evs[1].lane, None);
+        assert_eq!(evs[1].detail, 4);
+        assert_eq!(evs[2].stage, Stage::CacheLookup);
+        assert!(evs[2].instant());
+        assert_eq!(evs[2].dur_us, 0);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest_spans() {
+        let t = tracer(1.0, 64); // min capacity clamps to 64
+        let start = Instant::now();
+        for i in 0..200u64 {
+            t.engine_span(Stage::DecodeStep, start, i);
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 64);
+        assert_eq!(t.recorded(), 200);
+        assert_eq!(t.overwritten(), 200 - 64);
+        // oldest-first order, covering exactly the tail
+        let details: Vec<u32> = evs.iter().map(|e| e.detail).collect();
+        assert_eq!(details, (136..200).map(|i| i as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_proportional() {
+        let t0 = tracer(0.0, 64);
+        let t1 = tracer(1.0, 64);
+        let th = tracer(0.5, 64);
+        let mut hits = 0;
+        for id in 0..1000u64 {
+            assert!(!t0.sampled(id));
+            assert!(t1.sampled(id));
+            if th.sampled(id) {
+                hits += 1;
+            }
+        }
+        assert!((350..=650).contains(&hits), "half-sampling hit {hits}/1000");
+        // unsampled requests record nothing
+        let start = Instant::now();
+        t0.span(Stage::Prefill, 5, 0, start, 1);
+        t0.instant_event(Stage::CacheLookup, 5, 0, 1);
+        assert_eq!(t0.events().len(), 0);
+        // engine spans ignore sampling
+        t0.engine_span(Stage::DecodeStep, start, 1);
+        assert_eq!(t0.events().len(), 1);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_trace_event_json() {
+        let t = tracer(1.0, 64);
+        let start = Instant::now();
+        t.span(Stage::Admission, 3, 0, start, 0);
+        t.span(Stage::Prefill, 3, 0, start, 16);
+        t.engine_span(Stage::DecodeStep, start, 2);
+        t.instant_event(Stage::CacheLookup, 3, 0, 8);
+        let dir = std::env::temp_dir().join(format!("hla_trace_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path, &[(0, &t)]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let mut names = vec![];
+        for e in events {
+            let ph = e.get("ph").and_then(Json::as_str).unwrap();
+            assert!(["X", "i", "M"].contains(&ph), "{ph}");
+            if ph == "X" {
+                assert!(e.get("dur").and_then(Json::as_f64).is_some());
+            }
+            assert!(e.get("pid").and_then(Json::as_f64).is_some());
+            names.push(e.get("name").and_then(Json::as_str).unwrap().to_string());
+        }
+        for want in ["admission", "prefill", "decode_step", "cache_lookup", "process_name"] {
+            assert!(names.iter().any(|n| n == want), "missing {want}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_never_produce_torn_stages() {
+        use std::sync::Arc;
+        let t = Arc::new(tracer(1.0, 1 << 10));
+        let mut handles = vec![];
+        for w in 0..4u64 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                let start = Instant::now();
+                for i in 0..5000u64 {
+                    t.span(Stage::SpecRound, w * 10_000 + i, w as usize, start, i);
+                }
+            }));
+        }
+        // reader races the writers; every decoded record must be coherent
+        for _ in 0..20 {
+            for e in t.events() {
+                assert_eq!(e.stage, Stage::SpecRound);
+                assert!(e.lane.unwrap() < 4);
+                assert_eq!(e.request / 10_000, e.lane.unwrap() as u64);
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.recorded(), 20_000);
+        assert_eq!(t.events().len(), 1 << 10);
+    }
+}

@@ -6,6 +6,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::metrics::ServeStats;
 use crate::util::json::Json;
 
 /// One completed generation with client-side timing.
@@ -155,5 +156,37 @@ impl Client {
                 });
             }
         }
+    }
+
+    /// Send one admin request line and read the single reply line.
+    fn admin(&mut self, req: Json) -> Result<Json> {
+        writeln!(self.writer, "{req}")?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("server closed connection mid-response"));
+        }
+        let msg = Json::parse(&line).map_err(|e| anyhow!("bad server line: {e}"))?;
+        if let Some(err) = msg.get("error").and_then(Json::as_str) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(msg)
+    }
+
+    /// Fetch the server's live, fleet-merged stats snapshot (the `"stats"`
+    /// admin request).  Safe to call mid-generation from a *separate*
+    /// connection; on this connection, call it only between generations.
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        let msg = self.admin(Json::obj(vec![("stats", Json::Bool(true))]))?;
+        let stats = msg.get("stats").ok_or_else(|| anyhow!("stats reply missing \"stats\""))?;
+        Ok(ServeStats::from_json(stats))
+    }
+
+    /// Fetch the stats snapshot rendered as Prometheus exposition text.
+    pub fn stats_prometheus(&mut self) -> Result<String> {
+        let msg = self.admin(Json::obj(vec![("stats", Json::str("prometheus"))]))?;
+        msg.get("stats_text")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("stats reply missing \"stats_text\""))
     }
 }

@@ -50,11 +50,23 @@
 //!     sessions always bypass the cache (their restored state already
 //!     encodes private history).
 //!
+//! Stats extension (requires serving with a live registry, see
+//! [`serve_full`]; an admin request, not a generation — no tokens flow):
+//!   * `{"stats": true}` — one-line reply `{"stats": {...}, "replicas": N}`
+//!     where the payload is the [`ServeStats`] wire JSON form
+//!     ([`ServeStats::to_json`]), merged across every replica's live
+//!     registry *as of now* — issue it mid-generation from a second
+//!     connection and the counters are current, not end-of-run.
+//!   * `{"stats": "prometheus"}` — same snapshot as Prometheus text
+//!     exposition, carried in `{"stats_text": "...", "replicas": N}` so
+//!     the protocol stays one JSON object per line.
+//!
 //! Error replies are one-line objects: `{"error": "<reason>"}` — sent for
 //! malformed JSON, resume/fork without a session store, `fork_of` without
-//! a `"session"` id, unknown sessions, and out-of-range ids.  Session ids
-//! are JSON numbers and must be integers in `[0, 2^53)` — larger values
-//! do not survive the f64 round-trip and are rejected.
+//! a `"session"` id, unknown sessions, out-of-range ids, and `stats`
+//! requests against a server without a registry.  Session ids are JSON
+//! numbers and must be integers in `[0, 2^53)` — larger values do not
+//! survive the f64 round-trip and are rejected.
 //!
 //! The listener accepts on a std TcpListener; each connection gets a
 //! handler thread that submits to the [`Router`] and forwards token events
@@ -72,9 +84,17 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::router::Router;
 use crate::coordinator::{FinishReason, GenRequest};
+use crate::metrics::{LiveStats, ServeStats};
 use crate::model::sampler::SamplerCfg;
 use crate::session::SessionStore;
 use crate::util::json::Json;
+
+/// The observability handles a server exposes: one live registry per
+/// engine replica (index-aligned with the router's replicas).  The
+/// `"stats"` admin request merges them into one fleet-wide snapshot.
+pub struct ServeObs {
+    pub stats: Vec<Arc<LiveStats>>,
+}
 
 /// Serve until `stop` is set (stateless: no session snapshot/resume).
 /// Returns the bound address immediately via the callback so tests can
@@ -98,6 +118,19 @@ pub fn serve_sessions(
     stop: Arc<AtomicBool>,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> Result<()> {
+    serve_full(addr, router, sessions, None, stop, on_bound)
+}
+
+/// [`serve_sessions`] with the observability handles: pass the replicas'
+/// live registries ([`ServeObs`]) to enable the `"stats"` admin request.
+pub fn serve_full(
+    addr: &str,
+    router: Arc<Router>,
+    sessions: Option<Arc<SessionStore>>,
+    obs: Option<Arc<ServeObs>>,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
@@ -106,11 +139,12 @@ pub fn serve_sessions(
             Ok((stream, _)) => {
                 let router = router.clone();
                 let sessions = sessions.clone();
+                let obs = obs.clone();
                 // handlers are detached: they exit when their client hangs
                 // up (read_line returns 0), so shutdown never blocks on a
                 // connection that is idle but still open.
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &router, sessions.as_deref());
+                    let _ = handle_conn(stream, &router, sessions.as_deref(), obs.as_deref());
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -122,7 +156,12 @@ pub fn serve_sessions(
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, router: &Router, sessions: Option<&SessionStore>) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router,
+    sessions: Option<&SessionStore>,
+    obs: Option<&ServeObs>,
+) -> Result<()> {
     let peer = stream.peer_addr()?;
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -131,7 +170,7 @@ fn handle_conn(stream: TcpStream, router: &Router, sessions: Option<&SessionStor
         if line.trim().is_empty() {
             continue;
         }
-        match handle_request(&line, router, sessions, &mut writer) {
+        match handle_request(&line, router, sessions, obs, &mut writer) {
             Ok(()) => {}
             Err(e) => {
                 let err = Json::obj(vec![("error", Json::str(e.to_string()))]);
@@ -140,6 +179,29 @@ fn handle_conn(stream: TcpStream, router: &Router, sessions: Option<&SessionStor
         }
     }
     log::debug!("connection from {peer} closed");
+    Ok(())
+}
+
+/// The `"stats"` admin request: merge every replica's live registry and
+/// reply in the requested form.  One line out, no token stream.
+fn handle_stats(fmt: &Json, obs: Option<&ServeObs>, writer: &mut TcpStream) -> Result<()> {
+    let obs = obs.ok_or_else(|| anyhow!("stats: serving without a live metrics registry"))?;
+    let merged: ServeStats = LiveStats::merged(&obs.stats);
+    let replicas = Json::num(obs.stats.len() as f64);
+    let msg = match fmt {
+        Json::Bool(true) => {
+            Json::obj(vec![("stats", merged.to_json()), ("replicas", replicas)])
+        }
+        Json::Str(s) if s == "json" => {
+            Json::obj(vec![("stats", merged.to_json()), ("replicas", replicas)])
+        }
+        Json::Str(s) if s == "prometheus" => Json::obj(vec![
+            ("stats_text", Json::str(merged.to_prometheus())),
+            ("replicas", replicas),
+        ]),
+        other => return Err(anyhow!("stats: want true, \"json\" or \"prometheus\", got {other}")),
+    };
+    writeln!(writer, "{msg}")?;
     Ok(())
 }
 
@@ -160,9 +222,14 @@ fn handle_request(
     line: &str,
     router: &Router,
     sessions: Option<&SessionStore>,
+    obs: Option<&ServeObs>,
     writer: &mut TcpStream,
 ) -> Result<()> {
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+    // admin requests short-circuit before any generation fields parse
+    if let Some(fmt) = req.get("stats") {
+        return handle_stats(fmt, obs, writer);
+    }
     let prompt = req.get("prompt").and_then(Json::as_str).unwrap_or("").as_bytes().to_vec();
     let max_tokens = req.get("max_tokens").and_then(Json::as_usize).unwrap_or(32).clamp(1, 4096);
     // seeds ride in JSON numbers like ids do, so they get the same exact-

@@ -1,0 +1,56 @@
+//! The committed perf trajectory stays loadable: every `BENCH_*.json`
+//! at the repo root must validate against schema `hla-bench/1`.
+//!
+//! This is the reader-side half of the contract `bench::report` writes
+//! under — a bench that emits a malformed or NaN-bearing report fails
+//! here (and in CI) instead of silently rotting the trajectory.
+
+use hla::bench::report::{load, validate, BENCH_SCHEMA};
+use hla::util::json::Json;
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+#[test]
+fn committed_bench_reports_validate() {
+    let mut found = vec![];
+    for entry in std::fs::read_dir(repo_root()).unwrap() {
+        let path = entry.unwrap().path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            let j = load(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(j.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA), "{name}");
+            found.push(name.to_string());
+        }
+    }
+    // the serving and observability trajectories ship with the repo
+    for want in ["BENCH_e8.json", "BENCH_e18.json"] {
+        assert!(found.iter().any(|n| n == want), "missing {want} (found {found:?})");
+    }
+}
+
+#[test]
+fn validator_rejects_what_ci_must_catch() {
+    // the failure modes the CI gate exists for: truncated writes, NaN
+    // metrics, schema drift
+    assert!(validate(&Json::parse("{}").unwrap()).is_err());
+    let nan = r#"{"schema": "hla-bench/1", "bench": "x", "title": "t",
+                  "created_unix_s": 1, "cases": [{"name": "c", "metrics": {"m": 1}}]}"#;
+    let mut j = Json::parse(nan).unwrap();
+    validate(&j).unwrap();
+    // surgically corrupt one metric to a non-finite value
+    if let Json::Obj(m) = &mut j {
+        if let Some(Json::Arr(cases)) = m.get_mut("cases") {
+            if let Json::Obj(c) = &mut cases[0] {
+                if let Some(Json::Obj(metrics)) = c.get_mut("metrics") {
+                    metrics.insert("m".into(), Json::Num(f64::NAN));
+                }
+            }
+        }
+    }
+    assert!(validate(&j).is_err(), "NaN metric must fail validation");
+    // schema drift
+    let drifted = nan.replace("hla-bench/1", "hla-bench/2");
+    assert!(validate(&Json::parse(&drifted).unwrap()).is_err());
+}

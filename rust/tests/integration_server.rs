@@ -4,8 +4,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 
 use hla::coordinator::router::{RoutePolicy, Router};
-use hla::coordinator::{spawn_engine, SchedPolicy};
-use hla::server::{client::Client, serve};
+use hla::coordinator::{spawn_engine, spawn_engine_full, EngineOpts, SchedPolicy};
+use hla::metrics::trace::write_chrome_trace;
+use hla::metrics::{LiveStats, TraceCfg, Tracer};
+use hla::prefill::PrefillCfg;
+use hla::server::{client::Client, serve, serve_full, ServeObs};
 
 fn have_artifacts() -> bool {
     std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).exists()
@@ -86,4 +89,95 @@ fn server_rejects_garbage_gracefully() {
     stop.store(true, Ordering::Relaxed);
     server_handle.join().unwrap();
     engine_handle.join().unwrap().unwrap();
+}
+
+/// Observability is read-only: a fully-sampled tracer plus a live registry
+/// must not perturb a single streamed byte, the `"stats"` request must
+/// reconcile with what the clients saw, and the exported Chrome trace must
+/// cover the engine cycle end to end.
+#[test]
+fn traced_server_streams_identical_and_serves_live_stats() {
+    if !have_artifacts() {
+        return;
+    }
+    let artifacts = || concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string();
+    let prompts = ["observe the engine", "trace me twice", "a third request"];
+
+    // one serve pass; returns the streamed tokens per prompt
+    let run = |obs: Option<(Arc<LiveStats>, Arc<Tracer>)>| -> (Vec<Vec<u8>>, Option<String>) {
+        let (stats, tracer) = match &obs {
+            Some((s, t)) => (Some(s.clone()), Some(t.clone())),
+            None => (None, None),
+        };
+        let (tx, engine_handle) = spawn_engine_full(
+            artifacts(),
+            "micro".into(),
+            EngineOpts {
+                policy: Some(SchedPolicy::PrefillFirst),
+                seed: 0,
+                // scan prefill in both runs so Prefill spans fire in the
+                // traced one (and the byte-compare stays apples-to-apples)
+                prefill: Some(PrefillCfg::scan(8, 1)),
+                stats: stats.clone(),
+                tracer,
+                ..Default::default()
+            },
+        );
+        let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let stop2 = stop.clone();
+        let serve_obs = stats.map(|s| Arc::new(ServeObs { stats: vec![s] }));
+        let server_handle = std::thread::spawn(move || {
+            serve_full("127.0.0.1:0", router, None, serve_obs, stop2, move |addr| {
+                addr_tx.send(addr).unwrap();
+            })
+            .unwrap();
+        });
+        let addr = addr_rx.recv().unwrap().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        let streams: Vec<Vec<u8>> =
+            prompts.iter().map(|p| client.generate(p, 8, 0.0, None).unwrap().tokens).collect();
+        // live snapshot while the server is still up, on a fresh connection
+        let prom = if obs.is_some() {
+            let mut admin = Client::connect(&addr).unwrap();
+            let snap = admin.stats().unwrap();
+            assert_eq!(snap.completed as usize, prompts.len());
+            let streamed: usize = streams.iter().map(Vec::len).sum();
+            assert_eq!(snap.tokens_out as usize, streamed, "registry vs streamed tokens");
+            assert!(snap.steps > 0 && snap.elapsed_s > 0.0);
+            Some(admin.stats_prometheus().unwrap())
+        } else {
+            None
+        };
+        drop(client);
+        stop.store(true, Ordering::Relaxed);
+        server_handle.join().unwrap();
+        engine_handle.join().unwrap().unwrap();
+        (streams, prom)
+    };
+
+    let stats = Arc::new(LiveStats::new());
+    let tracer = Arc::new(Tracer::new(&TraceCfg { sample: 1.0, capacity: 1 << 12 }));
+    let (traced, prom) = run(Some((stats.clone(), tracer.clone())));
+    let (bare, _) = run(None);
+    assert_eq!(traced, bare, "tracing at sample=1.0 must not perturb streams");
+
+    let prom = prom.unwrap();
+    assert!(prom.contains("hla_tokens_out_total"), "{prom}");
+    assert!(prom.contains("hla_step_us{quantile="), "{prom}");
+
+    // the trace covers admission -> prefill -> decode for every request
+    let events = tracer.events();
+    let stage_count = |s: hla::metrics::Stage| events.iter().filter(|e| e.stage == s).count();
+    assert_eq!(stage_count(hla::metrics::Stage::Admission), prompts.len());
+    assert_eq!(stage_count(hla::metrics::Stage::Prefill), prompts.len());
+    assert!(stage_count(hla::metrics::Stage::DecodeStep) > 0);
+    let dir = std::env::temp_dir().join(format!("hla-trace-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("serve.trace.json");
+    write_chrome_trace(&path, &[(0, &tracer)]).unwrap();
+    let doc = hla::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert!(doc.get("traceEvents").unwrap().as_arr().unwrap().len() > prompts.len());
+    std::fs::remove_dir_all(&dir).ok();
 }

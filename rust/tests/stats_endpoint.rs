@@ -1,0 +1,169 @@
+//! Integration: the `"stats"` admin request against a live server,
+//! artifact-free.
+//!
+//! A fake engine thread stands in for the real `EngineLoop` (no artifacts
+//! needed): it drains `GenRequest`s from a real `Router`, streams tokens
+//! with a small delay, and drives a real `LiveStats` registry exactly the
+//! way the engine does.  That lets the test poll the `"stats"` endpoint
+//! from a second connection *while* the first is mid-stream and pin the
+//! contract the CLI `hla top` view relies on: snapshots are readable at
+//! any time, counters are monotone, and the final snapshot reconciles
+//! with what the client actually received.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use hla::coordinator::router::{RoutePolicy, Router};
+use hla::coordinator::{FinishReason, GenRequest, TokenEvent};
+use hla::metrics::LiveStats;
+use hla::server::client::Client;
+use hla::server::{serve, serve_full, ServeObs};
+
+/// Fake engine: one token every `delay` per request, registry updated in
+/// place per token like the real loop's `step()` tail.
+fn spawn_fake_engine(
+    stats: Arc<LiveStats>,
+    delay: Duration,
+) -> (mpsc::Sender<GenRequest>, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<GenRequest>();
+    let handle = std::thread::spawn(move || {
+        stats.batch_lanes.set(1);
+        while let Ok(req) = rx.recv() {
+            for i in 0..req.max_new_tokens {
+                std::thread::sleep(delay);
+                let tok = b'a' + (i % 26) as u8;
+                if req.events.send(TokenEvent::token(req.id, tok)).is_err() {
+                    break;
+                }
+                stats.tokens_out.incr();
+                stats.steps.incr();
+                stats.occupied_lanes.add(1);
+                stats.width_steps.add(1);
+                stats.batched_steps.incr();
+                stats.step_hist.record(delay);
+            }
+            let _ = req.events.send(TokenEvent::finished(req.id, FinishReason::Length));
+            stats.completed.incr();
+        }
+    });
+    (tx, handle)
+}
+
+fn start_server(
+    obs: Option<Arc<ServeObs>>,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+) -> (String, std::thread::JoinHandle<()>) {
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        serve_full("127.0.0.1:0", router, None, obs, stop2, move |addr| {
+            addr_tx.send(addr).unwrap();
+        })
+        .unwrap();
+    });
+    (addr_rx.recv().unwrap().to_string(), handle)
+}
+
+#[test]
+fn stats_request_is_live_monotone_and_consistent() {
+    const TOKENS: usize = 40;
+    let stats = Arc::new(LiveStats::new());
+    let (tx, engine) = spawn_fake_engine(stats.clone(), Duration::from_millis(2));
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    let stop = Arc::new(AtomicBool::new(false));
+    let obs = Arc::new(ServeObs { stats: vec![stats] });
+    let (addr, server) = start_server(Some(obs), router, stop.clone());
+
+    // client A streams on its own thread...
+    let addr2 = addr.clone();
+    let streamer = std::thread::spawn(move || {
+        let mut c = Client::connect(&addr2).unwrap();
+        c.generate("stream me", TOKENS, 0.0, None).unwrap()
+    });
+
+    // ...while client B polls the stats endpoint on a second connection
+    let mut admin = Client::connect(&addr).unwrap();
+    let mut polled = vec![];
+    while !streamer.is_finished() {
+        let snap = admin.stats().unwrap();
+        assert!(
+            snap.tokens_out as usize <= TOKENS,
+            "registry ran ahead of the stream: {}",
+            snap.tokens_out
+        );
+        polled.push(snap.tokens_out);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let done = streamer.join().unwrap();
+    assert_eq!(done.tokens.len(), TOKENS);
+
+    // counters only ever move forward
+    assert!(polled.windows(2).all(|w| w[0] <= w[1]), "non-monotone polls: {polled:?}");
+    // ~80ms of streaming polled at 5ms: some poll must land mid-stream
+    assert!(polled.iter().any(|&t| t > 0 && (t as usize) < TOKENS), "no mid-stream snapshot: {polled:?}");
+
+    // the final snapshot reconciles with what the client received
+    let fin = admin.stats().unwrap();
+    assert_eq!(fin.tokens_out as usize, TOKENS);
+    assert_eq!(fin.completed, 1);
+    assert_eq!(fin.steps as usize, TOKENS);
+    assert!(fin.elapsed_s > 0.0);
+    assert!(fin.step_us_p50 > 0.0, "step histogram flowed through the snapshot");
+
+    // prometheus form over the same registry
+    let text = admin.stats_prometheus().unwrap();
+    assert!(text.contains(&format!("hla_tokens_out_total {TOKENS}")), "{text}");
+    assert!(text.contains("hla_step_us{quantile=\"0.5\"}"), "{text}");
+
+    drop(admin);
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    engine.join().unwrap();
+}
+
+#[test]
+fn stats_request_without_registry_errors_and_bad_format_rejected() {
+    let stats = Arc::new(LiveStats::new());
+    let (tx, engine) = spawn_fake_engine(stats.clone(), Duration::from_millis(1));
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // a server without observability handles refuses the request...
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let router2 = router.clone();
+    let server = std::thread::spawn(move || {
+        serve("127.0.0.1:0", router2, stop2, move |addr| {
+            addr_tx.send(addr).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    let err = c.stats().unwrap_err().to_string();
+    assert!(err.contains("without a live metrics registry"), "{err}");
+    // ...but keeps serving generations on the same connection afterwards
+    let done = c.generate("still alive", 3, 0.0, None).unwrap();
+    assert_eq!(done.tokens.len(), 3);
+    drop(c);
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+
+    // a server with handles rejects an unknown stats format
+    let stop = Arc::new(AtomicBool::new(false));
+    let obs = Arc::new(ServeObs { stats: vec![stats] });
+    let (addr, server) = start_server(Some(obs), router, stop.clone());
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+        writeln!(sock, "{}", r#"{"stats": "yaml"}"#).unwrap();
+        let mut line = String::new();
+        BufReader::new(sock.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "{line}");
+    }
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    engine.join().unwrap();
+}
