@@ -107,7 +107,7 @@ fn main() {
 
     let mut dst = StatePool::new(&cfg);
     let s = bench_budget(0.5, || {
-        attach(&snap, &mut dst, 1);
+        attach(&snap, &mut dst, 1).expect("same config, fingerprints match");
         black_box(&dst);
     });
     table.row(&[

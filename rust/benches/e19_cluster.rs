@@ -1,0 +1,218 @@
+//! E19 — cluster migration: what does it cost to move a live
+//! conversation between replicas, and what would the KV-cache
+//! alternative cost?
+//!
+//! The paper's serving claim (Thm 3.1) is that HLA decode state is
+//! constant-size per sequence.  Cluster mode leans on that: session
+//! migration is one `detach_session` + `attach_session` round-trip
+//! carrying a few-KB CRC-framed snapshot, independent of how long the
+//! conversation has run.  A KV-cache transformer would ship
+//! `kv_cache_nbytes(context)` — linear in context — to do the same.
+//!
+//! Measured here, all over real loopback TCP with the real wire servers:
+//!   snapshot-migration   detach+attach round-trips between two live
+//!                        fixture replicas (p50/p99, plus frame bytes)
+//!   kv-transfer-<ctx>    streaming the equivalent KV cache at context
+//!                        1k/4k/16k/64k through a socket (p50/p99, bytes)
+//!
+//! Emits `BENCH_e19.json` (schema hla-bench/1) at the repo root.
+//! Artifact-free; runs everywhere CI does.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use hla::bench::{banner, black_box, BenchReport};
+use hla::cluster::{fixture_identity, spawn_fixture_engine};
+use hla::coordinator::router::{RoutePolicy, Router};
+use hla::metrics::{LiveStats, Table};
+use hla::server::client::Client;
+use hla::server::{serve_cluster, ServeObs};
+use hla::session::SessionStore;
+use hla::testing::fixtures::{build_model_full, ModelShape};
+
+const SEED: u64 = 19;
+const SESSION: u64 = 1;
+const MIGRATIONS: usize = 200;
+const KV_CONTEXTS: [usize; 4] = [1024, 4096, 16384, 65536];
+const KV_ITERS: usize = 12;
+
+fn percentile_us(sorted: &[Duration], p: f64) -> f64 {
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx].as_secs_f64() * 1e6
+}
+
+/// One in-process fixture replica behind the real cluster wire server.
+fn spawn_replica() -> String {
+    let model = build_model_full("hla2", &ModelShape::default(), SEED);
+    let identity = Arc::new(fixture_identity(&model));
+    let store = Arc::new(SessionStore::in_memory(64));
+    let stats = Arc::new(LiveStats::new());
+    let (tx, _engine) = spawn_fixture_engine(model, store.clone(), stats.clone());
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    let obs = Arc::new(ServeObs { stats: vec![stats] });
+    let stop = Arc::new(AtomicBool::new(false));
+    let (atx, arx) = mpsc::channel();
+    std::thread::spawn(move || {
+        serve_cluster("127.0.0.1:0", router, Some(store), Some(obs), Some(identity), stop, |a| {
+            atx.send(a.to_string()).unwrap();
+        })
+        .unwrap();
+    });
+    arx.recv().unwrap()
+}
+
+/// A byte sink that acks with one byte once the sender's stream closes —
+/// so a "transfer" is measured to full delivery, not to the last
+/// buffered write.
+fn spawn_sink() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { return };
+            std::thread::spawn(move || {
+                let mut sink = [0u8; 64 * 1024];
+                loop {
+                    match stream.read(&mut sink) {
+                        Ok(0) => break,
+                        Ok(_) => {}
+                        Err(_) => return,
+                    }
+                }
+                let _ = stream.write_all(&[1]);
+            });
+        }
+    });
+    addr
+}
+
+fn timed_transfer(addr: &str, payload: &[u8]) -> Duration {
+    let t0 = Instant::now();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.write_all(payload).unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut ack = [0u8; 1];
+    stream.read_exact(&mut ack).unwrap();
+    t0.elapsed()
+}
+
+fn main() {
+    banner("E19", "cluster session migration vs the O(context) KV-cache alternative");
+
+    let a_addr = spawn_replica();
+    let b_addr = spawn_replica();
+
+    // put a real conversation on replica A: one session-tagged turn
+    {
+        let mut stream = TcpStream::connect(&a_addr).unwrap();
+        writeln!(
+            stream,
+            "{{\"prompt\": \"higher-order linear attention\", \"max_tokens\": 32, \
+             \"temperature\": 0, \"session\": {SESSION}}}"
+        )
+        .unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = std::io::BufRead::read_line(&mut reader, &mut line).unwrap();
+            assert!(n > 0, "replica closed mid-generation while seeding the session");
+            assert!(!line.contains("\"error\""), "seeding generation failed: {line}");
+            if line.contains("\"done\":true") {
+                break;
+            }
+        }
+    }
+
+    let mut ca = Client::connect_timeout(&a_addr, Duration::from_secs(2)).unwrap();
+    let mut cb = Client::connect_timeout(&b_addr, Duration::from_secs(2)).unwrap();
+
+    // the migration loop: A exports (keeping its copy), B imports — the
+    // exact control-plane path the front-end's failover takes
+    let mut detach = Vec::with_capacity(MIGRATIONS);
+    let mut attach = Vec::with_capacity(MIGRATIONS);
+    let mut total = Vec::with_capacity(MIGRATIONS);
+    let mut frame_bytes = 0usize;
+    for _ in 0..MIGRATIONS {
+        let t0 = Instant::now();
+        let bytes = ca.detach_session(SESSION, true).unwrap();
+        let t1 = Instant::now();
+        let sid = cb.attach_session(&bytes).unwrap();
+        let t2 = Instant::now();
+        assert_eq!(sid, SESSION);
+        frame_bytes = bytes.len();
+        detach.push(t1 - t0);
+        attach.push(t2 - t1);
+        total.push(t2 - t0);
+        black_box(bytes);
+    }
+    detach.sort();
+    attach.sort();
+    total.sort();
+
+    let mut report = BenchReport::new(
+        "e19",
+        "cluster mode: constant-size snapshot migration vs O(context) KV transfer",
+    );
+    report.case(
+        "snapshot-migration",
+        &[
+            ("bytes", frame_bytes as f64),
+            ("detach_p50_us", percentile_us(&detach, 0.50)),
+            ("detach_p99_us", percentile_us(&detach, 0.99)),
+            ("attach_p50_us", percentile_us(&attach, 0.50)),
+            ("attach_p99_us", percentile_us(&attach, 0.99)),
+            ("migrate_p50_us", percentile_us(&total, 0.50)),
+            ("migrate_p99_us", percentile_us(&total, 0.99)),
+        ],
+    );
+
+    let mut table = Table::new(&["transfer", "bytes", "p50 us", "p99 us", "vs snapshot"]);
+    table.row(&[
+        "snapshot (any ctx)".into(),
+        frame_bytes.to_string(),
+        format!("{:.0}", percentile_us(&total, 0.50)),
+        format!("{:.0}", percentile_us(&total, 0.99)),
+        "1.0x".into(),
+    ]);
+
+    // the counterfactual: stream the KV cache a same-shape softmax
+    // transformer would need at each context length
+    let cfg = build_model_full("hla2", &ModelShape::default(), SEED).cfg.clone();
+    let sink = spawn_sink();
+    for ctx in KV_CONTEXTS {
+        let nbytes = cfg.kv_cache_nbytes(ctx);
+        let payload = vec![0u8; nbytes];
+        let mut times = Vec::with_capacity(KV_ITERS);
+        for _ in 0..KV_ITERS {
+            times.push(timed_transfer(&sink, &payload));
+        }
+        times.sort();
+        let ratio = nbytes as f64 / frame_bytes as f64;
+        report.case(
+            &format!("kv-transfer-{ctx}"),
+            &[
+                ("context", ctx as f64),
+                ("bytes", nbytes as f64),
+                ("transfer_p50_us", percentile_us(&times, 0.50)),
+                ("transfer_p99_us", percentile_us(&times, 0.99)),
+                ("bytes_vs_snapshot", ratio),
+            ],
+        );
+        table.row(&[
+            format!("kv @ {ctx} ctx"),
+            nbytes.to_string(),
+            format!("{:.0}", percentile_us(&times, 0.50)),
+            format!("{:.0}", percentile_us(&times, 0.99)),
+            format!("{ratio:.0}x"),
+        ]);
+    }
+    print!("{}", table.render());
+
+    let path = report.write_repo_root().expect("writing BENCH_e19.json");
+    println!("report -> {}", path.display());
+}

@@ -6,6 +6,7 @@
 //!   train      run the AOT train_step loop (E10 driver)
 //!   generate   one-shot generation through the coordinator
 //!   serve      TCP serving frontend over N engine replicas
+//!   router     cluster front-end over N `hla serve` replica processes
 //!   top        poll a serving fleet's live stats (the "stats" request)
 //!   sessions   list/inspect/evict spilled session snapshots
 
@@ -33,7 +34,7 @@ use crate::util::human_bytes;
 
 pub const USAGE: &str = "\
 hla — Higher-order Linear Attention runtime
-usage: hla <info|selftest|train|generate|serve|top|sessions> [--flags]
+usage: hla <info|selftest|train|generate|serve|router|top|sessions> [--flags]
 common flags: --artifacts DIR --model NAME --seed N --config FILE.json
 train:    --steps N --lr F --warmup N --checkpoint PATH
 generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
@@ -53,6 +54,13 @@ serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
           with \"spec\": true on the wire)
           --trace-out PATH.json --trace-sample P  (request-span tracing;
           P in [0,1] picks which requests record spans, default 1)
+          --fixture true  (artifact-free fixture model with full session
+          support — the cluster-mode replica; share --seed across the
+          fleet so failover replays are byte-identical)
+router:   --addr HOST:PORT --replicas H:P,H:P,...  (the replica fleet)
+          --route POLICY --health-interval SECS  (probe period; 3 missed
+          probes mark a replica dead and its sessions re-home)
+          --drain H:P  (evacuate that replica's sessions at startup)
 top:      --addr HOST:PORT --interval SECS --count N  (0 = forever)
 sessions: <list|inspect|evict> --spill-dir DIR [--session-id N]";
 
@@ -71,6 +79,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "train" => cmd_train(&cfg),
         "generate" => cmd_generate(&cfg),
         "serve" => cmd_serve(&cfg),
+        "router" => cmd_router(&cfg),
         "top" => cmd_top(&cfg),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -300,6 +309,9 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &RunConfig) -> Result<()> {
+    if cfg.fixture {
+        return cmd_serve_fixture(cfg);
+    }
     // fail fast on a bad --checkpoint: the replicas load it inside their
     // own threads, where an error would only surface at join (i.e. at
     // shutdown) while the listener keeps accepting doomed requests.
@@ -444,6 +456,101 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         let _ = h.join();
     }
     Ok(())
+}
+
+/// `hla serve --fixture true` — the cluster-mode replica: the pure-Rust
+/// fixture model behind the full wire protocol (sessions, stats, and the
+/// control-plane verbs), no artifact directory needed.  Every fleet
+/// member must share `--seed` so a failover replay on a different
+/// process continues the stream byte-for-byte.
+fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
+    use crate::cluster::{fixture_identity, spawn_fixture_engine};
+    use crate::testing::fixtures::{build_model_full, ModelShape};
+
+    let store = Arc::new(SessionStore::new(StoreCfg {
+        capacity: cfg.session_capacity,
+        spill_dir: cfg.spill_dir.clone().map(std::path::PathBuf::from),
+    }));
+    let shape = ModelShape::default();
+    let mut senders = vec![];
+    let mut handles = vec![];
+    let mut registries = vec![];
+    let mut identity = None;
+    for _ in 0..cfg.replicas.max(1) {
+        // identical weights in every engine (same seed): a failover
+        // replay may land on any of them and must continue the stream
+        let model = build_model_full("hla2", &shape, cfg.seed);
+        if identity.is_none() {
+            identity = Some(Arc::new(fixture_identity(&model)));
+        }
+        let stats = Arc::new(LiveStats::new());
+        let (tx, handle) = spawn_fixture_engine(model, store.clone(), stats.clone());
+        senders.push(tx);
+        handles.push(handle);
+        registries.push(stats);
+    }
+    let identity = identity.expect("at least one engine spawns");
+    let router = Arc::new(Router::new(senders, cfg.route));
+    let stop = Arc::new(AtomicBool::new(false));
+    println!(
+        "serving fixture model on {} ({} engine(s), cfg {}, fingerprint {:016x}, {} state/session)",
+        cfg.addr,
+        cfg.replicas.max(1),
+        identity.cfg_name,
+        identity.cfg_fingerprint,
+        human_bytes(identity.state_bytes),
+    );
+    let obs = Arc::new(ServeObs { stats: registries });
+    crate::server::serve_cluster(
+        &cfg.addr,
+        router,
+        Some(store),
+        Some(obs),
+        Some(identity),
+        stop,
+        |addr| println!("listening on {addr}"),
+    )?;
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// `hla router` — the cluster front-end: speaks the client protocol on
+/// `--addr`, routes across the `--replicas` fleet, holds end-of-turn
+/// session snapshots, and fails streams over mid-generation when a
+/// replica dies.
+fn cmd_router(cfg: &RunConfig) -> Result<()> {
+    use crate::cluster::{serve_frontend, Frontend, FrontendCfg};
+
+    if cfg.replica_addrs.is_empty() {
+        bail!("router: --replicas host:port,host:port,... is required\n{USAGE}");
+    }
+    let fe = Arc::new(Frontend::new(FrontendCfg {
+        replica_addrs: cfg.replica_addrs.clone(),
+        policy: cfg.route,
+        health_interval: std::time::Duration::from_secs_f64(cfg.health_interval),
+        ..FrontendCfg::default()
+    }));
+    println!(
+        "routing across {} replica(s): {} (probe every {}s, 3 misses = dead)",
+        cfg.replica_addrs.len(),
+        cfg.replica_addrs.join(", "),
+        cfg.health_interval,
+    );
+    if let Some(target) = &cfg.drain {
+        let idx = cfg
+            .replica_addrs
+            .iter()
+            .position(|a| a == target)
+            .ok_or_else(|| anyhow!("drain: {target} is not in --replicas"))?;
+        // register first so the drained sessions have live destinations
+        fe.register_all()?;
+        let moved = fe.drain_replica(idx)?;
+        println!("drained {moved} session(s) off {target}");
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    serve_frontend(&cfg.addr, fe, stop, |addr| println!("listening on {addr}"))
 }
 
 /// `hla top` — poll a live server's `"stats"` request and print one

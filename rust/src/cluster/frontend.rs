@@ -1,0 +1,475 @@
+//! The cluster front-end: one process speaking the client line-JSON
+//! protocol, fanning out to N `hla serve` replica processes over TCP.
+//!
+//! Request path: pick a replica with the shared
+//! [`PolicyCore`](crate::coordinator::router::PolicyCore) (same
+//! round-robin / least-loaded / session-affinity semantics as the
+//! in-process [`Router`](crate::coordinator::router::Router), with a
+//! liveness mask), relay the raw request line, and stream the reply lines
+//! back.  The front-end never parses tokens into anything richer than
+//! "token line / terminal line" — replicas own generation, it owns
+//! placement.
+//!
+//! Session desk: when a session-tagged request completes, the front-end
+//! exports the session's snapshot (`detach_session` with `keep`) and
+//! parks the CRC-framed bytes in its desk.  Constant-size state (HLA
+//! Theorem 3.1) is what makes this cheap enough to do per turn: the desk
+//! holds a few KB per conversation, not an O(context) KV cache.
+//!
+//! Mid-stream failover: if a replica dies while streaming (connection
+//! reset, EOF, read timeout), the front-end marks it dead, re-attaches
+//! the session's desk snapshot to a survivor, replays the original
+//! request line, suppresses the tokens the client already received, and
+//! keeps streaming.  Generation is deterministic (exact RNG state in the
+//! snapshot), so the resumed stream is byte-identical to an uninterrupted
+//! one — greedy and seeded alike (`rust/tests/cluster_failover.rs`).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::router::{PolicyCore, RoutePolicy};
+use crate::metrics::ServeStats;
+use crate::server::client::Client;
+use crate::util::json::Json;
+
+use super::registry::ReplicaRegistry;
+
+/// Front-end knobs (`hla router --flags`).
+#[derive(Debug, Clone)]
+pub struct FrontendCfg {
+    /// `host:port` of each replica's listener.
+    pub replica_addrs: Vec<String>,
+    pub policy: RoutePolicy,
+    /// Health-probe period; 3 consecutive failures mark a replica dead.
+    pub health_interval: Duration,
+    /// Dial + read timeout for control-plane round-trips.
+    pub io_timeout: Duration,
+}
+
+impl Default for FrontendCfg {
+    fn default() -> Self {
+        FrontendCfg {
+            replica_addrs: vec![],
+            policy: RoutePolicy::LeastLoaded,
+            health_interval: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(1),
+        }
+    }
+}
+
+/// What the desk holds per session: the latest end-of-turn snapshot frame
+/// and which replica currently serves the session.
+struct Desk {
+    snapshot: Vec<u8>,
+    home: usize,
+}
+
+/// Shared front-end state: registry + policy + session desk + counters.
+pub struct Frontend {
+    pub cfg: FrontendCfg,
+    pub registry: ReplicaRegistry,
+    pub core: PolicyCore,
+    desk: Mutex<HashMap<u64, Desk>>,
+    /// Fleet state-layout fingerprint (from the first `register`); every
+    /// replica must match or it is refused at registration.
+    fleet_fingerprint: AtomicU64,
+    /// Mid-stream failovers performed (a replica died while streaming).
+    pub failovers: AtomicU64,
+    /// Sessions moved between replicas (failover re-homes + drains).
+    pub migrations: AtomicU64,
+}
+
+impl Frontend {
+    pub fn new(cfg: FrontendCfg) -> Frontend {
+        let registry = ReplicaRegistry::new(&cfg.replica_addrs);
+        let core = PolicyCore::new(cfg.policy);
+        Frontend {
+            cfg,
+            registry,
+            core,
+            desk: Mutex::new(HashMap::new()),
+            fleet_fingerprint: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+        }
+    }
+
+    /// A fresh control-plane connection to replica `idx` (timeout-capped;
+    /// admin round-trips retry once internally on timeout).
+    pub fn control(&self, idx: usize) -> Result<Client> {
+        Client::connect_timeout(&self.registry.replicas[idx].addr, self.cfg.io_timeout)
+    }
+
+    /// REGISTER one replica: learn its identity, enforce the fleet
+    /// fingerprint, and mark it alive.  Used at startup and by the health
+    /// checker's revival probe.
+    pub fn register_replica(&self, idx: usize) -> Result<()> {
+        let (cfg_name, fp) = self.control(idx)?.register()?;
+        let fleet = self.fleet_fingerprint.compare_exchange(
+            0,
+            fp,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+        if let Err(have) = fleet {
+            if have != fp {
+                bail!(
+                    "replica {} serves an incompatible state layout \
+                     (fingerprint {fp:#018x}, fleet {have:#018x})",
+                    self.registry.replicas[idx].addr
+                );
+            }
+        }
+        let r = &self.registry.replicas[idx];
+        r.set_identity(&cfg_name, fp);
+        r.mark_alive();
+        Ok(())
+    }
+
+    /// Register the whole fleet; errors only if *no* replica came up
+    /// (partial fleets serve degraded, the health checker keeps probing
+    /// the rest).
+    pub fn register_all(&self) -> Result<usize> {
+        let mut up = 0;
+        for i in 0..self.registry.len() {
+            match self.register_replica(i) {
+                Ok(()) => up += 1,
+                Err(e) => log::warn!(
+                    "replica {} not registered: {e}",
+                    self.registry.replicas[i].addr
+                ),
+            }
+        }
+        if up == 0 {
+            bail!("no replica reachable (of {})", self.registry.len());
+        }
+        Ok(up)
+    }
+
+    /// Route a request: pinned home if alive, else the policy over live
+    /// replicas.
+    pub fn pick(&self, key: Option<u64>) -> Option<usize> {
+        self.core.pick(
+            self.registry.len(),
+            key,
+            |i| self.registry.replicas[i].in_flight(),
+            |i| self.registry.replicas[i].is_alive(),
+        )
+    }
+
+    /// Number of desk snapshots currently parked (observability/tests).
+    pub fn desk_len(&self) -> usize {
+        self.desk.lock().unwrap().len()
+    }
+
+    /// Refresh the desk after a session-tagged completion: export the
+    /// snapshot (replica keeps its copy) and pin the session to its home.
+    fn after_completion(&self, sid: u64, idx: usize) {
+        match self.control(idx).and_then(|mut c| c.detach_session(sid, true)) {
+            Ok(bytes) => {
+                self.registry.replicas[idx].detaches.fetch_add(1, Ordering::Relaxed);
+                self.desk.lock().unwrap().insert(sid, Desk { snapshot: bytes, home: idx });
+                self.core.pin(sid, idx);
+            }
+            // a failed export only narrows failover cover for this turn;
+            // the session still lives on the replica
+            Err(e) => log::warn!("session {sid}: snapshot export failed: {e}"),
+        }
+    }
+
+    /// Move one session to a live replica by attaching its desk snapshot
+    /// (the wire-level migration).  Returns the new home.
+    pub fn rehome(&self, sid: u64) -> Result<usize> {
+        let snapshot = {
+            let desk = self.desk.lock().unwrap();
+            let d = desk.get(&sid).ok_or_else(|| anyhow!("session {sid}: no desk snapshot"))?;
+            d.snapshot.clone()
+        };
+        let target = self
+            .pick(Some(sid))
+            .ok_or_else(|| anyhow!("session {sid}: no live replica to re-home onto"))?;
+        self.control(target)?.attach_session(&snapshot).with_context(|| {
+            format!("attaching session {sid} to {}", self.registry.replicas[target].addr)
+        })?;
+        self.registry.replicas[target].attaches.fetch_add(1, Ordering::Relaxed);
+        if let Some(d) = self.desk.lock().unwrap().get_mut(&sid) {
+            d.home = target;
+        }
+        self.core.pin(sid, target);
+        self.migrations.fetch_add(1, Ordering::Relaxed);
+        Ok(target)
+    }
+
+    /// Mark a replica dead and move every desk session homed there onto
+    /// survivors.  Called by the health checker (3 strikes) and by the
+    /// relay path on a mid-stream failure.
+    pub fn mark_dead_and_rebalance(&self, idx: usize) {
+        let r = &self.registry.replicas[idx];
+        if !r.is_alive() {
+            return;
+        }
+        r.mark_dead();
+        log::warn!("replica {} marked dead; re-homing its sessions", r.addr);
+        let homed: Vec<u64> = {
+            let desk = self.desk.lock().unwrap();
+            desk.iter().filter(|(_, d)| d.home == idx).map(|(&sid, _)| sid).collect()
+        };
+        for sid in homed {
+            if let Err(e) = self.rehome(sid) {
+                log::warn!("session {sid}: re-home failed: {e}");
+            }
+        }
+    }
+
+    /// Evacuate every session the replica holds: detach each (consuming —
+    /// the replica's store forgets it) and attach it elsewhere.  The
+    /// replica keeps serving stateless traffic; it can then be retired
+    /// without losing a conversation.
+    pub fn drain_replica(&self, idx: usize) -> Result<usize> {
+        let mut c = self.control(idx)?;
+        let ids = c.drain()?;
+        let mut moved = 0;
+        for sid in ids {
+            let bytes = c.detach_session(sid, false)?;
+            self.registry.replicas[idx].detaches.fetch_add(1, Ordering::Relaxed);
+            let target = self
+                .core
+                .pick(
+                    self.registry.len(),
+                    None, // ignore the (now stale) pin; pure policy pick
+                    |i| self.registry.replicas[i].in_flight(),
+                    |i| i != idx && self.registry.replicas[i].is_alive(),
+                )
+                .ok_or_else(|| anyhow!("drain: no other live replica for session {sid}"))?;
+            self.control(target)?.attach_session(&bytes)?;
+            self.registry.replicas[target].attaches.fetch_add(1, Ordering::Relaxed);
+            self.desk.lock().unwrap().insert(sid, Desk { snapshot: bytes, home: target });
+            self.core.pin(sid, target);
+            self.migrations.fetch_add(1, Ordering::Relaxed);
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// Read timeout for a relayed generation stream: long enough for slow
+    /// decode, short enough that a wedged (not crashed) replica still
+    /// fails over in bounded time.
+    fn relay_timeout(&self) -> Duration {
+        (self.cfg.health_interval * 10).max(self.cfg.io_timeout * 2)
+    }
+}
+
+/// Serve the front-end until `stop` is set: register the fleet, start the
+/// health checker, and accept client connections.
+pub fn serve_frontend(
+    addr: &str,
+    fe: Arc<Frontend>,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    fe.register_all()?;
+    let health = super::health::spawn_health(fe.clone(), stop.clone());
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let fe = fe.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &fe);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let _ = health.join();
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, fe: &Frontend) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match handle_request(&line, fe, &mut writer) {
+            Ok(()) => {}
+            Err(e) => {
+                let err = Json::obj(vec![("error", Json::str(e.to_string()))]);
+                writeln!(writer, "{err}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_request(line: &str, fe: &Frontend, writer: &mut TcpStream) -> Result<()> {
+    let req = Json::parse(line).map_err(|e| anyhow!("bad request: {e}"))?;
+    if req.get("control").is_some() {
+        return Err(anyhow!("control: this is the front-end; control verbs address replicas"));
+    }
+    if let Some(fmt) = req.get("stats") {
+        return handle_stats_fanout(fmt, fe, writer);
+    }
+    relay_generation(line, &req, fe, writer)
+}
+
+/// The `"stats"` admin request against the front-end: fan out to every
+/// live replica and merge the wire snapshots ([`ServeStats::merge`]), so
+/// `hla top --addr <front-end>` sees the whole fleet.
+fn handle_stats_fanout(fmt: &Json, fe: &Frontend, writer: &mut TcpStream) -> Result<()> {
+    let mut snaps = Vec::new();
+    for i in fe.registry.alive_indices() {
+        match fe.control(i).and_then(|mut c| c.stats()) {
+            Ok(s) => snaps.push(s),
+            Err(e) => log::warn!("stats: replica {} skipped: {e}", fe.registry.replicas[i].addr),
+        }
+    }
+    if snaps.is_empty() {
+        bail!("stats: no live replica answered");
+    }
+    let merged = ServeStats::merge(&snaps);
+    let replicas = Json::num(snaps.len() as f64);
+    let msg = match fmt {
+        Json::Bool(true) => Json::obj(vec![("stats", merged.to_json()), ("replicas", replicas)]),
+        Json::Str(s) if s == "json" => {
+            Json::obj(vec![("stats", merged.to_json()), ("replicas", replicas)])
+        }
+        Json::Str(s) if s == "prometheus" => Json::obj(vec![
+            ("stats_text", Json::str(merged.to_prometheus())),
+            ("replicas", replicas),
+        ]),
+        other => return Err(anyhow!("stats: want true, \"json\" or \"prometheus\", got {other}")),
+    };
+    writeln!(writer, "{msg}")?;
+    Ok(())
+}
+
+/// Lenient id read for *routing* (the replica re-validates strictly; a
+/// malformed id just routes by policy and gets the replica's error back).
+fn route_key(req: &Json) -> Option<u64> {
+    let id = |k: &str| {
+        req.get(k)
+            .and_then(Json::as_f64)
+            .filter(|s| *s >= 0.0 && s.fract() == 0.0)
+            .map(|s| s as u64)
+    };
+    // forks must land where the parent's snapshot lives
+    id("fork_of").or_else(|| id("session"))
+}
+
+/// Relay one generation: pick, stream through, fail over on replica
+/// death.  `done`/`error` lines are terminal; everything else passes
+/// through verbatim, minus the already-relayed token prefix on a replay.
+fn relay_generation(line: &str, req: &Json, fe: &Frontend, writer: &mut TcpStream) -> Result<()> {
+    let key = route_key(req);
+    let session = req.get("session").and_then(Json::as_f64).map(|s| s as u64);
+    let mut relayed = 0usize;
+    let mut attempts = 0usize;
+    loop {
+        let idx = fe.pick(key).ok_or_else(|| anyhow!("no live replica"))?;
+        attempts += 1;
+        let replica = &fe.registry.replicas[idx];
+        replica.begin_request();
+        let res = relay_once(fe, idx, line, writer, &mut relayed);
+        replica.end_request();
+        match res {
+            Ok((terminal, clean)) => {
+                // desk refresh BEFORE the client sees `done`: once the
+                // final line lands, the session is parked and pinned, so
+                // an immediate next turn (even on a fresh connection)
+                // routes home and can always be failed over
+                if let (true, Some(sid)) = (clean, session) {
+                    fe.after_completion(sid, idx);
+                }
+                writer.write_all(terminal.as_bytes())?;
+                return Ok(());
+            }
+            Err(e) if attempts <= fe.registry.len() => {
+                log::warn!(
+                    "replica {} failed mid-stream ({} token(s) relayed): {e}",
+                    replica.addr,
+                    relayed
+                );
+                fe.failovers.fetch_add(1, Ordering::Relaxed);
+                fe.mark_dead_and_rebalance(idx);
+                // rebalance re-attached this session's desk snapshot to a
+                // survivor (when one exists); the retry replays the
+                // original line there and suppresses the relayed prefix
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// One relay attempt against replica `idx`.  Token lines stream straight
+/// through (minus the suppressed prefix on a replay); the terminal line
+/// is *returned, not written* — the caller forwards it only after the
+/// desk bookkeeping, so a client that saw `done` can rely on the session
+/// being parked.  Returns `(terminal_line, clean)` where `clean` is true
+/// for a `done` line and false for a replica-side `error` line; `Err`
+/// means transport failure — the failover trigger.
+fn relay_once(
+    fe: &Frontend,
+    idx: usize,
+    line: &str,
+    writer: &mut TcpStream,
+    relayed: &mut usize,
+) -> Result<(String, bool)> {
+    let addr = &fe.registry.replicas[idx].addr;
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow!("{addr}: no usable socket address"))?;
+    let upstream = TcpStream::connect_timeout(&sock, fe.cfg.io_timeout)
+        .with_context(|| format!("dialing replica {addr}"))?;
+    upstream.set_nodelay(true)?;
+    upstream.set_read_timeout(Some(fe.relay_timeout()))?;
+    let mut up_writer = upstream.try_clone()?;
+    let mut up_reader = BufReader::new(upstream);
+    writeln!(up_writer, "{line}")?;
+
+    let skip = *relayed;
+    let mut seen = 0usize;
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        if up_reader.read_line(&mut buf)? == 0 {
+            return Err(anyhow!("replica {addr} closed the connection mid-stream"));
+        }
+        let msg =
+            Json::parse(&buf).map_err(|e| anyhow!("replica {addr}: bad reply line: {e}"))?;
+        if msg.get("token").is_some() {
+            seen += 1;
+            // replays re-stream from the turn's start: suppress what the
+            // client already has, forward only the new tail
+            if seen > skip {
+                writer.write_all(buf.as_bytes())?;
+                *relayed += 1;
+            }
+            continue;
+        }
+        let terminal_ok = msg.get("done").and_then(Json::as_bool) == Some(true);
+        let terminal_err = msg.get("error").is_some();
+        if terminal_ok || terminal_err {
+            return Ok((buf.clone(), terminal_ok));
+        }
+        // unknown non-terminal line (a future protocol extension): pass
+        // it through untouched
+        writer.write_all(buf.as_bytes())?;
+    }
+}

@@ -1,0 +1,77 @@
+//! Fleet health checker: one thread probing every replica on a fixed
+//! period.
+//!
+//! Live replicas get a `health` control round-trip each tick; a success
+//! clears strikes and refreshes the replica-reported in-flight gauge,
+//! a failure adds a strike, and [`STRIKES_TO_DEATH`] consecutive strikes
+//! mark the replica dead and trigger a desk rebalance (every session
+//! homed there is re-attached to a survivor — failover *before* the next
+//! request needs it).
+//!
+//! Dead replicas get revival probes with exponential backoff (1, 2, 4, …
+//! up to [`MAX_BACKOFF_TICKS`] ticks).  Revival goes through the full
+//! `register` handshake so a restarted replica with a different config
+//! fingerprint is refused, not silently mixed into the fleet.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::frontend::Frontend;
+
+/// Consecutive failed probes before a replica is declared dead.
+pub const STRIKES_TO_DEATH: usize = 3;
+/// Revival-probe backoff ceiling, in health-interval ticks.
+pub const MAX_BACKOFF_TICKS: u32 = 16;
+
+/// Start the health loop; runs until `stop` is set.
+pub fn spawn_health(fe: Arc<Frontend>, stop: Arc<AtomicBool>) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let n = fe.registry.len();
+        // per-replica revival backoff: ticks to skip, and the current width
+        let mut skip = vec![0u32; n];
+        let mut backoff = vec![1u32; n];
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(fe.cfg.health_interval);
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            for i in 0..n {
+                let r = &fe.registry.replicas[i];
+                if r.is_alive() {
+                    match fe.control(i).and_then(|mut c| c.health()) {
+                        Ok(in_flight) => {
+                            r.clear_strikes();
+                            r.set_reported_in_flight(in_flight);
+                            backoff[i] = 1;
+                        }
+                        Err(e) => {
+                            let strikes = r.strike();
+                            log::warn!("health: replica {} strike {strikes}: {e}", r.addr);
+                            if strikes >= STRIKES_TO_DEATH {
+                                fe.mark_dead_and_rebalance(i);
+                                skip[i] = 0;
+                                backoff[i] = 1;
+                            }
+                        }
+                    }
+                } else {
+                    if skip[i] > 0 {
+                        skip[i] -= 1;
+                        continue;
+                    }
+                    match fe.register_replica(i) {
+                        Ok(()) => {
+                            log::info!("health: replica {} revived", r.addr);
+                            backoff[i] = 1;
+                        }
+                        Err(_) => {
+                            skip[i] = backoff[i];
+                            backoff[i] = (backoff[i] * 2).min(MAX_BACKOFF_TICKS);
+                        }
+                    }
+                }
+            }
+        }
+    })
+}

@@ -1,0 +1,35 @@
+//! Cluster mode: a standalone front-end process routing the line-JSON
+//! client protocol across N independent `hla serve` replicas, with
+//! wire-level session migration and mid-stream failover.
+//!
+//! The pieces:
+//!
+//! - [`registry`] — the front-end's fleet view: liveness, load, strikes,
+//!   and the identity each replica announced at registration.
+//! - [`frontend`] — the router itself: policy placement (shared
+//!   [`PolicyCore`](crate::coordinator::router::PolicyCore) with the
+//!   in-process router), generation relay with token-prefix suppression
+//!   on replay, the session desk of CRC-framed snapshots, fleet-wide
+//!   stats fan-out, and drain.
+//! - [`health`] — the probe loop: 3 strikes to death (with desk
+//!   rebalance), exponential-backoff revival through the full register
+//!   handshake.
+//! - [`replica`] — the artifact-free fixture engine behind
+//!   `hla serve --fixture true`, the replica the cluster tests and
+//!   `e19_cluster` bench actually run.
+//!
+//! Why this is cheap at all: HLA decode state is constant-size per
+//! sequence (Theorem 3.1), so "move a conversation" is a few-KB snapshot
+//! frame over the control plane — not an O(context) KV-cache transfer.
+//! `benches/e19_cluster.rs` quantifies exactly that gap; the wire
+//! contract lives in `docs/PROTOCOL.md` ("Control plane").
+
+pub mod frontend;
+pub mod health;
+pub mod registry;
+pub mod replica;
+
+pub use frontend::{serve_frontend, Frontend, FrontendCfg};
+pub use health::spawn_health;
+pub use registry::{Replica, ReplicaRegistry};
+pub use replica::{fixture_identity, spawn_fixture_engine};

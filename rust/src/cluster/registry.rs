@@ -1,0 +1,177 @@
+//! Replica registry: the front-end's view of its fleet.
+//!
+//! One [`Replica`] per `hla serve` process, holding liveness, the
+//! front-end-maintained in-flight count (the load input to
+//! [`crate::coordinator::router::PolicyCore::pick`]), the health-check
+//! strike count, and the identity learned from the `register` control
+//! verb.  Everything is atomics + one small mutex so relay threads, the
+//! health checker, and the accept loop share it without contention.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One replica process as seen from the front-end.
+pub struct Replica {
+    /// `host:port` of the replica's line-JSON listener.
+    pub addr: String,
+    alive: AtomicBool,
+    /// Requests this front-end currently has relaying to the replica.
+    in_flight: AtomicUsize,
+    /// Consecutive failed health probes (reset on any success).
+    strikes: AtomicUsize,
+    /// In-flight count the replica itself reported on its last health
+    /// reply (includes load from other front-ends; informational).
+    reported_in_flight: AtomicU64,
+    /// Config name from `register` (empty until registered).
+    cfg_name: Mutex<String>,
+    /// State-layout fingerprint from `register` (0 until registered).
+    fingerprint: AtomicU64,
+    /// Sessions moved onto / off this replica by this front-end.
+    pub attaches: AtomicU64,
+    pub detaches: AtomicU64,
+}
+
+impl Replica {
+    fn new(addr: &str) -> Replica {
+        Replica {
+            addr: addr.to_string(),
+            // replicas start dead; `register` is what brings one up
+            alive: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            strikes: AtomicUsize::new(0),
+            reported_in_flight: AtomicU64::new(0),
+            cfg_name: Mutex::new(String::new()),
+            fingerprint: AtomicU64::new(0),
+            attaches: AtomicU64::new(0),
+            detaches: AtomicU64::new(0),
+        }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    pub fn mark_alive(&self) {
+        self.strikes.store(0, Ordering::Relaxed);
+        self.alive.store(true, Ordering::Relaxed);
+    }
+
+    pub fn mark_dead(&self) {
+        self.alive.store(false, Ordering::Relaxed);
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Bracket a relayed request (load accounting for least-loaded).
+    pub fn begin_request(&self) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn end_request(&self) {
+        // saturating: a racing mark_dead/mark_alive cycle must not wrap
+        let _ = self.in_flight.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(1))
+        });
+    }
+
+    /// Record one failed health probe; returns the strike count so far.
+    pub fn strike(&self) -> usize {
+        self.strikes.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn clear_strikes(&self) {
+        self.strikes.store(0, Ordering::Relaxed);
+    }
+
+    pub fn strikes(&self) -> usize {
+        self.strikes.load(Ordering::Relaxed)
+    }
+
+    pub fn set_reported_in_flight(&self, n: u64) {
+        self.reported_in_flight.store(n, Ordering::Relaxed);
+    }
+
+    pub fn reported_in_flight(&self) -> u64 {
+        self.reported_in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Store the identity a `register` round-trip returned.
+    pub fn set_identity(&self, cfg_name: &str, fingerprint: u64) {
+        *self.cfg_name.lock().unwrap() = cfg_name.to_string();
+        self.fingerprint.store(fingerprint, Ordering::Relaxed);
+    }
+
+    pub fn cfg_name(&self) -> String {
+        self.cfg_name.lock().unwrap().clone()
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint.load(Ordering::Relaxed)
+    }
+}
+
+/// The fleet: index-stable (the policy core's replica indices point into
+/// this vec for the front-end's whole lifetime; death flips a flag, it
+/// never removes an entry).
+pub struct ReplicaRegistry {
+    pub replicas: Vec<Replica>,
+}
+
+impl ReplicaRegistry {
+    pub fn new(addrs: &[String]) -> ReplicaRegistry {
+        ReplicaRegistry { replicas: addrs.iter().map(|a| Replica::new(a)).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.is_alive()).count()
+    }
+
+    /// Indices of live replicas (stats fan-out, rebalance targets).
+    pub fn alive_indices(&self) -> Vec<usize> {
+        (0..self.replicas.len()).filter(|&i| self.replicas[i].is_alive()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_and_load_accounting() {
+        let reg = ReplicaRegistry::new(&["a:1".into(), "b:2".into()]);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.alive_count(), 0, "replicas start dead until registered");
+        let r = &reg.replicas[0];
+        r.set_identity("tiny", 0xDEAD);
+        r.mark_alive();
+        assert!(r.is_alive());
+        assert_eq!(r.cfg_name(), "tiny");
+        assert_eq!(r.fingerprint(), 0xDEAD);
+        assert_eq!(reg.alive_indices(), vec![0]);
+
+        r.begin_request();
+        r.begin_request();
+        assert_eq!(r.in_flight(), 2);
+        r.end_request();
+        r.end_request();
+        r.end_request(); // over-release must not wrap
+        assert_eq!(r.in_flight(), 0);
+
+        assert_eq!(r.strike(), 1);
+        assert_eq!(r.strike(), 2);
+        r.mark_dead();
+        assert!(!r.is_alive());
+        r.mark_alive();
+        assert_eq!(r.strikes(), 0, "revival clears strikes");
+    }
+}

@@ -1,0 +1,146 @@
+//! A self-contained replica engine over the fixture model: the pure-Rust
+//! decode path serving real [`GenRequest`]s with full session support
+//! (resume on admission, snapshot on completion), no artifacts required.
+//!
+//! This is what `hla serve --fixture true` runs, and what the cluster
+//! tests/bench spawn as replica processes: a deterministic byte-LM whose
+//! snapshots round-trip losslessly (full-state config), so mid-stream
+//! failover can be pinned byte-for-byte without shipping model weights
+//! into CI.  One engine = one lane; cluster throughput comes from
+//! replicas, not in-process batching.
+//!
+//! Semantics mirror the batched engine where the session subsystem cares:
+//! the completion snapshot captures the last token *sampled but not yet
+//! fed*, and a resume feeds the restored `last_token` ahead of the new
+//! turn's prompt bytes (`rust/tests/session_resume.rs` pins this contract
+//! for the real engine; `rust/tests/cluster_failover.rs` pins it across
+//! process boundaries).
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::request::{FinishReason, GenRequest, TokenEvent};
+use crate::metrics::LiveStats;
+use crate::model::sampler::Sampler;
+use crate::model::{ModelState, RustModel};
+use crate::server::ReplicaIdentity;
+use crate::session::{state_fingerprint, SamplerState, SessionSnapshot, SessionStore};
+
+/// The identity this replica announces on the `register` control verb,
+/// derived from the model's actual per-lane state tensors so it is
+/// consistent by construction with every snapshot the engine exports.
+pub fn fixture_identity(model: &RustModel) -> ReplicaIdentity {
+    let tensors = ModelState::new(&model.cfg)
+        .to_tensors()
+        .expect("fixture state export is total");
+    let state_bytes = tensors.iter().map(|t| t.data.len() * 4).sum();
+    ReplicaIdentity {
+        cfg_name: model.cfg.name.clone(),
+        cfg_fingerprint: state_fingerprint(&tensors),
+        state_bytes,
+    }
+}
+
+/// Spawn the engine thread; the returned sender is what
+/// [`Router`](crate::coordinator::router::Router) routes into.  The
+/// thread drains until every sender is dropped.
+pub fn spawn_fixture_engine(
+    model: RustModel,
+    store: Arc<SessionStore>,
+    stats: Arc<LiveStats>,
+) -> (Sender<GenRequest>, JoinHandle<()>) {
+    let (tx, rx): (Sender<GenRequest>, Receiver<GenRequest>) = mpsc::channel();
+    let identity = fixture_identity(&model);
+    let handle = std::thread::spawn(move || {
+        stats.batch_lanes.set(1);
+        stats.state_bytes.set(identity.state_bytes as u64);
+        for req in rx {
+            serve_one(&model, &store, &stats, req);
+        }
+    });
+    (tx, handle)
+}
+
+/// One request, start to finish, on the single fixture lane.
+fn serve_one(model: &RustModel, store: &SessionStore, stats: &LiveStats, req: GenRequest) {
+    let t_start = Instant::now();
+    let mut state = ModelState::new(&model.cfg);
+    let mut sampler = Sampler::new(req.sampler.clone());
+    let mut prior_tokens = 0u64;
+    let mut resumed = false;
+    let mut inputs: Vec<u8> = Vec::new();
+    if req.resume {
+        // a failed resume (evicted, wrong config, corrupt state) degrades
+        // to a fresh lane, same as the batched engine; the final event's
+        // `resumed` flag is the ground truth either way
+        if let Some(snap) = req.session.and_then(|sid| store.claim(sid, Some(&model.cfg.name))) {
+            if state.load_tensors(&snap.state).is_ok() {
+                sampler = snap.sampler.rebuild();
+                prior_tokens = snap.tokens_generated;
+                inputs.push(snap.last_token);
+                resumed = true;
+            } else {
+                state = ModelState::new(&model.cfg);
+            }
+        }
+    }
+    inputs.extend_from_slice(&req.prompt);
+    if inputs.is_empty() {
+        inputs.push(0);
+    }
+    // everything but the last input is prefill; the last is the first
+    // decode input (decode-as-prefill, like the coordinator)
+    if inputs.len() > 1 {
+        for &t in &inputs[..inputs.len() - 1] {
+            model.decode_step(&mut state, t);
+        }
+        stats.prefills.incr();
+        stats.prefilled_tokens.add((inputs.len() - 1) as u64);
+    }
+    let mut input = *inputs.last().unwrap();
+    let mut produced = 0u64;
+    let mut reason = FinishReason::Length;
+    for _ in 0..req.max_new_tokens {
+        let t0 = Instant::now();
+        let logits = model.decode_step(&mut state, input);
+        input = sampler.sample(&logits) as u8;
+        stats.step_hist.record(t0.elapsed());
+        stats.steps.incr();
+        stats.batched_steps.incr();
+        stats.occupied_lanes.add(1);
+        stats.width_steps.add(1);
+        stats.tokens_out.incr();
+        produced += 1;
+        if produced == 1 {
+            stats.ttft_hist.record(req.submitted.elapsed());
+        }
+        if req.events.send(TokenEvent::token(req.id, input)).is_err() {
+            reason = FinishReason::Aborted;
+            break;
+        }
+        if Some(input) == req.eos {
+            reason = FinishReason::Eos;
+            break;
+        }
+    }
+    if let Some(sid) = req.session {
+        // `input` is sampled-but-not-fed here — exactly what a resume
+        // expects to feed first
+        match state.to_tensors() {
+            Ok(tensors) => store.put(SessionSnapshot {
+                id: sid,
+                cfg_name: model.cfg.name.clone(),
+                tokens_generated: prior_tokens + produced,
+                last_token: input,
+                sampler: SamplerState::capture(&sampler),
+                state: tensors,
+            }),
+            Err(e) => log::warn!("session {sid}: state export failed: {e}"),
+        }
+    }
+    let _ = req.events.send(TokenEvent::finished_resumed(req.id, reason, resumed));
+    stats.completed.incr();
+    stats.latency_hist.record(t_start.elapsed());
+}

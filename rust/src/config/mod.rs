@@ -21,6 +21,19 @@ pub struct RunConfig {
     // serving
     pub addr: String,
     pub replicas: usize,
+    /// cluster mode (`hla router`): replica listener addresses; set via
+    /// `--replicas host:port,host:port,...` (an integer keeps the
+    /// in-process replica-count meaning for `hla serve`)
+    pub replica_addrs: Vec<String>,
+    /// cluster front-end health-probe period in seconds
+    pub health_interval: f64,
+    /// `hla router --drain <addr>`: evacuate this replica's sessions
+    /// across the rest of the fleet at startup, then serve
+    pub drain: Option<String>,
+    /// `hla serve --fixture true`: serve the artifact-free fixture model
+    /// (pure-Rust decode path, full session support) — what the cluster
+    /// tests and bench run as replicas
+    pub fixture: bool,
     pub sched: SchedPolicy,
     pub route: RoutePolicy,
     /// scan-prefill chunk width; 0 keeps decode-as-prefill
@@ -80,6 +93,10 @@ impl Default for RunConfig {
             seed: 0,
             addr: "127.0.0.1:7433".into(),
             replicas: 1,
+            replica_addrs: vec![],
+            health_interval: 2.0,
+            drain: None,
+            fixture: false,
             sched: SchedPolicy::PrefillFirst,
             route: RoutePolicy::LeastLoaded,
             prefill_chunk: 0,
@@ -141,7 +158,33 @@ impl RunConfig {
             "model" => self.model = value.into(),
             "seed" => self.seed = value.parse()?,
             "addr" => self.addr = value.into(),
-            "replicas" => self.replicas = value.parse()?,
+            "replicas" => {
+                // dual form: an integer is the in-process replica count
+                // (serve); a comma-separated host:port list is the
+                // cluster fleet (router)
+                if let Ok(n) = value.parse::<usize>() {
+                    self.replicas = n;
+                } else {
+                    let addrs: Vec<String> =
+                        value.split(',').map(|a| a.trim().to_string()).collect();
+                    for a in &addrs {
+                        if a.is_empty() || !a.contains(':') {
+                            bail!(
+                                "bad replicas {value:?} (a count, or host:port,host:port,...)"
+                            );
+                        }
+                    }
+                    self.replica_addrs = addrs;
+                }
+            }
+            "health-interval" | "health_interval" => {
+                self.health_interval = value.parse()?;
+                if !self.health_interval.is_finite() || self.health_interval <= 0.0 {
+                    bail!("health-interval must be a positive number of seconds");
+                }
+            }
+            "drain" => self.drain = Some(value.into()),
+            "fixture" => self.fixture = parse_bool(value)?,
             "sched" => {
                 self.sched = SchedPolicy::parse(value)
                     .ok_or_else(|| anyhow!("bad sched {value:?} (prefill-first|decode-first|hybrid-N)"))?
@@ -341,6 +384,38 @@ mod tests {
         assert!(RunConfig::from_args(&s(&["--batch-buckets", "1,0,4"])).is_err());
         assert!(RunConfig::from_args(&s(&["--batch-buckets", "1,,4"])).is_err());
         assert!(RunConfig::from_args(&s(&["--bucket-shrink-after", "0"])).is_err());
+    }
+
+    #[test]
+    fn cluster_flags_apply_and_validate() {
+        // integer form keeps the in-process count; list form fills addrs
+        let cfg = RunConfig::from_args(&s(&["--replicas", "4"])).unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert!(cfg.replica_addrs.is_empty());
+        let cfg = RunConfig::from_args(&s(&[
+            "--replicas",
+            "127.0.0.1:7434, 127.0.0.1:7435",
+            "--health-interval=0.5",
+            "--drain",
+            "127.0.0.1:7434",
+            "--fixture=true",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.replica_addrs, vec!["127.0.0.1:7434", "127.0.0.1:7435"]);
+        assert!((cfg.health_interval - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.drain.as_deref(), Some("127.0.0.1:7434"));
+        assert!(cfg.fixture);
+        // defaults: no fleet, 2s probes, artifact-backed serving
+        let d = RunConfig::default();
+        assert!(d.replica_addrs.is_empty());
+        assert!((d.health_interval - 2.0).abs() < 1e-12);
+        assert!(d.drain.is_none());
+        assert!(!d.fixture);
+        // a portless entry is neither a count nor an address: fail fast
+        assert!(RunConfig::from_args(&s(&["--replicas", "localhost,oops"])).is_err());
+        assert!(RunConfig::from_args(&s(&["--replicas", "127.0.0.1:1,"])).is_err());
+        assert!(RunConfig::from_args(&s(&["--health-interval", "0"])).is_err());
+        assert!(RunConfig::from_args(&s(&["--fixture", "maybe"])).is_err());
     }
 
     #[test]

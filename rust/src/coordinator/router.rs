@@ -36,6 +36,112 @@ impl RoutePolicy {
     }
 }
 
+/// The policy core: pure pick logic over `n` replicas, shared between the
+/// in-process [`Router`] and the cross-process cluster front-end
+/// ([`crate::cluster`]).  It owns only the rotation counter and the pin
+/// table; load and liveness come in per call, so the same semantics apply
+/// whether a replica is an engine thread or a TCP peer.  With every
+/// replica alive the picks are exactly the classic in-process sequence;
+/// dead replicas are skipped (a dead pin falls back to the policy, the
+/// affinity hash probes linearly past dead homes), and `None` means no
+/// replica is alive at all.
+pub struct PolicyCore {
+    policy: RoutePolicy,
+    rr: AtomicU64,
+    /// Session -> replica overrides (rebalancing / migration).  A pinned
+    /// session routes to its pin regardless of policy; with a shared
+    /// session store, repinning *is* cross-replica migration — the state
+    /// follows through the store on the session's next resume.
+    pins: Mutex<HashMap<u64, usize>>,
+}
+
+impl PolicyCore {
+    pub fn new(policy: RoutePolicy) -> PolicyCore {
+        PolicyCore { policy, rr: AtomicU64::new(0), pins: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pin a session to a replica (overrides the routing policy).
+    pub fn pin(&self, session: u64, replica: usize) {
+        self.pins.lock().unwrap().insert(session, replica);
+    }
+
+    /// Remove a pin; the session falls back to the routing policy.
+    pub fn unpin(&self, session: u64) {
+        self.pins.lock().unwrap().remove(&session);
+    }
+
+    pub fn pinned(&self, session: u64) -> Option<usize> {
+        self.pins.lock().unwrap().get(&session).copied()
+    }
+
+    /// Pick among `n` replicas: `load(i)` is the in-flight count,
+    /// `alive(i)` masks out dead replicas.
+    pub fn pick(
+        &self,
+        n: usize,
+        session: Option<u64>,
+        load: impl Fn(usize) -> usize,
+        alive: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        if n == 0 {
+            return None;
+        }
+        if let Some(sid) = session {
+            if let Some(&replica) = self.pins.lock().unwrap().get(&sid) {
+                if replica < n && alive(replica) {
+                    return Some(replica);
+                }
+            }
+        }
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                // one rotation advance per pick when the pick succeeds
+                // immediately (the all-alive case)
+                for _ in 0..n {
+                    let i = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
+                    if alive(i) {
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = None;
+                let mut best_load = usize::MAX;
+                for i in 0..n {
+                    if !alive(i) {
+                        continue;
+                    }
+                    let l = load(i);
+                    if l < best_load {
+                        best = Some(i);
+                        best_load = l;
+                    }
+                }
+                best
+            }
+            RoutePolicy::SessionAffinity => {
+                let key = session.unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed));
+                // splitmix-style hash for stability
+                let mut z = key.wrapping_add(0x9E3779B97F4A7C15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                let home = (z as usize) % n;
+                for k in 0..n {
+                    let i = (home + k) % n;
+                    if alive(i) {
+                        return Some(i);
+                    }
+                }
+                None
+            }
+        }
+    }
+}
+
 struct Replica {
     tx: Mutex<Sender<GenRequest>>,
     in_flight: AtomicUsize,
@@ -44,14 +150,8 @@ struct Replica {
 /// The router: submit requests, pick replicas by policy.
 pub struct Router {
     replicas: Vec<Replica>,
-    policy: RoutePolicy,
-    rr: AtomicU64,
+    core: PolicyCore,
     next_id: AtomicU64,
-    /// Session -> replica overrides (rebalancing / migration).  A pinned
-    /// session routes to its pin regardless of policy; with a shared
-    /// session store, repinning *is* cross-replica migration — the state
-    /// follows through the store on the session's next resume.
-    pins: Mutex<HashMap<u64, usize>>,
 }
 
 impl Router {
@@ -61,10 +161,8 @@ impl Router {
                 .into_iter()
                 .map(|tx| Replica { tx: Mutex::new(tx), in_flight: AtomicUsize::new(0) })
                 .collect(),
-            policy,
-            rr: AtomicU64::new(0),
+            core: PolicyCore::new(policy),
             next_id: AtomicU64::new(1),
-            pins: Mutex::new(HashMap::new()),
         }
     }
 
@@ -81,44 +179,24 @@ impl Router {
     /// the session's state from the shared store on its next resume.
     pub fn pin_session(&self, session: u64, replica: usize) {
         assert!(replica < self.replicas.len(), "replica {replica} out of range");
-        self.pins.lock().unwrap().insert(session, replica);
+        self.core.pin(session, replica);
     }
 
     /// Remove a pin; the session falls back to the routing policy.
     pub fn unpin_session(&self, session: u64) {
-        self.pins.lock().unwrap().remove(&session);
+        self.core.unpin(session);
     }
 
     /// Pick the replica index for a request (session key optional).
     pub fn pick(&self, session: Option<u64>) -> usize {
-        if let Some(sid) = session {
-            if let Some(&replica) = self.pins.lock().unwrap().get(&sid) {
-                return replica;
-            }
-        }
-        let n = self.replicas.len();
-        match self.policy {
-            RoutePolicy::RoundRobin => (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n,
-            RoutePolicy::LeastLoaded => {
-                let mut best = 0;
-                let mut best_load = usize::MAX;
-                for (i, r) in self.replicas.iter().enumerate() {
-                    let load = r.in_flight.load(Ordering::Relaxed);
-                    if load < best_load {
-                        best = i;
-                        best_load = load;
-                    }
-                }
-                best
-            }
-            RoutePolicy::SessionAffinity => {
-                let key = session.unwrap_or_else(|| self.rr.fetch_add(1, Ordering::Relaxed));
-                // splitmix-style hash for stability
-                let mut z = key.wrapping_add(0x9E3779B97F4A7C15);
-                z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-                (z as usize) % n
-            }
-        }
+        self.core
+            .pick(
+                self.replicas.len(),
+                session,
+                |i| self.replicas[i].in_flight.load(Ordering::Relaxed),
+                |_| true,
+            )
+            .expect("router has no replicas")
     }
 
     /// Submit a request; returns the replica index used.
@@ -302,5 +380,36 @@ mod tests {
     fn pin_to_missing_replica_fails_fast() {
         let (router, _rxs) = mk_router(2, RoutePolicy::RoundRobin);
         router.pin_session(1, 2);
+    }
+
+    #[test]
+    fn policy_core_skips_dead_replicas() {
+        // round-robin walks past a dead replica
+        let core = PolicyCore::new(RoutePolicy::RoundRobin);
+        let picks: Vec<usize> =
+            (0..4).map(|_| core.pick(3, None, |_| 0, |i| i != 1).unwrap()).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+
+        // least-loaded never selects a dead replica, even at zero load
+        let core = PolicyCore::new(RoutePolicy::LeastLoaded);
+        let loads = [5usize, 0, 3];
+        assert_eq!(core.pick(3, None, |i| loads[i], |i| i != 1), Some(2));
+
+        // affinity probes linearly past a dead home, stays stable after
+        let core = PolicyCore::new(RoutePolicy::SessionAffinity);
+        let home = core.pick(4, Some(42), |_| 0, |_| true).unwrap();
+        let moved = core.pick(4, Some(42), |_| 0, |i| i != home).unwrap();
+        assert_eq!(moved, (home + 1) % 4);
+        assert_eq!(core.pick(4, Some(42), |_| 0, |i| i != home), Some(moved));
+
+        // a pin to a dead replica falls back to the policy
+        let core = PolicyCore::new(RoutePolicy::LeastLoaded);
+        core.pin(7, 2);
+        assert_eq!(core.pick(3, Some(7), |_| 0, |_| true), Some(2));
+        assert_eq!(core.pick(3, Some(7), |_| 0, |i| i != 2), Some(0));
+
+        // nothing alive: None, never a panic
+        assert_eq!(core.pick(3, None, |_| 0, |_| false), None);
+        assert_eq!(core.pick(0, None, |_| 0, |_| true), None);
     }
 }

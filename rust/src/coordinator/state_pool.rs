@@ -65,6 +65,28 @@ impl StatePool {
         Ok(())
     }
 
+    /// Per-component shape of one lane's slice (batch dim collapsed to 1)
+    /// — the layout every snapshot detached from this pool carries.
+    pub fn lane_shapes(&self) -> Vec<Vec<usize>> {
+        self.components
+            .iter()
+            .map(|c| {
+                let mut s = c.shape.clone();
+                if s.len() > 1 {
+                    s[1] = 1;
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// Fingerprint of the per-lane state layout — the attach
+    /// compatibility gate ([`crate::session::snapshot::CfgMismatch`]).
+    pub fn lane_fingerprint(&self) -> u64 {
+        let shapes = self.lane_shapes();
+        crate::session::snapshot::shape_fingerprint(shapes.iter().map(|s| s.as_slice()))
+    }
+
     /// Read one lane's state slice (session snapshot / migration — the
     /// detach hook of [`crate::session`]).
     pub fn read_lane(&self, b: usize) -> Vec<Tensor> {

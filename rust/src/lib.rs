@@ -15,12 +15,15 @@
 //!   across requests (`cache`), a speculative decoding engine with
 //!   draft/verify/rollback over the constant-size state (`spec`), a
 //!   live observability layer (`metrics`: shared stats registry,
-//!   request-span tracing, persisted perf trajectory), a training
-//!   driver, plus a from-scratch reimplementation of the paper's full
-//!   algebra (`hla`) used for verification and CPU baselines.
+//!   request-span tracing, persisted perf trajectory), a cluster
+//!   front-end routing the wire protocol across replica processes with
+//!   wire-level session migration and mid-stream failover (`cluster`),
+//!   a training driver, plus a from-scratch reimplementation of the
+//!   paper's full algebra (`hla`) used for verification and CPU
+//!   baselines.
 //!
 //! See `rust/DESIGN.md` for the system inventory, the `rust/benches/`
-//! E-series (E1–E18) for the paper-claim ↔ measurement map,
+//! E-series (E1–E19) for the paper-claim ↔ measurement map,
 //! `rust/docs/ARCHITECTURE.md` for one request walked end to end through
 //! the serving stack, and `rust/docs/PROTOCOL.md` for the wire format.
 
@@ -28,6 +31,7 @@ pub mod attention;
 pub mod bench;
 pub mod cache;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod hla;

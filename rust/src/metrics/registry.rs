@@ -334,6 +334,84 @@ impl ServeStats {
         }
     }
 
+    /// Merge wire-form snapshots from independent replica *processes*
+    /// into one fleet view — the cluster front-end's `"stats"` fan-out.
+    /// Unlike [`LiveStats::merged`] (which merges the live histograms
+    /// bucket-exactly), only each process's percentile summaries survive
+    /// the wire, so percentile fields merge as weighted means: request-
+    /// phase percentiles weight by completed requests, step-level ones by
+    /// engine steps — approximate, but monotone and unit-correct.
+    /// Counters sum, elapsed takes the longest-lived replica, throughput
+    /// and occupancy recompute from the summed tallies.
+    pub fn merge(snaps: &[ServeStats]) -> ServeStats {
+        fn wmean(
+            snaps: &[ServeStats],
+            v: impl Fn(&ServeStats) -> f64,
+            w: impl Fn(&ServeStats) -> f64,
+        ) -> f64 {
+            let total: f64 = snaps.iter().map(&w).sum();
+            if total <= 0.0 {
+                return 0.0;
+            }
+            snaps.iter().map(|s| v(s) * w(s)).sum::<f64>() / total
+        }
+        let by_req = |v: fn(&ServeStats) -> f64| wmean(snaps, v, |s| s.completed as f64);
+        let by_step = |v: fn(&ServeStats) -> f64| wmean(snaps, v, |s| s.steps as f64);
+        let mut out = ServeStats::default();
+        for s in snaps {
+            out.completed += s.completed;
+            out.tokens_out += s.tokens_out;
+            out.steps += s.steps;
+            out.prefills += s.prefills;
+            out.prefilled_tokens += s.prefilled_tokens;
+            out.cache_hits += s.cache_hits;
+            out.cache_misses += s.cache_misses;
+            out.cache_inserts += s.cache_inserts;
+            out.cache_evictions += s.cache_evictions;
+            out.cache_hit_tokens += s.cache_hit_tokens;
+            out.cache_resident_bytes += s.cache_resident_bytes;
+            out.state_bytes += s.state_bytes;
+            out.bucket_grows += s.bucket_grows;
+            out.bucket_shrinks += s.bucket_shrinks;
+            out.repacks += s.repacks;
+            out.spec_rounds += s.spec_rounds;
+            out.spec_drafted += s.spec_drafted;
+            out.spec_accepted += s.spec_accepted;
+            out.spec_rollbacks += s.spec_rollbacks;
+            out.spec_tokens += s.spec_tokens;
+            out.elapsed_s = out.elapsed_s.max(s.elapsed_s);
+        }
+        out.tokens_per_sec = out.tokens_out as f64 / out.elapsed_s.max(1e-9);
+        out.step_us_p50 = by_step(|s| s.step_us_p50);
+        out.step_us_p99 = by_step(|s| s.step_us_p99);
+        out.repack_us_p50 = by_step(|s| s.repack_us_p50);
+        out.repack_us_p99 = by_step(|s| s.repack_us_p99);
+        out.lane_occupancy = by_step(|s| s.lane_occupancy);
+        out.step_width_mean = by_step(|s| s.step_width_mean);
+        out.ttft_us_p50 = by_req(|s| s.ttft_us_p50);
+        out.ttft_us_p95 = by_req(|s| s.ttft_us_p95);
+        out.ttft_us_p99 = by_req(|s| s.ttft_us_p99);
+        out.queue_us_p50 = by_req(|s| s.queue_us_p50);
+        out.queue_us_p95 = by_req(|s| s.queue_us_p95);
+        out.queue_us_p99 = by_req(|s| s.queue_us_p99);
+        out.prefill_us_p50 = by_req(|s| s.prefill_us_p50);
+        out.prefill_us_p95 = by_req(|s| s.prefill_us_p95);
+        out.prefill_us_p99 = by_req(|s| s.prefill_us_p99);
+        out.first_decode_us_p50 = by_req(|s| s.first_decode_us_p50);
+        out.first_decode_us_p95 = by_req(|s| s.first_decode_us_p95);
+        out.first_decode_us_p99 = by_req(|s| s.first_decode_us_p99);
+        out.ttft_warm_us_p50 = by_req(|s| s.ttft_warm_us_p50);
+        out.ttft_warm_us_p95 = by_req(|s| s.ttft_warm_us_p95);
+        out.ttft_warm_us_p99 = by_req(|s| s.ttft_warm_us_p99);
+        out.ttft_cold_us_p50 = by_req(|s| s.ttft_cold_us_p50);
+        out.ttft_cold_us_p95 = by_req(|s| s.ttft_cold_us_p95);
+        out.ttft_cold_us_p99 = by_req(|s| s.ttft_cold_us_p99);
+        out.latency_us_p50 = by_req(|s| s.latency_us_p50);
+        out.latency_us_p95 = by_req(|s| s.latency_us_p95);
+        out.latency_us_p99 = by_req(|s| s.latency_us_p99);
+        out
+    }
+
     /// Prometheus text exposition of the snapshot (`{"stats":
     /// "prometheus"}` on the wire; travels as a JSON string so the
     /// protocol stays line-JSON).  Counters as `_total`, gauges plain,
@@ -705,6 +783,50 @@ mod tests {
         // single-replica merge == snapshot (modulo elapsed jitter)
         let one = LiveStats::merged(&[a.clone()]);
         assert_eq!(one.tokens_out, a.snapshot().tokens_out);
+    }
+
+    #[test]
+    fn wire_merge_sums_counters_and_weights_percentiles() {
+        let a = ServeStats {
+            completed: 3,
+            tokens_out: 120,
+            steps: 50,
+            elapsed_s: 2.0,
+            ttft_us_p50: 1_000.0,
+            step_us_p50: 100.0,
+            lane_occupancy: 0.5,
+            state_bytes: 4096,
+            ..Default::default()
+        };
+        let b = ServeStats {
+            completed: 1,
+            tokens_out: 40,
+            steps: 150,
+            elapsed_s: 5.0,
+            ttft_us_p50: 5_000.0,
+            step_us_p50: 300.0,
+            lane_occupancy: 0.9,
+            state_bytes: 4096,
+            ..Default::default()
+        };
+        let m = ServeStats::merge(&[a, b]);
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.tokens_out, 160);
+        assert_eq!(m.steps, 200);
+        assert_eq!(m.state_bytes, 8192, "fleet footprint sums");
+        assert!((m.elapsed_s - 5.0).abs() < 1e-12, "longest-lived replica wins");
+        assert!((m.tokens_per_sec - 160.0 / 5.0).abs() < 1e-9, "throughput recomputes");
+        // request-phase percentiles weight by completed: (3*1000 + 1*5000)/4
+        assert!((m.ttft_us_p50 - 2_000.0).abs() < 1e-9, "{}", m.ttft_us_p50);
+        // step-level ones weight by steps: (50*100 + 150*300)/200
+        assert!((m.step_us_p50 - 250.0).abs() < 1e-9, "{}", m.step_us_p50);
+        assert!((m.lane_occupancy - (50.0 * 0.5 + 150.0 * 0.9) / 200.0).abs() < 1e-9);
+        // degenerate inputs stay finite
+        let empty = ServeStats::merge(&[]);
+        assert_eq!(empty.completed, 0);
+        assert_eq!(empty.ttft_us_p50, 0.0);
+        let idle = ServeStats::merge(&[ServeStats::default()]);
+        assert_eq!(idle.step_us_p50, 0.0, "zero weight never divides by zero");
     }
 
     #[test]

@@ -1,10 +1,11 @@
-//! Blocking client for the line-JSON serving protocol (examples + benches).
+//! Blocking client for the line-JSON serving protocol (examples, benches,
+//! and the cluster front-end's control-plane calls).
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::ServeStats;
 use crate::util::json::Json;
@@ -67,16 +68,74 @@ impl Default for GenOpts {
 }
 
 /// A persistent connection to the HLA server.
+///
+/// By default reads block forever (the historical behavior: a hung
+/// replica stalls the caller indefinitely).  [`Client::connect_timeout`]
+/// caps every read; a timed-out **admin** round-trip gets one retry on a
+/// fresh connection after a backoff (admin requests are idempotent
+/// single-line exchanges).  Generations are never retried — replaying a
+/// non-idempotent request is the caller's decision (the cluster front-end
+/// does it deliberately, with token-prefix suppression).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    addr: String,
+    timeout: Option<Duration>,
+    backoff: Duration,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
+        Self::from_stream(stream, addr, None)
+    }
+
+    /// Connect with `timeout` applied to the dial and to every subsequent
+    /// read.  A read that exceeds it fails with a timeout error instead of
+    /// hanging the caller forever.
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Client> {
+        let sock = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow!("{addr}: no usable socket address"))?;
+        let stream = TcpStream::connect_timeout(&sock, timeout)?;
+        Self::from_stream(stream, addr, Some(timeout))
+    }
+
+    fn from_stream(stream: TcpStream, addr: &str, timeout: Option<Duration>) -> Result<Client> {
         stream.set_nodelay(true)?;
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+        stream.set_read_timeout(timeout)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            addr: addr.to_string(),
+            timeout,
+            backoff: Duration::from_millis(100),
+        })
+    }
+
+    /// Change the read timeout (`None` = block forever).
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        self.timeout = timeout;
+        Ok(())
+    }
+
+    /// Backoff slept before the single admin retry (default 100ms).
+    pub fn set_retry_backoff(&mut self, backoff: Duration) {
+        self.backoff = backoff;
+    }
+
+    /// Drop the (possibly wedged) connection and dial the same address
+    /// again with the same timeout configuration.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let fresh = match self.timeout {
+            Some(t) => Client::connect_timeout(&self.addr, t)?,
+            None => Client::connect(&self.addr)?,
+        };
+        self.reader = fresh.reader;
+        self.writer = fresh.writer;
+        Ok(())
     }
 
     /// Submit a prompt and stream the whole completion.
@@ -158,8 +217,25 @@ impl Client {
         }
     }
 
-    /// Send one admin request line and read the single reply line.
+    /// Send one admin request line and read the single reply line.  With a
+    /// read timeout configured, a timed-out exchange is retried exactly
+    /// once on a fresh connection after [`Self::set_retry_backoff`]'s
+    /// pause (admin exchanges are idempotent, so the resend is safe even
+    /// if the hung server consumed the first request).
     fn admin(&mut self, req: Json) -> Result<Json> {
+        match self.admin_once(&req) {
+            Err(e) if self.timeout.is_some() && is_timeout(&e) => {
+                std::thread::sleep(self.backoff);
+                self.reconnect()?;
+                self.admin_once(&req).map_err(|e2| {
+                    anyhow!("server at {} unresponsive (timed out, retried once): {e2}", self.addr)
+                })
+            }
+            other => other,
+        }
+    }
+
+    fn admin_once(&mut self, req: &Json) -> Result<Json> {
         writeln!(self.writer, "{req}")?;
         let mut line = String::new();
         if self.reader.read_line(&mut line)? == 0 {
@@ -189,4 +265,93 @@ impl Client {
             .map(str::to_string)
             .ok_or_else(|| anyhow!("stats reply missing \"stats_text\""))
     }
+
+    // --- control plane (cluster mode; see PROTOCOL.md "Control plane") ---
+
+    /// REGISTER: learn the replica's model identity.  Returns
+    /// `(cfg_name, cfg_fingerprint)`.
+    pub fn register(&mut self) -> Result<(String, u64)> {
+        let msg = self.admin(Json::obj(vec![("control", Json::str("register"))]))?;
+        let cfg = msg
+            .get("cfg")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("register reply missing \"cfg\""))?
+            .to_string();
+        let fp = msg
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("register reply missing \"fingerprint\""))?;
+        let fp = u64::from_str_radix(fp, 16)
+            .map_err(|_| anyhow!("register reply: bad fingerprint {fp:?}"))?;
+        Ok((cfg, fp))
+    }
+
+    /// HEALTH: liveness probe; returns the replica's in-flight count.
+    pub fn health(&mut self) -> Result<u64> {
+        let msg = self.admin(Json::obj(vec![("control", Json::str("health"))]))?;
+        msg.get("in_flight")
+            .and_then(Json::as_f64)
+            .map(|f| f as u64)
+            .ok_or_else(|| anyhow!("health reply missing \"in_flight\""))
+    }
+
+    /// DETACH_SESSION: pull a session's CRC-framed snapshot bytes off the
+    /// replica.  With `keep` the replica retains its copy (a read-only
+    /// export); without, the snapshot is consumed (a true detach).
+    pub fn detach_session(&mut self, session: u64, keep: bool) -> Result<Vec<u8>> {
+        let mut req = vec![
+            ("control", Json::str("detach_session")),
+            ("session", Json::num(session as f64)),
+        ];
+        if keep {
+            req.push(("keep", Json::Bool(true)));
+        }
+        let msg = self.admin(Json::obj(req))?;
+        let b64 = msg
+            .get("snapshot")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("detach reply missing \"snapshot\""))?;
+        crate::util::b64::decode(b64).map_err(|e| anyhow!("detach reply: {e}"))
+    }
+
+    /// ATTACH_SESSION: hand a snapshot frame to the replica.  The replica
+    /// verifies CRC, format version and config fingerprint before its
+    /// store accepts the session; returns the attached session id.
+    pub fn attach_session(&mut self, snapshot: &[u8]) -> Result<u64> {
+        let msg = self.admin(Json::obj(vec![
+            ("control", Json::str("attach_session")),
+            ("snapshot", Json::str(crate::util::b64::encode(snapshot))),
+        ]))?;
+        msg.get("session")
+            .and_then(Json::as_f64)
+            .map(|f| f as u64)
+            .ok_or_else(|| anyhow!("attach reply missing \"session\""))
+    }
+
+    /// DRAIN: enumerate the sessions resident on the replica so the caller
+    /// can evacuate them (detach each, attach elsewhere).
+    pub fn drain(&mut self) -> Result<Vec<u64>> {
+        let msg = self.admin(Json::obj(vec![("control", Json::str("drain"))]))?;
+        let arr = msg
+            .get("sessions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("drain reply missing \"sessions\""))?;
+        let mut ids = Vec::with_capacity(arr.len());
+        for v in arr {
+            match v.as_f64() {
+                Some(f) => ids.push(f as u64),
+                None => bail!("drain reply: non-numeric session id"),
+            }
+        }
+        Ok(ids)
+    }
+}
+
+/// Does this error chain bottom out in a read timeout?
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>()
+        .map(|io| {
+            matches!(io.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+        })
+        .unwrap_or(false)
 }

@@ -61,10 +61,28 @@
 //!     exposition, carried in `{"stats_text": "...", "replicas": N}` so
 //!     the protocol stays one JSON object per line.
 //!
+//! Control-plane extension (requires serving in cluster mode, see
+//! [`serve_cluster`]; admin requests issued by the front-end router, not
+//! by clients — documented in `docs/PROTOCOL.md` § Control plane):
+//!   * `{"control": "register"}` — identity handshake: config name, the
+//!     64-bit state-layout fingerprint (hex string — a u64 does not
+//!     survive the f64 round-trip), and per-session state bytes.
+//!   * `{"control": "health"}` — liveness probe; replies with the
+//!     replica's total in-flight request count.
+//!   * `{"control": "detach_session", "session": id, "keep": true}` —
+//!     export `<id>`'s snapshot frame as base64 (`keep` peeks; omitted,
+//!     the snapshot is consumed).
+//!   * `{"control": "attach_session", "snapshot": "<b64>"}` — import a
+//!     snapshot frame: CRC/version checked, fingerprint checked against
+//!     this replica's config, then stored for the next `resume`.
+//!   * `{"control": "drain"}` — list every resident session id so the
+//!     front-end can detach them before retiring the replica.
+//!
 //! Error replies are one-line objects: `{"error": "<reason>"}` — sent for
 //! malformed JSON, resume/fork without a session store, `fork_of` without
-//! a `"session"` id, unknown sessions, out-of-range ids, and `stats`
-//! requests against a server without a registry.  Session ids are JSON
+//! a `"session"` id, unknown sessions, out-of-range ids, `stats`
+//! requests against a server without a registry, and `control` requests
+//! against a server not in cluster mode.  Session ids are JSON
 //! numbers and must be integers in `[0, 2^53)` — larger values do not
 //! survive the f64 round-trip and are rejected.
 //!
@@ -94,6 +112,18 @@ use crate::util::json::Json;
 /// `"stats"` admin request merges them into one fleet-wide snapshot.
 pub struct ServeObs {
     pub stats: Vec<Arc<LiveStats>>,
+}
+
+/// What a replica tells the cluster front-end about itself on `register`:
+/// enough to route compatible sessions to it and budget migrations.  The
+/// fingerprint is [`crate::session::state_fingerprint`] over one lane's
+/// state layout — two replicas attach each other's snapshots iff it
+/// matches.
+pub struct ReplicaIdentity {
+    pub cfg_name: String,
+    pub cfg_fingerprint: u64,
+    /// Per-session snapshot payload size ([`crate::runtime::ModelCfg::state_nbytes_per_seq`]).
+    pub state_bytes: usize,
 }
 
 /// Serve until `stop` is set (stateless: no session snapshot/resume).
@@ -131,6 +161,23 @@ pub fn serve_full(
     stop: Arc<AtomicBool>,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> Result<()> {
+    serve_cluster(addr, router, sessions, obs, None, stop, on_bound)
+}
+
+/// [`serve_full`] plus a cluster identity: enables the `"control"` admin
+/// verbs (`register` / `health` / `detach_session` / `attach_session` /
+/// `drain`) so a [`crate::cluster`] front-end can health-check this
+/// replica and move sessions on and off it over the wire.  A session
+/// store is required for the session-moving verbs to succeed.
+pub fn serve_cluster(
+    addr: &str,
+    router: Arc<Router>,
+    sessions: Option<Arc<SessionStore>>,
+    obs: Option<Arc<ServeObs>>,
+    identity: Option<Arc<ReplicaIdentity>>,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
@@ -140,11 +187,18 @@ pub fn serve_full(
                 let router = router.clone();
                 let sessions = sessions.clone();
                 let obs = obs.clone();
+                let identity = identity.clone();
                 // handlers are detached: they exit when their client hangs
                 // up (read_line returns 0), so shutdown never blocks on a
                 // connection that is idle but still open.
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &router, sessions.as_deref(), obs.as_deref());
+                    let _ = handle_conn(
+                        stream,
+                        &router,
+                        sessions.as_deref(),
+                        obs.as_deref(),
+                        identity.as_deref(),
+                    );
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -161,6 +215,7 @@ fn handle_conn(
     router: &Router,
     sessions: Option<&SessionStore>,
     obs: Option<&ServeObs>,
+    identity: Option<&ReplicaIdentity>,
 ) -> Result<()> {
     let peer = stream.peer_addr()?;
     let reader = BufReader::new(stream.try_clone()?);
@@ -170,7 +225,7 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        match handle_request(&line, router, sessions, obs, &mut writer) {
+        match handle_request(&line, router, sessions, obs, identity, &mut writer) {
             Ok(()) => {}
             Err(e) => {
                 let err = Json::obj(vec![("error", Json::str(e.to_string()))]);
@@ -205,6 +260,84 @@ fn handle_stats(fmt: &Json, obs: Option<&ServeObs>, writer: &mut TcpStream) -> R
     Ok(())
 }
 
+/// The `"control"` admin verbs: the cluster front-end's side-channel for
+/// identity, liveness, and wire-level session migration.  Snapshot frames
+/// travel base64-inside-JSON so the line protocol stays printable; the
+/// frame's own CRC + the config fingerprint guard the payload, so a
+/// corrupted or foreign snapshot is rejected before it can reach a lane.
+fn handle_control(
+    verb: &Json,
+    req: &Json,
+    router: &Router,
+    sessions: Option<&SessionStore>,
+    identity: Option<&ReplicaIdentity>,
+    writer: &mut TcpStream,
+) -> Result<()> {
+    let identity = identity
+        .ok_or_else(|| anyhow!("control: not serving in cluster mode (no replica identity)"))?;
+    let verb = verb.as_str().ok_or_else(|| anyhow!("control: verb must be a string"))?;
+    let need_store = || {
+        sessions.ok_or_else(|| anyhow!("control: {verb}: serving without a session store"))
+    };
+    let msg = match verb {
+        "register" => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("cfg", Json::str(&identity.cfg_name)),
+            // u64 fingerprints do not survive the f64 round-trip; ship hex
+            ("fingerprint", Json::str(format!("{:016x}", identity.cfg_fingerprint))),
+            ("state_bytes", Json::num(identity.state_bytes as f64)),
+        ]),
+        "health" => {
+            let in_flight: usize =
+                (0..router.n_replicas()).map(|i| router.in_flight(i)).sum();
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("in_flight", Json::num(in_flight as f64)),
+            ])
+        }
+        "detach_session" => {
+            let store = need_store()?;
+            let sid = parse_session_id(req, "session")?
+                .ok_or_else(|| anyhow!("detach_session requires a \"session\" id"))?;
+            let keep = req.get("keep").and_then(Json::as_bool).unwrap_or(false);
+            // keep=true copies the snapshot out (the front-end refreshing
+            // its failover desk); without it the detach is a move and the
+            // session no longer lives here.
+            let snap = if keep { store.peek(sid) } else { store.claim(sid, None) }
+                .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("session", Json::num(sid as f64)),
+                ("snapshot", Json::str(crate::util::b64::encode(&snap.to_bytes()))),
+            ])
+        }
+        "attach_session" => {
+            let store = need_store()?;
+            let b64 = req
+                .get("snapshot")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("attach_session requires a \"snapshot\" payload"))?;
+            let bytes = crate::util::b64::decode(b64)
+                .map_err(|e| anyhow!("attach_session: bad base64: {e}"))?;
+            let snap = crate::session::SessionSnapshot::from_bytes(&bytes)
+                .map_err(|e| anyhow!("attach_session: bad snapshot frame: {e}"))?;
+            snap.ensure_fingerprint(identity.cfg_fingerprint)?;
+            let sid = snap.id;
+            store.put(snap);
+            Json::obj(vec![("ok", Json::Bool(true)), ("session", Json::num(sid as f64))])
+        }
+        "drain" => {
+            let store = need_store()?;
+            let ids: Vec<Json> =
+                store.ids().into_iter().map(|id| Json::num(id as f64)).collect();
+            Json::obj(vec![("ok", Json::Bool(true)), ("sessions", Json::Arr(ids))])
+        }
+        other => return Err(anyhow!("control: unknown verb {other:?}")),
+    };
+    writeln!(writer, "{msg}")?;
+    Ok(())
+}
+
 /// Session ids ride in JSON numbers, so only integers below 2^53 survive
 /// the f64 round-trip exactly; reject anything else rather than silently
 /// storing a snapshot under a corrupted id.
@@ -223,10 +356,14 @@ fn handle_request(
     router: &Router,
     sessions: Option<&SessionStore>,
     obs: Option<&ServeObs>,
+    identity: Option<&ReplicaIdentity>,
     writer: &mut TcpStream,
 ) -> Result<()> {
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
     // admin requests short-circuit before any generation fields parse
+    if let Some(verb) = req.get("control") {
+        return handle_control(verb, &req, router, sessions, identity, writer);
+    }
     if let Some(fmt) = req.get("stats") {
         return handle_stats(fmt, obs, writer);
     }

@@ -34,9 +34,18 @@ pub fn detach(
     }
 }
 
-/// Restore a snapshot's state into one lane of a pool (the write_lane hook).
-pub fn attach(snap: &SessionSnapshot, pool: &mut StatePool, lane: usize) {
+/// Restore a snapshot's state into one lane of a pool (the write_lane
+/// hook).  Refuses — typed, lane untouched — when the snapshot's state
+/// layout does not match the pool's (a snapshot from a different model
+/// config would silently corrupt the lane otherwise).
+pub fn attach(
+    snap: &SessionSnapshot,
+    pool: &mut StatePool,
+    lane: usize,
+) -> Result<(), super::CfgMismatch> {
+    snap.ensure_fingerprint(pool.lane_fingerprint())?;
     pool.write_lane(lane, &snap.state);
+    Ok(())
 }
 
 /// Copy a lane's state directly between two pools (same state layout) —
@@ -67,7 +76,7 @@ pub fn migrate_via_store(
     let snap = store
         .claim(id, Some(cfg_name))
         .ok_or_else(|| anyhow::anyhow!("session {id} vanished mid-migration"))?;
-    attach(&snap, dst, dst_lane);
+    attach(&snap, dst, dst_lane)?;
     store.migrations.incr();
     Ok(snap)
 }
@@ -129,8 +138,42 @@ mod tests {
         assert_eq!(snap.state_nbytes(), cfg.state_nbytes_per_seq());
 
         let mut other = StatePool::new(&cfg);
-        attach(&snap, &mut other, 2);
+        attach(&snap, &mut other, 2).unwrap();
         assert_eq!(other.read_lane(2), pool.read_lane(1));
+    }
+
+    #[test]
+    fn attach_rejects_mismatched_config_typed_and_leaves_lane_untouched() {
+        let cfg = test_cfg();
+        let pool = filled_pool(&cfg, 4);
+        let sampler = Sampler::new(SamplerCfg::greedy());
+        let snap = detach(&pool, 0, 5, "t", &sampler, b'a', 1);
+
+        // a destination with a different layer count / head_dim
+        let other_json = r#"{
+          "configs": {"u": {"vocab": 16, "d_model": 8, "n_layers": 3,
+            "n_heads": 2, "head_dim": 8, "d_ffn": 32, "kv_heads": 2,
+            "mixer": "hla2", "chunk": 4, "gamma": 1.0, "lam": 0.0,
+            "norm_mode": "abs", "eps": 1e-6, "n_params": 100,
+            "n_param_tensors": 2, "n_state_tensors": 2,
+            "param_paths": [["['embed']", [16, 8]]],
+            "state_paths": [["['c']", [3, 3, 2, 8, 8]], ["['m']", [3, 3, 2, 8]]],
+            "train_batch": 2, "train_seq": 8, "decode_batch": 3,
+            "prefill_len": 4}},
+          "artifacts": {}
+        }"#;
+        let other_cfg = Manifest::parse(other_json).unwrap().configs["u"].clone();
+        let mut dst = StatePool::new(&other_cfg);
+        let err = attach(&snap, &mut dst, 1).unwrap_err();
+        assert_eq!(err.id, 5);
+        assert_eq!(err.have, snap.cfg_fingerprint());
+        assert_eq!(err.want, dst.lane_fingerprint());
+        // the lane was never written
+        assert!(dst.read_lane(1).iter().all(|t| t.data.iter().all(|&x| x == 0.0)));
+        // same-config destination still attaches
+        let mut ok = StatePool::new(&cfg);
+        attach(&snap, &mut ok, 1).unwrap();
+        assert_eq!(ok.read_lane(1), pool.read_lane(0));
     }
 
     #[test]

@@ -37,5 +37,8 @@ pub mod store;
 pub type SessionId = u64;
 
 pub use migrate::{attach, detach, migrate_lane, migrate_via_store};
-pub use snapshot::{SamplerState, SessionSnapshot, FORMAT_VERSION};
+pub use snapshot::{
+    cfg_state_fingerprint, shape_fingerprint, state_fingerprint, CfgMismatch, SamplerState,
+    SessionSnapshot, FORMAT_VERSION,
+};
 pub use store::{spill_file, spill_sessions, SessionStore, StoreCfg, StoreStats};

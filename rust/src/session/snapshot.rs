@@ -16,13 +16,80 @@ use anyhow::{ensure, Result};
 use super::codec::{Reader, Writer};
 use super::SessionId;
 use crate::model::sampler::{Sampler, SamplerCfg};
+use crate::runtime::ModelCfg;
 use crate::tensor::Tensor;
 
 /// Binary format version (bump on layout change; readers reject unknown).
-pub const FORMAT_VERSION: u32 = 1;
+/// v2 added the config fingerprint to the header.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Magic prefix: "HLAS" little-endian.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"HLAS");
+
+/// Typed rejection for a snapshot whose state layout does not match the
+/// destination's (different shapes / layer count / component arity).
+/// Attaching such a snapshot would silently corrupt the destination lane —
+/// every attach path checks the fingerprint first and surfaces this error.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error(
+    "session {id}: snapshot fingerprint {have:#018x} (cfg {cfg_name:?}) does not match \
+     destination fingerprint {want:#018x} — refusing to attach"
+)]
+pub struct CfgMismatch {
+    pub id: SessionId,
+    pub cfg_name: String,
+    /// Fingerprint of the snapshot's state layout.
+    pub have: u64,
+    /// Fingerprint the destination expects.
+    pub want: u64,
+}
+
+/// FNV-1a over a state layout: per tensor its rank then every dim, plus the
+/// tensor count.  Any shape or layer-count drift between two model configs
+/// changes the state layout and therefore the fingerprint.
+pub fn shape_fingerprint<'a>(shapes: impl IntoIterator<Item = &'a [usize]>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |h: &mut u64, v: u64| {
+        for b in v.to_le_bytes() {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    let mut n = 0u64;
+    for s in shapes {
+        n += 1;
+        mix(&mut h, s.len() as u64);
+        for &d in s {
+            mix(&mut h, d as u64);
+        }
+    }
+    mix(&mut h, n);
+    h
+}
+
+/// Fingerprint of a concrete state tensor set (a snapshot's payload, or a
+/// fresh `ModelState::to_tensors()` — both sides of an attach).
+pub fn state_fingerprint(state: &[Tensor]) -> u64 {
+    shape_fingerprint(state.iter().map(|t| t.shape.as_slice()))
+}
+
+/// The fingerprint a config's engine-path snapshots carry: the per-lane
+/// slice of every `state_paths` component (batch dim collapsed to 1) —
+/// exactly the shapes `StatePool::read_lane` produces.
+pub fn cfg_state_fingerprint(cfg: &ModelCfg) -> u64 {
+    let shapes: Vec<Vec<usize>> = cfg
+        .state_paths
+        .iter()
+        .map(|(_, s)| {
+            let mut s = s.clone();
+            if s.len() > 1 {
+                s[1] = 1;
+            }
+            s
+        })
+        .collect();
+    shape_fingerprint(shapes.iter().map(|s| s.as_slice()))
+}
 
 /// Captured sampler: config plus the exact RNG stream position, so a
 /// resumed generation draws the same tokens an uninterrupted one would.
@@ -85,6 +152,29 @@ impl SessionSnapshot {
         self.state.iter().map(Tensor::nbytes).sum()
     }
 
+    /// Fingerprint of this snapshot's state layout (shapes + arity).  A
+    /// pure function of the payload, so it cannot drift from the state it
+    /// describes; `to_bytes` persists it in the header and `from_bytes`
+    /// cross-checks header against payload.
+    pub fn cfg_fingerprint(&self) -> u64 {
+        state_fingerprint(&self.state)
+    }
+
+    /// The attach compatibility gate: refuse (typed) unless this
+    /// snapshot's layout fingerprint matches what the destination expects.
+    pub fn ensure_fingerprint(&self, want: u64) -> Result<(), CfgMismatch> {
+        let have = self.cfg_fingerprint();
+        if have != want {
+            return Err(CfgMismatch {
+                id: self.id,
+                cfg_name: self.cfg_name.clone(),
+                have,
+                want,
+            });
+        }
+        Ok(())
+    }
+
     /// Copy-on-snapshot fork: a new session continuing from the same
     /// prefix state.  With `reseed`, the fork's sampler starts a fresh
     /// stream from that seed (so N forks of one prompt prefix diverge);
@@ -107,6 +197,7 @@ impl SessionSnapshot {
         w.u32(FORMAT_VERSION);
         w.u64(self.id);
         w.str(&self.cfg_name);
+        w.u64(self.cfg_fingerprint());
         w.u64(self.tokens_generated);
         w.u8(self.last_token);
         w.f32(self.sampler.temperature);
@@ -146,6 +237,7 @@ impl SessionSnapshot {
         );
         let id = r.u64()?;
         let cfg_name = r.str()?;
+        let cfg_fingerprint = r.u64()?;
         let tokens_generated = r.u64()?;
         let last_token = r.u8()?;
         let temperature = r.f32()?;
@@ -171,6 +263,12 @@ impl SessionSnapshot {
             state.push(Tensor::from_vec(&shape, data));
         }
         ensure!(r.remaining() == 0, "{} trailing bytes after snapshot", r.remaining());
+        let computed = state_fingerprint(&state);
+        ensure!(
+            computed == cfg_fingerprint,
+            "snapshot header fingerprint {cfg_fingerprint:#018x} does not match its state \
+             layout ({computed:#018x})"
+        );
         Ok(SessionSnapshot {
             id,
             cfg_name,
@@ -254,6 +352,52 @@ mod tests {
         // no reseed: exact continuation of the parent's stream
         let twin = snap.fork(100, None);
         assert_eq!(twin.sampler, snap.sampler);
+    }
+
+    #[test]
+    fn fingerprint_tracks_state_layout_only() {
+        let a = sample_snapshot(1);
+        let mut b = sample_snapshot(2);
+        // different ids / values, same layout → same fingerprint
+        b.tokens_generated = 999;
+        b.state[0].data[0] += 1.0;
+        assert_eq!(a.cfg_fingerprint(), b.cfg_fingerprint());
+        // a layer-count (leading-dim) drift changes it
+        let mut c = sample_snapshot(3);
+        c.state[0] = Tensor::zeros(&[3, 1, 2, 4, 4]);
+        assert_ne!(a.cfg_fingerprint(), c.cfg_fingerprint());
+        // so does dropping a component
+        let mut d = sample_snapshot(4);
+        d.state.pop();
+        assert_ne!(a.cfg_fingerprint(), d.cfg_fingerprint());
+        // the gate is typed and carries both sides
+        let err = c.ensure_fingerprint(a.cfg_fingerprint()).unwrap_err();
+        assert_eq!(err.id, 3);
+        assert_eq!(err.have, c.cfg_fingerprint());
+        assert_eq!(err.want, a.cfg_fingerprint());
+        assert!(err.to_string().contains("refusing to attach"), "{err}");
+        a.ensure_fingerprint(b.cfg_fingerprint()).unwrap();
+    }
+
+    #[test]
+    fn cfg_fingerprint_matches_lane_slice_of_state_paths() {
+        // engine-path snapshots carry [L, 1, H, ...] lane slices of the
+        // config's state_paths — cfg_state_fingerprint must agree
+        let json = r#"{
+          "configs": {"t": {"vocab": 16, "d_model": 8, "n_layers": 2,
+            "n_heads": 2, "head_dim": 4, "d_ffn": 32, "kv_heads": 2,
+            "mixer": "hla2", "chunk": 4, "gamma": 1.0, "lam": 0.0,
+            "norm_mode": "abs", "eps": 1e-6, "n_params": 100,
+            "n_param_tensors": 2, "n_state_tensors": 2,
+            "param_paths": [["['embed']", [16, 8]]],
+            "state_paths": [["['c']", [2, 3, 2, 4, 4]], ["['m']", [2, 3, 2, 4]]],
+            "train_batch": 2, "train_seq": 8, "decode_batch": 3,
+            "prefill_len": 4}},
+          "artifacts": {}
+        }"#;
+        let cfg = crate::runtime::Manifest::parse(json).unwrap().configs["t"].clone();
+        // sample_snapshot's layout is exactly this config's lane slice
+        assert_eq!(sample_snapshot(1).cfg_fingerprint(), cfg_state_fingerprint(&cfg));
     }
 
     #[test]

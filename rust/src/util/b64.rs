@@ -1,0 +1,112 @@
+//! Minimal standard base64 (RFC 4648, with padding) — carries binary
+//! session-snapshot frames inside the line-JSON control plane without
+//! pulling in a dependency.  The CRC lives inside the snapshot frame, so
+//! this layer only has to be reversible, not self-checking.
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes as standard padded base64.
+pub fn encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let word = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(word >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(word >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { ALPHABET[(word >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { ALPHABET[word as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Decode standard base64 (padded or unpadded).  Rejects characters
+/// outside the alphabet and impossible lengths.
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    fn val(c: u8) -> Result<u32, String> {
+        match c {
+            b'A'..=b'Z' => Ok((c - b'A') as u32),
+            b'a'..=b'z' => Ok((c - b'a') as u32 + 26),
+            b'0'..=b'9' => Ok((c - b'0') as u32 + 52),
+            b'+' => Ok(62),
+            b'/' => Ok(63),
+            _ => Err(format!("invalid base64 byte {c:#04x}")),
+        }
+    }
+    let stripped: &[u8] = s.as_bytes();
+    let stripped = match stripped {
+        [rest @ .., b'=', b'='] => rest,
+        [rest @ .., b'='] => rest,
+        _ => stripped,
+    };
+    if stripped.len() % 4 == 1 {
+        return Err(format!("impossible base64 length {}", stripped.len()));
+    }
+    let mut out = Vec::with_capacity(stripped.len() * 3 / 4);
+    for chunk in stripped.chunks(4) {
+        let mut word: u32 = 0;
+        for &c in chunk {
+            word = (word << 6) | val(c)?;
+        }
+        match chunk.len() {
+            4 => {
+                out.push((word >> 16) as u8);
+                out.push((word >> 8) as u8);
+                out.push(word as u8);
+            }
+            3 => {
+                word <<= 6;
+                out.push((word >> 16) as u8);
+                out.push((word >> 8) as u8);
+            }
+            2 => {
+                word <<= 12;
+                out.push((word >> 16) as u8);
+            }
+            _ => unreachable!("length % 4 == 1 rejected above"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_all_lengths() {
+        let mut rng = crate::util::rng::Rng::new(0xB64);
+        for len in 0..200 {
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let enc = encode(&bytes);
+            assert_eq!(decode(&enc).unwrap(), bytes, "len {len}");
+            // unpadded form decodes too
+            assert_eq!(decode(enc.trim_end_matches('=')).unwrap(), bytes, "len {len}");
+        }
+    }
+
+    #[test]
+    fn garbage_rejected_not_panicked() {
+        assert!(decode("a\nb").is_err());
+        assert!(decode("ab cd").is_err());
+        assert!(decode("a").is_err());
+        assert!(decode("{json}").is_err());
+    }
+}

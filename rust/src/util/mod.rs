@@ -1,5 +1,6 @@
 //! Small shared substrates: PRNG, JSON, time helpers.
 
+pub mod b64;
 pub mod json;
 pub mod rng;
 

@@ -24,8 +24,8 @@ fn committed_bench_reports_validate() {
             found.push(name.to_string());
         }
     }
-    // the serving and observability trajectories ship with the repo
-    for want in ["BENCH_e8.json", "BENCH_e18.json"] {
+    // the serving, observability, and cluster trajectories ship with the repo
+    for want in ["BENCH_e8.json", "BENCH_e18.json", "BENCH_e19.json"] {
         assert!(found.iter().any(|n| n == want), "missing {want} (found {found:?})");
     }
 }

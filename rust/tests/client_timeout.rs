@@ -1,0 +1,90 @@
+//! Client resilience against a silent server: a replica that accepts the
+//! TCP connection but never replies must not hang the caller.  With
+//! `connect_timeout`, every read is capped; a timed-out admin round-trip
+//! is retried exactly once on a fresh connection after the configured
+//! backoff, then surfaces an error naming the unresponsive server.  This
+//! is the failure mode the cluster front-end leans on: a wedged (not
+//! crashed) replica must strike out in bounded time.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hla::server::client::Client;
+
+/// A listener that accepts connections and then says nothing, counting
+/// how many victims it swallowed.
+fn spawn_silent_listener() -> (String, Arc<AtomicUsize>, Arc<AtomicBool>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let accepted = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    {
+        let accepted = accepted.clone();
+        let stop = stop.clone();
+        listener.set_nonblocking(true).unwrap();
+        std::thread::spawn(move || {
+            let mut held = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        accepted.fetch_add(1, Ordering::Relaxed);
+                        held.push(stream); // hold open, never reply
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                }
+            }
+        });
+    }
+    (addr, accepted, stop)
+}
+
+#[test]
+fn silent_server_times_out_with_exactly_one_retry() {
+    let (addr, accepted, stop) = spawn_silent_listener();
+    let timeout = Duration::from_millis(150);
+    let backoff = Duration::from_millis(30);
+
+    let mut client = Client::connect_timeout(&addr, timeout).expect("dial succeeds");
+    client.set_retry_backoff(backoff);
+
+    let t0 = Instant::now();
+    let err = client.stats().expect_err("a silent server must not look healthy");
+    let elapsed = t0.elapsed();
+
+    // the error names the unresponsive server and admits the retry
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("unresponsive") && msg.contains("retried once"),
+        "error should describe the timeout+retry, got: {msg}"
+    );
+    assert!(msg.contains(&addr), "error should name the server, got: {msg}");
+
+    // exactly one retry: the original dial plus one reconnect
+    std::thread::sleep(Duration::from_millis(20)); // let the accept loop drain
+    assert_eq!(
+        accepted.load(Ordering::Relaxed),
+        2,
+        "expected the initial connection plus exactly one retry"
+    );
+
+    // bounded: two timed-out reads + one backoff (plus scheduling slack),
+    // nowhere near a hang
+    assert!(elapsed >= timeout, "must actually wait out the read timeout");
+    assert!(
+        elapsed < 2 * timeout + backoff + Duration::from_millis(500),
+        "two capped reads + backoff expected, took {elapsed:?}"
+    );
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn timeout_free_client_is_untouched_by_retry_plumbing() {
+    // without connect_timeout the retry path must never engage: a plain
+    // connect against a dead port fails immediately at dial time
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener); // port is now closed
+    assert!(Client::connect(&addr).is_err(), "dialing a closed port must fail");
+}

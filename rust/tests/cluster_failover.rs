@@ -1,0 +1,329 @@
+//! Cluster failover, pinned byte-for-byte: kill the replica serving a
+//! session mid-generation and the front-end must resume the stream on a
+//! survivor with *identical bytes* to an uninterrupted run — greedy and
+//! seeded alike.  This is the serving payoff of constant-size HLA state:
+//! the front-end's parked snapshot is a few KB, so failover is re-attach
+//! + replay, not a context re-ingest.
+//!
+//! Two layers:
+//!
+//! * In-process chaos (always on): real fixture replicas behind
+//!   `serve_cluster`, with the doomed one reached through a chaos proxy
+//!   that severs the wire after exactly N relayed reply lines — a
+//!   deterministic mid-stream death, timing plays no part.
+//! * Process-level smoke (`HLA_CLUSTER_SMOKE=1`): two `hla serve
+//!   --fixture` child processes and an `hla router` child, with a real
+//!   SIGKILL between turns; resume must still be byte-identical.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use hla::cluster::{fixture_identity, serve_frontend, spawn_fixture_engine, Frontend, FrontendCfg};
+use hla::coordinator::router::{RoutePolicy, Router};
+use hla::metrics::LiveStats;
+use hla::server::{serve_cluster, ServeObs};
+use hla::session::SessionStore;
+use hla::testing::fixtures::{build_model_full, ModelShape};
+
+const SEED: u64 = 7;
+
+/// A full in-process replica: fixture engine + session store behind the
+/// real wire server with cluster identity.  Same `SEED` everywhere —
+/// failover replays must continue on identical weights.
+fn spawn_replica() -> (String, Arc<AtomicBool>) {
+    let model = build_model_full("hla2", &ModelShape::default(), SEED);
+    let identity = Arc::new(fixture_identity(&model));
+    let store = Arc::new(SessionStore::in_memory(64));
+    let stats = Arc::new(LiveStats::new());
+    let (tx, _engine) = spawn_fixture_engine(model, store.clone(), stats.clone());
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    let obs = Arc::new(ServeObs { stats: vec![stats] });
+    let stop = Arc::new(AtomicBool::new(false));
+    let (atx, arx) = mpsc::channel();
+    let stop2 = stop.clone();
+    std::thread::spawn(move || {
+        serve_cluster("127.0.0.1:0", router, Some(store), Some(obs), Some(identity), stop2, |a| {
+            atx.send(a.to_string()).unwrap();
+        })
+        .unwrap();
+    });
+    (arx.recv().unwrap(), stop)
+}
+
+/// TCP chaos proxy in front of a replica.  Transparent until `armed`;
+/// once armed, the first connection whose replica→client side reaches
+/// `cut_after` forwarded lines is severed and the proxy stops accepting —
+/// a deterministic mid-stream crash, as seen from the front-end.
+fn spawn_chaos_proxy(target: String, cut_after: usize) -> (String, Arc<AtomicBool>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    listener.set_nonblocking(true).unwrap();
+    let armed = Arc::new(AtomicBool::new(false));
+    let dead = Arc::new(AtomicBool::new(false));
+    let armed2 = armed.clone();
+    std::thread::spawn(move || loop {
+        if dead.load(Ordering::Relaxed) {
+            return; // crashed: refuse all future connections
+        }
+        match listener.accept() {
+            Ok((client, _)) => {
+                client.set_nodelay(true).unwrap();
+                let Ok(upstream) = TcpStream::connect(&target) else { return };
+                upstream.set_nodelay(true).unwrap();
+                let mut c_read = client.try_clone().unwrap();
+                let mut u_write = upstream.try_clone().unwrap();
+                std::thread::spawn(move || {
+                    let _ = std::io::copy(&mut c_read, &mut u_write);
+                    let _ = u_write.shutdown(Shutdown::Both);
+                });
+                let armed = armed2.clone();
+                let dead = dead.clone();
+                std::thread::spawn(move || {
+                    let mut reader = BufReader::new(upstream);
+                    let mut writer = client;
+                    let mut lines = 0usize;
+                    let mut buf = String::new();
+                    loop {
+                        buf.clear();
+                        match reader.read_line(&mut buf) {
+                            Ok(0) | Err(_) => {
+                                let _ = writer.shutdown(Shutdown::Both);
+                                return;
+                            }
+                            Ok(_) => {}
+                        }
+                        if writer.write_all(buf.as_bytes()).is_err() {
+                            return;
+                        }
+                        lines += 1;
+                        if armed.load(Ordering::Relaxed) && lines >= cut_after {
+                            // the crash: both directions die mid-stream
+                            dead.store(true, Ordering::Relaxed);
+                            let _ = writer.shutdown(Shutdown::Both);
+                            let _ = reader.get_ref().shutdown(Shutdown::Both);
+                            return;
+                        }
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => return,
+        }
+    });
+    (addr, armed)
+}
+
+fn spawn_test_frontend(replicas: Vec<String>) -> (String, Arc<Frontend>, Arc<AtomicBool>) {
+    let fe = Arc::new(Frontend::new(FrontendCfg {
+        replica_addrs: replicas,
+        policy: RoutePolicy::RoundRobin,
+        health_interval: Duration::from_millis(100),
+        io_timeout: Duration::from_millis(500),
+    }));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (atx, arx) = mpsc::channel();
+    let fe2 = fe.clone();
+    let stop2 = stop.clone();
+    std::thread::spawn(move || {
+        serve_frontend("127.0.0.1:0", fe2, stop2, |a| {
+            atx.send(a.to_string()).unwrap();
+        })
+        .unwrap();
+    });
+    (arx.recv().unwrap(), fe, stop)
+}
+
+/// One request over a fresh connection; returns the raw reply lines:
+/// every token line plus the terminal (`done`/`error`) line.
+fn request(addr: &str, line: &str) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    writeln!(writer, "{line}").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut lines = Vec::new();
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        let n = reader.read_line(&mut buf).unwrap();
+        assert!(n > 0, "connection closed before a terminal line (got {lines:?})");
+        let l = buf.trim_end().to_string();
+        let terminal = l.contains("\"done\"") || l.contains("\"error\"");
+        lines.push(l);
+        if terminal {
+            return lines;
+        }
+    }
+}
+
+fn turn1_line(session: u64, sampler: &str) -> String {
+    format!(
+        "{{\"prompt\": \"higher-order linear attention\", \"max_tokens\": 16, {sampler} \
+         \"session\": {session}}}"
+    )
+}
+
+fn turn2_line(session: u64, sampler: &str) -> String {
+    format!(
+        "{{\"prompt\": \" resumes mid-stream\", \"max_tokens\": 24, {sampler} \
+         \"session\": {session}, \"resume\": true}}"
+    )
+}
+
+/// The chaos scenario for one sampler config: the session's home replica
+/// dies after exactly 7 tokens of turn 2 have reached the front-end; the
+/// resumed stream must be byte-identical to an uninterrupted reference.
+fn assert_failover_byte_identical(session: u64, sampler: &str) {
+    // reference fleet: one healthy replica behind its own front-end
+    let (ref_replica, _ref_stop) = spawn_replica();
+    let (ref_fe_addr, _ref_fe, _ref_fe_stop) = spawn_test_frontend(vec![ref_replica]);
+    let ref_turn1 = request(&ref_fe_addr, &turn1_line(session, sampler));
+    let ref_turn2 = request(&ref_fe_addr, &turn2_line(session, sampler));
+    assert_eq!(ref_turn1.len(), 17, "16 tokens + done expected: {ref_turn1:?}");
+    assert_eq!(ref_turn2.len(), 25, "24 tokens + done expected: {ref_turn2:?}");
+    assert!(ref_turn2.last().unwrap().contains("\"resumed\":true"), "{ref_turn2:?}");
+
+    // chaos fleet: replica A sits behind the proxy; round-robin sends the
+    // session's first turn to index 0, so A becomes its pinned home
+    let (a_addr, _a_stop) = spawn_replica();
+    let (b_addr, _b_stop) = spawn_replica();
+    let (proxy_addr, armed) = spawn_chaos_proxy(a_addr, 7);
+    let (fe_addr, fe, _fe_stop) = spawn_test_frontend(vec![proxy_addr, b_addr]);
+
+    let turn1 = request(&fe_addr, &turn1_line(session, sampler));
+    assert_eq!(turn1, ref_turn1, "pre-failover turn diverged from reference");
+    assert_eq!(fe.desk_len(), 1, "completed session must be parked at the desk");
+
+    // arm the wire-cut and run turn 2: 7 tokens flow, then A "crashes";
+    // the front-end must re-attach the desk snapshot to B and continue
+    armed.store(true, Ordering::Relaxed);
+    let turn2 = request(&fe_addr, &turn2_line(session, sampler));
+    assert_eq!(
+        turn2, ref_turn2,
+        "failed-over stream is not byte-identical to the uninterrupted one"
+    );
+    assert_eq!(fe.failovers.load(Ordering::Relaxed), 1, "exactly one mid-stream failover");
+    assert!(fe.migrations.load(Ordering::Relaxed) >= 1, "the session must have migrated");
+    assert!(!fe.registry.replicas[0].is_alive(), "the cut replica must be marked dead");
+    assert!(fe.registry.replicas[1].is_alive(), "the survivor must stay alive");
+}
+
+#[test]
+fn mid_stream_failover_is_byte_identical_greedy() {
+    assert_failover_byte_identical(42, "\"temperature\": 0,");
+}
+
+#[test]
+fn mid_stream_failover_is_byte_identical_seeded() {
+    // temperature 1 with a fixed seed: failover must restore the exact
+    // RNG state, not just the weights — any drift diverges immediately
+    assert_failover_byte_identical(43, "\"temperature\": 1.0, \"seed\": 99,");
+}
+
+#[test]
+fn stats_fan_out_merges_the_fleet() {
+    let (a_addr, _a_stop) = spawn_replica();
+    let (b_addr, _b_stop) = spawn_replica();
+    let (fe_addr, _fe, _fe_stop) = spawn_test_frontend(vec![a_addr, b_addr]);
+    // one generation per replica (round-robin), then a merged stats pull
+    for _ in 0..2 {
+        request(&fe_addr, "{\"prompt\": \"ab\", \"max_tokens\": 4, \"temperature\": 0}");
+    }
+    let reply = request(&fe_addr, "{\"stats\": true}");
+    assert_eq!(reply.len(), 1, "stats is a single-line reply: {reply:?}");
+    let line = &reply[0];
+    assert!(line.contains("\"replicas\":2"), "both replicas must answer: {line}");
+    assert!(line.contains("\"tokens_out\":8"), "4 tokens per replica summed: {line}");
+}
+
+// ---------------------------------------------------------------------------
+// Process-level smoke: real processes, real SIGKILL.  Opt-in via
+// HLA_CLUSTER_SMOKE=1 (CI runs it; plain `cargo test` skips to stay hermetic).
+// ---------------------------------------------------------------------------
+
+/// Spawn an `hla` subcommand and wait for its "listening on ADDR" line.
+fn spawn_hla(args: &[&str]) -> (std::process::Child, String) {
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_hla"))
+        .args(args)
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning hla");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = BufReader::new(stdout);
+    let mut addr = None;
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap_or(0) > 0 {
+        if let Some(a) = line.trim().strip_prefix("listening on ") {
+            addr = Some(a.to_string());
+            break;
+        }
+        line.clear();
+    }
+    let addr = addr.unwrap_or_else(|| {
+        let _ = child.kill();
+        panic!("child never printed its listen address");
+    });
+    // keep the pipe drained so the child never blocks on a full stdout
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).unwrap_or(0) > 0 {
+            sink.clear();
+        }
+    });
+    (child, addr)
+}
+
+#[test]
+fn process_level_failover_smoke() {
+    if std::env::var("HLA_CLUSTER_SMOKE").as_deref() != Ok("1") {
+        eprintln!("skipping process-level smoke (set HLA_CLUSTER_SMOKE=1 to run)");
+        return;
+    }
+    let fixture_args =
+        ["serve", "--fixture", "true", "--seed", "7", "--addr", "127.0.0.1:0"];
+    // reference: one uninterrupted replica process spoken to directly
+    let (mut ref_child, ref_addr) = spawn_hla(&fixture_args);
+    let sampler = "\"temperature\": 1.0, \"seed\": 5,";
+    let ref_turn1 = request(&ref_addr, &turn1_line(91, sampler));
+    let ref_turn2 = request(&ref_addr, &turn2_line(91, sampler));
+
+    // the fleet: two replica processes plus the router process
+    let (mut a, a_addr) = spawn_hla(&fixture_args);
+    let (mut b, b_addr) = spawn_hla(&fixture_args);
+    let (mut router, fe_addr) = spawn_hla(&[
+        "router",
+        "--addr",
+        "127.0.0.1:0",
+        "--replicas",
+        &format!("{a_addr},{b_addr}"),
+        "--route",
+        "round-robin",
+        "--health-interval",
+        "0.2",
+    ]);
+
+    let turn1 = request(&fe_addr, &turn1_line(91, sampler));
+    assert_eq!(turn1, ref_turn1, "routed turn diverged from the direct reference");
+
+    // SIGKILL the session's home (round-robin pinned it to replica A),
+    // then resume: the router must discover the death at relay time,
+    // re-attach the parked snapshot to B, and replay byte-identically
+    a.kill().expect("killing replica A");
+    let _ = a.wait();
+    let turn2 = request(&fe_addr, &turn2_line(91, sampler));
+    assert_eq!(turn2, ref_turn2, "post-SIGKILL resume is not byte-identical");
+
+    let _ = router.kill();
+    let _ = b.kill();
+    let _ = ref_child.kill();
+    let _ = router.wait();
+    let _ = b.wait();
+    let _ = ref_child.wait();
+}
