@@ -19,10 +19,15 @@
 //! Mid-stream failover: if a replica dies while streaming (connection
 //! reset, EOF, read timeout), the front-end marks it dead, re-attaches
 //! the session's desk snapshot to a survivor, replays the original
-//! request line, suppresses the tokens the client already received, and
-//! keeps streaming.  Generation is deterministic (exact RNG state in the
-//! snapshot), so the resumed stream is byte-identical to an uninterrupted
-//! one — greedy and seeded alike (`rust/tests/cluster_failover.rs`).
+//! request line, suppresses the reply lines the client already received,
+//! and keeps streaming.  Generation is deterministic (exact RNG state in
+//! the snapshot), so the resumed stream is byte-identical to an
+//! uninterrupted one — greedy and seeded alike
+//! (`rust/tests/cluster_failover.rs`).  Only *replica-side* failures
+//! trigger failover: a client that disconnects mid-stream aborts its own
+//! relay and leaves fleet liveness untouched, and a resume whose snapshot
+//! cannot be re-attached errors out rather than splicing a fresh stream
+//! onto the delivered prefix (`rust/tests/cluster_relay.rs`).
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -168,6 +173,13 @@ impl Frontend {
         self.desk.lock().unwrap().len()
     }
 
+    /// Is the session's desk snapshot attached to a live replica — i.e.
+    /// can a failover replay actually resume it?
+    fn desk_home_alive(&self, sid: u64) -> bool {
+        let desk = self.desk.lock().unwrap();
+        desk.get(&sid).is_some_and(|d| self.registry.replicas[d.home].is_alive())
+    }
+
     /// Refresh the desk after a session-tagged completion: export the
     /// snapshot (replica keeps its copy) and pin the session to its home.
     fn after_completion(&self, sid: u64, idx: usize) {
@@ -231,8 +243,26 @@ impl Frontend {
     /// the replica's store forgets it) and attach it elsewhere.  The
     /// replica keeps serving stateless traffic; it can then be retired
     /// without losing a conversation.
+    ///
+    /// Drain requires a quiesced replica: a consuming detach racing an
+    /// in-flight generation would leave the session resident on *both*
+    /// sides (the drained replica's engine re-puts its snapshot at
+    /// completion) with diverging state.  The drain is refused while the
+    /// front-end has requests relaying to the replica or the replica
+    /// itself reports in-flight work; traffic reaching the replica
+    /// without going through this front-end is not visible here — stop
+    /// such clients before draining.
     pub fn drain_replica(&self, idx: usize) -> Result<usize> {
+        let addr = &self.registry.replicas[idx].addr;
+        let relaying = self.registry.replicas[idx].in_flight();
+        if relaying > 0 {
+            bail!("drain: {addr} has {relaying} relayed request(s) in flight; quiesce first");
+        }
         let mut c = self.control(idx)?;
+        let reported = c.health()?;
+        if reported > 0 {
+            bail!("drain: {addr} reports {reported} in-flight request(s); quiesce first");
+        }
         let ids = c.drain()?;
         let mut moved = 0;
         for sid in ids {
@@ -358,25 +388,46 @@ fn handle_stats_fanout(fmt: &Json, fe: &Frontend, writer: &mut TcpStream) -> Res
     Ok(())
 }
 
-/// Lenient id read for *routing* (the replica re-validates strictly; a
-/// malformed id just routes by policy and gets the replica's error back).
+/// Id read shared by routing and desk bookkeeping: the same rule as the
+/// replica's `parse_session_id` (non-negative exact integer below 2^53),
+/// so the front-end's desk key can never diverge from the id the replica
+/// validated — a malformed id yields `None` here (routes by policy, no
+/// desk entry) and the replica's error line comes back to the client.
+fn id_field(req: &Json, key: &str) -> Option<u64> {
+    req.get(key)
+        .and_then(Json::as_f64)
+        .filter(|s| *s >= 0.0 && s.fract() == 0.0 && *s < 9_007_199_254_740_992.0)
+        .map(|s| s as u64)
+}
+
+/// Routing key: forks must land where the parent's snapshot lives.
 fn route_key(req: &Json) -> Option<u64> {
-    let id = |k: &str| {
-        req.get(k)
-            .and_then(Json::as_f64)
-            .filter(|s| *s >= 0.0 && s.fract() == 0.0)
-            .map(|s| s as u64)
-    };
-    // forks must land where the parent's snapshot lives
-    id("fork_of").or_else(|| id("session"))
+    id_field(req, "fork_of").or_else(|| id_field(req, "session"))
+}
+
+/// Why a relay attempt stopped — the distinction drives failover policy.
+/// `Upstream` means the replica side failed (dial, read, EOF, bad reply):
+/// the replica is presumed dead and the stream fails over to a survivor.
+/// `Client` means the *downstream* write to our own client failed: client
+/// disconnects are routine, no replica did anything wrong, and treating
+/// one as a replica death would needlessly mark a healthy replica dead —
+/// repeated across retries, that can cascade through the whole fleet.
+/// A `Client` error just aborts the relay, touching no liveness state.
+enum RelayErr {
+    Upstream(anyhow::Error),
+    Client(std::io::Error),
 }
 
 /// Relay one generation: pick, stream through, fail over on replica
 /// death.  `done`/`error` lines are terminal; everything else passes
-/// through verbatim, minus the already-relayed token prefix on a replay.
+/// through verbatim, minus the already-relayed prefix on a replay.
 fn relay_generation(line: &str, req: &Json, fe: &Frontend, writer: &mut TcpStream) -> Result<()> {
     let key = route_key(req);
-    let session = req.get("session").and_then(Json::as_f64).map(|s| s as u64);
+    let session = id_field(req, "session");
+    // a resume/fork can only be replayed where the session's state lives;
+    // a plain (first-turn) request replays from scratch on any replica
+    let needs_state = req.get("fork_of").is_some()
+        || req.get("resume").and_then(Json::as_bool).unwrap_or(false);
     let mut relayed = 0usize;
     let mut attempts = 0usize;
     loop {
@@ -388,6 +439,24 @@ fn relay_generation(line: &str, req: &Json, fe: &Frontend, writer: &mut TcpStrea
         replica.end_request();
         match res {
             Ok((terminal, clean)) => {
+                // a replayed resume/fork must actually have resumed on the
+                // survivor: if it silently degraded to a fresh lane, the
+                // spliced stream (resumed prefix + fresh tail) would not be
+                // byte-identical — surface an error instead of forwarding
+                // a `done` that looks healthy
+                if clean && needs_state && attempts > 1 {
+                    let resumed = Json::parse(&terminal)
+                        .ok()
+                        .and_then(|d| d.get("resumed").and_then(Json::as_bool))
+                        .unwrap_or(false);
+                    if !resumed {
+                        bail!(
+                            "failover replay did not resume session state on {}; \
+                             refusing to splice a fresh stream onto the delivered prefix",
+                            replica.addr
+                        );
+                    }
+                }
                 // desk refresh BEFORE the client sees `done`: once the
                 // final line lands, the session is parked and pinned, so
                 // an immediate next turn (even on a fresh connection)
@@ -398,9 +467,14 @@ fn relay_generation(line: &str, req: &Json, fe: &Frontend, writer: &mut TcpStrea
                 writer.write_all(terminal.as_bytes())?;
                 return Ok(());
             }
-            Err(e) if attempts <= fe.registry.len() => {
+            Err(RelayErr::Client(e)) => {
+                // the client went away mid-stream: abort quietly, the
+                // replica stays alive and no failover is recorded
+                return Err(anyhow!(e).context("client write failed mid-stream"));
+            }
+            Err(RelayErr::Upstream(e)) if attempts <= fe.registry.len() => {
                 log::warn!(
-                    "replica {} failed mid-stream ({} token(s) relayed): {e}",
+                    "replica {} failed mid-stream ({} line(s) relayed): {e}",
                     replica.addr,
                     relayed
                 );
@@ -408,68 +482,102 @@ fn relay_generation(line: &str, req: &Json, fe: &Frontend, writer: &mut TcpStrea
                 fe.mark_dead_and_rebalance(idx);
                 // rebalance re-attached this session's desk snapshot to a
                 // survivor (when one exists); the retry replays the
-                // original line there and suppresses the relayed prefix
+                // original line there and suppresses the relayed prefix.
+                // If the snapshot could NOT be re-homed (no desk entry, or
+                // every attach failed), a resume/fork replay would land on
+                // a replica without the session and degrade to a fresh
+                // lane — error out rather than splice mismatched streams.
+                if needs_state && !key.is_some_and(|sid| fe.desk_home_alive(sid)) {
+                    bail!(
+                        "replica {} died mid-stream and the session snapshot could not \
+                         be re-attached to a survivor; cannot resume this stream",
+                        replica.addr
+                    );
+                }
                 continue;
             }
-            Err(e) => return Err(e),
+            Err(RelayErr::Upstream(e)) => return Err(e),
         }
     }
 }
 
-/// One relay attempt against replica `idx`.  Token lines stream straight
-/// through (minus the suppressed prefix on a replay); the terminal line
-/// is *returned, not written* — the caller forwards it only after the
-/// desk bookkeeping, so a client that saw `done` can rely on the session
-/// being parked.  Returns `(terminal_line, clean)` where `clean` is true
-/// for a `done` line and false for a replica-side `error` line; `Err`
-/// means transport failure — the failover trigger.
+/// One relay attempt against replica `idx`.  Non-terminal lines stream
+/// straight through (minus the suppressed prefix on a replay); the
+/// terminal line is *returned, not written* — the caller forwards it only
+/// after the desk bookkeeping, so a client that saw `done` can rely on
+/// the session being parked.  Returns `(terminal_line, clean)` where
+/// `clean` is true for a `done` line and false for a replica-side `error`
+/// line; `Err(Upstream)` means replica-side transport failure — the
+/// failover trigger; `Err(Client)` means our own client's write failed
+/// and must never trigger failover.
 fn relay_once(
     fe: &Frontend,
     idx: usize,
     line: &str,
     writer: &mut TcpStream,
     relayed: &mut usize,
-) -> Result<(String, bool)> {
+) -> std::result::Result<(String, bool), RelayErr> {
+    let up = RelayErr::Upstream;
     let addr = &fe.registry.replicas[idx].addr;
     let sock = addr
-        .to_socket_addrs()?
+        .to_socket_addrs()
+        .map_err(|e| up(e.into()))?
         .next()
-        .ok_or_else(|| anyhow!("{addr}: no usable socket address"))?;
+        .ok_or_else(|| up(anyhow!("{addr}: no usable socket address")))?;
     let upstream = TcpStream::connect_timeout(&sock, fe.cfg.io_timeout)
-        .with_context(|| format!("dialing replica {addr}"))?;
-    upstream.set_nodelay(true)?;
-    upstream.set_read_timeout(Some(fe.relay_timeout()))?;
-    let mut up_writer = upstream.try_clone()?;
+        .with_context(|| format!("dialing replica {addr}"))
+        .map_err(up)?;
+    upstream.set_nodelay(true).map_err(|e| up(e.into()))?;
+    upstream.set_read_timeout(Some(fe.relay_timeout())).map_err(|e| up(e.into()))?;
+    let mut up_writer = upstream.try_clone().map_err(|e| up(e.into()))?;
     let mut up_reader = BufReader::new(upstream);
-    writeln!(up_writer, "{line}")?;
+    writeln!(up_writer, "{line}").map_err(|e| up(e.into()))?;
 
     let skip = *relayed;
     let mut seen = 0usize;
     let mut buf = String::new();
     loop {
         buf.clear();
-        if up_reader.read_line(&mut buf)? == 0 {
-            return Err(anyhow!("replica {addr} closed the connection mid-stream"));
+        if up_reader.read_line(&mut buf).map_err(|e| up(e.into()))? == 0 {
+            return Err(up(anyhow!("replica {addr} closed the connection mid-stream")));
         }
-        let msg =
-            Json::parse(&buf).map_err(|e| anyhow!("replica {addr}: bad reply line: {e}"))?;
-        if msg.get("token").is_some() {
-            seen += 1;
-            // replays re-stream from the turn's start: suppress what the
-            // client already has, forward only the new tail
-            if seen > skip {
-                writer.write_all(buf.as_bytes())?;
-                *relayed += 1;
-            }
-            continue;
-        }
+        let msg = Json::parse(&buf)
+            .map_err(|e| up(anyhow!("replica {addr}: bad reply line: {e}")))?;
         let terminal_ok = msg.get("done").and_then(Json::as_bool) == Some(true);
         let terminal_err = msg.get("error").is_some();
         if terminal_ok || terminal_err {
             return Ok((buf.clone(), terminal_ok));
         }
-        // unknown non-terminal line (a future protocol extension): pass
-        // it through untouched
-        writer.write_all(buf.as_bytes())?;
+        // replays re-stream from the turn's start: every non-terminal
+        // line — token or future protocol extension alike — counts toward
+        // the suppression prefix, so a replay never re-sends a line the
+        // client already holds
+        seen += 1;
+        if seen > skip {
+            writer.write_all(buf.as_bytes()).map_err(RelayErr::Client)?;
+            *relayed += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_validated_like_the_replica() {
+        let ok = Json::parse("{\"session\": 42}").unwrap();
+        assert_eq!(id_field(&ok, "session"), Some(42));
+        assert_eq!(route_key(&ok), Some(42));
+        // forks route (and park) under the parent id
+        let fork = Json::parse("{\"fork_of\": 7, \"session\": 8}").unwrap();
+        assert_eq!(route_key(&fork), Some(7));
+        // anything the replica's parse_session_id rejects must not become
+        // a desk key either: negative, fractional, or >= 2^53
+        for bad in ["{\"session\": -1}", "{\"session\": 1.5}", "{\"session\": 9007199254740992}"] {
+            let req = Json::parse(bad).unwrap();
+            assert_eq!(id_field(&req, "session"), None, "{bad}");
+            assert_eq!(route_key(&req), None, "{bad}");
+        }
     }
 }

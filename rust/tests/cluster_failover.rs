@@ -227,6 +227,20 @@ fn mid_stream_failover_is_byte_identical_seeded() {
 }
 
 #[test]
+fn drain_refuses_a_replica_with_requests_in_flight() {
+    let (a_addr, _a_stop) = spawn_replica();
+    let (b_addr, _b_stop) = spawn_replica();
+    let (_fe_addr, fe, _fe_stop) = spawn_test_frontend(vec![a_addr, b_addr]);
+    // a consuming detach racing an in-flight generation would leave the
+    // session on both replicas with diverging state — drain must refuse
+    fe.registry.replicas[0].begin_request();
+    let err = fe.drain_replica(0).unwrap_err().to_string();
+    assert!(err.contains("in flight"), "drain must demand a quiesced replica: {err}");
+    fe.registry.replicas[0].end_request();
+    assert_eq!(fe.drain_replica(0).unwrap(), 0, "quiesced drain of an empty replica moves 0");
+}
+
+#[test]
 fn stats_fan_out_merges_the_fleet() {
     let (a_addr, _a_stop) = spawn_replica();
     let (b_addr, _b_stop) = spawn_replica();

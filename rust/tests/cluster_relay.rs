@@ -1,0 +1,288 @@
+//! Relay-path regression tests against hand-rolled fake replicas.
+//!
+//! `cluster_failover.rs` pins the happy failover path byte-for-byte on
+//! real fixture engines; this file pins the *policy* of the relay loop —
+//! which failures trigger failover and which must not — using scripted
+//! TCP replicas so each scenario is deterministic:
+//!
+//! * a client that disconnects mid-stream must NOT mark the (healthy)
+//!   replica dead or count as a failover — otherwise every routine
+//!   disconnect would cascade sessions around the fleet and could mark
+//!   every replica dead;
+//! * a failover replay must never duplicate non-token reply lines (the
+//!   suppression prefix counts every non-terminal line, not just tokens);
+//! * a resume whose snapshot cannot follow it to a survivor — desk empty,
+//!   or the survivor silently degrades to a fresh lane — must surface an
+//!   error, never splice a fresh tail onto the already-delivered prefix.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use hla::cluster::{serve_frontend, Frontend, FrontendCfg};
+use hla::coordinator::router::RoutePolicy;
+
+/// A non-terminal, non-token reply line (a "future protocol extension"
+/// as the relay sees it).
+const NOTE: &str = "{\"note\":\"keepalive\"}";
+/// A session-less terminal line (no "resumed" field — exactly what a
+/// lane that silently degraded to fresh would report at best).
+const DONE: &str = "{\"done\":true,\"finish\":\"length\",\"n\":4}";
+
+fn token_line(i: usize) -> String {
+    format!("{{\"text\":\"t\",\"token\":{i}}}")
+}
+
+/// What a scripted replica does with one generation request.
+#[derive(Clone, Copy)]
+enum Gen {
+    /// NOTE, `n` token lines, then [`DONE`].
+    Full(usize),
+    /// NOTE, `n` token lines, then drop the socket — a mid-stream death
+    /// as the front-end sees it.
+    Cut(usize),
+    /// Token lines forever, no terminal — guarantees the *downstream*
+    /// write is what fails when the client walks away.
+    Flood,
+}
+
+#[derive(Clone, Copy)]
+struct FakeCfg {
+    /// Behavior for plain generation requests.
+    gen: Gen,
+    /// Behavior for `"resume": true` requests.
+    resume: Gen,
+    /// `detach_session` replies with a stub snapshot (true) or an error
+    /// (false — the desk never gets a copy, narrowing failover cover).
+    detach_ok: bool,
+}
+
+/// A scripted replica: answers the control plane like a real one
+/// (register / health / detach / attach) and runs the configured [`Gen`]
+/// script for generation requests.
+fn spawn_fake_replica(cfg: FakeCfg) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { return };
+            std::thread::spawn(move || handle_fake_conn(stream, cfg));
+        }
+    });
+    addr
+}
+
+fn fake(gen: Gen, resume: Gen, detach_ok: bool) -> String {
+    spawn_fake_replica(FakeCfg { gen, resume, detach_ok })
+}
+
+fn handle_fake_conn(stream: TcpStream, cfg: FakeCfg) {
+    let _ = stream.set_nodelay(true);
+    let Ok(clone) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(clone);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        if line.contains("\"register\"") {
+            let reply = "{\"cfg\":\"fake\",\"fingerprint\":\"00000000000000ff\",\
+                         \"ok\":true,\"state_bytes\":0}";
+            let _ = writeln!(writer, "{reply}");
+        } else if line.contains("\"health\"") {
+            let _ = writeln!(writer, "{{\"in_flight\":0,\"ok\":true}}");
+        } else if line.contains("\"detach_session\"") {
+            if cfg.detach_ok {
+                let _ = writeln!(writer, "{{\"ok\":true,\"session\":5,\"snapshot\":\"AAAA\"}}");
+            } else {
+                let _ = writeln!(writer, "{{\"error\":\"detach refused\"}}");
+            }
+        } else if line.contains("\"attach_session\"") {
+            let _ = writeln!(writer, "{{\"ok\":true,\"session\":5}}");
+        } else if line.contains("\"prompt\"") {
+            let gen = if line.contains("\"resume\"") { cfg.resume } else { cfg.gen };
+            if run_gen(&mut writer, gen).is_err() {
+                return;
+            }
+            if matches!(gen, Gen::Cut(_)) {
+                return; // drop the connection: the scripted crash
+            }
+        } else {
+            let _ = writeln!(writer, "{{\"error\":\"unknown request\"}}");
+        }
+    }
+}
+
+fn run_gen(writer: &mut TcpStream, gen: Gen) -> std::io::Result<()> {
+    match gen {
+        Gen::Full(n) => {
+            writeln!(writer, "{NOTE}")?;
+            for i in 1..=n {
+                writeln!(writer, "{}", token_line(i))?;
+            }
+            writeln!(writer, "{DONE}")
+        }
+        Gen::Cut(n) => {
+            writeln!(writer, "{NOTE}")?;
+            for i in 1..=n {
+                writeln!(writer, "{}", token_line(i))?;
+            }
+            Ok(())
+        }
+        Gen::Flood => {
+            let mut i = 0usize;
+            loop {
+                i += 1;
+                writeln!(writer, "{}", token_line(i))?;
+            }
+        }
+    }
+}
+
+/// LeastLoaded ties break to the lowest index, so with an idle fleet the
+/// first replica is always picked — the scripts rely on that. The health
+/// interval is set far past the test horizon: a fake replica's listener
+/// keeps answering probes after a scripted mid-stream death, so a running
+/// checker could revive it and perturb the scripted routing.
+fn spawn_fake_frontend(replicas: Vec<String>) -> (String, Arc<Frontend>, Arc<AtomicBool>) {
+    let fe = Arc::new(Frontend::new(FrontendCfg {
+        replica_addrs: replicas,
+        policy: RoutePolicy::LeastLoaded,
+        health_interval: Duration::from_secs(60),
+        io_timeout: Duration::from_millis(500),
+    }));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (atx, arx) = mpsc::channel();
+    let fe2 = fe.clone();
+    let stop2 = stop.clone();
+    std::thread::spawn(move || {
+        serve_frontend("127.0.0.1:0", fe2, stop2, |a| {
+            atx.send(a.to_string()).unwrap();
+        })
+        .unwrap();
+    });
+    (arx.recv().unwrap(), fe, stop)
+}
+
+/// One request over a fresh connection; returns the raw reply lines up to
+/// and including the terminal (`done`/`error`) line.
+fn request(addr: &str, line: &str) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    writeln!(writer, "{line}").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut lines = Vec::new();
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        let n = reader.read_line(&mut buf).unwrap();
+        assert!(n > 0, "connection closed before a terminal line (got {lines:?})");
+        let l = buf.trim_end().to_string();
+        let terminal = l.contains("\"done\"") || l.contains("\"error\"");
+        lines.push(l);
+        if terminal {
+            return lines;
+        }
+    }
+}
+
+#[test]
+fn client_disconnect_does_not_poison_fleet_liveness() {
+    let a = fake(Gen::Flood, Gen::Flood, false);
+    let (fe_addr, fe, _stop) = spawn_fake_frontend(vec![a]);
+    {
+        let stream = TcpStream::connect(&fe_addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        writeln!(writer, "{{\"prompt\": \"abandoned\", \"max_tokens\": 8}}").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut buf = String::new();
+        for _ in 0..2 {
+            buf.clear();
+            assert!(reader.read_line(&mut buf).unwrap() > 0);
+        }
+        // dropped here: the client walks away with the stream mid-flight;
+        // the flooding replica guarantees the front-end's next writes to
+        // this dead socket fail
+    }
+    std::thread::sleep(Duration::from_millis(500));
+    assert_eq!(
+        fe.failovers.load(Ordering::Relaxed),
+        0,
+        "a client disconnect must never be treated as a replica failure"
+    );
+    assert!(
+        fe.registry.replicas[0].is_alive(),
+        "the replica served correctly and must stay alive"
+    );
+}
+
+#[test]
+fn failover_replay_never_duplicates_non_token_lines() {
+    let a = fake(Gen::Cut(2), Gen::Cut(2), false);
+    let b = fake(Gen::Full(4), Gen::Full(4), false);
+    let (fe_addr, fe, _stop) = spawn_fake_frontend(vec![a, b]);
+    // replica 0 dies after NOTE + 2 tokens; the replay on replica 1
+    // re-streams from the start and must suppress all three lines the
+    // client already holds — NOTE included
+    let lines = request(&fe_addr, "{\"prompt\": \"x\", \"max_tokens\": 8}");
+    let mut expect = vec![NOTE.to_string()];
+    expect.extend((1..=4).map(token_line));
+    expect.push(DONE.to_string());
+    assert_eq!(lines, expect, "replayed stream must deliver every line exactly once");
+    assert_eq!(fe.failovers.load(Ordering::Relaxed), 1, "the replica death is one failover");
+}
+
+#[test]
+fn lost_snapshot_resume_errors_instead_of_splicing() {
+    // replica 0 refuses the end-of-turn export, so the desk holds nothing
+    // to fail over with; it then dies mid-resume
+    let a = fake(Gen::Full(4), Gen::Cut(2), false);
+    let b = fake(Gen::Full(4), Gen::Full(4), false);
+    let (fe_addr, fe, _stop) = spawn_fake_frontend(vec![a, b]);
+    let turn1 = request(&fe_addr, "{\"prompt\": \"seed\", \"max_tokens\": 8, \"session\": 5}");
+    assert!(turn1.last().unwrap().contains("\"done\""), "{turn1:?}");
+    assert_eq!(fe.desk_len(), 0, "the refused export must leave the desk empty");
+    let turn2 = request(
+        &fe_addr,
+        "{\"prompt\": \"more\", \"max_tokens\": 8, \"session\": 5, \"resume\": true}",
+    );
+    let last = turn2.last().unwrap();
+    assert!(
+        last.contains("\"error\"") && last.contains("cannot resume"),
+        "a resume with no re-attachable snapshot must error, not splice: {turn2:?}"
+    );
+    assert_eq!(turn2.len(), 4, "NOTE + 2 relayed tokens + the error line: {turn2:?}");
+    assert_eq!(fe.failovers.load(Ordering::Relaxed), 1, "the replica death is a real failover");
+}
+
+#[test]
+fn degraded_resume_on_survivor_errors_instead_of_splicing() {
+    // here the snapshot DOES migrate — but the survivor's resume comes
+    // back without resumed:true (a silent degrade to a fresh lane), so
+    // the spliced stream would not be byte-identical
+    let a = fake(Gen::Full(4), Gen::Cut(2), true);
+    let b = fake(Gen::Full(4), Gen::Full(4), true);
+    let (fe_addr, fe, _stop) = spawn_fake_frontend(vec![a, b]);
+    let turn1 = request(&fe_addr, "{\"prompt\": \"seed\", \"max_tokens\": 8, \"session\": 5}");
+    assert!(turn1.last().unwrap().contains("\"done\""), "{turn1:?}");
+    assert_eq!(fe.desk_len(), 1, "the exported snapshot must be parked at the desk");
+    let turn2 = request(
+        &fe_addr,
+        "{\"prompt\": \"more\", \"max_tokens\": 8, \"session\": 5, \"resume\": true}",
+    );
+    let last = turn2.last().unwrap();
+    assert!(
+        last.contains("\"error\"") && last.contains("did not resume"),
+        "a degraded replay must error, not masquerade as a resumed stream: {turn2:?}"
+    );
+    assert_eq!(turn2.len(), 6, "NOTE + 2 + 2 relayed tokens + the error line: {turn2:?}");
+    assert_eq!(fe.migrations.load(Ordering::Relaxed), 1, "the snapshot did migrate first");
+}
