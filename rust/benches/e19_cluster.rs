@@ -52,7 +52,7 @@ fn spawn_replica() -> String {
     let stats = Arc::new(LiveStats::new());
     let (tx, _engine) = spawn_fixture_engine(model, store.clone(), stats.clone());
     let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
-    let obs = Arc::new(ServeObs { stats: vec![stats] });
+    let obs = Arc::new(ServeObs::stats_only(vec![stats]));
     let stop = Arc::new(AtomicBool::new(false));
     let (atx, arx) = mpsc::channel();
     std::thread::spawn(move || {

@@ -1,0 +1,196 @@
+//! E20 — fleet observability overhead: what do the router metrics plane,
+//! relay spans, and the structured event log cost on the relay hot path,
+//! and what does stitching a fleet's span rings into one Chrome trace
+//! cost at export time?
+//!
+//! The relay loop's CPU work is line handling: parse each upstream reply
+//! line, classify terminal vs token, forward the bytes.  That loop is
+//! reproduced here synthetically (no sockets — loopback TCP would bury a
+//! ~100 ns instrumentation delta under ~100 µs of kernel time), and each
+//! variant layers one observability sink on top:
+//!   bare              parse + classify + forward, no instrumentation
+//!   router-stats      + the RouterStats recording the real relay does
+//!                       (counters, relay/overhead/ttft histograms, lane)
+//!   +tracing          + one fully-sampled relay span per request
+//!   +event-log        + one in-memory event per request — a worst-case
+//!                       bound: the real path records events on state
+//!                       transitions (strike/failover/drain), not relays
+//!
+//! The contract this pins: full observability — stats + spans + events —
+//! stays within ~2% of the bare relay loop, cheap enough to leave on in
+//! production (mirroring E18's pin for the engine-side registry).
+//!
+//! The second half measures the export path behind `--trace-out` and
+//! `hla trace-stitch`: reading three processes' rings (10k spans total),
+//! stitching them into one Chrome trace, and serializing the JSON.
+//!
+//! Emits `BENCH_e20.json` (schema hla-bench/1) at the repo root.
+//! Artifact-free; runs everywhere CI does.
+
+use std::time::Instant;
+
+use hla::bench::{banner, bench, black_box, BenchReport};
+use hla::cluster::{EventKind, EventLog, RouterStats};
+use hla::metrics::stitch::{stitch, ProcessTrace};
+use hla::metrics::trace::{splitmix64, Stage, TraceCfg, Tracer};
+use hla::metrics::Table;
+use hla::util::json::Json;
+
+/// Reply lines per simulated relay (a typical short generation).
+const LINES: usize = 32;
+/// Relays per bench iteration.
+const RELAYS: usize = 512;
+const ITERS: usize = 8;
+/// Fleet ring sizes for the stitch-cost case: router + two replicas.
+const STITCH_SPANS: [usize; 3] = [2_000, 4_000, 4_000];
+
+/// ns/relay for one instrumentation variant: the synthetic relay loop —
+/// parse every reply line, classify, forward non-terminals — with
+/// `instrument` run once per relay exactly where the real loop records.
+fn run_variant<F: FnMut(Instant, u64)>(mut instrument: F) -> f64 {
+    let mut lines = vec!["{\"note\":\"keepalive\"}".to_string()];
+    lines.extend((1..LINES).map(|i| format!("{{\"text\":\"t\",\"token\":{i}}}")));
+    lines.push("{\"done\":true,\"finish\":\"length\",\"n\":31}".to_string());
+    let mut sink = String::new();
+    let stats = bench(1, ITERS, || {
+        for r in 0..RELAYS {
+            let t0 = Instant::now();
+            sink.clear();
+            for l in &lines {
+                let msg = Json::parse(l).expect("bench reply line");
+                let terminal = msg.get("done").is_some() || msg.get("error").is_some();
+                if !terminal {
+                    sink.push_str(l);
+                    sink.push('\n');
+                }
+                black_box(&msg);
+            }
+            instrument(t0, r as u64);
+        }
+        black_box(sink.len());
+    });
+    stats.mean_s * 1e9 / RELAYS as f64
+}
+
+/// The RouterStats recording the real relay path performs per request.
+fn record_stats(rs: &RouterStats, idx: usize, t0: Instant) {
+    rs.overhead_hist.record(t0.elapsed());
+    let lane = rs.lane(idx);
+    lane.relays.incr();
+    lane.ttft_hist.record(t0.elapsed());
+    rs.relays.incr();
+    rs.relay_hist.record(t0.elapsed());
+}
+
+fn main() {
+    banner("E20", "fleet observability overhead: relay hot path + stitched export");
+
+    let bare = run_variant(|_, _| {});
+
+    let rs = RouterStats::new();
+    let with_stats = run_variant(|t0, r| {
+        record_stats(&rs, (r % 2) as usize, t0);
+    });
+
+    let tracer = Tracer::new(&TraceCfg { sample: 1.0, capacity: 4096 });
+    let with_tracing = run_variant(|t0, r| {
+        record_stats(&rs, (r % 2) as usize, t0);
+        tracer.span(Stage::Relay, splitmix64(r).max(1), (r % 2) as usize, t0, LINES as u64);
+    });
+
+    let events = EventLog::new();
+    let with_events = run_variant(|t0, r| {
+        record_stats(&rs, (r % 2) as usize, t0);
+        tracer.span(Stage::Relay, splitmix64(r).max(1), (r % 2) as usize, t0, LINES as u64);
+        events.record(
+            EventKind::Attach,
+            "127.0.0.1:0",
+            Some(r),
+            "bench: worst-case per-relay event",
+        );
+    });
+
+    let pct = |x: f64| (x - bare) / bare * 100.0;
+    let mut table = Table::new(&["relay variant", "ns/relay", "overhead %"]);
+    let rows = [
+        ("bare (parse + forward)", bare),
+        ("router-stats", with_stats),
+        ("router-stats + relay spans", with_tracing),
+        ("router-stats + spans + events", with_events),
+    ];
+    for (name, v) in rows {
+        table.row(&[name.to_string(), format!("{v:.0}"), format!("{:+.2}", pct(v))]);
+    }
+    print!("{}", table.render());
+    println!("expected shape: full observability stays within ~2% of the bare loop");
+    println!("(atomics + one seqlock ring write + one event ring push per relay).");
+
+    // ---- stitched export: three rings -> one Chrome trace ----
+    let mk = |cap| Tracer::new(&TraceCfg { sample: 1.0, capacity: cap });
+    let (router_t, rep_a, rep_b) = (mk(4096), mk(8192), mk(8192));
+    for i in 0..STITCH_SPANS[0] as u64 {
+        router_t.span(Stage::Relay, splitmix64(i).max(1), 0, Instant::now(), LINES as u64);
+    }
+    for i in 0..STITCH_SPANS[1] as u64 {
+        rep_a.span(Stage::Admission, splitmix64(i).max(1), 0, Instant::now(), 8);
+    }
+    for i in 0..STITCH_SPANS[2] as u64 {
+        rep_b.span(Stage::DecodeStep, splitmix64(i).max(1), 0, Instant::now(), 1);
+    }
+    let total_spans: usize = STITCH_SPANS.iter().sum();
+    let mut json_bytes = 0usize;
+    let mut trace_events = 0usize;
+    let stitch_stats = bench(1, ITERS, || {
+        let procs = vec![
+            ProcessTrace::from_tracer("router", &router_t),
+            ProcessTrace::from_tracer("replica 0", &rep_a),
+            ProcessTrace::from_tracer("replica 1", &rep_b),
+        ];
+        let doc = stitch(&procs);
+        trace_events = doc.get("traceEvents").and_then(Json::as_arr).map_or(0, <[Json]>::len);
+        json_bytes = doc.to_string().len();
+        black_box(json_bytes);
+    });
+    let stitch_us = stitch_stats.mean_s * 1e6;
+    println!(
+        "stitch: {total_spans} spans from 3 rings -> {trace_events} trace events, \
+         {json_bytes} JSON bytes in {stitch_us:.0} us ({:.1} us per 1k spans)",
+        stitch_us / (total_spans as f64 / 1000.0)
+    );
+
+    let mut report = BenchReport::new(
+        "e20",
+        "fleet observability: relay hot-path overhead + stitched trace export cost",
+    );
+    report.case(
+        "relay/bare",
+        &[("ns_per_relay", bare), ("lines_per_relay", (LINES + 1) as f64)],
+    );
+    report.case(
+        "relay/router_stats",
+        &[("ns_per_relay", with_stats), ("overhead_pct", pct(with_stats))],
+    );
+    report.case(
+        "relay/router_stats_tracing",
+        &[("ns_per_relay", with_tracing), ("overhead_pct", pct(with_tracing))],
+    );
+    report.case(
+        "relay/router_stats_tracing_events",
+        &[("ns_per_relay", with_events), ("overhead_pct", pct(with_events))],
+    );
+    report.case(
+        "stitch/export_10k_spans",
+        &[
+            ("spans", total_spans as f64),
+            ("rings", 3.0),
+            ("trace_events", trace_events as f64),
+            ("json_bytes", json_bytes as f64),
+            ("stitch_us", stitch_us),
+            ("us_per_1k_spans", stitch_us / (total_spans as f64 / 1000.0)),
+        ],
+    );
+    match report.write_repo_root() {
+        Ok(path) => println!("\nperf trajectory: {}", path.display()),
+        Err(e) => eprintln!("\nperf trajectory NOT written: {e}"),
+    }
+}

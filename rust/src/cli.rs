@@ -8,6 +8,7 @@
 //!   serve      TCP serving frontend over N engine replicas
 //!   router     cluster front-end over N `hla serve` replica processes
 //!   top        poll a serving fleet's live stats (the "stats" request)
+//!   trace-stitch  pull span rings over the wire, emit one fleet trace
 //!   sessions   list/inspect/evict spilled session snapshots
 
 use std::sync::atomic::AtomicBool;
@@ -34,7 +35,7 @@ use crate::util::human_bytes;
 
 pub const USAGE: &str = "\
 hla — Higher-order Linear Attention runtime
-usage: hla <info|selftest|train|generate|serve|router|top|sessions> [--flags]
+usage: hla <info|selftest|train|generate|serve|router|top|trace-stitch|sessions> [--flags]
 common flags: --artifacts DIR --model NAME --seed N --config FILE.json
 train:    --steps N --lr F --warmup N --checkpoint PATH
 generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
@@ -61,7 +62,15 @@ router:   --addr HOST:PORT --replicas H:P,H:P,...  (the replica fleet)
           --route POLICY --health-interval SECS  (probe period; 3 missed
           probes mark a replica dead and its sessions re-home)
           --drain H:P  (evacuate that replica's sessions at startup)
-top:      --addr HOST:PORT --interval SECS --count N  (0 = forever)
+          --trace-out PATH.json  (mint trace ids, record relay spans, and
+          re-export a stitched fleet trace every 60s)
+          --event-log PATH.jsonl  (append the structured cluster event
+          journal; the in-memory ring answers {\"events\": N} regardless)
+top:      --addr HOST:PORT --interval SECS --count N  (0 = forever; a
+          router endpoint adds per-replica rows and the router section)
+trace-stitch: --replicas H:P,H:P,...  (router first for pid 0; each
+          endpoint answers the trace_export control verb)
+          --trace-out PATH.json  (default stitched_trace.json)
 sessions: <list|inspect|evict> --spill-dir DIR [--session-id N]";
 
 pub fn run(args: Vec<String>) -> Result<()> {
@@ -81,6 +90,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "serve" => cmd_serve(&cfg),
         "router" => cmd_router(&cfg),
         "top" => cmd_top(&cfg),
+        "trace-stitch" => cmd_trace_stitch(&cfg),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -445,7 +455,7 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
             }
         });
     }
-    let obs = Arc::new(ServeObs { stats: registries });
+    let obs = Arc::new(ServeObs { stats: registries, tracers: tracers.clone() });
     crate::server::serve_full(&cfg.addr, router, Some(store), Some(obs), stop, |addr| {
         println!("listening on {addr}");
     })?;
@@ -464,7 +474,7 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
 /// member must share `--seed` so a failover replay on a different
 /// process continues the stream byte-for-byte.
 fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
-    use crate::cluster::{fixture_identity, spawn_fixture_engine};
+    use crate::cluster::{fixture_identity, spawn_fixture_engine_traced};
     use crate::testing::fixtures::{build_model_full, ModelShape};
 
     let store = Arc::new(SessionStore::new(StoreCfg {
@@ -475,6 +485,7 @@ fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
     let mut senders = vec![];
     let mut handles = vec![];
     let mut registries = vec![];
+    let mut tracers = vec![];
     let mut identity = None;
     for _ in 0..cfg.replicas.max(1) {
         // identical weights in every engine (same seed): a failover
@@ -484,10 +495,13 @@ fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
             identity = Some(Arc::new(fixture_identity(&model)));
         }
         let stats = Arc::new(LiveStats::new());
-        let (tx, handle) = spawn_fixture_engine(model, store.clone(), stats.clone());
+        let tracer = tracer_cfg(cfg);
+        let (tx, handle) =
+            spawn_fixture_engine_traced(model, store.clone(), stats.clone(), tracer.clone());
         senders.push(tx);
         handles.push(handle);
         registries.push(stats);
+        tracers.extend(tracer);
     }
     let identity = identity.expect("at least one engine spawns");
     let router = Arc::new(Router::new(senders, cfg.route));
@@ -500,7 +514,15 @@ fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
         identity.cfg_fingerprint,
         human_bytes(identity.state_bytes),
     );
-    let obs = Arc::new(ServeObs { stats: registries });
+    match &cfg.trace_out {
+        Some(_) => println!(
+            "tracing: replica spans on (sample {:.2}) — pull the ring with the \
+             trace_export verb or `hla trace-stitch`",
+            cfg.trace_sample
+        ),
+        None => println!("tracing: off (enable with --trace-out PATH.json)"),
+    }
+    let obs = Arc::new(ServeObs { stats: registries, tracers });
     crate::server::serve_cluster(
         &cfg.addr,
         router,
@@ -521,23 +543,52 @@ fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
 /// session snapshots, and fails streams over mid-generation when a
 /// replica dies.
 fn cmd_router(cfg: &RunConfig) -> Result<()> {
-    use crate::cluster::{serve_frontend, Frontend, FrontendCfg};
+    use crate::cluster::{serve_frontend, EventLog, Frontend, FrontendCfg};
 
     if cfg.replica_addrs.is_empty() {
         bail!("router: --replicas host:port,host:port,... is required\n{USAGE}");
     }
-    let fe = Arc::new(Frontend::new(FrontendCfg {
-        replica_addrs: cfg.replica_addrs.clone(),
-        policy: cfg.route,
-        health_interval: std::time::Duration::from_secs_f64(cfg.health_interval),
-        ..FrontendCfg::default()
-    }));
+    let tracer = tracer_cfg(cfg);
+    let events = match &cfg.event_log {
+        Some(p) => Some(
+            EventLog::with_journal(std::path::Path::new(p))
+                .map_err(|e| anyhow!("router: --event-log {p}: {e}"))?,
+        ),
+        None => None,
+    };
+    let fe = Arc::new(
+        Frontend::new(FrontendCfg {
+            replica_addrs: cfg.replica_addrs.clone(),
+            policy: cfg.route,
+            health_interval: std::time::Duration::from_secs_f64(cfg.health_interval),
+            ..FrontendCfg::default()
+        })
+        .with_observability(tracer, events),
+    );
     println!(
         "routing across {} replica(s): {} (probe every {}s, 3 misses = dead)",
         cfg.replica_addrs.len(),
         cfg.replica_addrs.join(", "),
         cfg.health_interval,
     );
+    match &cfg.trace_out {
+        Some(p) => println!(
+            "tracing: minting trace ids, relay spans on — stitched fleet trace \
+             re-exported to {p} every 60s (inspect in Perfetto)"
+        ),
+        None => println!("tracing: off (enable with --trace-out PATH.json)"),
+    }
+    match &cfg.event_log {
+        Some(p) => println!("events: journaling to {p}; poll the ring with {{\"events\": N}}"),
+        None => println!("events: ring only (journal with --event-log PATH.jsonl)"),
+    }
+    if let Some(path) = cfg.trace_out.clone() {
+        let fe = fe.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(60));
+            stitch_fleet(&fe, &path);
+        });
+    }
     if let Some(target) = &cfg.drain {
         let idx = cfg
             .replica_addrs
@@ -553,21 +604,130 @@ fn cmd_router(cfg: &RunConfig) -> Result<()> {
     serve_frontend(&cfg.addr, fe, stop, |addr| println!("listening on {addr}"))
 }
 
+/// One stitched-trace export: the router's own ring (pid 0) plus every
+/// live replica's `trace_export` ring, rebased onto one timeline.
+fn stitch_fleet(fe: &crate::cluster::Frontend, path: &str) {
+    use crate::metrics::stitch::{write_stitched, ProcessTrace};
+    let Some(t) = &fe.tracer else { return };
+    let mut procs = vec![ProcessTrace::from_tracer("router", t)];
+    for i in fe.registry.alive_indices() {
+        let addr = fe.registry.replicas[i].addr.clone();
+        let pulled = fe
+            .control(i)
+            .and_then(|mut c| c.trace_export())
+            .and_then(|j| ProcessTrace::from_export(&j));
+        match pulled {
+            Ok(mut p) => {
+                p.name = format!("replica {addr}");
+                procs.push(p);
+            }
+            // a replica serving without --trace-out answers with a typed
+            // error: it just contributes no pid to the stitched view
+            Err(e) => log::warn!("trace: replica {addr} contributed no ring: {e}"),
+        }
+    }
+    if let Err(e) = write_stitched(std::path::Path::new(path), &procs) {
+        eprintln!("[trace: writing {path} failed: {e}]");
+    }
+}
+
+/// `hla trace-stitch` — pull the span ring of every listed endpoint over
+/// the wire (the `trace_export` control verb; routers answer it too) and
+/// write one stitched Chrome trace.  List the router first: `procs[0]`
+/// becomes pid 0 by convention.
+fn cmd_trace_stitch(cfg: &RunConfig) -> Result<()> {
+    use crate::metrics::stitch::{write_stitched, ProcessTrace};
+    use crate::server::client::Client;
+    if cfg.replica_addrs.is_empty() {
+        bail!("trace-stitch: --replicas host:port,host:port,... is required\n{USAGE}");
+    }
+    let out = cfg.trace_out.clone().unwrap_or_else(|| "stitched_trace.json".to_string());
+    let mut procs = Vec::new();
+    for addr in &cfg.replica_addrs {
+        let export = Client::connect(addr)
+            .and_then(|mut c| c.trace_export())
+            .map_err(|e| anyhow!("trace-stitch: {addr}: {e}"))?;
+        let mut p = ProcessTrace::from_export(&export)
+            .map_err(|e| anyhow!("trace-stitch: {addr}: {e}"))?;
+        p.name = format!("{} ({addr})", p.name);
+        println!("pulled {} span(s) from {addr}", p.spans.len());
+        procs.push(p);
+    }
+    write_stitched(std::path::Path::new(&out), &procs)?;
+    println!(
+        "stitched {} process(es) -> {out} (load in Perfetto / chrome://tracing)",
+        procs.len()
+    );
+    Ok(())
+}
+
 /// `hla top` — poll a live server's `"stats"` request and print one
 /// merged summary line per tick (a `top`-style view of the fleet).
+/// Against a cluster front-end the reply also carries the `"router"`
+/// section and the fleet roster, rendered as per-replica rows.
 fn cmd_top(cfg: &RunConfig) -> Result<()> {
+    use crate::metrics::ServeStats;
     use crate::server::client::Client;
+    use crate::util::json::Json;
     let mut client = Client::connect(&cfg.addr)
         .map_err(|e| anyhow!("top: connecting {}: {e} (is `hla serve` running?)", cfg.addr))?;
     let mut tick = 0usize;
     loop {
-        let stats = client.stats().map_err(|e| anyhow!("top: {e}"))?;
-        println!("[{}]", stats.summary_line());
+        let reply = client.stats_reply().map_err(|e| anyhow!("top: {e}"))?;
+        let merged = reply.get("stats").map(ServeStats::from_json).unwrap_or_default();
+        println!("[{}]", merged.summary_line());
+        if let Some(router) = reply.get("router") {
+            render_router_section(router, &reply);
+        }
         tick += 1;
         if cfg.count > 0 && tick >= cfg.count {
             return Ok(());
         }
         std::thread::sleep(std::time::Duration::from_secs_f64(cfg.interval));
+    }
+}
+
+/// The front-end half of a `hla top` tick: router health on one line,
+/// then one row per replica in the fleet roster.
+fn render_router_section(router: &crate::util::json::Json, reply: &crate::util::json::Json) {
+    use crate::util::json::Json;
+    let n = |path: &str| router.path(path).and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "[router: {} relay(s) p50 {:.0}us overhead p50 {:.0}us | {} failover(s) \
+         {} line(s) suppressed | {} strike(s) {} revival(s) | desk {}]",
+        n("relays"),
+        n("relay_us.p50"),
+        n("overhead_us.p50"),
+        n("failovers"),
+        n("replayed_suppressed"),
+        n("strikes"),
+        n("revivals"),
+        n("desk_sessions"),
+    );
+    if let Some(rows) = router.get("per_replica").and_then(Json::as_arr) {
+        for r in rows {
+            let s = |k: &str| r.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+            let f = |k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            let alive = match r.get("alive").and_then(Json::as_bool) {
+                Some(true) => "alive",
+                Some(false) => "DEAD",
+                None => "?",
+            };
+            println!(
+                "  {} {alive}: {} in flight, {} relay(s), ttft p50 {:.0}us",
+                s("addr"),
+                f("in_flight"),
+                f("relays"),
+                f("ttft_us_p50"),
+            );
+        }
+    }
+    if let Some(skipped) = reply.get("skipped").and_then(Json::as_arr) {
+        for sk in skipped {
+            let addr = sk.get("addr").and_then(Json::as_str).unwrap_or("?");
+            let err = sk.get("error").and_then(Json::as_str).unwrap_or("?");
+            println!("  {addr} SKIPPED: {err}");
+        }
     }
 }
 

@@ -1,0 +1,376 @@
+//! Structured cluster event log: the front-end's append-only record of
+//! fleet lifecycle — registrations, health strikes, deaths, revivals,
+//! failovers, session moves, drains.  Metrics say *how much*; this says
+//! *what happened, in what order*, which is what a chaos test asserts and
+//! what an operator greps after a bad night.
+//!
+//! Two sinks, one `record()` call:
+//!
+//! - an in-memory ring (bounded, lock-guarded) queryable over the wire as
+//!   `{"events": N}` — the last N events, newest last;
+//! - optionally a JSONL journal (`hla router --event-log PATH`): one
+//!   event object per line, flushed per event so a crash loses at most
+//!   the event being written.  When the journal outgrows its byte cap it
+//!   is rotated by rewriting the ring's contents tmp+rename style — the
+//!   file on disk is always valid JSONL and always ends with the newest
+//!   events.
+//!
+//! Timestamps are monotonic microseconds since the log opened: ordering
+//! is what the sequence asserts care about, and wall-clock context lives
+//! in the journal's neighbouring log lines.
+
+use std::collections::VecDeque;
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// What happened — a closed set so tests can assert exact sequences.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Replica joined the fleet (initial registration).
+    Register,
+    /// Health probe failed once (strikes accumulate toward death).
+    Strike,
+    /// Replica declared dead (struck out); its sessions will rehome.
+    Dead,
+    /// Dead replica passed the re-register handshake and rejoined.
+    Revived,
+    /// Mid-stream failover started (upstream died mid-generation).
+    FailoverBegin,
+    /// Failover finished: the generation completed on the survivor.
+    FailoverEnd,
+    /// Session snapshot attached to a replica (rehome / migration).
+    Attach,
+    /// Session snapshot detached from a replica (desk refresh / move).
+    Detach,
+    /// Replica drained to quiescence and retired.
+    Drain,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Register => "register",
+            EventKind::Strike => "strike",
+            EventKind::Dead => "dead",
+            EventKind::Revived => "revived",
+            EventKind::FailoverBegin => "failover_begin",
+            EventKind::FailoverEnd => "failover_end",
+            EventKind::Attach => "attach",
+            EventKind::Detach => "detach",
+            EventKind::Drain => "drain",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<EventKind> {
+        [
+            EventKind::Register,
+            EventKind::Strike,
+            EventKind::Dead,
+            EventKind::Revived,
+            EventKind::FailoverBegin,
+            EventKind::FailoverEnd,
+            EventKind::Attach,
+            EventKind::Detach,
+            EventKind::Drain,
+        ]
+        .into_iter()
+        .find(|k| k.name() == s)
+    }
+}
+
+/// One logged event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    /// Monotonic sequence number (0-based, never reused).
+    pub seq: u64,
+    /// Microseconds since the log opened (monotonic clock).
+    pub t_us: u64,
+    pub kind: EventKind,
+    /// The replica address the event concerns (may be empty for
+    /// fleet-scoped events).
+    pub replica: String,
+    /// The session involved, for session-scoped events.
+    pub session: Option<u64>,
+    /// Free-form context ("strike 2/3", "2 lines suppressed", ...).
+    pub detail: String,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("t_us", Json::num(self.t_us as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("replica", Json::str(self.replica.clone())),
+            ("session", self.session.map_or(Json::Null, |s| Json::num(s as f64))),
+            ("detail", Json::str(self.detail.clone())),
+        ])
+    }
+
+    /// Decode one journal line / wire object; `None` on garbage.
+    pub fn from_json(j: &Json) -> Option<Event> {
+        Some(Event {
+            seq: j.get("seq")?.as_f64()? as u64,
+            t_us: j.get("t_us")?.as_f64()? as u64,
+            kind: EventKind::from_name(j.get("kind")?.as_str()?)?,
+            replica: j.get("replica")?.as_str()?.to_string(),
+            session: match j.get("session") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64()? as u64),
+            },
+            detail: j.get("detail")?.as_str()?.to_string(),
+        })
+    }
+}
+
+struct Inner {
+    ring: VecDeque<Event>,
+    next_seq: u64,
+    journal: Option<PathBuf>,
+    journal_bytes: u64,
+}
+
+/// The event log: bounded in-memory ring + optional JSONL journal.
+/// Share behind an `Arc`; recording takes `&self`.
+pub struct EventLog {
+    inner: Mutex<Inner>,
+    epoch: Instant,
+    capacity: usize,
+    max_journal_bytes: u64,
+}
+
+/// Ring capacity: enough for hours of lifecycle events (these are
+/// per-incident, not per-request).
+const DEFAULT_CAPACITY: usize = 1024;
+/// Journal rotation threshold.
+const DEFAULT_MAX_JOURNAL_BYTES: u64 = 4 << 20;
+
+impl EventLog {
+    /// In-memory only (no journal).
+    pub fn new() -> EventLog {
+        Self::with_limits(None, DEFAULT_CAPACITY, DEFAULT_MAX_JOURNAL_BYTES)
+    }
+
+    /// Ring plus a JSONL journal at `path` (created or appended to).
+    pub fn with_journal(path: &Path) -> Result<EventLog> {
+        // fail now, not on the first event, if the path is unwritable
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open event log {}", path.display()))?;
+        let bytes = f.metadata().map(|m| m.len()).unwrap_or(0);
+        let log = Self::with_limits(
+            Some(path.to_path_buf()),
+            DEFAULT_CAPACITY,
+            DEFAULT_MAX_JOURNAL_BYTES,
+        );
+        log.inner.lock().expect("event log lock").journal_bytes = bytes;
+        Ok(log)
+    }
+
+    fn with_limits(journal: Option<PathBuf>, capacity: usize, max_bytes: u64) -> EventLog {
+        EventLog {
+            inner: Mutex::new(Inner {
+                ring: VecDeque::with_capacity(capacity.min(64)),
+                next_seq: 0,
+                journal,
+                journal_bytes: 0,
+            }),
+            epoch: Instant::now(),
+            capacity,
+            max_journal_bytes: max_bytes,
+        }
+    }
+
+    /// Record one event (both sinks).  Journal write failures are logged
+    /// and dropped — observability must never take the router down.
+    pub fn record(
+        &self,
+        kind: EventKind,
+        replica: &str,
+        session: Option<u64>,
+        detail: impl Into<String>,
+    ) {
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let mut inner = self.inner.lock().expect("event log lock");
+        let ev = Event {
+            seq: inner.next_seq,
+            t_us,
+            kind,
+            replica: replica.to_string(),
+            session,
+            detail: detail.into(),
+        };
+        inner.next_seq += 1;
+        if let Some(path) = inner.journal.clone() {
+            let line = format!("{}\n", ev.to_json());
+            let appended = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .and_then(|mut f| f.write_all(line.as_bytes()));
+            match appended {
+                Ok(()) => inner.journal_bytes += line.len() as u64,
+                Err(e) => log::warn!("event log {}: append failed: {e}", path.display()),
+            }
+        }
+        inner.ring.push_back(ev);
+        while inner.ring.len() > self.capacity {
+            inner.ring.pop_front();
+        }
+        if inner.journal_bytes > self.max_journal_bytes {
+            if let Err(e) = rotate(&mut inner) {
+                log::warn!("event log rotation failed: {e}");
+            }
+        }
+    }
+
+    /// The last `n` events, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<Event> {
+        let inner = self.inner.lock().expect("event log lock");
+        inner.ring.iter().skip(inner.ring.len().saturating_sub(n)).cloned().collect()
+    }
+
+    /// Events recorded over the log's lifetime (>= ring length once the
+    /// ring wraps).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().expect("event log lock").next_seq
+    }
+
+    /// The `{"events": N}` wire reply: the tail as JSON plus the lifetime
+    /// total, so a poller can tell how much history scrolled past.
+    pub fn tail_json(&self, n: usize) -> Json {
+        let events: Vec<Json> = self.tail(n).iter().map(Event::to_json).collect();
+        Json::obj(vec![
+            ("events", Json::Arr(events)),
+            ("count", Json::num(self.total() as f64)),
+        ])
+    }
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Rotate the journal down to the ring's contents (tmp + rename): the
+/// file stays valid JSONL and keeps exactly the newest events.
+fn rotate(inner: &mut Inner) -> Result<()> {
+    let Some(path) = inner.journal.clone() else { return Ok(()) };
+    let tmp = path.with_extension("jsonl.tmp");
+    let mut body = String::new();
+    for ev in &inner.ring {
+        body.push_str(&ev.to_json().to_string());
+        body.push('\n');
+    }
+    std::fs::write(&tmp, &body).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path).with_context(|| format!("rename to {}", path.display()))?;
+    inner.journal_bytes = body.len() as u64;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("hla_events_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn records_in_order_with_monotonic_seq_and_time() {
+        let log = EventLog::new();
+        log.record(EventKind::Strike, "a:1", None, "strike 1/3");
+        log.record(EventKind::Dead, "a:1", None, "struck out");
+        log.record(EventKind::Attach, "b:2", Some(7), "rehomed");
+        let tail = log.tail(10);
+        assert_eq!(tail.len(), 3);
+        assert_eq!(
+            tail.iter().map(|e| e.kind).collect::<Vec<_>>(),
+            vec![EventKind::Strike, EventKind::Dead, EventKind::Attach]
+        );
+        assert_eq!(tail[0].seq, 0);
+        assert_eq!(tail[2].seq, 2);
+        assert!(tail[0].t_us <= tail[1].t_us && tail[1].t_us <= tail[2].t_us);
+        assert_eq!(tail[2].session, Some(7));
+        assert_eq!(log.total(), 3);
+        // tail(n) really is a tail
+        let last = log.tail(1);
+        assert_eq!(last.len(), 1);
+        assert_eq!(last[0].kind, EventKind::Attach);
+    }
+
+    #[test]
+    fn ring_caps_and_keeps_the_newest() {
+        let log = EventLog::with_limits(None, 4, u64::MAX);
+        for i in 0..10u64 {
+            log.record(EventKind::Strike, "a:1", None, format!("{i}"));
+        }
+        let tail = log.tail(100);
+        assert_eq!(tail.len(), 4);
+        assert_eq!(tail[0].detail, "6");
+        assert_eq!(tail[3].detail, "9");
+        assert_eq!(log.total(), 10);
+        let j = log.tail_json(2);
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(j.get("events").and_then(Json::as_arr).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn wire_form_round_trips() {
+        let ev = Event {
+            seq: 3,
+            t_us: 1234,
+            kind: EventKind::FailoverBegin,
+            replica: "127.0.0.1:7001".into(),
+            session: Some(42),
+            detail: "upstream died mid-stream".into(),
+        };
+        let j = Json::parse(&ev.to_json().to_string()).unwrap();
+        assert_eq!(Event::from_json(&j), Some(ev));
+        assert!(Event::from_json(&Json::parse(r#"{"kind":"nope"}"#).unwrap()).is_none());
+    }
+
+    #[test]
+    fn journal_appends_jsonl_and_rotates_at_the_byte_cap() {
+        let dir = temp_dir("journal");
+        let path = dir.join("events.jsonl");
+        let log = EventLog::with_journal(&path).unwrap();
+        log.record(EventKind::Register, "a:1", None, "joined");
+        log.record(EventKind::Drain, "a:1", None, "retired");
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Event::from_json(&Json::parse(lines[0]).unwrap()).unwrap();
+        assert_eq!(first.kind, EventKind::Register);
+
+        // rotation: tiny byte cap + tiny ring → the file shrinks to the
+        // ring tail and stays valid JSONL
+        let path2 = dir.join("rotating.jsonl");
+        let small = EventLog::with_limits(Some(path2.clone()), 2, 256);
+        for i in 0..50u64 {
+            small.record(EventKind::Strike, "a:1", None, format!("{i}"));
+        }
+        let body = std::fs::read_to_string(&path2).unwrap();
+        assert!(body.len() <= 512, "rotation bounded the journal: {}", body.len());
+        let parsed: Vec<Event> = body
+            .lines()
+            .map(|l| Event::from_json(&Json::parse(l).unwrap()).unwrap())
+            .collect();
+        assert!(!parsed.is_empty());
+        assert_eq!(parsed.last().unwrap().detail, "49", "newest event survives rotation");
+        assert!(!dir.join("rotating.jsonl.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -34,16 +34,19 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::router::{PolicyCore, RoutePolicy};
+use crate::metrics::trace::{splitmix64, Stage, Tracer};
 use crate::metrics::ServeStats;
 use crate::server::client::Client;
 use crate::util::json::Json;
 
+use super::events::{EventKind, EventLog};
 use super::registry::ReplicaRegistry;
+use super::stats::RouterStats;
 
 /// Front-end knobs (`hla router --flags`).
 #[derive(Debug, Clone)]
@@ -88,6 +91,18 @@ pub struct Frontend {
     pub failovers: AtomicU64,
     /// Sessions moved between replicas (failover re-homes + drains).
     pub migrations: AtomicU64,
+    /// The router's own metrics plane (always on — recording is an atomic
+    /// add per event); the stats fan-out reply carries its snapshot as
+    /// the `"router"` section.
+    pub stats: RouterStats,
+    /// Structured cluster event log (ring always on, queryable as
+    /// `{"events": N}`; JSONL journal only with `--event-log`).
+    pub events: EventLog,
+    /// The router's span ring (`--trace-out`): relay spans plus failover
+    /// and migration instants — pid 0 of the stitched fleet trace.
+    pub tracer: Option<Arc<Tracer>>,
+    /// Trace-id mint counter (see [`Frontend::mint_trace_id`]).
+    trace_seq: AtomicU64,
 }
 
 impl Frontend {
@@ -102,7 +117,33 @@ impl Frontend {
             fleet_fingerprint: AtomicU64::new(0),
             failovers: AtomicU64::new(0),
             migrations: AtomicU64::new(0),
+            stats: RouterStats::new(),
+            events: EventLog::new(),
+            tracer: None,
+            trace_seq: AtomicU64::new(0),
         }
+    }
+
+    /// Attach the optional observability sinks (builder style, before the
+    /// front-end is shared): a span ring for `--trace-out` and/or an
+    /// event log with a JSONL journal for `--event-log`.
+    pub fn with_observability(
+        mut self,
+        tracer: Option<Arc<Tracer>>,
+        events: Option<EventLog>,
+    ) -> Frontend {
+        self.tracer = tracer;
+        if let Some(ev) = events {
+            self.events = ev;
+        }
+        self
+    }
+
+    /// Mint a fleet-wide trace id: SplitMix64 over a private counter —
+    /// unique per request, well mixed (replica-side sampling hashes stay
+    /// uniform), and never zero (zero keys engine-scoped spans).
+    fn mint_trace_id(&self) -> u64 {
+        splitmix64(self.trace_seq.fetch_add(1, Ordering::Relaxed)).max(1)
     }
 
     /// A fresh control-plane connection to replica `idx` (timeout-capped;
@@ -134,6 +175,7 @@ impl Frontend {
         let r = &self.registry.replicas[idx];
         r.set_identity(&cfg_name, fp);
         r.mark_alive();
+        self.events.record(EventKind::Register, &r.addr, None, cfg_name);
         Ok(())
     }
 
@@ -186,8 +228,18 @@ impl Frontend {
         match self.control(idx).and_then(|mut c| c.detach_session(sid, true)) {
             Ok(bytes) => {
                 self.registry.replicas[idx].detaches.fetch_add(1, Ordering::Relaxed);
-                self.desk.lock().unwrap().insert(sid, Desk { snapshot: bytes, home: idx });
+                {
+                    let mut desk = self.desk.lock().unwrap();
+                    desk.insert(sid, Desk { snapshot: bytes, home: idx });
+                    self.stats.desk_sessions.set(desk.len() as u64);
+                }
                 self.core.pin(sid, idx);
+                self.events.record(
+                    EventKind::Detach,
+                    &self.registry.replicas[idx].addr,
+                    Some(sid),
+                    "desk refresh (snapshot kept on replica)",
+                );
             }
             // a failed export only narrows failover cover for this turn;
             // the session still lives on the replica
@@ -215,19 +267,40 @@ impl Frontend {
         }
         self.core.pin(sid, target);
         self.migrations.fetch_add(1, Ordering::Relaxed);
+        self.events.record(
+            EventKind::Attach,
+            &self.registry.replicas[target].addr,
+            Some(sid),
+            "session re-homed",
+        );
+        if let Some(t) = &self.tracer {
+            t.instant_event(Stage::Migrate, sid, target, target as u64);
+        }
         Ok(target)
     }
 
-    /// Mark a replica dead and move every desk session homed there onto
-    /// survivors.  Called by the health checker (3 strikes) and by the
-    /// relay path on a mid-stream failure.
-    pub fn mark_dead_and_rebalance(&self, idx: usize) {
+    /// Mark a replica dead, recording the `dead` event once per
+    /// transition.  Returns whether this call performed the transition
+    /// (false: it was already dead, nothing to do).
+    pub fn mark_dead(&self, idx: usize) -> bool {
         let r = &self.registry.replicas[idx];
         if !r.is_alive() {
-            return;
+            return false;
         }
         r.mark_dead();
+        self.events.record(
+            EventKind::Dead,
+            &r.addr,
+            None,
+            format!("after {} strike(s)", r.strikes()),
+        );
         log::warn!("replica {} marked dead; re-homing its sessions", r.addr);
+        true
+    }
+
+    /// Move every desk session homed on `idx` onto survivors (each move
+    /// records an `attach` event via [`Self::rehome`]).
+    pub fn rebalance_from(&self, idx: usize) {
         let homed: Vec<u64> = {
             let desk = self.desk.lock().unwrap();
             desk.iter().filter(|(_, d)| d.home == idx).map(|(&sid, _)| sid).collect()
@@ -236,6 +309,16 @@ impl Frontend {
             if let Err(e) = self.rehome(sid) {
                 log::warn!("session {sid}: re-home failed: {e}");
             }
+        }
+    }
+
+    /// Mark a replica dead and move every desk session homed there onto
+    /// survivors.  Called by the health checker (3 strikes); the relay
+    /// path calls the two halves separately so its failover events land
+    /// between `dead` and the `attach`es.
+    pub fn mark_dead_and_rebalance(&self, idx: usize) {
+        if self.mark_dead(idx) {
+            self.rebalance_from(idx);
         }
     }
 
@@ -253,6 +336,7 @@ impl Frontend {
     /// without going through this front-end is not visible here — stop
     /// such clients before draining.
     pub fn drain_replica(&self, idx: usize) -> Result<usize> {
+        let t_drain = Instant::now();
         let addr = &self.registry.replicas[idx].addr;
         let relaying = self.registry.replicas[idx].in_flight();
         if relaying > 0 {
@@ -279,11 +363,24 @@ impl Frontend {
                 .ok_or_else(|| anyhow!("drain: no other live replica for session {sid}"))?;
             self.control(target)?.attach_session(&bytes)?;
             self.registry.replicas[target].attaches.fetch_add(1, Ordering::Relaxed);
-            self.desk.lock().unwrap().insert(sid, Desk { snapshot: bytes, home: target });
+            {
+                let mut desk = self.desk.lock().unwrap();
+                desk.insert(sid, Desk { snapshot: bytes, home: target });
+                self.stats.desk_sessions.set(desk.len() as u64);
+            }
             self.core.pin(sid, target);
             self.migrations.fetch_add(1, Ordering::Relaxed);
+            self.events.record(
+                EventKind::Attach,
+                &self.registry.replicas[target].addr,
+                Some(sid),
+                format!("drained off {addr}"),
+            );
             moved += 1;
         }
+        self.stats.drains.incr();
+        self.stats.drain_hist.record(t_drain.elapsed());
+        self.events.record(EventKind::Drain, addr, None, format!("{moved} session(s) moved"));
         Ok(moved)
     }
 
@@ -348,42 +445,85 @@ fn handle_conn(stream: TcpStream, fe: &Frontend) -> Result<()> {
 
 fn handle_request(line: &str, fe: &Frontend, writer: &mut TcpStream) -> Result<()> {
     let req = Json::parse(line).map_err(|e| anyhow!("bad request: {e}"))?;
-    if req.get("control").is_some() {
+    if let Some(verb) = req.get("control") {
+        // the one control verb the front-end answers itself: its own span
+        // ring is pid 0 of the stitched fleet trace
+        if verb.as_str() == Some("trace_export") {
+            let t = fe.tracer.as_ref().ok_or_else(|| {
+                anyhow!("trace_export: router serving without a tracer (--trace-out)")
+            })?;
+            let msg =
+                Json::obj(vec![("ok", Json::Bool(true)), ("trace", t.export_json("router"))]);
+            writeln!(writer, "{msg}")?;
+            return Ok(());
+        }
         return Err(anyhow!("control: this is the front-end; control verbs address replicas"));
+    }
+    if let Some(n) = req.get("events") {
+        let n = n
+            .as_usize()
+            .ok_or_else(|| anyhow!("events: want a non-negative event count, got {n}"))?;
+        writeln!(writer, "{}", fe.events.tail_json(n))?;
+        return Ok(());
     }
     if let Some(fmt) = req.get("stats") {
         return handle_stats_fanout(fmt, fe, writer);
     }
-    relay_generation(line, &req, fe, writer)
+    let res = relay_generation(line, &req, fe, writer);
+    if res.is_err() {
+        fe.stats.relay_errors.incr();
+    }
+    res
 }
 
 /// The `"stats"` admin request against the front-end: fan out to every
 /// live replica and merge the wire snapshots ([`ServeStats::merge`]), so
-/// `hla top --addr <front-end>` sees the whole fleet.
+/// `hla top --addr <front-end>` sees the whole fleet.  The reply also
+/// carries a `"router"` section (the front-end's own metrics plane — in
+/// the Prometheus form it is appended to `stats_text` as `hla_router_*`
+/// series) and a `"skipped"` array naming every live-listed replica that
+/// failed to answer, so a partial merge is never silent.
 fn handle_stats_fanout(fmt: &Json, fe: &Frontend, writer: &mut TcpStream) -> Result<()> {
     let mut snaps = Vec::new();
+    let mut skipped: Vec<Json> = Vec::new();
     for i in fe.registry.alive_indices() {
+        let addr = &fe.registry.replicas[i].addr;
         match fe.control(i).and_then(|mut c| c.stats()) {
             Ok(s) => snaps.push(s),
-            Err(e) => log::warn!("stats: replica {} skipped: {e}", fe.registry.replicas[i].addr),
+            Err(e) => {
+                log::warn!("stats: replica {addr} skipped: {e}");
+                skipped.push(Json::obj(vec![
+                    ("addr", Json::str(addr.clone())),
+                    ("error", Json::str(e.to_string())),
+                ]));
+            }
         }
     }
     if snaps.is_empty() {
         bail!("stats: no live replica answered");
     }
     let merged = ServeStats::merge(&snaps);
-    let replicas = Json::num(snaps.len() as f64);
-    let msg = match fmt {
-        Json::Bool(true) => Json::obj(vec![("stats", merged.to_json()), ("replicas", replicas)]),
-        Json::Str(s) if s == "json" => {
-            Json::obj(vec![("stats", merged.to_json()), ("replicas", replicas)])
-        }
-        Json::Str(s) if s == "prometheus" => Json::obj(vec![
-            ("stats_text", Json::str(merged.to_prometheus())),
-            ("replicas", replicas),
-        ]),
+    let fleet: Vec<(String, bool, u64)> = fe
+        .registry
+        .replicas
+        .iter()
+        .map(|r| (r.addr.clone(), r.is_alive(), r.in_flight() as u64))
+        .collect();
+    let want_prometheus = match fmt {
+        Json::Bool(true) => false,
+        Json::Str(s) if s == "json" => false,
+        Json::Str(s) if s == "prometheus" => true,
         other => return Err(anyhow!("stats: want true, \"json\" or \"prometheus\", got {other}")),
     };
+    let mut fields = if want_prometheus {
+        let text = format!("{}{}", merged.to_prometheus(), fe.stats.to_prometheus(&fleet));
+        vec![("stats_text", Json::str(text))]
+    } else {
+        vec![("stats", merged.to_json()), ("router", fe.stats.to_json(&fleet))]
+    };
+    fields.push(("replicas", Json::num(snaps.len() as f64)));
+    fields.push(("skipped", Json::Arr(skipped)));
+    let msg = Json::obj(fields);
     writeln!(writer, "{msg}")?;
     Ok(())
 }
@@ -405,6 +545,31 @@ fn route_key(req: &Json) -> Option<u64> {
     id_field(req, "fork_of").or_else(|| id_field(req, "session"))
 }
 
+/// Resolve the trace id for a relayed request, returning the line to
+/// forward and the id (if any) keying the router's own spans.  A
+/// client-supplied `trace_id` passes through byte-for-byte — the replica
+/// owns validation, so a malformed one comes back as the replica's typed
+/// error line.  Otherwise, when the router traces, it mints an id and
+/// injects the field so every replica span of this request shares it.
+fn trace_line(line: &str, req: &Json, fe: &Frontend) -> (String, Option<u64>) {
+    if let Some(t) = req.get("trace_id") {
+        let id = t
+            .as_str()
+            .filter(|s| s.len() == 16 && s.bytes().all(|b| b.is_ascii_hexdigit()))
+            .and_then(|s| u64::from_str_radix(s, 16).ok());
+        return (line.to_string(), id);
+    }
+    if fe.tracer.is_none() {
+        return (line.to_string(), None);
+    }
+    let id = fe.mint_trace_id();
+    let mut aug = req.clone();
+    if let Json::Obj(map) = &mut aug {
+        map.insert("trace_id".to_string(), Json::str(format!("{id:016x}")));
+    }
+    (aug.to_string(), Some(id))
+}
+
 /// Why a relay attempt stopped — the distinction drives failover policy.
 /// `Upstream` means the replica side failed (dial, read, EOF, bad reply):
 /// the replica is presumed dead and the stream fails over to a survivor.
@@ -422,8 +587,11 @@ enum RelayErr {
 /// death.  `done`/`error` lines are terminal; everything else passes
 /// through verbatim, minus the already-relayed prefix on a replay.
 fn relay_generation(line: &str, req: &Json, fe: &Frontend, writer: &mut TcpStream) -> Result<()> {
+    let t_start = Instant::now();
     let key = route_key(req);
     let session = id_field(req, "session");
+    let (line_owned, trace) = trace_line(line, req, fe);
+    let line = line_owned.as_str();
     // a resume/fork can only be replayed where the session's state lives;
     // a plain (first-turn) request replays from scratch on any replica
     let needs_state = req.get("fork_of").is_some()
@@ -464,6 +632,19 @@ fn relay_generation(line: &str, req: &Json, fe: &Frontend, writer: &mut TcpStrea
                 if let (true, Some(sid)) = (clean, session) {
                     fe.after_completion(sid, idx);
                 }
+                fe.stats.relays.incr();
+                fe.stats.relay_hist.record(t_start.elapsed());
+                if attempts > 1 {
+                    fe.events.record(
+                        EventKind::FailoverEnd,
+                        &replica.addr,
+                        session,
+                        format!("attempt {attempts} completed ({relayed} line(s) total)"),
+                    );
+                }
+                if let Some(t) = &fe.tracer {
+                    t.span(Stage::Relay, trace.unwrap_or(0), idx, t_start, relayed as u64);
+                }
                 writer.write_all(terminal.as_bytes())?;
                 return Ok(());
             }
@@ -479,7 +660,29 @@ fn relay_generation(line: &str, req: &Json, fe: &Frontend, writer: &mut TcpStrea
                     relayed
                 );
                 fe.failovers.fetch_add(1, Ordering::Relaxed);
-                fe.mark_dead_and_rebalance(idx);
+                fe.stats.failovers.incr();
+                fe.stats.strikes.incr();
+                let strikes = replica.strike();
+                fe.events.record(
+                    EventKind::Strike,
+                    &replica.addr,
+                    session,
+                    format!("mid-stream relay failure ({strikes} strike(s)): {e}"),
+                );
+                let transitioned = fe.mark_dead(idx);
+                fe.events.record(
+                    EventKind::FailoverBegin,
+                    &replica.addr,
+                    session,
+                    format!("{relayed} line(s) already relayed"),
+                );
+                if let Some(t) = &fe.tracer {
+                    t.instant_event(Stage::Failover, trace.unwrap_or(0), idx, idx as u64);
+                }
+                fe.stats.replayed_suppressed.add(relayed as u64);
+                if transitioned {
+                    fe.rebalance_from(idx);
+                }
                 // rebalance re-attached this session's desk snapshot to a
                 // survivor (when one exists); the retry replays the
                 // original line there and suppresses the relayed prefix.
@@ -517,6 +720,7 @@ fn relay_once(
     writer: &mut TcpStream,
     relayed: &mut usize,
 ) -> std::result::Result<(String, bool), RelayErr> {
+    let t0 = Instant::now();
     let up = RelayErr::Upstream;
     let addr = &fe.registry.replicas[idx].addr;
     let sock = addr
@@ -532,14 +736,24 @@ fn relay_once(
     let mut up_writer = upstream.try_clone().map_err(|e| up(e.into()))?;
     let mut up_reader = BufReader::new(upstream);
     writeln!(up_writer, "{line}").map_err(|e| up(e.into()))?;
+    // router-added overhead: everything between the caller's pick and the
+    // request line hitting the replica socket (dial dominates)
+    fe.stats.overhead_hist.record(t0.elapsed());
+    let lane = fe.stats.lane(idx);
+    lane.relays.incr();
 
     let skip = *relayed;
     let mut seen = 0usize;
+    let mut first = true;
     let mut buf = String::new();
     loop {
         buf.clear();
         if up_reader.read_line(&mut buf).map_err(|e| up(e.into()))? == 0 {
             return Err(up(anyhow!("replica {addr} closed the connection mid-stream")));
+        }
+        if first {
+            lane.ttft_hist.record(t0.elapsed());
+            first = false;
         }
         let msg = Json::parse(&buf)
             .map_err(|e| up(anyhow!("replica {addr}: bad reply line: {e}")))?;

@@ -17,6 +17,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::events::EventKind;
 use super::frontend::Frontend;
 
 /// Consecutive failed probes before a replica is declared dead.
@@ -48,6 +49,13 @@ pub fn spawn_health(fe: Arc<Frontend>, stop: Arc<AtomicBool>) -> JoinHandle<()> 
                         Err(e) => {
                             let strikes = r.strike();
                             log::warn!("health: replica {} strike {strikes}: {e}", r.addr);
+                            fe.stats.strikes.incr();
+                            fe.events.record(
+                                EventKind::Strike,
+                                &r.addr,
+                                None,
+                                format!("probe failed ({strikes}/{STRIKES_TO_DEATH}): {e}"),
+                            );
                             if strikes >= STRIKES_TO_DEATH {
                                 fe.mark_dead_and_rebalance(i);
                                 skip[i] = 0;
@@ -63,6 +71,13 @@ pub fn spawn_health(fe: Arc<Frontend>, stop: Arc<AtomicBool>) -> JoinHandle<()> 
                     match fe.register_replica(i) {
                         Ok(()) => {
                             log::info!("health: replica {} revived", r.addr);
+                            fe.stats.revivals.incr();
+                            fe.events.record(
+                                EventKind::Revived,
+                                &r.addr,
+                                None,
+                                "re-register handshake passed",
+                            );
                             backoff[i] = 1;
                         }
                         Err(_) => {

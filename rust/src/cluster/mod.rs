@@ -17,6 +17,13 @@
 //! - [`replica`] — the artifact-free fixture engine behind
 //!   `hla serve --fixture true`, the replica the cluster tests and
 //!   `e19_cluster` bench actually run.
+//! - [`stats`] — the router's own metrics plane (relay latency, router-
+//!   added overhead, failover tallies), surfaced as the `"router"`
+//!   section of the stats fan-out reply.
+//! - [`events`] — the structured cluster event log: an in-memory ring
+//!   (queryable as `{"events": N}`) plus an optional JSONL journal
+//!   recording register/strike/dead/revived/failover/attach/detach/drain
+//!   in order.
 //!
 //! Why this is cheap at all: HLA decode state is constant-size per
 //! sequence (Theorem 3.1), so "move a conversation" is a few-KB snapshot
@@ -24,12 +31,16 @@
 //! `benches/e19_cluster.rs` quantifies exactly that gap; the wire
 //! contract lives in `docs/PROTOCOL.md` ("Control plane").
 
+pub mod events;
 pub mod frontend;
 pub mod health;
 pub mod registry;
 pub mod replica;
+pub mod stats;
 
+pub use events::{Event, EventKind, EventLog};
 pub use frontend::{serve_frontend, Frontend, FrontendCfg};
 pub use health::spawn_health;
 pub use registry::{Replica, ReplicaRegistry};
-pub use replica::{fixture_identity, spawn_fixture_engine};
+pub use replica::{fixture_identity, spawn_fixture_engine, spawn_fixture_engine_traced};
+pub use stats::RouterStats;

@@ -22,6 +22,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::coordinator::request::{FinishReason, GenRequest, TokenEvent};
+use crate::metrics::trace::{Stage, Tracer};
 use crate::metrics::LiveStats;
 use crate::model::sampler::Sampler;
 use crate::model::{ModelState, RustModel};
@@ -51,21 +52,44 @@ pub fn spawn_fixture_engine(
     store: Arc<SessionStore>,
     stats: Arc<LiveStats>,
 ) -> (Sender<GenRequest>, JoinHandle<()>) {
+    spawn_fixture_engine_traced(model, store, stats, None)
+}
+
+/// [`spawn_fixture_engine`] with an optional span ring: each request
+/// records admission / prefill / decode / detach spans keyed by its
+/// fleet trace id when it carries one (`req.trace`), its local id
+/// otherwise — the replica half of what `hla trace-stitch` merges.
+pub fn spawn_fixture_engine_traced(
+    model: RustModel,
+    store: Arc<SessionStore>,
+    stats: Arc<LiveStats>,
+    tracer: Option<Arc<Tracer>>,
+) -> (Sender<GenRequest>, JoinHandle<()>) {
     let (tx, rx): (Sender<GenRequest>, Receiver<GenRequest>) = mpsc::channel();
     let identity = fixture_identity(&model);
     let handle = std::thread::spawn(move || {
         stats.batch_lanes.set(1);
         stats.state_bytes.set(identity.state_bytes as u64);
         for req in rx {
-            serve_one(&model, &store, &stats, req);
+            serve_one(&model, &store, &stats, tracer.as_deref(), req);
         }
     });
     (tx, handle)
 }
 
 /// One request, start to finish, on the single fixture lane.
-fn serve_one(model: &RustModel, store: &SessionStore, stats: &LiveStats, req: GenRequest) {
+fn serve_one(
+    model: &RustModel,
+    store: &SessionStore,
+    stats: &LiveStats,
+    tracer: Option<&Tracer>,
+    req: GenRequest,
+) {
     let t_start = Instant::now();
+    // span key: the fleet-wide trace id when the front-end minted one,
+    // the process-local request id otherwise (same rule as the batched
+    // engine in `coordinator`)
+    let key = req.trace.unwrap_or(req.id);
     let mut state = ModelState::new(&model.cfg);
     let mut sampler = Sampler::new(req.sampler.clone());
     let mut prior_tokens = 0u64;
@@ -90,16 +114,24 @@ fn serve_one(model: &RustModel, store: &SessionStore, stats: &LiveStats, req: Ge
     if inputs.is_empty() {
         inputs.push(0);
     }
+    if let Some(t) = tracer {
+        t.span(Stage::Admission, key, 0, t_start, resumed as u64);
+    }
     // everything but the last input is prefill; the last is the first
     // decode input (decode-as-prefill, like the coordinator)
     if inputs.len() > 1 {
+        let t_prefill = Instant::now();
         for &t in &inputs[..inputs.len() - 1] {
             model.decode_step(&mut state, t);
         }
         stats.prefills.incr();
         stats.prefilled_tokens.add((inputs.len() - 1) as u64);
+        if let Some(t) = tracer {
+            t.span(Stage::Prefill, key, 0, t_prefill, (inputs.len() - 1) as u64);
+        }
     }
     let mut input = *inputs.last().unwrap();
+    let t_decode = Instant::now();
     let mut produced = 0u64;
     let mut reason = FinishReason::Length;
     for _ in 0..req.max_new_tokens {
@@ -125,7 +157,13 @@ fn serve_one(model: &RustModel, store: &SessionStore, stats: &LiveStats, req: Ge
             break;
         }
     }
+    if let Some(t) = tracer {
+        // one span covering the whole decode loop (one lane, no batching
+        // to see step-by-step), detail = tokens produced
+        t.span(Stage::DecodeStep, key, 0, t_decode, produced);
+    }
     if let Some(sid) = req.session {
+        let t_detach = Instant::now();
         // `input` is sampled-but-not-fed here — exactly what a resume
         // expects to feed first
         match state.to_tensors() {
@@ -138,6 +176,9 @@ fn serve_one(model: &RustModel, store: &SessionStore, stats: &LiveStats, req: Ge
                 state: tensors,
             }),
             Err(e) => log::warn!("session {sid}: state export failed: {e}"),
+        }
+        if let Some(t) = tracer {
+            t.span(Stage::Detach, key, 0, t_detach, produced);
         }
     }
     let _ = req.events.send(TokenEvent::finished_resumed(req.id, reason, resumed));

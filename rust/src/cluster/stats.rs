@@ -1,0 +1,239 @@
+//! The router's own metrics plane: what the front-end adds on top of the
+//! fleet it fronts.  Replica registries measure engine work; this registry
+//! measures the *routing* — relay wall time, the latency the router itself
+//! adds (dial + request forwarding, before the replica sees a byte),
+//! failovers and the replayed token lines they suppressed, health strikes
+//! and revivals, drain timings, and per-replica relay tallies.
+//!
+//! Shape mirrors [`crate::metrics::LiveStats`]: lock-free [`Counter`]s on
+//! the hot path, lock-guarded [`SharedHistogram`]s for latency phases, a
+//! point-in-time JSON/Prometheus snapshot on demand.  The snapshot rides
+//! inside the fleet stats reply as a `"router"` section (see
+//! [`super::frontend`]'s stats fan-out), so one `{"stats": true}` poll at
+//! the router answers both "how is the fleet" and "how is the front-end".
+
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::{Counter, SharedHistogram};
+use crate::util::json::Json;
+
+/// Schema tag on the `"router"` stats section (bump on layout changes).
+pub const ROUTER_STATS_SCHEMA: &str = "hla-router-stats/1";
+
+/// Per-replica relay tallies, index-aligned with the fleet registry.
+#[derive(Debug, Default)]
+pub struct ReplicaLane {
+    /// Generations relayed to this replica (attempts, including ones that
+    /// later failed over away from it).
+    pub relays: Counter,
+    /// Upstream time-to-first-reply-line, as seen from the router.
+    pub ttft_hist: SharedHistogram,
+}
+
+/// The live router registry.  Share behind an `Arc`; recording takes
+/// `&self` everywhere.
+#[derive(Debug, Default)]
+pub struct RouterStats {
+    /// Generations relayed to completion.
+    pub relays: Counter,
+    /// Relays that returned an error to the client (aborts, exhausted
+    /// failover attempts, placement failures).
+    pub relay_errors: Counter,
+    /// Mid-stream failovers performed (dead upstream, replay elsewhere).
+    pub failovers: Counter,
+    /// Token lines suppressed while replaying a failed-over generation
+    /// (the client saw each of these exactly once, from the dead replica).
+    pub replayed_suppressed: Counter,
+    /// Health-probe strikes recorded across the fleet.
+    pub strikes: Counter,
+    /// Replicas revived through the re-register handshake.
+    pub revivals: Counter,
+    /// Replicas drained to quiescence.
+    pub drains: Counter,
+    /// Gauge: session snapshots resident on the failover desk.
+    pub desk_sessions: Counter,
+    /// Whole-relay wall time (request in to `done` out).
+    pub relay_hist: SharedHistogram,
+    /// Router-added latency: dial + forwarding the request line upstream,
+    /// before the replica starts working.
+    pub overhead_hist: SharedHistogram,
+    /// Wall time of full drain cycles.
+    pub drain_hist: SharedHistogram,
+    per_replica: Mutex<Vec<Arc<ReplicaLane>>>,
+}
+
+impl RouterStats {
+    pub fn new() -> RouterStats {
+        RouterStats::default()
+    }
+
+    /// The tallies for replica `idx`, growing the table on first sight
+    /// (replicas register at runtime).
+    pub fn lane(&self, idx: usize) -> Arc<ReplicaLane> {
+        let mut lanes = self.per_replica.lock().expect("router stats lock");
+        while lanes.len() <= idx {
+            lanes.push(Arc::new(ReplicaLane::default()));
+        }
+        lanes[idx].clone()
+    }
+
+    /// Point-in-time JSON snapshot.  `replicas` carries what only the
+    /// fleet registry knows — `(addr, alive, in_flight)` per replica,
+    /// index-aligned with [`Self::lane`].
+    pub fn to_json(&self, replicas: &[(String, bool, u64)]) -> Json {
+        let per: Vec<Json> = replicas
+            .iter()
+            .enumerate()
+            .map(|(i, (addr, alive, in_flight))| {
+                let lane = self.lane(i);
+                let ttft = lane.ttft_hist.snapshot();
+                Json::obj(vec![
+                    ("addr", Json::str(addr.clone())),
+                    ("alive", Json::Bool(*alive)),
+                    ("in_flight", Json::num(*in_flight as f64)),
+                    ("relays", Json::num(lane.relays.get() as f64)),
+                    ("ttft_us_p50", Json::num(ttft.percentile_us(50.0))),
+                    ("ttft_us_p99", Json::num(ttft.percentile_us(99.0))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str(ROUTER_STATS_SCHEMA)),
+            ("relays", Json::num(self.relays.get() as f64)),
+            ("relay_errors", Json::num(self.relay_errors.get() as f64)),
+            ("failovers", Json::num(self.failovers.get() as f64)),
+            ("replayed_suppressed", Json::num(self.replayed_suppressed.get() as f64)),
+            ("strikes", Json::num(self.strikes.get() as f64)),
+            ("revivals", Json::num(self.revivals.get() as f64)),
+            ("drains", Json::num(self.drains.get() as f64)),
+            ("desk_sessions", Json::num(self.desk_sessions.get() as f64)),
+            ("relay_us", hist_json(&self.relay_hist)),
+            ("overhead_us", hist_json(&self.overhead_hist)),
+            ("drain_us", hist_json(&self.drain_hist)),
+            ("per_replica", Json::Arr(per)),
+        ])
+    }
+
+    /// Prometheus exposition text, `hla_router_*` namespace — concatenated
+    /// after the fleet's `hla_*` text in the router's prometheus reply.
+    pub fn to_prometheus(&self, replicas: &[(String, bool, u64)]) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, v: u64| {
+            out.push_str(&format!(
+                "# TYPE hla_router_{name}_total counter\nhla_router_{name}_total {v}\n"
+            ));
+        };
+        counter("relays", self.relays.get());
+        counter("relay_errors", self.relay_errors.get());
+        counter("failovers", self.failovers.get());
+        counter("replayed_suppressed", self.replayed_suppressed.get());
+        counter("strikes", self.strikes.get());
+        counter("revivals", self.revivals.get());
+        counter("drains", self.drains.get());
+        out.push_str(&format!(
+            "# TYPE hla_router_desk_sessions gauge\nhla_router_desk_sessions {}\n",
+            self.desk_sessions.get()
+        ));
+        let mut quant = |name: &str, h: &SharedHistogram| {
+            let s = h.snapshot();
+            out.push_str(&format!("# TYPE hla_router_{name}_us summary\n"));
+            for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                out.push_str(&format!(
+                    "hla_router_{name}_us{{quantile=\"{q}\"}} {}\n",
+                    s.percentile_us(p)
+                ));
+            }
+        };
+        quant("relay", &self.relay_hist);
+        quant("overhead", &self.overhead_hist);
+        quant("drain", &self.drain_hist);
+        for (i, (addr, alive, in_flight)) in replicas.iter().enumerate() {
+            let lane = self.lane(i);
+            out.push_str(&format!(
+                "hla_router_replica_alive{{replica=\"{addr}\"}} {}\n",
+                u64::from(*alive)
+            ));
+            out.push_str(&format!(
+                "hla_router_replica_in_flight{{replica=\"{addr}\"}} {in_flight}\n"
+            ));
+            out.push_str(&format!(
+                "hla_router_replica_relays_total{{replica=\"{addr}\"}} {}\n",
+                lane.relays.get()
+            ));
+        }
+        out
+    }
+}
+
+fn hist_json(h: &SharedHistogram) -> Json {
+    let s = h.snapshot();
+    Json::obj(vec![
+        ("count", Json::num(s.count() as f64)),
+        ("mean", Json::num(s.mean_us())),
+        ("p50", Json::num(s.percentile_us(50.0))),
+        ("p95", Json::num(s.percentile_us(95.0))),
+        ("p99", Json::num(s.percentile_us(99.0))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn snapshot_carries_counters_histograms_and_replica_rows() {
+        let rs = RouterStats::new();
+        rs.relays.add(10);
+        rs.failovers.incr();
+        rs.replayed_suppressed.add(7);
+        rs.relay_hist.record(Duration::from_micros(400));
+        rs.overhead_hist.record(Duration::from_micros(30));
+        rs.lane(1).relays.add(4);
+        rs.lane(1).ttft_hist.record(Duration::from_micros(120));
+        let fleet = vec![
+            ("a:1".to_string(), true, 2u64),
+            ("b:2".to_string(), false, 0u64),
+        ];
+        let j = rs.to_json(&fleet);
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(ROUTER_STATS_SCHEMA));
+        assert_eq!(j.get("relays").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(j.get("failovers").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("replayed_suppressed").and_then(Json::as_f64), Some(7.0));
+        assert!(j.path("relay_us.p50").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(j.path("overhead_us.count").and_then(Json::as_f64), Some(1.0));
+        let per = j.get("per_replica").and_then(Json::as_arr).unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].get("alive").and_then(Json::as_bool), Some(true));
+        assert_eq!(per[1].get("alive").and_then(Json::as_bool), Some(false));
+        assert_eq!(per[1].get("relays").and_then(Json::as_f64), Some(4.0));
+        assert!(per[1].get("ttft_us_p50").and_then(Json::as_f64).unwrap() > 0.0);
+        // round-trips through the wire line
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn prometheus_text_is_labelled_and_namespaced() {
+        let rs = RouterStats::new();
+        rs.relays.add(3);
+        rs.strikes.add(2);
+        rs.relay_hist.record(Duration::from_micros(250));
+        let fleet = vec![("a:1".to_string(), true, 1u64)];
+        let text = rs.to_prometheus(&fleet);
+        assert!(text.contains("hla_router_relays_total 3"));
+        assert!(text.contains("hla_router_strikes_total 2"));
+        assert!(text.contains("hla_router_relay_us{quantile=\"0.5\"}"));
+        assert!(text.contains("hla_router_replica_alive{replica=\"a:1\"} 1"));
+        // disjoint namespace from the fleet's hla_* metrics
+        assert!(!text.contains("\nhla_requests_completed_total"));
+    }
+
+    #[test]
+    fn lane_table_grows_on_demand_and_is_stable() {
+        let rs = RouterStats::new();
+        let l5 = rs.lane(5);
+        l5.relays.incr();
+        assert_eq!(rs.lane(5).relays.get(), 1, "same lane object on re-lookup");
+        assert_eq!(rs.lane(0).relays.get(), 0);
+    }
+}

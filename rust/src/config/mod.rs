@@ -79,6 +79,9 @@ pub struct RunConfig {
     pub trace_out: Option<String>,
     /// per-request trace sampling probability in [0, 1]
     pub trace_sample: f64,
+    /// `hla router --event-log PATH.jsonl`: append the structured cluster
+    /// event journal here (the in-memory ring is always on)
+    pub event_log: Option<String>,
     /// `hla top` refresh interval in seconds
     pub interval: f64,
     /// `hla top` tick count; 0 = poll until the server goes away
@@ -120,6 +123,7 @@ impl Default for RunConfig {
             temperature: 0.8,
             trace_out: None,
             trace_sample: 1.0,
+            event_log: None,
             interval: 2.0,
             count: 0,
         }
@@ -239,6 +243,7 @@ impl RunConfig {
                     bail!("trace-sample must be in [0, 1] (a per-request probability)");
                 }
             }
+            "event-log" | "event_log" => self.event_log = Some(value.into()),
             "interval" => {
                 self.interval = value.parse()?;
                 if !self.interval.is_finite() || self.interval <= 0.0 {
@@ -440,6 +445,15 @@ mod tests {
         // probabilities live in [0, 1]; fail fast at parse time
         assert!(RunConfig::from_args(&s(&["--trace-sample", "1.5"])).is_err());
         assert!(RunConfig::from_args(&s(&["--trace-sample", "-0.1"])).is_err());
+    }
+
+    #[test]
+    fn event_log_flag_applies_in_both_spellings() {
+        let cfg = RunConfig::from_args(&s(&["--event-log", "/tmp/hla-events.jsonl"])).unwrap();
+        assert_eq!(cfg.event_log.as_deref(), Some("/tmp/hla-events.jsonl"));
+        let cfg = RunConfig::from_args(&s(&["--event_log=/tmp/e.jsonl"])).unwrap();
+        assert_eq!(cfg.event_log.as_deref(), Some("/tmp/e.jsonl"));
+        assert!(RunConfig::default().event_log.is_none());
     }
 
     #[test]

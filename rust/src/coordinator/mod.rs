@@ -550,7 +550,10 @@ impl EngineLoop {
             self.slot_of[lane_idx] = slot;
             let req = self.waiting.pop_front().expect("admissions <= waiting");
             let t_admit = Instant::now();
-            let (req_id, prompt_len) = (req.id, req.prompt.len());
+            // spans key by the fleet trace id when the request carries one
+            // (the stitcher matches it against the front-end's relay span);
+            // otherwise by the process-local request id, as ever
+            let (req_id, prompt_len) = (req.trace.unwrap_or(req.id), req.prompt.len());
             self.stats.queue_hist.record(req.submitted.elapsed());
             let claimed = match (&self.sessions, req.resume, req.session) {
                 (Some(store), true, Some(sid)) => {
@@ -831,7 +834,7 @@ impl EngineLoop {
                 Err(e) => log::warn!("session {sid}: snapshot failed: {e}"),
             }
             if let Some(t) = &self.tracer {
-                t.span(Stage::Detach, a.request_id, b, t0, a.generated as u64);
+                t.span(Stage::Detach, a.trace.unwrap_or(a.request_id), b, t0, a.generated as u64);
             }
         }
         let _ = a.events.send(TokenEvent::finished_resumed(a.request_id, reason, a.resumed));
@@ -931,7 +934,8 @@ impl EngineLoop {
                 }
                 self.stats.tokens_out.add(outcome.emitted.len() as u64);
                 if let Some(tr) = &self.tracer {
-                    tr.span(Stage::SpecRound, a.request_id, b, t_round, outcome.emitted.len() as u64);
+                    let key = a.trace.unwrap_or(a.request_id);
+                    tr.span(Stage::SpecRound, key, b, t_round, outcome.emitted.len() as u64);
                 }
                 if a.eos.is_some() && outcome.emitted.last().copied() == a.eos {
                     finished.push((b, FinishReason::Eos));

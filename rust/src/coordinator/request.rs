@@ -89,6 +89,13 @@ pub struct GenRequest {
     /// When the request entered the system — the anchor for the TTFT
     /// breakdown (queue-wait is admission − submission).
     pub submitted: Instant,
+    /// Distributed trace id (`"trace_id"` on the wire, minted by the
+    /// cluster front-end or supplied by the client).  When set, the
+    /// engine keys this request's spans by it instead of the local
+    /// request id, so the stitcher can line up one request's spans
+    /// across router and replica processes.  `None` = trace locally
+    /// under the process-private request id, exactly as before.
+    pub trace: Option<u64>,
 }
 
 impl GenRequest {
@@ -111,6 +118,7 @@ impl GenRequest {
             spec: false,
             cache: true,
             submitted: Instant::now(),
+            trace: None,
         }
     }
 
@@ -135,6 +143,12 @@ impl GenRequest {
     /// Opt out of the shared-prefix cache for this request.
     pub fn without_cache(mut self) -> GenRequest {
         self.cache = false;
+        self
+    }
+
+    /// Key this request's spans by a fleet-wide trace id.
+    pub fn with_trace(mut self, trace_id: u64) -> GenRequest {
+        self.trace = Some(trace_id);
         self
     }
 }
@@ -166,10 +180,12 @@ mod tests {
         let req = GenRequest::new(1, vec![1, 2], 4, SamplerCfg::greedy(), tx);
         assert!(req.cache, "cache participation is the default");
         assert!(!req.spec && !req.resume && req.session.is_none());
-        let req = req.with_session(9).resuming().with_spec().without_cache();
+        assert!(req.trace.is_none(), "requests trace locally by default");
+        let req = req.with_session(9).resuming().with_spec().without_cache().with_trace(0xabc);
         assert_eq!(req.session, Some(9));
         assert!(req.resume && req.spec);
         assert!(!req.cache, "without_cache opts the request out");
+        assert_eq!(req.trace, Some(0xabc));
     }
 
     #[test]

@@ -6,12 +6,16 @@
 //! Submodules extend this into the live observability layer:
 //! [`registry`] holds the shared [`registry::LiveStats`] the engine loop
 //! updates in place (and the [`registry::ServeStats`] snapshot it exports),
-//! [`trace`] holds the lock-free span ring and Chrome-trace exporter.
+//! [`trace`] holds the lock-free span ring and Chrome-trace exporter,
+//! [`stitch`] merges span rings from N processes (router + replicas,
+//! pulled over the wire via `trace_export`) into one fleet-wide trace.
 
 pub mod registry;
+pub mod stitch;
 pub mod trace;
 
 pub use registry::{LiveStats, ServeStats};
+pub use stitch::ProcessTrace;
 pub use trace::{Stage, TraceCfg, Tracer};
 
 use std::sync::atomic::{AtomicU64, Ordering};

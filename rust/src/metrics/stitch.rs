@@ -1,0 +1,284 @@
+//! Cross-process trace stitching: merge the router's span ring and N
+//! replica rings (pulled over the wire via the `trace_export` control
+//! verb) into one Chrome trace-event JSON the whole fleet shares.
+//!
+//! Each process traces against its own private monotonic epoch, so raw
+//! `start_us` values from two processes are not comparable.  The export
+//! form ([`Tracer::export_json`]) therefore carries `anchor_unix_us` —
+//! the epoch expressed as unix microseconds — and the stitcher rebases
+//! every span onto one timeline: `ts = (anchor - min_anchor) + start_us`.
+//! Process 0 is the router by convention (pid 0), replicas follow in
+//! order (pid i).  A request that traversed router → replica →
+//! failover → survivor shows up as one trace id across three pids, with
+//! flow arrows from the router's `relay` span to each replica `admission`
+//! span that shares its trace id, and failovers/migrations rendered as
+//! instant events on the router track.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::trace::{SpanEvent, Stage, Tracer, TRACE_EXPORT_SCHEMA};
+
+/// One process's contribution to a stitched trace: its name, its epoch
+/// as unix microseconds, and its decoded span ring.
+#[derive(Debug, Clone)]
+pub struct ProcessTrace {
+    pub name: String,
+    pub anchor_unix_us: u64,
+    pub spans: Vec<SpanEvent>,
+}
+
+impl ProcessTrace {
+    /// Decode a `trace_export` payload (the [`Tracer::export_json`] wire
+    /// form).  Unparseable spans are skipped, a missing anchor or schema
+    /// mismatch is an error — silently stitching rings from two layouts
+    /// would misplace every span.
+    pub fn from_export(j: &Json) -> Result<ProcessTrace> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace export: missing \"schema\""))?;
+        if schema != TRACE_EXPORT_SCHEMA {
+            return Err(anyhow!("trace export: schema {schema:?}, want {TRACE_EXPORT_SCHEMA:?}"));
+        }
+        let anchor = j
+            .get("anchor_unix_us")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("trace export: missing \"anchor_unix_us\""))?;
+        let name = j.get("name").and_then(Json::as_str).unwrap_or("unnamed").to_string();
+        let spans = j
+            .get("spans")
+            .and_then(Json::as_arr)
+            .map(|v| v.iter().filter_map(SpanEvent::from_json).collect())
+            .unwrap_or_default();
+        Ok(ProcessTrace { name, anchor_unix_us: anchor as u64, spans })
+    }
+
+    /// Local shortcut: snapshot an in-process tracer (the router stitching
+    /// its own ring alongside the replicas' wire exports).
+    pub fn from_tracer(name: &str, t: &Tracer) -> ProcessTrace {
+        // round-trip through the export form so the local path and the
+        // wire path can never diverge
+        Self::from_export(&t.export_json(name)).expect("own export is always well-formed")
+    }
+}
+
+/// Merge process traces into one Chrome trace-event document.  `procs[0]`
+/// becomes pid 0 (the router by convention), `procs[i]` pid i.
+pub fn stitch(procs: &[ProcessTrace]) -> Json {
+    let base = procs.iter().map(|p| p.anchor_unix_us).min().unwrap_or(0);
+    let mut events = Vec::new();
+    // flow arrows bind by trace id: the router's relay span starts the
+    // flow, every same-id admission span on another pid terminates it
+    let mut flow_starts: Vec<(u64, u64)> = Vec::new(); // (request, rebased ts)
+    for (pid, p) in procs.iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as u32)),
+            ("args", Json::obj(vec![("name", Json::str(p.name.clone()))])),
+        ]));
+        let mut tids_seen = vec![];
+        for e in &p.spans {
+            let tid = e.lane.map_or(0, |l| l + 1);
+            let ts = (p.anchor_unix_us - base) + e.start_us;
+            if !tids_seen.contains(&tid) {
+                tids_seen.push(tid);
+                let tname =
+                    if tid == 0 { "engine".to_string() } else { format!("lane {}", tid - 1) };
+                events.push(Json::obj(vec![
+                    ("name", Json::str("thread_name")),
+                    ("ph", Json::str("M")),
+                    ("pid", Json::num(pid as u32)),
+                    ("tid", Json::num(tid as u32)),
+                    ("args", Json::obj(vec![("name", Json::str(tname))])),
+                ]));
+            }
+            let args = Json::obj(vec![
+                ("request", Json::str(format!("{:016x}", e.request))),
+                ("detail", Json::num(e.detail)),
+            ]);
+            let mut fields = vec![
+                ("name", Json::str(e.stage.name())),
+                ("cat", Json::str(if e.lane.is_some() { "request" } else { "engine" })),
+                ("ph", Json::str(if e.instant() { "i" } else { "X" })),
+                ("ts", Json::num(ts as f64)),
+                ("pid", Json::num(pid as u32)),
+                ("tid", Json::num(tid as u32)),
+                ("args", args),
+            ];
+            if e.instant() {
+                fields.push(("s", Json::str("t")));
+            } else {
+                fields.push(("dur", Json::num(e.dur_us as f64)));
+            }
+            events.push(Json::obj(fields));
+            if pid == 0 && e.stage == Stage::Relay {
+                flow_starts.push((e.request, ts));
+                events.push(flow_event("s", e.request, 0, tid, ts));
+            }
+        }
+    }
+    // terminate each flow at every same-id admission span on a replica pid
+    for (pid, p) in procs.iter().enumerate().skip(1) {
+        for e in &p.spans {
+            if e.stage != Stage::Admission {
+                continue;
+            }
+            if flow_starts.iter().any(|(req, _)| *req == e.request) {
+                let ts = (p.anchor_unix_us - base) + e.start_us;
+                let tid = e.lane.map_or(0, |l| l + 1);
+                events.push(flow_event("f", e.request, pid, tid, ts));
+            }
+        }
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events)), ("displayTimeUnit", Json::str("ms"))])
+}
+
+fn flow_event(ph: &str, request: u64, pid: usize, tid: usize, ts: u64) -> Json {
+    let mut fields = vec![
+        ("name", Json::str("request")),
+        ("cat", Json::str("flow")),
+        ("ph", Json::str(ph)),
+        ("id", Json::str(format!("{request:016x}"))),
+        ("ts", Json::num(ts as f64)),
+        ("pid", Json::num(pid as u32)),
+        ("tid", Json::num(tid as u32)),
+    ];
+    if ph == "f" {
+        fields.push(("bp", Json::str("e"))); // bind to the enclosing slice
+    }
+    Json::obj(fields)
+}
+
+/// Stitch and write atomically (tmp + rename), same contract as
+/// [`write_chrome_trace`](super::trace::write_chrome_trace).
+pub fn write_stitched(path: &Path, procs: &[ProcessTrace]) -> Result<()> {
+    let doc = stitch(procs);
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, doc.to_string()).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("rename to {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::trace::TraceCfg;
+    use std::time::Instant;
+
+    fn traced(name: &str, f: impl Fn(&Tracer)) -> ProcessTrace {
+        let t = Tracer::new(&TraceCfg { sample: 1.0, capacity: 64 });
+        f(&t);
+        ProcessTrace::from_tracer(name, &t)
+    }
+
+    /// Every stitched document must satisfy what Perfetto's loader needs:
+    /// known phases, durations on complete events, pids everywhere.
+    fn assert_perfetto_parses(doc: &Json) -> Vec<String> {
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let mut names = vec![];
+        for e in events {
+            let ph = e.get("ph").and_then(Json::as_str).unwrap();
+            assert!(["X", "i", "M", "s", "f"].contains(&ph), "unknown phase {ph}");
+            if ph == "X" {
+                assert!(e.get("dur").and_then(Json::as_f64).is_some());
+            }
+            if ph == "s" || ph == "f" {
+                assert!(e.get("id").and_then(Json::as_str).is_some(), "flows need ids");
+            }
+            assert!(e.get("pid").and_then(Json::as_f64).is_some());
+            names.push(e.get("name").and_then(Json::as_str).unwrap().to_string());
+        }
+        names
+    }
+
+    #[test]
+    fn stitches_router_and_replicas_onto_one_timeline() {
+        let trace_id = 0xfeed_face_0000_0001u64;
+        let start = Instant::now();
+        let router = traced("router", |t| {
+            t.span(Stage::Relay, trace_id, 0, start, 9);
+            t.instant_event(Stage::Failover, trace_id, 0, 0);
+        });
+        let rep_a = traced("replica 127.0.0.1:7001", |t| {
+            t.span(Stage::Admission, trace_id, 0, start, 5);
+            t.span(Stage::Prefill, trace_id, 0, start, 5);
+        });
+        let rep_b = traced("replica 127.0.0.1:7002", |t| {
+            t.span(Stage::Admission, trace_id, 1, start, 5);
+        });
+        let doc = stitch(&[router, rep_a, rep_b]);
+        let names = assert_perfetto_parses(&doc);
+        for want in ["relay", "failover", "admission", "process_name"] {
+            assert!(names.iter().any(|n| n == want), "missing {want}");
+        }
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // one flow start on pid 0, one flow finish per replica admission
+        let flows = |ph: &str| {
+            events
+                .iter()
+                .filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(flows("s").len(), 1);
+        assert_eq!(flows("f").len(), 2, "both replicas admitted the trace id");
+        for f in flows("f") {
+            assert_eq!(
+                f.get("id").and_then(Json::as_str),
+                Some(format!("{trace_id:016x}").as_str())
+            );
+            assert!(f.get("pid").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        // the failover rides pid 0 as an instant event
+        let failover = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("failover"))
+            .unwrap();
+        assert_eq!(failover.get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(failover.get("pid").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn anchors_rebase_onto_the_earliest_process() {
+        let start = Instant::now();
+        let mut early = traced("router", |t| t.span(Stage::Relay, 1, 0, start, 0));
+        let mut late = traced("replica", |t| t.span(Stage::Admission, 1, 0, start, 0));
+        // force a known 500us anchor gap regardless of wall-clock jitter
+        late.anchor_unix_us = early.anchor_unix_us + 500;
+        early.spans[0].start_us = 100;
+        late.spans[0].start_us = 100;
+        let doc = stitch(&[early, late]);
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let ts_of = |name: &str| {
+            events
+                .iter()
+                .find(|e| {
+                    e.get("name").and_then(Json::as_str) == Some(name)
+                        && e.get("ph").and_then(Json::as_str) != Some("s")
+                })
+                .and_then(|e| e.get("ts"))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_eq!(ts_of("relay"), 100.0);
+        assert_eq!(ts_of("admission"), 600.0, "later process shifts by the anchor gap");
+    }
+
+    #[test]
+    fn write_is_atomic_and_reparseable() {
+        let dir = std::env::temp_dir().join(format!("hla_stitch_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stitched.json");
+        let start = Instant::now();
+        let p = traced("router", |t| t.span(Stage::Relay, 3, 0, start, 1));
+        write_stitched(&path, &[p]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_perfetto_parses(&doc);
+        assert!(!dir.join("stitched.json.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -58,6 +58,12 @@ pub enum Stage {
     Repack = 5,
     /// Session snapshot on lane retirement (detail = tokens generated).
     Detach = 6,
+    /// Front-end relay of one generation (detail = reply lines relayed).
+    Relay = 7,
+    /// Mid-stream failover (instant; detail = index of the dead replica).
+    Failover = 8,
+    /// Session migrated between replicas (instant; detail = new home).
+    Migrate = 9,
 }
 
 impl Stage {
@@ -70,6 +76,9 @@ impl Stage {
             Stage::SpecRound => "spec_round",
             Stage::Repack => "repack",
             Stage::Detach => "detach",
+            Stage::Relay => "relay",
+            Stage::Failover => "failover",
+            Stage::Migrate => "migrate",
         }
     }
 
@@ -82,8 +91,28 @@ impl Stage {
             4 => Stage::SpecRound,
             5 => Stage::Repack,
             6 => Stage::Detach,
+            7 => Stage::Relay,
+            8 => Stage::Failover,
+            9 => Stage::Migrate,
             _ => return None,
         })
+    }
+
+    fn from_name(s: &str) -> Option<Stage> {
+        [
+            Stage::Admission,
+            Stage::CacheLookup,
+            Stage::Prefill,
+            Stage::DecodeStep,
+            Stage::SpecRound,
+            Stage::Repack,
+            Stage::Detach,
+            Stage::Relay,
+            Stage::Failover,
+            Stage::Migrate,
+        ]
+        .into_iter()
+        .find(|v| v.name() == s)
     }
 }
 
@@ -107,6 +136,42 @@ pub struct SpanEvent {
 impl SpanEvent {
     pub fn instant(&self) -> bool {
         self.instant
+    }
+
+    /// Wire form of one span (the `trace_export` reply payload).  The
+    /// request id ships as a 16-hex-digit string — trace ids use the full
+    /// 64-bit space and would not survive the f64 round-trip JSON numbers
+    /// take (same discipline as the `register` fingerprint).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("stage", Json::str(self.stage.name())),
+            ("request", Json::str(format!("{:016x}", self.request))),
+            ("lane", self.lane.map_or(Json::Null, |l| Json::num(l as u32))),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("dur_us", Json::num(self.dur_us as f64)),
+            ("detail", Json::num(self.detail)),
+            ("instant", Json::Bool(self.instant)),
+        ])
+    }
+
+    /// Decode the wire form; `None` on a missing/mistyped field (a reader
+    /// fed garbage skips the span rather than panicking).
+    pub fn from_json(j: &Json) -> Option<SpanEvent> {
+        let stage = Stage::from_name(j.get("stage")?.as_str()?)?;
+        let request = u64::from_str_radix(j.get("request")?.as_str()?, 16).ok()?;
+        let lane = match j.get("lane") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_usize()?),
+        };
+        Some(SpanEvent {
+            stage,
+            request,
+            lane,
+            start_us: j.get("start_us")?.as_f64()? as u64,
+            dur_us: j.get("dur_us")?.as_f64()? as u64,
+            detail: j.get("detail")?.as_f64()? as u32,
+            instant: j.get("instant")?.as_bool()?,
+        })
     }
 }
 
@@ -134,6 +199,9 @@ impl Slot {
         }
     }
 }
+
+/// Schema tag on the `trace_export` wire form (bump on layout changes).
+pub const TRACE_EXPORT_SCHEMA: &str = "hla-trace/1";
 
 /// Tracing knobs (`--trace-sample`, ring size).
 #[derive(Debug, Clone)]
@@ -168,6 +236,14 @@ fn splitmix_hash(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)
+}
+
+/// The SplitMix64 finalizer the sampler hashes request ids through,
+/// exported so trace-id *minting* (the cluster front-end) uses the same
+/// mixing discipline: ids minted from a counter stay uniformly spread
+/// under per-request sampling.
+pub fn splitmix64(z: u64) -> u64 {
+    splitmix_hash(z)
 }
 
 impl Tracer {
@@ -291,6 +367,29 @@ impl Tracer {
         out.into_iter().map(|(_, e)| e).collect()
     }
 
+    /// Wire export of the whole ring: the decoded spans plus a wall-clock
+    /// anchor — the tracer's (process-private, monotonic) epoch expressed
+    /// as unix microseconds.  `anchor_unix_us + span.start_us` places every
+    /// span from every process on one shared timeline, which is what lets
+    /// the stitcher merge rings from N processes into a single trace.
+    /// Anchor skew between processes is wall-clock skew (one NTP-displined
+    /// host: microseconds), not monotonic-epoch skew.
+    pub fn export_json(&self, name: &str) -> Json {
+        export_rings_json(name, &[self])
+    }
+
+    /// This ring's epoch expressed as unix microseconds — the anchor the
+    /// export form ships.  Skew between two processes' anchors is wall-
+    /// clock skew (one NTP-disciplined host: microseconds), not
+    /// monotonic-epoch skew.
+    pub fn anchor_unix_us(&self) -> u64 {
+        let unix_us = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        unix_us.saturating_sub(self.now_us())
+    }
+
     /// Chrome trace-event objects for this tracer under process id `pid`
     /// (one pid per replica).  Engine-scoped spans land on tid 0, lane
     /// spans on tid lane+1, so Perfetto renders one track per lane.
@@ -337,6 +436,29 @@ impl Tracer {
         }
         events
     }
+}
+
+/// One `trace_export` payload covering several in-process rings (a server
+/// running N engine replicas answers with a single merged ring): every
+/// span is rebased onto the earliest ring's epoch, so the payload is
+/// indistinguishable from one process-wide tracer's export.
+pub fn export_rings_json(name: &str, rings: &[&Tracer]) -> Json {
+    let anchors: Vec<u64> = rings.iter().map(|t| t.anchor_unix_us()).collect();
+    let base = anchors.iter().copied().min().unwrap_or(0);
+    let mut spans: Vec<Json> = Vec::new();
+    for (t, &anchor) in rings.iter().zip(&anchors) {
+        for mut e in t.events() {
+            e.start_us += anchor - base;
+            spans.push(e.to_json());
+        }
+    }
+    Json::obj(vec![
+        ("schema", Json::str(TRACE_EXPORT_SCHEMA)),
+        ("name", Json::str(name)),
+        // unix us ~ 1.7e15 < 2^53: exact as a JSON number
+        ("anchor_unix_us", Json::num(base as f64)),
+        ("spans", Json::Arr(spans)),
+    ])
 }
 
 /// Assemble `{pid, tracer}` pairs into one Chrome trace-event JSON file,
@@ -455,6 +577,42 @@ mod tests {
             assert!(names.iter().any(|n| n == want), "missing {want}");
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wire_export_round_trips_spans_with_an_anchor() {
+        let t = tracer(1.0, 64);
+        let start = Instant::now();
+        // a full-64-bit trace id must survive the wire (hex, not f64)
+        let big = 0xdead_beef_cafe_f00du64;
+        t.span(Stage::Relay, big, 0, start, 3);
+        t.instant_event(Stage::Failover, big, 1, 2);
+        t.engine_span(Stage::DecodeStep, start, 4);
+        let j = t.export_json("router");
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(TRACE_EXPORT_SCHEMA));
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("router"));
+        let anchor = j.get("anchor_unix_us").and_then(Json::as_f64).unwrap();
+        assert!(anchor > 0.0 && anchor < 9e15, "anchor must be f64-exact: {anchor}");
+        // round-trip through the serialized line, as the wire would
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        let spans: Vec<SpanEvent> = j2
+            .get("spans")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|s| SpanEvent::from_json(s).unwrap())
+            .collect();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].stage, Stage::Relay);
+        assert_eq!(spans[0].request, big);
+        assert_eq!(spans[0].lane, Some(0));
+        assert_eq!(spans[0].detail, 3);
+        assert!(spans[1].instant());
+        assert_eq!(spans[1].stage, Stage::Failover);
+        assert_eq!(spans[2].lane, None, "engine spans keep their null lane");
+        // garbage degrades to None, never a panic
+        assert!(SpanEvent::from_json(&Json::parse(r#"{"stage":"nope"}"#).unwrap()).is_none());
+        assert!(SpanEvent::from_json(&Json::parse(r#"{"request":12}"#).unwrap()).is_none());
     }
 
     #[test]

@@ -49,6 +49,11 @@ pub struct GenOpts {
     /// opt-out path scans with a different segmentation — see the
     /// protocol notes in `server/mod.rs`).
     pub no_cache: bool,
+    /// Fleet-wide trace id to key the request's spans by (`"trace_id"` on
+    /// the wire, shipped as 16 hex digits — full u64s do not survive the
+    /// f64 round-trip).  Usually minted by the cluster front-end; set it
+    /// here to correlate client-side calls with server spans.
+    pub trace: Option<u64>,
 }
 
 impl Default for GenOpts {
@@ -63,6 +68,7 @@ impl Default for GenOpts {
             fork_of: None,
             spec: false,
             no_cache: false,
+            trace: None,
         }
     }
 }
@@ -180,6 +186,9 @@ impl Client {
         if opts.no_cache {
             req.push(("no_cache", Json::Bool(true)));
         }
+        if let Some(t) = opts.trace {
+            req.push(("trace_id", Json::str(format!("{t:016x}"))));
+        }
         let start = Instant::now();
         writeln!(self.writer, "{}", Json::obj(req))?;
 
@@ -255,6 +264,14 @@ impl Client {
         let msg = self.admin(Json::obj(vec![("stats", Json::Bool(true))]))?;
         let stats = msg.get("stats").ok_or_else(|| anyhow!("stats reply missing \"stats\""))?;
         Ok(ServeStats::from_json(stats))
+    }
+
+    /// Fetch the whole one-line stats reply, untyped.  `hla top` uses this
+    /// to see the sections a front-end router adds alongside the merged
+    /// fleet snapshot (`"router"`, `"replicas"`, `"skipped"`) that the
+    /// typed [`Self::stats`] accessor deliberately ignores.
+    pub fn stats_reply(&mut self) -> Result<Json> {
+        self.admin(Json::obj(vec![("stats", Json::Bool(true))]))
     }
 
     /// Fetch the stats snapshot rendered as Prometheus exposition text.
@@ -344,6 +361,27 @@ impl Client {
             }
         }
         Ok(ids)
+    }
+
+    /// TRACE_EXPORT: pull the server's span ring (the stitcher's input).
+    /// Returns the export payload (`hla-trace/1`: name, anchor, spans);
+    /// works against replicas and front-end routers alike.
+    pub fn trace_export(&mut self) -> Result<Json> {
+        let msg = self.admin(Json::obj(vec![("control", Json::str("trace_export"))]))?;
+        msg.get("trace")
+            .cloned()
+            .ok_or_else(|| anyhow!("trace_export reply missing \"trace\""))
+    }
+
+    /// Fetch the tail of a front-end router's structured event log
+    /// (`{"events": n}` on the wire); returns the reply's `"events"`
+    /// array.  Replicas do not keep an event log — this is router-only.
+    pub fn events(&mut self, n: usize) -> Result<Vec<Json>> {
+        let msg = self.admin(Json::obj(vec![("events", Json::num(n as f64))]))?;
+        msg.get("events")
+            .and_then(Json::as_arr)
+            .map(<[Json]>::to_vec)
+            .ok_or_else(|| anyhow!("events reply missing \"events\""))
     }
 }
 

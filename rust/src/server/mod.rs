@@ -50,6 +50,16 @@
 //!     sessions always bypass the cache (their restored state already
 //!     encodes private history).
 //!
+//! Tracing extension:
+//!   * `"trace_id": "<16 hex digits>"` — key this request's spans by a
+//!     fleet-wide trace id (minted by the cluster front-end, or supplied
+//!     by a client correlating its own calls) instead of the process-
+//!     local request id, so `hla trace-stitch` can line the request up
+//!     across router and replica processes.  Hex string, not a number: a
+//!     full u64 does not survive the f64 round-trip.  Malformed values
+//!     are rejected with a one-line error; without a tracer attached the
+//!     field is validated and otherwise ignored.
+//!
 //! Stats extension (requires serving with a live registry, see
 //! [`serve_full`]; an admin request, not a generation — no tokens flow):
 //!   * `{"stats": true}` — one-line reply `{"stats": {...}, "replicas": N}`
@@ -77,6 +87,10 @@
 //!     this replica's config, then stored for the next `resume`.
 //!   * `{"control": "drain"}` — list every resident session id so the
 //!     front-end can detach them before retiring the replica.
+//!   * `{"control": "trace_export"}` — ship the replica's span ring
+//!     (decoded spans plus a unix-microsecond anchor) so the front-end
+//!     can stitch one fleet-wide Chrome trace.  Unlike the other verbs
+//!     this works on any traced server, cluster mode or not.
 //!
 //! Error replies are one-line objects: `{"error": "<reason>"}` — sent for
 //! malformed JSON, resume/fork without a session store, `fork_of` without
@@ -102,6 +116,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::router::Router;
 use crate::coordinator::{FinishReason, GenRequest};
+use crate::metrics::trace::{export_rings_json, Tracer};
 use crate::metrics::{LiveStats, ServeStats};
 use crate::model::sampler::SamplerCfg;
 use crate::session::SessionStore;
@@ -112,6 +127,17 @@ use crate::util::json::Json;
 /// `"stats"` admin request merges them into one fleet-wide snapshot.
 pub struct ServeObs {
     pub stats: Vec<Arc<LiveStats>>,
+    /// Span rings, one per traced engine replica (empty when serving
+    /// without `--trace-out`).  The `trace_export` control verb merges
+    /// them into one wire payload for cross-process stitching.
+    pub tracers: Vec<Arc<Tracer>>,
+}
+
+impl ServeObs {
+    /// Handles for an untraced server (stats only).
+    pub fn stats_only(stats: Vec<Arc<LiveStats>>) -> ServeObs {
+        ServeObs { stats, tracers: vec![] }
+    }
 }
 
 /// What a replica tells the cluster front-end about itself on `register`:
@@ -270,12 +296,29 @@ fn handle_control(
     req: &Json,
     router: &Router,
     sessions: Option<&SessionStore>,
+    obs: Option<&ServeObs>,
     identity: Option<&ReplicaIdentity>,
     writer: &mut TcpStream,
 ) -> Result<()> {
+    let verb = verb.as_str().ok_or_else(|| anyhow!("control: verb must be a string"))?;
+    // trace_export needs the observability handles, not a cluster
+    // identity: any traced server can hand its span ring over.
+    if verb == "trace_export" {
+        let rings: Vec<&Tracer> = obs.map_or(vec![], |o| {
+            o.tracers.iter().map(|t| t.as_ref()).collect()
+        });
+        if rings.is_empty() {
+            return Err(anyhow!("trace_export: serving without a tracer"));
+        }
+        let msg = Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("trace", export_rings_json("replica", &rings)),
+        ]);
+        writeln!(writer, "{msg}")?;
+        return Ok(());
+    }
     let identity = identity
         .ok_or_else(|| anyhow!("control: not serving in cluster mode (no replica identity)"))?;
-    let verb = verb.as_str().ok_or_else(|| anyhow!("control: verb must be a string"))?;
     let need_store = || {
         sessions.ok_or_else(|| anyhow!("control: {verb}: serving without a session store"))
     };
@@ -362,7 +405,7 @@ fn handle_request(
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
     // admin requests short-circuit before any generation fields parse
     if let Some(verb) = req.get("control") {
-        return handle_control(verb, &req, router, sessions, identity, writer);
+        return handle_control(verb, &req, router, sessions, obs, identity, writer);
     }
     if let Some(fmt) = req.get("stats") {
         return handle_stats(fmt, obs, writer);
@@ -413,6 +456,20 @@ fn handle_request(
     }
     if req.get("no_cache").and_then(Json::as_bool).unwrap_or(false) {
         greq = greq.without_cache();
+    }
+    // the optional distributed trace id: 16 hex digits, because a full
+    // u64 does not survive the f64 round-trip JSON numbers take (same
+    // discipline as the register fingerprint)
+    match req.get("trace_id") {
+        None => {}
+        Some(Json::Str(s)) if s.len() == 16 && s.bytes().all(|b| b.is_ascii_hexdigit()) => {
+            let id = u64::from_str_radix(s, 16)
+                .map_err(|e| anyhow!("trace_id: {e}"))?;
+            greq = greq.with_trace(id);
+        }
+        Some(other) => {
+            return Err(anyhow!("trace_id must be a 16-hex-digit string, got {other}"));
+        }
     }
     let replica = router.submit(greq, session)?;
 

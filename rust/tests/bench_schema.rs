@@ -25,7 +25,7 @@ fn committed_bench_reports_validate() {
         }
     }
     // the serving, observability, and cluster trajectories ship with the repo
-    for want in ["BENCH_e8.json", "BENCH_e18.json", "BENCH_e19.json"] {
+    for want in ["BENCH_e8.json", "BENCH_e18.json", "BENCH_e19.json", "BENCH_e20.json"] {
         assert!(found.iter().any(|n| n == want), "missing {want} (found {found:?})");
     }
 }

@@ -21,12 +21,18 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
-use hla::cluster::{fixture_identity, serve_frontend, spawn_fixture_engine, Frontend, FrontendCfg};
+use hla::cluster::{
+    fixture_identity, serve_frontend, spawn_fixture_engine_traced, EventLog, Frontend, FrontendCfg,
+};
 use hla::coordinator::router::{RoutePolicy, Router};
+use hla::metrics::stitch::{write_stitched, ProcessTrace};
+use hla::metrics::trace::{TraceCfg, Tracer};
 use hla::metrics::LiveStats;
+use hla::server::client::Client;
 use hla::server::{serve_cluster, ServeObs};
 use hla::session::SessionStore;
 use hla::testing::fixtures::{build_model_full, ModelShape};
+use hla::util::json::Json;
 
 const SEED: u64 = 7;
 
@@ -34,13 +40,20 @@ const SEED: u64 = 7;
 /// real wire server with cluster identity.  Same `SEED` everywhere —
 /// failover replays must continue on identical weights.
 fn spawn_replica() -> (String, Arc<AtomicBool>) {
+    spawn_replica_traced(None)
+}
+
+/// Same, with an optional span ring attached to the engine and exposed
+/// over the wire via the `trace_export` control verb.
+fn spawn_replica_traced(tracer: Option<Arc<Tracer>>) -> (String, Arc<AtomicBool>) {
     let model = build_model_full("hla2", &ModelShape::default(), SEED);
     let identity = Arc::new(fixture_identity(&model));
     let store = Arc::new(SessionStore::in_memory(64));
     let stats = Arc::new(LiveStats::new());
-    let (tx, _engine) = spawn_fixture_engine(model, store.clone(), stats.clone());
+    let (tx, _engine) =
+        spawn_fixture_engine_traced(model, store.clone(), stats.clone(), tracer.clone());
     let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
-    let obs = Arc::new(ServeObs { stats: vec![stats] });
+    let obs = Arc::new(ServeObs { stats: vec![stats], tracers: tracer.into_iter().collect() });
     let stop = Arc::new(AtomicBool::new(false));
     let (atx, arx) = mpsc::channel();
     let stop2 = stop.clone();
@@ -125,17 +138,37 @@ fn spawn_test_frontend(replicas: Vec<String>) -> (String, Arc<Frontend>, Arc<Ato
         health_interval: Duration::from_millis(100),
         io_timeout: Duration::from_millis(500),
     }));
+    let (addr, stop) = spawn_frontend_arc(fe.clone());
+    (addr, fe, stop)
+}
+
+/// Serve an already-built front-end (lets a test attach observability
+/// sinks before the listener starts).
+fn spawn_frontend_arc(fe: Arc<Frontend>) -> (String, Arc<AtomicBool>) {
     let stop = Arc::new(AtomicBool::new(false));
     let (atx, arx) = mpsc::channel();
-    let fe2 = fe.clone();
     let stop2 = stop.clone();
     std::thread::spawn(move || {
-        serve_frontend("127.0.0.1:0", fe2, stop2, |a| {
+        serve_frontend("127.0.0.1:0", fe, stop2, |a| {
             atx.send(a.to_string()).unwrap();
         })
         .unwrap();
     });
-    (arx.recv().unwrap(), fe, stop)
+    (arx.recv().unwrap(), stop)
+}
+
+/// One single-line admin round-trip (stats / events) over a fresh
+/// connection — admin replies have no `done` terminal, they are one line.
+fn admin(addr: &str, line: &str) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    writeln!(writer, "{line}").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    assert!(reader.read_line(&mut buf).unwrap() > 0, "no admin reply");
+    buf.trim_end().to_string()
 }
 
 /// One request over a fresh connection; returns the raw reply lines:
@@ -249,11 +282,120 @@ fn stats_fan_out_merges_the_fleet() {
     for _ in 0..2 {
         request(&fe_addr, "{\"prompt\": \"ab\", \"max_tokens\": 4, \"temperature\": 0}");
     }
-    let reply = request(&fe_addr, "{\"stats\": true}");
-    assert_eq!(reply.len(), 1, "stats is a single-line reply: {reply:?}");
-    let line = &reply[0];
+    let line = admin(&fe_addr, "{\"stats\": true}");
     assert!(line.contains("\"replicas\":2"), "both replicas must answer: {line}");
     assert!(line.contains("\"tokens_out\":8"), "4 tokens per replica summed: {line}");
+    assert!(line.contains("\"skipped\":[]"), "a fully-answered fleet skips nobody: {line}");
+    assert!(line.contains("\"router\""), "the front-end's own metrics plane rides along: {line}");
+}
+
+/// The ISSUE's chaos acceptance scenario: a traced failover run must
+/// yield ONE stitched Chrome trace (router pid 0 + both replica pids
+/// sharing the request's trace id, the failover as an instant event) and
+/// an event journal carrying the ordered sequence
+/// strike → dead → failover_begin → attach → failover_end.
+#[test]
+fn chaos_failover_emits_a_stitched_trace_and_an_ordered_event_journal() {
+    let mk = || Arc::new(Tracer::new(&TraceCfg { sample: 1.0, capacity: 512 }));
+    let (a_tr, b_tr, r_tr) = (mk(), mk(), mk());
+    let (a_addr, _a_stop) = spawn_replica_traced(Some(a_tr));
+    let (b_addr, _b_stop) = spawn_replica_traced(Some(b_tr));
+    let (proxy_addr, armed) = spawn_chaos_proxy(a_addr.clone(), 7);
+
+    let dir = std::env::temp_dir().join(format!("hla_cluster_obs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("events.jsonl");
+    std::fs::remove_file(&journal).ok();
+    let fe = Arc::new(
+        Frontend::new(FrontendCfg {
+            replica_addrs: vec![proxy_addr, b_addr.clone()],
+            policy: RoutePolicy::RoundRobin,
+            health_interval: Duration::from_millis(100),
+            io_timeout: Duration::from_millis(500),
+        })
+        .with_observability(Some(r_tr), Some(EventLog::with_journal(&journal).unwrap())),
+    );
+    let (fe_addr, _fe_stop) = spawn_frontend_arc(fe.clone());
+
+    let sampler = "\"temperature\": 0,";
+    let turn1 = request(&fe_addr, &turn1_line(70, sampler));
+    assert!(turn1.last().unwrap().contains("\"done\""), "{turn1:?}");
+    armed.store(true, Ordering::Relaxed);
+    let turn2 = request(&fe_addr, &turn2_line(70, sampler));
+    assert!(turn2.last().unwrap().contains("\"done\""), "{turn2:?}");
+    assert_eq!(fe.failovers.load(Ordering::Relaxed), 1, "exactly one mid-stream failover");
+
+    // ONE stitched trace: every ring pulled over the wire — the router
+    // answers `trace_export` itself, the replicas via the control plane
+    let pull = |addr: &str| {
+        let export = Client::connect(addr).unwrap().trace_export().unwrap();
+        ProcessTrace::from_export(&export).unwrap()
+    };
+    let procs = vec![pull(&fe_addr), pull(&a_addr), pull(&b_addr)];
+    let out = dir.join("stitched.json");
+    write_stitched(&out, &procs).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    for e in evs {
+        let ph = e.get("ph").and_then(Json::as_str).unwrap();
+        assert!(["X", "i", "M", "s", "f"].contains(&ph), "Perfetto-unknown phase {ph}");
+        if ph == "X" {
+            assert!(e.get("dur").and_then(Json::as_f64).is_some(), "complete spans need dur");
+        }
+        assert!(e.get("pid").and_then(Json::as_f64).is_some(), "every event needs a pid");
+    }
+    // the failover is an instant event on the router track, keyed by the
+    // minted trace id of the interrupted request
+    let failover = evs
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("failover"))
+        .expect("failover instant event in the stitched trace");
+    assert_eq!(failover.get("ph").and_then(Json::as_str), Some("i"));
+    assert_eq!(failover.get("pid").and_then(Json::as_f64), Some(0.0));
+    let trace_id = failover.path("args.request").and_then(Json::as_str).unwrap().to_string();
+    assert_ne!(trace_id, format!("{:016x}", 0u64), "failover must carry a real trace id");
+    // that id spans pid 0 (the relay) and BOTH replica pids: the doomed
+    // home admitted it, the survivor admitted the replay
+    let pids_with_id: std::collections::BTreeSet<u64> = evs
+        .iter()
+        .filter(|e| e.path("args.request").and_then(Json::as_str) == Some(trace_id.as_str()))
+        .map(|e| e.get("pid").and_then(Json::as_f64).unwrap() as u64)
+        .collect();
+    assert!(pids_with_id.contains(&0), "the router relay span must carry the trace id");
+    assert!(
+        pids_with_id.iter().filter(|p| **p > 0).count() >= 2,
+        "spans from >= 2 replica pids must share the trace id, got {pids_with_id:?}"
+    );
+
+    // the journal holds the ordered failover sequence (other events —
+    // register, detach — may interleave; the order of these five may not)
+    let kinds: Vec<String> = std::fs::read_to_string(&journal)
+        .unwrap()
+        .lines()
+        .map(|l| {
+            Json::parse(l).unwrap().get("kind").and_then(Json::as_str).unwrap().to_string()
+        })
+        .collect();
+    let mut want = vec!["strike", "dead", "failover_begin", "attach", "failover_end"];
+    for k in &kinds {
+        if !want.is_empty() && k == want[0] {
+            want.remove(0);
+        }
+    }
+    assert!(
+        want.is_empty(),
+        "journal missing the ordered failover sequence (still want {want:?}) in {kinds:?}"
+    );
+
+    // the same ring answers over the wire as {"events": N}
+    let ev_reply = Json::parse(&admin(&fe_addr, "{\"events\": 64}")).unwrap();
+    let listed = ev_reply.get("events").and_then(Json::as_arr).unwrap();
+    assert!(!listed.is_empty(), "the in-memory ring must answer the wire query");
+    assert!(
+        ev_reply.get("count").and_then(Json::as_f64).unwrap() >= listed.len() as f64,
+        "count is the lifetime total"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 // ---------------------------------------------------------------------------

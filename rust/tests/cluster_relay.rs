@@ -78,6 +78,24 @@ fn fake(gen: Gen, resume: Gen, detach_ok: bool) -> String {
     spawn_fake_replica(FakeCfg { gen, resume, detach_ok })
 }
 
+/// A replica that registers once and then vanishes: its listener accepts
+/// exactly one connection (the front-end's startup `register` handshake)
+/// and then closes, so every later dial is refused — the shape of a
+/// replica that crashed between the health checker's probes.
+fn spawn_vanishing_replica() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        if let Ok((stream, _)) = listener.accept() {
+            handle_fake_conn(
+                stream,
+                FakeCfg { gen: Gen::Full(1), resume: Gen::Full(1), detach_ok: false },
+            );
+        }
+    });
+    addr
+}
+
 fn handle_fake_conn(stream: TcpStream, cfg: FakeCfg) {
     let _ = stream.set_nodelay(true);
     let Ok(clone) = stream.try_clone() else { return };
@@ -104,6 +122,8 @@ fn handle_fake_conn(stream: TcpStream, cfg: FakeCfg) {
             }
         } else if line.contains("\"attach_session\"") {
             let _ = writeln!(writer, "{{\"ok\":true,\"session\":5}}");
+        } else if line.contains("\"stats\"") {
+            let _ = writeln!(writer, "{{\"replicas\":1,\"stats\":{{\"tokens_out\":4}}}}");
         } else if line.contains("\"prompt\"") {
             let gen = if line.contains("\"resume\"") { cfg.resume } else { cfg.gen };
             if run_gen(&mut writer, gen).is_err() {
@@ -191,6 +211,38 @@ fn request(addr: &str, line: &str) -> Vec<String> {
             return lines;
         }
     }
+}
+
+/// One admin request (stats / events) over a fresh connection: admin
+/// replies are a single line with no `done`/`error` terminal marker.
+fn admin(addr: &str, line: &str) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    writeln!(writer, "{line}").unwrap();
+    let mut buf = String::new();
+    BufReader::new(stream).read_line(&mut buf).unwrap();
+    buf
+}
+
+#[test]
+fn stats_fanout_names_unreachable_replicas_instead_of_dropping_them() {
+    let a = fake(Gen::Full(4), Gen::Full(4), false);
+    let gone = spawn_vanishing_replica();
+    let (fe_addr, _fe, _stop) = spawn_fake_frontend(vec![a, gone.clone()]);
+    // one generation so the live replica's fake snapshot is plausible
+    let lines = request(&fe_addr, "{\"prompt\": \"x\", \"max_tokens\": 4}");
+    assert!(lines.last().unwrap().contains("\"done\""), "{lines:?}");
+    let reply = admin(&fe_addr, "{\"stats\": true}");
+    assert!(reply.contains("\"replicas\":1"), "only the live replica merges: {reply}");
+    assert!(reply.contains("\"tokens_out\":4"), "the live snapshot still merges: {reply}");
+    assert!(
+        reply.contains("\"skipped\"") && reply.contains(&gone),
+        "the skipped array must name the unreachable replica instead of \
+         silently narrowing the merge: {reply}"
+    );
+    assert!(reply.contains("\"router\""), "the reply carries the router metrics plane: {reply}");
 }
 
 #[test]

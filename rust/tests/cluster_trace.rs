@@ -1,0 +1,147 @@
+//! Distributed trace-id propagation, pinned at the wire: a request that
+//! carries `"trace_id"` must have every engine span keyed by that id in
+//! the `trace_export` payload; a request without one must keep tracing
+//! under process-local request ids (no invented fleet ids); a malformed
+//! id must come back as a one-line typed error that leaves the
+//! connection serving.
+//!
+//! This is the replica half of the stitching contract — the router half
+//! (minted ids crossing process boundaries, the failover instant) is
+//! pinned end-to-end in `cluster_failover.rs`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use hla::cluster::{fixture_identity, spawn_fixture_engine_traced};
+use hla::coordinator::router::{RoutePolicy, Router};
+use hla::metrics::trace::{SpanEvent, TraceCfg, Tracer};
+use hla::metrics::LiveStats;
+use hla::server::client::{Client, GenOpts};
+use hla::server::{serve_cluster, ServeObs};
+use hla::session::SessionStore;
+use hla::testing::fixtures::{build_model_full, ModelShape};
+use hla::util::json::Json;
+
+/// One traced fixture replica behind the real wire server.
+fn spawn_traced_replica() -> (String, Arc<Tracer>, Arc<AtomicBool>) {
+    let tracer = Arc::new(Tracer::new(&TraceCfg { sample: 1.0, capacity: 512 }));
+    let model = build_model_full("hla2", &ModelShape::default(), 7);
+    let identity = Arc::new(fixture_identity(&model));
+    let store = Arc::new(SessionStore::in_memory(16));
+    let stats = Arc::new(LiveStats::new());
+    let (tx, _engine) =
+        spawn_fixture_engine_traced(model, store.clone(), stats.clone(), Some(tracer.clone()));
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    let obs = Arc::new(ServeObs { stats: vec![stats], tracers: vec![tracer.clone()] });
+    let stop = Arc::new(AtomicBool::new(false));
+    let (atx, arx) = mpsc::channel();
+    let stop2 = stop.clone();
+    std::thread::spawn(move || {
+        serve_cluster("127.0.0.1:0", router, Some(store), Some(obs), Some(identity), stop2, |a| {
+            atx.send(a.to_string()).unwrap();
+        })
+        .unwrap();
+    });
+    (arx.recv().unwrap(), tracer, stop)
+}
+
+/// Pull the replica's span ring over the wire and decode it.
+fn exported_spans(addr: &str) -> Vec<SpanEvent> {
+    let export = Client::connect(addr).unwrap().trace_export().unwrap();
+    assert_eq!(export.get("schema").and_then(Json::as_str), Some("hla-trace/1"), "{export}");
+    export
+        .get("spans")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|s| SpanEvent::from_json(s).expect("well-formed exported span"))
+        .collect()
+}
+
+#[test]
+fn explicit_trace_id_keys_every_span_of_the_request() {
+    let (addr, _tracer, _stop) = spawn_traced_replica();
+    let mut c = Client::connect(&addr).unwrap();
+    let done = c
+        .generate_opts(
+            "trace me",
+            &GenOpts { max_tokens: 6, trace: Some(0xab), ..GenOpts::default() },
+        )
+        .unwrap();
+    assert_eq!(done.tokens.len(), 6);
+
+    let spans = exported_spans(&addr);
+    let tagged: Vec<&SpanEvent> = spans.iter().filter(|s| s.request == 0xab).collect();
+    assert!(
+        tagged.iter().any(|s| s.stage.name() == "admission"),
+        "the request's admission span must carry the fleet trace id: {spans:?}"
+    );
+    // nothing else in this process shares the fleet id, and the request's
+    // spans never leak under the local request id once a trace id is set
+    assert!(
+        !spans.iter().any(|s| s.request != 0xab && s.stage.name() == "admission"),
+        "a lone traced request must produce exactly one admission key: {spans:?}"
+    );
+}
+
+#[test]
+fn untraced_requests_stay_keyed_by_local_request_ids() {
+    let (addr, _tracer, _stop) = spawn_traced_replica();
+    let mut c = Client::connect(&addr).unwrap();
+    let done = c.generate("no trace id", 6, 0.0, None).unwrap();
+    assert_eq!(done.tokens.len(), 6);
+
+    let spans = exported_spans(&addr);
+    assert!(!spans.is_empty(), "tracing itself must still run without a trace id");
+    // local request ids are small sequential integers; a minted fleet id
+    // is a full-width SplitMix64 output — its presence here would mean
+    // the replica invented a trace id the router never handed it
+    assert!(
+        spans.iter().all(|s| s.request < 1 << 20),
+        "untraced spans must key by process-local request ids only: {spans:?}"
+    );
+}
+
+#[test]
+fn malformed_trace_id_is_a_typed_error_not_a_panic() {
+    let (addr, _tracer, _stop) = spawn_traced_replica();
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+
+    // wrong length, non-hex, and non-string: each rejected in one line
+    for bad in [
+        "{\"prompt\": \"x\", \"max_tokens\": 4, \"trace_id\": \"abc\"}",
+        "{\"prompt\": \"x\", \"max_tokens\": 4, \"trace_id\": \"zzzzzzzzzzzzzzzz\"}",
+        "{\"prompt\": \"x\", \"max_tokens\": 4, \"trace_id\": 171}",
+    ] {
+        writeln!(writer, "{bad}").unwrap();
+        buf.clear();
+        assert!(reader.read_line(&mut buf).unwrap() > 0, "no reply to {bad}");
+        let msg = Json::parse(&buf).unwrap();
+        let err = msg.get("error").and_then(Json::as_str).unwrap_or_else(|| {
+            panic!("malformed trace_id must yield an error line, got {buf}")
+        });
+        assert!(err.contains("trace_id"), "the error must name the field: {err}");
+    }
+
+    // ...and the connection keeps serving afterwards
+    writeln!(writer, "{}", "{\"prompt\": \"x\", \"max_tokens\": 3, \"temperature\": 0}").unwrap();
+    let mut tokens = 0;
+    loop {
+        buf.clear();
+        assert!(reader.read_line(&mut buf).unwrap() > 0, "stream died after rejections");
+        if buf.contains("\"done\"") {
+            break;
+        }
+        assert!(!buf.contains("\"error\""), "healthy request errored: {buf}");
+        tokens += 1;
+    }
+    assert_eq!(tokens, 3, "the post-rejection generation must stream normally");
+}

@@ -127,7 +127,7 @@ fn traced_server_streams_identical_and_serves_live_stats() {
         let stop = Arc::new(AtomicBool::new(false));
         let (addr_tx, addr_rx) = mpsc::channel();
         let stop2 = stop.clone();
-        let serve_obs = stats.map(|s| Arc::new(ServeObs { stats: vec![s] }));
+        let serve_obs = stats.map(|s| Arc::new(ServeObs::stats_only(vec![s])));
         let server_handle = std::thread::spawn(move || {
             serve_full("127.0.0.1:0", router, None, serve_obs, stop2, move |addr| {
                 addr_tx.send(addr).unwrap();

@@ -73,7 +73,7 @@ fn stats_request_is_live_monotone_and_consistent() {
     let (tx, engine) = spawn_fake_engine(stats.clone(), Duration::from_millis(2));
     let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
     let stop = Arc::new(AtomicBool::new(false));
-    let obs = Arc::new(ServeObs { stats: vec![stats] });
+    let obs = Arc::new(ServeObs::stats_only(vec![stats]));
     let (addr, server) = start_server(Some(obs), router, stop.clone());
 
     // client A streams on its own thread...
@@ -153,7 +153,7 @@ fn stats_request_without_registry_errors_and_bad_format_rejected() {
 
     // a server with handles rejects an unknown stats format
     let stop = Arc::new(AtomicBool::new(false));
-    let obs = Arc::new(ServeObs { stats: vec![stats] });
+    let obs = Arc::new(ServeObs::stats_only(vec![stats]));
     let (addr, server) = start_server(Some(obs), router, stop.clone());
     {
         use std::io::{BufRead, BufReader, Write};
