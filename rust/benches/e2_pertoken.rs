@@ -24,6 +24,14 @@ fn naive_axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Reference scalar scale, straight indexing loop — what `ops::scale` was
+/// before the 8-wide unroll (every decayed state row pays this).
+fn naive_scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
 fn main() {
     banner("E2", "per-token cost vs context length (HLA O(1) vs softmax O(t))");
     let d = 64;
@@ -66,14 +74,16 @@ fn main() {
     print!("{}", table.render());
     println!("expected shape: hla2 column flat; softmax column grows ~linearly in t.");
 
-    banner("E2b", "hot-kernel microbench: unrolled ops::dot/axpy vs naive loops");
-    // dot and axpy are the inner loops of every matvec / rank-1 state
-    // update, i.e. the per-token cost above and the chunked verify /
+    banner("E2b", "hot-kernel microbench: unrolled ops::dot/axpy/scale vs naive loops");
+    // dot, axpy and scale are the inner loops of every matvec / rank-1
+    // state update, i.e. the per-token cost above and the chunked verify /
     // prefill scans are made of them.  Measure the 8-wide unroll against
     // the naive loop instead of assuming it pays (ops.rs points here).
     let mut rng = Rng::new(3);
-    let mut table =
-        Table::new(&["n", "dot ns", "naive dot ns", "dot gain", "axpy ns", "naive axpy ns", "axpy gain"]);
+    let mut table = Table::new(&[
+        "n", "dot ns", "naive ns", "gain", "axpy ns", "naive ns", "gain", "scale ns", "naive ns",
+        "gain",
+    ]);
     for n in [16usize, 64, 256, 1024, 4096] {
         let mut x = vec![0f32; n];
         let mut y = vec![0f32; n];
@@ -107,6 +117,20 @@ fn main() {
             }
             black_box(&y);
         });
+        // scale by ~1 so repeated in-place scaling neither overflows nor
+        // denormalizes across the measured repetitions
+        let s_scale = bench(3, 30, || {
+            for _ in 0..reps {
+                ops::scale(black_box(1.000_000_1f32), black_box(&mut y[..]));
+            }
+            black_box(&y);
+        });
+        let s_naive_scale = bench(3, 30, || {
+            for _ in 0..reps {
+                naive_scale(black_box(1.000_000_1f32), black_box(&mut y[..]));
+            }
+            black_box(&y);
+        });
         let per = |s: &hla::bench::Stats| s.mean_s * 1e9 / reps as f64;
         table.row(&[
             n.to_string(),
@@ -116,10 +140,13 @@ fn main() {
             format!("{:.1}", per(&s_axpy)),
             format!("{:.1}", per(&s_naive_axpy)),
             format!("{:.2}x", per(&s_naive_axpy) / per(&s_axpy)),
+            format!("{:.1}", per(&s_scale)),
+            format!("{:.1}", per(&s_naive_scale)),
+            format!("{:.2}x", per(&s_naive_scale) / per(&s_scale)),
         ]);
     }
     print!("{}", table.render());
     println!("expected shape: dot gains most (the unroll breaks the f32 add dependency");
-    println!("chain); axpy gains less (elementwise, vectorizable either way).  Gains");
-    println!("should widen with n until memory bandwidth takes over.");
+    println!("chain); axpy and scale gain less (elementwise, vectorizable either way).");
+    println!("Gains should widen with n until memory bandwidth takes over.");
 }

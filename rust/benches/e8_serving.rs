@@ -45,6 +45,7 @@ fn run_trace_load(
             buckets: None,
             stats: None,
             tracer: None,
+            decode_threads: 1,
         },
     );
     // warmup barrier: engine construction compiles the artifacts (~10s on

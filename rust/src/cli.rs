@@ -40,11 +40,15 @@ common flags: --artifacts DIR --model NAME --seed N --config FILE.json
 train:    --steps N --lr F --warmup N --checkpoint PATH
 generate: --prompt STR --max-tokens N --temperature F [--checkpoint PATH]
           --spec true [--spec-k N --spec-drafter ngram|model|model:<cfg>]
+          --decode-threads N  (persistent decode worker pool; 0 = one per
+          core, 1 = serial; byte-identical either way)
           --trace-out PATH.json  (Chrome trace of the engine cycle)
 serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
           [--checkpoint PATH]  (trained weights; default is seeded init)
           --session-capacity N --spill-dir DIR
           --prefill-chunk N --prefill-threads N  (0 0 = decode-as-prefill)
+          --decode-threads N  (persistent per-engine decode pool for the
+          host-side paths: fixture engines and model drafters; 0 = auto)
           --batch-buckets off|pow2|w1,w2,...  --bucket-shrink-after K
           (occupancy-adaptive decode width; grows on admission, shrinks
           after K under-occupied steps; needs bucketed decode artifacts)
@@ -220,6 +224,18 @@ fn prefill_cfg(cfg: &RunConfig) -> Option<PrefillCfg> {
     (cfg.prefill_chunk > 0).then(|| PrefillCfg::scan(cfg.prefill_chunk, cfg.prefill_threads))
 }
 
+/// `--decode-threads N` resolved: 0 means one worker per available core
+/// (uncapped, like `--prefill-threads 0`); anything else passes through.
+/// `1` keeps the serial decode path ([`crate::model::pool::DecodePool`]
+/// spawns no workers).
+fn decode_threads(cfg: &RunConfig) -> usize {
+    if cfg.decode_threads == 0 {
+        crate::util::auto_threads()
+    } else {
+        cfg.decode_threads
+    }
+}
+
 /// `--prefix-cache-mb N` (N > 0) attaches the shared-prefix cache (one
 /// per replica — cached states are functions of the replica's weights).
 fn prefix_cache_cfg(cfg: &RunConfig) -> Option<PrefixCacheCfg> {
@@ -292,6 +308,7 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
             buckets: bucket_cfg(cfg),
             stats: Some(stats.clone()),
             tracer: tracer.clone(),
+            decode_threads: decode_threads(cfg),
         },
     );
     let (etx, erx) = std::sync::mpsc::channel();
@@ -365,6 +382,7 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
                 buckets: bucket_cfg(cfg),
                 stats: Some(stats.clone()),
                 tracer: tracer.clone(),
+                decode_threads: decode_threads(cfg),
             },
         );
         senders.push(tx);
@@ -379,9 +397,18 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         Some(p) => println!("weights: checkpoint {p}"),
         None => println!("weights: seeded init (pass --checkpoint PATH to serve trained weights)"),
     }
+    // both thread counts print *resolved* (0 = auto already expanded to
+    // the core count) so the operator sees what actually runs
     match prefill_cfg(cfg) {
         Some(p) => println!("prefill: chunked scan (w={}, {} thread(s))", p.chunk, p.threads),
         None => println!("prefill: decode-as-prefill (enable with --prefill-chunk N)"),
+    }
+    match decode_threads(cfg) {
+        t if t > 1 => println!(
+            "decode pool: {t} persistent worker(s) per engine (host-side paths: \
+             model drafters; byte-identical to serial)"
+        ),
+        _ => println!("decode pool: serial (enable with --decode-threads N, 0 = auto)"),
     }
     match prefix_cache_cfg(cfg) {
         Some(c) => {
@@ -474,7 +501,7 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
 /// member must share `--seed` so a failover replay on a different
 /// process continues the stream byte-for-byte.
 fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
-    use crate::cluster::{fixture_identity, spawn_fixture_engine_traced};
+    use crate::cluster::{fixture_identity, spawn_fixture_engine_pooled};
     use crate::testing::fixtures::{build_model_full, ModelShape};
 
     let store = Arc::new(SessionStore::new(StoreCfg {
@@ -496,8 +523,13 @@ fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
         }
         let stats = Arc::new(LiveStats::new());
         let tracer = tracer_cfg(cfg);
-        let (tx, handle) =
-            spawn_fixture_engine_traced(model, store.clone(), stats.clone(), tracer.clone());
+        let (tx, handle) = spawn_fixture_engine_pooled(
+            model,
+            store.clone(),
+            stats.clone(),
+            tracer.clone(),
+            decode_threads(cfg),
+        );
         senders.push(tx);
         handles.push(handle);
         registries.push(stats);
@@ -514,6 +546,12 @@ fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
         identity.cfg_fingerprint,
         human_bytes(identity.state_bytes),
     );
+    match decode_threads(cfg) {
+        t if t > 1 => println!(
+            "decode pool: {t} persistent worker(s) per engine (byte-identical to serial)"
+        ),
+        _ => println!("decode pool: serial (enable with --decode-threads N, 0 = auto)"),
+    }
     match &cfg.trace_out {
         Some(_) => println!(
             "tracing: replica spans on (sample {:.2}) — pull the ring with the \

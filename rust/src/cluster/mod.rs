@@ -42,5 +42,8 @@ pub use events::{Event, EventKind, EventLog};
 pub use frontend::{serve_frontend, Frontend, FrontendCfg};
 pub use health::spawn_health;
 pub use registry::{Replica, ReplicaRegistry};
-pub use replica::{fixture_identity, spawn_fixture_engine, spawn_fixture_engine_traced};
+pub use replica::{
+    fixture_identity, spawn_fixture_engine, spawn_fixture_engine_pooled,
+    spawn_fixture_engine_traced,
+};
 pub use stats::RouterStats;

@@ -24,6 +24,7 @@ use std::time::Instant;
 use crate::coordinator::request::{FinishReason, GenRequest, TokenEvent};
 use crate::metrics::trace::{Stage, Tracer};
 use crate::metrics::LiveStats;
+use crate::model::pool::DecodePool;
 use crate::model::sampler::Sampler;
 use crate::model::{ModelState, RustModel};
 use crate::server::ReplicaIdentity;
@@ -65,13 +66,35 @@ pub fn spawn_fixture_engine_traced(
     stats: Arc<LiveStats>,
     tracer: Option<Arc<Tracer>>,
 ) -> (Sender<GenRequest>, JoinHandle<()>) {
+    spawn_fixture_engine_pooled(model, store, stats, tracer, 1)
+}
+
+/// [`spawn_fixture_engine_traced`] with a persistent decode worker pool:
+/// every decode (and decode-as-prefill) step fans its per-layer head work
+/// across `decode_threads` long-lived workers (`serve --decode-threads`;
+/// the CLI resolves `0 = auto` before calling this).  `<= 1` is the serial
+/// path.  The pool outlives requests — it is built once on the engine
+/// thread, the whole point versus per-step spawning.
+///
+/// Threaded decode is byte-identical to serial ([`crate::model::pool`]);
+/// a panicked shard aborts the affected request (typed [`PoolError`],
+/// `FinishReason::Aborted`, no snapshot of the poisoned lane) and the
+/// engine keeps serving.
+pub fn spawn_fixture_engine_pooled(
+    model: RustModel,
+    store: Arc<SessionStore>,
+    stats: Arc<LiveStats>,
+    tracer: Option<Arc<Tracer>>,
+    decode_threads: usize,
+) -> (Sender<GenRequest>, JoinHandle<()>) {
     let (tx, rx): (Sender<GenRequest>, Receiver<GenRequest>) = mpsc::channel();
     let identity = fixture_identity(&model);
     let handle = std::thread::spawn(move || {
         stats.batch_lanes.set(1);
         stats.state_bytes.set(identity.state_bytes as u64);
+        let pool = DecodePool::new(decode_threads);
         for req in rx {
-            serve_one(&model, &store, &stats, tracer.as_deref(), req);
+            serve_one(&model, &store, &stats, tracer.as_deref(), &pool, req);
         }
     });
     (tx, handle)
@@ -83,6 +106,7 @@ fn serve_one(
     store: &SessionStore,
     stats: &LiveStats,
     tracer: Option<&Tracer>,
+    pool: &DecodePool,
     req: GenRequest,
 ) {
     let t_start = Instant::now();
@@ -122,7 +146,17 @@ fn serve_one(
     if inputs.len() > 1 {
         let t_prefill = Instant::now();
         for &t in &inputs[..inputs.len() - 1] {
-            model.decode_step(&mut state, t);
+            if let Err(e) = model.decode_step_pooled(&mut state, t, pool) {
+                // the lane state is poisoned — abort, never snapshot it
+                log::warn!("request {}: {e}; aborting", req.id);
+                let _ = req.events.send(TokenEvent::finished_resumed(
+                    req.id,
+                    FinishReason::Aborted,
+                    resumed,
+                ));
+                stats.completed.incr();
+                return;
+            }
         }
         stats.prefills.incr();
         stats.prefilled_tokens.add((inputs.len() - 1) as u64);
@@ -134,9 +168,18 @@ fn serve_one(
     let t_decode = Instant::now();
     let mut produced = 0u64;
     let mut reason = FinishReason::Length;
+    let mut poisoned = false;
     for _ in 0..req.max_new_tokens {
         let t0 = Instant::now();
-        let logits = model.decode_step(&mut state, input);
+        let logits = match model.decode_step_pooled(&mut state, input, pool) {
+            Ok(l) => l,
+            Err(e) => {
+                log::warn!("request {}: {e}; aborting", req.id);
+                reason = FinishReason::Aborted;
+                poisoned = true;
+                break;
+            }
+        };
         input = sampler.sample(&logits) as u8;
         stats.step_hist.record(t0.elapsed());
         stats.steps.incr();
@@ -162,7 +205,7 @@ fn serve_one(
         // to see step-by-step), detail = tokens produced
         t.span(Stage::DecodeStep, key, 0, t_decode, produced);
     }
-    if let Some(sid) = req.session {
+    if let Some(sid) = req.session.filter(|_| !poisoned) {
         let t_detach = Instant::now();
         // `input` is sampled-but-not-fed here — exactly what a resume
         // expects to feed first

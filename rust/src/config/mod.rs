@@ -38,8 +38,11 @@ pub struct RunConfig {
     pub route: RoutePolicy,
     /// scan-prefill chunk width; 0 keeps decode-as-prefill
     pub prefill_chunk: usize,
-    /// scan-prefill worker threads; 0 = one per available core, capped at 8
+    /// scan-prefill worker threads; 0 = one per available core (uncapped)
     pub prefill_threads: usize,
+    /// decode worker threads (serve/generate); 1 = serial, 0 = one per
+    /// available core — threaded decode is byte-identical to serial
+    pub decode_threads: usize,
     // occupancy-adaptive decode bucketing
     /// decode-width ladder: "off" (fixed width), "pow2", or "w1,w2,..."
     pub batch_buckets: String,
@@ -104,6 +107,7 @@ impl Default for RunConfig {
             route: RoutePolicy::LeastLoaded,
             prefill_chunk: 0,
             prefill_threads: 0,
+            decode_threads: 1,
             batch_buckets: "off".into(),
             bucket_shrink_after: 4,
             prefix_cache_mb: 0,
@@ -199,6 +203,7 @@ impl RunConfig {
             }
             "prefill-chunk" | "prefill_chunk" => self.prefill_chunk = value.parse()?,
             "prefill-threads" | "prefill_threads" => self.prefill_threads = value.parse()?,
+            "decode-threads" | "decode_threads" => self.decode_threads = value.parse()?,
             "batch-buckets" | "batch_buckets" => {
                 crate::coordinator::BucketSpec::parse(value).ok_or_else(|| {
                     anyhow!("bad batch-buckets {value:?} (off|pow2|w1,w2,... with widths >= 1)")
@@ -354,6 +359,17 @@ mod tests {
         assert_eq!(cfg.prefill_threads, 4);
         // default keeps decode-as-prefill
         assert_eq!(RunConfig::default().prefill_chunk, 0);
+    }
+
+    #[test]
+    fn decode_threads_flag_applies_in_both_spellings() {
+        let cfg = RunConfig::from_args(&s(&["--decode-threads", "4"])).unwrap();
+        assert_eq!(cfg.decode_threads, 4);
+        let cfg = RunConfig::from_args(&s(&["--decode_threads=0"])).unwrap();
+        assert_eq!(cfg.decode_threads, 0, "0 = auto, resolved by the CLI");
+        // default keeps the serial decode path
+        assert_eq!(RunConfig::default().decode_threads, 1);
+        assert!(RunConfig::from_args(&s(&["--decode-threads", "many"])).is_err());
     }
 
     #[test]

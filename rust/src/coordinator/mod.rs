@@ -48,6 +48,7 @@ use anyhow::Result;
 
 use crate::cache::{PrefixCache, PrefixCacheCfg};
 use crate::metrics::{LiveStats, Stage, Tracer};
+use crate::model::pool::DecodePool;
 use crate::model::RustModel;
 use crate::prefill::{PrefillCfg, PrefillMode, Prefiller};
 use crate::runtime::{literal, DecodeBuckets, Engine};
@@ -133,6 +134,11 @@ pub struct EngineLoop {
     /// the pure-Rust twin, so they coexist with batched lanes under the
     /// same scheduler policy.
     spec: Option<SpecEngine>,
+    /// Persistent decode worker pool (None = serial host decode).  The
+    /// batched XLA step keeps its state update on-device; the pool serves
+    /// the *host-side* decode paths that hang off this loop — today the
+    /// spec engine's model drafters ([`crate::model::pool`]).
+    decode_pool: Option<Arc<DecodePool>>,
     /// Occupancy-adaptive decode bucketing (None = fixed-width decode):
     /// the per-width executable ladder plus the hysteresis tracker.
     buckets: Option<Bucketing>,
@@ -197,6 +203,7 @@ impl EngineLoop {
             rx,
             sessions: None,
             prefiller: None,
+            decode_pool: None,
             prefix_cache: None,
             spec: None,
             buckets: None,
@@ -332,6 +339,19 @@ impl EngineLoop {
         self.prefix_cache.as_ref()
     }
 
+    /// Attach a persistent decode worker pool (`serve --decode-threads N`,
+    /// resolved: 0 = auto happened at the CLI).  `threads <= 1` detaches
+    /// (serial host decode).  Call before [`EngineLoop::set_spec`] so new
+    /// model-drafter lanes pick the pool up; calling later re-attaches to
+    /// an already-built spec engine.  Threaded decode is byte-identical to
+    /// serial ([`crate::model::pool`]), so this is purely a scheduling knob.
+    pub fn set_decode_threads(&mut self, threads: usize) {
+        self.decode_pool = (threads > 1).then(|| Arc::new(DecodePool::new(threads)));
+        if let Some(spec) = &mut self.spec {
+            spec.set_pool(self.decode_pool.clone());
+        }
+    }
+
     /// Attach the speculative decoding engine (`serve --spec-k N`): builds
     /// the pure-Rust twin of the artifact model as the verify target (the
     /// same twin-building path as [`EngineLoop::set_prefill`]) and, for a
@@ -361,7 +381,10 @@ impl EngineLoop {
             SpecEngine::new(target, draft, cfg)
         })();
         match built {
-            Ok(e) => self.spec = Some(e),
+            Ok(mut e) => {
+                e.set_pool(self.decode_pool.clone());
+                self.spec = Some(e);
+            }
             Err(e) => {
                 log::warn!("speculative engine unavailable, keeping batched decode: {e}");
                 self.spec = None;
@@ -1000,6 +1023,11 @@ pub struct EngineOpts {
     /// Speculative decoding engine configuration (None = no spec engine;
     /// requests opt in per [`GenRequest::with_spec`] when attached).
     pub spec: Option<SpecCfg>,
+    /// Persistent decode worker pool for host-side decode paths (spec
+    /// model drafters).  0 or 1 = serial (the default); the CLI resolves
+    /// `--decode-threads 0` to all cores *before* building these opts, so
+    /// `..Default::default()` spawn sites keep today's serial behavior.
+    pub decode_threads: usize,
     /// Occupancy-adaptive decode bucketing (None = fixed-width decode).
     pub buckets: Option<BucketCfg>,
     /// Shared live metrics registry (None = the loop keeps a private one,
@@ -1070,6 +1098,8 @@ pub fn spawn_engine_full(
         if let Some(cache) = opts.prefix_cache {
             lp.set_prefix_cache(cache);
         }
+        // before set_spec so model-drafter lanes pick the pool up
+        lp.set_decode_threads(opts.decode_threads);
         if let Some(spec) = opts.spec {
             lp.set_spec(spec);
         }

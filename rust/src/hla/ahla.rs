@@ -33,21 +33,16 @@ impl<T: Scalar> AhlaState<T> {
     }
 
     /// Algorithm 2's update: P/m first, then E/n with the inclusive P/m.
+    ///
+    /// Fused decayed kernels, bit-identical to the old scale-then-accumulate
+    /// pairs (see `Hla2State::step`).
     pub fn step(&mut self, q: &[T], k: &[T], v: &[T], gamma: T) {
-        if gamma != T::ONE {
-            self.p.scale(gamma);
-            ops::scale(gamma, &mut self.m);
-        }
-        self.p.add_outer(T::ONE, k, v);
-        ops::axpy(T::ONE, k, &mut self.m);
+        self.p.decay_add_outer(gamma, T::ONE, k, v);
+        ops::scale_axpy(gamma, T::ONE, k, &mut self.m);
         let r = self.p.t_matvec(q); // q^T P_t
         let s = ops::dot(q, &self.m); // q^T m_t
-        if gamma != T::ONE {
-            self.e.scale(gamma);
-            ops::scale(gamma, &mut self.n);
-        }
-        self.e.add_outer(T::ONE, k, &r);
-        ops::axpy(s, k, &mut self.n);
+        self.e.decay_add_outer(gamma, T::ONE, k, &r);
+        ops::scale_axpy(gamma, s, k, &mut self.n);
     }
 
     pub fn output(&self, q: &[T], opts: &HlaOptions<T>) -> Vec<T> {

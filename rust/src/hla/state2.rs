@@ -52,28 +52,23 @@ impl<T: Scalar> Hla2State<T> {
     ///
     /// Order matters: G/h consume C_{t-1}/m_{t-1} *before* C/m absorb the
     /// token's deltas.
+    ///
+    /// Each decayed update is one fused pass (`add_outer_decay` /
+    /// `decay_add_outer` / `scale_axpy` / `axpy_scale`) — bit-identical to
+    /// the old scale-then-accumulate pairs (the kernels preserve the exact
+    /// per-element rounding sequence, and multiplying by γ = 1 is exact),
+    /// so serial ≡ scan ≡ threaded equalities all still hold to the bit.
     pub fn step(&mut self, q: &[T], k: &[T], v: &[T], gamma: T) {
         // kc = k^T C_{t-1},  km = k^T m_{t-1}
         let kc = self.c.t_matvec(k);
         let km = ops::dot(k, &self.m);
         // G <- g (G + k kc^T);  h <- g (h + km k)
-        self.g.add_outer(T::ONE, k, &kc);
-        if gamma != T::ONE {
-            self.g.scale(gamma);
-        }
-        ops::axpy(km, k, &mut self.h);
-        if gamma != T::ONE {
-            ops::scale(gamma, &mut self.h);
-        }
+        self.g.add_outer_decay(T::ONE, k, &kc, gamma);
+        ops::axpy_scale(km, k, &mut self.h, gamma);
         // S <- g S + k k^T;  C <- g C + q v^T;  m <- g m + q
-        if gamma != T::ONE {
-            self.s.scale(gamma);
-            self.c.scale(gamma);
-            ops::scale(gamma, &mut self.m);
-        }
-        self.s.add_outer(T::ONE, k, k);
-        self.c.add_outer(T::ONE, q, v);
-        ops::axpy(T::ONE, q, &mut self.m);
+        self.s.decay_add_outer(gamma, T::ONE, k, k);
+        self.c.decay_add_outer(gamma, T::ONE, q, v);
+        ops::scale_axpy(gamma, T::ONE, q, &mut self.m);
     }
 
     /// Per-token output from the inclusive state (Theorem 3.1).

@@ -44,22 +44,19 @@ impl<T: Scalar> Hla3State<T> {
                 + self.eta.len())
     }
 
+    /// Fused decayed kernels, bit-identical to the old scale-then-accumulate
+    /// form (see `Hla2State::step`).  F/η's decay moves from before the
+    /// moment reads to their own fused updates — safe because nothing reads
+    /// F/η in between.
     pub fn step(&mut self, q: &[T], k: &[T], v: &[T], gamma: T) {
-        if gamma != T::ONE {
-            self.s.scale(gamma);
-            self.p.scale(gamma);
-            ops::scale(gamma, &mut self.m);
-            self.f.scale(gamma);
-            ops::scale(gamma, &mut self.eta);
-        }
-        self.s.add_outer(T::ONE, k, k);
-        self.p.add_outer(T::ONE, k, v);
-        ops::axpy(T::ONE, k, &mut self.m);
+        self.s.decay_add_outer(gamma, T::ONE, k, k);
+        self.p.decay_add_outer(gamma, T::ONE, k, v);
+        ops::scale_axpy(gamma, T::ONE, k, &mut self.m);
         let sq = self.s.matvec(q); // S_t q_t
         let qp = self.p.t_matvec(q); // q_t^T P_t
         let qm = ops::dot(q, &self.m); // q_t^T m_t
-        self.f.add_outer(T::ONE, &sq, &qp);
-        ops::axpy(qm, &sq, &mut self.eta);
+        self.f.decay_add_outer(gamma, T::ONE, &sq, &qp);
+        ops::scale_axpy(gamma, qm, &sq, &mut self.eta);
     }
 
     pub fn output(&self, q: &[T], opts: &HlaOptions<T>) -> Vec<T> {

@@ -8,6 +8,7 @@
 //! * serve as the no-XLA CPU decode baseline in benches.
 
 pub mod params;
+pub mod pool;
 pub mod sampler;
 
 use anyhow::{bail, ensure, Result};

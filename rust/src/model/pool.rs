@@ -1,0 +1,341 @@
+//! Persistent worker-pool parallel decode (the CPU decode hot path).
+//!
+//! The per-token HLA state update — rank-1 outer-product accumulate plus a
+//! couple of mat-vecs per head — is embarrassingly parallel across heads
+//! and lanes (layers are sequential: layer i+1 reads layer i's residual).
+//! [`DecodePool`] owns long-lived workers on one shared job channel, so a
+//! decode step costs two channel hops per shard instead of a thread spawn
+//! (contrast `hla::chunk::parallel_chunks`, which `thread::scope`s per
+//! call — fine for one big prefill scan, ruinous per token).
+//!
+//! Two partitions of the work:
+//! * [`RustModel::decode_step_pooled`] — one lane, heads fanned out within
+//!   each layer (the serve/spec single-stream path).
+//! * [`decode_steps_pooled`] — many lanes, each lane one shard running the
+//!   full serial step (the batched path; lanes are fully independent).
+//!
+//! Exactness: every shard performs the *same floating-point operations in
+//! the same order* as the serial loop it replaces, and shards write
+//! disjoint output slices addressed by index — so threaded decode is
+//! byte-identical to serial regardless of completion order (pinned by
+//! `tests/decode_parallel_differential.rs`).  There is no reassociation
+//! anywhere to document away.
+//!
+//! Failure: a panicking shard (e.g. the kernels' length asserts firing on
+//! a corrupted state) is caught in the worker, which stays alive; the
+//! caller gets a typed [`PoolError`] instead of a hang.  The lane whose
+//! shard panicked is *poisoned* — some of its head states were moved into
+//! the dead shard — so the caller must drop that lane (the fixture engine
+//! aborts the request; the spec drafter discards the proposal).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::attention::KvCache;
+use crate::model::{mixer_opts, rmsnorm, silu, MixerState, ModelState, RustModel};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A decode shard failed.  `WorkerPanicked` carries the shard's panic
+/// message; `WorkerLost` means the pool's channels closed underneath us
+/// (workers gone — only possible if the pool is being torn down).
+#[derive(Debug, thiserror::Error)]
+pub enum PoolError {
+    #[error("decode worker panicked: {0}")]
+    WorkerPanicked(String),
+    #[error("decode worker pool lost (channel closed)")]
+    WorkerLost,
+}
+
+/// Long-lived decode workers sharing one job channel.
+///
+/// `threads <= 1` builds a pool with *zero* workers: every pooled entry
+/// point then runs the serial path inline, so `--decode-threads 1` is the
+/// serial path by construction (not merely equal to it).
+pub struct DecodePool {
+    tx: Mutex<Option<Sender<Job>>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl DecodePool {
+    /// Spawn `threads` workers (0 or 1 → no workers, serial inline).
+    /// `0 = auto` is resolved by callers via [`crate::util::auto_threads`]
+    /// *before* this constructor, so the pool itself has no hidden policy.
+    pub fn new(threads: usize) -> DecodePool {
+        if threads <= 1 {
+            return DecodePool { tx: Mutex::new(None), workers: vec![], threads: threads.max(1) };
+        }
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("decode-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn decode worker")
+            })
+            .collect();
+        DecodePool { tx: Mutex::new(Some(tx)), workers, threads }
+    }
+
+    /// Resolved worker count (1 = serial inline, no worker threads).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when work actually fans out to worker threads.
+    pub fn is_parallel(&self) -> bool {
+        !self.workers.is_empty()
+    }
+
+    fn submit(&self, job: Job) -> Result<(), PoolError> {
+        let tx = self.tx.lock().unwrap();
+        match tx.as_ref() {
+            Some(tx) => tx.send(job).map_err(|_| PoolError::WorkerLost),
+            None => Err(PoolError::WorkerLost),
+        }
+    }
+}
+
+impl Drop for DecodePool {
+    fn drop(&mut self) {
+        // close the channel so workers drain and exit, then join
+        *self.tx.lock().unwrap() = None;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // hold the lock only while receiving, never while running the job
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => break,
+        };
+        job();
+    }
+}
+
+/// Stringify a panic payload (the usual &str / String cases, then a
+/// placeholder — the type information is gone by here).
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Cheap placeholder for a [`MixerState`] moved into a shard (an empty
+/// KV-cache allocates nothing).  If the shard never sends the state back
+/// (panic), the placeholder is what poisons the lane.
+fn placeholder() -> MixerState {
+    MixerState::Softmax(KvCache::new())
+}
+
+impl RustModel {
+    /// One decode step with the per-layer head fan-out on `pool`.
+    ///
+    /// Byte-identical to [`RustModel::decode_step`]: each head shard runs
+    /// the exact serial per-head op sequence and writes its own disjoint
+    /// `heads_out` slice; layers stay sequential (the residual stream is a
+    /// true dependency).  Head states are moved into shards and back, so
+    /// on `Err` the lane is poisoned and must be dropped by the caller.
+    pub fn decode_step_pooled(
+        &self,
+        state: &mut ModelState,
+        token: u8,
+        pool: &DecodePool,
+    ) -> Result<Vec<f32>, PoolError> {
+        if !pool.is_parallel() {
+            return Ok(self.decode_step(state, token));
+        }
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let dh = cfg.head_dim;
+        let multi_query = cfg.multi_query;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let opts = mixer_opts(cfg);
+        let mut x = self.embed.row(token as usize).to_vec();
+        let mut h = vec![0f32; d];
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(&x, &layer.norm1, &mut h);
+            let q = Arc::new(layer.wq.t_matvec(&h));
+            let k = Arc::new(layer.wk.t_matvec(&h));
+            let v = Arc::new(layer.wv.t_matvec(&h));
+            let (res_tx, res_rx) = channel::<(usize, Result<(MixerState, Vec<f32>), String>)>();
+            for hi in 0..cfg.n_heads {
+                let head = std::mem::replace(&mut state.layers[li][hi], placeholder());
+                let (q, k, v) = (Arc::clone(&q), Arc::clone(&k), Arc::clone(&v));
+                let res_tx = res_tx.clone();
+                pool.submit(Box::new(move || {
+                    let out = catch_unwind(AssertUnwindSafe(move || {
+                        let mut head = head;
+                        let kvh = if multi_query { 0 } else { hi };
+                        let qh: Vec<f32> =
+                            q[hi * dh..(hi + 1) * dh].iter().map(|&x| x * scale).collect();
+                        let kh: Vec<f32> =
+                            k[kvh * dh..(kvh + 1) * dh].iter().map(|&x| x * scale).collect();
+                        let vh = &v[kvh * dh..(kvh + 1) * dh];
+                        let o = head.step(&qh, &kh, vh, &opts);
+                        (head, o)
+                    }))
+                    .map_err(panic_msg);
+                    let _ = res_tx.send((hi, out));
+                }))?;
+            }
+            drop(res_tx);
+            let mut heads_out = vec![0f32; cfg.n_heads * dh];
+            let mut first_err: Option<PoolError> = None;
+            for _ in 0..cfg.n_heads {
+                match res_rx.recv() {
+                    Ok((hi, Ok((head, o)))) => {
+                        state.layers[li][hi] = head;
+                        heads_out[hi * dh..(hi + 1) * dh].copy_from_slice(&o);
+                    }
+                    Ok((_, Err(msg))) => {
+                        first_err.get_or_insert(PoolError::WorkerPanicked(msg));
+                    }
+                    Err(_) => {
+                        first_err.get_or_insert(PoolError::WorkerLost);
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            let proj = layer.wo.t_matvec(&heads_out);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+            rmsnorm(&x, &layer.norm2, &mut h);
+            let gate = layer.w_gate.t_matvec(&h);
+            let up = layer.w_up.t_matvec(&h);
+            let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
+            let down = layer.w_down.t_matvec(&act);
+            for (xi, di) in x.iter_mut().zip(&down) {
+                *xi += di;
+            }
+        }
+        rmsnorm(&x.clone(), &self.norm_f, &mut x);
+        Ok(self.embed.matvec(&x))
+    }
+}
+
+/// One decode step for each of `lanes` independent (state, token) pairs,
+/// lane-partitioned across the pool — each shard runs the plain serial
+/// [`RustModel::decode_step`] on a lane it temporarily owns.  Returns the
+/// per-lane logits in lane order.
+///
+/// Byte-identical to stepping each lane serially (it *is* the serial step
+/// per lane; only the interleaving across lanes changes, and lanes share
+/// no state).  On `Err`, lanes whose shard never reported are poisoned.
+pub fn decode_steps_pooled(
+    model: &Arc<RustModel>,
+    lanes: &mut [(&mut ModelState, u8)],
+    pool: &DecodePool,
+) -> Result<Vec<Vec<f32>>, PoolError> {
+    if !pool.is_parallel() || lanes.len() <= 1 {
+        return Ok(lanes.iter_mut().map(|(st, tok)| model.decode_step(st, *tok)).collect());
+    }
+    let (res_tx, res_rx) = channel::<(usize, Result<(ModelState, Vec<f32>), String>)>();
+    for (i, (st, tok)) in lanes.iter_mut().enumerate() {
+        let owned = std::mem::replace(*st, ModelState { layers: vec![] });
+        let model = Arc::clone(model);
+        let tok = *tok;
+        let res_tx = res_tx.clone();
+        pool.submit(Box::new(move || {
+            let out = catch_unwind(AssertUnwindSafe(move || {
+                let mut owned = owned;
+                let logits = model.decode_step(&mut owned, tok);
+                (owned, logits)
+            }))
+            .map_err(panic_msg);
+            let _ = res_tx.send((i, out));
+        }))?;
+    }
+    drop(res_tx);
+    let mut logits = vec![Vec::new(); lanes.len()];
+    let mut first_err: Option<PoolError> = None;
+    for _ in 0..lanes.len() {
+        match res_rx.recv() {
+            Ok((i, Ok((st, lg)))) => {
+                *lanes[i].0 = st;
+                logits[i] = lg;
+            }
+            Ok((_, Err(msg))) => {
+                first_err.get_or_insert(PoolError::WorkerPanicked(msg));
+            }
+            Err(_) => {
+                first_err.get_or_insert(PoolError::WorkerLost);
+                break;
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(logits),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::fixtures;
+
+    #[test]
+    fn serial_mode_pool_spawns_no_workers() {
+        for t in [0, 1] {
+            let pool = DecodePool::new(t);
+            assert!(!pool.is_parallel());
+            assert_eq!(pool.threads(), 1);
+        }
+        let pool = DecodePool::new(3);
+        assert!(pool.is_parallel());
+        assert_eq!(pool.threads(), 3);
+    }
+
+    #[test]
+    fn pooled_step_matches_serial_bitwise() {
+        let model = fixtures::build_model("hla2", &fixtures::ModelShape::default(), 1);
+        let pool = DecodePool::new(4);
+        let mut serial = crate::model::ModelState::new(&model.cfg);
+        let mut pooled = crate::model::ModelState::new(&model.cfg);
+        for tok in [3u8, 7, 1, 0, 12] {
+            let a = model.decode_step(&mut serial, tok);
+            let b = model.decode_step_pooled(&mut pooled, tok, &pool).unwrap();
+            assert_eq!(a, b);
+        }
+        for (s, p) in serial.layers.iter().flatten().zip(pooled.layers.iter().flatten()) {
+            assert_eq!(s.state_vec().unwrap(), p.state_vec().unwrap());
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job_and_keeps_serving() {
+        let pool = DecodePool::new(2);
+        let (tx, rx) = channel();
+        let tx2 = tx.clone();
+        pool.submit(Box::new(move || {
+            let r = catch_unwind(|| panic!("shard down"));
+            let _ = tx2.send(r.is_err());
+        }))
+        .unwrap();
+        assert!(rx.recv().unwrap(), "panic was caught in-job");
+        // the worker is still alive to take more work
+        pool.submit(Box::new(move || {
+            let _ = tx.send(true);
+        }))
+        .unwrap();
+        assert!(rx.recv().unwrap());
+    }
+}

@@ -67,12 +67,13 @@ impl PrefillCfg {
     }
 
     /// Scan prefill with chunk width `chunk` (clamped to ≥ 1) and
-    /// `threads` workers (0 = one per available core, capped at 8).
+    /// `threads` workers (0 = one per available core, uncapped — see
+    /// [`crate::util::auto_threads`]).
     pub fn scan(chunk: usize, threads: usize) -> PrefillCfg {
         PrefillCfg {
             mode: PrefillMode::Scan,
             chunk: chunk.max(1),
-            threads: if threads == 0 { auto_threads() } else { threads },
+            threads: if threads == 0 { crate::util::auto_threads() } else { threads },
         }
     }
 
@@ -98,10 +99,6 @@ impl PrefillCfg {
 /// Does this mixer have a segment monoid (i.e. can its prompt be scanned)?
 pub fn supports_scan(mixer: &str) -> bool {
     matches!(mixer, "hla2" | "ahla" | "hla3" | "linear")
-}
-
-fn auto_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
 }
 
 /// Push `tokens` through `state` (no logits) — admission-time ingestion.

@@ -21,6 +21,9 @@
 //! vocab (draft model, which [`crate::spec::SpecEngine`] checks fits
 //! inside the target's).
 
+use std::sync::Arc;
+
+use crate::model::pool::DecodePool;
 use crate::model::sampler::argmax;
 use crate::model::{ModelState, RustModel};
 use crate::prefill::{advance, PrefillCfg};
@@ -124,6 +127,9 @@ pub struct ModelDrafter {
     /// the input that produces the next-token distribution).
     pending: Option<u8>,
     prefill: PrefillCfg,
+    /// Optional shared decode pool: proposals fan heads out per layer
+    /// (byte-identical to serial — see [`crate::model::pool`]).
+    pool: Option<Arc<DecodePool>>,
 }
 
 impl ModelDrafter {
@@ -140,7 +146,13 @@ impl ModelDrafter {
     /// differential test pins down.
     pub fn with_prefill(model: RustModel, prefill: PrefillCfg) -> ModelDrafter {
         let state = ModelState::new(&model.cfg);
-        ModelDrafter { model, state, pending: None, prefill }
+        ModelDrafter { model, state, pending: None, prefill, pool: None }
+    }
+
+    /// Attach a shared decode pool for the tentative k-step decode.
+    pub fn with_pool(mut self, pool: Option<Arc<DecodePool>>) -> ModelDrafter {
+        self.pool = pool;
+        self
     }
 
     pub fn model(&self) -> &RustModel {
@@ -161,7 +173,23 @@ impl Drafter for ModelDrafter {
         let Ok(snapshot) = self.state.to_tensors() else { return vec![] };
         let mut out = Vec::with_capacity(k);
         for _ in 0..k {
-            let logits = self.model.decode_step(&mut self.state, last);
+            let logits = match &self.pool {
+                Some(pool) => match self.model.decode_step_pooled(&mut self.state, last, pool) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        // the tentative state is poisoned; rebuild it from
+                        // the snapshot's shapes and degrade to no proposal
+                        // (the round falls back to one ordinary decode step)
+                        log::warn!("model drafter: {e}; dropping proposal");
+                        self.state = ModelState::new(&self.model.cfg);
+                        self.state
+                            .load_tensors(&snapshot)
+                            .expect("a state snapshot restores into a fresh same-config state");
+                        return vec![];
+                    }
+                },
+                None => self.model.decode_step(&mut self.state, last),
+            };
             let t = argmax(&logits) as u8;
             out.push(t);
             last = t;

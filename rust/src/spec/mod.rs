@@ -38,9 +38,11 @@ pub mod draft;
 pub mod verify;
 
 use std::fmt;
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
+use crate::model::pool::DecodePool;
 use crate::model::sampler::{Sampler, SamplerCfg};
 use crate::model::{ModelState, RustModel};
 use crate::prefill::{advance, PrefillCfg};
@@ -257,6 +259,8 @@ pub struct SpecEngine {
     verifier: Verifier,
     cfg: SpecCfg,
     draft_model: Option<RustModel>,
+    /// Shared decode pool handed to model drafters (None = serial drafts).
+    pool: Option<Arc<DecodePool>>,
     pub stats: SpecStats,
 }
 
@@ -276,7 +280,13 @@ impl SpecEngine {
             ensure!(draft_model.is_some(), "drafter {:?} needs a draft model", cfg.drafter.label());
         }
         let verifier = Verifier::new(target, cfg.verify_cfg())?;
-        Ok(SpecEngine { verifier, cfg, draft_model, stats: SpecStats::default() })
+        Ok(SpecEngine { verifier, cfg, draft_model, pool: None, stats: SpecStats::default() })
+    }
+
+    /// Attach a shared decode pool: new model-drafter lanes fan their
+    /// tentative k-step decodes across it (byte-identical to serial).
+    pub fn set_pool(&mut self, pool: Option<Arc<DecodePool>>) {
+        self.pool = pool;
     }
 
     pub fn model(&self) -> &RustModel {
@@ -291,9 +301,10 @@ impl SpecEngine {
     pub fn new_lane(&self) -> SpecLane {
         let drafter: Box<dyn Drafter> = match &self.cfg.drafter {
             DrafterKind::Ngram => Box::new(NgramDrafter::default()),
-            DrafterKind::Model(_) => Box::new(ModelDrafter::new(
-                self.draft_model.clone().expect("checked in SpecEngine::new"),
-            )),
+            DrafterKind::Model(_) => Box::new(
+                ModelDrafter::new(self.draft_model.clone().expect("checked in SpecEngine::new"))
+                    .with_pool(self.pool.clone()),
+            ),
         };
         self.lane_with(drafter)
     }

@@ -148,9 +148,7 @@ impl<T: Scalar> Mat<T> {
 
     /// self = alpha * self
     pub fn scale(&mut self, alpha: T) {
-        for x in &mut self.data {
-            *x = *x * alpha;
-        }
+        ops::scale(alpha, &mut self.data);
     }
 
     /// self += alpha * x y^T (rank-1 update — the HLA online-update primitive).
@@ -163,6 +161,44 @@ impl<T: Scalar> Mat<T> {
                 continue;
             }
             ops::axpy(s, y, self.row_mut(i));
+        }
+    }
+
+    /// self = gamma·self + alpha·x yᵀ — the decayed rank-1 update, fused into
+    /// one pass over the matrix (the per-token HLA hot kernel; previously
+    /// `scale` + `add_outer`, two passes).
+    ///
+    /// Bit-exact with the composed pair: rows where `alpha·xᵢ == 0` get
+    /// scale-only, mirroring `add_outer`'s zero-row skip, and non-zero rows
+    /// use [`ops::scale_axpy`] whose per-element rounding sequence matches
+    /// scale-then-axpy exactly.
+    pub fn decay_add_outer(&mut self, gamma: T, alpha: T, x: &[T], y: &[T]) {
+        assert_eq!(self.rows, x.len());
+        assert_eq!(self.cols, y.len());
+        for (i, &xi) in x.iter().enumerate() {
+            let s = alpha * xi;
+            if s == T::ZERO {
+                ops::scale(gamma, self.row_mut(i));
+            } else {
+                ops::scale_axpy(gamma, s, y, self.row_mut(i));
+            }
+        }
+    }
+
+    /// self = gamma·(self + alpha·x yᵀ) — decay applied *after* the rank-1
+    /// delta lands (hla2's gate-matrix order).  Bit-exact with
+    /// `add_outer(alpha, x, y); scale(gamma)` via [`ops::axpy_scale`] on
+    /// non-zero rows and scale-only on zero rows.
+    pub fn add_outer_decay(&mut self, alpha: T, x: &[T], y: &[T], gamma: T) {
+        assert_eq!(self.rows, x.len());
+        assert_eq!(self.cols, y.len());
+        for (i, &xi) in x.iter().enumerate() {
+            let s = alpha * xi;
+            if s == T::ZERO {
+                ops::scale(gamma, self.row_mut(i));
+            } else {
+                ops::axpy_scale(s, y, self.row_mut(i), gamma);
+            }
         }
     }
 
@@ -335,6 +371,33 @@ mod tests {
         let mut m = Mat::<f64>::zeros(2, 3);
         m.add_outer(2.0, &[1.0, -1.0], &[1.0, 2.0, 3.0]);
         assert_eq!(m.data, vec![2.0, 4.0, 6.0, -2.0, -4.0, -6.0]);
+    }
+
+    #[test]
+    fn decayed_rank1_updates_bitwise_equal_composed() {
+        // f32 + irrational-ish values so rounding differences would show
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut base = Mat::<f32>::zeros(5, 6);
+        for v in &mut base.data {
+            *v = rng.normal() as f32;
+        }
+        let x: Vec<f32> = (0..5).map(|i| if i == 2 { 0.0 } else { rng.normal() as f32 }).collect();
+        let y: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+        let (gamma, alpha) = (0.93f32, 1.37f32);
+
+        let mut fused = base.clone();
+        fused.decay_add_outer(gamma, alpha, &x, &y);
+        let mut composed = base.clone();
+        composed.scale(gamma);
+        composed.add_outer(alpha, &x, &y);
+        assert_eq!(fused.data, composed.data);
+
+        let mut fused = base.clone();
+        fused.add_outer_decay(alpha, &x, &y, gamma);
+        let mut composed = base.clone();
+        composed.add_outer(alpha, &x, &y);
+        composed.scale(gamma);
+        assert_eq!(fused.data, composed.data);
     }
 
     #[test]

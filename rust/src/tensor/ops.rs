@@ -81,9 +81,15 @@ impl Scalar for f64 {
 /// verify/prefill scans.  Unrolled 8-wide so LLVM reliably emits two full
 /// 128/256-bit FMA lanes; bench E2b measures it against the naive loop
 /// rather than assuming the unroll pays.
+///
+/// Length mismatch is a real `assert_eq!`, not a `debug_assert_eq!`: the
+/// `zip` below would silently truncate to the shorter slice in release
+/// builds, turning a caller's shape bug into a wrong answer instead of a
+/// panic.  The branch predicts perfectly and costs nothing next to the
+/// loop (E2b shows no measurable delta).
 #[inline]
 pub fn axpy<T: Scalar>(a: T, x: &[T], y: &mut [T]) {
-    debug_assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
     let n = x.len();
     let chunks = n / 8 * 8;
     let (xc, xr) = x.split_at(chunks);
@@ -107,9 +113,12 @@ pub fn axpy<T: Scalar>(a: T, x: &[T], y: &mut [T]) {
 /// dependency chain shrinks 8×, which is what lets the CPU keep its FMA
 /// pipes full); the pairwise tail reduction keeps rounding balanced.
 /// Measured in bench E2b.
+///
+/// Same hard length check as [`axpy`] — a release-mode mismatch would
+/// otherwise truncate silently.
 #[inline]
 pub fn dot<T: Scalar>(x: &[T], y: &[T]) -> T {
-    debug_assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), y.len(), "dot length mismatch");
     let n = x.len();
     let chunks = n / 8 * 8;
     let mut acc = [T::ZERO; 8];
@@ -130,11 +139,82 @@ pub fn dot<T: Scalar>(x: &[T], y: &[T]) -> T {
     s
 }
 
-/// x *= a
+/// x *= a — 8-wide unrolled like its siblings (it was the one straggler
+/// kernel left as a naive loop; the E21 roofline probe flagged it and E2b
+/// measures the unroll).
 #[inline]
 pub fn scale<T: Scalar>(a: T, x: &mut [T]) {
-    for v in x {
+    let n = x.len();
+    let chunks = n / 8 * 8;
+    let (xc, xr) = x.split_at_mut(chunks);
+    for xi in xc.chunks_exact_mut(8) {
+        xi[0] = xi[0] * a;
+        xi[1] = xi[1] * a;
+        xi[2] = xi[2] * a;
+        xi[3] = xi[3] * a;
+        xi[4] = xi[4] * a;
+        xi[5] = xi[5] * a;
+        xi[6] = xi[6] * a;
+        xi[7] = xi[7] * a;
+    }
+    for v in xr {
         *v = *v * a;
+    }
+}
+
+/// y = g·y + a·x — the fused decayed accumulate at the heart of every
+/// HLA state update (`S ← γS + k kᵀ` row by row, `m ← γm + q`, ...).
+/// One pass instead of `scale` + `axpy`'s two, same 8-wide unroll.
+///
+/// Bit-exactness: per element this computes `y*g` then `+ a*x`, exactly
+/// the rounding sequence of `scale(g, y); axpy(a, x, y)` — so fusing the
+/// decode/prefill hot path onto this kernel changes no output anywhere
+/// (the decode-parallel differential suite pins that).
+#[inline]
+pub fn scale_axpy<T: Scalar>(g: T, a: T, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), y.len(), "scale_axpy length mismatch");
+    let n = x.len();
+    let chunks = n / 8 * 8;
+    let (xc, xr) = x.split_at(chunks);
+    let (yc, yr) = y.split_at_mut(chunks);
+    for (xi, yi) in xc.chunks_exact(8).zip(yc.chunks_exact_mut(8)) {
+        yi[0] = yi[0] * g + a * xi[0];
+        yi[1] = yi[1] * g + a * xi[1];
+        yi[2] = yi[2] * g + a * xi[2];
+        yi[3] = yi[3] * g + a * xi[3];
+        yi[4] = yi[4] * g + a * xi[4];
+        yi[5] = yi[5] * g + a * xi[5];
+        yi[6] = yi[6] * g + a * xi[6];
+        yi[7] = yi[7] * g + a * xi[7];
+    }
+    for (xi, yi) in xr.iter().zip(yr.iter_mut()) {
+        *yi = *yi * g + a * *xi;
+    }
+}
+
+/// y = (y + a·x)·g — the post-accumulate decay twin of [`scale_axpy`]
+/// (hla2's `G ← γ(G + k kcᵀ)` order, where the carry is attenuated
+/// *after* the token's delta lands).  Per element: `y + a*x` then `*g`,
+/// exactly the rounding sequence of `axpy(a, x, y); scale(g, y)`.
+#[inline]
+pub fn axpy_scale<T: Scalar>(a: T, x: &[T], y: &mut [T], g: T) {
+    assert_eq!(x.len(), y.len(), "axpy_scale length mismatch");
+    let n = x.len();
+    let chunks = n / 8 * 8;
+    let (xc, xr) = x.split_at(chunks);
+    let (yc, yr) = y.split_at_mut(chunks);
+    for (xi, yi) in xc.chunks_exact(8).zip(yc.chunks_exact_mut(8)) {
+        yi[0] = (yi[0] + a * xi[0]) * g;
+        yi[1] = (yi[1] + a * xi[1]) * g;
+        yi[2] = (yi[2] + a * xi[2]) * g;
+        yi[3] = (yi[3] + a * xi[3]) * g;
+        yi[4] = (yi[4] + a * xi[4]) * g;
+        yi[5] = (yi[5] + a * xi[5]) * g;
+        yi[6] = (yi[6] + a * xi[6]) * g;
+        yi[7] = (yi[7] + a * xi[7]) * g;
+    }
+    for (xi, yi) in xr.iter().zip(yr.iter_mut()) {
+        *yi = (*yi + a * *xi) * g;
     }
 }
 
@@ -178,6 +258,69 @@ mod tests {
         let y: Vec<f32> = (0..11).map(|i| (i * 2) as f32).collect();
         let want: f32 = (0..11).map(|i| (i * i * 2) as f32).sum();
         assert_eq!(dot(&x, &y), want);
+    }
+
+    #[test]
+    fn scale_matches_naive() {
+        let mut x: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let want: Vec<f32> = x.iter().map(|v| v * 3.0).collect();
+        scale(3.0, &mut x);
+        assert_eq!(x, want);
+    }
+
+    // Release-mode regression tests for the assert promotion: a mismatch
+    // used to slip past `debug_assert_eq!` in release builds and silently
+    // truncate to the shorter slice.  These run in both profiles (CI tests
+    // run --release too), so the panic contract is pinned where it matters.
+    #[test]
+    #[should_panic(expected = "axpy length mismatch")]
+    fn axpy_rejects_length_mismatch() {
+        let x = vec![1.0f32; 8];
+        let mut y = vec![0.0f32; 7];
+        axpy(1.0, &x, &mut y);
+    }
+
+    #[test]
+    #[should_panic(expected = "dot length mismatch")]
+    fn dot_rejects_length_mismatch() {
+        let x = vec![1.0f32; 9];
+        let y = vec![1.0f32; 8];
+        dot(&x, &y);
+    }
+
+    #[test]
+    #[should_panic(expected = "scale_axpy length mismatch")]
+    fn scale_axpy_rejects_length_mismatch() {
+        let x = vec![1.0f32; 8];
+        let mut y = vec![0.0f32; 9];
+        scale_axpy(0.5, 1.0, &x, &mut y);
+    }
+
+    // The fused kernels must be *bit-identical* to the composed pairs they
+    // replace in the mixer state updates — not just close.  f32 inputs with
+    // inexact products make this a real check, not a tautology.
+    #[test]
+    fn scale_axpy_bitwise_equals_scale_then_axpy() {
+        let x: Vec<f32> = (0..19).map(|i| (i as f32 * 0.37 - 2.0).sin()).collect();
+        let mut fused: Vec<f32> = (0..19).map(|i| (i as f32 * 0.11 + 1.0).cos()).collect();
+        let mut composed = fused.clone();
+        let (g, a) = (0.973f32, -1.618f32);
+        scale_axpy(g, a, &x, &mut fused);
+        scale(g, &mut composed);
+        axpy(a, &x, &mut composed);
+        assert_eq!(fused, composed);
+    }
+
+    #[test]
+    fn axpy_scale_bitwise_equals_axpy_then_scale() {
+        let x: Vec<f32> = (0..19).map(|i| (i as f32 * 0.53 + 0.1).sin()).collect();
+        let mut fused: Vec<f32> = (0..19).map(|i| (i as f32 * 0.29 - 1.0).cos()).collect();
+        let mut composed = fused.clone();
+        let (g, a) = (0.941f32, 2.718f32);
+        axpy_scale(a, &x, &mut fused, g);
+        axpy(a, &x, &mut composed);
+        scale(g, &mut composed);
+        assert_eq!(fused, composed);
     }
 
     #[test]

@@ -6,6 +6,17 @@ pub mod rng;
 
 use std::time::Instant;
 
+/// One worker per available core — the shared `0 = auto` resolution for
+/// `--prefill-threads` and `--decode-threads`.
+///
+/// Deliberately uncapped: the old prefill-private copy did `.min(8)`, which
+/// silently pinned `--prefill-threads 0` to 8 workers on larger boxes.  The
+/// resolved count is printed at serve startup so there is no silent cap to
+/// rediscover.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// Time a closure, returning (result, seconds).
 pub fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
     let start = Instant::now();

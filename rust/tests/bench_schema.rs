@@ -24,8 +24,11 @@ fn committed_bench_reports_validate() {
             found.push(name.to_string());
         }
     }
-    // the serving, observability, and cluster trajectories ship with the repo
-    for want in ["BENCH_e8.json", "BENCH_e18.json", "BENCH_e19.json", "BENCH_e20.json"] {
+    // the serving, observability, cluster, and roofline trajectories ship
+    // with the repo
+    for want in
+        ["BENCH_e8.json", "BENCH_e18.json", "BENCH_e19.json", "BENCH_e20.json", "BENCH_e21.json"]
+    {
         assert!(found.iter().any(|n| n == want), "missing {want} (found {found:?})");
     }
 }

@@ -1,0 +1,286 @@
+//! Differential acceptance test for the persistent-pool parallel decode
+//! step: threaded decode must be **byte-identical** to serial — logits,
+//! sampled token streams, and the state tensors left behind — for
+//! hla2/ahla/hla3, greedy and seeded sampling, fresh lanes and lanes
+//! seeded through the chunked prefill scan and a session snapshot.
+//! Runs artifact-free on the pure-Rust model, like
+//! `prefill_differential.rs` / `spec_differential.rs`.
+//!
+//! Why exact equality is the right bar (not a tolerance): each head shard
+//! runs the *same* floating-point op sequence as the serial loop and
+//! writes a disjoint, index-addressed output slice, and lane shards run
+//! the serial step itself — completion order changes nothing.  See
+//! `hla::model::pool`.
+//!
+//! Also pinned here (the failure half of the contract): a poisoned shard
+//! — the promoted length asserts in `tensor::ops` firing on a corrupted
+//! state — surfaces as a typed `PoolError` promptly instead of a hang,
+//! the pool keeps serving afterwards, and the fixture engine / model
+//! drafter built on top degrade the way their docs promise (aborted
+//! request, dropped proposal).
+
+use std::sync::{mpsc, Arc};
+
+use hla::cluster::spawn_fixture_engine_pooled;
+use hla::coordinator::request::FinishReason;
+use hla::coordinator::{collect_tokens, GenRequest};
+use hla::metrics::LiveStats;
+use hla::model::pool::{decode_steps_pooled, DecodePool, PoolError};
+use hla::model::sampler::{Sampler, SamplerCfg};
+use hla::model::{ModelState, RustModel};
+use hla::prefill::{advance, PrefillCfg};
+use hla::session::SessionStore;
+use hla::spec::{Drafter, ModelDrafter};
+use hla::testing::fixtures::{build_model, build_model_full, ModelShape};
+use hla::util::rng::Rng;
+
+fn random_prompt(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(64) as u8).collect()
+}
+
+/// Decode `max_new` tokens serially; returns (stream, final state).
+fn serial_stream(
+    model: &RustModel,
+    mut state: ModelState,
+    mut last: u8,
+    scfg: SamplerCfg,
+    max_new: usize,
+) -> (Vec<u8>, ModelState) {
+    let mut sampler = Sampler::new(scfg);
+    let mut out = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let logits = model.decode_step(&mut state, last);
+        last = sampler.sample(&logits) as u8;
+        out.push(last);
+    }
+    (out, state)
+}
+
+/// Same loop through the pooled step.
+fn pooled_stream(
+    model: &RustModel,
+    mut state: ModelState,
+    mut last: u8,
+    scfg: SamplerCfg,
+    max_new: usize,
+    pool: &DecodePool,
+) -> (Vec<u8>, ModelState) {
+    let mut sampler = Sampler::new(scfg);
+    let mut out = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let logits = model.decode_step_pooled(&mut state, last, pool).unwrap();
+        last = sampler.sample(&logits) as u8;
+        out.push(last);
+    }
+    (out, state)
+}
+
+fn assert_states_equal(a: &ModelState, b: &ModelState, label: &str) {
+    for (i, (sa, sb)) in a.layers.iter().flatten().zip(b.layers.iter().flatten()).enumerate() {
+        assert_eq!(
+            sa.state_vec().unwrap(),
+            sb.state_vec().unwrap(),
+            "{label}: head state {i} diverged"
+        );
+    }
+}
+
+#[test]
+fn pooled_decode_matches_serial_bitwise_all_mixers() {
+    let mut rng = Rng::new(101);
+    for mixer in ["hla2", "ahla", "hla3"] {
+        let model = build_model(mixer, &ModelShape::default(), 51);
+        let prompt = random_prompt(&mut rng, 19);
+        for scfg in [
+            SamplerCfg::greedy(),
+            SamplerCfg { temperature: 0.9, top_k: 8, seed: 13 },
+            SamplerCfg { temperature: 1.2, top_k: 0, seed: 14 },
+        ] {
+            // seed both lanes through the *same* serial prefill so only the
+            // decode path under test differs
+            let mut seed_state = ModelState::new(&model.cfg);
+            advance(&model, &mut seed_state, &prompt[..prompt.len() - 1], &PrefillCfg::serial());
+            let snapshot = seed_state.to_tensors().unwrap();
+            let restore = || {
+                let mut s = ModelState::new(&model.cfg);
+                s.load_tensors(&snapshot).unwrap();
+                s
+            };
+            let last = prompt[prompt.len() - 1];
+            let (want, want_state) =
+                serial_stream(&model, restore(), last, scfg.clone(), 48);
+            for threads in [2usize, 4, 7] {
+                let label = format!("{mixer} t={} threads={threads}", scfg.temperature);
+                let pool = DecodePool::new(threads);
+                let (got, got_state) =
+                    pooled_stream(&model, restore(), last, scfg.clone(), 48, &pool);
+                assert_eq!(got, want, "{label}: stream diverged");
+                assert_states_equal(&want_state, &got_state, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_decode_composes_with_scan_prefill_and_snapshot_resume() {
+    // the serving composition: chunked-scan prefill seeds the lane, a
+    // session snapshot round-trips it, then decode runs pooled — the
+    // stream must equal the same composition over serial decode
+    let mut rng = Rng::new(103);
+    for mixer in ["hla2", "ahla", "hla3"] {
+        let model = build_model(mixer, &ModelShape::default(), 53);
+        let prompt = random_prompt(&mut rng, 33);
+        let scan = PrefillCfg::scan(8, 2);
+        let mut state = ModelState::new(&model.cfg);
+        advance(&model, &mut state, &prompt[..prompt.len() - 1], &scan);
+        let snapshot = state.to_tensors().unwrap();
+        let restore = || {
+            let mut s = ModelState::new(&model.cfg);
+            s.load_tensors(&snapshot).unwrap();
+            s
+        };
+        let last = prompt[prompt.len() - 1];
+        let scfg = SamplerCfg { temperature: 0.8, top_k: 12, seed: 23 };
+        let (want, _) = serial_stream(&model, restore(), last, scfg.clone(), 40);
+        let pool = DecodePool::new(4);
+        let (got, _) = pooled_stream(&model, restore(), last, scfg, 40, &pool);
+        assert_eq!(got, want, "{mixer}: scan-prefill + resume + pooled decode diverged");
+    }
+}
+
+#[test]
+fn one_thread_is_the_serial_path_by_construction() {
+    // --decode-threads 1 must not merely equal serial, it must *be* it:
+    // the pool spawns no workers and the pooled entry points fall through
+    let pool = DecodePool::new(1);
+    assert!(!pool.is_parallel());
+    let model = build_model("hla2", &ModelShape::default(), 57);
+    let mut a = ModelState::new(&model.cfg);
+    let mut b = ModelState::new(&model.cfg);
+    for tok in [5u8, 9, 2, 61, 0] {
+        let want = model.decode_step(&mut a, tok);
+        let got = model.decode_step_pooled(&mut b, tok, &pool).unwrap();
+        assert_eq!(want, got);
+    }
+    assert_states_equal(&a, &b, "threads=1");
+}
+
+#[test]
+fn lane_partitioned_decode_matches_serial_even_oversubscribed() {
+    // more workers than lanes x heads: excess workers idle, results are
+    // still routed by lane index
+    let shape = ModelShape::default(); // 2 layers x 2 heads
+    let model = Arc::new(build_model("ahla", &shape, 59));
+    let pool = DecodePool::new(16);
+    let mut rng = Rng::new(107);
+    let n_lanes = 3;
+    let mut serial: Vec<ModelState> =
+        (0..n_lanes).map(|_| ModelState::new(&model.cfg)).collect();
+    let mut pooled: Vec<ModelState> =
+        (0..n_lanes).map(|_| ModelState::new(&model.cfg)).collect();
+    for _ in 0..24 {
+        let toks: Vec<u8> = (0..n_lanes).map(|_| rng.below(64) as u8).collect();
+        let want: Vec<Vec<f32>> = serial
+            .iter_mut()
+            .zip(&toks)
+            .map(|(st, &t)| model.decode_step(st, t))
+            .collect();
+        let mut lanes: Vec<(&mut ModelState, u8)> =
+            pooled.iter_mut().zip(toks.iter().copied()).collect();
+        let got = decode_steps_pooled(&model, &mut lanes, &pool).unwrap();
+        assert_eq!(got, want, "per-lane logits diverged");
+    }
+    for (s, p) in serial.iter().zip(&pooled) {
+        assert_states_equal(s, p, "lane states");
+    }
+}
+
+/// Swap in a head state built for a different head_dim: the promoted
+/// length asserts in `tensor::ops` fire inside the shard.
+fn poison_head(state: &mut ModelState, donor_cfg: &hla::runtime::ModelCfg) {
+    let mut wrong = ModelState::new(donor_cfg);
+    std::mem::swap(&mut state.layers[0][0], &mut wrong.layers[0][0]);
+}
+
+#[test]
+fn poisoned_shard_surfaces_as_typed_error_not_a_hang() {
+    let model = build_model("hla2", &ModelShape::default(), 61);
+    let donor = build_model("hla2", &ModelShape::draft(), 61); // head_dim 4 vs 8
+    let pool = DecodePool::new(4);
+    let mut state = ModelState::new(&model.cfg);
+    assert!(model.decode_step_pooled(&mut state, 3, &pool).is_ok());
+    poison_head(&mut state, &donor.cfg);
+    match model.decode_step_pooled(&mut state, 3, &pool) {
+        Err(PoolError::WorkerPanicked(msg)) => {
+            assert!(
+                msg.contains("length mismatch") || msg.contains("assert"),
+                "the kernel asserts should name the mismatch, got: {msg}"
+            );
+        }
+        other => panic!("want WorkerPanicked, got {other:?}"),
+    }
+    // the pool survives its dead shard: a fresh lane decodes fine
+    let mut fresh = ModelState::new(&model.cfg);
+    assert!(model.decode_step_pooled(&mut fresh, 3, &pool).is_ok());
+}
+
+#[test]
+fn model_drafter_proposals_identical_with_and_without_pool() {
+    // the spec model drafter is the host-side path EngineLoop hands the
+    // pool to: its tentative k-step greedy decode through the pool must
+    // propose exactly the serial drafter's bytes, across commits
+    for mixer in ["hla2", "ahla", "hla3"] {
+        let model = build_model(mixer, &ModelShape::default(), 63);
+        let pool = Arc::new(DecodePool::new(3));
+        let mut serial = ModelDrafter::with_prefill(model.clone(), PrefillCfg::serial());
+        let mut pooled = ModelDrafter::with_prefill(model.clone(), PrefillCfg::serial())
+            .with_pool(Some(pool));
+        let mut rng = Rng::new(109);
+        for round in 0..6 {
+            let chunk = random_prompt(&mut rng, 5 + round);
+            serial.commit(&chunk);
+            pooled.commit(&chunk);
+            let want = serial.propose(6);
+            assert_eq!(want.len(), 6, "{mixer}: healthy drafter proposes k tokens");
+            assert_eq!(pooled.propose(6), want, "{mixer} round {round}: proposal diverged");
+        }
+    }
+}
+
+#[test]
+fn fixture_engine_pooled_streams_match_serial_engine() {
+    // end to end: the cluster replica engine with a 4-thread pool must
+    // emit exactly the bytes of the serial engine, and its completion
+    // snapshot must land (the lane was never poisoned)
+    let shape = ModelShape::default();
+    let run = |threads: usize| -> (Vec<u8>, Option<FinishReason>, Vec<f32>) {
+        let model = build_model_full("hla2", &shape, 71);
+        let store = Arc::new(SessionStore::in_memory(8));
+        let stats = Arc::new(LiveStats::new());
+        let (tx, handle) =
+            spawn_fixture_engine_pooled(model, store.clone(), stats, None, threads);
+        let (etx, erx) = mpsc::channel();
+        let req = GenRequest::new(
+            1,
+            b"parallel decode differential".to_vec(),
+            32,
+            SamplerCfg { temperature: 0.9, top_k: 8, seed: 31 },
+            etx,
+        )
+        .with_session(77);
+        tx.send(req).unwrap();
+        drop(tx);
+        let (tokens, finish) = collect_tokens(&erx);
+        handle.join().unwrap();
+        let snap = store.claim(77, None).expect("completion snapshot landed");
+        let state_bytes: Vec<f32> =
+            snap.state.iter().flat_map(|t| t.data.iter().copied()).collect();
+        (tokens, finish, state_bytes)
+    };
+    let (want, want_fin, want_state) = run(1);
+    assert_eq!(want.len(), 32);
+    let (got, got_fin, got_state) = run(4);
+    assert_eq!(got, want, "pooled fixture engine stream diverged");
+    assert_eq!(got_fin, want_fin);
+    assert_eq!(got_state, want_state, "snapshot state diverged");
+}
