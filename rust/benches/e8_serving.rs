@@ -46,6 +46,8 @@ fn run_trace_load(
             stats: None,
             tracer: None,
             decode_threads: 1,
+            prefill_budget: 0,
+            admit_per_cycle: 0,
         },
     );
     // warmup barrier: engine construction compiles the artifacts (~10s on

@@ -47,6 +47,13 @@ serve:    --addr HOST:PORT --replicas N --sched POLICY --route POLICY
           [--checkpoint PATH]  (trained weights; default is seeded init)
           --session-capacity N --spill-dir DIR
           --prefill-chunk N --prefill-threads N  (0 0 = decode-as-prefill)
+          --prefill-budget N  (prompt tokens per engine cycle spent on
+          parked prefills; interleaves long prompts with decode steps,
+          0 = monolithic admission-time scan; needs --prefill-chunk)
+          --admit-per-cycle N  (admissions per cycle on top of --sched's
+          allowance; bounds burst-admission stalls, 0 = policy default)
+          --max-queue N  (in-flight cap; beyond it requests get the typed
+          overloaded reply instead of queueing, 0 = unbounded)
           --decode-threads N  (persistent per-engine decode pool for the
           host-side paths: fixture engines and model drafters; 0 = auto)
           --batch-buckets off|pow2|w1,w2,...  --bucket-shrink-after K
@@ -309,6 +316,8 @@ fn cmd_generate(cfg: &RunConfig) -> Result<()> {
             stats: Some(stats.clone()),
             tracer: tracer.clone(),
             decode_threads: decode_threads(cfg),
+            prefill_budget: cfg.prefill_budget,
+            admit_per_cycle: cfg.admit_per_cycle,
         },
     );
     let (etx, erx) = std::sync::mpsc::channel();
@@ -383,6 +392,8 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
                 stats: Some(stats.clone()),
                 tracer: tracer.clone(),
                 decode_threads: decode_threads(cfg),
+                prefill_budget: cfg.prefill_budget,
+                admit_per_cycle: cfg.admit_per_cycle,
             },
         );
         senders.push(tx);
@@ -391,6 +402,7 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
         tracers.extend(tracer);
     }
     let router = Arc::new(Router::new(senders, cfg.route));
+    router.set_capacity(cfg.max_queue);
     let stop = Arc::new(AtomicBool::new(false));
     println!("serving {} ({} replica(s)) on {}", cfg.model, cfg.replicas, cfg.addr);
     match &cfg.checkpoint {
@@ -402,6 +414,25 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     match prefill_cfg(cfg) {
         Some(p) => println!("prefill: chunked scan (w={}, {} thread(s))", p.chunk, p.threads),
         None => println!("prefill: decode-as-prefill (enable with --prefill-chunk N)"),
+    }
+    match cfg.prefill_budget {
+        0 => println!("interleave: monolithic prefill (enable with --prefill-budget N)"),
+        b => {
+            println!(
+                "interleave: parked prefills spend <= {b} prompt token(s) per cycle \
+                 between decode steps"
+            );
+            if prefill_cfg(cfg).is_none() {
+                println!("  (inert without --prefill-chunk: admissions never scan on the host twin)");
+            }
+        }
+    }
+    if cfg.admit_per_cycle > 0 {
+        println!("admissions: capped at {} per cycle (burst fairness)", cfg.admit_per_cycle);
+    }
+    match cfg.max_queue {
+        0 => println!("admission queue: unbounded (bound with --max-queue N)"),
+        n => println!("admission queue: {n} in-flight cap — beyond it the typed overloaded reply"),
     }
     match decode_threads(cfg) {
         t if t > 1 => println!(
@@ -537,6 +568,7 @@ fn cmd_serve_fixture(cfg: &RunConfig) -> Result<()> {
     }
     let identity = identity.expect("at least one engine spawns");
     let router = Arc::new(Router::new(senders, cfg.route));
+    router.set_capacity(cfg.max_queue);
     let stop = Arc::new(AtomicBool::new(false));
     println!(
         "serving fixture model on {} ({} engine(s), cfg {}, fingerprint {:016x}, {} state/session)",

@@ -708,7 +708,12 @@ fn relay_generation(line: &str, req: &Json, fe: &Frontend, writer: &mut TcpStrea
 /// straight through (minus the suppressed prefix on a replay); the
 /// terminal line is *returned, not written* — the caller forwards it only
 /// after the desk bookkeeping, so a client that saw `done` can rely on
-/// the session being parked.  Returns `(terminal_line, clean)` where
+/// the session being parked.  Both replica streaming modes relay
+/// unchanged: per-token requests produce non-terminal lines that count
+/// toward the suppression prefix, and `"stream": false` requests produce
+/// *only* a terminal line (the buffered completion rides it), which is
+/// returned like any other — the router never needs to know which mode a
+/// request asked for.  Returns `(terminal_line, clean)` where
 /// `clean` is true for a `done` line and false for a replica-side `error`
 /// line; `Err(Upstream)` means replica-side transport failure — the
 /// failover trigger; `Err(Client)` means our own client's write failed

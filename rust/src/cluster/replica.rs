@@ -168,7 +168,6 @@ fn serve_one(
     let t_decode = Instant::now();
     let mut produced = 0u64;
     let mut reason = FinishReason::Length;
-    let mut poisoned = false;
     for _ in 0..req.max_new_tokens {
         let t0 = Instant::now();
         let logits = match model.decode_step_pooled(&mut state, input, pool) {
@@ -176,7 +175,6 @@ fn serve_one(
             Err(e) => {
                 log::warn!("request {}: {e}; aborting", req.id);
                 reason = FinishReason::Aborted;
-                poisoned = true;
                 break;
             }
         };
@@ -205,7 +203,10 @@ fn serve_one(
         // to see step-by-step), detail = tokens produced
         t.span(Stage::DecodeStep, key, 0, t_decode, produced);
     }
-    if let Some(sid) = req.session.filter(|_| !poisoned) {
+    // an aborted lane (poisoned state or a sink whose reader hung up /
+    // stopped draining) is never snapshotted: a resume would replay from
+    // tokens the client never received — same rule as the batched engine
+    if let Some(sid) = req.session.filter(|_| reason != FinishReason::Aborted) {
         let t_detach = Instant::now();
         // `input` is sampled-but-not-fed here — exactly what a resume
         // expects to feed first

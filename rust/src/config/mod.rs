@@ -40,6 +40,16 @@ pub struct RunConfig {
     pub prefill_chunk: usize,
     /// scan-prefill worker threads; 0 = one per available core (uncapped)
     pub prefill_threads: usize,
+    // interleaved scheduling (chunked prefill riding the decode cycle)
+    /// prompt tokens each engine cycle may spend on parked prefills
+    /// before its decode step; 0 = monolithic admission-time prefill
+    pub prefill_budget: usize,
+    /// admissions per engine cycle on top of the scheduler policy's
+    /// allowance; 0 = policy default (the fairness cap for bursts)
+    pub admit_per_cycle: usize,
+    /// total in-flight requests before the server refuses with the typed
+    /// `overloaded` reply; 0 = unbounded (the historical behavior)
+    pub max_queue: usize,
     /// decode worker threads (serve/generate); 1 = serial, 0 = one per
     /// available core — threaded decode is byte-identical to serial
     pub decode_threads: usize,
@@ -107,6 +117,9 @@ impl Default for RunConfig {
             route: RoutePolicy::LeastLoaded,
             prefill_chunk: 0,
             prefill_threads: 0,
+            prefill_budget: 0,
+            admit_per_cycle: 0,
+            max_queue: 0,
             decode_threads: 1,
             batch_buckets: "off".into(),
             bucket_shrink_after: 4,
@@ -203,6 +216,9 @@ impl RunConfig {
             }
             "prefill-chunk" | "prefill_chunk" => self.prefill_chunk = value.parse()?,
             "prefill-threads" | "prefill_threads" => self.prefill_threads = value.parse()?,
+            "prefill-budget" | "prefill_budget" => self.prefill_budget = value.parse()?,
+            "admit-per-cycle" | "admit_per_cycle" => self.admit_per_cycle = value.parse()?,
+            "max-queue" | "max_queue" => self.max_queue = value.parse()?,
             "decode-threads" | "decode_threads" => self.decode_threads = value.parse()?,
             "batch-buckets" | "batch_buckets" => {
                 crate::coordinator::BucketSpec::parse(value).ok_or_else(|| {
@@ -359,6 +375,28 @@ mod tests {
         assert_eq!(cfg.prefill_threads, 4);
         // default keeps decode-as-prefill
         assert_eq!(RunConfig::default().prefill_chunk, 0);
+    }
+
+    #[test]
+    fn interleave_flags_apply_in_both_spellings() {
+        let cfg = RunConfig::from_args(&s(&[
+            "--prefill-budget",
+            "128",
+            "--admit_per_cycle=2",
+            "--max-queue",
+            "64",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.prefill_budget, 128);
+        assert_eq!(cfg.admit_per_cycle, 2);
+        assert_eq!(cfg.max_queue, 64);
+        // defaults keep every historical behavior: monolithic prefill,
+        // policy-sized admissions, unbounded queue
+        let d = RunConfig::default();
+        assert_eq!(d.prefill_budget, 0);
+        assert_eq!(d.admit_per_cycle, 0);
+        assert_eq!(d.max_queue, 0);
+        assert!(RunConfig::from_args(&s(&["--prefill-budget", "lots"])).is_err());
     }
 
     #[test]

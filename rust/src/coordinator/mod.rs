@@ -34,6 +34,7 @@
 
 pub mod batch;
 pub mod bucket;
+pub mod interleave;
 pub mod repack;
 pub mod request;
 pub mod router;
@@ -61,7 +62,7 @@ pub use bucket::{BucketCfg, BucketSpec, BucketSwitch, BucketTracker};
 // engine now *updates* a shared LiveStats rather than owning the only
 // copy); re-exported here so existing imports keep resolving.
 pub use crate::metrics::registry::ServeStats;
-pub use request::{collect_tokens, FinishReason, GenRequest, RequestId, TokenEvent};
+pub use request::{collect_tokens, EventSink, FinishReason, GenRequest, RequestId, TokenEvent};
 pub use state_pool::StatePool;
 
 /// Prefill/decode scheduling policy (E8b ablation).
@@ -112,6 +113,24 @@ pub struct EngineLoop {
     pool: StatePool,
     waiting: VecDeque<GenRequest>,
     policy: SchedPolicy,
+    /// Per-cycle prefill token budget (`serve --prefill-budget N`; 0 =
+    /// monolithic admission-time scans, the historical behavior).  With a
+    /// budget, admission parks a resumable [`crate::prefill::PrefillCursor`]
+    /// on the lane and each cycle's prefill-chunk phase spends at most
+    /// this many prompt tokens across all parked lanes before the batched
+    /// decode step runs — long prompts stop stalling in-flight decodes.
+    prefill_budget: usize,
+    /// Cap on admissions per engine cycle (`--admit-per-cycle`; 0 = the
+    /// policy's own allowance).  Bounds the admission-time work a burst
+    /// of arrivals can put between two decode steps.
+    admit_per_cycle: usize,
+    /// Round-robin pointer for the prefill-chunk phase: persists across
+    /// cycles so the budget is dealt fairly ([`interleave`]).
+    rr: interleave::RoundRobin,
+    /// End of the previous decode step while batch-ready lanes existed —
+    /// the anchor for the decode-stall histogram (`decode_stall_us_*`),
+    /// which is the metric `--prefill-budget` exists to improve.
+    last_decode: Option<Instant>,
     rx: Receiver<GenRequest>,
     /// Session snapshot store (None = stateless serving).  Shared across
     /// replicas, which is what makes cross-replica migration a routing
@@ -200,6 +219,10 @@ impl EngineLoop {
             pool: StatePool::new(&cfg),
             waiting: VecDeque::new(),
             policy,
+            prefill_budget: 0,
+            admit_per_cycle: 0,
+            rr: interleave::RoundRobin::new(),
+            last_decode: None,
             rx,
             sessions: None,
             prefiller: None,
@@ -337,6 +360,34 @@ impl EngineLoop {
     /// The attached prefix cache, if any (stats/diagnostics surface).
     pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
         self.prefix_cache.as_ref()
+    }
+
+    /// Budget the admission-time scan (`serve --prefill-budget N`, in
+    /// prompt tokens per engine cycle; 0 keeps monolithic scans).  Needs
+    /// a prefill engine attached — without one admissions already use
+    /// decode-as-prefill, which interleaves naturally.  Determinism: with
+    /// a prefix cache the budgeted ingestion cuts at the cache's chunk
+    /// boundaries and is *bit-identical* to the monolithic one; uncached
+    /// ingestions cut at budget-sized windows, so greedy streams are
+    /// identical to monolithic prefill and seeded ones
+    /// distribution-identical (f32 reassociation only —
+    /// `tests/interleave_differential.rs` pins both claims).
+    pub fn set_prefill_budget(&mut self, budget: usize) {
+        if budget > 0 && self.prefiller.is_none() {
+            log::warn!(
+                "prefill budget configured without a prefill engine; \
+                 enable --prefill-chunk so admissions scan on the host twin"
+            );
+        }
+        self.prefill_budget = budget;
+    }
+
+    /// Cap admissions per engine cycle (`serve --admit-per-cycle N`; 0 =
+    /// the scheduler policy's own allowance).  Under `prefill-first` a
+    /// burst of arrivals otherwise admits — and admission-scans — the
+    /// whole queue before the next decode step.
+    pub fn set_admit_per_cycle(&mut self, cap: usize) {
+        self.admit_per_cycle = cap;
     }
 
     /// Attach a persistent decode worker pool (`serve --decode-threads N`,
@@ -515,15 +566,33 @@ impl EngineLoop {
                 }
                 continue;
             }
+            self.stats.queue_depth.set(self.waiting.len() as u64);
             self.admit();
-            // the batched artifact step serves every lane that is not
-            // speculatively active (including spec-requested lanes still
-            // ingesting their prompt, whose first token samples through
-            // the unchanged batched path); skip it when speculative lanes
-            // are all that's left
-            let batched = self.lanes.iter().any(|l| l.is_active() && !l.is_spec_active());
+            self.stats.queue_depth.set(self.waiting.len() as u64);
+            // budgeted prefill: advance parked ingestions round-robin,
+            // spending at most ~prefill_budget prompt tokens this cycle
+            self.prefill_chunks();
+            // reclaim cancelled lanes before they cost a decode step
+            self.sweep_cancelled();
+            // the batched artifact step serves every lane that is not a
+            // PAD passenger (speculatively active, or parked mid-prefill
+            // under a budget — spec-requested lanes still feeding their
+            // prompt do ride it, so their first token samples through the
+            // unchanged batched path); skip it when passengers are all
+            // that's left
+            let batched = self.lanes.iter().any(Lane::is_batch_ready);
             if batched {
+                // gap since the previous step while decode work existed =
+                // how long admissions/prefill stalled the decoders
+                if let Some(prev) = self.last_decode.take() {
+                    self.stats.decode_stall_hist.record(prev.elapsed());
+                }
                 self.step()?;
+                self.last_decode = Some(Instant::now());
+            } else {
+                // no decode lane is waiting: a gap here is idleness or
+                // pure prefill, not a scheduling stall
+                self.last_decode = None;
             }
             self.spec_rounds(batched);
             // bucketing: debounced shrink toward the occupancy after this
@@ -548,7 +617,10 @@ impl EngineLoop {
         let free: Vec<usize> =
             (0..self.batch).filter(|&b| !self.lanes[b].is_active()).collect();
         let active = self.batch - free.len();
-        let n = self.policy.admissions(self.waiting.len(), free.len(), active);
+        let n = interleave::bounded_admissions(
+            self.policy.admissions(self.waiting.len(), free.len(), active),
+            self.admit_per_cycle,
+        );
         // bucketing: grow eagerly so every admission below has a slot —
         // a waiting request is never refused because the bucket is full
         if n > 0 {
@@ -621,6 +693,54 @@ impl EngineLoop {
                     Lane::start(req)
                 }
             };
+            // budgeted prefill (`--prefill-budget`): instead of scanning
+            // the whole prompt here, park a resumable cursor on the lane;
+            // the per-cycle prefill-chunk phase finishes the ingestion
+            // interleaved with decode steps.  Cache-seeded cursors cut at
+            // the cache's chunk boundaries (bit-identical to the
+            // monolithic cached scan); uncached ones cut at budget-sized
+            // windows (greedy-identical, seeded distribution-identical).
+            let parked = match (&self.prefiller, &lane) {
+                (Some(pf), Lane::Active(a)) if self.prefill_budget > 0 && a.prompt.len() >= 2 => {
+                    let cache = match (&self.prefix_cache, &snap) {
+                        (Some(c), None) if a.cache => Some(c),
+                        _ => None,
+                    };
+                    let cache_probed = cache.is_some();
+                    let built = match cache {
+                        Some(c) => pf.cursor_cached(c, &a.prompt),
+                        None => pf.cursor(
+                            snap.as_ref().map(|s| s.state.as_slice()),
+                            &a.prompt,
+                            self.prefill_budget,
+                        ),
+                    };
+                    match built {
+                        Ok(cur) => Some((cur, cache_probed)),
+                        Err(e) => {
+                            log::warn!("prefill cursor failed, decode-as-prefill fallback: {e}");
+                            None
+                        }
+                    }
+                }
+                _ => None,
+            };
+            if let Some((cur, cache_probed)) = parked {
+                if cache_probed {
+                    if let Some(t) = &self.tracer {
+                        t.instant_event(
+                            Stage::CacheLookup,
+                            req_id,
+                            lane_idx,
+                            cur.hit_tokens() as u64,
+                        );
+                    }
+                }
+                if let Lane::Active(a) = &mut lane {
+                    a.cache_warm = cur.hit_tokens() > 0;
+                }
+                lane.park_prefill(cur);
+            }
             // scan prefill: ingest everything but the final prompt token
             // on the pure-Rust twin (from the restored snapshot when
             // resuming — the non-identity initial segment of the scan),
@@ -628,9 +748,12 @@ impl EngineLoop {
             // enters the sampling phase after one decode step.  Fresh
             // lanes that did not opt out go through the shared-prefix
             // cache: the scan seeds from the longest cached boundary and
-            // contributes the fresh boundaries it computes.
+            // contributes the fresh boundaries it computes.  (Skipped in
+            // budget mode — the parked cursor owns the ingestion.)
             let scanned = match (&self.prefiller, &lane) {
-                (Some(pf), Lane::Active(a)) if a.prompt.len() >= 2 => {
+                (Some(pf), Lane::Active(a))
+                    if self.prefill_budget == 0 && a.prompt.len() >= 2 =>
+                {
                     let t0 = Instant::now();
                     let cache = match (&self.prefix_cache, &snap) {
                         (Some(c), None) if a.cache => Some(c),
@@ -687,6 +810,118 @@ impl EngineLoop {
             self.lanes[lane_idx] = lane;
             if let Some(t) = &self.tracer {
                 t.span(Stage::Admission, req_id, lane_idx, t_admit, prompt_len as u64);
+            }
+        }
+    }
+
+    /// The budgeted prefill phase of one engine cycle: advance parked
+    /// lanes' cursors round-robin, one window per visit, until at least
+    /// `prefill_budget` prompt tokens have been spent (overshoot is at
+    /// most one window — the starvation bound `interleave` pins), then
+    /// land every ingestion that reached its target.  Cancelled lanes
+    /// leave the rotation immediately; their budget flows to survivors
+    /// and the cancel sweep reclaims them before the decode step.
+    fn prefill_chunks(&mut self) {
+        if self.prefill_budget == 0 {
+            return;
+        }
+        let parked: Vec<usize> =
+            (0..self.batch).filter(|&b| self.lanes[b].is_prefill_parked()).collect();
+        if parked.is_empty() {
+            return;
+        }
+        let budget = self.prefill_budget;
+        let EngineLoop { lanes, prefiller, prefix_cache, tracer, stats, rr, .. } = self;
+        let Some(pf) = prefiller.as_ref() else { return };
+        let mut landings: Vec<usize> = vec![];
+        interleave::run_prefill_round(rr, &parked, budget, |b| {
+            if lanes[b].cancelled() {
+                return (0, true); // the sweep below reclaims the lane
+            }
+            let Lane::Active(a) = &mut lanes[b] else { return (0, true) };
+            let Some(cur) = a.prefill.as_mut() else { return (0, true) };
+            let t0 = Instant::now();
+            // the cursor's own `cached` flag gates boundary inserts, so
+            // passing the cache to an uncached cursor is inert
+            match cur.advance_budget(pf, prefix_cache.as_deref(), 1) {
+                Ok(used) => {
+                    a.prefill_spent += t0.elapsed();
+                    stats.prefill_chunks.incr();
+                    if let Some(t) = tracer {
+                        let key = a.trace.unwrap_or(a.request_id);
+                        t.span(Stage::PrefillChunk, key, b, t0, used as u64);
+                    }
+                    let done = cur.done();
+                    if done {
+                        landings.push(b);
+                    }
+                    (used, done)
+                }
+                Err(e) => {
+                    log::warn!(
+                        "request {}: prefill chunk failed, decode-as-prefill fallback: {e}",
+                        a.request_id
+                    );
+                    // drop the cursor; the lane's prompt cursor never
+                    // advanced while parked, so decode-as-prefill feeds
+                    // the prompt from the start
+                    a.prefill = None;
+                    (0, true)
+                }
+            }
+        });
+        for b in landings {
+            self.land_prefill(b);
+        }
+    }
+
+    /// A parked lane's ingestion reached its target: land the post-prompt
+    /// state in the lane's slot (the same import path as a monolithic
+    /// admission scan) and let the lane rejoin the batched step — it
+    /// feeds its final prompt token next cycle and samples its first
+    /// token through the unchanged decode path.
+    fn land_prefill(&mut self, b: usize) {
+        let Some(cur) = self.lanes[b].take_prefill() else { return };
+        let hit_tokens = cur.hit_tokens();
+        let finished = match &self.prefiller {
+            Some(pf) => cur.finish(pf),
+            // a parked cursor without a prefiller cannot exist (the
+            // cursor was built from it); treat as a landing failure
+            None => return,
+        };
+        match finished {
+            Ok((parts, consumed, _)) => match self.import_state_lane(self.slot_of[b], &parts) {
+                Ok(()) => {
+                    self.pool.write_lane(b, &parts);
+                    self.lanes[b].mark_prefilled(consumed);
+                    self.stats.prefills.incr();
+                    self.stats.prefilled_tokens.add(consumed as u64);
+                    // cache_warm was set from hit_tokens at park time;
+                    // record the *accumulated* scan time so the histogram
+                    // stays comparable with monolithic admission scans
+                    debug_assert!(hit_tokens <= consumed);
+                    if let Lane::Active(a) = &self.lanes[b] {
+                        self.stats.prefill_hist.record(a.prefill_spent);
+                    }
+                }
+                Err(e) => {
+                    log::warn!("prefill state import failed, decode-as-prefill fallback: {e}")
+                }
+            },
+            Err(e) => log::warn!("prefill landing failed, decode-as-prefill fallback: {e}"),
+        }
+    }
+
+    /// Reclaim lanes whose submitter set the cancel flag (client hung up,
+    /// server-side abort): the lane frees this cycle — mid-prefill lanes
+    /// drop their cursor without poisoning the pool (their slot is zeroed
+    /// or overwritten on the next admission, exactly like a finished
+    /// lane's) — and the request finishes `Aborted`, never snapshotted.
+    fn sweep_cancelled(&mut self) {
+        let now = Instant::now();
+        for b in 0..self.batch {
+            if self.lanes[b].cancelled() {
+                self.finish_lane(b, FinishReason::Aborted, now);
             }
         }
     }
@@ -836,8 +1071,12 @@ impl EngineLoop {
         // (which hold exactly the post-step state); speculative lanes
         // live on the pure-Rust twin, so their host ModelState is the
         // ground truth — `a.last_token` is the next input an
-        // uninterrupted generation would feed either way.
-        if let (Some(store), Some(sid)) = (&self.sessions, a.session) {
+        // uninterrupted generation would feed either way.  Aborted lanes
+        // (cancel, dead event sink, failed spec round, mid-prefill cut)
+        // are never snapshotted: their stream was cut mid-flight, so a
+        // snapshot would resume from tokens the client never received.
+        let snapshot = reason != FinishReason::Aborted;
+        if let (true, Some(store), Some(sid)) = (snapshot, &self.sessions, a.session) {
             let t0 = Instant::now();
             let parts = match (&a.spec, &self.spec) {
                 (Some(sl), Some(eng)) => sl.state.to_components(&eng.model().cfg),
@@ -950,17 +1189,25 @@ impl EngineLoop {
                         continue;
                     }
                 };
+                let mut sink_dead = false;
                 for &t in &outcome.emitted {
                     a.generated += 1;
                     a.last_token = t;
-                    let _ = a.events.send(TokenEvent::token(a.request_id, t));
+                    if a.events.send(TokenEvent::token(a.request_id, t)).is_err() {
+                        // slow or hung-up reader: stop emitting and abort
+                        // the lane (same policy as the batched path)
+                        sink_dead = true;
+                        break;
+                    }
                 }
                 self.stats.tokens_out.add(outcome.emitted.len() as u64);
                 if let Some(tr) = &self.tracer {
                     let key = a.trace.unwrap_or(a.request_id);
                     tr.span(Stage::SpecRound, key, b, t_round, outcome.emitted.len() as u64);
                 }
-                if a.eos.is_some() && outcome.emitted.last().copied() == a.eos {
+                if sink_dead {
+                    finished.push((b, FinishReason::Aborted));
+                } else if a.eos.is_some() && outcome.emitted.last().copied() == a.eos {
                     finished.push((b, FinishReason::Eos));
                 } else if a.generated >= a.max_new_tokens {
                     finished.push((b, FinishReason::Length));
@@ -1016,6 +1263,12 @@ pub struct EngineOpts {
     pub store: Option<Arc<SessionStore>>,
     /// Scan prefill configuration (None = decode-as-prefill).
     pub prefill: Option<PrefillCfg>,
+    /// Per-cycle prefill token budget (0 = monolithic admission scans;
+    /// needs `prefill` attached to do anything).  See
+    /// [`EngineLoop::set_prefill_budget`].
+    pub prefill_budget: usize,
+    /// Cap on admissions per engine cycle (0 = the policy's allowance).
+    pub admit_per_cycle: usize,
     /// Shared-prefix cache configuration (None = cold prefills; needs
     /// `prefill` attached to do anything).  Requests opt out per
     /// [`GenRequest::without_cache`].
@@ -1098,6 +1351,9 @@ pub fn spawn_engine_full(
         if let Some(cache) = opts.prefix_cache {
             lp.set_prefix_cache(cache);
         }
+        // after set_prefill (the budget warns when no prefiller built)
+        lp.set_prefill_budget(opts.prefill_budget);
+        lp.set_admit_per_cycle(opts.admit_per_cycle);
         // before set_spec so model-drafter lanes pick the pool up
         lp.set_decode_threads(opts.decode_threads);
         if let Some(spec) = opts.spec {

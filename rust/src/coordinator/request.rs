@@ -1,6 +1,8 @@
 //! Request/response types for the serving path.
 
-use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{SendError, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::sampler::SamplerCfg;
@@ -51,6 +53,46 @@ impl TokenEvent {
     }
 }
 
+/// Where a request's [`TokenEvent`]s go: an unbounded channel (the
+/// historical default — in-process callers that always drain) or a
+/// bounded one (the streaming server's slow-reader backpressure).
+///
+/// The engine's send is **never blocking**: on a bounded sink a full
+/// buffer is reported as an error exactly like a hung-up receiver, and
+/// the engine aborts the lane — a reader that cannot keep up (or
+/// disconnected) must not make the engine buffer unboundedly or stall
+/// the other lanes in the batch.
+#[derive(Debug, Clone)]
+pub enum EventSink {
+    Unbounded(Sender<TokenEvent>),
+    Bounded(SyncSender<TokenEvent>),
+}
+
+impl EventSink {
+    /// Non-blocking send.  `Err` means the receiver is gone *or* (bounded
+    /// only) its buffer is full — either way the lane should abort.
+    pub fn send(&self, ev: TokenEvent) -> Result<(), TrySendError<TokenEvent>> {
+        match self {
+            EventSink::Unbounded(tx) => {
+                tx.send(ev).map_err(|SendError(ev)| TrySendError::Disconnected(ev))
+            }
+            EventSink::Bounded(tx) => tx.try_send(ev),
+        }
+    }
+}
+
+impl From<Sender<TokenEvent>> for EventSink {
+    fn from(tx: Sender<TokenEvent>) -> EventSink {
+        EventSink::Unbounded(tx)
+    }
+}
+
+impl From<SyncSender<TokenEvent>> for EventSink {
+    fn from(tx: SyncSender<TokenEvent>) -> EventSink {
+        EventSink::Bounded(tx)
+    }
+}
+
 /// A generation request submitted to the coordinator.
 #[derive(Debug)]
 pub struct GenRequest {
@@ -62,7 +104,13 @@ pub struct GenRequest {
     pub eos: Option<u8>,
     pub sampler: SamplerCfg,
     /// Streaming channel for token events.
-    pub events: Sender<TokenEvent>,
+    pub events: EventSink,
+    /// Cooperative cancel flag (client hung up, shutdown): the engine
+    /// checks it at decode steps and at prefill window boundaries, so a
+    /// mid-prefill disconnect frees the lane within one budget window.
+    /// A cancelled lane finishes [`FinishReason::Aborted`] and is never
+    /// snapshotted into the session store.  `None` = not cancellable.
+    pub cancel: Option<Arc<AtomicBool>>,
     /// Durable conversation id: on completion the lane's state is detached
     /// into the session store under this key (None = stateless request).
     pub session: Option<u64>,
@@ -104,7 +152,7 @@ impl GenRequest {
         prompt: Vec<u8>,
         max_new_tokens: usize,
         sampler: SamplerCfg,
-        events: Sender<TokenEvent>,
+        events: impl Into<EventSink>,
     ) -> GenRequest {
         GenRequest {
             id,
@@ -112,7 +160,8 @@ impl GenRequest {
             max_new_tokens,
             eos: None,
             sampler,
-            events,
+            events: events.into(),
+            cancel: None,
             session: None,
             resume: false,
             spec: false,
@@ -151,6 +200,17 @@ impl GenRequest {
         self.trace = Some(trace_id);
         self
     }
+
+    /// Attach a cooperative cancel flag (set it to abort the request).
+    pub fn with_cancel(mut self, cancel: Arc<AtomicBool>) -> GenRequest {
+        self.cancel = Some(cancel);
+        self
+    }
+
+    /// Has the submitter asked this request to stop?
+    pub fn cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed))
+    }
 }
 
 /// Collect a full generation from an event receiver (blocking helper).
@@ -186,6 +246,41 @@ mod tests {
         assert!(req.resume && req.spec);
         assert!(!req.cache, "without_cache opts the request out");
         assert_eq!(req.trace, Some(0xabc));
+    }
+
+    #[test]
+    fn bounded_sink_reports_full_and_disconnected_without_blocking() {
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let sink = EventSink::from(tx);
+        sink.send(TokenEvent::token(1, b'a')).unwrap();
+        // buffer full: the engine-side send fails instead of blocking
+        assert!(matches!(sink.send(TokenEvent::token(1, b'b')), Err(TrySendError::Full(_))));
+        drop(rx);
+        assert!(matches!(
+            sink.send(TokenEvent::token(1, b'c')),
+            Err(TrySendError::Disconnected(_))
+        ));
+        // unbounded sinks only fail on hangup
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sink = EventSink::from(tx);
+        for _ in 0..64 {
+            sink.send(TokenEvent::token(1, b'x')).unwrap();
+        }
+        drop(rx);
+        assert!(sink.send(TokenEvent::token(1, b'y')).is_err());
+    }
+
+    #[test]
+    fn cancel_flag_is_shared_and_defaults_off() {
+        use crate::model::sampler::SamplerCfg;
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let req = GenRequest::new(1, vec![1, 2], 4, SamplerCfg::greedy(), tx);
+        assert!(!req.cancelled(), "no token attached: never cancelled");
+        let flag = Arc::new(AtomicBool::new(false));
+        let req = req.with_cancel(flag.clone());
+        assert!(!req.cancelled());
+        flag.store(true, Ordering::Relaxed);
+        assert!(req.cancelled(), "submitter-side store is visible to the engine");
     }
 
     #[test]

@@ -147,11 +147,42 @@ struct Replica {
     in_flight: AtomicUsize,
 }
 
+/// Why a bounded submission was refused.  `Overloaded` is backpressure,
+/// not failure: the router is full and the caller should shed or retry
+/// — the server turns it into a typed `overloaded` reply instead of a
+/// generic error so clients can tell the difference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Total in-flight has reached the admission capacity.  Carries the
+    /// depth observed at rejection time so the reply (and the operator)
+    /// can see how far over the line the system is.
+    Overloaded { queue_depth: usize },
+    /// The picked replica's engine thread is gone (channel closed).
+    ReplicaGone(usize),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { queue_depth } => {
+                write!(f, "overloaded: {queue_depth} requests in flight")
+            }
+            SubmitError::ReplicaGone(idx) => write!(f, "replica {idx} is gone"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// The router: submit requests, pick replicas by policy.
 pub struct Router {
     replicas: Vec<Replica>,
     core: PolicyCore,
     next_id: AtomicU64,
+    /// Admission capacity across all replicas (0 = unbounded).  Enforced
+    /// only by [`Router::try_submit`]; the legacy [`Router::submit`]
+    /// path never rejects, so existing callers keep their semantics.
+    capacity: AtomicUsize,
 }
 
 impl Router {
@@ -163,7 +194,25 @@ impl Router {
                 .collect(),
             core: PolicyCore::new(policy),
             next_id: AtomicU64::new(1),
+            capacity: AtomicUsize::new(0),
         }
+    }
+
+    /// Cap total in-flight requests (0 = unbounded).  Applies to
+    /// [`Router::try_submit`] from the next call on.
+    pub fn set_capacity(&self, cap: usize) {
+        self.capacity.store(cap, Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed)
+    }
+
+    /// Total in-flight across every replica — the admission queue depth
+    /// the capacity is compared against (and the number reported in
+    /// `overloaded` replies and the `queue_depth` gauge).
+    pub fn total_in_flight(&self) -> usize {
+        self.replicas.iter().map(|r| r.in_flight.load(Ordering::Relaxed)).sum()
     }
 
     pub fn n_replicas(&self) -> usize {
@@ -210,6 +259,40 @@ impl Router {
             .send(req)
             .map_err(|_| anyhow!("replica {idx} is gone"))?;
         Ok(idx)
+    }
+
+    /// Bounded submission: refuse with [`SubmitError::Overloaded`] when
+    /// total in-flight has reached the capacity, instead of queueing
+    /// without limit.  Completions drain in-flight (drain-before-reject:
+    /// the moment a lane finishes, the next try_submit fits again) —
+    /// rejection is a point-in-time measurement, not a latched state.
+    ///
+    /// The check-then-increment is racy across frontend threads by
+    /// design: a burst can land a few requests past the cap, which is
+    /// fine for backpressure (the bound is about preventing unbounded
+    /// queues, not exact counting).
+    pub fn try_submit(
+        &self,
+        req: GenRequest,
+        session: Option<u64>,
+    ) -> std::result::Result<usize, SubmitError> {
+        let cap = self.capacity.load(Ordering::Relaxed);
+        if cap > 0 {
+            let depth = self.total_in_flight();
+            if depth >= cap {
+                return Err(SubmitError::Overloaded { queue_depth: depth });
+            }
+        }
+        let idx = self.pick(session);
+        let r = &self.replicas[idx];
+        r.in_flight.fetch_add(1, Ordering::Relaxed);
+        match r.tx.lock().unwrap().send(req) {
+            Ok(()) => Ok(idx),
+            Err(_) => {
+                r.in_flight.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::ReplicaGone(idx))
+            }
+        }
     }
 
     /// Report a finished request (LeastLoaded accounting).
@@ -373,6 +456,55 @@ mod tests {
             assert_eq!(rxs[2].try_iter().count(), 4, "{policy:?}: all four landed on the pin");
             assert_eq!(router.in_flight(2), 4);
         }
+    }
+
+    #[test]
+    fn try_submit_rejects_at_capacity_and_drains_before_reject() {
+        let (router, rxs) = mk_router(2, RoutePolicy::LeastLoaded);
+        router.set_capacity(2);
+        let (r1, _e1) = mk_req(1);
+        let (r2, _e2) = mk_req(2);
+        let a = router.try_submit(r1, None).unwrap();
+        let b = router.try_submit(r2, None).unwrap();
+        assert_eq!((a, b), (0, 1));
+        // at capacity: the typed rejection carries the observed depth
+        let (r3, _e3) = mk_req(3);
+        assert_eq!(
+            router.try_submit(r3, None),
+            Err(SubmitError::Overloaded { queue_depth: 2 })
+        );
+        // rejection consumed nothing: both engines still hold one each
+        assert_eq!(rxs[0].try_iter().count(), 1);
+        assert_eq!(rxs[1].try_iter().count(), 1);
+        // drain-before-reject: one completion frees one slot immediately
+        router.complete(0);
+        let (r4, _e4) = mk_req(4);
+        assert_eq!(router.try_submit(r4, None).unwrap(), 0);
+        assert_eq!(router.total_in_flight(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_means_unbounded_and_submit_never_rejects() {
+        let (router, _rxs) = mk_router(1, RoutePolicy::RoundRobin);
+        assert_eq!(router.capacity(), 0, "unbounded by default");
+        for i in 0..16 {
+            let (r, _e) = mk_req(i);
+            router.try_submit(r, None).unwrap();
+        }
+        assert_eq!(router.total_in_flight(), 16);
+        // the legacy path ignores capacity entirely
+        router.set_capacity(4);
+        let (r, _e) = mk_req(99);
+        assert_eq!(router.submit(r, None).unwrap(), 0);
+    }
+
+    #[test]
+    fn try_submit_reports_a_gone_replica_without_leaking_in_flight() {
+        let (router, rxs) = mk_router(1, RoutePolicy::RoundRobin);
+        drop(rxs);
+        let (r, _e) = mk_req(1);
+        assert_eq!(router.try_submit(r, None), Err(SubmitError::ReplicaGone(0)));
+        assert_eq!(router.total_in_flight(), 0, "failed send rolls the count back");
     }
 
     #[test]

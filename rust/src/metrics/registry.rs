@@ -55,6 +55,18 @@ pub struct ServeStats {
     pub prefills: u64,
     /// Prompt tokens ingested by the prefill engine (vs decode steps).
     pub prefilled_tokens: u64,
+    /// Budgeted prefill window advances run (`--prefill-budget`; 0 =
+    /// monolithic admission scans).
+    pub prefill_chunks: u64,
+    /// Requests waiting at the engine at snapshot time (gauge — the
+    /// admission backpressure signal, reported in `overloaded` replies).
+    pub queue_depth: u64,
+    /// Gap between consecutive batched decode steps while decode-ready
+    /// lanes existed — the head-of-line stall that monolithic admission
+    /// scans inflict on in-flight decodes and `--prefill-budget` bounds
+    /// (bench E22's headline).
+    pub decode_stall_us_p50: f64,
+    pub decode_stall_us_p99: f64,
     /// Prefix-cache lookups that seeded a prefill from a cached boundary
     /// / that found nothing reusable.
     pub cache_hits: u64,
@@ -239,6 +251,10 @@ impl ServeStats {
             ("first_decode_us_p99", Json::num(self.first_decode_us_p99)),
             ("prefills", u(self.prefills)),
             ("prefilled_tokens", u(self.prefilled_tokens)),
+            ("prefill_chunks", u(self.prefill_chunks)),
+            ("queue_depth", u(self.queue_depth)),
+            ("decode_stall_us_p50", Json::num(self.decode_stall_us_p50)),
+            ("decode_stall_us_p99", Json::num(self.decode_stall_us_p99)),
             ("cache_hits", u(self.cache_hits)),
             ("cache_misses", u(self.cache_misses)),
             ("cache_inserts", u(self.cache_inserts)),
@@ -302,6 +318,10 @@ impl ServeStats {
             first_decode_us_p99: f("first_decode_us_p99"),
             prefills: u("prefills"),
             prefilled_tokens: u("prefilled_tokens"),
+            prefill_chunks: u("prefill_chunks"),
+            queue_depth: u("queue_depth"),
+            decode_stall_us_p50: f("decode_stall_us_p50"),
+            decode_stall_us_p99: f("decode_stall_us_p99"),
             cache_hits: u("cache_hits"),
             cache_misses: u("cache_misses"),
             cache_inserts: u("cache_inserts"),
@@ -364,6 +384,8 @@ impl ServeStats {
             out.steps += s.steps;
             out.prefills += s.prefills;
             out.prefilled_tokens += s.prefilled_tokens;
+            out.prefill_chunks += s.prefill_chunks;
+            out.queue_depth += s.queue_depth;
             out.cache_hits += s.cache_hits;
             out.cache_misses += s.cache_misses;
             out.cache_inserts += s.cache_inserts;
@@ -386,6 +408,8 @@ impl ServeStats {
         out.step_us_p99 = by_step(|s| s.step_us_p99);
         out.repack_us_p50 = by_step(|s| s.repack_us_p50);
         out.repack_us_p99 = by_step(|s| s.repack_us_p99);
+        out.decode_stall_us_p50 = by_step(|s| s.decode_stall_us_p50);
+        out.decode_stall_us_p99 = by_step(|s| s.decode_stall_us_p99);
         out.lane_occupancy = by_step(|s| s.lane_occupancy);
         out.step_width_mean = by_step(|s| s.step_width_mean);
         out.ttft_us_p50 = by_req(|s| s.ttft_us_p50);
@@ -426,6 +450,7 @@ impl ServeStats {
         counter("engine_steps", self.steps);
         counter("prefills", self.prefills);
         counter("prefilled_tokens", self.prefilled_tokens);
+        counter("prefill_chunks", self.prefill_chunks);
         counter("cache_hits", self.cache_hits);
         counter("cache_misses", self.cache_misses);
         counter("cache_inserts", self.cache_inserts);
@@ -448,6 +473,7 @@ impl ServeStats {
         gauge("step_width_mean", self.step_width_mean);
         gauge("state_bytes", self.state_bytes as f64);
         gauge("cache_resident_bytes", self.cache_resident_bytes as f64);
+        gauge("queue_depth", self.queue_depth as f64);
         let mut quant = |name: &str, series: &[(&str, f64)]| {
             out.push_str(&format!("# TYPE hla_{name}_us summary\n"));
             for (q, v) in series {
@@ -504,6 +530,10 @@ impl ServeStats {
             ],
         );
         quant("repack", &[("0.5", self.repack_us_p50), ("0.99", self.repack_us_p99)]);
+        quant(
+            "decode_stall",
+            &[("0.5", self.decode_stall_us_p50), ("0.99", self.decode_stall_us_p99)],
+        );
         out
     }
 }
@@ -530,6 +560,10 @@ pub struct LiveStats {
     pub width_steps: Counter,
     pub prefills: Counter,
     pub prefilled_tokens: Counter,
+    /// Budgeted prefill window advances (one per cursor visit).
+    pub prefill_chunks: Counter,
+    /// Waiting requests at the engine (gauge — set once per cycle).
+    pub queue_depth: Counter,
     pub bucket_grows: Counter,
     pub bucket_shrinks: Counter,
     // gauges mirrored from subsystems that own their accounting
@@ -555,6 +589,9 @@ pub struct LiveStats {
     pub ttft_warm_hist: SharedHistogram,
     pub ttft_cold_hist: SharedHistogram,
     pub repack_hist: SharedHistogram,
+    /// Gap between consecutive batched decode steps while decode-ready
+    /// lanes existed (the interleaving headline — bench E22).
+    pub decode_stall_hist: SharedHistogram,
 }
 
 impl Default for LiveStats {
@@ -576,6 +613,8 @@ impl LiveStats {
             width_steps: Counter::new(),
             prefills: Counter::new(),
             prefilled_tokens: Counter::new(),
+            prefill_chunks: Counter::new(),
+            queue_depth: Counter::new(),
             bucket_grows: Counter::new(),
             bucket_shrinks: Counter::new(),
             state_bytes: Counter::new(),
@@ -599,6 +638,7 @@ impl LiveStats {
             ttft_warm_hist: SharedHistogram::new(),
             ttft_cold_hist: SharedHistogram::new(),
             repack_hist: SharedHistogram::new(),
+            decode_stall_hist: SharedHistogram::new(),
         }
     }
 
@@ -638,6 +678,7 @@ impl LiveStats {
         let warm = hist(rs, |r| &r.ttft_warm_hist);
         let cold = hist(rs, |r| &r.ttft_cold_hist);
         let repack = hist(rs, |r| &r.repack_hist);
+        let stall = hist(rs, |r| &r.decode_stall_hist);
         let elapsed_s = rs
             .iter()
             .map(|r| r.started.elapsed().as_secs_f64())
@@ -670,6 +711,10 @@ impl LiveStats {
             first_decode_us_p99: first_decode.percentile_us(99.0),
             prefills: sum(rs, |r| &r.prefills),
             prefilled_tokens: sum(rs, |r| &r.prefilled_tokens),
+            prefill_chunks: sum(rs, |r| &r.prefill_chunks),
+            queue_depth: sum(rs, |r| &r.queue_depth),
+            decode_stall_us_p50: stall.percentile_us(50.0),
+            decode_stall_us_p99: stall.percentile_us(99.0),
             cache_hits: sum(rs, |r| &r.cache_hits),
             cache_misses: sum(rs, |r| &r.cache_misses),
             cache_inserts: sum(rs, |r| &r.cache_inserts),
@@ -722,6 +767,8 @@ mod tests {
         s.width_steps.add(150);
         s.prefills.add(3);
         s.prefilled_tokens.add(90);
+        s.prefill_chunks.add(12);
+        s.queue_depth.set(5);
         s.cache_hits.add(2);
         s.cache_misses.add(1);
         s.cache_hit_tokens.add(64);
@@ -743,6 +790,7 @@ mod tests {
             s.prefill_hist.record_us(3_000.0);
             s.first_decode_hist.record_us(1_000.0);
             s.ttft_cold_hist.record_us(6_000.0);
+            s.decode_stall_hist.record_us(700.0);
         }
         s
     }
@@ -755,6 +803,9 @@ mod tests {
         assert_eq!(s.tokens_out, 120);
         assert_eq!(s.steps, 50);
         assert_eq!(s.prefilled_tokens, 90);
+        assert_eq!(s.prefill_chunks, 12);
+        assert_eq!(s.queue_depth, 5);
+        assert!(s.decode_stall_us_p50 > 0.0, "stall histogram surfaces");
         assert!((s.lane_occupancy - 100.0 / 200.0).abs() < 1e-12);
         assert!((s.step_width_mean - 3.0).abs() < 1e-12);
         assert_eq!(s.repacks, 50);

@@ -64,6 +64,11 @@ pub enum Stage {
     Failover = 8,
     /// Session migrated between replicas (instant; detail = new home).
     Migrate = 9,
+    /// One budgeted window of a parked prompt ingestion (detail = tokens
+    /// consumed this window).  Budget mode emits these instead of one
+    /// aggregate [`Stage::Prefill`] span, so a timeline shows the scan
+    /// interleaving with decode steps.
+    PrefillChunk = 10,
 }
 
 impl Stage {
@@ -79,6 +84,7 @@ impl Stage {
             Stage::Relay => "relay",
             Stage::Failover => "failover",
             Stage::Migrate => "migrate",
+            Stage::PrefillChunk => "prefill_chunk",
         }
     }
 
@@ -94,6 +100,7 @@ impl Stage {
             7 => Stage::Relay,
             8 => Stage::Failover,
             9 => Stage::Migrate,
+            10 => Stage::PrefillChunk,
             _ => return None,
         })
     }
@@ -110,6 +117,7 @@ impl Stage {
             Stage::Relay,
             Stage::Failover,
             Stage::Migrate,
+            Stage::PrefillChunk,
         ]
         .into_iter()
         .find(|v| v.name() == s)

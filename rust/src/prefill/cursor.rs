@@ -1,0 +1,271 @@
+//! Resumable prefill: the admission-time scan parked between engine
+//! cycles and advanced in budgeted window cuts.
+//!
+//! A monolithic [`Prefiller::ingest_lane`] stalls every decode lane in
+//! the replica for the length of the prompt.  A [`PrefillCursor`] splits
+//! the same ingestion into *windows* — fixed, position-deterministic cuts
+//! of the prompt — so the engine can consume `--prefill-budget` tokens of
+//! prompt per cycle and give the batched decode step the rest of the
+//! cycle back (Sarathi-style stall-free batching; the chunk monoids make
+//! the partial-prompt state exact, so nothing is approximated).
+//!
+//! Exactness contract: the bit-exact end state of a scan ingestion
+//! depends only on the *sequence of window cuts* fed to
+//! [`advance`](super::advance) (the intra-window chunking is fixed by
+//! `PrefillCfg::chunk`), not on how many windows run per engine cycle.
+//! The cursor therefore fixes its cut quantum at creation:
+//!
+//! * [`Prefiller::cursor_cached`] — quantum = `cache.chunk()`, cuts at
+//!   absolute chunk-aligned positions, fresh boundary states inserted on
+//!   the way: *exactly* the segmentation [`Prefiller::ingest_lane_cached`]
+//!   has always used, so a budgeted ingest is bit-identical to the
+//!   monolithic one and warm stays byte-identical to cold by
+//!   construction (both entry points now drive this cursor).
+//! * [`Prefiller::cursor`] — uncached, quantum supplied by the caller
+//!   (the engine passes the budget).  Different budgets are different
+//!   segmentations of the same exact math — like the `no_cache` opt-out
+//!   path, greedy streams are identical to the monolithic scan and
+//!   seeded ones distribution-identical (f32 reassociation only;
+//!   `rust/tests/interleave_differential.rs` pins both claims).
+//!
+//! The cursor owns its [`ModelState`] and bookkeeping only; each advance
+//! borrows the [`Prefiller`] (and the cache, when attached), so a lane
+//! can hold its cursor across cycles without borrowing the engine.
+
+use anyhow::{ensure, Result};
+
+use crate::cache::PrefixCache;
+use crate::model::ModelState;
+use crate::tensor::Tensor;
+
+use super::{advance, CacheOutcome, Prefiller};
+
+/// A partially-ingested prompt: scan state plus the window bookkeeping
+/// needed to resume exactly where the last engine cycle stopped.
+pub struct PrefillCursor {
+    state: ModelState,
+    prompt: Vec<u8>,
+    /// Next prompt position to ingest (everything before it is folded
+    /// into `state`).
+    pos: usize,
+    /// Ingestion target: `prompt.len() - 1`.  The final prompt token
+    /// stays with the lane so the first sampled token flows through the
+    /// unchanged batched decode path.
+    consumed: usize,
+    /// Fixed cut quantum: every advance stops at the next multiple of
+    /// this (or at `consumed`), independent of the per-cycle budget.
+    window: usize,
+    /// Insert fresh `window`-aligned boundary states into the prefix
+    /// cache as the scan passes them (the cached-segmentation mode).
+    cached: bool,
+    outcome: CacheOutcome,
+    /// The final boundary's serialization, reused as the landing value
+    /// when the ingestion target is itself window-aligned.
+    final_parts: Option<Vec<Tensor>>,
+}
+
+impl std::fmt::Debug for PrefillCursor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefillCursor")
+            .field("pos", &self.pos)
+            .field("consumed", &self.consumed)
+            .field("window", &self.window)
+            .field("cached", &self.cached)
+            .finish()
+    }
+}
+
+impl Prefiller {
+    /// Park a fresh (or snapshot-resumed) lane's prompt behind a cursor
+    /// with caller-chosen window quantum — the uncached budget mode (the
+    /// engine passes its `--prefill-budget`; `window >= prompt.len()`
+    /// reproduces the monolithic single-advance segmentation exactly).
+    pub fn cursor(
+        &self,
+        resume: Option<&[Tensor]>,
+        prompt: &[u8],
+        window: usize,
+    ) -> Result<PrefillCursor> {
+        ensure!(prompt.len() >= 2, "prompt of {} token(s): nothing to prefill", prompt.len());
+        let mc = &self.model.cfg;
+        let mut state = ModelState::new(mc);
+        if let Some(parts) = resume {
+            state.load_components(mc, parts)?;
+        }
+        Ok(PrefillCursor {
+            state,
+            prompt: prompt.to_vec(),
+            pos: 0,
+            consumed: prompt.len() - 1,
+            window: window.max(1),
+            cached: false,
+            outcome: CacheOutcome::default(),
+            final_parts: None,
+        })
+    }
+
+    /// Park a fresh lane's prompt behind a cache-attached cursor: quantum
+    /// = `cache.chunk()`, scan seeded from the longest cached strict
+    /// prefix, fresh boundaries contributed as the windows complete —
+    /// the identical segmentation (and therefore identical bits) as
+    /// [`Prefiller::ingest_lane_cached`], which now drives this cursor
+    /// to completion in one call.
+    pub fn cursor_cached(&self, cache: &PrefixCache, prompt: &[u8]) -> Result<PrefillCursor> {
+        ensure!(prompt.len() >= 2, "prompt of {} token(s): nothing to prefill", prompt.len());
+        let mc = &self.model.cfg;
+        let mut state = ModelState::new(mc);
+        let mut pos = 0usize;
+        let mut outcome = CacheOutcome::default();
+        if let Some((depth, parts)) = cache.lookup(prompt) {
+            state.load_components(mc, &parts)?;
+            pos = depth;
+            outcome.hit_tokens = depth;
+        }
+        Ok(PrefillCursor {
+            state,
+            prompt: prompt.to_vec(),
+            pos,
+            consumed: prompt.len() - 1,
+            window: cache.chunk(),
+            cached: true,
+            outcome,
+            final_parts: None,
+        })
+    }
+}
+
+impl PrefillCursor {
+    /// Consume whole windows until at least `budget` tokens of prompt
+    /// have been ingested this call (or the cursor is done).  Always
+    /// makes progress: the first window runs even if it exceeds the
+    /// budget, so a tiny budget still terminates.  Returns the number of
+    /// prompt tokens consumed by this call.
+    ///
+    /// `cache` must be the cursor's creating cache for a
+    /// [`Prefiller::cursor_cached`] cursor (boundary inserts land
+    /// there); pass `None` for an uncached cursor.
+    pub fn advance_budget(
+        &mut self,
+        pf: &Prefiller,
+        cache: Option<&PrefixCache>,
+        budget: usize,
+    ) -> Result<usize> {
+        let mc = &pf.model.cfg;
+        let mut used = 0usize;
+        while self.pos < self.consumed && (used == 0 || used < budget) {
+            let next = ((self.pos / self.window + 1) * self.window).min(self.consumed);
+            advance(&pf.model, &mut self.state, &self.prompt[self.pos..next], &pf.cfg);
+            used += next - self.pos;
+            self.pos = next;
+            if self.cached && self.pos % self.window == 0 {
+                // a boundary state fresh off the scan: share it forward
+                let parts = self.state.to_components(mc)?;
+                if let Some(cache) = cache {
+                    if cache.insert(&self.prompt[..self.pos], &parts)? {
+                        self.outcome.inserted += 1;
+                    }
+                }
+                if self.pos == self.consumed {
+                    self.final_parts = Some(parts);
+                }
+            }
+        }
+        Ok(used)
+    }
+
+    /// Has the full ingestion target been consumed?
+    pub fn done(&self) -> bool {
+        self.pos >= self.consumed
+    }
+
+    /// Next prompt position to ingest.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Total ingestion target (`prompt.len() - 1`).
+    pub fn target(&self) -> usize {
+        self.consumed
+    }
+
+    /// Prompt tokens still to ingest.
+    pub fn remaining(&self) -> usize {
+        self.consumed - self.pos
+    }
+
+    /// Prompt tokens skipped by the creating cache lookup (0 = cold or
+    /// uncached) — known at creation, for the admission-time
+    /// `cache_lookup` instant event.
+    pub fn hit_tokens(&self) -> usize {
+        self.outcome.hit_tokens
+    }
+
+    /// Land the finished ingestion: the post-prompt component tensors,
+    /// the tokens consumed, and the cache outcome.  Errors if called
+    /// before [`PrefillCursor::done`].
+    pub fn finish(mut self, pf: &Prefiller) -> Result<(Vec<Tensor>, usize, CacheOutcome)> {
+        ensure!(
+            self.done(),
+            "prefill cursor finished early at {}/{} tokens",
+            self.pos,
+            self.consumed
+        );
+        let parts = match self.final_parts.take() {
+            Some(p) => p,
+            None => self.state.to_components(&pf.model.cfg)?,
+        };
+        Ok((parts, self.consumed, self.outcome))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::PrefillCfg;
+    use crate::testing::fixtures;
+
+    #[test]
+    fn budget_semantics_always_progress_and_stop_on_target() {
+        let s = fixtures::ModelShape::default();
+        let model = fixtures::build_model_full("hla2", &s, 11);
+        let pf = super::Prefiller::new(model, PrefillCfg::scan(4, 1)).unwrap();
+        let prompt: Vec<u8> = (0..23u8).collect();
+        // window 8, budget 3: each call still consumes one whole window
+        let mut cur = pf.cursor(None, &prompt, 8).unwrap();
+        let mut cuts = vec![];
+        while !cur.done() {
+            let used = cur.advance_budget(&pf, None, 3).unwrap();
+            assert!(used > 0, "every call makes progress");
+            cuts.push(cur.position());
+        }
+        // cuts land at absolute window multiples, then the target
+        assert_eq!(cuts, vec![8, 16, 22]);
+        let (_, consumed, outcome) = cur.finish(&pf).unwrap();
+        assert_eq!(consumed, prompt.len() - 1);
+        assert_eq!(outcome.hit_tokens, 0);
+        // a big budget crosses several windows in one call
+        let mut cur = pf.cursor(None, &prompt, 4).unwrap();
+        assert_eq!(cur.advance_budget(&pf, None, 9).unwrap(), 12);
+        assert_eq!(cur.remaining(), 10);
+    }
+
+    #[test]
+    fn whole_prompt_window_is_one_advance() {
+        let s = fixtures::ModelShape::default();
+        let model = fixtures::build_model_full("ahla", &s, 5);
+        let pf = super::Prefiller::new(model, PrefillCfg::scan(8, 1)).unwrap();
+        let prompt: Vec<u8> = (0..17u8).collect();
+        let mut cur = pf.cursor(None, &prompt, prompt.len()).unwrap();
+        assert_eq!(cur.advance_budget(&pf, None, usize::MAX).unwrap(), 16);
+        assert!(cur.done());
+        let (parts, consumed, _) = cur.finish(&pf).unwrap();
+        let (mono, mono_consumed) = pf.ingest_lane(None, &prompt).unwrap();
+        assert_eq!(consumed, mono_consumed);
+        for (a, b) in parts.iter().zip(&mono) {
+            let (ab, bb): (Vec<u32>, Vec<u32>) = (
+                a.data.iter().map(|v| v.to_bits()).collect(),
+                b.data.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(ab, bb, "single-window cursor == monolithic ingest, bitwise");
+        }
+    }
+}

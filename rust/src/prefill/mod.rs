@@ -24,6 +24,11 @@
 //!   the same landing through the shared-prefix radix cache
 //!   ([`crate::cache`]): the scan seeds from the longest cached boundary
 //!   and contributes the fresh boundaries it computes.
+//! * [`PrefillCursor`] ([`cursor`]) — the same two landings split into
+//!   budgeted, resumable window advances, so the engine can interleave a
+//!   long prompt's ingestion with decode steps (`--prefill-budget`).
+//!   Both `ingest_lane*` entry points drive a cursor to completion in
+//!   one call, so the budgeted and monolithic paths cannot drift.
 //!
 //! Exactness: the per-head scans ([`scan`]) fold the lane's incoming state
 //! in as the scan's left-most segment (resume-from-`SessionSnapshot` as
@@ -33,7 +38,10 @@
 //! `rust/tests/prefill_differential.rs`).  [`PrefillMode::Serial`] keeps
 //! the step-by-step path as the differential-testing baseline.
 
+pub mod cursor;
 pub mod scan;
+
+pub use cursor::PrefillCursor;
 
 use anyhow::{ensure, Result};
 
@@ -335,15 +343,12 @@ impl Prefiller {
         resume: Option<&[Tensor]>,
         prompt: &[u8],
     ) -> Result<(Vec<Tensor>, usize)> {
-        ensure!(prompt.len() >= 2, "prompt of {} token(s): nothing to prefill", prompt.len());
-        let mc = &self.model.cfg;
-        let mut state = ModelState::new(mc);
-        if let Some(parts) = resume {
-            state.load_components(mc, parts)?;
-        }
-        let consumed = prompt.len() - 1;
-        advance(&self.model, &mut state, &prompt[..consumed], &self.cfg);
-        Ok((state.to_components(mc)?, consumed))
+        // window >= prompt.len(): a single advance over prompt[..len-1],
+        // the historical monolithic segmentation, now via the cursor
+        let mut cur = self.cursor(resume, prompt, prompt.len())?;
+        cur.advance_budget(self, None, usize::MAX)?;
+        let (parts, consumed, _) = cur.finish(self)?;
+        Ok((parts, consumed))
     }
 
     /// [`Prefiller::ingest_lane`] through the shared-prefix cache, for
@@ -366,41 +371,11 @@ impl Prefiller {
         cache: &PrefixCache,
         prompt: &[u8],
     ) -> Result<(Vec<Tensor>, usize, CacheOutcome)> {
-        ensure!(prompt.len() >= 2, "prompt of {} token(s): nothing to prefill", prompt.len());
-        let mc = &self.model.cfg;
-        let consumed = prompt.len() - 1;
-        let mut state = ModelState::new(mc);
-        let mut pos = 0usize;
-        let mut outcome = CacheOutcome::default();
-        if let Some((depth, parts)) = cache.lookup(prompt) {
-            state.load_components(mc, &parts)?;
-            pos = depth;
-            outcome.hit_tokens = depth;
+        let mut cur = self.cursor_cached(cache, prompt)?;
+        while !cur.done() {
+            cur.advance_budget(self, Some(cache), usize::MAX)?;
         }
-        let w = cache.chunk();
-        // reuse the final boundary's serialization as the return value
-        // when the head length is itself chunk-aligned
-        let mut final_parts = None;
-        while pos < consumed {
-            let next = ((pos / w + 1) * w).min(consumed);
-            advance(&self.model, &mut state, &prompt[pos..next], &self.cfg);
-            pos = next;
-            if pos % w == 0 {
-                // a boundary state fresh off the scan: share it forward
-                let parts = state.to_components(mc)?;
-                if cache.insert(&prompt[..pos], &parts)? {
-                    outcome.inserted += 1;
-                }
-                if pos == consumed {
-                    final_parts = Some(parts);
-                }
-            }
-        }
-        let parts = match final_parts {
-            Some(p) => p,
-            None => state.to_components(mc)?,
-        };
-        Ok((parts, consumed, outcome))
+        cur.finish(self)
     }
 }
 

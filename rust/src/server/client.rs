@@ -54,7 +54,30 @@ pub struct GenOpts {
     /// f64 round-trip).  Usually minted by the cluster front-end; set it
     /// here to correlate client-side calls with server spans.
     pub trace: Option<u64>,
+    /// Per-token streaming (the default and the historical behavior).
+    /// `false` sends `"stream": false`: the server buffers and the whole
+    /// completion arrives on the single done line — same bytes, one
+    /// read, no mid-stream state to resume if the connection drops.
+    pub stream: bool,
 }
+
+/// The server refused admission with its typed `overloaded` reply
+/// (`--max-queue` backpressure).  Carried inside the [`anyhow::Error`]
+/// chain so callers can downcast and retry instead of treating it as a
+/// hard failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverloadedError {
+    /// In-flight requests the server observed when it refused.
+    pub queue_depth: u64,
+}
+
+impl std::fmt::Display for OverloadedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server overloaded ({} requests in flight); retry later", self.queue_depth)
+    }
+}
+
+impl std::error::Error for OverloadedError {}
 
 impl Default for GenOpts {
     fn default() -> Self {
@@ -69,6 +92,7 @@ impl Default for GenOpts {
             spec: false,
             no_cache: false,
             trace: None,
+            stream: true,
         }
     }
 }
@@ -189,6 +213,9 @@ impl Client {
         if let Some(t) = opts.trace {
             req.push(("trace_id", Json::str(format!("{t:016x}"))));
         }
+        if !opts.stream {
+            req.push(("stream", Json::Bool(false)));
+        }
         let start = Instant::now();
         writeln!(self.writer, "{}", Json::obj(req))?;
 
@@ -202,6 +229,13 @@ impl Client {
             }
             let msg = Json::parse(&line).map_err(|e| anyhow!("bad server line: {e}"))?;
             if let Some(err) = msg.get("error").and_then(Json::as_str) {
+                // the typed backpressure refusal rides the error line with
+                // extra fields; surface it as a downcastable error
+                if msg.get("overloaded").and_then(Json::as_bool) == Some(true) {
+                    let depth =
+                        msg.get("queue_depth").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                    return Err(OverloadedError { queue_depth: depth }.into());
+                }
                 return Err(anyhow!("server error: {err}"));
             }
             if let Some(tok) = msg.get("token").and_then(Json::as_i64) {
@@ -211,6 +245,10 @@ impl Client {
                 tokens.push(tok as u8);
             }
             if msg.get("done").and_then(Json::as_bool) == Some(true) {
+                // buffered mode: the done line carries the whole completion
+                if let Some(arr) = msg.get("tokens").and_then(Json::as_arr) {
+                    tokens = arr.iter().filter_map(Json::as_f64).map(|f| f as u8).collect();
+                }
                 let finish =
                     msg.get("finish").and_then(Json::as_str).unwrap_or("unknown").to_string();
                 let resumed = msg.get("resumed").and_then(Json::as_bool).unwrap_or(false);

@@ -8,6 +8,26 @@
 //!      "session": 123, "resumed": false}`     (final; session fields only
 //!                                              when a session id was sent)
 //!
+//! Streaming modes (`"stream"`, optional):
+//!   * absent or `true` — per-token lines followed by the done line, as
+//!     above (the historical wire behavior; existing clients and the
+//!     cluster front-end relay are unaffected).  Streamed requests ride
+//!     a *bounded* event channel: a client that stops reading (or hangs
+//!     up) eventually fills it, the engine's non-blocking send fails,
+//!     and the lane aborts instead of buffering without limit — one
+//!     slow reader cannot stall the batch or grow the heap.
+//!   * `false` — buffered: no per-token lines; the single done line
+//!     additionally carries `"text"` (the full completion) and
+//!     `"tokens"` (the byte values).  Same bytes, one write.
+//!
+//! Admission control: when the router is serving with a bounded queue
+//! (`--max-queue N`), a request arriving with N requests already in
+//! flight is refused with the one-line typed reply
+//! `{"error": "...", "overloaded": true, "queue_depth": <n>}` and
+//! nothing is generated.  Completions drain in-flight immediately
+//! (drain-before-reject), so the refusal is momentary backpressure —
+//! clients retry, ideally with jitter.
+//!
 //! Session extension (requires serving with a session store, see
 //! [`serve_sessions`]; each field is optional):
 //!   * `"session": <id>` — tag the request; on completion the lane's
@@ -114,13 +134,20 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::router::Router;
-use crate::coordinator::{FinishReason, GenRequest};
+use crate::coordinator::router::{Router, SubmitError};
+use crate::coordinator::{EventSink, FinishReason, GenRequest, TokenEvent};
 use crate::metrics::trace::{export_rings_json, Tracer};
 use crate::metrics::{LiveStats, ServeStats};
 use crate::model::sampler::SamplerCfg;
 use crate::session::SessionStore;
 use crate::util::json::Json;
+
+/// Event-channel depth for streamed requests.  Generously sized so a
+/// momentarily slow reader (GC pause, scheduler hiccup) never trips it,
+/// yet bounded so a reader that has genuinely stopped draining turns
+/// into a failed engine-side send — and an aborted lane — instead of an
+/// unbounded heap of undelivered tokens.
+const STREAM_EVENT_BUFFER: usize = 256;
 
 /// The observability handles a server exposes: one live registry per
 /// engine replica (index-aligned with the router's replicas).  The
@@ -442,9 +469,26 @@ fn handle_request(
         resume_requested = true;
     }
 
-    let (tx, rx) = std::sync::mpsc::channel();
+    // `"stream": false` opts into the buffered single-reply mode; absent
+    // or true is the historical per-token wire behavior.
+    let stream = req.get("stream").and_then(Json::as_bool).unwrap_or(true);
+    // Streamed requests get a bounded event channel (slow-reader
+    // backpressure: the engine aborts the lane rather than buffer for a
+    // reader that cannot keep up).  Buffered requests keep an unbounded
+    // channel — this thread drains it eagerly, no socket in the loop.
+    let (sink, rx): (EventSink, std::sync::mpsc::Receiver<TokenEvent>) = if stream {
+        let (tx, rx) = std::sync::mpsc::sync_channel(STREAM_EVENT_BUFFER);
+        (tx.into(), rx)
+    } else {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (tx.into(), rx)
+    };
+    // the disconnect path: a failed socket write flips this flag and the
+    // engine frees the lane at its next cycle (mid-prefill included)
+    let cancel = Arc::new(AtomicBool::new(false));
     let id = router.fresh_id();
-    let mut greq = GenRequest::new(id, prompt, max_tokens, sampler, tx);
+    let mut greq =
+        GenRequest::new(id, prompt, max_tokens, sampler, sink).with_cancel(cancel.clone());
     if let Some(sid) = session {
         greq = greq.with_session(sid);
     }
@@ -471,22 +515,50 @@ fn handle_request(
             return Err(anyhow!("trace_id must be a 16-hex-digit string, got {other}"));
         }
     }
-    let replica = router.submit(greq, session)?;
+    let replica = match router.try_submit(greq, session) {
+        Ok(idx) => idx,
+        Err(SubmitError::Overloaded { queue_depth }) => {
+            // typed backpressure, not a generic error: clients distinguish
+            // "retry later" from "your request is malformed"
+            let msg = Json::obj(vec![
+                ("error", Json::str(format!(
+                    "overloaded: {queue_depth} requests in flight"
+                ))),
+                ("overloaded", Json::Bool(true)),
+                ("queue_depth", Json::num(queue_depth as f64)),
+            ]);
+            writeln!(writer, "{msg}")?;
+            return Ok(());
+        }
+        Err(e @ SubmitError::ReplicaGone(_)) => return Err(e.into()),
+    };
 
     let mut n = 0usize;
     let mut finish = FinishReason::Aborted;
     // ground truth from the engine: a requested resume can still degrade
     // to a fresh lane (snapshot evicted/incompatible by admission time)
     let mut resumed = false;
+    let mut body: Vec<u8> = vec![];
+    let mut client_gone = false;
     while let Ok(ev) = rx.recv() {
         if let Some(tok) = ev.token {
             n += 1;
-            let text = String::from_utf8_lossy(&[tok]).to_string();
-            let msg = Json::obj(vec![
-                ("token", Json::num(tok as f64)),
-                ("text", Json::str(text)),
-            ]);
-            writeln!(writer, "{msg}")?;
+            if !stream {
+                body.push(tok);
+            } else if !client_gone {
+                let text = String::from_utf8_lossy(&[tok]).to_string();
+                let msg = Json::obj(vec![
+                    ("token", Json::num(tok as f64)),
+                    ("text", Json::str(text)),
+                ]);
+                if writeln!(writer, "{msg}").is_err() {
+                    // the client hung up mid-stream: cancel the lane (the
+                    // engine frees it within a cycle) and keep draining the
+                    // channel so the final event still arrives
+                    cancel.store(true, Ordering::Relaxed);
+                    client_gone = true;
+                }
+            }
         }
         if ev.done {
             finish = ev.finish.unwrap_or(FinishReason::Aborted);
@@ -495,6 +567,11 @@ fn handle_request(
         }
     }
     router.complete(replica);
+    if client_gone {
+        // nobody is listening for the done line; the accounting above is
+        // what mattered
+        return Ok(());
+    }
     let fin = match finish {
         FinishReason::Length => "length",
         FinishReason::Eos => "eos",
@@ -505,6 +582,11 @@ fn handle_request(
         ("finish", Json::str(fin)),
         ("n", Json::num(n as f64)),
     ];
+    if !stream {
+        // buffered mode: the whole completion rides the done line
+        done.push(("text", Json::str(String::from_utf8_lossy(&body).to_string())));
+        done.push(("tokens", Json::Arr(body.iter().map(|&b| Json::num(b as f64)).collect())));
+    }
     if let Some(sid) = session {
         done.push(("session", Json::num(sid as f64)));
         done.push(("resumed", Json::Bool(resumed)));

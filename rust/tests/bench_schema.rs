@@ -24,11 +24,16 @@ fn committed_bench_reports_validate() {
             found.push(name.to_string());
         }
     }
-    // the serving, observability, cluster, and roofline trajectories ship
-    // with the repo
-    for want in
-        ["BENCH_e8.json", "BENCH_e18.json", "BENCH_e19.json", "BENCH_e20.json", "BENCH_e21.json"]
-    {
+    // the serving, observability, cluster, roofline, and interleaving
+    // trajectories ship with the repo
+    for want in [
+        "BENCH_e8.json",
+        "BENCH_e18.json",
+        "BENCH_e19.json",
+        "BENCH_e20.json",
+        "BENCH_e21.json",
+        "BENCH_e22.json",
+    ] {
         assert!(found.iter().any(|n| n == want), "missing {want} (found {found:?})");
     }
 }

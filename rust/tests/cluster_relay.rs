@@ -13,7 +13,12 @@
 //!   suppression prefix counts every non-terminal line, not just tokens);
 //! * a resume whose snapshot cannot follow it to a survivor — desk empty,
 //!   or the survivor silently degrades to a fresh lane — must surface an
-//!   error, never splice a fresh tail onto the already-delivered prefix.
+//!   error, never splice a fresh tail onto the already-delivered prefix;
+//! * both replica streaming modes relay unchanged: per-token lines are
+//!   forwarded as they arrive (and count toward the failover suppression
+//!   prefix), while a `"stream": false` request produces exactly one
+//!   terminal line — with nothing delivered before it, a failover replay
+//!   suppresses nothing.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -126,6 +131,23 @@ fn handle_fake_conn(stream: TcpStream, cfg: FakeCfg) {
             let _ = writeln!(writer, "{{\"replicas\":1,\"stats\":{{\"tokens_out\":4}}}}");
         } else if line.contains("\"prompt\"") {
             let gen = if line.contains("\"resume\"") { cfg.resume } else { cfg.gen };
+            if line.contains("\"stream\": false") {
+                // buffered mode: a replica emits no non-terminal lines —
+                // the whole completion on one line, or (the scripted
+                // death) nothing at all before the socket drops
+                match gen {
+                    Gen::Full(n) => {
+                        let toks: Vec<String> = (1..=n).map(|i| i.to_string()).collect();
+                        let _ = writeln!(
+                            writer,
+                            "{{\"done\":true,\"finish\":\"length\",\"tokens\":[{}]}}",
+                            toks.join(",")
+                        );
+                    }
+                    Gen::Cut(_) | Gen::Flood => return,
+                }
+                continue;
+            }
             if run_gen(&mut writer, gen).is_err() {
                 return;
             }
@@ -337,4 +359,50 @@ fn degraded_resume_on_survivor_errors_instead_of_splicing() {
     );
     assert_eq!(turn2.len(), 6, "NOTE + 2 + 2 relayed tokens + the error line: {turn2:?}");
     assert_eq!(fe.migrations.load(Ordering::Relaxed), 1, "the snapshot did migrate first");
+}
+
+#[test]
+fn streamed_relay_is_unchanged_by_an_explicit_stream_true() {
+    // `"stream": true` is the wire default spelled out; the router must
+    // relay the identical per-token line sequence either way
+    let a = fake(Gen::Full(4), Gen::Full(4), false);
+    let (fe_addr, _fe, _stop) = spawn_fake_frontend(vec![a]);
+    let explicit = request(&fe_addr, "{\"prompt\": \"x\", \"max_tokens\": 4, \"stream\": true}");
+    let implicit = request(&fe_addr, "{\"prompt\": \"x\", \"max_tokens\": 4}");
+    assert_eq!(explicit, implicit, "explicit stream:true must not change the relay");
+    let mut expect = vec![NOTE.to_string()];
+    expect.extend((1..=4).map(token_line));
+    expect.push(DONE.to_string());
+    assert_eq!(explicit, expect, "per-token lines relay exactly as the replica sent them");
+}
+
+#[test]
+fn buffered_replies_relay_as_a_single_terminal_line() {
+    // the router never needs to know the mode: a buffered completion is
+    // just a terminal line, relayed untouched — no token-line synthesis,
+    // no duplication
+    let a = fake(Gen::Full(4), Gen::Full(4), false);
+    let (fe_addr, fe, _stop) = spawn_fake_frontend(vec![a]);
+    let lines = request(&fe_addr, "{\"prompt\": \"x\", \"max_tokens\": 4, \"stream\": false}");
+    assert_eq!(lines.len(), 1, "buffered mode is exactly one terminal line: {lines:?}");
+    assert!(
+        lines[0].contains("\"done\":true") && lines[0].contains("\"tokens\":[1,2,3,4]"),
+        "the buffered payload must pass through unchanged: {}",
+        lines[0]
+    );
+    assert_eq!(fe.failovers.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn buffered_failover_replays_to_exactly_one_terminal_line() {
+    // replica 0 dies before its buffered line, so the client holds a
+    // zero-line prefix: the replay on replica 1 suppresses nothing and
+    // the client still sees exactly one terminal line
+    let a = fake(Gen::Cut(2), Gen::Cut(2), false);
+    let b = fake(Gen::Full(4), Gen::Full(4), false);
+    let (fe_addr, fe, _stop) = spawn_fake_frontend(vec![a, b]);
+    let lines = request(&fe_addr, "{\"prompt\": \"x\", \"max_tokens\": 4, \"stream\": false}");
+    assert_eq!(lines.len(), 1, "one replayed terminal line, zero suppressed: {lines:?}");
+    assert!(lines[0].contains("\"tokens\":[1,2,3,4]"), "{}", lines[0]);
+    assert_eq!(fe.failovers.load(Ordering::Relaxed), 1, "the replica death is one failover");
 }

@@ -1,14 +1,24 @@
-//! Integration: TCP line-JSON server round-trip over the router.
+//! Integration: TCP line-JSON server round-trip over the router — plus
+//! the artifact-free streaming-protocol suite (streamed vs buffered
+//! byte-identity, mid-stream disconnect, the typed `overloaded` reply)
+//! on the fixture replica engine.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 
+use hla::cluster::spawn_fixture_engine;
 use hla::coordinator::router::{RoutePolicy, Router};
-use hla::coordinator::{spawn_engine, spawn_engine_full, EngineOpts, SchedPolicy};
+use hla::coordinator::{
+    spawn_engine, spawn_engine_full, EngineOpts, FinishReason, SchedPolicy, TokenEvent,
+};
 use hla::metrics::trace::write_chrome_trace;
 use hla::metrics::{LiveStats, TraceCfg, Tracer};
 use hla::prefill::PrefillCfg;
+use hla::server::client::{GenOpts, OverloadedError};
 use hla::server::{client::Client, serve, serve_full, ServeObs};
+use hla::session::SessionStore;
+use hla::testing::fixtures::{build_model_full, ModelShape};
+use hla::util::json::Json;
 
 fn have_artifacts() -> bool {
     std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).exists()
@@ -180,4 +190,188 @@ fn traced_server_streams_identical_and_serves_live_stats() {
     let doc = hla::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
     assert!(doc.get("traceEvents").unwrap().as_arr().unwrap().len() > prompts.len());
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Artifact-free server over the deterministic fixture replica engine;
+/// `max_queue` is the router's admission cap (0 = unbounded).  Returns
+/// the bound address plus the stop flag and both join handles.
+fn fixture_server(
+    max_queue: usize,
+) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>, std::thread::JoinHandle<()>) {
+    let model = build_model_full("hla2", &ModelShape::default(), 71);
+    let store = Arc::new(SessionStore::in_memory(8));
+    let stats = Arc::new(LiveStats::new());
+    let (tx, engine) = spawn_fixture_engine(model, store, stats);
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    router.set_capacity(max_queue);
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let server = std::thread::spawn(move || {
+        serve_full("127.0.0.1:0", router, None, None, stop2, move |addr| {
+            addr_tx.send(addr).unwrap();
+        })
+        .unwrap();
+    });
+    (addr_rx.recv().unwrap().to_string(), stop, server, engine)
+}
+
+#[test]
+fn streamed_and_buffered_replies_are_byte_identical() {
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, stop, server, engine) = fixture_server(0);
+    let mut client = Client::connect(&addr).unwrap();
+    // same prompt + seed, both wire modes: identical bytes by contract
+    let opts = GenOpts {
+        max_tokens: 24,
+        temperature: 0.9,
+        top_k: 8,
+        seed: Some(31),
+        ..GenOpts::default()
+    };
+    let streamed = client.generate_opts("stream differential", &opts).unwrap();
+    let buffered = client
+        .generate_opts("stream differential", &GenOpts { stream: false, ..opts.clone() })
+        .unwrap();
+    assert_eq!(streamed.tokens.len(), 24);
+    assert_eq!(buffered.tokens, streamed.tokens, "buffered reply must carry identical bytes");
+    assert_eq!(buffered.text, streamed.text);
+    assert_eq!(buffered.finish, streamed.finish);
+
+    // raw wire shape: `"stream": false` is exactly one line — done=true
+    // with the tokens array, no per-token lines ahead of it
+    let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+    writeln!(sock, r#"{{"prompt": "raw buffered", "max_tokens": 5, "stream": false}}"#).unwrap();
+    let mut line = String::new();
+    BufReader::new(sock.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let msg = Json::parse(&line).unwrap();
+    assert_eq!(msg.get("done").and_then(Json::as_bool), Some(true), "{line}");
+    assert!(msg.get("token").is_none(), "buffered mode must not emit token lines: {line}");
+    assert_eq!(msg.get("tokens").and_then(Json::as_arr).unwrap().len(), 5, "{line}");
+    assert!(msg.get("text").and_then(Json::as_str).is_some(), "{line}");
+    drop(sock);
+
+    drop(client);
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    engine.join().unwrap();
+}
+
+#[test]
+fn mid_stream_disconnect_aborts_without_leaking_the_slot() {
+    use std::io::{BufRead, BufReader, Write};
+    // capacity 1: if the aborted request leaked its in-flight slot, every
+    // later request would be refused — the retry loop below would spin out
+    let (addr, stop, server, engine) = fixture_server(1);
+
+    // a streaming client that reads two tokens and hangs up mid-stream
+    let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+    // enough tokens that the stream outlives the socket's send buffer:
+    // the server must hit the failed write, set the cancel flag, and
+    // drain — not wedge on the dead connection
+    writeln!(sock, r#"{{"prompt": "going away", "max_tokens": 2000}}"#).unwrap();
+    let mut rd = BufReader::new(sock.try_clone().unwrap());
+    for _ in 0..2 {
+        let mut line = String::new();
+        rd.read_line(&mut line).unwrap();
+        let msg = Json::parse(&line).unwrap();
+        assert!(msg.get("token").is_some(), "expected a token line, got {line}");
+    }
+    drop(rd);
+    drop(sock); // mid-stream hangup: the server must cancel + drain, not wedge
+
+    // the server stays healthy and the slot frees: a fresh request
+    // completes (tolerating the typed refusal while the abort drains)
+    let mut client = Client::connect(&addr).unwrap();
+    let mut tries = 0;
+    let done = loop {
+        match client.generate("after the hangup", 8, 0.0, None) {
+            Ok(c) => break c,
+            Err(e) if e.downcast_ref::<OverloadedError>().is_some() => {
+                tries += 1;
+                assert!(tries < 200, "aborted request never freed its slot");
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => panic!("unexpected error after disconnect: {e}"),
+        }
+    };
+    assert_eq!(done.tokens.len(), 8);
+    assert_eq!(done.finish, "length");
+
+    drop(client);
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
+    engine.join().unwrap();
+}
+
+#[test]
+fn overloaded_reply_is_typed_and_drains_before_reject() {
+    // a hand-driven replica: requests park until the test serves them, so
+    // the overload window is deterministic (no timing races)
+    let (tx, rx) = mpsc::channel();
+    let router = Arc::new(Router::new(vec![tx], RoutePolicy::RoundRobin));
+    router.set_capacity(1);
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop2 = stop.clone();
+    let server = std::thread::spawn(move || {
+        serve_full("127.0.0.1:0", router, None, None, stop2, move |addr| {
+            addr_tx.send(addr).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+
+    // A occupies the only slot; its handler parks on the silent replica
+    let addr_a = addr.clone();
+    let a = std::thread::spawn(move || {
+        let mut c = Client::connect(&addr_a).unwrap();
+        c.generate("first", 4, 0.0, None).unwrap()
+    });
+    let parked = rx.recv().unwrap();
+
+    // B is refused with the typed reply while A is in flight — and the
+    // refusal is an error *line*, not a dropped connection
+    let mut b = Client::connect(&addr).unwrap();
+    let err = b.generate("second", 4, 0.0, None).unwrap_err();
+    let over = err.downcast_ref::<OverloadedError>().expect("typed overloaded error");
+    assert_eq!(over.queue_depth, 1);
+
+    // drain-before-reject: serving A frees the slot, nothing was dropped
+    for i in 0..4u8 {
+        parked.events.send(TokenEvent::token(parked.id, i)).unwrap();
+    }
+    parked
+        .events
+        .send(TokenEvent::finished_resumed(parked.id, FinishReason::Length, false))
+        .unwrap();
+    let done_a = a.join().unwrap();
+    assert_eq!(done_a.tokens, vec![0, 1, 2, 3]);
+    assert_eq!(done_a.finish, "length");
+
+    // ... and B's retry (same connection) now admits and completes
+    let serve_b = std::thread::spawn(move || {
+        let parked = rx.recv().unwrap();
+        parked.events.send(TokenEvent::token(parked.id, 9)).unwrap();
+        parked
+            .events
+            .send(TokenEvent::finished_resumed(parked.id, FinishReason::Length, false))
+            .unwrap();
+    });
+    let done_b = loop {
+        match b.generate("second again", 4, 0.0, None) {
+            Ok(c) => break c,
+            Err(e) if e.downcast_ref::<OverloadedError>().is_some() => {
+                // A's handler may still be between done-event and complete()
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    };
+    assert_eq!(done_b.tokens, vec![9]);
+    serve_b.join().unwrap();
+
+    drop(b);
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap();
 }

@@ -1,0 +1,795 @@
+//! Scheduler-differential acceptance suite for chunked prefill/decode
+//! interleaving (`--prefill-budget`): a prompt ingested in budgeted
+//! window cuts that ride the decode cycle must land **bit-identical**
+//! state — and therefore byte-identical token streams — to the same
+//! cursor driven monolithically, across mixers, samplers, and every
+//! subsystem the scheduler composes with.  Runs artifact-free on the
+//! pure-Rust [`hla::testing::fixtures`] models, like the bucketing /
+//! prefix-cache / spec differential suites.
+//!
+//! Exactness ledger (see `prefill::cursor` for the contract):
+//! * A cursor fixes its cut quantum at creation, so the bit-exact end
+//!   state depends only on the window sequence — never on how many
+//!   windows run per engine cycle.  Budgeted-interleaved vs monolithic
+//!   same-window is therefore bitwise equal for **greedy AND seeded**
+//!   sampling; greedy streams additionally equal plain serial decode
+//!   (segmentation-independence of the greedy grid, already pinned for
+//!   scan-vs-serial).
+//! * Cached cursors cut at `cache.chunk()` multiples — the identical
+//!   segmentation `ingest_lane_cached` has always used — so budgeted
+//!   cached ingestion is bitwise equal to the monolithic cached path
+//!   and warm stays byte-identical to cold.
+//! * Composition: session detach/resume/fork read and seed the same
+//!   component tensors, spec rounds run on their own state between a
+//!   parked lane's chunks, `--decode-threads` decode is bitwise equal
+//!   to serial by the pool's own contract, and bucket churn moves a
+//!   parked lane's (dead-weight) slot without corrupting the landing.
+//!
+//! The harness below is the host-side twin of `EngineLoop`'s budgeted
+//! cycle: FIFO admissions park cursors, `run_prefill_round` deals one
+//! window per visit round-robin, landed lanes decode one token per
+//! cycle — the same arithmetic the engine runs, minus the threads.
+
+use hla::cache::{PrefixCache, PrefixCacheCfg};
+use hla::coordinator::interleave::{bounded_admissions, run_prefill_round, RoundRobin};
+use hla::coordinator::repack::{compaction_moves, identity_moves, remap_components};
+use hla::coordinator::{BucketSpec, BucketSwitch, BucketTracker};
+use hla::model::pool::DecodePool;
+use hla::model::sampler::{Sampler, SamplerCfg};
+use hla::model::{
+    slice_components, splice_components, zero_component_lane, ModelState, RustModel,
+};
+use hla::prefill::{advance, PrefillCfg, Prefiller, PrefillCursor};
+use hla::runtime::ModelCfg;
+use hla::session::SamplerState;
+use hla::spec::{DrafterKind, SpecCfg, SpecDecoder};
+use hla::tensor::Tensor;
+use hla::testing::fixtures::{build_model_full, random_prompt, ModelShape};
+use hla::util::rng::Rng;
+
+fn seeded(seed: u64) -> SamplerCfg {
+    SamplerCfg { temperature: 0.9, top_k: 20, seed }
+}
+
+/// Bit-level equality for state component tensors: a different chunking
+/// of the same scan must not perturb a single ULP.
+fn assert_state_bits_equal(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: component arity");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let xb: Vec<u32> = x.data.iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u32> = y.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb, "{what}: component {i} bits");
+    }
+}
+
+/// The reference the budgeted path is pinned to: the *same* cursor
+/// window driven to completion in one call.  Identical cut sequence by
+/// construction, so the landing must match bitwise however the budgeted
+/// run slices its cycles.
+fn monolithic_same_window(
+    pf: &Prefiller,
+    resume: Option<&[Tensor]>,
+    prompt: &[u8],
+    window: usize,
+) -> (Vec<Tensor>, usize) {
+    let mut cur = pf.cursor(resume, prompt, window).unwrap();
+    while !cur.done() {
+        cur.advance_budget(pf, None, usize::MAX).unwrap();
+    }
+    let (parts, consumed, _) = cur.finish(pf).unwrap();
+    (parts, consumed)
+}
+
+/// Decode `max_new` tokens from a landed component state; returns the
+/// stream, the post-decode components (the detach snapshot), and the
+/// last sampled-but-not-fed token.
+fn decode_from(
+    model: &RustModel,
+    parts: &[Tensor],
+    first: u8,
+    sampler: &mut Sampler,
+    max_new: usize,
+) -> (Vec<u8>, Vec<Tensor>, u8) {
+    let mc = &model.cfg;
+    let mut state = ModelState::new(mc);
+    state.load_components(mc, parts).unwrap();
+    let mut out = Vec::with_capacity(max_new);
+    let mut last = first;
+    while out.len() < max_new {
+        let logits = model.decode_step(&mut state, last);
+        let y = sampler.sample(&logits) as u8;
+        out.push(y);
+        last = y;
+    }
+    (out, state.to_components(mc).unwrap(), last)
+}
+
+/// Serial decode from scratch — the greedy-grid reference (greedy
+/// streams are segmentation-independent; seeded ones are pinned to the
+/// same-window reference instead).
+fn serial_stream(model: &RustModel, prompt: &[u8], scfg: &SamplerCfg, max_new: usize) -> Vec<u8> {
+    let mut state = ModelState::new(&model.cfg);
+    let mut sampler = Sampler::new(scfg.clone());
+    advance(model, &mut state, &prompt[..prompt.len() - 1], &PrefillCfg::serial());
+    let mut out = Vec::with_capacity(max_new);
+    let mut last = prompt[prompt.len() - 1];
+    while out.len() < max_new {
+        let logits = model.decode_step(&mut state, last);
+        let y = sampler.sample(&logits) as u8;
+        out.push(y);
+        last = y;
+    }
+    out
+}
+
+/// One lane of the interleaved harness: a parked cursor until landing,
+/// then a decoding state — `EngineLoop`'s lane phases, host-side.
+struct Lane {
+    req: usize,
+    cursor: Option<PrefillCursor>,
+    state: Option<ModelState>,
+    last: u8,
+    sampler: Sampler,
+    max_new: usize,
+    out: Vec<u8>,
+    landing: Vec<Tensor>,
+    hit_tokens: usize,
+}
+
+/// Everything a finished request leaves behind, for differential
+/// comparison: the stream, the prefill landing, the detach snapshot.
+struct RunOut {
+    stream: Vec<u8>,
+    landing: Vec<Tensor>,
+    detach: Vec<Tensor>,
+    last: u8,
+    sampler: SamplerState,
+    hit_tokens: usize,
+}
+
+/// Drive a staggered workload through the budgeted cycle: FIFO
+/// admissions park cursors (uncached window = `budget`, cached window =
+/// the cache chunk), `run_prefill_round` deals one window per visit,
+/// every landed lane decodes one token per cycle (optionally through a
+/// [`DecodePool`]).  Returns one [`RunOut`] per request.
+fn run_interleaved(
+    model: &RustModel,
+    pf: &Prefiller,
+    cache: Option<&PrefixCache>,
+    requests: &[(usize, Vec<u8>, usize)],
+    budget: usize,
+    n_lanes: usize,
+    scfg_of: &dyn Fn(u64) -> SamplerCfg,
+    pool: Option<&DecodePool>,
+) -> Vec<RunOut> {
+    let mc = &model.cfg;
+    let mut rr = RoundRobin::new();
+    let mut waiting: Vec<(usize, usize)> =
+        (0..requests.len()).map(|i| (requests[i].0, i)).collect();
+    let mut lanes: Vec<Option<Lane>> = (0..n_lanes).map(|_| None).collect();
+    let mut done: Vec<Option<RunOut>> = (0..requests.len()).map(|_| None).collect();
+    let mut cycle = 0usize;
+    while done.iter().any(|d| d.is_none()) {
+        // admissions: arrived requests into free lanes (FIFO) — parking
+        // a cursor, never running the scan at admission time
+        while let Some(pos) = waiting.iter().position(|&(at, _)| at <= cycle) {
+            let Some(slot) = lanes.iter().position(|l| l.is_none()) else { break };
+            let (_, req) = waiting.remove(pos);
+            let (_, prompt, max_new) = &requests[req];
+            let cursor = match cache {
+                Some(c) => pf.cursor_cached(c, prompt).unwrap(),
+                None => pf.cursor(None, prompt, budget).unwrap(),
+            };
+            lanes[slot] = Some(Lane {
+                req,
+                hit_tokens: cursor.hit_tokens(),
+                cursor: Some(cursor),
+                state: None,
+                last: prompt[prompt.len() - 1],
+                sampler: Sampler::new(scfg_of(req as u64)),
+                max_new: *max_new,
+                out: vec![],
+                landing: vec![],
+            });
+        }
+        // the budgeted prefill round: one window per visit, round-robin
+        let parked: Vec<usize> = lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.as_ref().is_some_and(|l| l.cursor.is_some()))
+            .map(|(i, _)| i)
+            .collect();
+        run_prefill_round(&mut rr, &parked, budget, |b| {
+            let cur = lanes[b].as_mut().unwrap().cursor.as_mut().unwrap();
+            let used = cur.advance_budget(pf, cache, 1).unwrap();
+            (used, cur.done())
+        });
+        // landings: finished cursors become decoding states
+        for l in lanes.iter_mut().flatten() {
+            if l.cursor.as_ref().is_some_and(|c| c.done()) {
+                let (parts, _, _) = l.cursor.take().unwrap().finish(pf).unwrap();
+                let mut st = ModelState::new(mc);
+                st.load_components(mc, &parts).unwrap();
+                l.state = Some(st);
+                l.landing = parts;
+            }
+        }
+        // one decode token per landed lane per cycle
+        for slot in 0..n_lanes {
+            let finished = {
+                let Some(l) = lanes[slot].as_mut() else { continue };
+                let Some(state) = l.state.as_mut() else { continue };
+                let logits = match pool {
+                    Some(p) => model.decode_step_pooled(state, l.last, p).unwrap(),
+                    None => model.decode_step(state, l.last),
+                };
+                let y = l.sampler.sample(&logits) as u8;
+                l.last = y;
+                l.out.push(y);
+                l.out.len() >= l.max_new
+            };
+            if finished {
+                let l = lanes[slot].take().unwrap();
+                done[l.req] = Some(RunOut {
+                    detach: l.state.as_ref().unwrap().to_components(mc).unwrap(),
+                    stream: l.out,
+                    landing: l.landing,
+                    last: l.last,
+                    sampler: SamplerState::capture(&l.sampler),
+                    hit_tokens: l.hit_tokens,
+                });
+            }
+        }
+        cycle += 1;
+        assert!(cycle < 10_000, "interleaved workload did not drain");
+    }
+    done.into_iter().map(Option::unwrap).collect()
+}
+
+/// Staggered arrivals with prompts long enough to park across several
+/// cycles at the suite's budgets — real interleaving, not degenerate
+/// single-window landings.
+fn staggered_requests(rng: &mut Rng, vocab: usize) -> Vec<(usize, Vec<u8>, usize)> {
+    (0..5)
+        .map(|i| {
+            let arrive = i * 2;
+            let prompt = random_prompt(rng, 9 + (i % 4) * 7, vocab);
+            let max_new = 6 + (i % 3) * 3;
+            (arrive, prompt, max_new)
+        })
+        .collect()
+}
+
+#[test]
+fn interleaved_streams_match_monolithic_all_mixers_greedy_and_seeded() {
+    const BUDGET: usize = 6;
+    for mixer in ["hla2", "ahla", "hla3"] {
+        let model = build_model_full(mixer, &ModelShape::default(), 11);
+        let pf = Prefiller::new(model.clone(), PrefillCfg::scan(4, 1)).unwrap();
+        let mut rng = Rng::new(31);
+        let requests = staggered_requests(&mut rng, model.cfg.vocab);
+        let cases: [(&str, &dyn Fn(u64) -> SamplerCfg); 2] = [
+            ("greedy", &|_| SamplerCfg::greedy()),
+            ("seeded", &|req| seeded(100 + req)),
+        ];
+        for (name, scfg_of) in cases {
+            // 3 lanes < 5 requests: admissions queue behind live lanes,
+            // parked prefills interleave with landed lanes' decode steps
+            let got = run_interleaved(&model, &pf, None, &requests, BUDGET, 3, scfg_of, None);
+            for (req, (_, prompt, max_new)) in requests.iter().enumerate() {
+                let (parts, consumed) = monolithic_same_window(&pf, None, prompt, BUDGET);
+                assert_state_bits_equal(
+                    &got[req].landing,
+                    &parts,
+                    &format!("{mixer}/{name}: request {req} landing"),
+                );
+                let mut sampler = Sampler::new(scfg_of(req as u64));
+                let (want, _, _) =
+                    decode_from(&model, &parts, prompt[consumed], &mut sampler, *max_new);
+                assert_eq!(
+                    got[req].stream, want,
+                    "{mixer}/{name}: request {req} diverged from monolithic same-window"
+                );
+                if name == "greedy" {
+                    // greedy grid: any segmentation equals serial decode
+                    let serial = serial_stream(&model, prompt, &SamplerCfg::greedy(), *max_new);
+                    assert_eq!(got[req].stream, serial, "{mixer}: request {req} vs serial");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_seeded_interleave_is_monolithic_bitwise_and_warm_equals_cold() {
+    const CHUNK: usize = 8;
+    let model = build_model_full("hla2", &ModelShape::default(), 17);
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(CHUNK, 2)).unwrap();
+    let cache = PrefixCache::new(PrefixCacheCfg::new(1 << 20, CHUNK));
+    let mut rng = Rng::new(29);
+    let vocab = model.cfg.vocab;
+    let prefix = random_prompt(&mut rng, 2 * CHUNK, vocab);
+    let mut p1 = prefix.clone();
+    p1.extend(random_prompt(&mut rng, 5, vocab));
+    let mut p2 = prefix.clone();
+    p2.extend(random_prompt(&mut rng, 7, vocab));
+    let requests = vec![(0usize, p1.clone(), 8usize), (0, p2.clone(), 8)];
+    let cases: [(&str, &dyn Fn(u64) -> SamplerCfg); 2] =
+        [("greedy", &|_| SamplerCfg::greedy()), ("seeded", &|req| seeded(3 + req))];
+    for (name, scfg_of) in cases {
+        cache.clear();
+        // cold pass: both cursors created before any boundary insert
+        let cold = run_interleaved(&model, &pf, Some(&cache), &requests, 5, 2, scfg_of, None);
+        assert!(cold.iter().all(|r| r.hit_tokens == 0), "{name}: first pass must be cold");
+        // warm pass: the shared prefix now seeds both admissions
+        let warm = run_interleaved(&model, &pf, Some(&cache), &requests, 5, 2, scfg_of, None);
+        assert!(warm.iter().all(|r| r.hit_tokens > 0), "{name}: second pass must hit");
+        for (req, (c, w)) in cold.iter().zip(&warm).enumerate() {
+            assert_eq!(c.stream, w.stream, "{name}: warm vs cold stream, request {req}");
+            assert_state_bits_equal(
+                &w.landing,
+                &c.landing,
+                &format!("{name}: warm vs cold landing, request {req}"),
+            );
+        }
+        // budgeted cached ingestion == the monolithic cached path, bitwise
+        let ref_cache = PrefixCache::new(PrefixCacheCfg::new(1 << 20, CHUNK));
+        for (req, prompt) in [&p1, &p2].into_iter().enumerate() {
+            ref_cache.clear();
+            let (parts, consumed, _) = pf.ingest_lane_cached(&ref_cache, prompt).unwrap();
+            assert_state_bits_equal(
+                &cold[req].landing,
+                &parts,
+                &format!("{name}: budgeted vs ingest_lane_cached, request {req}"),
+            );
+            if name == "greedy" {
+                let mut sampler = Sampler::new(SamplerCfg::greedy());
+                let (want, _, _) = decode_from(&model, &parts, prompt[consumed], &mut sampler, 8);
+                assert_eq!(cold[req].stream, want);
+                assert_eq!(
+                    cold[req].stream,
+                    serial_stream(&model, prompt, &SamplerCfg::greedy(), 8),
+                    "cached interleave vs serial, request {req}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn session_resume_and_fork_compose_with_budgeted_prefill() {
+    const WINDOW: usize = 5;
+    let model = build_model_full("ahla", &ModelShape::default(), 13);
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(4, 1)).unwrap();
+    let mut rng = Rng::new(5);
+    let vocab = model.cfg.vocab;
+    let prompt = random_prompt(&mut rng, 18, vocab);
+    let cont = random_prompt(&mut rng, 11, vocab);
+    let fork_a = random_prompt(&mut rng, 7, vocab);
+    let fork_b = random_prompt(&mut rng, 9, vocab);
+    let (turn1, turn2) = (6usize, 6usize);
+
+    // a budgeted turn-2 ingestion: resume parts seed the cursor, windows
+    // dealt one at a time as the engine cycle would
+    let budgeted_turn =
+        |resume: &[Tensor], t2: &[u8], sampler: &mut Sampler, max_new: usize| {
+            let mut cur = pf.cursor(Some(resume), t2, WINDOW).unwrap();
+            while !cur.done() {
+                cur.advance_budget(&pf, None, 1).unwrap();
+            }
+            let (parts, consumed, _) = cur.finish(&pf).unwrap();
+            let (out, _, _) = decode_from(&model, &parts, t2[consumed], sampler, max_new);
+            (out, parts)
+        };
+
+    for scfg in [SamplerCfg::greedy(), seeded(7)] {
+        // turn 1 through the interleaved harness (a sibling request
+        // keeps the rotation honest)
+        let requests = vec![
+            (0usize, prompt.clone(), turn1),
+            (1, random_prompt(&mut Rng::new(99), 13, vocab), 4),
+        ];
+        let out = run_interleaved(&model, &pf, None, &requests, WINDOW, 2, &|_| scfg.clone(), None);
+        // the detach snapshot equals the monolithic reference's detach
+        let (parts, consumed) = monolithic_same_window(&pf, None, &prompt, WINDOW);
+        let mut ref_sampler = Sampler::new(scfg.clone());
+        let (want1, ref_detach, ref_last) =
+            decode_from(&model, &parts, prompt[consumed], &mut ref_sampler, turn1);
+        assert_eq!(out[0].stream, want1, "turn 1 stream");
+        assert_state_bits_equal(&out[0].detach, &ref_detach, "turn-1 detach snapshot");
+        assert_eq!(out[0].last, ref_last, "turn-1 last sampled token");
+
+        // resume: feed the snapshot's last sampled token ahead of the new
+        // turn's prompt (the session contract), ingested under budget
+        let mut t2 = vec![out[0].last];
+        t2.extend_from_slice(&cont);
+        let mut s_budget = out[0].sampler.rebuild();
+        let (got2, got2_parts) = budgeted_turn(&out[0].detach, &t2, &mut s_budget, turn2);
+        let (ref2_parts, ref2_consumed) =
+            monolithic_same_window(&pf, Some(&ref_detach), &t2, WINDOW);
+        assert_state_bits_equal(&got2_parts, &ref2_parts, "resumed turn-2 landing");
+        let mut s_ref = out[0].sampler.rebuild();
+        let (want2, _, _) = decode_from(&model, &ref2_parts, t2[ref2_consumed], &mut s_ref, turn2);
+        assert_eq!(got2, want2, "resumed turn-2 stream");
+
+        // forks: two divergent continuations from one detach, each with
+        // its own sampler seed, each pinned to its own reference
+        for (fseed, extra) in [(101u64, &fork_a), (202, &fork_b)] {
+            let mut tf = vec![out[0].last];
+            tf.extend_from_slice(extra);
+            let mut s_fork = Sampler::new(seeded(fseed));
+            let (got, got_parts) = budgeted_turn(&out[0].detach, &tf, &mut s_fork, 5);
+            let (fparts, fconsumed) = monolithic_same_window(&pf, Some(&ref_detach), &tf, WINDOW);
+            assert_state_bits_equal(&got_parts, &fparts, "fork landing");
+            let mut s_want = Sampler::new(seeded(fseed));
+            let (want, _, _) = decode_from(&model, &fparts, tf[fconsumed], &mut s_want, 5);
+            assert_eq!(got, want, "fork {fseed} stream");
+        }
+    }
+}
+
+#[test]
+fn spec_rounds_between_chunks_disturb_nothing() {
+    const WINDOW: usize = 4;
+    let model = build_model_full("hla2", &ModelShape::default(), 19);
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(4, 1)).unwrap();
+    let mut rng = Rng::new(37);
+    let vocab = model.cfg.vocab;
+    let prompt = random_prompt(&mut rng, 21, vocab);
+    let spec_prompt = random_prompt(&mut rng, 12, vocab);
+    // park a lane mid-prompt
+    let mut cur = pf.cursor(None, &prompt, WINDOW).unwrap();
+    cur.advance_budget(&pf, None, 1).unwrap();
+    assert!(!cur.done(), "cursor must be parked mid-prompt");
+    // full speculative generations run between this lane's chunks — the
+    // spec engine's lossless rule holds, and the parked cursor is inert
+    for scfg in [SamplerCfg::greedy(), seeded(41)] {
+        let cfg = SpecCfg {
+            k: 3,
+            adaptive: false,
+            drafter: DrafterKind::Ngram,
+            verify_chunk: 0,
+            ..Default::default()
+        };
+        let mut dec = SpecDecoder::new(model.clone(), None, cfg).unwrap();
+        let spec_stream = dec.generate(&spec_prompt, scfg.clone(), 10, None).unwrap();
+        assert_eq!(
+            spec_stream,
+            serial_stream(&model, &spec_prompt, &scfg, 10),
+            "spec stream changed by a parked prefill (temp {})",
+            scfg.temperature
+        );
+    }
+    // ... and the lane lands exactly as if nothing ran in between
+    while !cur.done() {
+        cur.advance_budget(&pf, None, 1).unwrap();
+    }
+    let (parts, consumed, _) = cur.finish(&pf).unwrap();
+    let (want, _) = monolithic_same_window(&pf, None, &prompt, WINDOW);
+    assert_state_bits_equal(&parts, &want, "parked landing after spec rounds");
+    let mut sampler = Sampler::new(SamplerCfg::greedy());
+    let (stream, _, _) = decode_from(&model, &parts, prompt[consumed], &mut sampler, 8);
+    assert_eq!(stream, serial_stream(&model, &prompt, &SamplerCfg::greedy(), 8));
+}
+
+#[test]
+fn decode_pool_composes_byte_identically() {
+    const BUDGET: usize = 6;
+    let model = build_model_full("hla3", &ModelShape::default(), 23);
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(4, 1)).unwrap();
+    let mut rng = Rng::new(43);
+    let requests = staggered_requests(&mut rng, model.cfg.vocab);
+    let pool = DecodePool::new(4); // serve --decode-threads 4
+    let cases: [(&str, &dyn Fn(u64) -> SamplerCfg); 2] =
+        [("greedy", &|_| SamplerCfg::greedy()), ("seeded", &|req| seeded(500 + req))];
+    for (name, scfg_of) in cases {
+        let serial = run_interleaved(&model, &pf, None, &requests, BUDGET, 3, scfg_of, None);
+        let pooled =
+            run_interleaved(&model, &pf, None, &requests, BUDGET, 3, scfg_of, Some(&pool));
+        for (req, (s, p)) in serial.iter().zip(&pooled).enumerate() {
+            assert_eq!(s.stream, p.stream, "{name}: pooled decode diverged, request {req}");
+            assert_state_bits_equal(
+                &p.detach,
+                &s.detach,
+                &format!("{name}: pooled detach, request {req}"),
+            );
+        }
+    }
+}
+
+/// Slimmed host-side twin of the engine's bucketed state handling (the
+/// audited version lives in `bucketing_differential.rs`): enough to
+/// churn the layout while parked prefills hold slots as dead weight.
+struct ChurnPool {
+    comps: Vec<Tensor>,
+    capacity: usize,
+    tracker: BucketTracker,
+    slot_of: Vec<usize>,
+    active: Vec<bool>,
+    grows: usize,
+    shrinks: usize,
+}
+
+impl ChurnPool {
+    fn new(cfg: &ModelCfg, capacity: usize, shrink_after: usize) -> ChurnPool {
+        let comps = cfg
+            .state_paths
+            .iter()
+            .map(|(_, sh)| {
+                let mut sh = sh.clone();
+                sh[1] = capacity;
+                Tensor::zeros(&sh)
+            })
+            .collect();
+        ChurnPool {
+            comps,
+            capacity,
+            tracker: BucketTracker::new(BucketSpec::Pow2.ladder(capacity), shrink_after, capacity),
+            slot_of: vec![0; capacity],
+            active: vec![false; capacity],
+            grows: 0,
+            shrinks: 0,
+        }
+    }
+
+    fn live(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    fn read(&self, lane: usize) -> Vec<Tensor> {
+        slice_components(&self.comps, self.slot_of[lane])
+    }
+
+    fn write(&mut self, lane: usize, parts: &[Tensor]) {
+        splice_components(&mut self.comps, self.slot_of[lane], parts);
+    }
+
+    fn apply(&mut self, sw: BucketSwitch) {
+        let lanes: Vec<usize> = (0..self.capacity).filter(|&b| self.active[b]).collect();
+        let slots: Vec<usize> = lanes.iter().map(|&b| self.slot_of[b]).collect();
+        let (w, moves) = match sw {
+            BucketSwitch::Grow(w) => {
+                self.grows += 1;
+                (w, identity_moves(&slots))
+            }
+            BucketSwitch::Shrink(w) => {
+                self.shrinks += 1;
+                (w, compaction_moves(&slots))
+            }
+        };
+        self.comps = remap_components(&self.comps, &moves, w);
+        for (i, &b) in lanes.iter().enumerate() {
+            self.slot_of[b] = moves[i].1;
+        }
+    }
+
+    fn admit(&mut self, lane: usize) {
+        assert!(!self.active[lane], "lane {lane} already live");
+        if let Some(sw) = self.tracker.on_admit(self.live() + 1) {
+            self.apply(sw);
+        }
+        let used: Vec<usize> =
+            (0..self.capacity).filter(|&b| self.active[b]).map(|b| self.slot_of[b]).collect();
+        let slot = (0..self.tracker.width())
+            .find(|s| !used.contains(s))
+            .expect("admission grow guarantees a free slot");
+        self.active[lane] = true;
+        self.slot_of[lane] = slot;
+        for c in &mut self.comps {
+            zero_component_lane(c, slot);
+        }
+    }
+
+    fn finish(&mut self, lane: usize) {
+        self.active[lane] = false;
+    }
+
+    fn after_cycle(&mut self) {
+        let live = self.live();
+        if let Some(sw) = self.tracker.after_step(live) {
+            self.apply(sw);
+        }
+    }
+}
+
+#[test]
+fn parked_prefills_ride_bucket_churn_as_dead_weight() {
+    // parked (mid-prefill) lanes occupy bucket slots as PAD passengers
+    // while the layout grows and shrinks around them; the landing splices
+    // into whatever slot churn assigned, and every stream stays pinned to
+    // its monolithic reference — greedy and seeded.
+    const CAPACITY: usize = 4;
+    const BUDGET: usize = 5;
+    let model = build_model_full("hla2", &ModelShape::default(), 47);
+    let mc = model.cfg.clone();
+    let pf = Prefiller::new(model.clone(), PrefillCfg::scan(4, 1)).unwrap();
+    let mut rng = Rng::new(53);
+    let vocab = mc.vocab;
+    let requests: Vec<(usize, Vec<u8>, usize)> = (0..6)
+        .map(|i| {
+            let arrive = i * 2;
+            let prompt = random_prompt(&mut rng, 9 + (i % 4) * 5, vocab);
+            let max_new = 5 + (i % 3) * 3;
+            (arrive, prompt, max_new)
+        })
+        .collect();
+    let cases: [(&str, &dyn Fn(u64) -> SamplerCfg); 2] =
+        [("greedy", &|_| SamplerCfg::greedy()), ("seeded", &|req| seeded(700 + req))];
+    for (name, scfg_of) in cases {
+        let mut pool = ChurnPool::new(&mc, CAPACITY, 1);
+        let mut rr = RoundRobin::new();
+        let mut waiting: Vec<(usize, usize)> =
+            (0..requests.len()).map(|i| (requests[i].0, i)).collect();
+        let mut lanes: Vec<Option<Lane>> = (0..CAPACITY).map(|_| None).collect();
+        let mut done: Vec<Option<Vec<u8>>> = (0..requests.len()).map(|_| None).collect();
+        let mut cycle = 0usize;
+        while done.iter().any(|d| d.is_none()) {
+            while let Some(pos) = waiting.iter().position(|&(at, _)| at <= cycle) {
+                let Some(slot) = lanes.iter().position(|l| l.is_none()) else { break };
+                let (_, req) = waiting.remove(pos);
+                let (_, prompt, max_new) = &requests[req];
+                pool.admit(slot); // the parked lane's zeroed PAD slot
+                let cursor = pf.cursor(None, prompt, BUDGET).unwrap();
+                lanes[slot] = Some(Lane {
+                    req,
+                    hit_tokens: 0,
+                    cursor: Some(cursor),
+                    state: None,
+                    last: prompt[prompt.len() - 1],
+                    sampler: Sampler::new(scfg_of(req as u64)),
+                    max_new: *max_new,
+                    out: vec![],
+                    landing: vec![],
+                });
+            }
+            let parked: Vec<usize> = lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.as_ref().is_some_and(|l| l.cursor.is_some()))
+                .map(|(i, _)| i)
+                .collect();
+            run_prefill_round(&mut rr, &parked, BUDGET, |b| {
+                let cur = lanes[b].as_mut().unwrap().cursor.as_mut().unwrap();
+                let used = cur.advance_budget(&pf, None, 1).unwrap();
+                (used, cur.done())
+            });
+            for slot in 0..CAPACITY {
+                let Some(l) = lanes[slot].as_mut() else { continue };
+                if l.cursor.as_ref().is_some_and(|c| c.done()) {
+                    // the dead-weight slice must still be the zeros it was
+                    // admitted with: repacks moved it, never corrupted it
+                    assert!(
+                        pool.read(slot).iter().all(|t| t.data.iter().all(|&x| x == 0.0)),
+                        "{name}: parked PAD slice corrupted by churn"
+                    );
+                    let (parts, _, _) = l.cursor.take().unwrap().finish(&pf).unwrap();
+                    pool.write(slot, &parts);
+                    l.landing = parts;
+                    l.state = Some(ModelState::new(&mc)); // marker: landed
+                }
+            }
+            for slot in 0..CAPACITY {
+                let finished = {
+                    let Some(l) = lanes[slot].as_mut() else { continue };
+                    if l.state.is_none() {
+                        continue; // still parked: PAD passenger this cycle
+                    }
+                    // the slot-resident decode step: slice out, step,
+                    // splice back — the batched per-slot math
+                    let mut state = ModelState::new(&mc);
+                    state.load_components(&mc, &pool.read(slot)).unwrap();
+                    let logits = model.decode_step(&mut state, l.last);
+                    pool.write(slot, &state.to_components(&mc).unwrap());
+                    let y = l.sampler.sample(&logits) as u8;
+                    l.last = y;
+                    l.out.push(y);
+                    l.out.len() >= l.max_new
+                };
+                if finished {
+                    let l = lanes[slot].take().unwrap();
+                    pool.finish(slot);
+                    done[l.req] = Some(l.out);
+                }
+            }
+            pool.after_cycle();
+            cycle += 1;
+            assert!(cycle < 10_000, "{name}: churn workload did not drain");
+        }
+        assert!(pool.grows >= 2, "{name}: workload must force grows (got {})", pool.grows);
+        assert!(pool.shrinks >= 2, "{name}: workload must force shrinks (got {})", pool.shrinks);
+        for (req, (_, prompt, max_new)) in requests.iter().enumerate() {
+            let (parts, consumed) = monolithic_same_window(&pf, None, prompt, BUDGET);
+            let mut sampler = Sampler::new(scfg_of(req as u64));
+            let (want, _, _) =
+                decode_from(&model, &parts, prompt[consumed], &mut sampler, *max_new);
+            assert_eq!(
+                done[req].as_ref().unwrap(),
+                &want,
+                "{name}: request {req} diverged under bucket churn"
+            );
+        }
+    }
+}
+
+#[test]
+fn burst_of_64_shorts_cannot_stall_an_inflight_lane_beyond_budget() {
+    // the fairness regression (pure counters): 64 short prompts arrive at
+    // once while a lane is mid-decode.  Unbounded monolithic admission
+    // scans the whole queue before the next decode step; the bounded
+    // cycle caps admissions AND per-cycle scan work, so the in-flight
+    // lane decodes every cycle and its worst stall is one budget round.
+    const BUDGET: usize = 8;
+    const SHORT: usize = 4; // scan tokens per short prompt
+    const BURST: usize = 64;
+    const ADMIT_CAP: usize = 2;
+    const INFLIGHT_TOKENS: usize = 20;
+
+    // the bug being pinned: every burst prompt's scan runs at admission,
+    // before the cycle's decode step
+    let monolithic_first_cycle_stall = BURST * SHORT;
+
+    struct Ctr {
+        pos: usize,
+        target: usize,
+    }
+    impl Ctr {
+        // one window, the cursor's arithmetic (window = BUDGET > SHORT,
+        // so each short prompt is a single indivisible window)
+        fn advance_one(&mut self) -> (usize, bool) {
+            let next = (self.pos + BUDGET).min(self.target);
+            let used = next - self.pos;
+            self.pos = next;
+            (used, self.pos >= self.target)
+        }
+    }
+
+    let mut queue = BURST;
+    let mut cursors: Vec<Ctr> = vec![];
+    let mut rr = RoundRobin::new();
+    let mut inflight_decoded = 0usize;
+    let mut max_stall = 0usize;
+    let mut cycles = 0usize;
+    let mut scanned_total = 0usize;
+    while inflight_decoded < INFLIGHT_TOKENS
+        || queue > 0
+        || cursors.iter().any(|c| c.pos < c.target)
+    {
+        cycles += 1;
+        assert!(cycles < 10_000, "burst did not drain");
+        // bounded admissions: however deep the queue, at most ADMIT_CAP
+        // prompts park per cycle (policy allowance = whole queue)
+        let admitted = bounded_admissions(queue, ADMIT_CAP);
+        assert!(admitted <= ADMIT_CAP, "admissions cap violated");
+        for _ in 0..admitted {
+            cursors.push(Ctr { pos: 0, target: SHORT });
+        }
+        queue -= admitted;
+        // the budgeted prefill round is the only scan work this cycle
+        let parked: Vec<usize> =
+            (0..cursors.len()).filter(|&i| cursors[i].pos < cursors[i].target).collect();
+        let spent = run_prefill_round(&mut rr, &parked, BUDGET, |i| cursors[i].advance_one());
+        scanned_total += spent;
+        max_stall = max_stall.max(spent);
+        // the starvation bound: at most one budget round between decode
+        // steps (max window here is the SHORT prompt itself)
+        assert!(
+            spent <= BUDGET - 1 + SHORT,
+            "cycle {cycles}: prefill spend {spent} exceeds budget bound"
+        );
+        // the in-flight lane decodes EVERY cycle — never skipped
+        if inflight_decoded < INFLIGHT_TOKENS {
+            inflight_decoded += 1;
+        }
+    }
+    // every burst token was scanned exactly once, no prompt starved out
+    assert_eq!(scanned_total, BURST * SHORT);
+    assert!(cursors.iter().all(|c| c.pos == c.target));
+    // the in-flight lane finished in exactly its own token count
+    assert!(inflight_decoded == INFLIGHT_TOKENS && cycles >= INFLIGHT_TOKENS);
+    // and the regression margin: the old behavior's first-cycle stall is
+    // an order of magnitude past the bounded cycle's worst case
+    assert!(
+        max_stall * 10 <= monolithic_first_cycle_stall,
+        "bounded stall {max_stall} too close to monolithic {monolithic_first_cycle_stall}"
+    );
+}
